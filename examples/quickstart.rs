@@ -1,0 +1,53 @@
+//! Quickstart: load an AOT artifact, run one split training step, and
+//! one resource-allocation solve — the whole public API in ~60 lines.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use sfllm::config::Config;
+use sfllm::delay::ConvergenceModel;
+use sfllm::opt::bcd::{self, BcdOptions};
+use sfllm::runtime::{Manifest, SflModel, SflRuntime};
+use sfllm::sim;
+
+fn main() -> Result<()> {
+    // ---- 1. the compute path: one split LoRA training step ------------
+    let manifest = Manifest::load("artifacts")?;
+    let mut rt = SflRuntime::load(&manifest, "micro_s1_r2")?;
+    println!(
+        "loaded micro variant: B={} T={} d={} (split l_c={}, rank={})",
+        rt.batch(),
+        rt.seq(),
+        rt.d_model(),
+        rt.variant.l_c,
+        rt.variant.rank
+    );
+
+    let mut client_adapters = rt.init_client_adapters();
+    let mut server_adapters = rt.init_server_adapters();
+    let n = rt.batch() * rt.seq();
+    let tokens: Vec<i32> = (0..n).map(|i| ((i * 5 + 1) % 64) as i32).collect();
+    let mask = vec![1.0f32; n];
+
+    // Algorithm 1, phases a-f, one step:
+    let s = rt.client_forward(&client_adapters, &tokens)?; // a: client FP
+    let out = rt.server_step(&server_adapters, &s, &tokens, &mask)?; // c-e
+    let client_grads = rt.client_backward(&client_adapters, &tokens, &out.ds)?; // f
+    client_adapters.sgd_step(&client_grads, 0.5)?; // Eq. 6
+    server_adapters.sgd_step(&out.server_grads, 0.5)?; // Eq. 5
+    println!("one SFL step done: loss = {:.4}", out.loss);
+
+    // ---- 2. the coordination path: joint resource allocation ----------
+    let cfg = Config::paper_defaults(); // Table II scenario, GPT2-S workload
+    let scn = sim::build_scenario(&cfg)?;
+    let conv = ConvergenceModel::paper_default();
+    let res = bcd::optimize(&scn, &conv, &BcdOptions::default())?;
+    println!(
+        "BCD optimizer: split l_c={}, rank r={}, total training delay {:.1} s \
+         ({} iterations)",
+        res.alloc.l_c, res.alloc.rank, res.objective, res.iterations
+    );
+    Ok(())
+}

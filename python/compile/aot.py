@@ -1,0 +1,292 @@
+"""AOT compile path: lower the L2 entry points to HLO text artifacts.
+
+Emits, under ``artifacts/``:
+
+    manifest.json                        — variant/entry/tensor index
+    weights_<config>.bin                 — frozen weights, canonical order, raw f32
+    <variant>/client_fwd.hlo.txt         — HLO text (see below)
+    <variant>/server_step.hlo.txt
+    <variant>/client_bwd.hlo.txt
+    <variant>/adapters_client.bin        — LoRA init (A ~ N(0,.02), B = 0)
+    <variant>/adapters_server.bin
+
+Interchange is HLO **text**, not a serialized ``HloModuleProto``: the
+image's xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction
+ids); the text parser reassigns ids and round-trips cleanly
+(/opt/xla-example/README.md). Everything is lowered with
+``return_tuple=True`` so the Rust side always unwraps a tuple.
+
+Run via ``make artifacts`` (a no-op when inputs are unchanged). Python
+never runs again after this — the Rust binary owns the training path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# lowering helpers
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape: Sequence[int], dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _dtype_str(d) -> str:
+    return {"float32": "f32", "int32": "i32"}[np.dtype(d).name]
+
+
+class EntryBuilder:
+    """Accumulates the ordered input/output signature of one entry point."""
+
+    def __init__(self):
+        self.inputs: List[dict] = []
+        self.specs: List[jax.ShapeDtypeStruct] = []
+
+    def arg(self, name: str, kind: str, shape: Sequence[int], dtype=jnp.float32):
+        self.inputs.append(
+            {"name": name, "kind": kind, "shape": list(shape), "dtype": _dtype_str(dtype)}
+        )
+        self.specs.append(_spec(shape, dtype))
+
+
+def _weight_args(eb: EntryBuilder, cfg: M.GPT2Config, names: List[str], kind: str):
+    for n in names:
+        eb.arg(n, kind, M.weight_shape(cfg, n))
+
+
+def _adapter_args(eb: EntryBuilder, cfg: M.GPT2Config, rank: int, names: List[str], kind: str):
+    for n in names:
+        eb.arg(n, kind, M.adapter_shape(cfg, rank, n))
+
+
+def build_entries(cfg: M.GPT2Config, l_c: int, rank: int) -> Dict[str, Tuple]:
+    """Return {entry_name: (callable over flat args, EntryBuilder, outputs)}."""
+    B, T, d = cfg.batch, cfg.seq, cfg.d_model
+    wc_names = M.client_weight_names(cfg, l_c)
+    ws_names = M.server_weight_names(cfg, l_c)
+    ac_names = M.adapter_names(range(l_c))
+    as_names = M.adapter_names(range(l_c, cfg.n_layers))
+
+    # --- client_fwd -------------------------------------------------------
+    eb_cf = EntryBuilder()
+    _weight_args(eb_cf, cfg, wc_names, "weight")
+    _adapter_args(eb_cf, cfg, rank, ac_names, "adapter")
+    eb_cf.arg("tokens", "data", (B, T), jnp.int32)
+
+    def f_client_fwd(*args):
+        nw, na = len(wc_names), len(ac_names)
+        return (
+            M.client_fwd(cfg, l_c, rank, list(args[:nw]), list(args[nw:nw + na]), args[nw + na]),
+        )
+
+    out_cf = [{"name": "s", "shape": [B, T, d], "dtype": "f32"}]
+
+    # --- server_step ------------------------------------------------------
+    eb_ss = EntryBuilder()
+    _weight_args(eb_ss, cfg, ws_names, "weight")
+    _adapter_args(eb_ss, cfg, rank, as_names, "adapter")
+    eb_ss.arg("s", "data", (B, T, d))
+    eb_ss.arg("tokens", "data", (B, T), jnp.int32)
+    eb_ss.arg("mask", "data", (B, T))
+
+    def f_server_step(*args):
+        nw, na = len(ws_names), len(as_names)
+        weights = list(args[:nw])
+        adapters = list(args[nw:nw + na])
+        s, tokens, mask = args[nw + na:]
+        return M.server_step(cfg, l_c, rank, weights, adapters, s, tokens, mask)
+
+    out_ss = (
+        [{"name": "loss", "shape": [], "dtype": "f32"}]
+        + [
+            {"name": "d_" + n, "shape": list(M.adapter_shape(cfg, rank, n)), "dtype": "f32"}
+            for n in as_names
+        ]
+        + [{"name": "ds", "shape": [B, T, d], "dtype": "f32"}]
+    )
+
+    # --- client_bwd -------------------------------------------------------
+    eb_cb = EntryBuilder()
+    _weight_args(eb_cb, cfg, wc_names, "weight")
+    _adapter_args(eb_cb, cfg, rank, ac_names, "adapter")
+    eb_cb.arg("tokens", "data", (B, T), jnp.int32)
+    eb_cb.arg("ds", "data", (B, T, d))
+
+    def f_client_bwd(*args):
+        nw, na = len(wc_names), len(ac_names)
+        weights = list(args[:nw])
+        adapters = list(args[nw:nw + na])
+        tokens, ds = args[nw + na:]
+        return M.client_bwd(cfg, l_c, rank, weights, adapters, tokens, ds)
+
+    out_cb = [
+        {"name": "d_" + n, "shape": list(M.adapter_shape(cfg, rank, n)), "dtype": "f32"}
+        for n in ac_names
+    ]
+
+    return {
+        "client_fwd": (f_client_fwd, eb_cf, out_cf),
+        "server_step": (f_server_step, eb_ss, out_ss),
+        "client_bwd": (f_client_bwd, eb_cb, out_cb),
+    }
+
+
+# ---------------------------------------------------------------------------
+# binary tensor files
+# ---------------------------------------------------------------------------
+
+
+def write_tensor_file(path: str, tensors: List[Tuple[str, np.ndarray]]) -> List[dict]:
+    """Concatenate raw little-endian f32 tensors; return the index table."""
+    table = []
+    offset = 0
+    with open(path, "wb") as f:
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr, dtype=np.float32)
+            f.write(arr.tobytes())
+            table.append({"name": name, "shape": list(arr.shape), "offset": offset})
+            offset += arr.nbytes
+    return table
+
+
+def canonical_weight_order(cfg: M.GPT2Config) -> List[str]:
+    return M.client_weight_names(cfg, cfg.n_layers) + ["lnf_g", "lnf_b", "wte_head"]
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+
+def default_variants() -> List[Tuple[str, int, int]]:
+    """(config, l_c, rank) set built by `make artifacts`.
+
+    micro: runtime integration tests. tiny: the end-to-end experiments —
+    rank sweep for Fig. 3/4 and Table IV at the default split, plus a
+    split ablation at the default rank.
+    """
+    v = [("micro", 1, 2)]
+    for r in (1, 2, 4, 6, 8):
+        v.append(("tiny", 2, r))
+    for l_c in (1, 3):
+        v.append(("tiny", l_c, 4))
+    return v
+
+
+def parse_variant(s: str) -> Tuple[str, int, int]:
+    cfg, l_c, r = s.split(":")
+    return cfg, int(l_c), int(r)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--variant", action="append", default=None,
+        help="config:l_c:rank (repeatable); default = the standard set",
+    )
+    ap.add_argument(
+        "--pretrain-steps", type=int, default=1200,
+        help="full-weight pre-training steps for the tiny config "
+             "(0 = raw init; micro always exports raw init)",
+    )
+    args = ap.parse_args()
+
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    variants = (
+        [parse_variant(v) for v in args.variant] if args.variant else default_variants()
+    )
+
+    manifest: dict = {"format": 1, "configs": {}, "variants": {}}
+    weights_cache: Dict[str, Dict[str, np.ndarray]] = {}
+
+    for cfg_name in sorted({c for c, _, _ in variants}):
+        cfg = M.CONFIGS[cfg_name]
+        # tiny gets build-time pre-training (the paper's "pre-trained
+        # model"); micro stays raw init (pure plumbing tests).
+        if cfg_name == "tiny" and args.pretrain_steps > 0:
+            weights = M.pretrain_weights(cfg, steps=args.pretrain_steps)
+        else:
+            weights = M.init_weights(cfg, seed=0)
+        weights_cache[cfg_name] = weights
+        order = canonical_weight_order(cfg)
+        wfile = f"weights_{cfg_name}.bin"
+        table = write_tensor_file(
+            os.path.join(out_dir, wfile), [(n, weights[n]) for n in order]
+        )
+        manifest["configs"][cfg_name] = {
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "seq": cfg.seq, "batch": cfg.batch,
+            "lora_alpha": M.LORA_ALPHA,
+            "weights_file": wfile, "weights": table,
+        }
+
+    for cfg_name, l_c, rank in variants:
+        cfg = M.CONFIGS[cfg_name]
+        vname = f"{cfg_name}_s{l_c}_r{rank}"
+        vdir = os.path.join(out_dir, vname)
+        os.makedirs(vdir, exist_ok=True)
+        weights = weights_cache[cfg_name]
+
+        ad_c = M.init_adapters(cfg, rank, range(l_c), seed=1)
+        ad_s = M.init_adapters(cfg, rank, range(l_c, cfg.n_layers), seed=2)
+        tab_c = write_tensor_file(
+            os.path.join(vdir, "adapters_client.bin"), list(ad_c.items())
+        )
+        tab_s = write_tensor_file(
+            os.path.join(vdir, "adapters_server.bin"), list(ad_s.items())
+        )
+
+        entries = {}
+        for ename, (fn, eb, outs) in build_entries(cfg, l_c, rank).items():
+            # keep_unused: the Rust side feeds the full declared signature;
+            # jit must not drop structurally-unused parameters.
+            lowered = jax.jit(fn, keep_unused=True).lower(*eb.specs)
+            text = to_hlo_text(lowered)
+            fname = f"{vname}/{ename}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            entries[ename] = {"file": fname, "inputs": eb.inputs, "outputs": outs}
+            print(f"  {fname}: {len(eb.specs)} inputs, {len(outs)} outputs, {len(text)} chars")
+
+        manifest["variants"][vname] = {
+            "config": cfg_name, "l_c": l_c, "rank": rank,
+            "lora_scale": M.LORA_ALPHA / rank,
+            "adapters_client": {"file": f"{vname}/adapters_client.bin", "tensors": tab_c},
+            "adapters_server": {"file": f"{vname}/adapters_server.bin", "tensors": tab_s},
+            "entries": entries,
+        }
+        print(f"variant {vname} done")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {os.path.join(out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Build-time replica of the Rust synthetic E2E-style generator.
+
+Used ONLY for pre-training the tiny model's frozen weights (aot.py):
+the paper starts from a *pre-trained* GPT-2 and LoRA-fine-tunes it on
+E2E; offline we pre-train the same architecture on a restricted slice
+of the schema (templates 0–1) so that the Rust-side fine-tuning corpus
+(all 5 templates, `rust/src/data/corpus.rs`) contains genuinely new
+realizations for the adapters to learn — giving LoRA rank a real
+capacity effect, as in the paper.
+
+Slot pools MUST stay in sync with `rust/src/data/corpus.rs` (same
+schema, same byte budget); the tokenizer layout must match
+`rust/src/data/tokenizer.rs` (MR · 0x1F · text, pad 0).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+NAMES = ["Aromi", "Bento", "Cocum", "Eagle", "Lilly", "Rex", "Sole", "Strada",
+         "Vaults", "Zizzi"]
+FOODS = ["Thai", "Chinese", "French", "Indian", "Italian", "Turkish", "English"]
+PRICES = ["cheap", "moderate", "high"]
+AREAS = ["centre", "river"]
+RATINGS = ["low", "average", "high"]
+
+SEP = 0x1F
+PAD = 0
+
+
+def render(name: int, food: int, price: int, area: int, rating: int, tpl: int):
+    n, f, p = NAMES[name], FOODS[food], PRICES[price]
+    a, r = AREAS[area], RATINGS[rating]
+    mr = f"{n}|{f}|{p}"
+    text = [
+        f"{n} serves {p} {f} food.",
+        f"{n} is a {p} {f} spot.",
+        f"Try {n} for {f} food.",
+        f"{n} has {r} rated {f}.",
+        f"{n} is {p}, at the {a}.",
+    ][tpl]
+    return mr, text
+
+
+def encode(mr: str, text: str, seq: int):
+    """Byte-level layout identical to rust Tokenizer::encode."""
+    b = list(mr.encode()) + [SEP] + list(text.encode())
+    if len(b) > seq:
+        return None
+    mask = [0.0] * (len(mr) + 1) + [1.0] * len(text)
+    b += [PAD] * (seq - len(b))
+    mask += [0.0] * (seq - len(mask))
+    return np.array(b, np.int32), np.array(mask, np.float32)
+
+
+def pretrain_batches(seq: int, batch: int, steps: int, seed: int = 0,
+                     templates=(0, 1)):
+    """Yield (tokens [B,T] i32, mask [B,T] f32) pre-training batches.
+
+    Restricted to `templates` so the downstream fine-tuning corpus
+    (all templates) has unseen structure to adapt to.
+    """
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        toks = np.zeros((batch, seq), np.int32)
+        masks = np.zeros((batch, seq), np.float32)
+        for i in range(batch):
+            enc = None
+            for _ in range(64):  # guard: seq too small to fit any sample
+                enc = encode(*render(
+                    rng.integers(len(NAMES)), rng.integers(len(FOODS)),
+                    rng.integers(len(PRICES)), rng.integers(len(AREAS)),
+                    rng.integers(len(RATINGS)),
+                    int(rng.choice(templates)),
+                ), seq)
+                if enc is not None:
+                    break
+            if enc is None:
+                raise ValueError(f"no schema sample fits seq={seq}")
+            toks[i], masks[i] = enc
+        yield toks, masks

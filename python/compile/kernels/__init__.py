@@ -1,0 +1,4 @@
+"""L1: Pallas kernels for the paper's compute hot-spot (LoRA projection)."""
+
+from . import ref  # noqa: F401
+from .lora_matmul import lora_proj, lora_proj_nograd, matmul  # noqa: F401

@@ -1,0 +1,154 @@
+"""L1 Pallas kernels: fused LoRA projection and a tiled matmul.
+
+The paper's client/server compute hot-spot is the LoRA-augmented
+projection ``y = x @ W + (alpha/r) * (x @ A) @ B`` applied to the query
+and value matrices of every transformer block (Sec. IV, Table III).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid walks
+``(M/bm, N/bn)`` output tiles; BlockSpec streams an ``(bm, K)`` slab of
+``x`` and a ``(K, bn)`` slab of ``W`` into VMEM per step, while the tiny
+rank-r factors ``A`` (K, r) and the ``(r, bn)`` slice of ``B`` ride in
+the same residency — one HBM pass over ``x`` feeds both the MXU matmul
+and the LoRA bottleneck, which is the fusion the paper's FLOP model
+charges as ``rho_j + r*delta_rho_j``.
+
+On this CPU testbed every ``pallas_call`` uses ``interpret=True`` (the
+CPU PJRT plugin cannot execute Mosaic custom-calls); the kernels still
+lower into the exported HLO and are validated against ``ref.py``.
+
+Autodiff: ``pallas_call`` has no automatic VJP, so ``lora_proj`` is a
+``jax.custom_vjp`` whose backward pass is itself built from these
+kernels (dx is another fused LoRA projection over transposed operands;
+dA/dB are tiled matmuls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["lora_proj", "matmul", "lora_proj_nograd"]
+
+# Preferred VMEM tile edges, largest first. We pick the largest divisor of
+# the actual dim so interpret mode never needs masking. 128 matches the
+# MXU systolic edge; smaller fallbacks keep odd test shapes legal.
+_TILE_CANDIDATES = (256, 128, 64, 32, 16, 8, 4, 2, 1)
+
+
+def _pick_tile(dim: int, cap: int = 256) -> int:
+    for t in _TILE_CANDIDATES:
+        if t <= cap and dim % t == 0:
+            return t
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# fused LoRA projection forward
+# ---------------------------------------------------------------------------
+
+
+def _lora_kernel(x_ref, w_ref, a_ref, b_ref, o_ref, *, scale: float):
+    x = x_ref[...]
+    base = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+    bott = jnp.dot(x, a_ref[...], preferred_element_type=jnp.float32)
+    delta = jnp.dot(bott, b_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = (base + scale * delta).astype(o_ref.dtype)
+
+
+def _lora_pallas(x, w, a, b, scale: float):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch {k} vs {k2}"
+    r = a.shape[1]
+    bm, bn = _pick_tile(m), _pick_tile(n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_lora_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),   # x slab: reused over j
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),   # W column panel
+            pl.BlockSpec((k, r), lambda i, j: (0, 0)),    # A resident
+            pl.BlockSpec((r, bn), lambda i, j: (0, j)),   # B column panel
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, a, b)
+
+
+# ---------------------------------------------------------------------------
+# tiled matmul (used by the backward pass for dA / dB)
+# ---------------------------------------------------------------------------
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def matmul(x, y):
+    """Tiled Pallas matmul ``x @ y`` with f32 accumulation.
+
+    Grid over output tiles with the K dimension resident per step —
+    adequate for the adapter-gradient matmuls where one of M/N is the
+    tiny LoRA rank.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims mismatch {k} vs {k2}"
+    bm, bn = _pick_tile(m), _pick_tile(n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+# ---------------------------------------------------------------------------
+# custom-VJP wrapper
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def lora_proj(x, w, a, b, scale: float):
+    """Differentiable fused LoRA projection ``x@w + scale*(x@a)@b``.
+
+    ``w`` is frozen: its cotangent is returned as zeros and never
+    materialized as a dense [K, N] product in the backward kernels.
+    """
+    return _lora_pallas(x, w, a, b, scale)
+
+
+def _lora_fwd(x, w, a, b, scale):
+    return _lora_pallas(x, w, a, b, scale), (x, w, a, b)
+
+
+def _lora_bwd(scale, res, dy):
+    x, w, a, b = res
+    # dx = dy @ w.T + scale*(dy @ b.T) @ a.T — same fused form, transposed.
+    dx = _lora_pallas(dy, w.T, b.T, a.T, scale)
+    t = matmul(dy, b.T)                       # [M, r]
+    da = scale * matmul(x.T, t)               # [K, r]
+    db = scale * matmul(matmul(x, a).T, dy)   # [r, N]
+    dw = jnp.zeros_like(w)                    # frozen
+    return dx, dw, da.astype(a.dtype), db.astype(b.dtype)
+
+
+lora_proj.defvjp(_lora_fwd, _lora_bwd)
+
+
+def lora_proj_nograd(x, w, a, b, scale: float):
+    """Forward-only entry (no VJP bookkeeping) for inference paths."""
+    return _lora_pallas(x, w, a, b, scale)

@@ -1,0 +1,51 @@
+"""Pure-jnp reference oracle for the L1 Pallas kernels.
+
+This is the CORE correctness signal for the compile path: every Pallas
+kernel in this package must match these functions (pytest + hypothesis
+sweep shapes/dtypes in ``python/tests/test_kernel.py``).
+
+Convention (matches the paper's LoRA definition W0 + BA up to layout):
+
+    x : [M, K]   activation slab (M = batch*seq rows)
+    w : [K, N]   frozen pre-trained projection
+    a : [K, r]   LoRA down-projection ("A", trainable)
+    b : [r, N]   LoRA up-projection  ("B", trainable)
+
+    y = x @ w + scale * (x @ a) @ b        with scale = alpha / r
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lora_proj(x, w, a, b, scale):
+    """Fused LoRA projection y = x@w + scale*(x@a)@b (f32 accumulation)."""
+    base = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    bottleneck = jnp.dot(x, a, preferred_element_type=jnp.float32)
+    delta = jnp.dot(bottleneck, b, preferred_element_type=jnp.float32)
+    return (base + scale * delta).astype(x.dtype)
+
+
+def lora_proj_grads(x, w, a, b, scale, dy):
+    """Reference VJP products for ``lora_proj``.
+
+    Returns (dx, da, db); ``w`` is frozen so dw is never materialized —
+    exactly the saving LoRA exists for.
+    """
+    f32 = jnp.float32
+    dy32 = dy.astype(f32)
+    x32 = x.astype(f32)
+    # dx = dy @ w.T + scale * (dy @ b.T) @ a.T
+    t = jnp.dot(dy32, b.astype(f32).T)                    # [M, r]
+    dx = jnp.dot(dy32, w.astype(f32).T) + scale * jnp.dot(t, a.astype(f32).T)
+    # da = scale * x.T @ (dy @ b.T)
+    da = scale * jnp.dot(x32.T, t)                        # [K, r]
+    # db = scale * (x @ a).T @ dy
+    db = scale * jnp.dot(jnp.dot(x32, a.astype(f32)).T, dy32)  # [r, N]
+    return dx.astype(x.dtype), da.astype(a.dtype), db.astype(b.dtype)
+
+
+def matmul(x, y):
+    """Plain reference matmul with f32 accumulation."""
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,422 @@
+"""L2: split GPT-2 with LoRA adapters — the paper's fine-tuning model.
+
+The model is partitioned at a transformer-block boundary (the paper's
+split vector mu, constraint C3 forces a contiguous prefix on the
+client): the *client* runs token+position embedding plus the first
+``l_c`` blocks and emits the split-layer activations ``s``; the *main
+server* runs the remaining blocks, the final LayerNorm and the (tied)
+LM head, computes the loss, and returns the activation gradients
+``ds`` (Sec. IV, steps a–f).
+
+Only the LoRA adapters on the query/value projections train (the paper
+applies LoRA "to the query and value matrices across all Transformer
+layers"); every pre-trained weight is frozen and flows in as a runtime
+argument so the Rust side can upload it to device once and reuse the
+buffer every step.
+
+Three jitted entry points are AOT-lowered per (split, rank) variant:
+
+    client_fwd (W_c, A_c, tokens)            -> s
+    server_step(W_s, A_s, s, tokens, mask)   -> (loss, dA_s..., ds)
+    client_bwd (W_c, A_c, tokens, ds)        -> (dA_c...,)
+
+``client_bwd`` recomputes the client forward (rematerialization): the
+client never stores intermediate state between its two phases, matching
+the paper's client-memory constraint, at the cost of one extra client
+FP that the delay model already charges via varpi_j ≈ 2 rho_j.
+
+The q/v projections go through the L1 Pallas kernel ``lora_proj`` so
+the whole stack lowers into one HLO module per entry point.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import lora_proj
+
+LN_EPS = 1e-5
+LORA_ALPHA = 16.0  # adapter scaling numerator: scale = alpha / r
+
+
+@dataclasses.dataclass(frozen=True)
+class GPT2Config:
+    """Architecture hyper-parameters for one model variant."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq: int
+    batch: int
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# The end-to-end training variant: a faithfully-shaped GPT-2 scaled to
+# CPU-trainable size (DESIGN.md §2 records the substitution for GPT2-S).
+TINY = GPT2Config(name="tiny", vocab=256, d_model=192, n_layers=6, n_heads=6, seq=64, batch=8)
+# Fast variant for runtime integration tests.
+MICRO = GPT2Config(name="micro", vocab=64, d_model=32, n_layers=2, n_heads=2, seq=8, batch=2)
+
+CONFIGS: Dict[str, GPT2Config] = {c.name: c for c in (TINY, MICRO)}
+
+
+# ---------------------------------------------------------------------------
+# parameter layout
+# ---------------------------------------------------------------------------
+#
+# Frozen weights and trainable adapters are ordered, named lists of
+# arrays; the same order is recorded in artifacts/manifest.json and is
+# the wire format between Rust host buffers and the HLO entry points.
+
+
+def block_weight_names(j: int) -> List[str]:
+    p = f"h{j}."
+    return [
+        p + "ln1_g", p + "ln1_b",
+        p + "wq", p + "bq", p + "wk", p + "bk", p + "wv", p + "bv",
+        p + "wo", p + "bo",
+        p + "ln2_g", p + "ln2_b",
+        p + "w1", p + "b1", p + "w2", p + "b2",
+    ]
+
+
+def client_weight_names(cfg: GPT2Config, l_c: int) -> List[str]:
+    names = ["wte", "wpe"]
+    for j in range(l_c):
+        names += block_weight_names(j)
+    return names
+
+
+def server_weight_names(cfg: GPT2Config, l_c: int) -> List[str]:
+    names: List[str] = []
+    for j in range(l_c, cfg.n_layers):
+        names += block_weight_names(j)
+    names += ["lnf_g", "lnf_b", "wte_head"]  # tied head shipped explicitly
+    return names
+
+
+def weight_shape(cfg: GPT2Config, name: str) -> Tuple[int, ...]:
+    d, f = cfg.d_model, cfg.d_ff
+    base = name.split(".")[-1]
+    if name == "wte" or name == "wte_head":
+        return (cfg.vocab, d)
+    if name == "wpe":
+        return (cfg.seq, d)
+    if base in ("ln1_g", "ln1_b", "ln2_g", "ln2_b", "lnf_g", "lnf_b",
+                "bq", "bk", "bv", "bo", "b2"):
+        return (d,)
+    if base in ("wq", "wk", "wv", "wo"):
+        return (d, d)
+    if base == "w1":
+        return (d, f)
+    if base == "b1":
+        return (f,)
+    if base == "w2":
+        return (f, d)
+    raise ValueError(f"unknown weight {name}")
+
+
+def adapter_names(blocks: range) -> List[str]:
+    """LoRA adapters on q and v of every block: A [d,r] then B [r,d]."""
+    names = []
+    for j in blocks:
+        for proj in ("q", "v"):
+            names += [f"h{j}.a{proj}_A", f"h{j}.a{proj}_B"]
+    return names
+
+
+def adapter_shape(cfg: GPT2Config, rank: int, name: str) -> Tuple[int, ...]:
+    d = cfg.d_model
+    return (d, rank) if name.endswith("_A") else (rank, d)
+
+
+def init_weights(cfg: GPT2Config, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Deterministic "pre-trained" weights (GPT-2 init scheme).
+
+    The real paper starts from the published GPT-2 checkpoint; offline we
+    stand up the same architecture with the standard init (normal 0.02,
+    residual projections scaled by 1/sqrt(2L)) — DESIGN.md §2.
+    """
+    rng = np.random.default_rng(seed)
+    resid_scale = 1.0 / math.sqrt(2.0 * cfg.n_layers)
+    out: Dict[str, np.ndarray] = {}
+    all_names = client_weight_names(cfg, cfg.n_layers) + ["lnf_g", "lnf_b", "wte_head"]
+    for name in all_names:
+        shape = weight_shape(cfg, name)
+        base = name.split(".")[-1]
+        if base.endswith("_g") or base in ("ln1_g", "ln2_g", "lnf_g"):
+            arr = np.ones(shape, np.float32)
+        elif base.startswith("b") or base.endswith("_b"):
+            arr = np.zeros(shape, np.float32)
+        else:
+            arr = rng.normal(0.0, 0.02, shape).astype(np.float32)
+            if base in ("wo", "w2"):
+                arr *= resid_scale
+        out[name] = arr
+    out["wte_head"] = out["wte"]  # tied embedding / head
+    return out
+
+
+def init_adapters(cfg: GPT2Config, rank: int, blocks: range, seed: int = 1) -> Dict[str, np.ndarray]:
+    """LoRA init: A ~ N(0, 0.02), B = 0 (adapter starts as identity)."""
+    rng = np.random.default_rng(seed)
+    out: Dict[str, np.ndarray] = {}
+    for name in adapter_names(blocks):
+        shape = adapter_shape(cfg, rank, name)
+        if name.endswith("_A"):
+            out[name] = rng.normal(0.0, 0.02, shape).astype(np.float32)
+        else:
+            out[name] = np.zeros(shape, np.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# model pieces
+# ---------------------------------------------------------------------------
+
+
+def _layernorm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + LN_EPS) * g + b
+
+
+def _attention(cfg: GPT2Config, x, w: Dict[str, jnp.ndarray], ad, scale):
+    """Causal MHA; q and v projections run the fused LoRA Pallas kernel."""
+    bsz, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    x2 = x.reshape(bsz * t, d)
+    q = lora_proj(x2, w["wq"], ad["aq_A"], ad["aq_B"], scale) + w["bq"]
+    v = lora_proj(x2, w["wv"], ad["av_A"], ad["av_B"], scale) + w["bv"]
+    k = jnp.dot(x2, w["wk"]) + w["bk"]
+
+    def heads(z):
+        return z.reshape(bsz, t, h, dh).transpose(0, 2, 1, 3)  # [B,h,T,dh]
+
+    q, k, v = heads(q), heads(k), heads(v)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(dh)
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(causal, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(bsz * t, d)
+    out = jnp.dot(out, w["wo"]) + w["bo"]
+    return out.reshape(bsz, t, d)
+
+
+def _mlp(x, w):
+    bsz, t, d = x.shape
+    x2 = x.reshape(bsz * t, d)
+    hdn = jnp.dot(x2, w["w1"]) + w["b1"]
+    hdn = jax.nn.gelu(hdn, approximate=True)
+    out = jnp.dot(hdn, w["w2"]) + w["b2"]
+    return out.reshape(bsz, t, d)
+
+
+def _block(cfg, x, w, ad, scale):
+    x = x + _attention(cfg, _layernorm(x, w["ln1_g"], w["ln1_b"]), w, ad, scale)
+    x = x + _mlp(_layernorm(x, w["ln2_g"], w["ln2_b"]), w)
+    return x
+
+
+def _weights_dict(names, arrays):
+    return dict(zip(names, arrays))
+
+
+# ---------------------------------------------------------------------------
+# entry points (operate on flat lists — the AOT wire format)
+# ---------------------------------------------------------------------------
+
+
+def client_fwd(cfg: GPT2Config, l_c: int, rank: int,
+               weights: List[jnp.ndarray], adapters: List[jnp.ndarray],
+               tokens: jnp.ndarray) -> jnp.ndarray:
+    """Client phase a: embed + first l_c blocks -> split activations s."""
+    scale = LORA_ALPHA / rank
+    wnames = client_weight_names(cfg, l_c)
+    anames = adapter_names(range(l_c))
+    wd = _weights_dict(wnames, weights)
+    adl = _weights_dict(anames, adapters)
+    x = wd["wte"][tokens] + wd["wpe"][None, :, :]
+    for j in range(l_c):
+        wblk = {n[len(f"h{j}."):]: wd[n] for n in block_weight_names(j)}
+        ablk = {n[len(f"h{j}."):]: adl[n] for n in anames if n.startswith(f"h{j}.")}
+        x = _block(cfg, x, wblk, ablk, scale)
+    return x
+
+
+def _server_loss(cfg: GPT2Config, l_c: int, rank: int,
+                 weights: List[jnp.ndarray], adapters: List[jnp.ndarray],
+                 s: jnp.ndarray, tokens: jnp.ndarray, mask: jnp.ndarray):
+    """Server blocks + head + masked next-token cross-entropy."""
+    scale = LORA_ALPHA / rank
+    wnames = server_weight_names(cfg, l_c)
+    anames = adapter_names(range(l_c, cfg.n_layers))
+    wd = _weights_dict(wnames, weights)
+    adl = _weights_dict(anames, adapters)
+    x = s
+    for j in range(l_c, cfg.n_layers):
+        wblk = {n[len(f"h{j}."):]: wd[n] for n in block_weight_names(j)}
+        ablk = {n[len(f"h{j}."):]: adl[n] for n in anames if n.startswith(f"h{j}.")}
+        x = _block(cfg, x, wblk, ablk, scale)
+    x = _layernorm(x, wd["lnf_g"], wd["lnf_b"])
+    logits = jnp.einsum("btd,vd->btv", x, wd["wte_head"])  # tied head
+    # next-token prediction: position t predicts tokens[t+1]
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]  # [B,T-1]
+    m = mask[:, 1:]
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def server_step(cfg: GPT2Config, l_c: int, rank: int,
+                weights: List[jnp.ndarray], adapters: List[jnp.ndarray],
+                s: jnp.ndarray, tokens: jnp.ndarray, mask: jnp.ndarray):
+    """Server phases c–e: FP, loss, BP -> (loss, adapter grads, ds).
+
+    Gradients w.r.t. the server adapters (Eq. 5 update is applied by the
+    Rust host) and w.r.t. the incoming activations (shipped back to the
+    client, Sec. IV step e).
+    """
+
+    def loss_fn(adapters, s):
+        return _server_loss(cfg, l_c, rank, weights, adapters, s, tokens, mask)
+
+    loss, (d_ad, ds) = jax.value_and_grad(loss_fn, argnums=(0, 1))(adapters, s)
+    return (loss, *d_ad, ds)
+
+
+def client_bwd(cfg: GPT2Config, l_c: int, rank: int,
+               weights: List[jnp.ndarray], adapters: List[jnp.ndarray],
+               tokens: jnp.ndarray, ds: jnp.ndarray):
+    """Client phase f: recompute FP, pull ds back to adapter grads."""
+
+    def fwd(adapters):
+        return client_fwd(cfg, l_c, rank, weights, adapters, tokens)
+
+    _, vjp = jax.vjp(fwd, adapters)
+    (d_ad,) = vjp(ds)
+    return tuple(d_ad)
+
+
+# ---------------------------------------------------------------------------
+# build-time pre-training (plain model, no LoRA, no Pallas — fast jnp path)
+# ---------------------------------------------------------------------------
+
+
+def _attention_plain(cfg: GPT2Config, x, w):
+    bsz, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    x2 = x.reshape(bsz * t, d)
+    q = jnp.dot(x2, w["wq"]) + w["bq"]
+    k = jnp.dot(x2, w["wk"]) + w["bk"]
+    v = jnp.dot(x2, w["wv"]) + w["bv"]
+
+    def heads(z):
+        return z.reshape(bsz, t, h, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(dh)
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    att = jax.nn.softmax(jnp.where(causal, att, -1e9), axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(bsz * t, d)
+    return (jnp.dot(out, w["wo"]) + w["bo"]).reshape(bsz, t, d)
+
+
+def _plain_loss(cfg: GPT2Config, wd: Dict[str, jnp.ndarray], tokens, mask):
+    """Full-model next-token loss with frozen-weight layout, no adapters."""
+    x = wd["wte"][tokens] + wd["wpe"][None, :, :]
+    for j in range(cfg.n_layers):
+        w = {n[len(f"h{j}."):]: wd[n] for n in block_weight_names(j)}
+        x = x + _attention_plain(cfg, _layernorm(x, w["ln1_g"], w["ln1_b"]), w)
+        x = x + _mlp(_layernorm(x, w["ln2_g"], w["ln2_b"]), w)
+    x = _layernorm(x, wd["lnf_g"], wd["lnf_b"])
+    logits = jnp.einsum("btd,vd->btv", x, wd["wte_head"])
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    m = mask[:, 1:]
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def pretrain_weights(cfg: GPT2Config, steps: int, batch: int | None = None,
+                     lr: float = 3e-4, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Full-weight pre-training on the restricted-template corpus.
+
+    Stands in for the published GPT-2 checkpoint (DESIGN.md §2): the
+    exported frozen weights already model the schema's surface language,
+    so downstream LoRA fine-tuning (Rust side, all templates) measures
+    *adaptation* capacity — which is where the paper's rank effect
+    lives. Deterministic given (steps, batch, lr, seed).
+    """
+    from . import corpus as C
+
+    batch = batch or cfg.batch
+    weights = {k: jnp.asarray(v) for k, v in init_weights(cfg, seed=0).items()}
+    # keep head tied to wte during pretraining by training wte only
+    weights.pop("wte_head")
+
+    def loss_fn(wd, tokens, mask):
+        wd = dict(wd)
+        wd["wte_head"] = wd["wte"]
+        return _plain_loss(cfg, wd, tokens, mask)
+
+    @jax.jit
+    def step(wd, m_state, v_state, t, tokens, mask):
+        loss, grads = jax.value_and_grad(loss_fn)(wd, tokens, mask)
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        m_state = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, m_state, grads)
+        v_state = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, v_state, grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+        wd = jax.tree.map(
+            lambda p, m, v: p - lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps),
+            wd, m_state, v_state,
+        )
+        return wd, m_state, v_state, loss
+
+    m_state = jax.tree.map(jnp.zeros_like, weights)
+    v_state = jax.tree.map(jnp.zeros_like, weights)
+    first = last = None
+    for i, (tokens, mask) in enumerate(
+        C.pretrain_batches(cfg.seq, batch, steps, seed=seed)
+    ):
+        weights, m_state, v_state, loss = step(
+            weights, m_state, v_state, i + 1, jnp.asarray(tokens), jnp.asarray(mask)
+        )
+        if first is None:
+            first = float(loss)
+        last = float(loss)
+    print(f"  pretrain[{cfg.name}]: {steps} steps, loss {first:.3f} -> {last:.3f}")
+    out = {k: np.asarray(v) for k, v in weights.items()}
+    out["wte_head"] = out["wte"]  # re-tie for export
+    return out
+
+
+def full_loss(cfg: GPT2Config, l_c: int, rank: int,
+              weights_c, adapters_c, weights_s, adapters_s, tokens, mask):
+    """Composed loss client_fwd ∘ server loss — split-consistency oracle.
+
+    For any split point the composed value must be identical; the tests
+    assert this invariance across l_c, which is exactly what lets the
+    optimizer move the split point without touching learning dynamics.
+    """
+    s = client_fwd(cfg, l_c, rank, weights_c, adapters_c, tokens)
+    return _server_loss(cfg, l_c, rank, weights_s, adapters_s, s, tokens, mask)

@@ -1,0 +1,122 @@
+"""AOT exporter invariants: signatures, tensor files, HLO round-trip.
+
+Runs the full export for the `micro` variant into a temp dir and checks
+the manifest contract the Rust runtime depends on. (Ordering between
+weights/adapters/data inputs is the wire format — a regression here
+breaks the Rust side silently, so it is pinned by tests.)
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def exported():
+    d = tempfile.mkdtemp(prefix="sfllm_aot_")
+    argv = sys.argv
+    sys.argv = ["aot", "--out", d, "--variant", "micro:1:2"]
+    try:
+        aot.main()
+    finally:
+        sys.argv = argv
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    return d, manifest
+
+
+def test_manifest_structure(exported):
+    d, m = exported
+    assert "micro" in m["configs"]
+    assert "micro_s1_r2" in m["variants"]
+    v = m["variants"]["micro_s1_r2"]
+    assert set(v["entries"]) == {"client_fwd", "server_step", "client_bwd"}
+    assert v["l_c"] == 1 and v["rank"] == 2
+    assert v["lora_scale"] == M.LORA_ALPHA / 2
+
+
+def test_input_ordering_weights_adapters_data(exported):
+    _, m = exported
+    for entry in m["variants"]["micro_s1_r2"]["entries"].values():
+        kinds = [i["kind"] for i in entry["inputs"]]
+        # contiguous: weights, then adapters, then data
+        order = {"weight": 0, "adapter": 1, "data": 2}
+        ranks = [order[k] for k in kinds]
+        assert ranks == sorted(ranks), f"non-contiguous kinds: {kinds}"
+        assert kinds[-1] == "data"
+
+
+def test_weight_file_matches_table(exported):
+    d, m = exported
+    cfg_rec = m["configs"]["micro"]
+    path = os.path.join(d, cfg_rec["weights_file"])
+    raw = np.fromfile(path, dtype="<f4")
+    total = sum(int(np.prod(t["shape"])) for t in cfg_rec["weights"])
+    assert len(raw) == total
+    # offsets are contiguous and 4-byte aligned
+    off = 0
+    for t in cfg_rec["weights"]:
+        assert t["offset"] == off
+        off += int(np.prod(t["shape"])) * 4
+
+
+def test_weights_reproduce_init(exported):
+    d, m = exported
+    cfg_rec = m["configs"]["micro"]
+    path = os.path.join(d, cfg_rec["weights_file"])
+    raw = np.fromfile(path, dtype="<f4")
+    w = M.init_weights(M.MICRO, seed=0)
+    first = cfg_rec["weights"][0]
+    arr = raw[: int(np.prod(first["shape"]))].reshape(first["shape"])
+    np.testing.assert_array_equal(arr, w[first["name"]])
+
+
+def test_hlo_files_nonempty_and_text(exported):
+    d, m = exported
+    for entry in m["variants"]["micro_s1_r2"]["entries"].values():
+        path = os.path.join(d, entry["file"])
+        with open(path) as f:
+            text = f.read()
+        assert len(text) > 1000
+        assert text.lstrip().startswith("HloModule")
+        # entry computation must carry all declared parameters
+        # (jit(keep_unused=True) — see aot.py)
+        assert text.count("parameter(") >= len(entry["inputs"])
+
+
+def test_entry_signature_shapes(exported):
+    _, m = exported
+    cfg = M.MICRO
+    v = m["variants"]["micro_s1_r2"]
+    cf = v["entries"]["client_fwd"]
+    assert cf["inputs"][-1]["shape"] == [cfg.batch, cfg.seq]
+    assert cf["outputs"][0]["shape"] == [cfg.batch, cfg.seq, cfg.d_model]
+    ss = v["entries"]["server_step"]
+    assert ss["outputs"][0]["shape"] == []  # loss scalar
+    assert ss["outputs"][-1]["shape"] == [cfg.batch, cfg.seq, cfg.d_model]  # ds
+
+
+def test_adapter_files_match_manifest(exported):
+    d, m = exported
+    v = m["variants"]["micro_s1_r2"]
+    for key in ("adapters_client", "adapters_server"):
+        rec = v[key]
+        raw = np.fromfile(os.path.join(d, rec["file"]), dtype="<f4")
+        total = sum(int(np.prod(t["shape"])) for t in rec["tensors"])
+        assert len(raw) == total
+        # A tensors nonzero, B tensors zero
+        for t in rec["tensors"]:
+            n = int(np.prod(t["shape"]))
+            chunk = raw[t["offset"] // 4 : t["offset"] // 4 + n]
+            if t["name"].endswith("_B"):
+                assert not chunk.any()
+            else:
+                assert chunk.any()

@@ -1,0 +1,170 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle in ref.py.
+
+Hypothesis sweeps shapes, ranks, scales and dtypes; every case asserts
+allclose between the kernel and the reference, for the forward pass and
+for all three backward products.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lora_proj, lora_proj_nograd, matmul, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, dtype, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _make_operands(seed, m, k, n, r, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = _rand(ks[0], (m, k), dtype)
+    w = _rand(ks[1], (k, n), dtype, 0.2)
+    a = _rand(ks[2], (k, r), dtype, 0.2)
+    b = _rand(ks[3], (r, n), dtype, 0.2)
+    dy = _rand(ks[4], (m, n), dtype)
+    return x, w, a, b, dy
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-4, atol=1e-4)
+
+
+def _close(got, want, dtype):
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
+# directed cases
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n,r", [(8, 16, 16, 1), (64, 128, 128, 4), (128, 64, 192, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lora_fwd_matches_ref(m, k, n, r, dtype):
+    x, w, a, b, _ = _make_operands(0, m, k, n, r, dtype)
+    scale = 2.0 / r
+    _close(lora_proj(x, w, a, b, scale), ref.lora_proj(x, w, a, b, scale), dtype)
+
+
+@pytest.mark.parametrize("m,k,n,r", [(8, 16, 16, 1), (64, 128, 128, 4), (32, 48, 96, 6)])
+def test_lora_bwd_matches_ref(m, k, n, r):
+    dtype = jnp.float32
+    x, w, a, b, dy = _make_operands(1, m, k, n, r, dtype)
+    scale = 2.0 / r
+
+    def loss(x, w, a, b):
+        return (lora_proj(x, w, a, b, scale) * dy).sum()
+
+    dx, dw, da, db = jax.grad(loss, argnums=(0, 1, 2, 3))(x, w, a, b)
+    dxr, dar, dbr = ref.lora_proj_grads(x, w, a, b, scale, dy)
+    _close(dx, dxr, dtype)
+    _close(da, dar, dtype)
+    _close(db, dbr, dtype)
+    assert not np.asarray(dw).any(), "frozen weight must get zero cotangent"
+
+
+def test_lora_grads_match_autodiff_of_ref():
+    """Our hand-written VJP == jax.grad of the reference expression."""
+    x, w, a, b, dy = _make_operands(2, 24, 32, 40, 4, jnp.float32)
+    scale = 0.5
+
+    def loss_kernel(x, a, b):
+        return (lora_proj(x, w, a, b, scale) * dy).sum()
+
+    def loss_ref(x, a, b):
+        return (ref.lora_proj(x, w, a, b, scale) * dy).sum()
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, a, b)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, a, b)
+    for got, want in zip(gk, gr):
+        _close(got, want, jnp.float32)
+
+
+def test_zero_adapters_reduce_to_plain_matmul():
+    """With A=B=0 the fused kernel must equal the frozen projection."""
+    x, w, a, b, _ = _make_operands(3, 16, 32, 24, 4, jnp.float32)
+    z = jnp.zeros_like(a), jnp.zeros_like(b)
+    _close(lora_proj(x, w, *z, 1.0), ref.matmul(x, w), jnp.float32)
+
+
+def test_scale_linearity():
+    """lora(x,..,2s) - lora(x,..,s) == s * (x@a)@b."""
+    x, w, a, b, _ = _make_operands(4, 16, 32, 24, 2, jnp.float32)
+    y1 = lora_proj(x, w, a, b, 1.0)
+    y2 = lora_proj(x, w, a, b, 2.0)
+    _close(y2 - y1, ref.matmul(ref.matmul(x, a), b), jnp.float32)
+
+
+def test_nograd_entry_matches():
+    x, w, a, b, _ = _make_operands(5, 16, 32, 24, 2, jnp.float32)
+    _close(lora_proj_nograd(x, w, a, b, 0.7), lora_proj(x, w, a, b, 0.7), jnp.float32)
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 1, 1), (7, 13, 5), (64, 128, 64)])
+def test_matmul_matches_ref(m, k, n):
+    ks = jax.random.split(jax.random.PRNGKey(6), 2)
+    x = _rand(ks[0], (m, k), jnp.float32)
+    y = _rand(ks[1], (k, n), jnp.float32)
+    _close(matmul(x, y), ref.matmul(x, y), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+_dims = st.sampled_from([1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128])
+_ranks = st.sampled_from([1, 2, 4, 6, 8])
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=_dims, k=_dims, n=_dims, r=_ranks, seed=st.integers(0, 2**16))
+def test_hypothesis_lora_fwd(m, k, n, r, seed):
+    x, w, a, b, _ = _make_operands(seed, m, k, n, r, jnp.float32)
+    scale = 1.0 / r
+    _close(lora_proj(x, w, a, b, scale), ref.lora_proj(x, w, a, b, scale), jnp.float32)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=_dims, k=_dims, n=_dims, r=_ranks, seed=st.integers(0, 2**16))
+def test_hypothesis_lora_bwd(m, k, n, r, seed):
+    x, w, a, b, dy = _make_operands(seed, m, k, n, r, jnp.float32)
+    scale = 1.0 / r
+
+    def loss(x, a, b):
+        return (lora_proj(x, w, a, b, scale) * dy).sum()
+
+    dx, da, db = jax.grad(loss, argnums=(0, 1, 2))(x, a, b)
+    dxr, dar, dbr = ref.lora_proj_grads(x, w, a, b, scale, dy)
+    _close(dx, dxr, jnp.float32)
+    _close(da, dar, jnp.float32)
+    _close(db, dbr, jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=_dims, k=_dims, n=_dims, seed=st.integers(0, 2**16))
+def test_hypothesis_matmul(m, k, n, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = _rand(ks[0], (m, k), jnp.float32)
+    y = _rand(ks[1], (k, n), jnp.float32)
+    _close(matmul(x, y), ref.matmul(x, y), jnp.float32)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 32]),
+    k=st.sampled_from([16, 32, 64]),
+    n=st.sampled_from([16, 32, 64]),
+    r=_ranks,
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_lora_fwd_bf16(m, k, n, r, seed):
+    x, w, a, b, _ = _make_operands(seed, m, k, n, r, jnp.bfloat16)
+    scale = 1.0 / r
+    _close(lora_proj(x, w, a, b, scale), ref.lora_proj(x, w, a, b, scale), jnp.bfloat16)

@@ -1,0 +1,74 @@
+"""Build-time pre-training invariants (model.pretrain_weights).
+
+Kept tiny (micro config, few steps) — the full tiny-model pretraining
+runs once inside `make artifacts`.
+"""
+
+import numpy as np
+import pytest
+
+from compile import corpus as C
+from compile import model as M
+
+
+def test_corpus_matches_rust_generator_schema():
+    # pools must match rust/src/data/corpus.rs (wire compatibility)
+    assert len(C.NAMES) == 10 and max(len(n) for n in C.NAMES) <= 6
+    assert len(C.FOODS) == 7 and max(len(f) for f in C.FOODS) <= 7
+    assert C.PRICES == ["cheap", "moderate", "high"]
+    # every rendered sample fits the tiny window
+    for name in range(len(C.NAMES)):
+        for tpl in range(5):
+            mr, text = C.render(name, 1, 2, 0, 1, tpl)
+            assert len(mr) + 1 + len(text) <= 64, (mr, text)
+
+
+def test_encode_layout_matches_rust_tokenizer():
+    mr, text = C.render(0, 0, 0, 0, 0, 0)
+    tokens, mask = C.encode(mr, text, 64)
+    assert tokens.shape == (64,) and mask.shape == (64,)
+    assert tokens[len(mr)] == C.SEP
+    assert mask[: len(mr) + 1].sum() == 0
+    assert mask.sum() == len(text)
+    assert (tokens[len(mr) + 1 + len(text):] == C.PAD).all()
+
+
+def test_pretrain_batches_deterministic_and_restricted():
+    b1 = list(C.pretrain_batches(64, 2, 3, seed=5))
+    b2 = list(C.pretrain_batches(64, 2, 3, seed=5))
+    for (t1, m1), (t2, m2) in zip(b1, b2):
+        np.testing.assert_array_equal(t1, t2)
+        np.testing.assert_array_equal(m1, m2)
+
+
+def test_micro_window_too_small_raises_not_hangs():
+    with pytest.raises(ValueError, match="no schema sample fits"):
+        list(C.pretrain_batches(8, 2, 1, seed=0))
+
+
+@pytest.mark.parametrize("steps", [2])
+def test_pretrain_deterministic_and_decreasing(steps):
+    # tiny is the only config that pretrains in production (seq 64)
+    w1 = M.pretrain_weights(M.TINY, steps=steps, batch=2, seed=1)
+    w2 = M.pretrain_weights(M.TINY, steps=steps, batch=2, seed=1)
+    for k in w1:
+        np.testing.assert_array_equal(w1[k], w2[k])
+    # weights actually moved from init
+    w0 = M.init_weights(M.TINY, seed=0)
+    moved = any((w1[k] != w0[k]).any() for k in w0 if k != "wte_head")
+    assert moved
+    # head stays tied
+    np.testing.assert_array_equal(w1["wte_head"], w1["wte"])
+
+
+def test_pick_tile_divides_and_caps():
+    from compile.kernels.lora_matmul import _pick_tile
+
+    for dim in [1, 7, 64, 192, 512, 768, 8192]:
+        t = _pick_tile(dim)
+        assert dim % t == 0
+        assert t <= 256
+    # documented §Perf tile choices
+    assert _pick_tile(512) == 256  # tiny M
+    assert _pick_tile(192) == 64   # tiny d
+    assert _pick_tile(768) == 256  # gpt2-s d

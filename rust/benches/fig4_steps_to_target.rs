@@ -1,0 +1,81 @@
+//! Fig. 4 — steps required to reach a target validation loss vs LoRA
+//! rank, extracted from the Fig. 3 measurement runs, plus the fitted
+//! E(r) law the resource optimizer (P4) consumes.
+//!
+//! Run `cargo bench --bench fig3_convergence` first (cargo bench runs
+//! them in this order by default); this bench reads
+//! `results/fig3_val_loss.csv`, computes steps-to-target per rank,
+//! fits `E(r) = e_inf (1 + c/r^alpha)`, and writes
+//! `results/fig4_steps_to_target.csv`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+use sfllm::delay::ConvergenceModel;
+use sfllm::util::csv::{read_csv, CsvWriter};
+
+fn main() -> Result<()> {
+    let (header, rows) = read_csv("results/fig3_val_loss.csv")
+        .context("run `cargo bench --bench fig3_convergence` first")?;
+    if header != ["rank", "step", "val_loss", "ppl"] {
+        bail!("unexpected fig3 csv header: {header:?}");
+    }
+    // rank -> [(step, val_loss)]
+    let mut series: BTreeMap<usize, Vec<(usize, f64)>> = BTreeMap::new();
+    for r in rows {
+        let rank: usize = r[0].parse::<f64>()? as usize;
+        let step: usize = r[1].parse::<f64>()? as usize;
+        let loss: f64 = r[2].parse()?;
+        series.entry(rank).or_default().push((step, loss));
+    }
+    if series.is_empty() {
+        bail!("no data in fig3 csv");
+    }
+
+    // target: the worst (largest) final loss across ranks, so every rank
+    // reaches it; mirrors the paper's "steps to achieve target loss"
+    let target = series
+        .values()
+        .map(|v| v.iter().map(|&(_, l)| l).fold(f64::INFINITY, f64::min))
+        .fold(f64::NEG_INFINITY, f64::max);
+
+    println!("Fig.4: steps to reach target validation loss {target:.4}");
+    let mut csv = CsvWriter::create(
+        "results/fig4_steps_to_target.csv",
+        &["rank", "steps_to_target"],
+    )?;
+    let mut points = Vec::new();
+    for (&rank, curve) in &series {
+        let steps = curve
+            .iter()
+            .find(|&&(_, l)| l <= target)
+            .map(|&(s, _)| s)
+            .unwrap_or(curve.last().unwrap().0);
+        println!("  rank {rank}: {steps} steps");
+        csv.row_f64(&[rank as f64, steps as f64])?;
+        points.push((rank, steps as f64));
+    }
+    csv.flush()?;
+
+    // shape check: monotone non-increasing in rank (diminishing returns)
+    let decreasing = points.windows(2).all(|w| w[1].1 <= w[0].1);
+    println!(
+        "  [{}] steps-to-target non-increasing with rank",
+        if decreasing { "ok" } else { "WARN" }
+    );
+
+    if points.len() >= 2 {
+        let fit = ConvergenceModel::fit(&points);
+        if let ConvergenceModel::Fitted { e_inf, c, alpha } = &fit {
+            println!(
+                "fitted E(r) = {e_inf:.1} * (1 + {c:.3} / r^{alpha:.2})  \
+                 — feed into delay::ConvergenceModel for P4"
+            );
+            for &(r, measured) in &points {
+                println!("    rank {r}: fit {:.1} vs measured {measured:.0}", fit.rounds(r));
+            }
+        }
+    }
+    println!("written results/fig4_steps_to_target.csv");
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Fig. 6 — total training latency vs client computing capability
+//! (FLOPs per cycle, i.e. 1/κ_k), proposed vs baselines a–d.
+//!
+//! Expected shape: latency falls as clients strengthen; the gap to
+//! baseline c (random split) narrows, since with strong clients the
+//! split location matters less.
+//!
+//! Writes `results/fig6_latency_vs_client_compute.csv`.
+
+use sfllm::config::Config;
+use sfllm::delay::ConvergenceModel;
+use sfllm::opt::baselines::compare_all;
+use sfllm::util::csv::CsvWriter;
+
+fn main() -> anyhow::Result<()> {
+    let base = Config::paper_defaults();
+    let conv = ConvergenceModel::paper_default();
+    // paper default: 1024 FLOPs/cycle on clients
+    let flops_per_cycle = [256.0, 512.0, 1024.0, 2048.0, 4096.0];
+    let mut csv = CsvWriter::create(
+        "results/fig6_latency_vs_client_compute.csv",
+        &["client_flops_per_cycle", "proposed", "baseline_a", "baseline_b", "baseline_c", "baseline_d"],
+    )?;
+    println!("Fig.6: total latency (s) vs client compute (FLOPs/cycle)");
+    println!(
+        "{:>12} {:>12} {:>12} {:>12} {:>12} {:>12} {:>10}",
+        "FLOPs/cyc", "proposed", "a", "b", "c", "d", "gap to c"
+    );
+    for &fpc in &flops_per_cycle {
+        let mut cfg = base.clone();
+        cfg.system.kappa_client = 1.0 / fpc;
+        let scn = sfllm::sim::build_scenario(&cfg)?;
+        let [p, a, b, c, d] = compare_all(&scn, &conv, &cfg.train.ranks, cfg.system.seed, 5)?;
+        println!(
+            "{:>12.0} {:>12.1} {:>12.1} {:>12.1} {:>12.1} {:>12.1} {:>9.0}%",
+            fpc, p, a, b, c, d, 100.0 * (c / p - 1.0)
+        );
+        csv.row_f64(&[fpc, p, a, b, c, d])?;
+    }
+    csv.flush()?;
+    println!("series written to results/fig6_latency_vs_client_compute.csv");
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Fig. 8 — total training latency vs maximum client transmit power,
+//! proposed vs baselines a–d.
+//!
+//! Expected shape: more transmit power, lower latency for every scheme;
+//! the proposed allocation keeps the lowest curve, and the benefit of
+//! power optimization is most pronounced when power (not bandwidth) is
+//! the binding constraint.
+//!
+//! Writes `results/fig8_latency_vs_power.csv`.
+
+use sfllm::config::Config;
+use sfllm::delay::ConvergenceModel;
+use sfllm::opt::baselines::compare_all;
+use sfllm::util::csv::CsvWriter;
+
+fn main() -> anyhow::Result<()> {
+    let base = Config::paper_defaults();
+    let conv = ConvergenceModel::paper_default();
+    let p_max_dbm = [29.76, 33.76, 37.76, 41.76, 45.76];
+    let mut csv = CsvWriter::create(
+        "results/fig8_latency_vs_power.csv",
+        &["p_max_dbm", "proposed", "baseline_a", "baseline_b", "baseline_c", "baseline_d"],
+    )?;
+    println!("Fig.8: total latency (s) vs max client transmit power");
+    println!(
+        "{:>10} {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "p (dBm)", "proposed", "a", "b", "c", "d"
+    );
+    for &pm in &p_max_dbm {
+        let mut cfg = base.clone();
+        cfg.system.p_max_dbm = pm;
+        let scn = sfllm::sim::build_scenario(&cfg)?;
+        let [p, a, b, c, d] = compare_all(&scn, &conv, &cfg.train.ranks, cfg.system.seed, 5)?;
+        println!(
+            "{:>10.2} {:>12.1} {:>12.1} {:>12.1} {:>12.1} {:>12.1}",
+            pm, p, a, b, c, d
+        );
+        csv.row_f64(&[pm, p, a, b, c, d])?;
+    }
+    csv.flush()?;
+    println!("series written to results/fig8_latency_vs_power.csv");
+    Ok(())
+}

@@ -1,0 +1,142 @@
+//! L3 hot-path micro-benchmarks (hand-rolled harness; no criterion in
+//! the offline crate set). Times the pieces the BCD optimizer and the
+//! coordinator hit per iteration/step:
+//!
+//! * P2 exact power solve (the BCD inner-loop hot spot),
+//! * Algorithm 2 greedy assignment,
+//! * one full BCD optimize() on the Table-II scenario,
+//! * delay-model evaluation,
+//! * FedAvg + Adam step on tiny-sized adapters,
+//! * coordinator round overhead over the mock model (channel + thread
+//!   cost with zero compute).
+//!
+//! §Perf in EXPERIMENTS.md records these numbers before/after tuning.
+
+use std::time::Instant;
+
+use sfllm::config::Config;
+use sfllm::coordinator::mock::MockModel;
+use sfllm::coordinator::{train, OptKind, Optimizer, TrainOptions};
+use sfllm::delay::ConvergenceModel;
+use sfllm::model::lora::{AdapterSet, Tensor};
+use sfllm::opt::bcd::{self, BcdOptions};
+use sfllm::opt::{assignment, power};
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..iters.div_ceil(10).max(1) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    let (val, unit) = if per < 1e-6 {
+        (per * 1e9, "ns")
+    } else if per < 1e-3 {
+        (per * 1e6, "us")
+    } else if per < 1.0 {
+        (per * 1e3, "ms")
+    } else {
+        (per, "s ")
+    };
+    println!("  {name:<44} {val:>10.2} {unit}/op   ({iters} iters)");
+    per
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::paper_defaults();
+    let scn = sfllm::sim::build_scenario(&cfg)?;
+    let conv = ConvergenceModel::paper_default();
+
+    println!("L3 hot-path micro-benchmarks (Table II scenario, K=5, M=N=20):");
+
+    // Algorithm 2
+    bench("algorithm2 greedy assignment", 2000, || {
+        let a = assignment::algorithm2(&scn, 6, 4);
+        std::hint::black_box(a);
+    });
+
+    // P2 exact solve
+    let a2 = assignment::algorithm2(&scn, 6, 4);
+    let alloc = sfllm::delay::Allocation {
+        assign_main: a2.assign_main,
+        assign_fed: a2.assign_fed,
+        psd_main: vec![0.0; 20],
+        psd_fed: vec![0.0; 20],
+        l_c: 6,
+        rank: 4,
+    };
+    bench("P2 exact power solve (bisection+waterfill)", 500, || {
+        let s = power::solve_power(&scn, &alloc).unwrap();
+        std::hint::black_box(s);
+    });
+
+    // delay evaluation
+    let mut alloc2 = alloc.clone();
+    let ps = power::solve_power(&scn, &alloc)?;
+    alloc2.psd_main = ps.psd_main;
+    alloc2.psd_fed = ps.psd_fed;
+    bench("delay model total_delay eval", 20000, || {
+        let t = scn.total_delay(&alloc2, &conv);
+        std::hint::black_box(t);
+    });
+
+    // full BCD
+    bench("Algorithm 3 full optimize()", 100, || {
+        let r = bcd::optimize(&scn, &conv, &BcdOptions::default()).unwrap();
+        std::hint::black_box(r.objective);
+    });
+
+    // adapter math at tiny-model scale: 2 blocks x (q,v) x (A,B), d=192 r=4
+    let mk = || AdapterSet {
+        tensors: (0..8)
+            .map(|i| Tensor {
+                name: format!("t{i}"),
+                shape: vec![192, 4],
+                data: vec![0.01; 192 * 4],
+            })
+            .collect(),
+    };
+    let sets: Vec<AdapterSet> = (0..5).map(|_| mk()).collect();
+    let refs: Vec<&AdapterSet> = sets.iter().collect();
+    bench("FedAvg over K=5 tiny adapter sets", 5000, || {
+        let avg = AdapterSet::fedavg(&refs, &[1.0; 5]).unwrap();
+        std::hint::black_box(avg);
+    });
+    let mut params = mk();
+    let grads = mk();
+    let mut opt = Optimizer::new(OptKind::Adam, 1e-3);
+    bench("Adam step on tiny adapter set", 5000, || {
+        opt.step(&mut params, &grads).unwrap();
+    });
+
+    // coordinator round overhead: mock model => pure channel/thread cost
+    println!("\ncoordinator overhead (mock model, zero device compute):");
+    let t0 = Instant::now();
+    let opts = TrainOptions {
+        clients: 5,
+        local_steps: 10,
+        global_rounds: 20,
+        lr_client: 0.01,
+        lr_server: 0.01,
+        corpus_size: 200,
+        val_size: 40,
+        eval_batches: 1,
+        non_iid: false,
+        optimizer: OptKind::Sgd,
+        byte_corpus: false,
+        save_adapters: None,
+        seed: 1,
+    };
+    let report = train(&opts, || Ok(Box::new(MockModel::new(8, 64, 192))))?;
+    let total = t0.elapsed().as_secs_f64();
+    let steps = report.train_loss.len();
+    println!(
+        "  {steps} steps x K=5 in {total:.3}s -> {:.2} ms/step of pure \
+         coordination (device calls are no-ops)",
+        1e3 * total / steps as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Table IV — converged test perplexity: centralized LoRA fine-tuning
+//! vs SfLLM, across ranks {1, 2, 4, 6, 8}.
+//!
+//! Centralized = the same model and optimizer with ALL data on one
+//! node (K=1: no split-aggregation noise, every sample in one shard),
+//! trained for the same number of steps. SfLLM numbers are reused from
+//! the Fig. 3 runs (`results/fig3_final_ppl.csv`) when present, else
+//! recomputed here.
+//!
+//! Expected shape (paper): SfLLM PPL within a whisker of centralized at
+//! every rank; higher rank → (weakly) better PPL.
+//!
+//! Environment knobs: SFLLM_ROUNDS (default 15), SFLLM_CLIENTS (default 3).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+use sfllm::coordinator::{train, OptKind, TrainOptions};
+use sfllm::runtime::{Manifest, SflModel, SflRuntime};
+use sfllm::util::csv::{read_csv, CsvWriter};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn run(variant: &str, clients: usize, rounds: usize) -> Result<f64> {
+    let opts = TrainOptions {
+        clients,
+        local_steps: 12,
+        global_rounds: rounds,
+        lr_client: 1e-3,
+        lr_server: 1e-3,
+        corpus_size: 2000,
+        val_size: 200,
+        eval_batches: 4,
+        non_iid: false,
+        optimizer: OptKind::Adam,
+        byte_corpus: false,
+        save_adapters: None,
+        seed: 42,
+    };
+    let v = variant.to_string();
+    let report = train(&opts, move || {
+        let m = Manifest::load("artifacts")?;
+        Ok(Box::new(SflRuntime::load(&m, &v)?) as Box<dyn SflModel>)
+    })?;
+    Ok(report.final_ppl)
+}
+
+fn main() -> Result<()> {
+    let rounds = env_usize("SFLLM_ROUNDS", 15);
+    let clients = env_usize("SFLLM_CLIENTS", 3);
+    let ranks = [1usize, 2, 4, 6, 8];
+
+    // SfLLM side: reuse fig3 results if available
+    let mut sfllm_ppl: BTreeMap<usize, f64> = BTreeMap::new();
+    if let Ok((_, rows)) = read_csv("results/fig3_final_ppl.csv") {
+        for r in rows {
+            if let (Ok(rank), Ok(ppl)) = (r[0].parse::<f64>(), r[1].parse::<f64>()) {
+                sfllm_ppl.insert(rank as usize, ppl);
+            }
+        }
+        println!("(SfLLM column reused from results/fig3_final_ppl.csv)");
+    }
+
+    let mut csv = CsvWriter::create(
+        "results/table4_perplexity.csv",
+        &["rank", "centralized_ppl", "sfllm_ppl", "gap"],
+    )?;
+    println!("Table IV: converged validation perplexity (tiny GPT-2, E2E-style corpus)");
+    println!("{:>6} {:>14} {:>12} {:>10}", "rank", "centralized", "SfLLM", "gap");
+    let mut max_gap: f64 = 0.0;
+    for &rank in &ranks {
+        let variant = format!("tiny_s2_r{rank}");
+        let central = run(&variant, 1, rounds)?;
+        let sfl = match sfllm_ppl.get(&rank) {
+            Some(&p) => p,
+            None => run(&variant, clients, rounds)?,
+        };
+        let gap = sfl - central;
+        max_gap = max_gap.max(gap.abs());
+        println!("{rank:>6} {central:>14.4} {sfl:>12.4} {gap:>+10.4}");
+        csv.row_f64(&[rank as f64, central, sfl, gap])?;
+    }
+    csv.flush()?;
+    println!(
+        "max |gap| = {max_gap:.4} (paper: SfLLM within ~0.001 of centralized \
+         on full-scale GPT2-S; shape criterion: comparable, no collapse)"
+    );
+    println!("written results/table4_perplexity.csv");
+    Ok(())
+}

@@ -1,0 +1,226 @@
+//! Experiment configuration: the paper's Table II defaults, overridable
+//! from a TOML file and/or CLI flags.
+//!
+//! Units follow the paper: frequencies in Hz, powers in dBm at the
+//! boundary (converted to watts internally via [`crate::net::power`]),
+//! computing capability `f` in cycles/s, computing intensity `kappa` in
+//! cycles/FLOP.
+
+use anyhow::Result;
+
+use crate::util::cli::Args;
+use crate::util::toml::TomlDoc;
+
+/// System-level parameters (paper Table II).
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    /// Number of participating clients K.
+    pub clients: usize,
+    /// Subchannels to the main server (M) and federated server (N).
+    pub subch_main: usize,
+    pub subch_fed: usize,
+    /// Total uplink bandwidth to each server, equally divided (Hz).
+    pub bandwidth_main_hz: f64,
+    pub bandwidth_fed_hz: f64,
+    /// Client compute capability range [lo, hi] (cycles/s).
+    pub f_client_lo: f64,
+    pub f_client_hi: f64,
+    /// Main server compute capability (cycles/s).
+    pub f_server: f64,
+    /// Computing intensity (cycles per FLOP).
+    pub kappa_client: f64,
+    pub kappa_server: f64,
+    /// Antenna gain products.
+    pub gain_main: f64, // G_c * G_s
+    pub gain_fed: f64,  // G_c * G_f
+    /// Noise PSD (dBm/Hz).
+    pub noise_dbm_hz: f64,
+    /// Per-client max transmit power (dBm) and per-server totals (dBm).
+    pub p_max_dbm: f64,
+    pub p_th_main_dbm: f64,
+    pub p_th_fed_dbm: f64,
+    /// Geometry: clients uniform in a disk of `d_max_m` around the
+    /// federated server; main server at `d_main_m` from the centroid.
+    pub d_max_m: f64,
+    pub d_main_m: f64,
+    /// Shadow fading standard deviation (dB); 0 disables.
+    pub shadowing_db: f64,
+    /// Scenario seed (placement, fading, capability draws).
+    pub seed: u64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        // Paper Table II.
+        SystemConfig {
+            clients: 5,
+            subch_main: 20,
+            subch_fed: 20,
+            bandwidth_main_hz: 500e3,
+            bandwidth_fed_hz: 500e3,
+            f_client_lo: 1.0e9,
+            f_client_hi: 1.6e9,
+            f_server: 5.0e9,
+            kappa_client: 1.0 / 1024.0,
+            kappa_server: 1.0 / 32768.0,
+            gain_main: 160.0,
+            gain_fed: 80.0,
+            noise_dbm_hz: -174.0,
+            p_max_dbm: 41.76,
+            p_th_main_dbm: 46.99,
+            p_th_fed_dbm: 46.99,
+            d_max_m: 20.0,
+            d_main_m: 100.0,
+            shadowing_db: 8.0,
+            seed: 42,
+        }
+    }
+}
+
+/// Training-process parameters.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Mini-batch size b.
+    pub batch: usize,
+    /// Local steps per global round I.
+    pub local_steps: usize,
+    /// Client/server LoRA learning rates (paper: 4e-4).
+    pub lr_client: f64,
+    pub lr_server: f64,
+    /// Candidate LoRA ranks for P4.
+    pub ranks: Vec<usize>,
+    /// Sequence length used by the workload model.
+    pub seq: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            batch: 16,
+            local_steps: 12,
+            lr_client: 4e-4,
+            lr_server: 4e-4,
+            ranks: vec![1, 2, 4, 6, 8],
+            seq: 512,
+        }
+    }
+}
+
+/// Top-level config bundle.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub system: SystemConfig,
+    pub train: TrainConfig,
+    /// Model variant name for the workload model ("gpt2-s", "gpt2-m", "tiny").
+    pub model: String,
+}
+
+impl Config {
+    pub fn paper_defaults() -> Config {
+        Config {
+            system: SystemConfig::default(),
+            train: TrainConfig::default(),
+            model: "gpt2-s".to_string(),
+        }
+    }
+
+    /// Load from a TOML document, starting from paper defaults.
+    pub fn from_toml(doc: &TomlDoc) -> Result<Config> {
+        let mut c = Config::paper_defaults();
+        let s = &mut c.system;
+        s.clients = doc.usize_or("system.clients", s.clients)?;
+        s.subch_main = doc.usize_or("system.subch_main", s.subch_main)?;
+        s.subch_fed = doc.usize_or("system.subch_fed", s.subch_fed)?;
+        s.bandwidth_main_hz = doc.f64_or("system.bandwidth_main_hz", s.bandwidth_main_hz)?;
+        s.bandwidth_fed_hz = doc.f64_or("system.bandwidth_fed_hz", s.bandwidth_fed_hz)?;
+        s.f_client_lo = doc.f64_or("system.f_client_lo", s.f_client_lo)?;
+        s.f_client_hi = doc.f64_or("system.f_client_hi", s.f_client_hi)?;
+        s.f_server = doc.f64_or("system.f_server", s.f_server)?;
+        s.kappa_client = doc.f64_or("system.kappa_client", s.kappa_client)?;
+        s.kappa_server = doc.f64_or("system.kappa_server", s.kappa_server)?;
+        s.gain_main = doc.f64_or("system.gain_main", s.gain_main)?;
+        s.gain_fed = doc.f64_or("system.gain_fed", s.gain_fed)?;
+        s.noise_dbm_hz = doc.f64_or("system.noise_dbm_hz", s.noise_dbm_hz)?;
+        s.p_max_dbm = doc.f64_or("system.p_max_dbm", s.p_max_dbm)?;
+        s.p_th_main_dbm = doc.f64_or("system.p_th_main_dbm", s.p_th_main_dbm)?;
+        s.p_th_fed_dbm = doc.f64_or("system.p_th_fed_dbm", s.p_th_fed_dbm)?;
+        s.d_max_m = doc.f64_or("system.d_max_m", s.d_max_m)?;
+        s.d_main_m = doc.f64_or("system.d_main_m", s.d_main_m)?;
+        s.shadowing_db = doc.f64_or("system.shadowing_db", s.shadowing_db)?;
+        s.seed = doc.usize_or("system.seed", s.seed as usize)? as u64;
+        let t = &mut c.train;
+        t.batch = doc.usize_or("train.batch", t.batch)?;
+        t.local_steps = doc.usize_or("train.local_steps", t.local_steps)?;
+        t.lr_client = doc.f64_or("train.lr_client", t.lr_client)?;
+        t.lr_server = doc.f64_or("train.lr_server", t.lr_server)?;
+        t.seq = doc.usize_or("train.seq", t.seq)?;
+        if let Some(v) = doc.get("train.ranks") {
+            t.ranks = v
+                .as_f64_arr()?
+                .into_iter()
+                .map(|x| x as usize)
+                .collect();
+        }
+        c.model = doc.str_or("model", &c.model)?;
+        Ok(c)
+    }
+
+    /// Load from an optional `--config path` plus CLI overrides.
+    pub fn from_args(args: &mut Args) -> Result<Config> {
+        let mut c = match args.get("config") {
+            Some(path) => {
+                let text = std::fs::read_to_string(&path)?;
+                Config::from_toml(&TomlDoc::parse(&text)?)
+            }
+            None => Ok(Config::paper_defaults()),
+        }?;
+        c.system.clients = args.usize_or("clients", c.system.clients)?;
+        c.system.seed = args.u64_or("seed", c.system.seed)?;
+        c.model = args.str_or("model", &c.model);
+        c.train.batch = args.usize_or("batch", c.train.batch)?;
+        c.train.local_steps = args.usize_or("local-steps", c.train.local_steps)?;
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_ii_defaults() {
+        let c = Config::paper_defaults();
+        assert_eq!(c.system.clients, 5);
+        assert_eq!(c.system.subch_main, 20);
+        assert_eq!(c.system.bandwidth_main_hz, 500e3);
+        assert!((c.system.kappa_client - 1.0 / 1024.0).abs() < 1e-12);
+        assert_eq!(c.train.ranks, vec![1, 2, 4, 6, 8]);
+        assert_eq!(c.train.batch, 16);
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let doc = TomlDoc::parse(
+            "[system]\nclients = 8\nf_server = 1e10\n[train]\nranks = [2, 4]\nbatch = 4\n",
+        )
+        .unwrap();
+        let c = Config::from_toml(&doc).unwrap();
+        assert_eq!(c.system.clients, 8);
+        assert_eq!(c.system.f_server, 1e10);
+        assert_eq!(c.train.ranks, vec![2, 4]);
+        assert_eq!(c.train.batch, 4);
+        // untouched values keep paper defaults
+        assert_eq!(c.system.subch_fed, 20);
+    }
+
+    #[test]
+    fn cli_overrides_config() {
+        let mut args = Args::from_iter(
+            ["--clients", "3", "--seed", "7"].iter().map(|s| s.to_string()),
+        );
+        let c = Config::from_args(&mut args).unwrap();
+        assert_eq!(c.system.clients, 3);
+        assert_eq!(c.system.seed, 7);
+        args.finish().unwrap();
+    }
+}

@@ -1,0 +1,177 @@
+//! Adapter checkpointing: save/restore LoRA adapter sets so a
+//! fine-tuning run can resume (or ship its adapters for serving).
+//!
+//! Self-contained little-endian binary format (no serde in the offline
+//! crate set):
+//!
+//! ```text
+//! magic "SFLA" | u32 version | u32 n_tensors
+//! per tensor: u32 name_len | name bytes | u32 ndim | u32 dims... | f32 data...
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::lora::{AdapterSet, Tensor};
+
+const MAGIC: &[u8; 4] = b"SFLA";
+const VERSION: u32 = 1;
+
+/// Write an adapter set to `path` (creating parent dirs).
+pub fn save<P: AsRef<Path>>(set: &AdapterSet, path: P) -> Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(set.tensors.len() as u32).to_le_bytes())?;
+    for t in &set.tensors {
+        let name = t.name.as_bytes();
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name)?;
+        f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for &d in &t.shape {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        for &v in &t.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    f.flush()?;
+    Ok(())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Load an adapter set from `path`.
+pub fn load<P: AsRef<Path>>(path: P) -> Result<AdapterSet> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(&path)
+            .with_context(|| format!("opening {}", path.as_ref().display()))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an SfLLM adapter checkpoint");
+    }
+    let version = read_u32(&mut f)?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let n = read_u32(&mut f)? as usize;
+    let mut tensors = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = read_u32(&mut f)? as usize;
+        if name_len > 4096 {
+            bail!("corrupt checkpoint: name length {name_len}");
+        }
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let ndim = read_u32(&mut f)? as usize;
+        if ndim > 8 {
+            bail!("corrupt checkpoint: ndim {ndim}");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut f)? as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let mut data = vec![0f32; numel];
+        let mut buf = vec![0u8; numel * 4];
+        f.read_exact(&mut buf)?;
+        for (i, c) in buf.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        tensors.push(Tensor {
+            name: String::from_utf8(name)?,
+            shape,
+            data,
+        });
+    }
+    Ok(AdapterSet { tensors })
+}
+
+/// Check that a loaded checkpoint matches the expected signature
+/// (same tensor names and shapes, in order).
+pub fn compatible(a: &AdapterSet, b: &AdapterSet) -> bool {
+    a.tensors.len() == b.tensors.len()
+        && a.tensors
+            .iter()
+            .zip(&b.tensors)
+            .all(|(x, y)| x.name == y.name && x.shape == y.shape)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> AdapterSet {
+        AdapterSet {
+            tensors: vec![
+                Tensor {
+                    name: "h0.aq_A".into(),
+                    shape: vec![4, 2],
+                    data: (0..8).map(|i| i as f32 * 0.5 - 1.0).collect(),
+                },
+                Tensor {
+                    name: "h0.aq_B".into(),
+                    shape: vec![2, 4],
+                    data: vec![0.0; 8],
+                },
+            ],
+        }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("sfllm_ckpt_{name}_{}.bin", std::process::id()))
+    }
+
+    #[test]
+    fn round_trip_preserves_everything() {
+        let path = tmp("rt");
+        let set = sample();
+        save(&set, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.tensors.len(), 2);
+        for (a, b) in set.tensors.iter().zip(&back.tensors) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.data, b.data);
+        }
+        assert!(compatible(&set, &back));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmp("bad");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn compatible_detects_mismatch() {
+        let a = sample();
+        let mut b = sample();
+        b.tensors[0].shape = vec![2, 4];
+        assert!(!compatible(&a, &b));
+        let mut c = sample();
+        c.tensors.pop();
+        assert!(!compatible(&a, &c));
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(load("/nonexistent/sfllm.ckpt").is_err());
+    }
+}

@@ -1,0 +1,99 @@
+//! Per-client worker: phases a (forward), b (upload), f (backward) of
+//! Algorithm 1, plus the local SGD update (Eq. 6) and the federated
+//! upload/download every I steps.
+//!
+//! Each client runs on its own OS thread and owns its data shard,
+//! batcher and adapter copy. All tensor compute is submitted to the
+//! device thread; all coordination is via channels — no shared mutable
+//! state anywhere in the coordinator.
+
+use std::sync::mpsc::{Receiver, Sender};
+
+use anyhow::{anyhow, Result};
+
+use super::device::DeviceHandle;
+use super::optim::{OptKind, Optimizer};
+use crate::data::Batcher;
+use crate::model::lora::AdapterSet;
+
+/// Client -> main server: one step's upload (phase b).
+pub struct ActivationUpload {
+    pub client: usize,
+    pub s: Vec<f32>,
+    pub tokens: Vec<i32>,
+    pub mask: Vec<f32>,
+}
+
+/// Client -> federated server: adapter upload (aggregation phase a).
+pub struct AdapterUpload {
+    pub client: usize,
+    pub adapters: AdapterSet,
+}
+
+/// Channels a client needs.
+pub struct ClientChannels {
+    /// Uploads to the main server.
+    pub to_server: Sender<ActivationUpload>,
+    /// Activation gradients back from the main server.
+    pub from_server: Receiver<Vec<f32>>,
+    /// Adapter uploads to the federated server.
+    pub to_fed: Sender<AdapterUpload>,
+    /// Aggregated global adapters back from the federated server.
+    pub from_fed: Receiver<AdapterSet>,
+}
+
+/// Client configuration.
+pub struct ClientConfig {
+    pub id: usize,
+    pub local_steps: usize, // I
+    pub total_steps: usize, // E * I
+    pub lr: f32,
+    pub optimizer: OptKind,
+}
+
+/// Run one client to completion (called on the client's own thread).
+pub fn run_client(
+    cfg: ClientConfig,
+    mut adapters: AdapterSet,
+    mut batcher: Batcher,
+    device: DeviceHandle,
+    ch: ClientChannels,
+) -> Result<AdapterSet> {
+    let mut opt = Optimizer::new(cfg.optimizer, cfg.lr);
+    for step in 1..=cfg.total_steps {
+        let batch = batcher.next_batch();
+        // phase a: local forward
+        let s = device.client_forward(&adapters, &batch.tokens)?;
+        // phase b: upload activations + labels
+        ch.to_server
+            .send(ActivationUpload {
+                client: cfg.id,
+                s,
+                tokens: batch.tokens.clone(),
+                mask: batch.mask.clone(),
+            })
+            .map_err(|_| anyhow!("main server hung up"))?;
+        // phase e/f: receive ds, local backward, SGD (Eq. 6)
+        let ds = ch
+            .from_server
+            .recv()
+            .map_err(|_| anyhow!("main server dropped ds"))?;
+        let grads = device.client_backward(&adapters, &batch.tokens, &ds)?;
+        opt.step(&mut adapters, &grads)?;
+
+        // aggregation phase every I steps (and at the end)
+        if step % cfg.local_steps == 0 {
+            ch.to_fed
+                .send(AdapterUpload {
+                    client: cfg.id,
+                    adapters: adapters.clone(),
+                })
+                .map_err(|_| anyhow!("fed server hung up"))?;
+            adapters = ch
+                .from_fed
+                .recv()
+                .map_err(|_| anyhow!("fed server dropped broadcast"))?;
+        }
+    }
+    Ok(adapters)
+}

@@ -1,0 +1,191 @@
+//! Device-service thread: serializes all PJRT execution behind a
+//! channel, because (a) PJRT handles are not `Send`, and (b) the CPU
+//! device is a single shared executor in this testbed anyway.
+//!
+//! The model is *constructed inside* the service thread from a factory
+//! closure, so non-`Send` runtimes never cross a thread boundary.
+
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::lora::AdapterSet;
+use crate::runtime::{SflModel, StepOutput};
+
+/// Requests the service understands. Every request carries its own
+/// response channel.
+pub enum DeviceRequest {
+    ClientForward {
+        adapters: AdapterSet,
+        tokens: Vec<i32>,
+        resp: Sender<Result<Vec<f32>>>,
+    },
+    ServerStep {
+        adapters: AdapterSet,
+        s: Vec<f32>,
+        tokens: Vec<i32>,
+        mask: Vec<f32>,
+        resp: Sender<Result<StepOutput>>,
+    },
+    ClientBackward {
+        adapters: AdapterSet,
+        tokens: Vec<i32>,
+        ds: Vec<f32>,
+        resp: Sender<Result<AdapterSet>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to the device thread.
+#[derive(Clone)]
+pub struct DeviceHandle {
+    tx: Sender<DeviceRequest>,
+}
+
+impl DeviceHandle {
+    pub fn client_forward(&self, adapters: &AdapterSet, tokens: &[i32]) -> Result<Vec<f32>> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(DeviceRequest::ClientForward {
+                adapters: adapters.clone(),
+                tokens: tokens.to_vec(),
+                resp: tx,
+            })
+            .map_err(|_| anyhow!("device thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("device thread dropped response"))?
+    }
+
+    pub fn server_step(
+        &self,
+        adapters: &AdapterSet,
+        s: &[f32],
+        tokens: &[i32],
+        mask: &[f32],
+    ) -> Result<StepOutput> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(DeviceRequest::ServerStep {
+                adapters: adapters.clone(),
+                s: s.to_vec(),
+                tokens: tokens.to_vec(),
+                mask: mask.to_vec(),
+                resp: tx,
+            })
+            .map_err(|_| anyhow!("device thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("device thread dropped response"))?
+    }
+
+    pub fn client_backward(
+        &self,
+        adapters: &AdapterSet,
+        tokens: &[i32],
+        ds: &[f32],
+    ) -> Result<AdapterSet> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(DeviceRequest::ClientBackward {
+                adapters: adapters.clone(),
+                tokens: tokens.to_vec(),
+                ds: ds.to_vec(),
+                resp: tx,
+            })
+            .map_err(|_| anyhow!("device thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("device thread dropped response"))?
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(DeviceRequest::Shutdown);
+    }
+}
+
+/// Spawn the service. `factory` runs on the service thread and builds
+/// the model there; its init metadata (batch, seq, d_model, adapter
+/// inits) is returned through a bootstrap channel.
+pub struct DeviceInit {
+    pub batch: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub vocab: usize,
+    pub client_adapters: AdapterSet,
+    pub server_adapters: AdapterSet,
+}
+
+pub fn spawn_device<F>(factory: F) -> Result<(DeviceHandle, DeviceInit, JoinHandle<()>)>
+where
+    F: FnOnce() -> Result<Box<dyn SflModel>> + Send + 'static,
+{
+    let (tx, rx) = channel::<DeviceRequest>();
+    let (boot_tx, boot_rx) = channel::<Result<DeviceInit>>();
+    let join = std::thread::Builder::new()
+        .name("sfllm-device".into())
+        .spawn(move || {
+            let mut model = match factory() {
+                Ok(m) => {
+                    let _ = boot_tx.send(Ok(DeviceInit {
+                        batch: m.batch(),
+                        seq: m.seq(),
+                        d_model: m.d_model(),
+                        vocab: m.vocab(),
+                        client_adapters: m.init_client_adapters(),
+                        server_adapters: m.init_server_adapters(),
+                    }));
+                    m
+                }
+                Err(e) => {
+                    let _ = boot_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(req) = rx.recv() {
+                match req {
+                    DeviceRequest::ClientForward { adapters, tokens, resp } => {
+                        let _ = resp.send(model.client_forward(&adapters, &tokens));
+                    }
+                    DeviceRequest::ServerStep { adapters, s, tokens, mask, resp } => {
+                        let _ = resp.send(model.server_step(&adapters, &s, &tokens, &mask));
+                    }
+                    DeviceRequest::ClientBackward { adapters, tokens, ds, resp } => {
+                        let _ = resp.send(model.client_backward(&adapters, &tokens, &ds));
+                    }
+                    DeviceRequest::Shutdown => break,
+                }
+            }
+        })?;
+    let init = boot_rx
+        .recv()
+        .map_err(|_| anyhow!("device thread died during init"))??;
+    Ok((DeviceHandle { tx }, init, join))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::mock::MockModel;
+
+    #[test]
+    fn round_trip_through_service() {
+        let (dev, init, join) = spawn_device(|| Ok(Box::new(MockModel::new(2, 4, 3)))).unwrap();
+        assert_eq!(init.batch, 2);
+        assert_eq!(init.d_model, 3);
+        let tokens = vec![1i32; 2 * 4];
+        let s = dev.client_forward(&init.client_adapters, &tokens).unwrap();
+        assert_eq!(s.len(), 2 * 4 * 3);
+        let out = dev
+            .server_step(&init.server_adapters, &s, &tokens, &vec![1.0; 8])
+            .unwrap();
+        assert!(out.loss.is_finite());
+        let grads = dev
+            .client_backward(&init.client_adapters, &tokens, &out.ds)
+            .unwrap();
+        assert_eq!(grads.tensors.len(), init.client_adapters.tensors.len());
+        dev.shutdown();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn factory_error_propagates() {
+        let r = spawn_device(|| Err(anyhow!("boom")));
+        assert!(r.is_err());
+    }
+}

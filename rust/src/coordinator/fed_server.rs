@@ -1,0 +1,58 @@
+//! Federated server: the aggregation phase (paper Sec. IV-B).
+//!
+//! Every I local steps the clients upload their LoRA adapter sets; the
+//! federated server FedAvg-aggregates them weighted by local dataset
+//! sizes (Eq. 7) and broadcasts the new global client adapter back.
+
+use anyhow::Result;
+
+use crate::model::lora::AdapterSet;
+
+/// Stateless aggregator with dataset-size weights fixed at start-up.
+pub struct FedServer {
+    weights: Vec<f64>,
+    /// Number of aggregations performed (diagnostics).
+    pub rounds: usize,
+}
+
+impl FedServer {
+    /// `shard_sizes[k]` = D_k, the paper's aggregation weights.
+    pub fn new(shard_sizes: &[usize]) -> FedServer {
+        FedServer {
+            weights: shard_sizes.iter().map(|&s| s as f64).collect(),
+            rounds: 0,
+        }
+    }
+
+    /// Eq. 7: weighted average of the client adapter sets.
+    pub fn aggregate(&mut self, sets: &[AdapterSet]) -> Result<AdapterSet> {
+        let refs: Vec<&AdapterSet> = sets.iter().collect();
+        self.rounds += 1;
+        AdapterSet::fedavg(&refs, &self.weights)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::lora::Tensor;
+
+    fn set(v: f32) -> AdapterSet {
+        AdapterSet {
+            tensors: vec![Tensor {
+                name: "a".into(),
+                shape: vec![2],
+                data: vec![v, v],
+            }],
+        }
+    }
+
+    #[test]
+    fn weights_follow_shard_sizes() {
+        let mut fed = FedServer::new(&[30, 10]);
+        let out = fed.aggregate(&[set(1.0), set(5.0)]).unwrap();
+        // (30*1 + 10*5)/40 = 2.0
+        assert_eq!(out.tensors[0].data, vec![2.0, 2.0]);
+        assert_eq!(fed.rounds, 1);
+    }
+}

@@ -1,0 +1,160 @@
+//! Deterministic mock model for coordinator tests — no PJRT involved.
+//!
+//! Dynamics are chosen so the *whole* training loop is verifiable in
+//! closed form: the "loss" is the squared L2 norm of all adapters (plus
+//! a constant), and every gradient equals the parameter itself, so SGD
+//! contracts parameters geometrically (`p <- (1-lr)p`) and the loss
+//! must decrease monotonically through the full client/server/fed
+//! plumbing. Shapes follow the real wire format.
+
+use anyhow::{bail, Result};
+
+use crate::model::lora::{AdapterSet, Tensor};
+use crate::runtime::{SflModel, StepOutput};
+
+/// Mock with 2 client tensors and 2 server tensors of 4 params each.
+pub struct MockModel {
+    batch: usize,
+    seq: usize,
+    d_model: usize,
+    /// Counts every device call (used by overhead benches and tests).
+    pub calls: usize,
+}
+
+impl MockModel {
+    pub fn new(batch: usize, seq: usize, d_model: usize) -> MockModel {
+        MockModel {
+            batch,
+            seq,
+            d_model,
+            calls: 0,
+        }
+    }
+
+    fn adapters(tag: &str, fill: f32) -> AdapterSet {
+        AdapterSet {
+            tensors: (0..2)
+                .map(|i| Tensor {
+                    name: format!("h{i}.{tag}"),
+                    shape: vec![2, 2],
+                    data: vec![fill; 4],
+                })
+                .collect(),
+        }
+    }
+}
+
+impl SflModel for MockModel {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn seq(&self) -> usize {
+        self.seq
+    }
+
+    fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    fn vocab(&self) -> usize {
+        256
+    }
+
+    fn init_client_adapters(&self) -> AdapterSet {
+        Self::adapters("c", 1.0)
+    }
+
+    fn init_server_adapters(&self) -> AdapterSet {
+        Self::adapters("s", 1.0)
+    }
+
+    fn client_forward(&mut self, adapters: &AdapterSet, tokens: &[i32]) -> Result<Vec<f32>> {
+        self.calls += 1;
+        if tokens.len() != self.batch * self.seq {
+            bail!("bad token count");
+        }
+        // s encodes the client adapter norm so the server "loss" sees it
+        let norm2: f32 = adapters
+            .tensors
+            .iter()
+            .flat_map(|t| &t.data)
+            .map(|v| v * v)
+            .sum();
+        Ok(vec![norm2; self.batch * self.seq * self.d_model])
+    }
+
+    fn server_step(
+        &mut self,
+        adapters: &AdapterSet,
+        s: &[f32],
+        tokens: &[i32],
+        _mask: &[f32],
+    ) -> Result<StepOutput> {
+        self.calls += 1;
+        if s.len() != self.batch * self.seq * self.d_model || tokens.len() != self.batch * self.seq
+        {
+            bail!("bad shapes");
+        }
+        let server_norm2: f32 = adapters
+            .tensors
+            .iter()
+            .flat_map(|t| &t.data)
+            .map(|v| v * v)
+            .sum();
+        let client_norm2 = s[0]; // encoded by client_forward
+        let loss = client_norm2 + server_norm2;
+        // grad of ||p||^2 is 2p; use p for a clean (1-lr) contraction
+        let server_grads = AdapterSet {
+            tensors: adapters.tensors.clone(),
+        };
+        Ok(StepOutput {
+            loss,
+            server_grads,
+            ds: vec![1.0; s.len()],
+        })
+    }
+
+    fn client_backward(
+        &mut self,
+        adapters: &AdapterSet,
+        _tokens: &[i32],
+        ds: &[f32],
+    ) -> Result<AdapterSet> {
+        self.calls += 1;
+        if ds.len() != self.batch * self.seq * self.d_model {
+            bail!("bad ds");
+        }
+        Ok(AdapterSet {
+            tensors: adapters.tensors.clone(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_on_mock_contracts_loss() {
+        let mut m = MockModel::new(2, 4, 3);
+        let mut ac = m.init_client_adapters();
+        let mut asrv = m.init_server_adapters();
+        let tokens = vec![0i32; 8];
+        let mask = vec![1.0f32; 8];
+        let mut prev = f32::INFINITY;
+        for _ in 0..5 {
+            let s = m.client_forward(&ac, &tokens).unwrap();
+            let out = m.server_step(&asrv, &s, &tokens, &mask).unwrap();
+            assert!(out.loss < prev);
+            prev = out.loss;
+            let gc = m.client_backward(&ac, &tokens, &out.ds).unwrap();
+            ac.sgd_step(&gc, 0.1).unwrap();
+            asrv.sgd_step(&out.server_grads, 0.1).unwrap();
+        }
+        // loss measured at iteration 4 uses params after 4 updates:
+        // 16 * (0.9^2)^4 = 16 * 0.9^8
+        let expect = 16.0 * 0.9f32.powi(8);
+        assert!((prev - expect).abs() < 1e-3, "{prev} vs {expect}");
+    }
+}

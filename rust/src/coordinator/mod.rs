@@ -1,0 +1,35 @@
+//! The SFL coordinator — the paper's Algorithm 1 as a running system.
+//!
+//! Topology (one OS thread each, message-passing only):
+//!
+//! ```text
+//!   client 0 ─┐                       ┌─> federated server (every I steps:
+//!   client 1 ─┼─ activations/adapters ┤    FedAvg Eq. 7 + broadcast)
+//!   ...       │                       │
+//!   client K ─┴─────> main server ────┘
+//!                     (server_step, SGD Eq. 5, ds back to clients)
+//! ```
+//!
+//! Device execution (the PJRT runtime) lives on a dedicated **device
+//! thread** ([`device`]): PJRT handles are not `Send`, and the CPU
+//! device is a single shared resource anyway — clients and the main
+//! server submit compute requests over channels, which also gives each
+//! phase a natural queueing point for the latency accounting.
+//!
+//! * [`device`] — the device-service thread and its typed handle;
+//! * [`client`] — per-client worker (phases a, b, f + local SGD Eq. 6);
+//! * [`fed_server`] — aggregation phase (Eq. 7);
+//! * [`orchestrator`] — wires everything, runs E global rounds, records
+//!   loss curves and phase walltimes;
+//! * [`mock`] — deterministic [`crate::runtime::SflModel`] for tests.
+
+pub mod checkpoint;
+pub mod client;
+pub mod device;
+pub mod fed_server;
+pub mod mock;
+pub mod optim;
+pub mod orchestrator;
+
+pub use optim::{OptKind, Optimizer};
+pub use orchestrator::{train, TrainOptions, TrainReport};

@@ -1,0 +1,474 @@
+//! Orchestrator: wires clients, main server, federated server and the
+//! device service into the paper's Algorithm 1 and runs E global rounds.
+//!
+//! The orchestrator thread *is* the main server: each step it collects
+//! the K activation uploads, runs the server computation for each
+//! client, averages the K server-adapter gradients into one SGD update
+//! (the paper's combined-batch update, Eq. 5), and returns each
+//! client's activation gradients. Every I steps it runs the federated
+//! aggregation (Eq. 7) and, right after broadcasting, evaluates the
+//! global model on held-out data — the measurement Fig. 3 plots.
+
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::client::{run_client, ActivationUpload, AdapterUpload, ClientChannels, ClientConfig};
+use super::device::{spawn_device, DeviceHandle, DeviceInit};
+use super::fed_server::FedServer;
+use super::optim::{OptKind, Optimizer};
+use crate::data::{
+    generate_byte_corpus, generate_corpus, shard_by_food, shard_iid, Batcher, E2eSample,
+};
+use crate::model::lora::AdapterSet;
+use crate::runtime::SflModel;
+use crate::util::rng::Rng;
+
+/// Training options (defaults follow the tiny-model experiment setup).
+#[derive(Clone, Debug)]
+pub struct TrainOptions {
+    pub clients: usize,
+    /// Local steps per global round (I).
+    pub local_steps: usize,
+    /// Global rounds (E).
+    pub global_rounds: usize,
+    pub lr_client: f32,
+    pub lr_server: f32,
+    /// Training corpus size (split across clients).
+    pub corpus_size: usize,
+    /// Held-out validation corpus size.
+    pub val_size: usize,
+    /// Validation batches per evaluation point.
+    pub eval_batches: usize,
+    /// Label-skew sharding instead of IID.
+    pub non_iid: bool,
+    /// Optimizer for both client and server adapter updates.
+    pub optimizer: OptKind,
+    /// Use short patterned byte data instead of the E2E-style corpus
+    /// (required for variants whose sequence window is < ~40 bytes,
+    /// e.g. the `micro` integration model).
+    pub byte_corpus: bool,
+    /// If set, save the final global client/server adapters here
+    /// (`<path>.client.ckpt` / `<path>.server.ckpt`).
+    pub save_adapters: Option<String>,
+    pub seed: u64,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            clients: 5,
+            local_steps: 12,
+            global_rounds: 10,
+            lr_client: 1e-3,
+            lr_server: 1e-3,
+            corpus_size: 2000,
+            val_size: 200,
+            eval_batches: 4,
+            non_iid: false,
+            optimizer: OptKind::Adam,
+            byte_corpus: false,
+            save_adapters: None,
+            seed: 42,
+        }
+    }
+}
+
+/// Phase wall-clock accounting (seconds) for §Perf.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseWalltime {
+    pub server_compute: f64,
+    pub aggregation: f64,
+    pub evaluation: f64,
+    pub total: f64,
+}
+
+/// Everything a training run produces.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    /// Mean training loss per step (over the K per-client server losses).
+    pub train_loss: Vec<f64>,
+    /// (step, validation loss) after every aggregation.
+    pub val_loss: Vec<(usize, f64)>,
+    /// Final validation perplexity (e^loss).
+    pub final_ppl: f64,
+    pub fed_rounds: usize,
+    pub walltime: PhaseWalltime,
+    /// Final global client adapters and server adapters.
+    pub client_adapters: AdapterSet,
+    pub server_adapters: AdapterSet,
+}
+
+impl TrainReport {
+    /// First step at which the validation loss reached `target` (Fig. 4's
+    /// "steps to target loss"), if ever.
+    pub fn steps_to_target(&self, target: f64) -> Option<usize> {
+        self.val_loss
+            .iter()
+            .find(|&&(_, l)| l <= target)
+            .map(|&(s, _)| s)
+    }
+}
+
+/// Train via Algorithm 1. `factory` builds the [`SflModel`] on the
+/// device thread (PJRT runtimes are not `Send`).
+pub fn train<F>(opts: &TrainOptions, factory: F) -> Result<TrainReport>
+where
+    F: FnOnce() -> Result<Box<dyn SflModel>> + Send + 'static,
+{
+    let t_start = Instant::now();
+    let (device, init, device_join) = spawn_device(factory)?;
+    let res = train_inner(opts, &device, &init);
+    device.shutdown();
+    let _ = device_join.join();
+    let mut report = res?;
+    report.walltime.total = t_start.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+fn train_inner(
+    opts: &TrainOptions,
+    device: &DeviceHandle,
+    init: &DeviceInit,
+) -> Result<TrainReport> {
+    let k_n = opts.clients;
+    let total_steps = opts.local_steps * opts.global_rounds;
+    let mut rng = Rng::new(opts.seed);
+
+    // data
+    let (corpus, val) = if opts.byte_corpus {
+        (
+            generate_byte_corpus(opts.corpus_size, init.seq, &mut rng),
+            generate_byte_corpus(opts.val_size, init.seq, &mut rng.fork(1)),
+        )
+    } else {
+        (
+            generate_corpus(opts.corpus_size, &mut rng),
+            generate_corpus(opts.val_size, &mut rng.fork(1)),
+        )
+    };
+    let shards: Vec<Vec<E2eSample>> = if opts.non_iid {
+        shard_by_food(&corpus, k_n)
+    } else {
+        shard_iid(&corpus, k_n, &mut rng)
+    };
+    let shard_sizes: Vec<usize> = shards.iter().map(Vec::len).collect();
+    if shard_sizes.iter().any(|&s| s == 0) {
+        anyhow::bail!("a client shard is empty; reduce K or grow the corpus");
+    }
+    let val_batcher = Batcher::with_vocab(&val, init.batch, init.seq, init.vocab, rng.fork(2));
+
+    // channels
+    let (up_tx, up_rx) = channel::<ActivationUpload>();
+    let (fed_tx, fed_rx) = channel::<AdapterUpload>();
+    let mut ds_txs = Vec::with_capacity(k_n);
+    let mut fed_bcast_txs = Vec::with_capacity(k_n);
+    let mut joins = Vec::with_capacity(k_n);
+
+    for (k, shard) in shards.into_iter().enumerate() {
+        let (ds_tx, ds_rx) = channel::<Vec<f32>>();
+        let (bc_tx, bc_rx) = channel::<AdapterSet>();
+        ds_txs.push(ds_tx);
+        fed_bcast_txs.push(bc_tx);
+        let cfg = ClientConfig {
+            id: k,
+            local_steps: opts.local_steps,
+            total_steps,
+            lr: opts.lr_client,
+            optimizer: opts.optimizer,
+        };
+        let ch = ClientChannels {
+            to_server: up_tx.clone(),
+            from_server: ds_rx,
+            to_fed: fed_tx.clone(),
+            from_fed: bc_rx,
+        };
+        let adapters = init.client_adapters.clone();
+        let batcher =
+            Batcher::with_vocab(&shard, init.batch, init.seq, init.vocab, rng.fork(100 + k as u64));
+        let dev = device.clone();
+        joins.push(
+            std::thread::Builder::new()
+                .name(format!("sfllm-client-{k}"))
+                .spawn(move || run_client(cfg, adapters, batcher, dev, ch))?,
+        );
+    }
+    drop(up_tx);
+    drop(fed_tx);
+
+    // main server + federated server loop
+    let mut server_opt = Optimizer::new(opts.optimizer, opts.lr_server);
+    let mut server_adapters = init.server_adapters.clone();
+    let mut global_client_adapters = init.client_adapters.clone();
+    let mut fed = FedServer::new(&shard_sizes);
+    let mut train_loss = Vec::with_capacity(total_steps);
+    let mut val_loss = Vec::new();
+    let mut wall = PhaseWalltime::default();
+
+    for step in 1..=total_steps {
+        // phase c/d: collect K uploads, compute, average server grads
+        let t0 = Instant::now();
+        let mut uploads: Vec<Option<ActivationUpload>> = (0..k_n).map(|_| None).collect();
+        for _ in 0..k_n {
+            let u = up_rx.recv().map_err(|_| anyhow!("clients died"))?;
+            let id = u.client;
+            uploads[id] = Some(u);
+        }
+        let mut grad_acc: Option<AdapterSet> = None;
+        let mut step_loss = 0.0f64;
+        let mut ds_out: Vec<Option<Vec<f32>>> = (0..k_n).map(|_| None).collect();
+        for u in uploads.iter().flatten() {
+            let out = device.server_step(&server_adapters, &u.s, &u.tokens, &u.mask)?;
+            step_loss += out.loss as f64;
+            ds_out[u.client] = Some(out.ds);
+            grad_acc = Some(match grad_acc {
+                None => out.server_grads,
+                Some(mut acc) => {
+                    for (a, g) in acc.tensors.iter_mut().zip(&out.server_grads.tensors) {
+                        for (av, gv) in a.data.iter_mut().zip(&g.data) {
+                            *av += gv;
+                        }
+                    }
+                    acc
+                }
+            });
+        }
+        // combined-batch update (Eq. 5): average the K gradient sets
+        let mut grads = grad_acc.context("no uploads received")?;
+        let inv = 1.0 / k_n as f32;
+        for t in &mut grads.tensors {
+            t.data.iter_mut().for_each(|v| *v *= inv);
+        }
+        server_opt.step(&mut server_adapters, &grads)?;
+        train_loss.push(step_loss / k_n as f64);
+        wall.server_compute += t0.elapsed().as_secs_f64();
+
+        // phase e: ship activation gradients back
+        for (k, ds) in ds_out.into_iter().enumerate() {
+            ds_txs[k]
+                .send(ds.context("missing ds")?)
+                .map_err(|_| anyhow!("client {k} gone"))?;
+        }
+
+        // aggregation every I steps
+        if step % opts.local_steps == 0 {
+            let t1 = Instant::now();
+            let mut sets: Vec<Option<AdapterSet>> = (0..k_n).map(|_| None).collect();
+            for _ in 0..k_n {
+                let u = fed_rx.recv().map_err(|_| anyhow!("clients died (fed)"))?;
+                let id = u.client;
+                sets[id] = Some(u.adapters);
+            }
+            let sets: Vec<AdapterSet> = sets.into_iter().map(Option::unwrap).collect();
+            global_client_adapters = fed.aggregate(&sets)?;
+            for tx in &fed_bcast_txs {
+                tx.send(global_client_adapters.clone())
+                    .map_err(|_| anyhow!("broadcast failed"))?;
+            }
+            wall.aggregation += t1.elapsed().as_secs_f64();
+
+            // validation on the freshly aggregated global model
+            let t2 = Instant::now();
+            let mut vl = 0.0f64;
+            for b in 0..opts.eval_batches {
+                let batch = val_batcher.eval_batch(b * init.batch);
+                let s = device.client_forward(&global_client_adapters, &batch.tokens)?;
+                let out = device.server_step(&server_adapters, &s, &batch.tokens, &batch.mask)?;
+                vl += out.loss as f64;
+            }
+            val_loss.push((step, vl / opts.eval_batches as f64));
+            wall.evaluation += t2.elapsed().as_secs_f64();
+        }
+    }
+
+    for j in joins {
+        j.join().map_err(|_| anyhow!("client panicked"))??;
+    }
+
+    if let Some(base) = &opts.save_adapters {
+        super::checkpoint::save(&global_client_adapters, format!("{base}.client.ckpt"))?;
+        super::checkpoint::save(&server_adapters, format!("{base}.server.ckpt"))?;
+    }
+
+    let final_ppl = val_loss.last().map(|&(_, l)| l.exp()).unwrap_or(f64::NAN);
+    Ok(TrainReport {
+        train_loss,
+        val_loss,
+        final_ppl,
+        fed_rounds: fed.rounds,
+        walltime: wall,
+        client_adapters: global_client_adapters,
+        server_adapters,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::mock::MockModel;
+
+    fn opts() -> TrainOptions {
+        TrainOptions {
+            clients: 3,
+            local_steps: 4,
+            global_rounds: 3,
+            lr_client: 0.05,
+            lr_server: 0.05,
+            corpus_size: 120,
+            val_size: 24,
+            eval_batches: 2,
+            non_iid: false,
+            optimizer: OptKind::Sgd, // mock dynamics assume plain SGD
+            byte_corpus: false,
+            save_adapters: None,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn full_loop_runs_and_loss_decreases() {
+        let r = train(&opts(), || Ok(Box::new(MockModel::new(2, 64, 3)))).unwrap();
+        assert_eq!(r.train_loss.len(), 12);
+        assert_eq!(r.fed_rounds, 3);
+        assert_eq!(r.val_loss.len(), 3);
+        // mock dynamics contract monotonically
+        assert!(
+            r.train_loss.last().unwrap() < r.train_loss.first().unwrap(),
+            "{:?}",
+            r.train_loss
+        );
+        // val loss decreases too
+        assert!(r.val_loss.last().unwrap().1 < r.val_loss.first().unwrap().1);
+    }
+
+    #[test]
+    fn aggregation_counts_and_ppl_finite() {
+        let r = train(&opts(), || Ok(Box::new(MockModel::new(2, 64, 3)))).unwrap();
+        assert!(r.final_ppl.is_finite());
+        assert!(r.walltime.total > 0.0);
+    }
+
+    #[test]
+    fn steps_to_target_extraction() {
+        let r = train(&opts(), || Ok(Box::new(MockModel::new(2, 64, 3)))).unwrap();
+        let first = r.val_loss.first().unwrap().1;
+        let last = r.val_loss.last().unwrap().1;
+        let mid = 0.5 * (first + last);
+        let s = r.steps_to_target(mid).unwrap();
+        assert!(s > 0 && s <= 12);
+        assert_eq!(r.steps_to_target(-1.0), None);
+    }
+
+    #[test]
+    fn saves_adapter_checkpoints_when_asked() {
+        let mut o = opts();
+        let base = std::env::temp_dir()
+            .join(format!("sfllm_train_ckpt_{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        o.save_adapters = Some(base.clone());
+        let r = train(&o, || Ok(Box::new(MockModel::new(2, 64, 3)))).unwrap();
+        let client = crate::coordinator::checkpoint::load(format!("{base}.client.ckpt")).unwrap();
+        assert!(crate::coordinator::checkpoint::compatible(&client, &r.client_adapters));
+        assert_eq!(client.tensors[0].data, r.client_adapters.tensors[0].data);
+        std::fs::remove_file(format!("{base}.client.ckpt")).ok();
+        std::fs::remove_file(format!("{base}.server.ckpt")).ok();
+    }
+
+    #[test]
+    fn non_iid_sharding_runs() {
+        let mut o = opts();
+        o.non_iid = true;
+        let r = train(&o, || Ok(Box::new(MockModel::new(2, 64, 3)))).unwrap();
+        assert_eq!(r.fed_rounds, 3);
+    }
+
+    /// Mock whose server_step starts failing after N calls — verifies
+    /// the orchestrator propagates device errors instead of hanging.
+    struct FailingModel {
+        inner: MockModel,
+        fail_after: usize,
+        calls: std::cell::Cell<usize>,
+    }
+
+    impl crate::runtime::SflModel for FailingModel {
+        fn batch(&self) -> usize {
+            self.inner.batch()
+        }
+        fn seq(&self) -> usize {
+            self.inner.seq()
+        }
+        fn d_model(&self) -> usize {
+            self.inner.d_model()
+        }
+        fn vocab(&self) -> usize {
+            self.inner.vocab()
+        }
+        fn init_client_adapters(&self) -> crate::model::lora::AdapterSet {
+            self.inner.init_client_adapters()
+        }
+        fn init_server_adapters(&self) -> crate::model::lora::AdapterSet {
+            self.inner.init_server_adapters()
+        }
+        fn client_forward(
+            &mut self,
+            a: &crate::model::lora::AdapterSet,
+            t: &[i32],
+        ) -> anyhow::Result<Vec<f32>> {
+            self.inner.client_forward(a, t)
+        }
+        fn server_step(
+            &mut self,
+            a: &crate::model::lora::AdapterSet,
+            s: &[f32],
+            t: &[i32],
+            m: &[f32],
+        ) -> anyhow::Result<crate::runtime::StepOutput> {
+            self.calls.set(self.calls.get() + 1);
+            if self.calls.get() > self.fail_after {
+                anyhow::bail!("injected device failure");
+            }
+            self.inner.server_step(a, s, t, m)
+        }
+        fn client_backward(
+            &mut self,
+            a: &crate::model::lora::AdapterSet,
+            t: &[i32],
+            ds: &[f32],
+        ) -> anyhow::Result<crate::model::lora::AdapterSet> {
+            self.inner.client_backward(a, t, ds)
+        }
+    }
+
+    #[test]
+    fn device_failure_surfaces_as_error_not_hang() {
+        let err = train(&opts(), || {
+            Ok(Box::new(FailingModel {
+                inner: MockModel::new(2, 64, 3),
+                fail_after: 4,
+                calls: std::cell::Cell::new(0),
+            }))
+        });
+        let msg = format!("{:#}", err.expect_err("must fail"));
+        assert!(msg.contains("injected device failure"), "{msg}");
+    }
+
+    #[test]
+    fn too_many_clients_for_corpus_errors_cleanly() {
+        let mut o = opts();
+        o.clients = 50;
+        o.corpus_size = 10; // some shard will be empty -> clean error
+        let res = train(&o, || Ok(Box::new(MockModel::new(2, 64, 3))));
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn single_client_is_centralized_mode() {
+        let mut o = opts();
+        o.clients = 1;
+        let r = train(&o, || Ok(Box::new(MockModel::new(2, 64, 3)))).unwrap();
+        assert_eq!(r.fed_rounds, 3);
+        assert!(r.train_loss.last().unwrap() < r.train_loss.first().unwrap());
+    }
+}

@@ -1,0 +1,161 @@
+//! Synthetic E2E-style corpus generator.
+//!
+//! Mirrors the E2E NLG challenge schema: a meaning representation (MR)
+//! of attribute slots and a natural-language realization. Slot pools
+//! and templates are chosen so every rendered sample fits the tiny
+//! model's 64-byte window.
+
+use crate::util::rng::Rng;
+
+/// One (meaning representation, utterance) pair.
+#[derive(Clone, Debug, PartialEq)]
+pub struct E2eSample {
+    pub mr: String,
+    pub text: String,
+    /// Food-slot index (used for non-IID sharding).
+    pub food_id: usize,
+}
+
+// Slot pools sized so that `MR § text` always fits the tiny model's
+// 64-byte window (names <= 6 bytes, foods <= 7, prices <= 8).
+const NAMES: &[&str] = &[
+    "Aromi", "Bento", "Cocum", "Eagle", "Lilly", "Rex", "Sole", "Strada",
+    "Vaults", "Zizzi",
+];
+const FOODS: &[&str] = &[
+    "Thai", "Chinese", "French", "Indian", "Italian", "Turkish", "English",
+];
+const PRICES: &[&str] = &["cheap", "moderate", "high"];
+const AREAS: &[&str] = &["centre", "river"];
+const RATINGS: &[&str] = &["low", "average", "high"];
+
+/// Render one sample from slot indices (deterministic given indices).
+fn render(name: usize, food: usize, price: usize, area: usize, rating: usize, tpl: usize) -> E2eSample {
+    let (n, f, p, a, r) = (NAMES[name], FOODS[food], PRICES[price], AREAS[area], RATINGS[rating]);
+    let mr = format!("{n}|{f}|{p}");
+    let text = match tpl {
+        0 => format!("{n} serves {p} {f} food."),
+        1 => format!("{n} is a {p} {f} spot."),
+        2 => format!("Try {n} for {f} food."),
+        3 => format!("{n} has {r} rated {f}."),
+        _ => format!("{n} is {p}, at the {a}."),
+    };
+    E2eSample {
+        mr,
+        text,
+        food_id: food,
+    }
+}
+
+/// Generate `n` samples with a seeded RNG.
+pub fn generate_corpus(n: usize, rng: &mut Rng) -> Vec<E2eSample> {
+    (0..n)
+        .map(|_| {
+            render(
+                rng.below(NAMES.len()),
+                rng.below(FOODS.len()),
+                rng.below(PRICES.len()),
+                rng.below(AREAS.len()),
+                rng.below(RATINGS.len()),
+                rng.below(5),
+            )
+        })
+        .collect()
+}
+
+/// Short patterned byte sequences for tiny-window variants (the
+/// `micro` integration model has seq = 8: real E2E samples cannot fit,
+/// so plumbing tests train on these instead). Empty MR; the text is a
+/// learnable repeated-letter pattern.
+pub fn generate_byte_corpus(n: usize, max_len: usize, rng: &mut Rng) -> Vec<E2eSample> {
+    const ALPHA: &[u8] = b"abcd";
+    (0..n)
+        .map(|_| {
+            let a = ALPHA[rng.below(ALPHA.len())];
+            let b = ALPHA[rng.below(ALPHA.len())];
+            let len = 2 + rng.below(max_len.saturating_sub(3).max(1));
+            let text: String = (0..len)
+                .map(|i| if i % 2 == 0 { a as char } else { b as char })
+                .collect();
+            E2eSample {
+                mr: String::new(),
+                text,
+                food_id: (a % 4) as usize,
+            }
+        })
+        .collect()
+}
+
+/// IID sharding: round-robin after a seeded shuffle.
+pub fn shard_iid(corpus: &[E2eSample], k: usize, rng: &mut Rng) -> Vec<Vec<E2eSample>> {
+    let mut idx: Vec<usize> = (0..corpus.len()).collect();
+    rng.shuffle(&mut idx);
+    let mut shards = vec![Vec::new(); k];
+    for (pos, &i) in idx.iter().enumerate() {
+        shards[pos % k].push(corpus[i].clone());
+    }
+    shards
+}
+
+/// Non-IID sharding by food type: client k predominantly sees foods
+/// congruent to k (a simple label-skew partition, the heterogeneity the
+/// paper's FedAvg aggregation is claimed to absorb).
+pub fn shard_by_food(corpus: &[E2eSample], k: usize) -> Vec<Vec<E2eSample>> {
+    let mut shards = vec![Vec::new(); k];
+    for s in corpus {
+        shards[s.food_id % k].push(s.clone());
+    }
+    shards
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_fit_tiny_window() {
+        let mut rng = Rng::new(1);
+        for s in generate_corpus(500, &mut rng) {
+            let total = s.mr.len() + 1 + s.text.len(); // + separator
+            assert!(total <= 64, "sample too long ({total}): {s:?}");
+            assert!(s.text.len() >= 10);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate_corpus(50, &mut Rng::new(7));
+        let b = generate_corpus(50, &mut Rng::new(7));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn corpus_is_diverse() {
+        let mut rng = Rng::new(2);
+        let c = generate_corpus(200, &mut rng);
+        let uniq: std::collections::BTreeSet<&str> = c.iter().map(|s| s.text.as_str()).collect();
+        assert!(uniq.len() > 100, "only {} unique samples", uniq.len());
+    }
+
+    #[test]
+    fn iid_shards_balanced() {
+        let mut rng = Rng::new(3);
+        let c = generate_corpus(103, &mut rng);
+        let shards = shard_iid(&c, 5, &mut rng);
+        let sizes: Vec<usize> = shards.iter().map(Vec::len).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 103);
+        assert!(sizes.iter().all(|&s| (20..=21).contains(&s)), "{sizes:?}");
+    }
+
+    #[test]
+    fn food_shards_are_skewed() {
+        let mut rng = Rng::new(4);
+        let c = generate_corpus(700, &mut rng);
+        let shards = shard_by_food(&c, 3);
+        // every shard sees only foods with id % 3 == shard index
+        for (k, shard) in shards.iter().enumerate() {
+            assert!(!shard.is_empty());
+            assert!(shard.iter().all(|s| s.food_id % 3 == k));
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Data substrate: a synthetic E2E-NLG-style corpus.
+//!
+//! The paper fine-tunes on the E2E dataset (restaurant meaning
+//! representations → natural-language utterances). That dataset is not
+//! available offline, so we generate a faithful synthetic counterpart
+//! from the same schema — attribute slots (name, eatType, food,
+//! priceRange, area, rating) filled from pools and rendered through
+//! templated realizations (DESIGN.md §2 records this substitution).
+//!
+//! Tokenization is byte-level (vocab 256 — matching the `tiny` model);
+//! each training sample is `MR § utterance` padded to the model's
+//! sequence length, with the loss mask covering only the utterance
+//! (completion-style fine-tuning, as LoRA's E2E setup does).
+
+pub mod corpus;
+pub mod tokenizer;
+
+pub use corpus::{generate_byte_corpus, generate_corpus, shard_by_food, shard_iid, E2eSample};
+pub use tokenizer::{Batch, Batcher, Tokenizer};

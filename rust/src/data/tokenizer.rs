@@ -1,0 +1,216 @@
+//! Byte-level tokenizer and fixed-shape batcher.
+//!
+//! Vocabulary = raw bytes (0–255); token 0 doubles as padding. Each
+//! sample is laid out `MR § text` (§ = 0x1F unit separator) and padded
+//! to the model sequence length. The loss mask is 1.0 only on the text
+//! span — completion-style fine-tuning: the model learns to realize the
+//! MR, not to predict the MR itself.
+
+use crate::data::corpus::E2eSample;
+use crate::util::rng::Rng;
+
+/// Separator byte between MR and realization.
+pub const SEP: u8 = 0x1F;
+/// Padding token.
+pub const PAD: i32 = 0;
+
+/// Byte-level tokenizer (stateless; the struct namespaces the API).
+pub struct Tokenizer;
+
+impl Tokenizer {
+    /// Tokenize one sample to exactly `seq` tokens + loss mask.
+    /// Returns None if the sample cannot fit.
+    pub fn encode(sample: &E2eSample, seq: usize) -> Option<(Vec<i32>, Vec<f32>)> {
+        let mr = sample.mr.as_bytes();
+        let tx = sample.text.as_bytes();
+        let used = mr.len() + 1 + tx.len();
+        if used > seq {
+            return None;
+        }
+        let mut tokens = Vec::with_capacity(seq);
+        let mut mask = Vec::with_capacity(seq);
+        for &b in mr {
+            tokens.push(b as i32);
+            mask.push(0.0);
+        }
+        tokens.push(SEP as i32);
+        mask.push(0.0);
+        for &b in tx {
+            tokens.push(b as i32);
+            mask.push(1.0);
+        }
+        while tokens.len() < seq {
+            tokens.push(PAD);
+            mask.push(0.0);
+        }
+        Some((tokens, mask))
+    }
+}
+
+/// One fixed-shape batch: tokens [B*T] and mask [B*T], flattened row-major.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// Cycling mini-batch sampler over a client's shard.
+pub struct Batcher {
+    encoded: Vec<(Vec<i32>, Vec<f32>)>,
+    batch: usize,
+    seq: usize,
+    rng: Rng,
+}
+
+/// Clamp byte tokens into a model vocabulary by modulo (identity for
+/// vocab >= 256 — the tiny model's byte vocab).
+fn clamp_vocab(tokens: &mut [i32], vocab: usize) {
+    if vocab < 256 {
+        for t in tokens.iter_mut() {
+            *t %= vocab as i32;
+        }
+    }
+}
+
+impl Batcher {
+    /// Encode a shard; samples that don't fit `seq` are dropped (none
+    /// are, for the built-in generator + tiny model).
+    pub fn new(shard: &[E2eSample], batch: usize, seq: usize, rng: Rng) -> Batcher {
+        Self::with_vocab(shard, batch, seq, 256, rng)
+    }
+
+    /// Like [`Batcher::new`] but clamps tokens into `vocab` (needed for
+    /// the reduced-vocabulary `micro` test variant).
+    pub fn with_vocab(
+        shard: &[E2eSample],
+        batch: usize,
+        seq: usize,
+        vocab: usize,
+        rng: Rng,
+    ) -> Batcher {
+        let encoded: Vec<_> = shard
+            .iter()
+            .filter_map(|s| {
+                Tokenizer::encode(s, seq).map(|(mut t, m)| {
+                    clamp_vocab(&mut t, vocab);
+                    (t, m)
+                })
+            })
+            .collect();
+        assert!(!encoded.is_empty(), "empty shard after encoding");
+        Batcher {
+            encoded,
+            batch,
+            seq,
+            rng,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.encoded.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.encoded.is_empty()
+    }
+
+    /// Sample one mini-batch (with replacement — the paper's "randomly
+    /// selects a mini-batch").
+    pub fn next_batch(&mut self) -> Batch {
+        let mut tokens = Vec::with_capacity(self.batch * self.seq);
+        let mut mask = Vec::with_capacity(self.batch * self.seq);
+        for _ in 0..self.batch {
+            let i = self.rng.below(self.encoded.len());
+            tokens.extend_from_slice(&self.encoded[i].0);
+            mask.extend_from_slice(&self.encoded[i].1);
+        }
+        Batch {
+            tokens,
+            mask,
+            batch: self.batch,
+            seq: self.seq,
+        }
+    }
+
+    /// Deterministic sequential batches for evaluation (wraps around).
+    pub fn eval_batch(&self, start: usize) -> Batch {
+        let mut tokens = Vec::with_capacity(self.batch * self.seq);
+        let mut mask = Vec::with_capacity(self.batch * self.seq);
+        for j in 0..self.batch {
+            let i = (start + j) % self.encoded.len();
+            tokens.extend_from_slice(&self.encoded[i].0);
+            mask.extend_from_slice(&self.encoded[i].1);
+        }
+        Batch {
+            tokens,
+            mask,
+            batch: self.batch,
+            seq: self.seq,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::generate_corpus;
+
+    fn sample() -> E2eSample {
+        E2eSample {
+            mr: "name[Aromi], food[Thai], price[cheap]".into(),
+            text: "Aromi serves cheap Thai food.".into(),
+            food_id: 0,
+        }
+    }
+
+    #[test]
+    fn encode_layout() {
+        let (tokens, mask) = Tokenizer::encode(&sample(), 72).unwrap();
+        assert_eq!(tokens.len(), 72);
+        assert_eq!(mask.len(), 72);
+        let mr_len = sample().mr.len();
+        // MR span unmasked
+        assert!(mask[..mr_len].iter().all(|&m| m == 0.0));
+        assert_eq!(tokens[mr_len], SEP as i32);
+        // text span masked 1.0
+        let text_len = sample().text.len();
+        assert!(mask[mr_len + 1..mr_len + 1 + text_len].iter().all(|&m| m == 1.0));
+        // padding
+        assert!(tokens[mr_len + 1 + text_len..].iter().all(|&t| t == PAD));
+        // tokens are valid bytes
+        assert!(tokens.iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn too_long_sample_rejected() {
+        assert!(Tokenizer::encode(&sample(), 10).is_none());
+    }
+
+    #[test]
+    fn batcher_shapes_and_determinism() {
+        let mut rng = Rng::new(5);
+        let corpus = generate_corpus(40, &mut rng);
+        let mut b1 = Batcher::new(&corpus, 4, 64, Rng::new(9));
+        let mut b2 = Batcher::new(&corpus, 4, 64, Rng::new(9));
+        let x1 = b1.next_batch();
+        let x2 = b2.next_batch();
+        assert_eq!(x1.tokens, x2.tokens);
+        assert_eq!(x1.tokens.len(), 4 * 64);
+        assert_eq!(x1.mask.len(), 4 * 64);
+    }
+
+    #[test]
+    fn eval_batches_cycle_deterministically() {
+        let mut rng = Rng::new(6);
+        let corpus = generate_corpus(10, &mut rng);
+        let b = Batcher::new(&corpus, 4, 64, Rng::new(0));
+        let e1 = b.eval_batch(0);
+        let e2 = b.eval_batch(0);
+        assert_eq!(e1.tokens, e2.tokens);
+        // wrap-around reuses early samples
+        let e3 = b.eval_batch(8);
+        assert_eq!(&e3.tokens[2 * 64..3 * 64], &e1.tokens[..64]);
+    }
+}

@@ -1,0 +1,148 @@
+//! E(r): global rounds to reach the target loss as a function of the
+//! LoRA rank (paper Fig. 4, consumed by Eq. 17 and subproblem P4).
+//!
+//! The paper estimates E(r) "offline through pretraining on a
+//! representative dataset". We support both forms:
+//!
+//! * [`ConvergenceModel::Table`] — measured (rank, rounds) points from
+//!   the Fig. 3/4 runs (`cargo bench --bench fig4_steps_to_target`
+//!   writes them), interpolated monotonically;
+//! * [`ConvergenceModel::Fitted`] — the parametric law
+//!   `E(r) = e_inf * (1 + c / r^alpha)`, least-squares fitted to the
+//!   measurements. Higher rank → fewer rounds with diminishing returns,
+//!   exactly the shape Fig. 4 reports.
+
+/// Rounds-to-target model.
+#[derive(Clone, Debug)]
+pub enum ConvergenceModel {
+    /// Measured (rank, rounds) points; piecewise-linear in 1/r between
+    /// points, clamped outside.
+    Table(Vec<(usize, f64)>),
+    /// E(r) = e_inf * (1 + c / r^alpha).
+    Fitted { e_inf: f64, c: f64, alpha: f64 },
+}
+
+impl ConvergenceModel {
+    pub fn fitted(e_inf: f64, c: f64, alpha: f64) -> ConvergenceModel {
+        ConvergenceModel::Fitted { e_inf, c, alpha }
+    }
+
+    /// Sorted, deduplicated measurement table.
+    pub fn table(mut points: Vec<(usize, f64)>) -> ConvergenceModel {
+        points.sort_by_key(|&(r, _)| r);
+        points.dedup_by_key(|&mut (r, _)| r);
+        assert!(!points.is_empty(), "empty convergence table");
+        ConvergenceModel::Table(points)
+    }
+
+    /// Default calibration used before any measurement exists: shaped to
+    /// the paper's Fig. 4 trend (rank 1 needs ~1.9x the rounds of rank 8).
+    pub fn paper_default() -> ConvergenceModel {
+        ConvergenceModel::fitted(24.0, 1.0, 0.85)
+    }
+
+    /// E(r): expected global rounds at rank `r` (r >= 1).
+    pub fn rounds(&self, rank: usize) -> f64 {
+        let r = rank.max(1) as f64;
+        match self {
+            ConvergenceModel::Fitted { e_inf, c, alpha } => e_inf * (1.0 + c / r.powf(*alpha)),
+            ConvergenceModel::Table(points) => {
+                // interpolate linearly in u = 1/r, which straightens the
+                // hyperbolic trend
+                let u = 1.0 / r;
+                let pt = |&(pr, pe): &(usize, f64)| (1.0 / pr.max(1) as f64, pe);
+                let first = pt(points.first().unwrap());
+                let last = pt(points.last().unwrap());
+                // table sorted by r ascending -> u descending
+                if u >= first.0 {
+                    return first.1;
+                }
+                if u <= last.0 {
+                    return last.1;
+                }
+                for w in points.windows(2) {
+                    let (u0, e0) = pt(&w[0]);
+                    let (u1, e1) = pt(&w[1]);
+                    if u <= u0 && u >= u1 {
+                        let t = if (u0 - u1).abs() < 1e-12 { 0.0 } else { (u0 - u) / (u0 - u1) };
+                        return e0 + t * (e1 - e0);
+                    }
+                }
+                last.1
+            }
+        }
+    }
+
+    /// Least-squares fit of the parametric law to measured points
+    /// (grid search over alpha, closed-form for e_inf/c at fixed alpha).
+    pub fn fit(points: &[(usize, f64)]) -> ConvergenceModel {
+        assert!(points.len() >= 2, "need at least two points to fit");
+        let mut best = (f64::INFINITY, 1.0, 0.0, 1.0); // (sse, e_inf, c, alpha)
+        let mut alpha = 0.1;
+        while alpha <= 2.5 {
+            // model: E = e_inf + e_inf*c * r^-alpha  == a + b*x with
+            // x = r^-alpha; linear least squares for (a, b)
+            let xs: Vec<f64> = points.iter().map(|&(r, _)| (r.max(1) as f64).powf(-alpha)).collect();
+            let ys: Vec<f64> = points.iter().map(|&(_, e)| e).collect();
+            let (a, b) = crate::util::stats::linear_fit(&xs, &ys);
+            if a > 0.0 {
+                let sse: f64 = xs
+                    .iter()
+                    .zip(&ys)
+                    .map(|(x, y)| {
+                        let pred = a + b * x;
+                        (pred - y) * (pred - y)
+                    })
+                    .sum();
+                if sse < best.0 {
+                    best = (sse, a, b / a, alpha);
+                }
+            }
+            alpha += 0.05;
+        }
+        ConvergenceModel::fitted(best.1, best.2, best.3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fitted_is_decreasing_with_diminishing_returns() {
+        let m = ConvergenceModel::paper_default();
+        let e: Vec<f64> = [1, 2, 4, 6, 8].iter().map(|&r| m.rounds(r)).collect();
+        for w in e.windows(2) {
+            assert!(w[1] < w[0], "must decrease: {e:?}");
+        }
+        // diminishing: drop 1->2 exceeds drop 6->8
+        assert!(e[0] - e[1] > e[3] - e[4]);
+    }
+
+    #[test]
+    fn table_interpolates_and_clamps() {
+        let m = ConvergenceModel::table(vec![(1, 100.0), (4, 40.0), (8, 30.0)]);
+        assert_eq!(m.rounds(1), 100.0);
+        assert_eq!(m.rounds(8), 30.0);
+        assert_eq!(m.rounds(16), 30.0); // clamped beyond table
+        let e2 = m.rounds(2);
+        assert!(e2 < 100.0 && e2 > 40.0);
+    }
+
+    #[test]
+    fn fit_recovers_parametric_points() {
+        let truth = ConvergenceModel::fitted(20.0, 1.5, 0.8);
+        let pts: Vec<(usize, f64)> = [1, 2, 4, 6, 8].iter().map(|&r| (r, truth.rounds(r))).collect();
+        let fit = ConvergenceModel::fit(&pts);
+        for &(r, e) in &pts {
+            let err = (fit.rounds(r) - e).abs() / e;
+            assert!(err < 0.02, "rank {r}: {} vs {e}", fit.rounds(r));
+        }
+    }
+
+    #[test]
+    fn rank_zero_treated_as_one() {
+        let m = ConvergenceModel::paper_default();
+        assert_eq!(m.rounds(0), m.rounds(1));
+    }
+}

@@ -1,0 +1,161 @@
+//! Energy model — the paper's stated future-work extension
+//! ("exploring an energy-efficient SflLLM framework"), built on the
+//! same Section-V quantities.
+//!
+//! Per local round, client k spends:
+//!
+//! * compute energy `E_cmp = zeta_k * f_k^2 * C_k` — the standard
+//!   CMOS dynamic-power model (energy per cycle ∝ f², as in the
+//!   paper's reference [28]'s formulation), with `C_k` the cycles for
+//!   its forward+backward work;
+//! * transmit energy `E_tx = P_k * T_k` on each uplink — transmit
+//!   power times airtime, both already produced by the delay model.
+//!
+//! This enables the energy/delay trade-off study in
+//! `examples/rank_sweep.rs` (energy column) and the ablation test in
+//! `rust/tests/integration_optimizer.rs`.
+
+use super::{Allocation, PhaseDelays, Scenario};
+
+/// Effective switched-capacitance coefficient (J·s²/cycle³ scale).
+/// Typical edge-device magnitude; configurable per study.
+pub const DEFAULT_ZETA: f64 = 1e-28;
+
+/// Energy ledger for one local round (Joules).
+#[derive(Clone, Debug, Default)]
+pub struct RoundEnergy {
+    /// Per-client compute energy (FP + BP).
+    pub client_compute: Vec<f64>,
+    /// Per-client activation-upload transmit energy.
+    pub act_upload: Vec<f64>,
+    /// Per-client federated-upload transmit energy (amortized per round:
+    /// the adapter upload happens once every I rounds).
+    pub fed_upload: Vec<f64>,
+}
+
+impl RoundEnergy {
+    /// Total energy across clients for one local round.
+    pub fn total(&self) -> f64 {
+        self.client_compute.iter().sum::<f64>()
+            + self.act_upload.iter().sum::<f64>()
+            + self.fed_upload.iter().sum::<f64>()
+    }
+
+    /// Per-client totals.
+    pub fn per_client(&self) -> Vec<f64> {
+        (0..self.client_compute.len())
+            .map(|k| self.client_compute[k] + self.act_upload[k] + self.fed_upload[k])
+            .collect()
+    }
+}
+
+/// Compute the per-round energy ledger for an allocation.
+pub fn round_energy(scn: &Scenario, alloc: &Allocation, zeta: f64) -> RoundEnergy {
+    let ph: PhaseDelays = scn.phase_delays(alloc);
+    let b = scn.batch as f64;
+    let mut out = RoundEnergy::default();
+    for k in 0..scn.k() {
+        let f_k = scn.topo.clients[k].f_cycles;
+        // cycles for this round's client work
+        let flops = b
+            * (scn.profile.client_fwd_flops(alloc.l_c, alloc.rank)
+                + scn.profile.client_bwd_flops(alloc.l_c, alloc.rank));
+        let cycles = scn.kappa_client * flops;
+        out.client_compute.push(zeta * f_k * f_k * cycles);
+        // transmit energy = power * airtime
+        out.act_upload.push(scn.power_main(alloc, k) * ph.act_upload[k]);
+        out.fed_upload
+            .push(scn.power_fed(alloc, k) * ph.fed_upload[k] / scn.local_steps.max(1) as f64);
+    }
+    out
+}
+
+/// Total training energy: per-round energy × rounds (Eq. 17 structure).
+pub fn total_energy(
+    scn: &Scenario,
+    alloc: &Allocation,
+    conv: &super::ConvergenceModel,
+    zeta: f64,
+) -> f64 {
+    let per_round = round_energy(scn, alloc, zeta).total();
+    conv.rounds(alloc.rank) * scn.local_steps as f64 * per_round
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delay::testutil::toy_scenario;
+    use crate::delay::ConvergenceModel;
+
+    fn alloc() -> Allocation {
+        Allocation {
+            assign_main: vec![vec![0, 1], vec![2, 3]],
+            assign_fed: vec![vec![0], vec![1]],
+            psd_main: vec![5e-5; 4],
+            psd_fed: vec![5e-5; 2],
+            l_c: 3,
+            rank: 4,
+        }
+    }
+
+    #[test]
+    fn energy_components_positive_and_sum() {
+        let scn = toy_scenario();
+        let e = round_energy(&scn, &alloc(), DEFAULT_ZETA);
+        assert_eq!(e.client_compute.len(), 2);
+        assert!(e.client_compute.iter().all(|&v| v > 0.0));
+        assert!(e.act_upload.iter().all(|&v| v > 0.0));
+        let total = e.total();
+        let sum: f64 = e.per_client().iter().sum();
+        assert!((total - sum).abs() < 1e-9 * total);
+    }
+
+    #[test]
+    fn deeper_split_costs_more_client_energy() {
+        let scn = toy_scenario();
+        let mut deep = alloc();
+        deep.l_c = 9;
+        let e1 = round_energy(&scn, &alloc(), DEFAULT_ZETA);
+        let e2 = round_energy(&scn, &deep, DEFAULT_ZETA);
+        assert!(e2.client_compute[0] > e1.client_compute[0]);
+    }
+
+    #[test]
+    fn higher_rank_costs_more_energy() {
+        let scn = toy_scenario();
+        let mut hi = alloc();
+        hi.rank = 8;
+        let mut lo = alloc();
+        lo.rank = 1;
+        let e_hi = round_energy(&scn, &hi, DEFAULT_ZETA);
+        let e_lo = round_energy(&scn, &lo, DEFAULT_ZETA);
+        assert!(e_hi.client_compute[0] > e_lo.client_compute[0]);
+        assert!(e_hi.fed_upload[0] >= e_lo.fed_upload[0]);
+    }
+
+    #[test]
+    fn total_energy_scales_with_rounds() {
+        let scn = toy_scenario();
+        let a = alloc();
+        let e1 = total_energy(&scn, &a, &ConvergenceModel::fitted(10.0, 0.0, 1.0), DEFAULT_ZETA);
+        let e2 = total_energy(&scn, &a, &ConvergenceModel::fitted(20.0, 0.0, 1.0), DEFAULT_ZETA);
+        assert!((e2 - 2.0 * e1).abs() < 1e-9 * e1);
+    }
+
+    #[test]
+    fn more_transmit_power_can_cost_energy_despite_less_delay() {
+        // airtime falls ~log with power while power rises linearly: at
+        // high SNR more PSD costs net energy — the trade-off the
+        // energy extension exists to expose.
+        let scn = toy_scenario();
+        let a = alloc();
+        let mut hot = a.clone();
+        hot.psd_main.iter_mut().for_each(|p| *p *= 8.0);
+        let e_cool = round_energy(&scn, &a, DEFAULT_ZETA);
+        let e_hot = round_energy(&scn, &hot, DEFAULT_ZETA);
+        assert!(
+            e_hot.act_upload[0] > e_cool.act_upload[0],
+            "8x PSD at ~30 bit/s/Hz should cost net transmit energy"
+        );
+    }
+}

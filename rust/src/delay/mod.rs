@@ -1,0 +1,410 @@
+//! Training-delay model — paper Section V-A, Eqs. 8–17.
+//!
+//! Given a [`Scenario`] (workload profile + geometry + links + compute
+//! parameters) and an [`Allocation`] (the decision variables
+//! r^s, r^f, p^s, p^f, μ, r), computes every phase delay of one local
+//! round, `T_local` (Eq. 16) and the total training delay
+//! `T = E(r)·(I·T_local + max_k T_k^f)` (Eq. 17).
+//!
+//! Server-to-client broadcasts and aggregation compute are neglected,
+//! exactly as the paper argues (high server transmit power, small
+//! payloads, ample server compute).
+
+pub mod convergence;
+pub mod energy;
+
+pub use convergence::ConvergenceModel;
+
+use crate::model::WorkloadProfile;
+use crate::net::{Link, Topology};
+
+/// A complete latency scenario (everything that is *not* a decision).
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub profile: WorkloadProfile,
+    pub topo: Topology,
+    pub main_link: Link,
+    pub fed_link: Link,
+    /// GPU cycles per FLOP on clients / main server (κ_k, κ_s).
+    pub kappa_client: f64,
+    pub kappa_server: f64,
+    /// Main-server capability f_s (cycles/s).
+    pub f_server: f64,
+    /// Mini-batch size b and local steps per global round I.
+    pub batch: usize,
+    pub local_steps: usize,
+    /// Per-client max power and per-server totals (W) — constraints C4/C5.
+    pub p_max_w: f64,
+    pub p_th_main_w: f64,
+    pub p_th_fed_w: f64,
+}
+
+/// Decision variables (r^s, r^f, p^s, p^f, μ, r).
+///
+/// Subchannel assignment is stored per client (the set `M_k`/`N_k` of
+/// Sec. VI-B); exclusivity C2 is an invariant checked by
+/// [`Allocation::validate`]. The split vector μ is summarized by its
+/// prefix length `l_c` (constraint C3 forces μ monotone).
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    /// Subchannel indices of the main-server link owned by each client.
+    pub assign_main: Vec<Vec<usize>>,
+    /// Subchannel indices of the federated-server link per client.
+    pub assign_fed: Vec<Vec<usize>>,
+    /// Transmit PSD (W/Hz) per main-link subchannel.
+    pub psd_main: Vec<f64>,
+    /// Transmit PSD (W/Hz) per fed-link subchannel.
+    pub psd_fed: Vec<f64>,
+    /// Split point: number of blocks on the client (μ prefix).
+    pub l_c: usize,
+    /// LoRA rank r.
+    pub rank: usize,
+}
+
+impl Allocation {
+    /// Check structural invariants C1/C2 (each subchannel exactly one
+    /// owner) and non-negativity C6.
+    pub fn validate(&self, m: usize, n: usize) -> Result<(), String> {
+        let mut owner_main = vec![usize::MAX; m];
+        for (k, subs) in self.assign_main.iter().enumerate() {
+            for &i in subs {
+                if i >= m {
+                    return Err(format!("main subchannel {i} out of range"));
+                }
+                if owner_main[i] != usize::MAX {
+                    return Err(format!("main subchannel {i} double-assigned"));
+                }
+                owner_main[i] = k;
+            }
+        }
+        let mut owner_fed = vec![usize::MAX; n];
+        for (k, subs) in self.assign_fed.iter().enumerate() {
+            for &i in subs {
+                if i >= n {
+                    return Err(format!("fed subchannel {i} out of range"));
+                }
+                if owner_fed[i] != usize::MAX {
+                    return Err(format!("fed subchannel {i} double-assigned"));
+                }
+                owner_fed[i] = k;
+            }
+        }
+        if owner_main.iter().any(|&o| o == usize::MAX) {
+            return Err("unassigned main subchannel (C2)".into());
+        }
+        if owner_fed.iter().any(|&o| o == usize::MAX) {
+            return Err("unassigned fed subchannel (C2)".into());
+        }
+        if self.psd_main.iter().chain(&self.psd_fed).any(|&p| p < 0.0) {
+            return Err("negative PSD (C6)".into());
+        }
+        Ok(())
+    }
+}
+
+/// All per-phase delays of one local round (seconds).
+#[derive(Clone, Debug)]
+pub struct PhaseDelays {
+    /// T_k^F (Eq. 8) per client.
+    pub client_fwd: Vec<f64>,
+    /// T_k^s (Eq. 10) per client.
+    pub act_upload: Vec<f64>,
+    /// T_s^F (Eq. 11).
+    pub server_fwd: f64,
+    /// T_s^B (Eq. 12).
+    pub server_bwd: f64,
+    /// T_k^B (Eq. 13) per client.
+    pub client_bwd: Vec<f64>,
+    /// T_k^f (Eq. 15) per client (adapter upload to the federated server).
+    pub fed_upload: Vec<f64>,
+}
+
+impl PhaseDelays {
+    /// T_local (Eq. 16).
+    pub fn t_local(&self) -> f64 {
+        let stage1 = self
+            .client_fwd
+            .iter()
+            .zip(&self.act_upload)
+            .map(|(a, b)| a + b)
+            .fold(0.0f64, f64::max);
+        let stage3 = self.client_bwd.iter().copied().fold(0.0f64, f64::max);
+        stage1 + self.server_fwd + self.server_bwd + stage3
+    }
+
+    /// max_k T_k^f — the aggregation-phase upload bottleneck.
+    pub fn t_fed(&self) -> f64 {
+        self.fed_upload.iter().copied().fold(0.0f64, f64::max)
+    }
+}
+
+impl Scenario {
+    pub fn k(&self) -> usize {
+        self.topo.k()
+    }
+
+    /// Uplink rate of client k to the main server under `alloc` (Eq. 9).
+    pub fn rate_main(&self, alloc: &Allocation, k: usize) -> f64 {
+        alloc.assign_main[k]
+            .iter()
+            .map(|&i| self.main_link.subch_rate(k, i, alloc.psd_main[i]))
+            .sum()
+    }
+
+    /// Uplink rate of client k to the federated server (Eq. 14).
+    pub fn rate_fed(&self, alloc: &Allocation, k: usize) -> f64 {
+        alloc.assign_fed[k]
+            .iter()
+            .map(|&i| self.fed_link.subch_rate(k, i, alloc.psd_fed[i]))
+            .sum()
+    }
+
+    /// Total transmit power of client k on the main link (W) — C4 LHS.
+    pub fn power_main(&self, alloc: &Allocation, k: usize) -> f64 {
+        alloc.assign_main[k]
+            .iter()
+            .map(|&i| self.main_link.power_w(i, alloc.psd_main[i]))
+            .sum()
+    }
+
+    pub fn power_fed(&self, alloc: &Allocation, k: usize) -> f64 {
+        alloc.assign_fed[k]
+            .iter()
+            .map(|&i| self.fed_link.power_w(i, alloc.psd_fed[i]))
+            .sum()
+    }
+
+    /// All phase delays for one local round (Eqs. 8–15).
+    pub fn phase_delays(&self, alloc: &Allocation) -> PhaseDelays {
+        let k = self.k();
+        let b = self.batch as f64;
+        let p = &self.profile;
+        let (l_c, r) = (alloc.l_c, alloc.rank);
+
+        let mut client_fwd = Vec::with_capacity(k);
+        let mut act_upload = Vec::with_capacity(k);
+        let mut client_bwd = Vec::with_capacity(k);
+        let mut fed_upload = Vec::with_capacity(k);
+
+        for kk in 0..k {
+            let f_k = self.topo.clients[kk].f_cycles;
+            // Eq. 8
+            client_fwd.push(b * self.kappa_client * p.client_fwd_flops(l_c, r) / f_k);
+            // Eq. 10
+            let rate_s = self.rate_main(alloc, kk);
+            act_upload.push(if rate_s > 0.0 {
+                b * p.activation_bits(l_c) / rate_s
+            } else {
+                f64::INFINITY
+            });
+            // Eq. 13
+            client_bwd.push(b * self.kappa_client * p.client_bwd_flops(l_c, r) / f_k);
+            // Eq. 15
+            let rate_f = self.rate_fed(alloc, kk);
+            fed_upload.push(if rate_f > 0.0 {
+                p.client_adapter_bits(l_c, r) / rate_f
+            } else {
+                f64::INFINITY
+            });
+        }
+
+        // Eqs. 11–12: the server batches all K clients' activations.
+        let server_fwd =
+            k as f64 * b * self.kappa_server * p.server_fwd_flops(l_c, r) / self.f_server;
+        let server_bwd =
+            k as f64 * b * self.kappa_server * p.server_bwd_flops(l_c, r) / self.f_server;
+
+        PhaseDelays {
+            client_fwd,
+            act_upload,
+            server_fwd,
+            server_bwd,
+            client_bwd,
+            fed_upload,
+        }
+    }
+
+    /// T_local (Eq. 16).
+    pub fn t_local(&self, alloc: &Allocation) -> f64 {
+        self.phase_delays(alloc).t_local()
+    }
+
+    /// Total training delay (Eq. 17): `E(r)·(I·T_local + max_k T_k^f)`.
+    pub fn total_delay(&self, alloc: &Allocation, conv: &ConvergenceModel) -> f64 {
+        let ph = self.phase_delays(alloc);
+        conv.rounds(alloc.rank) * (self.local_steps as f64 * ph.t_local() + ph.t_fed())
+    }
+
+    /// Feasibility of the power constraints C4/C5 under `alloc`.
+    pub fn power_feasible(&self, alloc: &Allocation, tol: f64) -> bool {
+        let mut tot_main = 0.0;
+        let mut tot_fed = 0.0;
+        for k in 0..self.k() {
+            let pm = self.power_main(alloc, k);
+            let pf = self.power_fed(alloc, k);
+            if pm > self.p_max_w * (1.0 + tol) || pf > self.p_max_w * (1.0 + tol) {
+                return false;
+            }
+            tot_main += pm;
+            tot_fed += pf;
+        }
+        tot_main <= self.p_th_main_w * (1.0 + tol) && tot_fed <= self.p_th_fed_w * (1.0 + tol)
+    }
+}
+
+/// Test fixtures shared across the crate's unit tests.
+#[cfg(test)]
+pub mod testutil {
+    use super::*;
+    use crate::model::{Gpt2Config, WorkloadProfile};
+    use crate::net::topology::ClientSite;
+    use crate::net::{ChannelModel, SubchannelSet, Topology};
+
+    /// Small handcrafted scenario: 2 clients, 4+2 subchannels.
+    pub fn toy_scenario() -> Scenario {
+        let profile = WorkloadProfile::new(Gpt2Config::gpt2_s(), 128);
+        let topo = Topology {
+            clients: vec![
+                ClientSite { d_main_m: 100.0, d_fed_m: 10.0, f_cycles: 1.0e9 },
+                ClientSite { d_main_m: 110.0, d_fed_m: 15.0, f_cycles: 1.5e9 },
+            ],
+        };
+        let ch = ChannelModel::new(0.0);
+        let main_link = Link {
+            subch: SubchannelSet::equal_split(500e3, 4),
+            gain_product: 160.0,
+            noise_psd: 3.98e-21,
+            client_gain: topo.clients.iter().map(|c| ch.gain_deterministic(c.d_main_m)).collect(),
+        };
+        let fed_link = Link {
+            subch: SubchannelSet::equal_split(500e3, 2),
+            gain_product: 80.0,
+            noise_psd: 3.98e-21,
+            client_gain: topo.clients.iter().map(|c| ch.gain_deterministic(c.d_fed_m)).collect(),
+        };
+        Scenario {
+            profile,
+            topo,
+            main_link,
+            fed_link,
+            kappa_client: 1.0 / 1024.0,
+            kappa_server: 1.0 / 32768.0,
+            f_server: 5.0e9,
+            batch: 4,
+            local_steps: 3,
+            p_max_w: 15.0,
+            p_th_main_w: 50.0,
+            p_th_fed_w: 50.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::toy_scenario;
+    use super::*;
+
+    fn toy_alloc() -> Allocation {
+        Allocation {
+            assign_main: vec![vec![0, 1], vec![2, 3]],
+            assign_fed: vec![vec![0], vec![1]],
+            psd_main: vec![1e-4; 4],
+            psd_fed: vec![1e-4; 2],
+            l_c: 3,
+            rank: 4,
+        }
+    }
+
+    #[test]
+    fn validate_catches_violations() {
+        let a = toy_alloc();
+        assert!(a.validate(4, 2).is_ok());
+        let mut dup = a.clone();
+        dup.assign_main[1][0] = 0; // double assignment
+        assert!(dup.validate(4, 2).is_err());
+        let mut neg = a.clone();
+        neg.psd_fed[0] = -1.0;
+        assert!(neg.validate(4, 2).is_err());
+        let mut missing = a;
+        missing.assign_fed[1].clear();
+        assert!(missing.validate(4, 2).is_err());
+    }
+
+    #[test]
+    fn eq8_hand_check() {
+        // T_k^F = b*κ*(Φ+ΔΦ)/f for client 0
+        let s = toy_scenario();
+        let a = toy_alloc();
+        let ph = s.phase_delays(&a);
+        let flops = s.profile.client_fwd_flops(3, 4);
+        let expect = 4.0 * (1.0 / 1024.0) * flops / 1.0e9;
+        assert!((ph.client_fwd[0] - expect).abs() / expect < 1e-12);
+    }
+
+    #[test]
+    fn eq10_hand_check() {
+        let s = toy_scenario();
+        let a = toy_alloc();
+        let ph = s.phase_delays(&a);
+        let rate: f64 = (0..2).map(|i| s.main_link.subch_rate(0, i, 1e-4)).sum();
+        let expect = 4.0 * s.profile.activation_bits(3) / rate;
+        assert!((ph.act_upload[0] - expect).abs() / expect < 1e-12);
+    }
+
+    #[test]
+    fn t_local_composition() {
+        let s = toy_scenario();
+        let a = toy_alloc();
+        let ph = s.phase_delays(&a);
+        let stage1 = (ph.client_fwd[0] + ph.act_upload[0])
+            .max(ph.client_fwd[1] + ph.act_upload[1]);
+        let expect = stage1 + ph.server_fwd + ph.server_bwd
+            + ph.client_bwd[0].max(ph.client_bwd[1]);
+        assert!((ph.t_local() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn total_delay_uses_convergence_model() {
+        let s = toy_scenario();
+        let a = toy_alloc();
+        let conv = ConvergenceModel::fitted(10.0, 1.0, 1.0);
+        let ph = s.phase_delays(&a);
+        let expect = conv.rounds(4) * (3.0 * ph.t_local() + ph.t_fed());
+        assert!((s.total_delay(&a, &conv) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn more_power_less_delay() {
+        let s = toy_scenario();
+        let a = toy_alloc();
+        let mut a2 = a.clone();
+        a2.psd_main.iter_mut().for_each(|p| *p *= 4.0);
+        assert!(s.phase_delays(&a2).act_upload[0] < s.phase_delays(&a).act_upload[0]);
+    }
+
+    #[test]
+    fn larger_split_moves_work_to_client() {
+        let s = toy_scenario();
+        let a = toy_alloc();
+        let mut deeper = a.clone();
+        deeper.l_c = 9;
+        let (p1, p2) = (s.phase_delays(&a), s.phase_delays(&deeper));
+        assert!(p2.client_fwd[0] > p1.client_fwd[0]);
+        assert!(p2.server_fwd < p1.server_fwd);
+    }
+
+    #[test]
+    fn power_feasibility() {
+        let s = toy_scenario();
+        let mut a = toy_alloc();
+        // 5e-5 W/Hz: 6.25 W per 125 kHz main subchannel (12.5 W/client),
+        // 12.5 W per 250 kHz fed subchannel — all within C4/C5.
+        a.psd_main.iter_mut().for_each(|p| *p = 5e-5);
+        a.psd_fed.iter_mut().for_each(|p| *p = 5e-5);
+        assert!(s.power_feasible(&a, 1e-9));
+        let mut hot = a;
+        // 1 W/Hz over 125 kHz = 125 kW >> caps
+        hot.psd_main.iter_mut().for_each(|p| *p = 1.0);
+        assert!(!s.power_feasible(&hot, 1e-9));
+    }
+}

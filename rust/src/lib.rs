@@ -1,0 +1,46 @@
+//! # SfLLM — Split Federated Learning for LLMs over Communication Networks
+//!
+//! Full-system reproduction of *"Efficient Split Federated Learning for
+//! Large Language Models over Communication Networks"* (Zhao et al.,
+//! 2025) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! This crate is Layer 3: the SFL coordinator (clients ∥ main server ∥
+//! federated server, the paper's Algorithm 1), the wireless-network
+//! substrate, the Section-V training-delay model, and the Section-VI
+//! joint resource-allocation optimizer (Algorithms 2 and 3). The
+//! compute path (split GPT-2 with LoRA adapters, and the fused LoRA
+//! Pallas kernel) is AOT-compiled from JAX to HLO text by
+//! `python/compile/` and executed through PJRT by [`runtime`].
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`util`] — PRNG, CLI/TOML/JSON parsing, CSV, stats (offline image:
+//!   no external crates beyond `xla` + `anyhow`).
+//! * [`config`] — typed experiment configuration (paper Table II).
+//! * [`model`] — GPT-2 architecture profiles and the per-layer
+//!   FLOPs/bytes workload model (paper Table III), LoRA adapter state.
+//! * [`net`] — wireless substrate: path loss, shadow fading, FDMA
+//!   subchannels, Shannon rates (Eqs. 9/14).
+//! * [`delay`] — the Section-V latency model (Eqs. 8–17) and the E(r)
+//!   convergence-steps model.
+//! * [`opt`] — Algorithm 2 (greedy subchannel assignment), the exact
+//!   convex power-control solver for P2, exhaustive split/rank search
+//!   (P3/P4), the BCD loop (Algorithm 3), and baselines a–d.
+//! * [`runtime`] — PJRT engine: load HLO-text artifacts, compile once,
+//!   execute from the training hot path.
+//! * [`data`] — synthetic E2E-style corpus generator + byte tokenizer.
+//! * [`coordinator`] — Algorithm 1 end-to-end: threaded clients, main
+//!   server, federated server, SGD + FedAvg on host buffers.
+//! * [`sim`] — experiment harness: scenario construction, sweeps, and
+//!   the latency evaluation used by every figure bench.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod delay;
+pub mod model;
+pub mod net;
+pub mod opt;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,225 @@
+//! sfllm — command-line launcher for the SfLLM reproduction.
+//!
+//! Subcommands:
+//!
+//! * `train`    — run split-federated fine-tuning (Algorithm 1) over an
+//!                AOT artifact variant, logging the loss curve to CSV;
+//! * `optimize` — run the joint resource-allocation optimizer
+//!                (Algorithm 3) on a wireless scenario and print the
+//!                chosen allocation;
+//! * `latency`  — evaluate the proposed scheme against baselines a–d;
+//! * `table3`   — print the GPT2-S complexity table (paper Table III);
+//! * `info`     — list available artifact variants.
+//!
+//! Defaults reproduce the paper's Table II setup.
+
+use anyhow::{bail, Context, Result};
+use sfllm::config::Config;
+use sfllm::coordinator::{train, OptKind, TrainOptions};
+use sfllm::delay::ConvergenceModel;
+use sfllm::model::{Gpt2Config, WorkloadProfile};
+use sfllm::opt::baselines;
+use sfllm::opt::bcd::{self, BcdOptions};
+use sfllm::runtime::{Manifest, SflModel, SflRuntime};
+use sfllm::sim;
+use sfllm::util::cli::Args;
+use sfllm::util::csv::CsvWriter;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let mut args = Args::from_env();
+    let cmd = args
+        .positional()
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "help".to_string());
+    match cmd.as_str() {
+        "train" => cmd_train(&mut args),
+        "optimize" => cmd_optimize(&mut args),
+        "latency" => cmd_latency(&mut args),
+        "table3" => cmd_table3(&mut args),
+        "info" => cmd_info(&mut args),
+        _ => {
+            println!(
+                "sfllm — split federated learning for LLMs (paper reproduction)\n\n\
+                 usage: sfllm <train|optimize|latency|table3|info> [--options]\n\n\
+                 train     run Algorithm 1 over an artifact variant\n\
+                 optimize  run the BCD resource optimizer (Algorithm 3)\n\
+                 latency   compare proposed allocation vs baselines a-d\n\
+                 table3    print the GPT2-S complexity table (Table III)\n\
+                 info      list artifact variants"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_dir(args: &mut Args) -> String {
+    args.str_or("artifacts", "artifacts")
+}
+
+fn cmd_train(args: &mut Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let variant = args.str_or("variant", "tiny_s2_r4");
+    let opts = TrainOptions {
+        clients: args.usize_or("clients", 5)?,
+        local_steps: args.usize_or("local-steps", 12)?,
+        global_rounds: args.usize_or("rounds", 25)?,
+        lr_client: args.f64_or("lr", 1e-3)? as f32,
+        lr_server: args.f64_or("lr", 1e-3)? as f32,
+        corpus_size: args.usize_or("corpus", 2000)?,
+        val_size: args.usize_or("val", 200)?,
+        eval_batches: args.usize_or("eval-batches", 4)?,
+        non_iid: args.flag("non-iid"),
+        optimizer: if args.flag("sgd") { OptKind::Sgd } else { OptKind::Adam },
+        byte_corpus: args.flag("byte-corpus"),
+        save_adapters: args.get("save-adapters"),
+        seed: args.u64_or("seed", 42)?,
+    };
+    let out = args.str_or("out", "results/train.csv");
+    args.finish()?;
+
+    println!(
+        "training variant {variant} (K={}, I={}, E={})",
+        opts.clients, opts.local_steps, opts.global_rounds
+    );
+    let dir2 = dir.clone();
+    let variant2 = variant.clone();
+    let report = train(&opts, move || {
+        let m = Manifest::load(&dir2)?;
+        Ok(Box::new(SflRuntime::load(&m, &variant2)?) as Box<dyn SflModel>)
+    })?;
+
+    let mut w = CsvWriter::create(&out, &["step", "train_loss"])?;
+    for (i, l) in report.train_loss.iter().enumerate() {
+        w.row_f64(&[(i + 1) as f64, *l])?;
+    }
+    w.flush()?;
+    println!("val curve:");
+    for (s, l) in &report.val_loss {
+        println!("  step {s:5}  val_loss {l:.4}  ppl {:.4}", l.exp());
+    }
+    println!(
+        "final ppl {:.4} | fed rounds {} | wall {:.1}s (server {:.1}s, agg {:.2}s, eval {:.1}s)",
+        report.final_ppl,
+        report.fed_rounds,
+        report.walltime.total,
+        report.walltime.server_compute,
+        report.walltime.aggregation,
+        report.walltime.evaluation
+    );
+    println!("loss curve written to {out}");
+    Ok(())
+}
+
+fn cmd_optimize(args: &mut Args) -> Result<()> {
+    let cfg = Config::from_args(args)?;
+    args.finish()?;
+    let scn = sim::build_scenario(&cfg)?;
+    let conv = ConvergenceModel::paper_default();
+    let opts = BcdOptions {
+        ranks: cfg.train.ranks.clone(),
+        ..BcdOptions::default()
+    };
+    let res = bcd::optimize(&scn, &conv, &opts)?;
+    println!("BCD converged in {} iterations", res.iterations);
+    println!("objective trajectory: {:?}", res.trajectory);
+    println!(
+        "chosen: split l_c={} rank r={}  ->  total delay {:.2} s",
+        res.alloc.l_c, res.alloc.rank, res.objective
+    );
+    for k in 0..scn.k() {
+        println!(
+            "  client {k}: main subch {:?} ({:.2} W), fed subch {:?} ({:.2} W)",
+            res.alloc.assign_main[k],
+            scn.power_main(&res.alloc, k),
+            res.alloc.assign_fed[k],
+            scn.power_fed(&res.alloc, k),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_latency(args: &mut Args) -> Result<()> {
+    let draws = args.usize_or("draws", 5)?;
+    let cfg = Config::from_args(args)?;
+    args.finish()?;
+    let scn = sim::build_scenario(&cfg)?;
+    let conv = ConvergenceModel::paper_default();
+    let [p, a, b, c, d] =
+        baselines::compare_all(&scn, &conv, &cfg.train.ranks, cfg.system.seed, draws)?;
+    println!("total training delay (s), paper baselines (lower is better):");
+    println!("  proposed    {p:10.2}");
+    println!("  baseline a  {a:10.2}  (random everything)  x{:.2}", a / p);
+    println!("  baseline b  {b:10.2}  (random comm)        x{:.2}", b / p);
+    println!("  baseline c  {c:10.2}  (random split)       x{:.2}", c / p);
+    println!("  baseline d  {d:10.2}  (random rank)        x{:.2}", d / p);
+    Ok(())
+}
+
+fn cmd_table3(args: &mut Args) -> Result<()> {
+    let seq = args.usize_or("seq", 512)?;
+    let model = args.str_or("model", "gpt2-s");
+    args.finish()?;
+    let cfg = Gpt2Config::by_name(&model)?;
+    let p = WorkloadProfile::new(cfg.clone(), seq);
+    println!(
+        "computational complexity of {} with LoRA (seq={seq}, per sample)",
+        cfg.name
+    );
+    println!("{:<28} {:>12} {:>16}", "component", "params", "fwd GFLOPs");
+    let g = 1e9;
+    let t = seq as f64;
+    let d = cfg.d_model as f64;
+    let f = cfg.d_ff() as f64;
+    let h = cfg.n_heads as f64;
+    let ln = 2.0 * 8.0 * t * d;
+    let mha = 8.0 * t * d * d + 4.0 * t * t * d + 5.0 * h * t * t;
+    let ffn = 2.0 * 2.0 * t * d * f + 8.0 * t * f;
+    let lora = 8.0 * t * d;
+    println!("{:<28} {:>12} {:>16}", "token embedding", fmt_m(cfg.params_token_embedding()), "-");
+    println!("{:<28} {:>12} {:>16}", "position encoding", fmt_m(cfg.params_position_encoding()), "-");
+    println!("transformer block x{}", cfg.n_layers);
+    println!("{:<28} {:>12} {:>16.3}", "  layernorm (x2)", fmt_m(2 * cfg.params_layernorm()), ln / g);
+    println!("{:<28} {:>12} {:>16.3}", "  multi-head attention", fmt_m(cfg.params_attention()), mha / g);
+    println!("{:<28} {:>12} {:>16.3}", "  lora adapter (per rank)", fmt_m(cfg.params_lora_per_rank_block()), lora / g);
+    println!("{:<28} {:>12} {:>16.3}", "  feed-forward", fmt_m(cfg.params_ffn()), ffn / g);
+    println!("{:<28} {:>12} {:>16.3}", "final layernorm", fmt_m(cfg.params_layernorm()), 8.0 * t * d / g);
+    println!("{:<28} {:>12} {:>16.3}", "lm head (tied)", "-", p.head_fwd_flops / g);
+    println!("{:<28} {:>12}", "total params", fmt_m(cfg.params_total()));
+    Ok(())
+}
+
+fn fmt_m(n: usize) -> String {
+    if n >= 1_000_000 {
+        format!("{:.2}M", n as f64 / 1e6)
+    } else if n >= 1000 {
+        format!("{:.1}K", n as f64 / 1e3)
+    } else {
+        format!("{n}")
+    }
+}
+
+fn cmd_info(args: &mut Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    args.finish()?;
+    let m = Manifest::load(&dir).context("run `make artifacts` first")?;
+    println!("artifact variants in {dir}:");
+    for (name, v) in &m.variants {
+        let cfg = m.config(&v.config)?;
+        println!(
+            "  {name:16} config={} l_c={} rank={} (B={}, T={}, d={}, vocab={})",
+            v.config, v.l_c, v.rank, cfg.batch, cfg.seq, cfg.d_model, cfg.vocab
+        );
+    }
+    if m.variants.is_empty() {
+        bail!("no variants found");
+    }
+    Ok(())
+}

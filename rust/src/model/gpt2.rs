@@ -1,0 +1,181 @@
+//! GPT-2 architecture variants.
+//!
+//! `gpt2-s` / `gpt2-m` mirror the published checkpoints and drive the
+//! analytic workload model for every latency experiment; `tiny` /
+//! `micro` are the CPU-trainable variants actually executed through the
+//! AOT artifacts (DESIGN.md §2 records this substitution).
+
+use anyhow::{bail, Result};
+
+/// Architecture hyper-parameters for one GPT-2 variant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Gpt2Config {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// Max sequence length (positions).
+    pub n_ctx: usize,
+}
+
+impl Gpt2Config {
+    pub const fn d_ff(&self) -> usize {
+        4 * self.d_model
+    }
+
+    pub const fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// GPT2-S: 12 layers, d=768 (~124M parameters).
+    pub const fn gpt2_s() -> Gpt2Config {
+        Gpt2Config {
+            name: "gpt2-s",
+            vocab: 50257,
+            d_model: 768,
+            n_layers: 12,
+            n_heads: 12,
+            n_ctx: 1024,
+        }
+    }
+
+    /// GPT2-M: 24 layers, d=1024 (~355M parameters).
+    pub const fn gpt2_m() -> Gpt2Config {
+        Gpt2Config {
+            name: "gpt2-m",
+            vocab: 50257,
+            d_model: 1024,
+            n_layers: 24,
+            n_heads: 16,
+            n_ctx: 1024,
+        }
+    }
+
+    /// The CPU-trainable end-to-end variant (matches python/compile/model.py TINY).
+    pub const fn tiny() -> Gpt2Config {
+        Gpt2Config {
+            name: "tiny",
+            vocab: 256,
+            d_model: 192,
+            n_layers: 6,
+            n_heads: 6,
+            n_ctx: 64,
+        }
+    }
+
+    /// Integration-test variant (matches python MICRO).
+    pub const fn micro() -> Gpt2Config {
+        Gpt2Config {
+            name: "micro",
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            n_ctx: 8,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Result<Gpt2Config> {
+        Ok(match name {
+            "gpt2-s" => Self::gpt2_s(),
+            "gpt2-m" => Self::gpt2_m(),
+            "tiny" => Self::tiny(),
+            "micro" => Self::micro(),
+            _ => bail!("unknown model variant '{name}'"),
+        })
+    }
+
+    // ---- parameter counts (paper Table III column 2) -------------------
+
+    /// Token embedding parameters.
+    pub fn params_token_embedding(&self) -> usize {
+        self.vocab * self.d_model
+    }
+
+    /// Positional encoding parameters.
+    pub fn params_position_encoding(&self) -> usize {
+        self.n_ctx * self.d_model
+    }
+
+    /// One LayerNorm (gain + bias).
+    pub fn params_layernorm(&self) -> usize {
+        2 * self.d_model
+    }
+
+    /// Multi-head attention block: 4 projections + biases.
+    pub fn params_attention(&self) -> usize {
+        4 * self.d_model * self.d_model + 4 * self.d_model
+    }
+
+    /// Feed-forward block: two projections + biases.
+    pub fn params_ffn(&self) -> usize {
+        2 * self.d_model * self.d_ff() + self.d_ff() + self.d_model
+    }
+
+    /// LoRA adapter parameters per rank for ONE projection: r*(d+k) with
+    /// d=k=d_model (paper Sec. V-A).
+    pub fn params_lora_per_rank_per_proj(&self) -> usize {
+        2 * self.d_model
+    }
+
+    /// LoRA parameters per rank per block (adapters on q and v).
+    pub fn params_lora_per_rank_block(&self) -> usize {
+        2 * self.params_lora_per_rank_per_proj()
+    }
+
+    /// Total parameters (tied LM head, as in GPT-2).
+    pub fn params_total(&self) -> usize {
+        self.params_token_embedding()
+            + self.params_position_encoding()
+            + self.n_layers * (2 * self.params_layernorm() + self.params_attention() + self.params_ffn())
+            + self.params_layernorm()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpt2_s_param_counts_match_table_iii() {
+        let c = Gpt2Config::gpt2_s();
+        // Table III: token embedding 38.6M, position encoding 0.786M,
+        // LayerNorm 1.5K, MHA 2.36M, FFN 4.72M, LoRA 1.5K/rank.
+        assert_eq!(c.params_token_embedding(), 50257 * 768); // 38.6M
+        assert!((c.params_token_embedding() as f64 / 1e6 - 38.6).abs() < 0.1);
+        assert_eq!(c.params_position_encoding(), 1024 * 768);
+        assert!((c.params_position_encoding() as f64 / 1e6 - 0.786).abs() < 0.01);
+        assert_eq!(c.params_layernorm(), 1536); // 1.5K
+        assert!((c.params_attention() as f64 / 1e6 - 2.36).abs() < 0.01);
+        assert!((c.params_ffn() as f64 / 1e6 - 4.72).abs() < 0.01);
+        assert_eq!(c.params_lora_per_rank_per_proj(), 1536); // 1.5K
+    }
+
+    #[test]
+    fn gpt2_s_total_is_about_124m() {
+        let c = Gpt2Config::gpt2_s();
+        let total = c.params_total() as f64 / 1e6;
+        assert!((total - 124.0).abs() < 2.0, "total {total}M");
+    }
+
+    #[test]
+    fn variants_resolve_by_name() {
+        for n in ["gpt2-s", "gpt2-m", "tiny", "micro"] {
+            assert_eq!(Gpt2Config::by_name(n).unwrap().name, n);
+        }
+        assert!(Gpt2Config::by_name("nope").is_err());
+    }
+
+    #[test]
+    fn head_divides_model_dim() {
+        for c in [
+            Gpt2Config::gpt2_s(),
+            Gpt2Config::gpt2_m(),
+            Gpt2Config::tiny(),
+            Gpt2Config::micro(),
+        ] {
+            assert_eq!(c.d_head() * c.n_heads, c.d_model);
+        }
+    }
+}

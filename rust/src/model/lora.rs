@@ -1,0 +1,174 @@
+//! Host-side LoRA adapter state: the trainable tensors the coordinator
+//! moves between clients, the main server and the federated server.
+//!
+//! The wire/file format is the artifact convention: named, ordered f32
+//! tensors (see `python/compile/aot.py::write_tensor_file`). FedAvg
+//! (paper Eq. 7) and the SGD updates (Eqs. 5–6) both happen here, on
+//! host buffers — the device only ever sees adapter *values*.
+
+use anyhow::{bail, Result};
+
+/// One named tensor.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(name: &str, shape: &[usize]) -> Tensor {
+        Tensor {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// An ordered set of adapter tensors (client-side or server-side).
+#[derive(Clone, Debug, Default)]
+pub struct AdapterSet {
+    pub tensors: Vec<Tensor>,
+}
+
+impl AdapterSet {
+    /// Total trainable parameter count.
+    pub fn numel(&self) -> usize {
+        self.tensors.iter().map(Tensor::numel).sum()
+    }
+
+    /// Upload volume in bits (the Delta Theta_c the delay model charges).
+    pub fn bits(&self) -> f64 {
+        (self.numel() * 32) as f64
+    }
+
+    /// SGD step: `p <- p - lr * g` (paper Eqs. 5–6). Gradients must be
+    /// in the same tensor order as the parameters.
+    pub fn sgd_step(&mut self, grads: &AdapterSet, lr: f32) -> Result<()> {
+        if grads.tensors.len() != self.tensors.len() {
+            bail!(
+                "gradient set size {} != parameter set size {}",
+                grads.tensors.len(),
+                self.tensors.len()
+            );
+        }
+        for (p, g) in self.tensors.iter_mut().zip(&grads.tensors) {
+            if p.data.len() != g.data.len() {
+                bail!("shape mismatch on '{}'", p.name);
+            }
+            for (pv, gv) in p.data.iter_mut().zip(&g.data) {
+                *pv -= lr * gv;
+            }
+        }
+        Ok(())
+    }
+
+    /// FedAvg (paper Eq. 7): weighted average of client adapter sets,
+    /// weights proportional to local dataset sizes D_k.
+    pub fn fedavg(sets: &[&AdapterSet], weights: &[f64]) -> Result<AdapterSet> {
+        if sets.is_empty() || sets.len() != weights.len() {
+            bail!("fedavg needs matching non-empty sets/weights");
+        }
+        let total: f64 = weights.iter().sum();
+        if total <= 0.0 {
+            bail!("fedavg weights must sum to a positive value");
+        }
+        let mut out = sets[0].clone();
+        for t in &mut out.tensors {
+            t.data.iter_mut().for_each(|v| *v = 0.0);
+        }
+        for (set, &w) in sets.iter().zip(weights) {
+            if set.tensors.len() != out.tensors.len() {
+                bail!("fedavg: tensor count mismatch");
+            }
+            let coef = (w / total) as f32;
+            for (acc, src) in out.tensors.iter_mut().zip(&set.tensors) {
+                if acc.data.len() != src.data.len() {
+                    bail!("fedavg: shape mismatch on '{}'", acc.name);
+                }
+                for (a, s) in acc.data.iter_mut().zip(&src.data) {
+                    *a += coef * s;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// L2 norm over all tensors (metrics / convergence diagnostics).
+    pub fn l2_norm(&self) -> f64 {
+        self.tensors
+            .iter()
+            .flat_map(|t| t.data.iter())
+            .map(|&v| (v as f64) * (v as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set(vals: &[f32]) -> AdapterSet {
+        AdapterSet {
+            tensors: vec![Tensor {
+                name: "a".into(),
+                shape: vec![vals.len()],
+                data: vals.to_vec(),
+            }],
+        }
+    }
+
+    #[test]
+    fn sgd_step_moves_against_gradient() {
+        let mut p = set(&[1.0, 2.0]);
+        let g = set(&[0.5, -1.0]);
+        p.sgd_step(&g, 0.1).unwrap();
+        assert_eq!(p.tensors[0].data, vec![0.95, 2.1]);
+    }
+
+    #[test]
+    fn fedavg_weighted_mean() {
+        let a = set(&[1.0, 0.0]);
+        let b = set(&[0.0, 1.0]);
+        // weights 3:1 -> [0.75, 0.25]
+        let avg = AdapterSet::fedavg(&[&a, &b], &[3.0, 1.0]).unwrap();
+        assert_eq!(avg.tensors[0].data, vec![0.75, 0.25]);
+    }
+
+    #[test]
+    fn fedavg_identity_for_single_client() {
+        let a = set(&[1.5, -2.5]);
+        let avg = AdapterSet::fedavg(&[&a], &[7.0]).unwrap();
+        assert_eq!(avg.tensors[0].data, a.tensors[0].data);
+    }
+
+    #[test]
+    fn fedavg_preserves_consensus() {
+        // all clients equal -> average equals them (any weights)
+        let a = set(&[0.25, 0.5]);
+        let avg = AdapterSet::fedavg(&[&a, &a, &a], &[1.0, 5.0, 2.0]).unwrap();
+        assert_eq!(avg.tensors[0].data, a.tensors[0].data);
+    }
+
+    #[test]
+    fn mismatch_errors() {
+        let mut p = set(&[1.0]);
+        let g = set(&[1.0, 2.0]);
+        assert!(p.sgd_step(&g, 0.1).is_err());
+        assert!(AdapterSet::fedavg(&[], &[]).is_err());
+        assert!(AdapterSet::fedavg(&[&p], &[0.0]).is_err());
+    }
+
+    #[test]
+    fn bits_counts_f32() {
+        let p = set(&[0.0; 10]);
+        assert_eq!(p.bits(), 320.0);
+        assert_eq!(p.numel(), 10);
+    }
+}

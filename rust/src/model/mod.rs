@@ -1,0 +1,11 @@
+//! Model layer: GPT-2 architecture descriptions, the per-layer
+//! FLOPs/bytes workload model the delay analysis consumes (paper
+//! Table III / Section V-A), and host-side LoRA adapter state.
+
+pub mod flops;
+pub mod gpt2;
+pub mod lora;
+
+pub use flops::{LayerWorkload, WorkloadProfile};
+pub use gpt2::Gpt2Config;
+pub use lora::AdapterSet;

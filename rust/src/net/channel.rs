@@ -1,0 +1,94 @@
+//! Average channel gain model: 3GPP-style path loss plus log-normal
+//! shadow fading (paper Sec. VII-A: `128.1 + 37.6 log10(d_km)`, 8 dB
+//! shadowing standard deviation).
+//!
+//! The paper's delay model uses the *average* gain γ(d) per client-
+//! server pair — fading is drawn once per scenario (seeded), matching
+//! the "average channel gain" in Eqs. 9/14 rather than a per-slot
+//! fast-fading process.
+
+use crate::net::power::db_to_linear;
+use crate::util::rng::Rng;
+
+/// Path-loss/shadowing channel model.
+#[derive(Clone, Debug)]
+pub struct ChannelModel {
+    /// Shadow-fading standard deviation in dB (0 disables).
+    pub shadowing_db: f64,
+}
+
+impl ChannelModel {
+    pub fn new(shadowing_db: f64) -> ChannelModel {
+        ChannelModel { shadowing_db }
+    }
+
+    /// Path loss in dB at distance `d_m` meters.
+    pub fn path_loss_db(&self, d_m: f64) -> f64 {
+        let d_km = (d_m / 1000.0).max(1e-6);
+        128.1 + 37.6 * d_km.log10()
+    }
+
+    /// Average linear channel gain γ(d) with a seeded shadowing draw.
+    pub fn gain(&self, d_m: f64, rng: &mut Rng) -> f64 {
+        let shadow = if self.shadowing_db > 0.0 {
+            rng.normal_ms(0.0, self.shadowing_db)
+        } else {
+            0.0
+        };
+        db_to_linear(-(self.path_loss_db(d_m) + shadow))
+    }
+
+    /// Gain without shadowing (deterministic lower-level tests).
+    pub fn gain_deterministic(&self, d_m: f64) -> f64 {
+        db_to_linear(-self.path_loss_db(d_m))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_loss_reference_points() {
+        let m = ChannelModel::new(0.0);
+        // at 1 km the model gives exactly 128.1 dB
+        assert!((m.path_loss_db(1000.0) - 128.1).abs() < 1e-9);
+        // at 100 m: 128.1 - 37.6 = 90.5 dB
+        assert!((m.path_loss_db(100.0) - 90.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gain_monotone_decreasing_in_distance() {
+        let m = ChannelModel::new(0.0);
+        let mut prev = f64::INFINITY;
+        for d in [5.0, 20.0, 100.0, 500.0] {
+            let g = m.gain_deterministic(d);
+            assert!(g < prev);
+            prev = g;
+        }
+    }
+
+    #[test]
+    fn shadowing_is_seeded_and_zero_mean_in_db() {
+        let m = ChannelModel::new(8.0);
+        let g1 = m.gain(100.0, &mut Rng::new(1));
+        let g2 = m.gain(100.0, &mut Rng::new(1));
+        assert_eq!(g1, g2, "same seed, same draw");
+        // sample mean of shadowing in dB ~ 0
+        let mut rng = Rng::new(2);
+        let base = m.path_loss_db(100.0);
+        let n = 20_000;
+        let mean_db: f64 = (0..n)
+            .map(|_| -10.0 * m.gain(100.0, &mut rng).log10() - base)
+            .sum::<f64>()
+            / n as f64;
+        assert!(mean_db.abs() < 0.2, "mean shadow {mean_db} dB");
+    }
+
+    #[test]
+    fn gain_at_100m_matches_hand_calc() {
+        let m = ChannelModel::new(0.0);
+        // PL = 90.5 dB -> gain = 10^-9.05 ≈ 8.91e-10
+        assert!((m.gain_deterministic(100.0) - 8.91e-10).abs() < 0.02e-10);
+    }
+}

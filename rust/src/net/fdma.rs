@@ -1,0 +1,139 @@
+//! FDMA subchannels and Shannon uplink rates (paper Eqs. 9 and 14).
+//!
+//! A [`Link`] is one uplink direction (clients → main server or
+//! clients → federated server): a set of orthogonal subchannels with
+//! bandwidths `B_i`, an antenna-gain product, the noise PSD, and each
+//! client's average channel gain γ(d_k). C1/C2 exclusivity means a
+//! subchannel carries exactly one client, so a client's rate is the sum
+//! over its assigned subchannels (Eq. 9):
+//!
+//! `R_k = Σ_i  B_i · log2(1 + p_i · G · γ_k / σ²)`
+//!
+//! with `p_i` the transmit PSD (W/Hz) on subchannel i.
+
+/// Bandwidths of the orthogonal subchannels of one link.
+#[derive(Clone, Debug)]
+pub struct SubchannelSet {
+    pub bandwidth_hz: Vec<f64>,
+}
+
+impl SubchannelSet {
+    /// Paper setting: total bandwidth equally divided among `m` subchannels.
+    pub fn equal_split(total_hz: f64, m: usize) -> SubchannelSet {
+        assert!(m > 0);
+        SubchannelSet {
+            bandwidth_hz: vec![total_hz / m as f64; m],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bandwidth_hz.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bandwidth_hz.is_empty()
+    }
+
+    pub fn total_hz(&self) -> f64 {
+        self.bandwidth_hz.iter().sum()
+    }
+}
+
+/// One uplink (to the main or federated server).
+#[derive(Clone, Debug)]
+pub struct Link {
+    pub subch: SubchannelSet,
+    /// Antenna gain product G_c·G_s (or G_c·G_f).
+    pub gain_product: f64,
+    /// Noise PSD σ² (W/Hz).
+    pub noise_psd: f64,
+    /// Per-client average channel gain γ(d_k).
+    pub client_gain: Vec<f64>,
+}
+
+impl Link {
+    /// SNR per unit PSD for client k: G·γ_k/σ² (1/(W/Hz)).
+    pub fn snr_coeff(&self, k: usize) -> f64 {
+        self.gain_product * self.client_gain[k] / self.noise_psd
+    }
+
+    /// Rate (bit/s) of client k on subchannel i at transmit PSD `psd` (W/Hz).
+    pub fn subch_rate(&self, k: usize, i: usize, psd: f64) -> f64 {
+        let b = self.subch.bandwidth_hz[i];
+        b * (1.0 + psd * self.snr_coeff(k)).log2()
+    }
+
+    /// Inverse Shannon: the PSD needed for client k to push `rate` bit/s
+    /// through subchannel i. This is the auxiliary-variable substitution
+    /// of Eq. 22 solved for p.
+    pub fn psd_for_rate(&self, k: usize, i: usize, rate: f64) -> f64 {
+        let b = self.subch.bandwidth_hz[i];
+        ((rate / b).exp2() - 1.0) / self.snr_coeff(k)
+    }
+
+    /// Transmit *power* (W) corresponding to PSD `psd` on subchannel i.
+    pub fn power_w(&self, i: usize, psd: f64) -> f64 {
+        psd * self.subch.bandwidth_hz[i]
+    }
+
+    pub fn k(&self) -> usize {
+        self.client_gain.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn link() -> Link {
+        Link {
+            subch: SubchannelSet::equal_split(500e3, 20),
+            gain_product: 160.0,
+            noise_psd: 3.98e-21,
+            client_gain: vec![8.9e-10, 1.2e-9],
+        }
+    }
+
+    #[test]
+    fn equal_split_sums_to_total() {
+        let s = SubchannelSet::equal_split(500e3, 20);
+        assert_eq!(s.len(), 20);
+        assert!((s.total_hz() - 500e3).abs() < 1e-6);
+        assert!((s.bandwidth_hz[0] - 25e3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rate_psd_round_trip() {
+        let l = link();
+        for &rate in &[1e3, 5e4, 2e5, 1e6] {
+            let psd = l.psd_for_rate(0, 3, rate);
+            let back = l.subch_rate(0, 3, psd);
+            assert!((back - rate).abs() / rate < 1e-9, "{rate} -> {back}");
+        }
+    }
+
+    #[test]
+    fn rate_increases_with_psd_and_gain() {
+        let l = link();
+        assert!(l.subch_rate(0, 0, 1e-4) < l.subch_rate(0, 0, 2e-4));
+        // client 1 has the better channel
+        assert!(l.subch_rate(0, 0, 1e-4) < l.subch_rate(1, 0, 1e-4));
+    }
+
+    #[test]
+    fn zero_psd_zero_rate() {
+        let l = link();
+        assert_eq!(l.subch_rate(0, 0, 0.0), 0.0);
+        assert_eq!(l.psd_for_rate(0, 0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn typical_snr_magnitude() {
+        // Table II numbers: PSD from 15 W over 4×25 kHz subchannels
+        let l = link();
+        let psd = 15.0 / (4.0 * 25e3);
+        let se = (1.0 + psd * l.snr_coeff(0)).log2();
+        // spectral efficiency lands in the tens of bit/s/Hz
+        assert!(se > 20.0 && se < 50.0, "spectral efficiency {se}");
+    }
+}

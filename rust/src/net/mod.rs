@@ -1,0 +1,15 @@
+//! Wireless-network substrate (paper Sections III / V, Table II).
+//!
+//! Deterministic simulator of everything the paper's testbed provides
+//! the optimizer: client geometry, average channel gains with path loss
+//! and log-normal shadowing, FDMA subchannels, and Shannon uplink rates
+//! (Eqs. 9 and 14).
+
+pub mod channel;
+pub mod fdma;
+pub mod power;
+pub mod topology;
+
+pub use channel::ChannelModel;
+pub use fdma::{Link, SubchannelSet};
+pub use topology::Topology;

@@ -1,0 +1,59 @@
+//! Power unit conversions: dBm ⇄ watts, PSD helpers.
+//!
+//! The paper quotes powers in dBm (Table II: p_max = 41.76 dBm,
+//! p_th = 46.99 dBm, noise PSD −174 dBm/Hz); the solver works in watts
+//! and W/Hz.
+
+/// dBm to watts.
+pub fn dbm_to_watt(dbm: f64) -> f64 {
+    10f64.powf(dbm / 10.0) * 1e-3
+}
+
+/// Watts to dBm.
+pub fn watt_to_dbm(w: f64) -> f64 {
+    10.0 * (w / 1e-3).log10()
+}
+
+/// dBm/Hz to W/Hz (noise PSD).
+pub fn dbm_per_hz_to_watt_per_hz(dbm_hz: f64) -> f64 {
+    dbm_to_watt(dbm_hz)
+}
+
+/// Decibels to linear ratio.
+pub fn db_to_linear(db: f64) -> f64 {
+    10f64.powf(db / 10.0)
+}
+
+/// Linear ratio to decibels.
+pub fn linear_to_db(lin: f64) -> f64 {
+    10.0 * lin.log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dbm_round_trip() {
+        for dbm in [-174.0, 0.0, 30.0, 41.76, 46.99] {
+            let w = dbm_to_watt(dbm);
+            assert!((watt_to_dbm(w) - dbm).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn table_ii_values() {
+        // 41.76 dBm ≈ 15 W, 46.99 dBm ≈ 50 W, −174 dBm/Hz ≈ 3.98e-21 W/Hz
+        assert!((dbm_to_watt(41.76) - 15.0).abs() < 0.05);
+        assert!((dbm_to_watt(46.99) - 50.0).abs() < 0.15);
+        let n0 = dbm_per_hz_to_watt_per_hz(-174.0);
+        assert!((n0 - 3.98e-21).abs() < 0.02e-21);
+    }
+
+    #[test]
+    fn db_linear_round_trip() {
+        for db in [-20.0, 0.0, 9.03] {
+            assert!((linear_to_db(db_to_linear(db)) - db).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Client/server geometry (paper Sec. VII-A): K clients uniform in a
+//! disk of radius `d_max` centred on the federated server; the main
+//! server sits `d_main` from the centroid.
+
+use crate::util::rng::Rng;
+
+/// One client's placement and draw-dependent radio/compute attributes.
+#[derive(Clone, Debug)]
+pub struct ClientSite {
+    /// Distance to the main server (m).
+    pub d_main_m: f64,
+    /// Distance to the federated server (m).
+    pub d_fed_m: f64,
+    /// Compute capability f_k (cycles/s).
+    pub f_cycles: f64,
+}
+
+/// Scenario geometry.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub clients: Vec<ClientSite>,
+}
+
+impl Topology {
+    /// Sample a scenario: uniform disk placement (radius `d_max_m`),
+    /// main server at (`d_main_m`, 0), uniform f_k in [f_lo, f_hi].
+    pub fn sample(
+        k: usize,
+        d_max_m: f64,
+        d_main_m: f64,
+        f_lo: f64,
+        f_hi: f64,
+        rng: &mut Rng,
+    ) -> Topology {
+        let mut clients = Vec::with_capacity(k);
+        for _ in 0..k {
+            // uniform over the disk: r = R*sqrt(u)
+            let r = d_max_m * rng.f64().sqrt();
+            let theta = rng.range(0.0, 2.0 * std::f64::consts::PI);
+            let (x, y) = (r * theta.cos(), r * theta.sin());
+            let d_fed = (x * x + y * y).sqrt().max(1.0); // fed server at origin
+            let dx = x - d_main_m;
+            let d_main = (dx * dx + y * y).sqrt().max(1.0);
+            clients.push(ClientSite {
+                d_main_m: d_main,
+                d_fed_m: d_fed,
+                f_cycles: rng.range(f_lo, f_hi),
+            });
+        }
+        Topology { clients }
+    }
+
+    pub fn k(&self) -> usize {
+        self.clients.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_within_bounds() {
+        let mut rng = Rng::new(1);
+        let t = Topology::sample(200, 20.0, 100.0, 1.0e9, 1.6e9, &mut rng);
+        for c in &t.clients {
+            assert!(c.d_fed_m <= 20.0 + 1e-9);
+            // main server 100 m away: distance within [80, 120]
+            assert!(c.d_main_m >= 79.0 && c.d_main_m <= 121.0);
+            assert!(c.f_cycles >= 1.0e9 && c.f_cycles <= 1.6e9);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = Topology::sample(5, 20.0, 100.0, 1e9, 1.6e9, &mut Rng::new(3));
+        let b = Topology::sample(5, 20.0, 100.0, 1e9, 1.6e9, &mut Rng::new(3));
+        for (x, y) in a.clients.iter().zip(&b.clients) {
+            assert_eq!(x.d_main_m, y.d_main_m);
+            assert_eq!(x.f_cycles, y.f_cycles);
+        }
+    }
+
+    #[test]
+    fn disk_sampling_is_area_uniform() {
+        // fraction of clients within r < R/2 should be ~1/4
+        let mut rng = Rng::new(9);
+        let t = Topology::sample(20_000, 20.0, 100.0, 1e9, 1.6e9, &mut rng);
+        let inner = t.clients.iter().filter(|c| c.d_fed_m < 10.0).count();
+        let frac = inner as f64 / t.k() as f64;
+        assert!((frac - 0.25).abs() < 0.02, "frac {frac}");
+    }
+}

@@ -1,0 +1,299 @@
+//! P1 — greedy subchannel assignment (paper Algorithm 2).
+//!
+//! Phase 1 guarantees every client at least one subchannel on each
+//! link, pairing the *weakest* client (lowest f_k on the main link,
+//! farthest d_k^f on the fed link) with the *widest* remaining
+//! subchannel. Phase 2 repeatedly gives the widest remaining subchannel
+//! to the current straggler — the client with the largest
+//! `T_k^F + T_k^s` (main link) or `T_k^f` (fed link) — skipping clients
+//! whose power caps C4/C5 a further subchannel would violate at the
+//! current PSD.
+//!
+//! During assignment the rates are evaluated at a *nominal* PSD (the
+//! per-link total budget spread uniformly over the whole band); the
+//! exact PSDs are re-optimized right after by [`super::power`], matching
+//! the BCD ordering of Algorithm 3.
+
+use crate::delay::Scenario;
+use crate::net::Link;
+
+/// Assignment produced by Algorithm 2 for both links.
+#[derive(Clone, Debug)]
+pub struct AssignmentResult {
+    pub assign_main: Vec<Vec<usize>>,
+    pub assign_fed: Vec<Vec<usize>>,
+    /// Nominal PSDs used during the greedy evaluation (useful as a
+    /// starting point before the exact P2 solve).
+    pub psd_main_nominal: f64,
+    pub psd_fed_nominal: f64,
+}
+
+/// Sort subchannel ids by bandwidth, widest first (ties by id for
+/// determinism).
+fn widest_first(link: &Link) -> Vec<usize> {
+    let mut ids: Vec<usize> = (0..link.subch.len()).collect();
+    ids.sort_by(|&a, &b| {
+        link.subch.bandwidth_hz[b]
+            .partial_cmp(&link.subch.bandwidth_hz[a])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    ids
+}
+
+/// One link's greedy pass. `initial_priority` ranks clients for phase 1
+/// (largest value served first); `stage_delay` evaluates the phase-2
+/// straggler metric for a client given its current subchannel set.
+fn greedy_link<FP, FD>(
+    link: &Link,
+    k_n: usize,
+    psd_nominal: f64,
+    p_max_w: f64,
+    p_th_w: f64,
+    initial_priority: FP,
+    stage_delay: FD,
+) -> Vec<Vec<usize>>
+where
+    FP: Fn(usize) -> f64,
+    FD: Fn(usize, &[usize]) -> f64,
+{
+    let mut assign: Vec<Vec<usize>> = vec![Vec::new(); k_n];
+    let mut remaining = widest_first(link);
+    remaining.reverse(); // pop() takes the widest
+
+    // Phase 1: weakest client first, widest subchannel each.
+    let mut order: Vec<usize> = (0..k_n).collect();
+    order.sort_by(|&a, &b| {
+        initial_priority(b)
+            .partial_cmp(&initial_priority(a))
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    for &k in &order {
+        if let Some(ch) = remaining.pop() {
+            assign[k].push(ch);
+        }
+    }
+
+    // Phase 2: widest remaining subchannel to the current straggler,
+    // respecting C4 (per-client) and C5 (per-link total) at the nominal PSD.
+    let client_power = |subs: &[usize]| -> f64 {
+        subs.iter().map(|&i| link.power_w(i, psd_nominal)).sum()
+    };
+    let mut eligible: Vec<bool> = vec![true; k_n];
+    while let Some(ch) = remaining.pop() {
+        let add_power = link.power_w(ch, psd_nominal);
+        loop {
+            // straggler among eligible clients
+            let mut best: Option<(usize, f64)> = None;
+            for k in 0..k_n {
+                if !eligible[k] {
+                    continue;
+                }
+                let d = stage_delay(k, &assign[k]);
+                if best.map(|(_, bd)| d > bd).unwrap_or(true) {
+                    best = Some((k, d));
+                }
+            }
+            let Some((k, _)) = best else {
+                // all clients capped: spread the rest round-robin; the
+                // exact P2 solve will de-rate the PSDs anyway.
+                let k = ch % k_n;
+                assign[k].push(ch);
+                break;
+            };
+            let total: f64 = assign.iter().map(|s| client_power(s)).sum();
+            if client_power(&assign[k]) + add_power > p_max_w
+                || total + add_power > p_th_w
+            {
+                eligible[k] = false; // C4/C5 would break: drop from A
+                continue;
+            }
+            assign[k].push(ch);
+            break;
+        }
+    }
+    assign
+}
+
+/// Algorithm 2 over both links for the current (l_c, rank).
+pub fn algorithm2(scn: &Scenario, l_c: usize, rank: usize) -> AssignmentResult {
+    let k_n = scn.k();
+    let b = scn.batch as f64;
+
+    let psd_main_nominal = scn.p_th_main_w / scn.main_link.subch.total_hz();
+    let psd_fed_nominal = scn.p_th_fed_w / scn.fed_link.subch.total_hz();
+
+    // ---- main link: straggler metric T_k^F + T_k^s ----------------------
+    let act_bits = b * scn.profile.activation_bits(l_c);
+    let fwd_delay: Vec<f64> = (0..k_n)
+        .map(|k| {
+            b * scn.kappa_client * scn.profile.client_fwd_flops(l_c, rank)
+                / scn.topo.clients[k].f_cycles
+        })
+        .collect();
+    let main = {
+        let link = &scn.main_link;
+        greedy_link(
+            link,
+            k_n,
+            psd_main_nominal,
+            scn.p_max_w,
+            scn.p_th_main_w,
+            // phase 1: weakest compute first (arg min f_k == arg max -f_k)
+            |k| -scn.topo.clients[k].f_cycles,
+            |k, subs| {
+                let rate: f64 = subs.iter().map(|&i| link.subch_rate(k, i, psd_main_nominal)).sum();
+                if rate <= 0.0 {
+                    f64::INFINITY
+                } else {
+                    fwd_delay[k] + act_bits / rate
+                }
+            },
+        )
+    };
+
+    // ---- fed link: straggler metric T_k^f --------------------------------
+    let adapter_bits = scn.profile.client_adapter_bits(l_c, rank);
+    let fed = {
+        let link = &scn.fed_link;
+        greedy_link(
+            link,
+            k_n,
+            psd_fed_nominal,
+            scn.p_max_w,
+            scn.p_th_fed_w,
+            // phase 1: farthest client first (worst channel to fed server)
+            |k| scn.topo.clients[k].d_fed_m,
+            |k, subs| {
+                let rate: f64 = subs.iter().map(|&i| link.subch_rate(k, i, psd_fed_nominal)).sum();
+                if rate <= 0.0 {
+                    f64::INFINITY
+                } else {
+                    adapter_bits / rate
+                }
+            },
+        )
+    };
+
+    AssignmentResult {
+        assign_main: main,
+        assign_fed: fed,
+        psd_main_nominal,
+        psd_fed_nominal,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Gpt2Config, WorkloadProfile};
+    use crate::net::topology::ClientSite;
+    use crate::net::{ChannelModel, SubchannelSet, Topology};
+
+    fn scenario(k: usize, m: usize, n: usize) -> Scenario {
+        let topo = Topology {
+            clients: (0..k)
+                .map(|i| ClientSite {
+                    d_main_m: 95.0 + 5.0 * i as f64,
+                    d_fed_m: 5.0 + 3.0 * i as f64,
+                    f_cycles: 1.0e9 + 0.15e9 * i as f64,
+                })
+                .collect(),
+        };
+        let ch = ChannelModel::new(0.0);
+        let main_link = crate::net::Link {
+            subch: SubchannelSet::equal_split(500e3, m),
+            gain_product: 160.0,
+            noise_psd: 3.98e-21,
+            client_gain: topo.clients.iter().map(|c| ch.gain_deterministic(c.d_main_m)).collect(),
+        };
+        let fed_link = crate::net::Link {
+            subch: SubchannelSet::equal_split(500e3, n),
+            gain_product: 80.0,
+            noise_psd: 3.98e-21,
+            client_gain: topo.clients.iter().map(|c| ch.gain_deterministic(c.d_fed_m)).collect(),
+        };
+        Scenario {
+            profile: WorkloadProfile::new(Gpt2Config::gpt2_s(), 512),
+            topo,
+            main_link,
+            fed_link,
+            kappa_client: 1.0 / 1024.0,
+            kappa_server: 1.0 / 32768.0,
+            f_server: 5e9,
+            batch: 16,
+            local_steps: 12,
+            p_max_w: 15.0,
+            p_th_main_w: 50.0,
+            p_th_fed_w: 50.0,
+        }
+    }
+
+    #[test]
+    fn every_subchannel_assigned_exactly_once() {
+        let scn = scenario(5, 20, 20);
+        let r = algorithm2(&scn, 2, 4);
+        let mut alloc = crate::delay::Allocation {
+            assign_main: r.assign_main,
+            assign_fed: r.assign_fed,
+            psd_main: vec![0.0; 20],
+            psd_fed: vec![0.0; 20],
+            l_c: 2,
+            rank: 4,
+        };
+        alloc.psd_main.iter_mut().for_each(|p| *p = r.psd_main_nominal);
+        alloc.psd_fed.iter_mut().for_each(|p| *p = r.psd_fed_nominal);
+        alloc.validate(20, 20).unwrap();
+    }
+
+    #[test]
+    fn every_client_gets_at_least_one_subchannel() {
+        let scn = scenario(5, 20, 20);
+        let r = algorithm2(&scn, 2, 4);
+        for k in 0..5 {
+            assert!(!r.assign_main[k].is_empty(), "client {k} main");
+            assert!(!r.assign_fed[k].is_empty(), "client {k} fed");
+        }
+    }
+
+    #[test]
+    fn weakest_client_gets_more_main_subchannels() {
+        // client 0 has the lowest f_k and the best main channel distance
+        // tie goes to compute: the straggler should end up with >= the
+        // fastest client's subchannel count.
+        let scn = scenario(5, 20, 20);
+        let r = algorithm2(&scn, 2, 4);
+        assert!(
+            r.assign_main[0].len() >= r.assign_main[4].len(),
+            "straggler {} vs fastest {}",
+            r.assign_main[0].len(),
+            r.assign_main[4].len()
+        );
+    }
+
+    #[test]
+    fn more_clients_than_subchannels_is_handled() {
+        let scn = scenario(6, 4, 4);
+        let r = algorithm2(&scn, 2, 4);
+        // only 4 subchannels: phase 1 serves the 4 weakest; no dupes
+        let all: Vec<usize> = r.assign_main.iter().flatten().copied().collect();
+        let mut sorted = all.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), all.len());
+        assert_eq!(all.len(), 4);
+    }
+
+    #[test]
+    fn balances_straggler_delay() {
+        // with equal compute, the client with the worse channel should
+        // get at least as many main subchannels
+        let mut scn = scenario(2, 10, 10);
+        scn.topo.clients[0].f_cycles = 1.2e9;
+        scn.topo.clients[1].f_cycles = 1.2e9;
+        scn.main_link.client_gain[1] /= 8.0; // much worse channel
+        let r = algorithm2(&scn, 2, 4);
+        assert!(r.assign_main[1].len() >= r.assign_main[0].len());
+    }
+}

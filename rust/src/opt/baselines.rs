@@ -1,0 +1,238 @@
+//! Baselines a–d from the paper's evaluation (Sec. VII-C).
+//!
+//! * **a** — random subchannel assignment and PSD, random rank and
+//!   split location;
+//! * **b** — random subchannels and PSD; *proposed* rank and split
+//!   selection;
+//! * **c** — random split; proposed subchannel, power and rank;
+//! * **d** — proposed subchannel, power and split; random rank.
+//!
+//! Random draws are seeded; random PSDs are scaled into the power
+//! budgets (C4/C5) so every baseline is feasible, and random
+//! assignments still give each client at least one subchannel per link
+//! (otherwise its delay is unboundedly infinite and the comparison
+//! collapses to a degenerate case the paper clearly doesn't plot).
+
+use anyhow::Result;
+
+use crate::delay::{Allocation, ConvergenceModel, Scenario};
+use crate::opt::bcd::{self, BcdOptions};
+use crate::opt::{power, rank, split};
+use crate::util::rng::Rng;
+
+/// Random assignment: first a random 1-per-client pass, then uniform.
+fn random_assignment(k_n: usize, m: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    let mut assign = vec![Vec::new(); k_n];
+    let mut chans: Vec<usize> = (0..m).collect();
+    rng.shuffle(&mut chans);
+    for (slot, &ch) in chans.iter().enumerate() {
+        if slot < k_n && slot < m {
+            assign[slot].push(ch);
+        } else {
+            assign[rng.below(k_n)].push(ch);
+        }
+    }
+    assign
+}
+
+/// Random PSDs uniform in (0, nominal], then scaled into C4/C5.
+fn random_psd(len: usize, nominal: f64, rng: &mut Rng) -> Vec<f64> {
+    (0..len).map(|_| nominal * rng.range(0.1, 1.0)).collect()
+}
+
+fn random_alloc(scn: &Scenario, ranks: &[usize], rng: &mut Rng) -> Allocation {
+    let m = scn.main_link.subch.len();
+    let n = scn.fed_link.subch.len();
+    let l = scn.profile.blocks.len();
+    let mut alloc = Allocation {
+        assign_main: random_assignment(scn.k(), m, rng),
+        assign_fed: random_assignment(scn.k(), n, rng),
+        psd_main: random_psd(m, scn.p_th_main_w / scn.main_link.subch.total_hz(), rng),
+        psd_fed: random_psd(n, scn.p_th_fed_w / scn.fed_link.subch.total_hz(), rng),
+        l_c: 1 + rng.below(l.saturating_sub(1).max(1)),
+        rank: *rng.choose(ranks),
+    };
+    bcd::scale_into_budget(scn, &mut alloc);
+    alloc
+}
+
+/// Baseline a: everything random.
+pub fn baseline_a(
+    scn: &Scenario,
+    conv: &ConvergenceModel,
+    ranks: &[usize],
+    rng: &mut Rng,
+) -> (Allocation, f64) {
+    let alloc = random_alloc(scn, ranks, rng);
+    let t = scn.total_delay(&alloc, conv);
+    (alloc, t)
+}
+
+/// Baseline b: random subchannels + PSD; proposed (exhaustive joint)
+/// rank and split under that fixed communication configuration.
+pub fn baseline_b(
+    scn: &Scenario,
+    conv: &ConvergenceModel,
+    ranks: &[usize],
+    rng: &mut Rng,
+) -> (Allocation, f64) {
+    let mut alloc = random_alloc(scn, ranks, rng);
+    // alternate the two exhaustive searches to a fixed point (<= L*R evals)
+    for _ in 0..4 {
+        let (l, _) = split::best_split(scn, &alloc, conv);
+        alloc.l_c = l;
+        let (r, _) = rank::best_rank(scn, &alloc, conv, ranks);
+        if r == alloc.rank {
+            break;
+        }
+        alloc.rank = r;
+    }
+    let t = scn.total_delay(&alloc, conv);
+    (alloc, t)
+}
+
+/// Baseline c: random split; proposed subchannel/power/rank via BCD
+/// with the split frozen.
+pub fn baseline_c(
+    scn: &Scenario,
+    conv: &ConvergenceModel,
+    ranks: &[usize],
+    rng: &mut Rng,
+) -> Result<(Allocation, f64)> {
+    let l = scn.profile.blocks.len();
+    let frozen_l_c = 1 + rng.below(l.saturating_sub(1).max(1));
+    let mut alloc = bcd::initial_alloc(scn, frozen_l_c, 4);
+    let mut obj = scn.total_delay(&alloc, conv);
+    for _ in 0..8 {
+        let prev = obj;
+        let a = crate::opt::assignment::algorithm2(scn, alloc.l_c, alloc.rank);
+        let mut cand = alloc.clone();
+        cand.assign_main = a.assign_main;
+        cand.assign_fed = a.assign_fed;
+        let ps = power::solve_power(scn, &cand)?;
+        cand.psd_main = ps.psd_main;
+        cand.psd_fed = ps.psd_fed;
+        let o = scn.total_delay(&cand, conv);
+        if o <= obj {
+            alloc = cand;
+            obj = o;
+        }
+        let (r, t_r) = rank::best_rank(scn, &alloc, conv, ranks);
+        if t_r <= obj {
+            alloc.rank = r;
+            obj = t_r;
+        }
+        if (prev - obj).abs() < 1e-9 {
+            break;
+        }
+    }
+    Ok((alloc, obj))
+}
+
+/// Baseline d: proposed subchannel/power/split via BCD, random rank.
+pub fn baseline_d(
+    scn: &Scenario,
+    conv: &ConvergenceModel,
+    ranks: &[usize],
+    rng: &mut Rng,
+) -> Result<(Allocation, f64)> {
+    let frozen_rank = *rng.choose(ranks);
+    let mut alloc = bcd::initial_alloc(scn, (scn.profile.blocks.len() / 2).max(1), frozen_rank);
+    let mut obj = scn.total_delay(&alloc, conv);
+    for _ in 0..8 {
+        let prev = obj;
+        let a = crate::opt::assignment::algorithm2(scn, alloc.l_c, alloc.rank);
+        let mut cand = alloc.clone();
+        cand.assign_main = a.assign_main;
+        cand.assign_fed = a.assign_fed;
+        let ps = power::solve_power(scn, &cand)?;
+        cand.psd_main = ps.psd_main;
+        cand.psd_fed = ps.psd_fed;
+        let o = scn.total_delay(&cand, conv);
+        if o <= obj {
+            alloc = cand;
+            obj = o;
+        }
+        let (l_c, t_s) = split::best_split(scn, &alloc, conv);
+        if t_s <= obj {
+            alloc.l_c = l_c;
+            obj = t_s;
+        }
+        if (prev - obj).abs() < 1e-9 {
+            break;
+        }
+    }
+    Ok((alloc, obj))
+}
+
+/// Run the proposed scheme plus all four baselines; returns
+/// `(proposed, a, b, c, d)` objectives, averaging the random baselines
+/// over `draws` seeded repetitions.
+pub fn compare_all(
+    scn: &Scenario,
+    conv: &ConvergenceModel,
+    ranks: &[usize],
+    seed: u64,
+    draws: usize,
+) -> Result<[f64; 5]> {
+    let opts = BcdOptions {
+        ranks: ranks.to_vec(),
+        ..BcdOptions::default()
+    };
+    let proposed = bcd::optimize(scn, conv, &opts)?.objective;
+    let mut acc = [0.0f64; 4];
+    for d in 0..draws {
+        let mut rng = Rng::new(seed ^ (d as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        acc[0] += baseline_a(scn, conv, ranks, &mut rng).1;
+        acc[1] += baseline_b(scn, conv, ranks, &mut rng).1;
+        acc[2] += baseline_c(scn, conv, ranks, &mut rng)?.1;
+        acc[3] += baseline_d(scn, conv, ranks, &mut rng)?.1;
+    }
+    let n = draws.max(1) as f64;
+    Ok([proposed, acc[0] / n, acc[1] / n, acc[2] / n, acc[3] / n])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delay::testutil::toy_scenario;
+
+    const RANKS: [usize; 5] = [1, 2, 4, 6, 8];
+
+    #[test]
+    fn all_baselines_feasible() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let mut rng = Rng::new(1);
+        let (a, _) = baseline_a(&scn, &conv, &RANKS, &mut rng);
+        let (b, _) = baseline_b(&scn, &conv, &RANKS, &mut rng);
+        let (c, _) = baseline_c(&scn, &conv, &RANKS, &mut rng).unwrap();
+        let (d, _) = baseline_d(&scn, &conv, &RANKS, &mut rng).unwrap();
+        for (name, alloc) in [("a", &a), ("b", &b), ("c", &c), ("d", &d)] {
+            alloc
+                .validate(scn.main_link.subch.len(), scn.fed_link.subch.len())
+                .unwrap_or_else(|e| panic!("baseline {name}: {e}"));
+            assert!(scn.power_feasible(alloc, 1e-6), "baseline {name} power");
+        }
+    }
+
+    #[test]
+    fn proposed_beats_every_baseline() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let [p, a, b, c, d] = compare_all(&scn, &conv, &RANKS, 7, 3).unwrap();
+        assert!(p <= a && p <= b && p <= c && p <= d, "p={p} a={a} b={b} c={c} d={d}");
+    }
+
+    #[test]
+    fn partial_optimization_helps() {
+        // each partially-optimized baseline should beat fully-random (a)
+        // on average over draws
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let [_, a, b, c, d] = compare_all(&scn, &conv, &RANKS, 3, 5).unwrap();
+        assert!(b <= a * 1.05, "b={b} vs a={a}");
+        assert!(c <= a * 1.05, "c={c} vs a={a}");
+        assert!(d <= a * 1.05, "d={d} vs a={a}");
+    }
+}

@@ -1,0 +1,223 @@
+//! Algorithm 3 — BCD over the four subproblems P1–P4.
+//!
+//! Each outer iteration alternates: greedy subchannel assignment
+//! (Algorithm 2), exact convex power control (P2), exhaustive split
+//! search (P3), exhaustive rank search (P4). The paper notes the
+//! mixed-integer problem has no formal convergence guarantee; we add
+//! the standard safeguard of only *accepting* an
+//! assignment/power block if it does not worsen the objective, which
+//! makes the trajectory monotonically non-increasing (asserted by the
+//! property tests) while preserving the paper's update order.
+
+use anyhow::Result;
+
+use crate::delay::{Allocation, ConvergenceModel, Scenario};
+use crate::opt::{assignment, power, rank, split};
+
+/// Options for the BCD loop.
+#[derive(Clone, Debug)]
+pub struct BcdOptions {
+    /// Convergence tolerance ε on the objective.
+    pub eps: f64,
+    /// Maximum outer iterations τ_max.
+    pub max_iter: usize,
+    /// Candidate LoRA ranks for P4.
+    pub ranks: Vec<usize>,
+    /// Initial split point and rank.
+    pub init_l_c: usize,
+    pub init_rank: usize,
+}
+
+impl Default for BcdOptions {
+    fn default() -> Self {
+        BcdOptions {
+            eps: 1e-6,
+            max_iter: 20,
+            ranks: vec![1, 2, 4, 6, 8],
+            init_l_c: 0, // 0 = pick the middle of the model
+            init_rank: 4,
+        }
+    }
+}
+
+/// Output of [`optimize`].
+#[derive(Clone, Debug)]
+pub struct BcdResult {
+    pub alloc: Allocation,
+    /// Final objective: total training delay T (Eq. 17), seconds.
+    pub objective: f64,
+    /// Objective after every outer iteration (monotone non-increasing).
+    pub trajectory: Vec<f64>,
+    pub iterations: usize,
+}
+
+/// Build a feasible initial allocation: Algorithm 2 assignment at the
+/// nominal PSD, scaled into the power budgets.
+pub fn initial_alloc(scn: &Scenario, l_c: usize, rnk: usize) -> Allocation {
+    let a = assignment::algorithm2(scn, l_c, rnk);
+    let mut alloc = Allocation {
+        assign_main: a.assign_main,
+        assign_fed: a.assign_fed,
+        psd_main: vec![a.psd_main_nominal; scn.main_link.subch.len()],
+        psd_fed: vec![a.psd_fed_nominal; scn.fed_link.subch.len()],
+        l_c,
+        rank: rnk,
+    };
+    scale_into_budget(scn, &mut alloc);
+    alloc
+}
+
+/// Uniformly scale PSDs down until C4/C5 hold (used for nominal and
+/// random allocations; never scales up).
+pub fn scale_into_budget(scn: &Scenario, alloc: &mut Allocation) {
+    let mut worst: f64 = 1.0;
+    let mut tot_main = 0.0;
+    let mut tot_fed = 0.0;
+    for k in 0..scn.k() {
+        let pm = scn.power_main(alloc, k);
+        let pf = scn.power_fed(alloc, k);
+        if pm > 0.0 {
+            worst = worst.max(pm / scn.p_max_w);
+        }
+        if pf > 0.0 {
+            worst = worst.max(pf / scn.p_max_w);
+        }
+        tot_main += pm;
+        tot_fed += pf;
+    }
+    if tot_main > 0.0 {
+        worst = worst.max(tot_main / scn.p_th_main_w);
+    }
+    if tot_fed > 0.0 {
+        worst = worst.max(tot_fed / scn.p_th_fed_w);
+    }
+    if worst > 1.0 {
+        let s = 1.0 / worst;
+        alloc.psd_main.iter_mut().for_each(|p| *p *= s);
+        alloc.psd_fed.iter_mut().for_each(|p| *p *= s);
+    }
+}
+
+/// Algorithm 3: alternate P1–P4 until |ΔT| ≤ ε or τ_max.
+pub fn optimize(scn: &Scenario, conv: &ConvergenceModel, opts: &BcdOptions) -> Result<BcdResult> {
+    let init_l_c = if opts.init_l_c == 0 {
+        (scn.profile.blocks.len() / 2).max(1)
+    } else {
+        opts.init_l_c
+    };
+    let mut alloc = initial_alloc(scn, init_l_c, opts.init_rank);
+    let mut obj = scn.total_delay(&alloc, conv);
+    let mut trajectory = vec![obj];
+    let mut iters = 0;
+
+    for _ in 0..opts.max_iter {
+        iters += 1;
+        let prev_obj = obj;
+
+        // --- P1 + P2: assignment then exact power, accepted only if
+        // they do not worsen the objective (BCD safeguard).
+        let mut cand = alloc.clone();
+        let a = assignment::algorithm2(scn, cand.l_c, cand.rank);
+        cand.assign_main = a.assign_main;
+        cand.assign_fed = a.assign_fed;
+        let ps = power::solve_power(scn, &cand)?;
+        cand.psd_main = ps.psd_main;
+        cand.psd_fed = ps.psd_fed;
+        let cand_obj = scn.total_delay(&cand, conv);
+        if cand_obj <= obj {
+            alloc = cand;
+            obj = cand_obj;
+        } else {
+            // keep assignment fixed, still re-solve power exactly for the
+            // current assignment (never hurts: P2 is exact)
+            let ps = power::solve_power(scn, &alloc)?;
+            let mut cand2 = alloc.clone();
+            cand2.psd_main = ps.psd_main;
+            cand2.psd_fed = ps.psd_fed;
+            let o2 = scn.total_delay(&cand2, conv);
+            if o2 <= obj {
+                alloc = cand2;
+                obj = o2;
+            }
+        }
+
+        // --- P3: split (exhaustive argmin includes the incumbent).
+        let (l_star, t_split) = split::best_split(scn, &alloc, conv);
+        if t_split <= obj {
+            alloc.l_c = l_star;
+            obj = t_split;
+        }
+
+        // --- P4: rank.
+        let (r_star, t_rank) = rank::best_rank(scn, &alloc, conv, &opts.ranks);
+        if t_rank <= obj {
+            alloc.rank = r_star;
+            obj = t_rank;
+        }
+
+        trajectory.push(obj);
+        if (prev_obj - obj).abs() <= opts.eps {
+            break;
+        }
+    }
+
+    Ok(BcdResult {
+        alloc,
+        objective: obj,
+        trajectory,
+        iterations: iters,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delay::testutil::toy_scenario;
+
+    #[test]
+    fn trajectory_is_monotone_nonincreasing() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let res = optimize(&scn, &conv, &BcdOptions::default()).unwrap();
+        for w in res.trajectory.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "trajectory rose: {:?}", res.trajectory);
+        }
+        assert!(res.objective.is_finite() && res.objective > 0.0);
+    }
+
+    #[test]
+    fn final_alloc_is_valid_and_feasible() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let res = optimize(&scn, &conv, &BcdOptions::default()).unwrap();
+        res.alloc
+            .validate(scn.main_link.subch.len(), scn.fed_link.subch.len())
+            .unwrap();
+        assert!(scn.power_feasible(&res.alloc, 1e-6));
+        assert!(scn.profile.split_candidates().contains(&res.alloc.l_c));
+        assert!([1, 2, 4, 6, 8].contains(&res.alloc.rank));
+    }
+
+    #[test]
+    fn beats_naive_initial_allocation() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let init = initial_alloc(&scn, 6, 4);
+        let t_init = scn.total_delay(&init, &conv);
+        let res = optimize(&scn, &conv, &BcdOptions::default()).unwrap();
+        assert!(res.objective <= t_init + 1e-9);
+    }
+
+    #[test]
+    fn converges_within_max_iter() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let res = optimize(&scn, &conv, &BcdOptions::default()).unwrap();
+        assert!(res.iterations <= 20);
+        // last two objective values within eps
+        let n = res.trajectory.len();
+        if n >= 2 {
+            assert!((res.trajectory[n - 1] - res.trajectory[n - 2]).abs() <= 1e-6 + 1e-12);
+        }
+    }
+}

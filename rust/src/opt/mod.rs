@@ -1,0 +1,24 @@
+//! Section VI: the joint resource-allocation optimizer.
+//!
+//! Problem P (Eq. 18) — minimize total training delay over subchannel
+//! assignment r^s/r^f, transmit PSD p^s/p^f, split point μ, and LoRA
+//! rank r — decomposed exactly as the paper does:
+//!
+//! * [`assignment`] — P1 via the greedy heuristic (Algorithm 2);
+//! * [`power`] — P2, the convex power-control subproblem, solved
+//!   *exactly* by bisection on the epigraph delay + per-client KKT
+//!   water-filling (no external solver needed; see module docs);
+//! * [`split`] — P3, exhaustive search over split points;
+//! * [`rank`] — P4, exhaustive search over candidate ranks;
+//! * [`bcd`] — Algorithm 3, the alternating (block-coordinate-descent)
+//!   loop over the four subproblems;
+//! * [`baselines`] — baselines a–d from Section VII-C.
+
+pub mod assignment;
+pub mod baselines;
+pub mod bcd;
+pub mod power;
+pub mod rank;
+pub mod split;
+
+pub use bcd::{BcdOptions, BcdResult};

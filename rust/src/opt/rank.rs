@@ -1,0 +1,78 @@
+//! P4 — LoRA rank selection by exhaustive search (paper Eq. 26).
+//!
+//! The rank trades per-round cost (compute Δρ/Δϖ, federated upload
+//! ΔΘ_c) against convergence speed E(r); with everything else fixed the
+//! candidate set is small ({1, 2, 4, 6, 8} in the paper), so exhaustive
+//! evaluation of Eq. 17 is exact.
+
+use crate::delay::{Allocation, ConvergenceModel, Scenario};
+
+/// Returns (best rank, its total delay) over `candidates`.
+pub fn best_rank(
+    scn: &Scenario,
+    alloc: &Allocation,
+    conv: &ConvergenceModel,
+    candidates: &[usize],
+) -> (usize, f64) {
+    assert!(!candidates.is_empty());
+    let mut best = (candidates[0], f64::INFINITY);
+    for &r in candidates {
+        let mut cand = alloc.clone();
+        cand.rank = r;
+        let t = scn.total_delay(&cand, conv);
+        if t < best.1 {
+            best = (r, t);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delay::testutil::toy_scenario;
+
+    fn base_alloc() -> Allocation {
+        Allocation {
+            assign_main: vec![vec![0, 1], vec![2, 3]],
+            assign_fed: vec![vec![0], vec![1]],
+            psd_main: vec![5e-5; 4],
+            psd_fed: vec![5e-5; 2],
+            l_c: 3,
+            rank: 1,
+        }
+    }
+
+    #[test]
+    fn exhaustive_is_argmin() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let alloc = base_alloc();
+        let cands = [1, 2, 4, 6, 8];
+        let (r_star, t_star) = best_rank(&scn, &alloc, &conv, &cands);
+        for &r in &cands {
+            let mut cand = alloc.clone();
+            cand.rank = r;
+            assert!(scn.total_delay(&cand, &conv) >= t_star - 1e-12);
+        }
+        assert!(cands.contains(&r_star));
+    }
+
+    #[test]
+    fn flat_convergence_prefers_smallest_rank() {
+        // if E(r) is constant, extra rank only costs -> rank 1 wins
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::fitted(10.0, 0.0, 1.0);
+        let (r_star, _) = best_rank(&scn, &base_alloc(), &conv, &[1, 2, 4, 6, 8]);
+        assert_eq!(r_star, 1);
+    }
+
+    #[test]
+    fn steep_convergence_prefers_larger_rank() {
+        // if E(r) falls sharply with rank, a larger rank wins
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::fitted(5.0, 50.0, 2.0);
+        let (r_star, _) = best_rank(&scn, &base_alloc(), &conv, &[1, 2, 4, 6, 8]);
+        assert!(r_star >= 4, "rank {r_star}");
+    }
+}

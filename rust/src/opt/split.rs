@@ -1,0 +1,81 @@
+//! P3 — split-point selection by exhaustive search (paper Eq. 25).
+//!
+//! With assignment, PSDs and rank held fixed, evaluate the total delay
+//! (Eq. 17) at every admissible split prefix and keep the argmin. The
+//! candidate count equals the block count, so exhaustive search is
+//! exact and cheap — precisely the paper's argument.
+
+use crate::delay::{Allocation, ConvergenceModel, Scenario};
+
+/// Returns (best l_c, its total delay). Ties resolve to the smaller
+/// l_c (less client compute).
+pub fn best_split(
+    scn: &Scenario,
+    alloc: &Allocation,
+    conv: &ConvergenceModel,
+) -> (usize, f64) {
+    let mut best = (alloc.l_c, f64::INFINITY);
+    for l_c in scn.profile.split_candidates() {
+        let mut cand = alloc.clone();
+        cand.l_c = l_c;
+        let t = scn.total_delay(&cand, conv);
+        if t < best.1 {
+            best = (l_c, t);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delay::testutil::toy_scenario;
+
+    fn base_alloc() -> Allocation {
+        Allocation {
+            assign_main: vec![vec![0, 1], vec![2, 3]],
+            assign_fed: vec![vec![0], vec![1]],
+            psd_main: vec![5e-5; 4],
+            psd_fed: vec![5e-5; 2],
+            l_c: 6,
+            rank: 4,
+        }
+    }
+
+    #[test]
+    fn exhaustive_is_argmin() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let alloc = base_alloc();
+        let (l_star, t_star) = best_split(&scn, &alloc, &conv);
+        for l_c in scn.profile.split_candidates() {
+            let mut cand = alloc.clone();
+            cand.l_c = l_c;
+            assert!(scn.total_delay(&cand, &conv) >= t_star - 1e-12);
+        }
+        assert!(scn.profile.split_candidates().contains(&l_star));
+    }
+
+    #[test]
+    fn never_worse_than_current() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let alloc = base_alloc();
+        let (_, t_star) = best_split(&scn, &alloc, &conv);
+        assert!(t_star <= scn.total_delay(&alloc, &conv) + 1e-12);
+    }
+
+    #[test]
+    fn slow_clients_push_split_to_server() {
+        // make clients drastically slower: optimal split should shrink
+        let mut scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let alloc = base_alloc();
+        let (l_fast, _) = best_split(&scn, &alloc, &conv);
+        for c in &mut scn.topo.clients {
+            c.f_cycles /= 50.0;
+        }
+        let (l_slow, _) = best_split(&scn, &alloc, &conv);
+        assert!(l_slow <= l_fast);
+    }
+}

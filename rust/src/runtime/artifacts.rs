@@ -1,0 +1,349 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime.
+//!
+//! `artifacts/manifest.json` describes, for every exported variant
+//! (model config × split × rank), the three HLO entry points with their
+//! ordered input/output signatures, plus the raw-f32 tensor files for
+//! frozen weights and LoRA adapter initializations.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::lora::{AdapterSet, Tensor};
+use crate::util::json::Json;
+
+/// Element type of an entry-point argument.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// Role of an input in the entry signature.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArgKind {
+    /// Frozen pre-trained weight (uploaded once, reused every step).
+    Weight,
+    /// Trainable LoRA adapter (re-uploaded when it changes).
+    Adapter,
+    /// Per-step data (tokens, activations, gradients, masks).
+    Data,
+}
+
+/// One argument or result of an entry point.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: String,
+    pub kind: ArgKind,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl ArgSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    pub inputs: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+}
+
+/// Index entry for one tensor inside a raw-f32 file.
+#[derive(Clone, Debug)]
+pub struct TensorEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+/// A named tensor file (weights or adapter init).
+#[derive(Clone, Debug)]
+pub struct TensorFile {
+    pub file: String,
+    pub tensors: Vec<TensorEntry>,
+}
+
+/// Model-architecture record (mirrors python GPT2Config).
+#[derive(Clone, Debug)]
+pub struct ConfigRecord {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub lora_alpha: f64,
+    pub weights: TensorFile,
+}
+
+/// One exported (config, split, rank) variant.
+#[derive(Clone, Debug)]
+pub struct VariantRecord {
+    pub name: String,
+    pub config: String,
+    pub l_c: usize,
+    pub rank: usize,
+    pub lora_scale: f64,
+    pub adapters_client: TensorFile,
+    pub adapters_server: TensorFile,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+/// The parsed manifest plus its base directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, ConfigRecord>,
+    pub variants: BTreeMap<String, VariantRecord>,
+}
+
+fn parse_shape(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()?.iter().map(|v| v.as_usize()).collect()
+}
+
+fn parse_dtype(s: &str) -> Result<DType> {
+    match s {
+        "f32" => Ok(DType::F32),
+        "i32" => Ok(DType::I32),
+        _ => bail!("unknown dtype '{s}'"),
+    }
+}
+
+fn parse_kind(s: &str) -> Result<ArgKind> {
+    match s {
+        "weight" => Ok(ArgKind::Weight),
+        "adapter" => Ok(ArgKind::Adapter),
+        "data" => Ok(ArgKind::Data),
+        _ => bail!("unknown arg kind '{s}'"),
+    }
+}
+
+fn parse_args(j: &Json, with_kind: bool) -> Result<Vec<ArgSpec>> {
+    j.as_arr()?
+        .iter()
+        .map(|a| {
+            Ok(ArgSpec {
+                name: a.get("name")?.as_str()?.to_string(),
+                kind: if with_kind {
+                    parse_kind(a.get("kind")?.as_str()?)?
+                } else {
+                    ArgKind::Data
+                },
+                shape: parse_shape(a.get("shape")?)?,
+                dtype: parse_dtype(a.get("dtype")?.as_str()?)?,
+            })
+        })
+        .collect()
+}
+
+fn parse_tensor_file(j: &Json) -> Result<TensorFile> {
+    Ok(TensorFile {
+        file: j.get("file")?.as_str()?.to_string(),
+        tensors: j
+            .get("tensors")?
+            .as_arr()?
+            .iter()
+            .map(|t| {
+                Ok(TensorEntry {
+                    name: t.get("name")?.as_str()?.to_string(),
+                    shape: parse_shape(t.get("shape")?)?,
+                    offset: t.get("offset")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?,
+    })
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.json`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut configs = BTreeMap::new();
+        for (name, c) in j.get("configs")?.as_obj()? {
+            configs.insert(
+                name.clone(),
+                ConfigRecord {
+                    vocab: c.get("vocab")?.as_usize()?,
+                    d_model: c.get("d_model")?.as_usize()?,
+                    n_layers: c.get("n_layers")?.as_usize()?,
+                    n_heads: c.get("n_heads")?.as_usize()?,
+                    seq: c.get("seq")?.as_usize()?,
+                    batch: c.get("batch")?.as_usize()?,
+                    lora_alpha: c.get("lora_alpha")?.as_f64()?,
+                    weights: TensorFile {
+                        file: c.get("weights_file")?.as_str()?.to_string(),
+                        tensors: c
+                            .get("weights")?
+                            .as_arr()?
+                            .iter()
+                            .map(|t| {
+                                Ok(TensorEntry {
+                                    name: t.get("name")?.as_str()?.to_string(),
+                                    shape: parse_shape(t.get("shape")?)?,
+                                    offset: t.get("offset")?.as_usize()?,
+                                })
+                            })
+                            .collect::<Result<Vec<_>>>()?,
+                    },
+                },
+            );
+        }
+
+        let mut variants = BTreeMap::new();
+        for (name, v) in j.get("variants")?.as_obj()? {
+            let mut entries = BTreeMap::new();
+            for (ename, e) in v.get("entries")?.as_obj()? {
+                entries.insert(
+                    ename.clone(),
+                    EntrySpec {
+                        name: ename.clone(),
+                        file: e.get("file")?.as_str()?.to_string(),
+                        inputs: parse_args(e.get("inputs")?, true)?,
+                        outputs: parse_args(e.get("outputs")?, false)?,
+                    },
+                );
+            }
+            variants.insert(
+                name.clone(),
+                VariantRecord {
+                    name: name.clone(),
+                    config: v.get("config")?.as_str()?.to_string(),
+                    l_c: v.get("l_c")?.as_usize()?,
+                    rank: v.get("rank")?.as_usize()?,
+                    lora_scale: v.get("lora_scale")?.as_f64()?,
+                    adapters_client: parse_tensor_file(v.get("adapters_client")?)?,
+                    adapters_server: parse_tensor_file(v.get("adapters_server")?)?,
+                    entries,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir,
+            configs,
+            variants,
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantRecord> {
+        self.variants
+            .get(name)
+            .with_context(|| format!("variant '{name}' not in manifest"))
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigRecord> {
+        self.configs
+            .get(name)
+            .with_context(|| format!("config '{name}' not in manifest"))
+    }
+
+    /// Read a raw-f32 tensor file into an ordered [`AdapterSet`].
+    pub fn read_tensors(&self, tf: &TensorFile) -> Result<AdapterSet> {
+        let path = self.dir.join(&tf.file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut tensors = Vec::with_capacity(tf.tensors.len());
+        for t in &tf.tensors {
+            let numel: usize = t.shape.iter().product();
+            let end = t.offset + numel * 4;
+            if end > bytes.len() {
+                bail!("tensor '{}' out of bounds in {}", t.name, tf.file);
+            }
+            let mut data = vec![0f32; numel];
+            for (i, chunk) in bytes[t.offset..end].chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            }
+            tensors.push(Tensor {
+                name: t.name.clone(),
+                shape: t.shape.clone(),
+                data,
+            });
+        }
+        Ok(AdapterSet { tensors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // tests run from the crate root
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        assert!(m.variants.contains_key("micro_s1_r2"), "{:?}", m.variants.keys());
+        let v = m.variant("micro_s1_r2").unwrap();
+        assert_eq!(v.l_c, 1);
+        assert_eq!(v.rank, 2);
+        assert_eq!(v.entries.len(), 3);
+        let cf = &v.entries["client_fwd"];
+        // last input is the token batch
+        let tokens = cf.inputs.last().unwrap();
+        assert_eq!(tokens.dtype, DType::I32);
+        assert_eq!(tokens.kind, ArgKind::Data);
+        let cfg = m.config("micro").unwrap();
+        assert_eq!(tokens.shape, vec![cfg.batch, cfg.seq]);
+    }
+
+    #[test]
+    fn weight_shapes_cover_signature() {
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        let v = m.variant("micro_s1_r2").unwrap();
+        let cfg = m.config("micro").unwrap();
+        let weights = m.read_tensors(&cfg.weights).unwrap();
+        // every weight input of client_fwd must exist in the weight file
+        for inp in &v.entries["client_fwd"].inputs {
+            if inp.kind == ArgKind::Weight {
+                let t = weights
+                    .tensors
+                    .iter()
+                    .find(|t| t.name == inp.name)
+                    .unwrap_or_else(|| panic!("missing weight {}", inp.name));
+                assert_eq!(t.shape, inp.shape, "shape of {}", inp.name);
+            }
+        }
+    }
+
+    #[test]
+    fn adapter_init_matches_signature() {
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        let v = m.variant("micro_s1_r2").unwrap();
+        let ad = m.read_tensors(&v.adapters_client).unwrap();
+        let adapter_inputs: Vec<_> = v.entries["client_fwd"]
+            .inputs
+            .iter()
+            .filter(|i| i.kind == ArgKind::Adapter)
+            .collect();
+        assert_eq!(ad.tensors.len(), adapter_inputs.len());
+        for (t, spec) in ad.tensors.iter().zip(&adapter_inputs) {
+            assert_eq!(t.name, spec.name);
+            assert_eq!(t.shape, spec.shape);
+        }
+        // B adapters start at zero, A adapters don't
+        for t in &ad.tensors {
+            if t.name.ends_with("_B") {
+                assert!(t.data.iter().all(|&v| v == 0.0), "{} not zero", t.name);
+            } else {
+                assert!(t.data.iter().any(|&v| v != 0.0), "{} all zero", t.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! PJRT engine: load HLO-text artifacts, compile once, execute many.
+//!
+//! Wraps the `xla` crate exactly the way /opt/xla-example/load_hlo
+//! validates: `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute_b` over device-resident buffers. Frozen
+//! weights are uploaded to the device **once** per entry point and the
+//! buffers reused for every step — the Python side never runs again.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifacts::{ArgKind, DType, EntrySpec};
+use crate::model::lora::{AdapterSet, Tensor};
+
+/// Shared PJRT CPU client.
+pub struct Engine {
+    client: PjRtClient,
+}
+
+impl Engine {
+    pub fn new() -> Result<Engine> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one entry point from its HLO text file.
+    pub fn compile(&self, artifacts_dir: &Path, spec: &EntrySpec) -> Result<CompiledEntry> {
+        let path = artifacts_dir.join(&spec.file);
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", spec.name))?;
+        Ok(CompiledEntry {
+            exe,
+            spec: spec.clone(),
+        })
+    }
+
+    /// Upload an f32 host tensor.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload an i32 host tensor.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload every tensor of an adapter set, in order.
+    pub fn upload_adapters(&self, set: &AdapterSet) -> Result<Vec<PjRtBuffer>> {
+        set.tensors
+            .iter()
+            .map(|t| self.upload_f32(&t.data, &t.shape))
+            .collect()
+    }
+}
+
+/// One compiled entry point plus its signature.
+pub struct CompiledEntry {
+    exe: PjRtLoadedExecutable,
+    pub spec: EntrySpec,
+}
+
+impl CompiledEntry {
+    /// Execute over device buffers; outputs are unpacked from the
+    /// 1-tuple convention (`return_tuple=True` at lowering) into one
+    /// literal per declared output.
+    pub fn execute(&self, args: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
+        if args.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} args, signature has {}",
+                self.spec.name,
+                args.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let outs = self.exe.execute_b(args)?;
+        let lit = outs[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, signature has {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Extract output `idx` as f32 vec, shape-checked against the spec.
+    pub fn output_f32(&self, parts: &[Literal], idx: usize) -> Result<Vec<f32>> {
+        let spec = &self.spec.outputs[idx];
+        if spec.dtype != DType::F32 {
+            bail!("output {} is not f32", spec.name);
+        }
+        let v = parts[idx].to_vec::<f32>()?;
+        if v.len() != spec.numel() {
+            bail!(
+                "output {}: {} elements, expected {}",
+                spec.name,
+                v.len(),
+                spec.numel()
+            );
+        }
+        Ok(v)
+    }
+
+    /// Extract the adapter-gradient outputs (all outputs whose name
+    /// starts with `d_h`) into an [`AdapterSet`] ordered like the spec.
+    pub fn grads_from_outputs(&self, parts: &[Literal]) -> Result<AdapterSet> {
+        let mut tensors = Vec::new();
+        for (idx, out) in self.spec.outputs.iter().enumerate() {
+            if out.name.starts_with("d_h") {
+                let data = self.output_f32(parts, idx)?;
+                tensors.push(Tensor {
+                    name: out.name.trim_start_matches("d_").to_string(),
+                    shape: out.shape.clone(),
+                    data,
+                });
+            }
+        }
+        Ok(AdapterSet { tensors })
+    }
+
+    /// Index of the named input in the signature.
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.spec
+            .inputs
+            .iter()
+            .position(|i| i.name == name)
+            .with_context(|| format!("no input '{name}' in {}", self.spec.name))
+    }
+
+    /// Count of inputs of the given kind (they are contiguous by
+    /// construction: weights, then adapters, then data).
+    pub fn count_kind(&self, kind: ArgKind) -> usize {
+        self.spec.inputs.iter().filter(|i| i.kind == kind).count()
+    }
+}

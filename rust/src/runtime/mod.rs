@@ -1,0 +1,16 @@
+//! Runtime: AOT artifacts → PJRT executables → the SFL training API.
+//!
+//! * [`artifacts`] — manifest parsing, tensor-file loading;
+//! * [`engine`] — PJRT client wrapper (compile once, execute many);
+//! * [`sfl`] — [`sfl::SflRuntime`], the three-entry training interface
+//!   (`client_forward` / `server_step` / `client_backward`) the
+//!   coordinator drives, plus the [`sfl::SflModel`] trait that lets
+//!   tests substitute a mock.
+
+pub mod artifacts;
+pub mod engine;
+pub mod sfl;
+
+pub use artifacts::Manifest;
+pub use engine::{CompiledEntry, Engine};
+pub use sfl::{SflModel, SflRuntime, StepOutput};

@@ -1,0 +1,280 @@
+//! The split-federated training interface over compiled artifacts.
+//!
+//! [`SflRuntime`] owns the three compiled entry points of one variant
+//! plus the device-resident frozen-weight buffers, and exposes exactly
+//! the operations of the paper's Algorithm 1:
+//!
+//! * `client_forward`  — phase a (client FP → split activations),
+//! * `server_step`     — phases c–e (server FP, loss, BP, activation grads),
+//! * `client_backward` — phase f (client BP → adapter grads).
+//!
+//! Adapters travel as host [`AdapterSet`]s: they are small (the whole
+//! point of LoRA), so per-call upload is cheap; frozen weights never
+//! travel after load.
+//!
+//! [`SflModel`] abstracts the interface so the coordinator can be
+//! integration-tested with a deterministic mock (no PJRT).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+use xla::PjRtBuffer;
+
+use super::artifacts::{ArgKind, Manifest, VariantRecord};
+use super::engine::{CompiledEntry, Engine};
+use crate::model::lora::AdapterSet;
+
+/// Output of one server step.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    pub loss: f32,
+    /// Gradients of the server-side adapters (same order as params).
+    pub server_grads: AdapterSet,
+    /// Gradient w.r.t. the split activations, to ship back to clients.
+    pub ds: Vec<f32>,
+}
+
+/// Model operations the coordinator needs (implemented by the PJRT
+/// runtime and by the test mock).
+pub trait SflModel {
+    /// Batch shape (B, T), split-activation feature dim d, vocabulary.
+    fn batch(&self) -> usize;
+    fn seq(&self) -> usize;
+    fn d_model(&self) -> usize;
+    fn vocab(&self) -> usize;
+
+    /// Initial client/server adapter states (from the artifacts).
+    fn init_client_adapters(&self) -> AdapterSet;
+    fn init_server_adapters(&self) -> AdapterSet;
+
+    /// Phase a: tokens [B*T] i32 → activations s [B*T*d] f32.
+    fn client_forward(&mut self, adapters: &AdapterSet, tokens: &[i32]) -> Result<Vec<f32>>;
+
+    /// Phases c–e.
+    fn server_step(
+        &mut self,
+        adapters: &AdapterSet,
+        s: &[f32],
+        tokens: &[i32],
+        mask: &[f32],
+    ) -> Result<StepOutput>;
+
+    /// Phase f: returns client adapter gradients.
+    fn client_backward(
+        &mut self,
+        adapters: &AdapterSet,
+        tokens: &[i32],
+        ds: &[f32],
+    ) -> Result<AdapterSet>;
+
+    /// Evaluation: loss only, no gradients applied (reuses server_step).
+    fn eval_loss(
+        &mut self,
+        client_adapters: &AdapterSet,
+        server_adapters: &AdapterSet,
+        tokens: &[i32],
+        mask: &[f32],
+    ) -> Result<f32> {
+        let s = self.client_forward(client_adapters, tokens)?;
+        Ok(self.server_step(server_adapters, &s, tokens, mask)?.loss)
+    }
+}
+
+/// PJRT-backed implementation over one artifact variant.
+pub struct SflRuntime {
+    engine: Engine,
+    dir: PathBuf,
+    pub variant: VariantRecord,
+    batch: usize,
+    seq: usize,
+    d_model: usize,
+    vocab: usize,
+    client_fwd: CompiledEntry,
+    server_step_e: CompiledEntry,
+    client_bwd: CompiledEntry,
+    /// Device-resident frozen weights per entry, in signature order.
+    w_client_fwd: Vec<PjRtBuffer>,
+    w_server: Vec<PjRtBuffer>,
+    w_client_bwd: Vec<PjRtBuffer>,
+    adapters_client_init: AdapterSet,
+    adapters_server_init: AdapterSet,
+}
+
+impl SflRuntime {
+    /// Load a variant: compile its three entries and upload the frozen
+    /// weights once.
+    pub fn load(manifest: &Manifest, variant_name: &str) -> Result<SflRuntime> {
+        let engine = Engine::new()?;
+        Self::load_with_engine(engine, manifest, variant_name)
+    }
+
+    pub fn load_with_engine(
+        engine: Engine,
+        manifest: &Manifest,
+        variant_name: &str,
+    ) -> Result<SflRuntime> {
+        let variant = manifest.variant(variant_name)?.clone();
+        let cfg = manifest.config(&variant.config)?;
+        let weights = manifest.read_tensors(&cfg.weights)?;
+
+        let compile = |ename: &str| -> Result<CompiledEntry> {
+            let spec = variant
+                .entries
+                .get(ename)
+                .with_context(|| format!("variant {variant_name} missing entry {ename}"))?;
+            engine.compile(&manifest.dir, spec)
+        };
+        let client_fwd = compile("client_fwd")?;
+        let server_step_e = compile("server_step")?;
+        let client_bwd = compile("client_bwd")?;
+
+        // Upload the weight prefix of each signature once.
+        let upload_weights = |entry: &CompiledEntry| -> Result<Vec<PjRtBuffer>> {
+            entry
+                .spec
+                .inputs
+                .iter()
+                .filter(|i| i.kind == ArgKind::Weight)
+                .map(|i| {
+                    let t = weights
+                        .tensors
+                        .iter()
+                        .find(|t| t.name == i.name)
+                        .with_context(|| format!("weight '{}' not in weight file", i.name))?;
+                    if t.shape != i.shape {
+                        bail!("weight '{}' shape mismatch", i.name);
+                    }
+                    engine.upload_f32(&t.data, &t.shape)
+                })
+                .collect()
+        };
+        let w_client_fwd = upload_weights(&client_fwd)?;
+        let w_server = upload_weights(&server_step_e)?;
+        let w_client_bwd = upload_weights(&client_bwd)?;
+
+        let adapters_client_init = manifest.read_tensors(&variant.adapters_client)?;
+        let adapters_server_init = manifest.read_tensors(&variant.adapters_server)?;
+
+        Ok(SflRuntime {
+            engine,
+            dir: manifest.dir.clone(),
+            batch: cfg.batch,
+            seq: cfg.seq,
+            d_model: cfg.d_model,
+            vocab: cfg.vocab,
+            variant,
+            client_fwd,
+            server_step_e,
+            client_bwd,
+            w_client_fwd,
+            w_server,
+            w_client_bwd,
+            adapters_client_init,
+            adapters_server_init,
+        })
+    }
+
+    pub fn artifacts_dir(&self) -> &PathBuf {
+        &self.dir
+    }
+
+    fn check_tokens(&self, tokens: &[i32]) -> Result<()> {
+        if tokens.len() != self.batch * self.seq {
+            bail!(
+                "tokens: {} elements, expected B*T = {}",
+                tokens.len(),
+                self.batch * self.seq
+            );
+        }
+        Ok(())
+    }
+}
+
+impl SflModel for SflRuntime {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn seq(&self) -> usize {
+        self.seq
+    }
+
+    fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn init_client_adapters(&self) -> AdapterSet {
+        self.adapters_client_init.clone()
+    }
+
+    fn init_server_adapters(&self) -> AdapterSet {
+        self.adapters_server_init.clone()
+    }
+
+    fn client_forward(&mut self, adapters: &AdapterSet, tokens: &[i32]) -> Result<Vec<f32>> {
+        self.check_tokens(tokens)?;
+        let ad = self.engine.upload_adapters(adapters)?;
+        let tok = self.engine.upload_i32(tokens, &[self.batch, self.seq])?;
+        let mut args: Vec<&PjRtBuffer> = self.w_client_fwd.iter().collect();
+        args.extend(ad.iter());
+        args.push(&tok);
+        let parts = self.client_fwd.execute(&args)?;
+        self.client_fwd.output_f32(&parts, 0)
+    }
+
+    fn server_step(
+        &mut self,
+        adapters: &AdapterSet,
+        s: &[f32],
+        tokens: &[i32],
+        mask: &[f32],
+    ) -> Result<StepOutput> {
+        self.check_tokens(tokens)?;
+        let (b, t, d) = (self.batch, self.seq, self.d_model);
+        if s.len() != b * t * d {
+            bail!("activations: {} elements, expected {}", s.len(), b * t * d);
+        }
+        let ad = self.engine.upload_adapters(adapters)?;
+        let s_buf = self.engine.upload_f32(s, &[b, t, d])?;
+        let tok = self.engine.upload_i32(tokens, &[b, t])?;
+        let m_buf = self.engine.upload_f32(mask, &[b, t])?;
+        let mut args: Vec<&PjRtBuffer> = self.w_server.iter().collect();
+        args.extend(ad.iter());
+        args.push(&s_buf);
+        args.push(&tok);
+        args.push(&m_buf);
+        let parts = self.server_step_e.execute(&args)?;
+        let loss = self.server_step_e.output_f32(&parts, 0)?[0];
+        let server_grads = self.server_step_e.grads_from_outputs(&parts)?;
+        let ds_idx = parts.len() - 1;
+        let ds = self.server_step_e.output_f32(&parts, ds_idx)?;
+        Ok(StepOutput {
+            loss,
+            server_grads,
+            ds,
+        })
+    }
+
+    fn client_backward(
+        &mut self,
+        adapters: &AdapterSet,
+        tokens: &[i32],
+        ds: &[f32],
+    ) -> Result<AdapterSet> {
+        self.check_tokens(tokens)?;
+        let (b, t, d) = (self.batch, self.seq, self.d_model);
+        let ad = self.engine.upload_adapters(adapters)?;
+        let tok = self.engine.upload_i32(tokens, &[b, t])?;
+        let ds_buf = self.engine.upload_f32(ds, &[b, t, d])?;
+        let mut args: Vec<&PjRtBuffer> = self.w_client_bwd.iter().collect();
+        args.extend(ad.iter());
+        args.push(&tok);
+        args.push(&ds_buf);
+        let parts = self.client_bwd.execute(&args)?;
+        self.client_bwd.grads_from_outputs(&parts)
+    }
+}

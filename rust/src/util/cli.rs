@@ -1,0 +1,149 @@
+//! Tiny CLI argument parser (no clap in the offline crate set).
+//!
+//! Grammar: `--key value`, `--flag` (boolean), and positional args.
+//! Unknown keys are collected and reported by [`Args::finish`] so every
+//! binary fails loudly on typos.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    named: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    consumed: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args` (skipping argv\[0\]).
+    pub fn from_env() -> Args {
+        Self::from_iter(std::env::args().skip(1))
+    }
+
+    pub fn from_iter<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // `--key=value` or `--key value` or bare flag
+                if let Some((k, v)) = key.split_once('=') {
+                    args.named.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.named.insert(key.to_string(), v);
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn flag(&mut self, name: &str) -> bool {
+        self.consumed.push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&mut self, name: &str) -> Option<String> {
+        self.consumed.push(name.to_string());
+        self.named.get(name).cloned()
+    }
+
+    pub fn str_or(&mut self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn f64_or(&mut self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name}: bad float '{v}': {e}")),
+        }
+    }
+
+    pub fn usize_or(&mut self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name}: bad integer '{v}': {e}")),
+        }
+    }
+
+    pub fn u64_or(&mut self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name}: bad integer '{v}': {e}")),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Error on any argument that no call above asked about.
+    pub fn finish(&self) -> Result<()> {
+        for k in self.named.keys() {
+            if !self.consumed.iter().any(|c| c == k) {
+                bail!("unknown option --{k}");
+            }
+        }
+        for f in &self.flags {
+            if !self.consumed.iter().any(|c| c == f) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::from_iter(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_named_flags_positional() {
+        let mut a = parse("run --steps 100 --verbose --lr=0.01 file.toml");
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.01);
+        assert_eq!(a.positional(), &["run".to_string(), "file.toml".to_string()]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = parse("");
+        assert_eq!(a.usize_or("k", 5).unwrap(), 5);
+        assert!(!a.flag("x"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let mut a = parse("--typo 3");
+        let _ = a.usize_or("steps", 0);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let mut a = parse("--steps abc");
+        assert!(a.usize_or("steps", 0).is_err());
+    }
+}

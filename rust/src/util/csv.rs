@@ -1,0 +1,145 @@
+//! CSV writer for experiment outputs (loss curves, latency sweeps).
+//!
+//! Every bench writes its series under `results/` so figures can be
+//! re-plotted without re-running; EXPERIMENTS.md references these files.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Streaming CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create (truncating) `path` and write the header row.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> Result<CsvWriter> {
+        if let Some(dir) = path.as_ref().parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        let f = File::create(&path)
+            .with_context(|| format!("creating {}", path.as_ref().display()))?;
+        let mut w = CsvWriter {
+            out: BufWriter::new(f),
+            cols: header.len(),
+        };
+        w.write_raw(header)?;
+        Ok(w)
+    }
+
+    fn write_raw(&mut self, fields: &[&str]) -> Result<()> {
+        let mut first = true;
+        for f in fields {
+            if !first {
+                self.out.write_all(b",")?;
+            }
+            first = false;
+            if f.contains(',') || f.contains('"') || f.contains('\n') {
+                let escaped = f.replace('"', "\"\"");
+                write!(self.out, "\"{escaped}\"")?;
+            } else {
+                self.out.write_all(f.as_bytes())?;
+            }
+        }
+        self.out.write_all(b"\n")?;
+        Ok(())
+    }
+
+    /// Write one row; panics (in debug) if column count mismatches.
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        debug_assert_eq!(fields.len(), self.cols, "csv column mismatch");
+        let refs: Vec<&str> = fields.iter().map(String::as_str).collect();
+        self.write_raw(&refs)
+    }
+
+    /// Convenience: all-numeric row.
+    pub fn row_f64(&mut self, fields: &[f64]) -> Result<()> {
+        let strs: Vec<String> = fields.iter().map(|v| format!("{v}")).collect();
+        self.row(&strs)
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Read a simple CSV (no embedded newlines) into (header, rows).
+pub fn read_csv<P: AsRef<Path>>(path: P) -> Result<(Vec<String>, Vec<Vec<String>>)> {
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    let mut lines = text.lines();
+    let header = lines
+        .next()
+        .map(split_csv_line)
+        .unwrap_or_default();
+    let rows = lines
+        .filter(|l| !l.trim().is_empty())
+        .map(split_csv_line)
+        .collect();
+    Ok((header, rows))
+}
+
+fn split_csv_line(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut field = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes && chars.peek() == Some(&'"') => {
+                chars.next();
+                field.push('"');
+            }
+            '"' => in_quotes = !in_quotes,
+            ',' if !in_quotes => {
+                out.push(std::mem::take(&mut field));
+            }
+            _ => field.push(c),
+        }
+    }
+    out.push(field);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_through_reader() {
+        let dir = std::env::temp_dir().join("sfllm_csv_rt");
+        let path = dir.join("rt.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&["1".into(), "x,\"y".into()]).unwrap();
+            w.flush().unwrap();
+        }
+        let (header, rows) = read_csv(&path).unwrap();
+        assert_eq!(header, vec!["a", "b"]);
+        assert_eq!(rows, vec![vec!["1".to_string(), "x,\"y".to_string()]]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("sfllm_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&["1".into(), "x,y".into()]).unwrap();
+            w.row_f64(&[2.5, 3.0]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,\"x,y\"\n2.5,3\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

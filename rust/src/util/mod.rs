@@ -1,0 +1,11 @@
+//! Shared substrates the offline image forces us to own: PRNG, CLI,
+//! TOML/JSON parsing, CSV output, basic statistics, and a tiny
+//! property-testing harness built on the PRNG.
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod toml;

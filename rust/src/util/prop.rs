@@ -1,0 +1,69 @@
+//! Micro property-testing harness (no proptest in the offline set).
+//!
+//! [`check`] runs a property over N seeded cases; on failure it reports
+//! the failing case index and seed so the case replays exactly. Used by
+//! the optimizer-invariant tests (`rust/tests/prop_optimizer.rs`).
+
+use crate::util::rng::Rng;
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `cases` seeded property executions; panic with the first failure.
+///
+/// The closure receives a per-case [`Rng`] derived from (`seed`, case
+/// index), so failures print a standalone reproduction seed.
+pub fn check<F: FnMut(&mut Rng) -> CaseResult>(name: &str, seed: u64, cases: usize, mut f: F) {
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x2545F4914F6CDD1D);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 1, 25, |rng| {
+            count += 1;
+            let v = rng.f64();
+            if (0.0..1.0).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("out of range {v}"))
+            }
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'failing'")]
+    fn failing_property_panics_with_seed() {
+        check("failing", 2, 10, |rng| {
+            if rng.f64() < 2.0 {
+                Err("always".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

@@ -1,0 +1,244 @@
+//! TOML-subset parser for experiment config files.
+//!
+//! Supported: `[section]` / `[a.b]` headers, `key = value` with string,
+//! integer, float, boolean and flat-array values, `#` comments. This
+//! covers everything `configs/*.toml` uses; nested tables beyond one
+//! dotted level and multi-line values are intentionally out of scope.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A scalar or flat-array TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            _ => bail!("not a number: {self:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i),
+            _ => bail!("not an integer: {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let i = self.as_i64()?;
+        if i < 0 {
+            bail!("negative where usize expected: {i}");
+        }
+        Ok(i as usize)
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => bail!("not a string: {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => bail!("not a bool: {self:?}"),
+        }
+    }
+
+    pub fn as_f64_arr(&self) -> Result<Vec<f64>> {
+        match self {
+            TomlValue::Arr(v) => v.iter().map(|x| x.as_f64()).collect(),
+            _ => bail!("not an array: {self:?}"),
+        }
+    }
+}
+
+/// Parsed document: keys are `"section.key"` (or bare `"key"` before
+/// any section header).
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let value = parse_value(v.trim())
+                .with_context(|| format!("line {}: bad value '{}'", lineno + 1, v.trim()))?;
+            doc.entries.insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        self.get(key).map_or(Ok(default), |v| v.as_f64())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        self.get(key).map_or(Ok(default), |v| v.as_usize())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> Result<String> {
+        self.get(key)
+            .map_or(Ok(default.to_string()), |v| Ok(v.as_str()?.to_string()))
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .context("unterminated string")?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').context("unterminated array")?;
+        let mut out = Vec::new();
+        for part in split_top(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                out.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Arr(out));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("unparseable value '{s}'")
+}
+
+/// Split on commas that are not inside quotes.
+fn split_top(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let doc = TomlDoc::parse(
+            r#"
+            # paper Table II
+            seed = 42
+            [system]
+            clients = 5            # K
+            bandwidth_hz = 500e3
+            ranks = [1, 2, 4, 6, 8]
+            name = "tableII"
+            shadowing = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("seed").unwrap().as_i64().unwrap(), 42);
+        assert_eq!(doc.get("system.clients").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(doc.get("system.bandwidth_hz").unwrap().as_f64().unwrap(), 500e3);
+        assert_eq!(
+            doc.get("system.ranks").unwrap().as_f64_arr().unwrap(),
+            vec![1.0, 2.0, 4.0, 6.0, 8.0]
+        );
+        assert_eq!(doc.get("system.name").unwrap().as_str().unwrap(), "tableII");
+        assert!(doc.get("system.shadowing").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn defaults() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(doc.f64_or("x", 1.5).unwrap(), 1.5);
+        assert_eq!(doc.usize_or("y", 3).unwrap(), 3);
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let doc = TomlDoc::parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc.get("k").unwrap().as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("k = @@").is_err());
+    }
+}

@@ -1,0 +1,122 @@
+//! Integration: the full Section-VI pipeline on the paper's Table-II
+//! scenario — Algorithm 3 end-to-end, baseline dominance, and the
+//! qualitative trends Figs. 5–8 rely on.
+
+use sfllm::config::Config;
+use sfllm::delay::ConvergenceModel;
+use sfllm::opt::baselines;
+use sfllm::opt::bcd::{self, BcdOptions};
+use sfllm::sim::build_scenario;
+
+fn paper_scenario() -> sfllm::delay::Scenario {
+    build_scenario(&Config::paper_defaults()).unwrap()
+}
+
+fn opts() -> BcdOptions {
+    BcdOptions::default()
+}
+
+#[test]
+fn bcd_on_paper_scenario_converges() {
+    let scn = paper_scenario();
+    let conv = ConvergenceModel::paper_default();
+    let res = bcd::optimize(&scn, &conv, &opts()).unwrap();
+    assert!(res.objective.is_finite() && res.objective > 0.0);
+    assert!(res.iterations <= 20);
+    res.alloc
+        .validate(scn.main_link.subch.len(), scn.fed_link.subch.len())
+        .unwrap();
+    assert!(scn.power_feasible(&res.alloc, 1e-6));
+}
+
+#[test]
+fn proposed_dominates_all_baselines_on_paper_scenario() {
+    let scn = paper_scenario();
+    let conv = ConvergenceModel::paper_default();
+    let [p, a, b, c, d] =
+        baselines::compare_all(&scn, &conv, &[1, 2, 4, 6, 8], 42, 5).unwrap();
+    assert!(p <= a && p <= b && p <= c && p <= d, "p={p} a={a} b={b} c={c} d={d}");
+    // paper claims up to ~60% reduction vs baseline a at Table II defaults
+    let reduction = 1.0 - p / a;
+    assert!(
+        reduction > 0.25,
+        "expected a substantial reduction vs random, got {:.0}%",
+        reduction * 100.0
+    );
+}
+
+#[test]
+fn fig5_trend_latency_decreases_with_bandwidth() {
+    let conv = ConvergenceModel::paper_default();
+    let mut last = f64::INFINITY;
+    for bw in [250e3, 500e3, 1000e3] {
+        let mut cfg = Config::paper_defaults();
+        cfg.system.bandwidth_main_hz = bw;
+        cfg.system.bandwidth_fed_hz = bw;
+        let scn = build_scenario(&cfg).unwrap();
+        let t = bcd::optimize(&scn, &conv, &opts()).unwrap().objective;
+        assert!(t < last, "bandwidth {bw}: {t} !< {last}");
+        last = t;
+    }
+}
+
+#[test]
+fn fig6_trend_latency_decreases_with_client_compute() {
+    let conv = ConvergenceModel::paper_default();
+    let mut last = f64::INFINITY;
+    // sweep client FLOPs-per-cycle via kappa (lower kappa = stronger client)
+    for kappa_inv in [512.0, 1024.0, 4096.0] {
+        let mut cfg = Config::paper_defaults();
+        cfg.system.kappa_client = 1.0 / kappa_inv;
+        let scn = build_scenario(&cfg).unwrap();
+        let t = bcd::optimize(&scn, &conv, &opts()).unwrap().objective;
+        assert!(t < last, "kappa 1/{kappa_inv}: {t} !< {last}");
+        last = t;
+    }
+}
+
+#[test]
+fn fig7_trend_latency_decreases_with_server_compute() {
+    let conv = ConvergenceModel::paper_default();
+    let mut last = f64::INFINITY;
+    for f_s in [2.5e9, 5e9, 20e9] {
+        let mut cfg = Config::paper_defaults();
+        cfg.system.f_server = f_s;
+        let scn = build_scenario(&cfg).unwrap();
+        let t = bcd::optimize(&scn, &conv, &opts()).unwrap().objective;
+        assert!(t <= last, "f_s {f_s}: {t} !<= {last}");
+        last = t;
+    }
+}
+
+#[test]
+fn fig8_trend_latency_decreases_with_transmit_power() {
+    let conv = ConvergenceModel::paper_default();
+    let mut last = f64::INFINITY;
+    for p_dbm in [31.76, 41.76, 47.0] {
+        let mut cfg = Config::paper_defaults();
+        cfg.system.p_max_dbm = p_dbm;
+        let scn = build_scenario(&cfg).unwrap();
+        let t = bcd::optimize(&scn, &conv, &opts()).unwrap().objective;
+        assert!(t <= last, "p_max {p_dbm} dBm: {t} !<= {last}");
+        last = t;
+    }
+}
+
+#[test]
+fn weak_clients_shift_split_toward_server() {
+    let conv = ConvergenceModel::paper_default();
+    let mut strong = Config::paper_defaults();
+    strong.system.kappa_client = 1.0 / 16384.0; // very strong clients
+    let mut weak = Config::paper_defaults();
+    weak.system.kappa_client = 1.0 / 128.0; // very weak clients
+    let l_strong = bcd::optimize(&build_scenario(&strong).unwrap(), &conv, &opts())
+        .unwrap()
+        .alloc
+        .l_c;
+    let l_weak = bcd::optimize(&build_scenario(&weak).unwrap(), &conv, &opts())
+        .unwrap()
+        .alloc
+        .l_c;
+    assert!(l_weak <= l_strong, "weak {l_weak} vs strong {l_strong}");
+}

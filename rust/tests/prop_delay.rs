@@ -1,0 +1,138 @@
+//! Property tests over the Section-V delay model: monotonicities and
+//! conservation laws that must hold for any random scenario.
+
+use sfllm::config::Config;
+use sfllm::delay::{Allocation, ConvergenceModel, Scenario};
+use sfllm::opt::bcd::initial_alloc;
+use sfllm::sim::build_scenario;
+use sfllm::util::prop::check;
+use sfllm::util::rng::Rng;
+
+fn random_scenario(rng: &mut Rng) -> Scenario {
+    let mut cfg = Config::paper_defaults();
+    cfg.system.clients = 2 + rng.below(5);
+    cfg.system.seed = rng.next_u64();
+    cfg.train.batch = 1 + rng.below(32);
+    cfg.train.seq = 128 << rng.below(3);
+    build_scenario(&cfg).expect("scenario")
+}
+
+fn some_alloc(scn: &Scenario, rng: &mut Rng) -> Allocation {
+    let l_c = 1 + rng.below(scn.profile.blocks.len() - 1);
+    initial_alloc(scn, l_c, *rng.choose(&[1usize, 2, 4, 6, 8]))
+}
+
+#[test]
+fn prop_more_psd_never_slower() {
+    check("PSD monotone", 1, 25, |rng| {
+        let scn = random_scenario(rng);
+        let a = some_alloc(&scn, rng);
+        let mut hot = a.clone();
+        let f = rng.range(1.1, 5.0);
+        hot.psd_main.iter_mut().for_each(|p| *p *= f);
+        hot.psd_fed.iter_mut().for_each(|p| *p *= f);
+        let (p1, p2) = (scn.phase_delays(&a), scn.phase_delays(&hot));
+        for k in 0..scn.k() {
+            if p2.act_upload[k] > p1.act_upload[k] + 1e-12 {
+                return Err(format!("upload slower with more power (client {k})"));
+            }
+            if p2.fed_upload[k] > p1.fed_upload[k] + 1e-12 {
+                return Err(format!("fed upload slower with more power (client {k})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rank_increases_round_cost() {
+    check("rank monotone in per-round cost", 2, 25, |rng| {
+        let scn = random_scenario(rng);
+        let a = some_alloc(&scn, rng);
+        let mut lo = a.clone();
+        lo.rank = 1;
+        let mut hi = a.clone();
+        hi.rank = 8;
+        let (p1, p2) = (scn.phase_delays(&lo), scn.phase_delays(&hi));
+        if p2.t_local() < p1.t_local() - 1e-12 {
+            return Err("higher rank gave cheaper local round".into());
+        }
+        if p2.t_fed() < p1.t_fed() - 1e-12 {
+            return Err("higher rank gave cheaper fed upload".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compute_conservation_across_split() {
+    check("split conserves total FLOPs", 3, 25, |rng| {
+        let scn = random_scenario(rng);
+        let r = *rng.choose(&[1usize, 2, 4, 6, 8]);
+        let total = scn.profile.client_fwd_flops(scn.profile.blocks.len(), r);
+        for l_c in 0..=scn.profile.blocks.len() {
+            let c = scn.profile.client_fwd_flops(l_c, r);
+            let s = scn.profile.server_fwd_flops(l_c, r) - scn.profile.head_fwd_flops;
+            if ((c + s) - total).abs() > 1.0 {
+                return Err(format!("split {l_c} lost FLOPs: {c}+{s} != {total}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_t_local_bounded_by_parts() {
+    check("T_local composition bounds", 4, 25, |rng| {
+        let scn = random_scenario(rng);
+        let a = some_alloc(&scn, rng);
+        let ph = scn.phase_delays(&a);
+        let t = ph.t_local();
+        // T_local is at least each stage and at most the sum of all stage maxima
+        let s1 = ph
+            .client_fwd
+            .iter()
+            .zip(&ph.act_upload)
+            .map(|(x, y)| x + y)
+            .fold(0.0f64, f64::max);
+        let s3 = ph.client_bwd.iter().copied().fold(0.0f64, f64::max);
+        let lo = s1.max(ph.server_fwd).max(ph.server_bwd).max(s3);
+        let hi = s1 + ph.server_fwd + ph.server_bwd + s3;
+        if t < lo - 1e-12 || t > hi + 1e-12 {
+            return Err(format!("T_local {t} outside [{lo}, {hi}]"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_total_delay_scales_with_rounds() {
+    check("E(r) scaling", 5, 15, |rng| {
+        let scn = random_scenario(rng);
+        let a = some_alloc(&scn, rng);
+        let e1 = ConvergenceModel::fitted(10.0, 0.0, 1.0); // constant 10 rounds
+        let e2 = ConvergenceModel::fitted(20.0, 0.0, 1.0); // constant 20 rounds
+        let t1 = scn.total_delay(&a, &e1);
+        let t2 = scn.total_delay(&a, &e2);
+        if (t2 - 2.0 * t1).abs() / t1.max(1e-12) > 1e-9 {
+            return Err(format!("doubling E(r) must double T: {t1} vs {t2}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_slower_client_never_reduces_t_local() {
+    check("straggler monotone", 6, 20, |rng| {
+        let mut scn = random_scenario(rng);
+        let a = some_alloc(&scn, rng);
+        let t_before = scn.t_local(&a);
+        let victim = rng.below(scn.k());
+        scn.topo.clients[victim].f_cycles /= rng.range(1.5, 10.0);
+        let t_after = scn.t_local(&a);
+        if t_after < t_before - 1e-12 {
+            return Err("slowing a client reduced T_local".into());
+        }
+        Ok(())
+    });
+}
