@@ -16,12 +16,11 @@
 //! EXPERIMENTS.md records a reference run.
 
 use anyhow::Result;
-use sfllm::config::Config;
 use sfllm::coordinator::{train, OptKind, TrainOptions};
 use sfllm::delay::ConvergenceModel;
 use sfllm::opt::bcd::{self, BcdOptions};
 use sfllm::runtime::{Manifest, SflModel, SflRuntime};
-use sfllm::sim;
+use sfllm::sim::ScenarioBuilder;
 use sfllm::util::cli::Args;
 use sfllm::util::csv::CsvWriter;
 
@@ -88,12 +87,14 @@ fn main() -> Result<()> {
 
     // ---- price the run on the paper's wireless scenario -----------------
     // (the delay simulator uses the tiny model's own workload profile)
-    let mut cfg = Config::paper_defaults();
-    cfg.model = "tiny".into();
-    cfg.train.seq = 64;
-    cfg.train.batch = 8;
-    cfg.system.clients = opts.clients;
-    let scn = sim::build_scenario(&cfg)?;
+    let scn = ScenarioBuilder::new()
+        .model("tiny")
+        .clients(opts.clients)
+        .tweak(|c| {
+            c.train.seq = 64;
+            c.train.batch = 8;
+        })
+        .build()?;
     let conv = ConvergenceModel::table(vec![(4, opts.global_rounds as f64)]);
     let res = bcd::optimize(
         &scn,

@@ -6,11 +6,10 @@
 //! ```
 
 use anyhow::Result;
-use sfllm::config::Config;
 use sfllm::delay::ConvergenceModel;
 use sfllm::opt::bcd::{self, BcdOptions};
 use sfllm::runtime::{Manifest, SflModel, SflRuntime};
-use sfllm::sim;
+use sfllm::sim::ScenarioBuilder;
 
 fn main() -> Result<()> {
     // ---- 1. the compute path: one split LoRA training step ------------
@@ -40,8 +39,7 @@ fn main() -> Result<()> {
     println!("one SFL step done: loss = {:.4}", out.loss);
 
     // ---- 2. the coordination path: joint resource allocation ----------
-    let cfg = Config::paper_defaults(); // Table II scenario, GPT2-S workload
-    let scn = sim::build_scenario(&cfg)?;
+    let scn = ScenarioBuilder::preset("paper")?.build()?; // Table II, GPT2-S workload
     let conv = ConvergenceModel::paper_default();
     let res = bcd::optimize(&scn, &conv, &BcdOptions::default())?;
     println!(

@@ -15,14 +15,14 @@ use sfllm::config::Config;
 use sfllm::delay::energy::{total_energy, DEFAULT_ZETA};
 use sfllm::delay::ConvergenceModel;
 use sfllm::opt::bcd::{self, BcdOptions};
-use sfllm::sim;
+use sfllm::sim::ScenarioBuilder;
 use sfllm::util::cli::Args;
 
 fn main() -> Result<()> {
     let mut args = Args::from_env();
     let cfg = Config::from_args(&mut args)?;
     args.finish()?;
-    let scn = sim::build_scenario(&cfg)?;
+    let scn = ScenarioBuilder::from_config(cfg.clone()).build()?;
     let conv = ConvergenceModel::paper_default();
 
     println!(

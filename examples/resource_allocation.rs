@@ -1,36 +1,42 @@
 //! Resource allocation walk-through on the paper's Table-II scenario:
-//! runs Algorithm 3 (BCD over P1–P4) for the GPT2-S workload, prints the
-//! evolving objective, the final subchannel/power/split/rank choices,
-//! and the comparison against baselines a–d.
+//! builds the scenario with [`ScenarioBuilder`], solves it with the
+//! `proposed` policy (Algorithm 3, BCD over P1–P4) from the
+//! [`PolicyRegistry`], prints the evolving objective and the final
+//! subchannel/power/split/rank choices, then compares every registered
+//! policy side by side through a single-point [`SweepRunner`].
 //!
 //! ```bash
-//! cargo run --release --example resource_allocation -- [--clients 5] [--seed 42]
+//! cargo run --release --example resource_allocation -- \
+//!     [--preset paper] [--clients 5] [--seed 42] [--policies all] [--draws 5]
 //! ```
 
 use anyhow::Result;
-use sfllm::config::Config;
 use sfllm::delay::ConvergenceModel;
 use sfllm::net::power::watt_to_dbm;
-use sfllm::opt::baselines;
-use sfllm::opt::bcd::{self, BcdOptions};
-use sfllm::sim;
+use sfllm::opt::PolicyRegistry;
+use sfllm::sim::{ScenarioBuilder, SweepRunner};
 use sfllm::util::cli::Args;
 
 fn main() -> Result<()> {
     let mut args = Args::from_env();
+    let preset = args.str_or("preset", "paper");
+    let spec = args.str_or("policies", "all");
     let draws = args.usize_or("draws", 5)?;
-    let cfg = Config::from_args(&mut args)?;
+    let mut cfg = ScenarioBuilder::preset(&preset)?.into_config();
+    cfg.apply_file_and_args(&mut args)?;
     args.finish()?;
+    let builder = ScenarioBuilder::from_config(cfg);
+    let cfg = builder.config();
 
     println!(
-        "=== scenario: {} | K={} clients | M={} N={} subchannels | B={} kHz ===",
+        "=== scenario '{preset}': {} | K={} clients | M={} N={} subchannels | B={} kHz ===",
         cfg.model,
         cfg.system.clients,
         cfg.system.subch_main,
         cfg.system.subch_fed,
         cfg.system.bandwidth_main_hz / 1e3
     );
-    let scn = sim::build_scenario(&cfg)?;
+    let scn = builder.build()?;
     for (k, c) in scn.topo.clients.iter().enumerate() {
         println!(
             "  client {k}: f={:.2} GHz, d_main={:.1} m, d_fed={:.1} m",
@@ -41,14 +47,11 @@ fn main() -> Result<()> {
     }
 
     let conv = ConvergenceModel::paper_default();
-    let opts = BcdOptions {
-        ranks: cfg.train.ranks.clone(),
-        ..BcdOptions::default()
-    };
-    let res = bcd::optimize(&scn, &conv, &opts)?;
+    let registry = PolicyRegistry::paper_suite(&cfg.train.ranks, cfg.system.seed, draws);
+    let res = registry.get("proposed")?.solve(&scn, &conv)?;
 
     println!("\nBCD trajectory (total delay, s):");
-    for (i, t) in res.trajectory.iter().enumerate() {
+    for (i, t) in res.trajectory.iter().flatten().enumerate() {
         println!("  iter {i}: {t:.2}");
     }
     println!(
@@ -81,16 +84,32 @@ fn main() -> Result<()> {
     );
     println!("total fine-tuning delay: {:.1} s", res.objective);
 
-    println!("\nbaseline comparison ({draws} seeded draws):");
-    let [p, a, b, c, d] =
-        baselines::compare_all(&scn, &conv, &cfg.train.ranks, cfg.system.seed, draws)?;
-    for (name, v) in [("proposed", p), ("a: all random", a), ("b: random comm", b),
-                      ("c: random split", c), ("d: random rank", d)] {
-        println!("  {name:16} {v:10.1} s   ({:.1}% of baseline a)", 100.0 * v / a);
+    // every registered policy on the same scenario, via a single-point sweep
+    println!("\npolicy comparison ({draws} seeded draws per baseline):");
+    let report = SweepRunner::new(&builder)
+        .policies(registry.resolve(&spec)?)
+        .run()?;
+    let point = &report.points[0];
+    let objectives = point.objectives();
+    let reference = objectives
+        .first()
+        .copied()
+        .filter(|&v| v > 0.0)
+        .unwrap_or(1.0);
+    let baseline_a = report
+        .policy_names
+        .iter()
+        .position(|n| n == "baseline_a")
+        .map(|i| objectives[i]);
+    for (name, v) in report.policy_names.iter().zip(&objectives) {
+        println!("  {name:16} {v:10.1} s   ({:.1}% of {})", 100.0 * v / reference,
+                 report.policy_names[0]);
     }
-    println!(
-        "\nlatency reduction vs baseline a: {:.0}% (paper reports up to 60%)",
-        100.0 * (1.0 - p / a)
-    );
+    if let Some(a) = baseline_a {
+        println!(
+            "\nlatency reduction vs baseline a: {:.0}% (paper reports up to 60%)",
+            100.0 * (1.0 - res.objective / a)
+        );
+    }
     Ok(())
 }

@@ -5,9 +5,9 @@
 //!
 //! Writes `results/bcd_convergence.csv`.
 
-use sfllm::config::Config;
 use sfllm::delay::ConvergenceModel;
 use sfllm::opt::bcd::{self, BcdOptions};
+use sfllm::sim::ScenarioBuilder;
 use sfllm::util::csv::CsvWriter;
 use sfllm::util::stats;
 
@@ -21,9 +21,7 @@ fn main() -> anyhow::Result<()> {
     let mut finals = Vec::new();
     for seed in [1u64, 7, 42, 99, 1234] {
         for (init_l_c, init_rank) in [(1usize, 1usize), (6, 4), (11, 8)] {
-            let mut cfg = Config::paper_defaults();
-            cfg.system.seed = seed;
-            let scn = sfllm::sim::build_scenario(&cfg)?;
+            let scn = ScenarioBuilder::new().seed(seed).build()?;
             let res = bcd::optimize(
                 &scn,
                 &conv,

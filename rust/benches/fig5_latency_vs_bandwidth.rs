@@ -7,37 +7,20 @@
 //!
 //! Writes `results/fig5_latency_vs_bandwidth.csv`.
 
-use sfllm::config::Config;
-use sfllm::delay::ConvergenceModel;
-use sfllm::opt::baselines::compare_all;
-use sfllm::util::csv::CsvWriter;
+use sfllm::opt::PolicyRegistry;
+use sfllm::sim::{ScenarioBuilder, SweepAxis, SweepRunner};
 
 fn main() -> anyhow::Result<()> {
-    let base = Config::paper_defaults();
-    let conv = ConvergenceModel::paper_default();
-    let bandwidths = [125e3, 250e3, 500e3, 1000e3, 2000e3];
-    let mut csv = CsvWriter::create(
-        "results/fig5_latency_vs_bandwidth.csv",
-        &["bandwidth_khz", "proposed", "baseline_a", "baseline_b", "baseline_c", "baseline_d"],
-    )?;
+    let base = ScenarioBuilder::preset("paper")?;
+    let cfg = base.config();
+    let reg = PolicyRegistry::paper_suite(&cfg.train.ranks, cfg.system.seed, 5);
+    let report = SweepRunner::new(&base)
+        .over(SweepAxis::bandwidth_khz(&[125.0, 250.0, 500.0, 1000.0, 2000.0]))
+        .policies(reg.resolve("all")?)
+        .run()?;
     println!("Fig.5: total latency (s) vs per-link bandwidth");
-    println!(
-        "{:>10} {:>12} {:>12} {:>12} {:>12} {:>12} {:>8}",
-        "B (kHz)", "proposed", "a", "b", "c", "d", "red. vs a"
-    );
-    for &bw in &bandwidths {
-        let mut cfg = base.clone();
-        cfg.system.bandwidth_main_hz = bw;
-        cfg.system.bandwidth_fed_hz = bw;
-        let scn = sfllm::sim::build_scenario(&cfg)?;
-        let [p, a, b, c, d] = compare_all(&scn, &conv, &cfg.train.ranks, cfg.system.seed, 5)?;
-        println!(
-            "{:>10.0} {:>12.1} {:>12.1} {:>12.1} {:>12.1} {:>12.1} {:>7.0}%",
-            bw / 1e3, p, a, b, c, d, 100.0 * (1.0 - p / a)
-        );
-        csv.row_f64(&[bw / 1e3, p, a, b, c, d])?;
-    }
-    csv.flush()?;
+    report.print_table();
+    report.write_csv("results/fig5_latency_vs_bandwidth.csv")?;
     println!("series written to results/fig5_latency_vs_bandwidth.csv");
     Ok(())
 }

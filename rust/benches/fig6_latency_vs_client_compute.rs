@@ -7,37 +7,21 @@
 //!
 //! Writes `results/fig6_latency_vs_client_compute.csv`.
 
-use sfllm::config::Config;
-use sfllm::delay::ConvergenceModel;
-use sfllm::opt::baselines::compare_all;
-use sfllm::util::csv::CsvWriter;
+use sfllm::opt::PolicyRegistry;
+use sfllm::sim::{ScenarioBuilder, SweepAxis, SweepRunner};
 
 fn main() -> anyhow::Result<()> {
-    let base = Config::paper_defaults();
-    let conv = ConvergenceModel::paper_default();
+    let base = ScenarioBuilder::preset("paper")?;
+    let cfg = base.config();
+    let reg = PolicyRegistry::paper_suite(&cfg.train.ranks, cfg.system.seed, 5);
     // paper default: 1024 FLOPs/cycle on clients
-    let flops_per_cycle = [256.0, 512.0, 1024.0, 2048.0, 4096.0];
-    let mut csv = CsvWriter::create(
-        "results/fig6_latency_vs_client_compute.csv",
-        &["client_flops_per_cycle", "proposed", "baseline_a", "baseline_b", "baseline_c", "baseline_d"],
-    )?;
+    let report = SweepRunner::new(&base)
+        .over(SweepAxis::client_flops_per_cycle(&[256.0, 512.0, 1024.0, 2048.0, 4096.0]))
+        .policies(reg.resolve("all")?)
+        .run()?;
     println!("Fig.6: total latency (s) vs client compute (FLOPs/cycle)");
-    println!(
-        "{:>12} {:>12} {:>12} {:>12} {:>12} {:>12} {:>10}",
-        "FLOPs/cyc", "proposed", "a", "b", "c", "d", "gap to c"
-    );
-    for &fpc in &flops_per_cycle {
-        let mut cfg = base.clone();
-        cfg.system.kappa_client = 1.0 / fpc;
-        let scn = sfllm::sim::build_scenario(&cfg)?;
-        let [p, a, b, c, d] = compare_all(&scn, &conv, &cfg.train.ranks, cfg.system.seed, 5)?;
-        println!(
-            "{:>12.0} {:>12.1} {:>12.1} {:>12.1} {:>12.1} {:>12.1} {:>9.0}%",
-            fpc, p, a, b, c, d, 100.0 * (c / p - 1.0)
-        );
-        csv.row_f64(&[fpc, p, a, b, c, d])?;
-    }
-    csv.flush()?;
+    report.print_table();
+    report.write_csv("results/fig6_latency_vs_client_compute.csv")?;
     println!("series written to results/fig6_latency_vs_client_compute.csv");
     Ok(())
 }

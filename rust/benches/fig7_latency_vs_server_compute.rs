@@ -7,36 +7,20 @@
 //!
 //! Writes `results/fig7_latency_vs_server_compute.csv`.
 
-use sfllm::config::Config;
-use sfllm::delay::ConvergenceModel;
-use sfllm::opt::baselines::compare_all;
-use sfllm::util::csv::CsvWriter;
+use sfllm::opt::PolicyRegistry;
+use sfllm::sim::{ScenarioBuilder, SweepAxis, SweepRunner};
 
 fn main() -> anyhow::Result<()> {
-    let base = Config::paper_defaults();
-    let conv = ConvergenceModel::paper_default();
-    let f_servers = [2.5e9, 5e9, 10e9, 20e9, 40e9];
-    let mut csv = CsvWriter::create(
-        "results/fig7_latency_vs_server_compute.csv",
-        &["f_server_ghz", "proposed", "baseline_a", "baseline_b", "baseline_c", "baseline_d"],
-    )?;
+    let base = ScenarioBuilder::preset("paper")?;
+    let cfg = base.config();
+    let reg = PolicyRegistry::paper_suite(&cfg.train.ranks, cfg.system.seed, 5);
+    let report = SweepRunner::new(&base)
+        .over(SweepAxis::server_compute_ghz(&[2.5, 5.0, 10.0, 20.0, 40.0]))
+        .policies(reg.resolve("all")?)
+        .run()?;
     println!("Fig.7: total latency (s) vs main-server compute");
-    println!(
-        "{:>10} {:>12} {:>12} {:>12} {:>12} {:>12}",
-        "f_s (GHz)", "proposed", "a", "b", "c", "d"
-    );
-    for &fs in &f_servers {
-        let mut cfg = base.clone();
-        cfg.system.f_server = fs;
-        let scn = sfllm::sim::build_scenario(&cfg)?;
-        let [p, a, b, c, d] = compare_all(&scn, &conv, &cfg.train.ranks, cfg.system.seed, 5)?;
-        println!(
-            "{:>10.1} {:>12.1} {:>12.1} {:>12.1} {:>12.1} {:>12.1}",
-            fs / 1e9, p, a, b, c, d
-        );
-        csv.row_f64(&[fs / 1e9, p, a, b, c, d])?;
-    }
-    csv.flush()?;
+    report.print_table();
+    report.write_csv("results/fig7_latency_vs_server_compute.csv")?;
     println!("series written to results/fig7_latency_vs_server_compute.csv");
     Ok(())
 }

@@ -8,36 +8,20 @@
 //!
 //! Writes `results/fig8_latency_vs_power.csv`.
 
-use sfllm::config::Config;
-use sfllm::delay::ConvergenceModel;
-use sfllm::opt::baselines::compare_all;
-use sfllm::util::csv::CsvWriter;
+use sfllm::opt::PolicyRegistry;
+use sfllm::sim::{ScenarioBuilder, SweepAxis, SweepRunner};
 
 fn main() -> anyhow::Result<()> {
-    let base = Config::paper_defaults();
-    let conv = ConvergenceModel::paper_default();
-    let p_max_dbm = [29.76, 33.76, 37.76, 41.76, 45.76];
-    let mut csv = CsvWriter::create(
-        "results/fig8_latency_vs_power.csv",
-        &["p_max_dbm", "proposed", "baseline_a", "baseline_b", "baseline_c", "baseline_d"],
-    )?;
+    let base = ScenarioBuilder::preset("paper")?;
+    let cfg = base.config();
+    let reg = PolicyRegistry::paper_suite(&cfg.train.ranks, cfg.system.seed, 5);
+    let report = SweepRunner::new(&base)
+        .over(SweepAxis::p_max_dbm(&[29.76, 33.76, 37.76, 41.76, 45.76]))
+        .policies(reg.resolve("all")?)
+        .run()?;
     println!("Fig.8: total latency (s) vs max client transmit power");
-    println!(
-        "{:>10} {:>12} {:>12} {:>12} {:>12} {:>12}",
-        "p (dBm)", "proposed", "a", "b", "c", "d"
-    );
-    for &pm in &p_max_dbm {
-        let mut cfg = base.clone();
-        cfg.system.p_max_dbm = pm;
-        let scn = sfllm::sim::build_scenario(&cfg)?;
-        let [p, a, b, c, d] = compare_all(&scn, &conv, &cfg.train.ranks, cfg.system.seed, 5)?;
-        println!(
-            "{:>10.2} {:>12.1} {:>12.1} {:>12.1} {:>12.1} {:>12.1}",
-            pm, p, a, b, c, d
-        );
-        csv.row_f64(&[pm, p, a, b, c, d])?;
-    }
-    csv.flush()?;
+    report.print_table();
+    report.write_csv("results/fig8_latency_vs_power.csv")?;
     println!("series written to results/fig8_latency_vs_power.csv");
     Ok(())
 }

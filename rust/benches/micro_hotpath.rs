@@ -14,13 +14,13 @@
 
 use std::time::Instant;
 
-use sfllm::config::Config;
 use sfllm::coordinator::mock::MockModel;
 use sfllm::coordinator::{train, OptKind, Optimizer, TrainOptions};
 use sfllm::delay::ConvergenceModel;
 use sfllm::model::lora::{AdapterSet, Tensor};
 use sfllm::opt::bcd::{self, BcdOptions};
 use sfllm::opt::{assignment, power};
+use sfllm::sim::ScenarioBuilder;
 
 fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     // warmup
@@ -46,8 +46,7 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
 }
 
 fn main() -> anyhow::Result<()> {
-    let cfg = Config::paper_defaults();
-    let scn = sfllm::sim::build_scenario(&cfg)?;
+    let scn = ScenarioBuilder::new().build()?;
     let conv = ConvergenceModel::paper_default();
 
     println!("L3 hot-path micro-benchmarks (Table II scenario, K=5, M=N=20):");

@@ -127,6 +127,14 @@ impl Config {
     /// Load from a TOML document, starting from paper defaults.
     pub fn from_toml(doc: &TomlDoc) -> Result<Config> {
         let mut c = Config::paper_defaults();
+        c.apply_toml(doc)?;
+        Ok(c)
+    }
+
+    /// Overlay a TOML document onto this config (used to layer a file
+    /// on top of a scenario preset; untouched keys keep their values).
+    pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<()> {
+        let c = self;
         let s = &mut c.system;
         s.clients = doc.usize_or("system.clients", s.clients)?;
         s.subch_main = doc.usize_or("system.subch_main", s.subch_main)?;
@@ -162,24 +170,29 @@ impl Config {
                 .collect();
         }
         c.model = doc.str_or("model", &c.model)?;
-        Ok(c)
+        Ok(())
     }
 
     /// Load from an optional `--config path` plus CLI overrides.
     pub fn from_args(args: &mut Args) -> Result<Config> {
-        let mut c = match args.get("config") {
-            Some(path) => {
-                let text = std::fs::read_to_string(&path)?;
-                Config::from_toml(&TomlDoc::parse(&text)?)
-            }
-            None => Ok(Config::paper_defaults()),
-        }?;
-        c.system.clients = args.usize_or("clients", c.system.clients)?;
-        c.system.seed = args.u64_or("seed", c.system.seed)?;
-        c.model = args.str_or("model", &c.model);
-        c.train.batch = args.usize_or("batch", c.train.batch)?;
-        c.train.local_steps = args.usize_or("local-steps", c.train.local_steps)?;
+        let mut c = Config::paper_defaults();
+        c.apply_file_and_args(args)?;
         Ok(c)
+    }
+
+    /// Overlay an optional `--config path` TOML file, then the CLI
+    /// override flags, onto this config.
+    pub fn apply_file_and_args(&mut self, args: &mut Args) -> Result<()> {
+        if let Some(path) = args.get("config") {
+            let text = std::fs::read_to_string(&path)?;
+            self.apply_toml(&TomlDoc::parse(&text)?)?;
+        }
+        self.system.clients = args.usize_or("clients", self.system.clients)?;
+        self.system.seed = args.u64_or("seed", self.system.seed)?;
+        self.model = args.str_or("model", &self.model);
+        self.train.batch = args.usize_or("batch", self.train.batch)?;
+        self.train.local_steps = args.usize_or("local-steps", self.train.local_steps)?;
+        Ok(())
     }
 }
 

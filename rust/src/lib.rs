@@ -25,14 +25,18 @@
 //!   convergence-steps model.
 //! * [`opt`] — Algorithm 2 (greedy subchannel assignment), the exact
 //!   convex power-control solver for P2, exhaustive split/rank search
-//!   (P3/P4), the BCD loop (Algorithm 3), and baselines a–d.
+//!   (P3/P4), the BCD loop (Algorithm 3), baselines a–d, and the
+//!   [`opt::policy`] layer: the `AllocationPolicy` trait + string-keyed
+//!   `PolicyRegistry` every experiment selects schemes from.
 //! * [`runtime`] — PJRT engine: load HLO-text artifacts, compile once,
 //!   execute from the training hot path.
 //! * [`data`] — synthetic E2E-style corpus generator + byte tokenizer.
 //! * [`coordinator`] — Algorithm 1 end-to-end: threaded clients, main
 //!   server, federated server, SGD + FedAvg on host buffers.
-//! * [`sim`] — experiment harness: scenario construction, sweeps, and
-//!   the latency evaluation used by every figure bench.
+//! * [`sim`] — experiment harness: `ScenarioBuilder` (seeded scenario
+//!   construction with heterogeneity presets) and `SweepRunner`
+//!   (multi-threaded policy × grid sweeps with CSV/JSON reports), the
+//!   machinery behind every figure bench and the CLI subcommands.
 
 pub mod config;
 pub mod coordinator;

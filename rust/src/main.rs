@@ -4,12 +4,23 @@
 //!
 //! * `train`    — run split-federated fine-tuning (Algorithm 1) over an
 //!                AOT artifact variant, logging the loss curve to CSV;
-//! * `optimize` — run the joint resource-allocation optimizer
-//!                (Algorithm 3) on a wireless scenario and print the
+//! * `optimize` — solve one scenario with a named allocation policy
+//!                (default: the proposed Algorithm 3) and print the
 //!                chosen allocation;
-//! * `latency`  — evaluate the proposed scheme against baselines a–d;
+//! * `latency`  — evaluate policies side by side on one scenario
+//!                (default: `proposed` vs baselines a–d);
+//! * `sweep`    — run a policy sweep along a named axis across worker
+//!                threads, writing CSV/JSON reports;
 //! * `table3`   — print the GPT2-S complexity table (paper Table III);
 //! * `info`     — list available artifact variants.
+//!
+//! Scenario flags shared by `optimize`/`latency`/`sweep`:
+//! `--preset <paper|dense_cell|weak_edge|asymmetric_links>`,
+//! `--config <toml>`, `--clients`, `--seed`, `--model`, `--batch`,
+//! `--local-steps`. Policy flags: `--policy`/`--policies` (names from
+//! the registry, comma-separated, or `all`) and `--draws` (baseline
+//! averaging). `sweep` additionally takes `--threads` (grid workers;
+//! 0 = all cores).
 //!
 //! Defaults reproduce the paper's Table II setup.
 
@@ -18,10 +29,9 @@ use sfllm::config::Config;
 use sfllm::coordinator::{train, OptKind, TrainOptions};
 use sfllm::delay::ConvergenceModel;
 use sfllm::model::{Gpt2Config, WorkloadProfile};
-use sfllm::opt::baselines;
-use sfllm::opt::bcd::{self, BcdOptions};
+use sfllm::opt::PolicyRegistry;
 use sfllm::runtime::{Manifest, SflModel, SflRuntime};
-use sfllm::sim;
+use sfllm::sim::{ScenarioBuilder, SweepAxis, SweepRunner};
 use sfllm::util::cli::Args;
 use sfllm::util::csv::CsvWriter;
 
@@ -43,15 +53,17 @@ fn run() -> Result<()> {
         "train" => cmd_train(&mut args),
         "optimize" => cmd_optimize(&mut args),
         "latency" => cmd_latency(&mut args),
+        "sweep" => cmd_sweep(&mut args),
         "table3" => cmd_table3(&mut args),
         "info" => cmd_info(&mut args),
         _ => {
             println!(
                 "sfllm — split federated learning for LLMs (paper reproduction)\n\n\
-                 usage: sfllm <train|optimize|latency|table3|info> [--options]\n\n\
+                 usage: sfllm <train|optimize|latency|sweep|table3|info> [--options]\n\n\
                  train     run Algorithm 1 over an artifact variant\n\
-                 optimize  run the BCD resource optimizer (Algorithm 3)\n\
-                 latency   compare proposed allocation vs baselines a-d\n\
+                 optimize  solve one scenario with a named policy (default: proposed)\n\
+                 latency   compare policies (proposed vs baselines a-d) on one scenario\n\
+                 sweep     sweep policies along an axis (--axis, --values, --threads)\n\
                  table3    print the GPT2-S complexity table (Table III)\n\
                  info      list artifact variants"
             );
@@ -62,6 +74,21 @@ fn run() -> Result<()> {
 
 fn artifacts_dir(args: &mut Args) -> String {
     args.str_or("artifacts", "artifacts")
+}
+
+/// Shared scenario flags: `--preset` as the base, then `--config` TOML
+/// and individual CLI overrides layered on top.
+fn builder_from_args(args: &mut Args) -> Result<ScenarioBuilder> {
+    let preset = args.str_or("preset", "paper");
+    let mut cfg = ScenarioBuilder::preset(&preset)?.into_config();
+    cfg.apply_file_and_args(args)?;
+    Ok(ScenarioBuilder::from_config(cfg))
+}
+
+/// Shared policy flags: the paper suite parameterized by the scenario's
+/// rank candidates/seed and `--draws`.
+fn registry_for(cfg: &Config, draws: usize) -> PolicyRegistry {
+    PolicyRegistry::paper_suite(&cfg.train.ranks, cfg.system.seed, draws)
 }
 
 fn cmd_train(args: &mut Args) -> Result<()> {
@@ -119,47 +146,114 @@ fn cmd_train(args: &mut Args) -> Result<()> {
 }
 
 fn cmd_optimize(args: &mut Args) -> Result<()> {
-    let cfg = Config::from_args(args)?;
+    let policy_name = args.str_or("policy", "proposed");
+    let draws = args.usize_or("draws", 5)?;
+    let builder = builder_from_args(args)?;
     args.finish()?;
-    let scn = sim::build_scenario(&cfg)?;
+
+    let scn = builder.build()?;
     let conv = ConvergenceModel::paper_default();
-    let opts = BcdOptions {
-        ranks: cfg.train.ranks.clone(),
-        ..BcdOptions::default()
-    };
-    let res = bcd::optimize(&scn, &conv, &opts)?;
-    println!("BCD converged in {} iterations", res.iterations);
-    println!("objective trajectory: {:?}", res.trajectory);
+    let reg = registry_for(builder.config(), draws);
+    let out = reg.get(&policy_name)?.solve(&scn, &conv)?;
+
+    match &out.trajectory {
+        Some(traj) => {
+            println!("{policy_name} converged in {} iterations", out.iterations);
+            println!("objective trajectory: {traj:?}");
+        }
+        None => println!(
+            "{policy_name}: mean objective over {} seeded draws {:.2} s; \
+             showing the best draw's allocation",
+            out.iterations, out.objective
+        ),
+    }
     println!(
         "chosen: split l_c={} rank r={}  ->  total delay {:.2} s",
-        res.alloc.l_c, res.alloc.rank, res.objective
+        out.alloc.l_c,
+        out.alloc.rank,
+        scn.total_delay(&out.alloc, &conv)
     );
     for k in 0..scn.k() {
         println!(
             "  client {k}: main subch {:?} ({:.2} W), fed subch {:?} ({:.2} W)",
-            res.alloc.assign_main[k],
-            scn.power_main(&res.alloc, k),
-            res.alloc.assign_fed[k],
-            scn.power_fed(&res.alloc, k),
+            out.alloc.assign_main[k],
+            scn.power_main(&out.alloc, k),
+            out.alloc.assign_fed[k],
+            scn.power_fed(&out.alloc, k),
         );
     }
     Ok(())
 }
 
 fn cmd_latency(args: &mut Args) -> Result<()> {
+    let spec = args.str_or("policies", "all");
     let draws = args.usize_or("draws", 5)?;
-    let cfg = Config::from_args(args)?;
+    let out = args.get("out");
+    let builder = builder_from_args(args)?;
     args.finish()?;
-    let scn = sim::build_scenario(&cfg)?;
-    let conv = ConvergenceModel::paper_default();
-    let [p, a, b, c, d] =
-        baselines::compare_all(&scn, &conv, &cfg.train.ranks, cfg.system.seed, draws)?;
-    println!("total training delay (s), paper baselines (lower is better):");
-    println!("  proposed    {p:10.2}");
-    println!("  baseline a  {a:10.2}  (random everything)  x{:.2}", a / p);
-    println!("  baseline b  {b:10.2}  (random comm)        x{:.2}", b / p);
-    println!("  baseline c  {c:10.2}  (random split)       x{:.2}", c / p);
-    println!("  baseline d  {d:10.2}  (random rank)        x{:.2}", d / p);
+
+    // a latency comparison is a single-point sweep, so no --threads here
+    let reg = registry_for(builder.config(), draws);
+    let report = SweepRunner::new(&builder)
+        .policies(reg.resolve(&spec)?)
+        .threads(1)
+        .run()?;
+    let point = &report.points[0];
+
+    println!("total training delay (s), lower is better:");
+    let objectives = point.objectives();
+    let proposed = report
+        .policy_names
+        .iter()
+        .position(|n| n == "proposed")
+        .map(|i| objectives[i]);
+    for (name, t) in report.policy_names.iter().zip(&objectives) {
+        match proposed {
+            Some(p) if p > 0.0 => println!("  {name:12} {t:10.2}  x{:.2}", t / p),
+            _ => println!("  {name:12} {t:10.2}"),
+        }
+    }
+    if let Some(path) = out {
+        report.write_csv(&path)?;
+        println!("report written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &mut Args) -> Result<()> {
+    let axis_name = args
+        .get("axis")
+        .context("--axis required (bandwidth|client-compute|server-compute|power|clients)")?;
+    let values_spec = args
+        .get("values")
+        .context("--values required (comma-separated numbers, in the axis display unit)")?;
+    let values: Vec<f64> = values_spec
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse::<f64>().with_context(|| format!("bad --values entry '{s}'")))
+        .collect::<Result<_>>()?;
+    let spec = args.str_or("policies", "all");
+    let draws = args.usize_or("draws", 5)?;
+    let threads = args.usize_or("threads", 0)?;
+    let out = args.str_or("out", "results/sweep.csv");
+    let json = args.get("json");
+    let builder = builder_from_args(args)?;
+    args.finish()?;
+
+    let reg = registry_for(builder.config(), draws);
+    let report = SweepRunner::new(&builder)
+        .over(SweepAxis::by_name(&axis_name, &values)?)
+        .policies(reg.resolve(&spec)?)
+        .threads(threads)
+        .run()?;
+    report.print_table();
+    report.write_csv(&out)?;
+    println!("series written to {out}");
+    if let Some(path) = json {
+        report.write_json(&path)?;
+        println!("json report written to {path}");
+    }
     Ok(())
 }
 

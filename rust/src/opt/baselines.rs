@@ -168,6 +168,15 @@ pub fn baseline_d(
 /// Run the proposed scheme plus all four baselines; returns
 /// `(proposed, a, b, c, d)` objectives, averaging the random baselines
 /// over `draws` seeded repetitions.
+///
+/// Deprecated: the experiment API now expresses this as a policy list —
+/// `PolicyRegistry::paper_suite(ranks, seed, draws).resolve("all")` run
+/// through a [`crate::sim::SweepRunner`] (or `solve`d directly). The
+/// shim is kept so existing callers migrate in-tree; its draw streams
+/// differ slightly from per-policy solves (one shared rng across all
+/// four baselines per draw here, an independent stream per policy
+/// there), which does not change any qualitative result.
+#[deprecated(note = "use opt::PolicyRegistry::paper_suite(..) with sim::SweepRunner")]
 pub fn compare_all(
     scn: &Scenario,
     conv: &ConvergenceModel,
@@ -194,6 +203,7 @@ pub fn compare_all(
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // compare_all's behaviour is pinned by these tests
     use super::*;
     use crate::delay::testutil::toy_scenario;
 

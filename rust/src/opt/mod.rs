@@ -12,13 +12,21 @@
 //! * [`rank`] — P4, exhaustive search over candidate ranks;
 //! * [`bcd`] — Algorithm 3, the alternating (block-coordinate-descent)
 //!   loop over the four subproblems;
-//! * [`baselines`] — baselines a–d from Section VII-C.
+//! * [`baselines`] — baselines a–d from Section VII-C (the raw seeded
+//!   draw functions);
+//! * [`policy`] — the experiment-facing API: the [`AllocationPolicy`]
+//!   trait over all of the above, plus the string-keyed
+//!   [`PolicyRegistry`] (`proposed`, `baseline_a` … `baseline_d`) that
+//!   the CLI, the figure benches, and [`crate::sim::SweepRunner`]
+//!   select policies from.
 
 pub mod assignment;
 pub mod baselines;
 pub mod bcd;
+pub mod policy;
 pub mod power;
 pub mod rank;
 pub mod split;
 
 pub use bcd::{BcdOptions, BcdResult};
+pub use policy::{AllocationPolicy, PolicyOutcome, PolicyRegistry};

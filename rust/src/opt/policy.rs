@@ -1,0 +1,347 @@
+//! The experiment-facing allocation-policy API.
+//!
+//! The paper's evaluation (Sec. VII-C, Figs. 5–8) is a matrix of
+//! *policies × scenarios × sweep axes*. This module provides the policy
+//! leg of that matrix: [`AllocationPolicy`] abstracts "given a scenario,
+//! produce an allocation and its objective", with the proposed BCD
+//! scheme (Algorithm 3) and baselines a–d as implementations, and a
+//! string-keyed [`PolicyRegistry`] so the CLI, benches, and sweeps can
+//! select policies by name (`proposed`, `baseline_a` … `baseline_d`).
+//!
+//! Policies are `Send + Sync` and stateless across calls — any
+//! randomness (the baselines' draws) is re-seeded inside `solve` — so a
+//! single policy instance can be shared by every worker thread of a
+//! [`crate::sim::SweepRunner`] and still produce bit-identical results
+//! at any thread count.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::delay::{Allocation, ConvergenceModel, Scenario};
+use crate::opt::baselines;
+use crate::opt::bcd::{self, BcdOptions};
+use crate::util::rng::Rng;
+
+/// Everything a policy reports for one scenario.
+#[derive(Clone, Debug)]
+pub struct PolicyOutcome {
+    /// Name of the policy that produced this outcome.
+    pub policy: String,
+    /// The chosen allocation. For draw-averaged baselines this is the
+    /// best draw's allocation while [`PolicyOutcome::objective`] is the
+    /// mean over draws (the quantity the paper plots).
+    pub alloc: Allocation,
+    /// Total training delay T (Eq. 17), seconds.
+    pub objective: f64,
+    /// Objective after every outer iteration, when the policy is
+    /// iterative (BCD); `None` for one-shot baselines.
+    pub trajectory: Option<Vec<f64>>,
+    /// Outer iterations (BCD) or random draws (baselines).
+    pub iterations: usize,
+}
+
+/// A named allocation scheme: scenario in, allocation + objective out.
+///
+/// Implementations must be deterministic functions of
+/// `(self, scenario, convergence model)` — see the module docs.
+pub trait AllocationPolicy: Send + Sync {
+    /// Stable identifier used by [`PolicyRegistry`] and report columns.
+    fn name(&self) -> &str;
+
+    /// Solve the scenario, returning the allocation and objective.
+    fn solve(&self, scn: &Scenario, conv: &ConvergenceModel) -> Result<PolicyOutcome>;
+}
+
+/// The proposed scheme: Algorithm 3, BCD over subproblems P1–P4.
+#[derive(Clone, Debug)]
+pub struct Proposed {
+    pub opts: BcdOptions,
+}
+
+impl Proposed {
+    pub fn new(opts: BcdOptions) -> Proposed {
+        Proposed { opts }
+    }
+
+    /// Default BCD options with the given candidate rank set.
+    pub fn with_ranks(ranks: &[usize]) -> Proposed {
+        Proposed {
+            opts: BcdOptions {
+                ranks: ranks.to_vec(),
+                ..BcdOptions::default()
+            },
+        }
+    }
+}
+
+impl AllocationPolicy for Proposed {
+    fn name(&self) -> &str {
+        "proposed"
+    }
+
+    fn solve(&self, scn: &Scenario, conv: &ConvergenceModel) -> Result<PolicyOutcome> {
+        let res = bcd::optimize(scn, conv, &self.opts)?;
+        Ok(PolicyOutcome {
+            policy: self.name().to_string(),
+            alloc: res.alloc,
+            objective: res.objective,
+            trajectory: Some(res.trajectory),
+            iterations: res.iterations,
+        })
+    }
+}
+
+/// Which of the paper's four baselines a [`RandomBaseline`] runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BaselineKind {
+    /// a — random subchannels, PSD, split, and rank.
+    A,
+    /// b — random communication; proposed rank + split.
+    B,
+    /// c — random split; proposed subchannel/power/rank.
+    C,
+    /// d — random rank; proposed subchannel/power/split.
+    D,
+}
+
+impl BaselineKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            BaselineKind::A => "baseline_a",
+            BaselineKind::B => "baseline_b",
+            BaselineKind::C => "baseline_c",
+            BaselineKind::D => "baseline_d",
+        }
+    }
+
+    /// Short human description for tables.
+    pub fn describe(self) -> &'static str {
+        match self {
+            BaselineKind::A => "random everything",
+            BaselineKind::B => "random comm",
+            BaselineKind::C => "random split",
+            BaselineKind::D => "random rank",
+        }
+    }
+}
+
+/// A seeded, draw-averaged baseline policy (paper Sec. VII-C).
+///
+/// Each draw re-seeds its own [`Rng`] from `(seed, draw index)`, so the
+/// result is independent of call order and thread placement.
+#[derive(Clone, Debug)]
+pub struct RandomBaseline {
+    pub kind: BaselineKind,
+    pub ranks: Vec<usize>,
+    pub seed: u64,
+    pub draws: usize,
+}
+
+impl RandomBaseline {
+    pub fn new(kind: BaselineKind, ranks: &[usize], seed: u64, draws: usize) -> RandomBaseline {
+        RandomBaseline {
+            kind,
+            ranks: ranks.to_vec(),
+            seed,
+            draws: draws.max(1),
+        }
+    }
+
+    fn draw_rng(&self, draw: u64) -> Rng {
+        Rng::new(self.seed ^ draw.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+}
+
+impl AllocationPolicy for RandomBaseline {
+    fn name(&self) -> &str {
+        self.kind.label()
+    }
+
+    fn solve(&self, scn: &Scenario, conv: &ConvergenceModel) -> Result<PolicyOutcome> {
+        let mut sum = 0.0;
+        let mut best: Option<(Allocation, f64)> = None;
+        for d in 0..self.draws {
+            let mut rng = self.draw_rng(d as u64);
+            let (alloc, t) = match self.kind {
+                BaselineKind::A => baselines::baseline_a(scn, conv, &self.ranks, &mut rng),
+                BaselineKind::B => baselines::baseline_b(scn, conv, &self.ranks, &mut rng),
+                BaselineKind::C => baselines::baseline_c(scn, conv, &self.ranks, &mut rng)?,
+                BaselineKind::D => baselines::baseline_d(scn, conv, &self.ranks, &mut rng)?,
+            };
+            sum += t;
+            if best.as_ref().map(|&(_, bt)| t < bt).unwrap_or(true) {
+                best = Some((alloc, t));
+            }
+        }
+        let (alloc, _) = best.expect("draws >= 1");
+        Ok(PolicyOutcome {
+            policy: self.name().to_string(),
+            alloc,
+            objective: sum / self.draws as f64,
+            trajectory: None,
+            iterations: self.draws,
+        })
+    }
+}
+
+/// String-keyed policy lookup, preserving registration order (which
+/// becomes the column order of sweep reports).
+#[derive(Clone, Default)]
+pub struct PolicyRegistry {
+    policies: Vec<Arc<dyn AllocationPolicy>>,
+}
+
+impl PolicyRegistry {
+    pub fn new() -> PolicyRegistry {
+        PolicyRegistry::default()
+    }
+
+    /// The paper's evaluation suite: `proposed` plus `baseline_{a..d}`,
+    /// baselines averaged over `draws` seeded repetitions.
+    pub fn paper_suite(ranks: &[usize], seed: u64, draws: usize) -> PolicyRegistry {
+        let mut reg = PolicyRegistry::new();
+        reg.register(Arc::new(Proposed::with_ranks(ranks)));
+        for kind in [
+            BaselineKind::A,
+            BaselineKind::B,
+            BaselineKind::C,
+            BaselineKind::D,
+        ] {
+            reg.register(Arc::new(RandomBaseline::new(kind, ranks, seed, draws)));
+        }
+        reg
+    }
+
+    /// Add a policy; a same-named earlier registration is replaced in
+    /// place (so callers can override `proposed` with tuned options).
+    pub fn register(&mut self, policy: Arc<dyn AllocationPolicy>) {
+        match self.policies.iter().position(|p| p.name() == policy.name()) {
+            Some(i) => self.policies[i] = policy,
+            None => self.policies.push(policy),
+        }
+    }
+
+    /// Registered names, in registration order.
+    pub fn names(&self) -> Vec<String> {
+        self.policies.iter().map(|p| p.name().to_string()).collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.policies.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.policies.len()
+    }
+
+    /// Look one policy up by name.
+    pub fn get(&self, name: &str) -> Result<Arc<dyn AllocationPolicy>> {
+        self.policies
+            .iter()
+            .find(|p| p.name() == name)
+            .cloned()
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown policy '{name}' (available: {})",
+                    self.names().join(", ")
+                )
+            })
+    }
+
+    /// Resolve a CLI-style spec: `all`, or a comma-separated name list.
+    pub fn resolve(&self, spec: &str) -> Result<Vec<Arc<dyn AllocationPolicy>>> {
+        if spec.trim() == "all" {
+            return Ok(self.policies.clone());
+        }
+        spec.split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|name| self.get(name))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delay::testutil::toy_scenario;
+
+    const RANKS: [usize; 5] = [1, 2, 4, 6, 8];
+
+    fn suite() -> PolicyRegistry {
+        PolicyRegistry::paper_suite(&RANKS, 7, 2)
+    }
+
+    #[test]
+    fn registry_resolves_all_paper_policies_by_name() {
+        let reg = suite();
+        assert_eq!(
+            reg.names(),
+            vec!["proposed", "baseline_a", "baseline_b", "baseline_c", "baseline_d"]
+        );
+        for name in reg.names() {
+            assert_eq!(reg.get(&name).unwrap().name(), name);
+        }
+        assert!(reg.get("nope").is_err());
+    }
+
+    #[test]
+    fn resolve_handles_all_and_lists() {
+        let reg = suite();
+        assert_eq!(reg.resolve("all").unwrap().len(), 5);
+        let two = reg.resolve("proposed, baseline_c").unwrap();
+        assert_eq!(two[0].name(), "proposed");
+        assert_eq!(two[1].name(), "baseline_c");
+        assert!(reg.resolve("proposed,typo").is_err());
+    }
+
+    #[test]
+    fn register_replaces_same_name_in_place() {
+        let mut reg = suite();
+        reg.register(Arc::new(Proposed::new(BcdOptions {
+            max_iter: 3,
+            ..BcdOptions::default()
+        })));
+        assert_eq!(reg.len(), 5);
+        assert_eq!(reg.names()[0], "proposed");
+    }
+
+    #[test]
+    fn every_policy_is_feasible_on_the_toy_scenario() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        for policy in suite().resolve("all").unwrap() {
+            let out = policy.solve(&scn, &conv).unwrap();
+            assert_eq!(out.policy, policy.name());
+            assert!(out.objective.is_finite() && out.objective > 0.0, "{}", out.policy);
+            out.alloc
+                .validate(scn.main_link.subch.len(), scn.fed_link.subch.len())
+                .unwrap_or_else(|e| panic!("{}: {e}", policy.name()));
+            assert!(scn.power_feasible(&out.alloc, 1e-6), "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn policies_are_deterministic_across_calls() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        for policy in suite().resolve("all").unwrap() {
+            let a = policy.solve(&scn, &conv).unwrap();
+            let b = policy.solve(&scn, &conv).unwrap();
+            assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn proposed_reports_monotone_trajectory() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let out = suite().get("proposed").unwrap().solve(&scn, &conv).unwrap();
+        let traj = out.trajectory.expect("BCD must report a trajectory");
+        for w in traj.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "trajectory rose: {traj:?}");
+        }
+        assert_eq!(out.objective, *traj.last().unwrap());
+    }
+}

@@ -1,0 +1,306 @@
+//! Fluent, seeded scenario construction with named heterogeneity
+//! presets.
+//!
+//! [`ScenarioBuilder`] replaces the old `build_scenario` free function:
+//! it starts from a preset (or an explicit [`Config`]), lets callers
+//! override the knobs experiments actually sweep — clients, bandwidth,
+//! compute, power, seed — and then samples the geometry/fading exactly
+//! as Sec. VII-A prescribes. The same builder value can be rebuilt any
+//! number of times; identical settings give identical scenarios.
+
+use anyhow::{bail, Result};
+
+use crate::config::Config;
+use crate::delay::Scenario;
+use crate::model::{Gpt2Config, WorkloadProfile};
+use crate::net::{power, ChannelModel, Link, SubchannelSet, Topology};
+use crate::util::rng::Rng;
+
+/// Named scenario presets (see [`ScenarioBuilder::preset`]).
+pub const PRESETS: [&str; 4] = ["paper", "dense_cell", "weak_edge", "asymmetric_links"];
+
+/// Fluent scenario constructor over a [`Config`].
+#[derive(Clone, Debug)]
+pub struct ScenarioBuilder {
+    cfg: Config,
+}
+
+impl Default for ScenarioBuilder {
+    fn default() -> Self {
+        ScenarioBuilder::new()
+    }
+}
+
+impl ScenarioBuilder {
+    /// Start from the paper's Table II defaults.
+    pub fn new() -> ScenarioBuilder {
+        ScenarioBuilder {
+            cfg: Config::paper_defaults(),
+        }
+    }
+
+    /// Start from an explicit config (TOML/CLI loaded).
+    pub fn from_config(cfg: Config) -> ScenarioBuilder {
+        ScenarioBuilder { cfg }
+    }
+
+    /// Start from a named preset:
+    ///
+    /// * `paper` — Table II exactly (K=5, M=N=20, 500 kHz links);
+    /// * `dense_cell` — 24 clients in a 50 m cell, 48 subchannels and
+    ///   2 MHz per link: the many-client regime of FedsLLM-style
+    ///   deployments;
+    /// * `weak_edge` — 8 battery-class clients with skewed low compute
+    ///   (0.2–0.6 GHz, 512 FLOPs/cycle): stresses the split decision;
+    /// * `asymmetric_links` — wide main-server uplink (1 MHz / 32
+    ///   subchannels) against a narrow federated link (125 kHz / 8),
+    ///   with a far main server: stresses the two-link power trade.
+    pub fn preset(name: &str) -> Result<ScenarioBuilder> {
+        let mut cfg = Config::paper_defaults();
+        match name {
+            "paper" => {}
+            "dense_cell" => {
+                cfg.system.clients = 24;
+                cfg.system.subch_main = 48;
+                cfg.system.subch_fed = 48;
+                cfg.system.bandwidth_main_hz = 2e6;
+                cfg.system.bandwidth_fed_hz = 2e6;
+                cfg.system.d_max_m = 50.0;
+            }
+            "weak_edge" => {
+                cfg.system.clients = 8;
+                cfg.system.f_client_lo = 0.2e9;
+                cfg.system.f_client_hi = 0.6e9;
+                cfg.system.kappa_client = 1.0 / 512.0;
+            }
+            "asymmetric_links" => {
+                cfg.system.bandwidth_main_hz = 1e6;
+                cfg.system.subch_main = 32;
+                cfg.system.bandwidth_fed_hz = 125e3;
+                cfg.system.subch_fed = 8;
+                cfg.system.d_main_m = 200.0;
+            }
+            other => bail!(
+                "unknown scenario preset '{other}' (available: {})",
+                PRESETS.join(", ")
+            ),
+        }
+        Ok(ScenarioBuilder { cfg })
+    }
+
+    /// Scenario seed (placement, fading, capability draws).
+    pub fn seed(mut self, seed: u64) -> ScenarioBuilder {
+        self.cfg.system.seed = seed;
+        self
+    }
+
+    /// Number of participating clients K.
+    pub fn clients(mut self, k: usize) -> ScenarioBuilder {
+        self.cfg.system.clients = k;
+        self
+    }
+
+    /// Workload model variant (`gpt2-s`, `gpt2-m`, `tiny`, …).
+    pub fn model(mut self, name: &str) -> ScenarioBuilder {
+        self.cfg.model = name.to_string();
+        self
+    }
+
+    /// Total uplink bandwidth to the main / federated server (Hz).
+    pub fn bandwidth_hz(mut self, main: f64, fed: f64) -> ScenarioBuilder {
+        self.cfg.system.bandwidth_main_hz = main;
+        self.cfg.system.bandwidth_fed_hz = fed;
+        self
+    }
+
+    /// Subchannel counts M (main link) and N (federated link).
+    pub fn subchannels(mut self, m: usize, n: usize) -> ScenarioBuilder {
+        self.cfg.system.subch_main = m;
+        self.cfg.system.subch_fed = n;
+        self
+    }
+
+    /// Client compute capability range [lo, hi] (cycles/s).
+    pub fn client_compute_hz(mut self, lo: f64, hi: f64) -> ScenarioBuilder {
+        self.cfg.system.f_client_lo = lo;
+        self.cfg.system.f_client_hi = hi;
+        self
+    }
+
+    /// Main-server compute capability (cycles/s).
+    pub fn server_compute_hz(mut self, f: f64) -> ScenarioBuilder {
+        self.cfg.system.f_server = f;
+        self
+    }
+
+    /// Per-client maximum transmit power (dBm).
+    pub fn p_max_dbm(mut self, dbm: f64) -> ScenarioBuilder {
+        self.cfg.system.p_max_dbm = dbm;
+        self
+    }
+
+    /// Escape hatch: arbitrary config mutation for axes the named
+    /// setters don't cover.
+    pub fn tweak<F: FnOnce(&mut Config)>(mut self, f: F) -> ScenarioBuilder {
+        f(&mut self.cfg);
+        self
+    }
+
+    /// The effective config this builder will sample from.
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    pub fn into_config(self) -> Config {
+        self.cfg
+    }
+
+    /// Sample the scenario: geometry and capability draws from the
+    /// config seed, shadowed channel gains, both FDMA links.
+    ///
+    /// Rejects configurations the optimizer cannot serve: zero clients,
+    /// or more clients than subchannels on either link (Algorithm 2 and
+    /// the baselines guarantee every client >= 1 subchannel per link
+    /// only when K <= M and K <= N).
+    pub fn build(&self) -> Result<Scenario> {
+        let s = &self.cfg.system;
+        if s.clients == 0 {
+            bail!("scenario has zero clients");
+        }
+        if s.clients > s.subch_main || s.clients > s.subch_fed {
+            bail!(
+                "{} clients exceed the subchannel counts (M={}, N={}); \
+                 every client needs at least one subchannel per link",
+                s.clients,
+                s.subch_main,
+                s.subch_fed
+            );
+        }
+        let mut rng = Rng::new(s.seed);
+        let topo = Topology::sample(
+            s.clients,
+            s.d_max_m,
+            s.d_main_m,
+            s.f_client_lo,
+            s.f_client_hi,
+            &mut rng,
+        );
+        let ch = ChannelModel::new(s.shadowing_db);
+        let mut gain_rng = rng.fork(0xC0FFEE);
+        let main_gain: Vec<f64> = topo
+            .clients
+            .iter()
+            .map(|c| ch.gain(c.d_main_m, &mut gain_rng))
+            .collect();
+        let fed_gain: Vec<f64> = topo
+            .clients
+            .iter()
+            .map(|c| ch.gain(c.d_fed_m, &mut gain_rng))
+            .collect();
+        let noise = power::dbm_per_hz_to_watt_per_hz(s.noise_dbm_hz);
+
+        let arch = Gpt2Config::by_name(&self.cfg.model)?;
+        let profile = WorkloadProfile::new(arch, self.cfg.train.seq);
+
+        Ok(Scenario {
+            profile,
+            topo,
+            main_link: Link {
+                subch: SubchannelSet::equal_split(s.bandwidth_main_hz, s.subch_main),
+                gain_product: s.gain_main,
+                noise_psd: noise,
+                client_gain: main_gain,
+            },
+            fed_link: Link {
+                subch: SubchannelSet::equal_split(s.bandwidth_fed_hz, s.subch_fed),
+                gain_product: s.gain_fed,
+                noise_psd: noise,
+                client_gain: fed_gain,
+            },
+            kappa_client: s.kappa_client,
+            kappa_server: s.kappa_server,
+            f_server: s.f_server,
+            batch: self.cfg.train.batch,
+            local_steps: self.cfg.train.local_steps,
+            p_max_w: power::dbm_to_watt(s.p_max_dbm),
+            p_th_main_w: power::dbm_to_watt(s.p_th_main_dbm),
+            p_th_fed_w: power::dbm_to_watt(s.p_th_fed_dbm),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_preset_matches_table_ii() {
+        let scn = ScenarioBuilder::preset("paper").unwrap().build().unwrap();
+        assert_eq!(scn.k(), 5);
+        assert_eq!(scn.main_link.subch.len(), 20);
+        assert_eq!(scn.profile.blocks.len(), 12); // gpt2-s
+        assert!((scn.p_max_w - 15.0).abs() < 0.05);
+        for &g in scn.main_link.client_gain.iter().chain(&scn.fed_link.client_gain) {
+            assert!(g > 0.0 && g < 1.0);
+        }
+    }
+
+    #[test]
+    fn unknown_preset_is_rejected_with_catalog() {
+        let err = ScenarioBuilder::preset("nope").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("dense_cell"), "{msg}");
+    }
+
+    #[test]
+    fn every_preset_builds_and_serves_all_clients() {
+        for name in PRESETS {
+            let b = ScenarioBuilder::preset(name).unwrap();
+            let scn = b.build().unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            assert!(scn.k() >= 1, "{name}");
+            // K <= M, N so every client can hold >= 1 subchannel per link
+            assert!(scn.main_link.subch.len() >= scn.k(), "{name}");
+            assert!(scn.fed_link.subch.len() >= scn.k(), "{name}");
+        }
+    }
+
+    #[test]
+    fn dense_cell_is_dense_and_weak_edge_is_weak() {
+        let dense = ScenarioBuilder::preset("dense_cell").unwrap();
+        assert!(dense.config().system.clients >= 20);
+        let weak = ScenarioBuilder::preset("weak_edge").unwrap();
+        let paper = ScenarioBuilder::preset("paper").unwrap();
+        assert!(weak.config().system.f_client_hi < paper.config().system.f_client_lo);
+    }
+
+    #[test]
+    fn same_seed_same_scenario_different_seed_differs() {
+        let b = ScenarioBuilder::new().seed(9);
+        let a = b.build().unwrap();
+        let c = b.build().unwrap();
+        assert_eq!(a.main_link.client_gain, c.main_link.client_gain);
+        let d = ScenarioBuilder::new().seed(10).build().unwrap();
+        assert_ne!(a.main_link.client_gain, d.main_link.client_gain);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let scn = ScenarioBuilder::new()
+            .clients(3)
+            .bandwidth_hz(250e3, 750e3)
+            .subchannels(10, 15)
+            .server_compute_hz(1e10)
+            .p_max_dbm(30.0)
+            .tweak(|c| c.train.batch = 2)
+            .build()
+            .unwrap();
+        assert_eq!(scn.k(), 3);
+        assert!((scn.main_link.subch.total_hz() - 250e3).abs() < 1e-6);
+        assert!((scn.fed_link.subch.total_hz() - 750e3).abs() < 1e-6);
+        assert_eq!(scn.main_link.subch.len(), 10);
+        assert_eq!(scn.fed_link.subch.len(), 15);
+        assert_eq!(scn.f_server, 1e10);
+        assert_eq!(scn.batch, 2);
+        assert!((scn.p_max_w - 1.0).abs() < 1e-9);
+    }
+}

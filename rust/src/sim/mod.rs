@@ -1,73 +1,39 @@
-//! Experiment harness: build [`Scenario`]s from a [`Config`], run
-//! parameter sweeps, and evaluate allocations — the machinery behind
-//! every figure bench (Figs. 5–8) and the resource-allocation example.
+//! Experiment harness: scenario construction, policy sweeps, reports.
+//!
+//! Three pieces (see DESIGN.md for the architecture):
+//!
+//! * [`builder`] — [`ScenarioBuilder`]: fluent, seeded scenario
+//!   construction with named heterogeneity presets (`paper`,
+//!   `dense_cell`, `weak_edge`, `asymmetric_links`);
+//! * [`mod@sweep`] — [`SweepAxis`] / [`SweepRunner`] / [`SweepReport`]:
+//!   declarative *policies × grid* sweeps fanned out across
+//!   `std::thread` workers, with deterministic CSV/JSON reports;
+//! * the policies themselves live in [`crate::opt::policy`].
+//!
+//! Every figure bench (Figs. 5–8), the `optimize`/`latency`/`sweep`
+//! CLI subcommands, and the resource-allocation example run on this
+//! API. The old `build_scenario`/`sweep` free functions remain as thin
+//! deprecated shims.
+
+pub mod builder;
+pub mod sweep;
+
+pub use self::builder::{ScenarioBuilder, PRESETS};
+pub use self::sweep::{PointResult, SweepAxis, SweepReport, SweepRunner};
 
 use anyhow::Result;
 
 use crate::config::Config;
 use crate::delay::Scenario;
-use crate::model::{Gpt2Config, WorkloadProfile};
-use crate::net::{power, ChannelModel, Link, SubchannelSet, Topology};
-use crate::util::rng::Rng;
 
-/// Build a scenario from a config: sample geometry/capabilities with the
-/// config seed, draw shadowed channel gains, construct both links.
+/// Build a scenario straight from a config.
+#[deprecated(note = "use sim::ScenarioBuilder::from_config(cfg).build()")]
 pub fn build_scenario(cfg: &Config) -> Result<Scenario> {
-    let s = &cfg.system;
-    let mut rng = Rng::new(s.seed);
-    let topo = Topology::sample(
-        s.clients,
-        s.d_max_m,
-        s.d_main_m,
-        s.f_client_lo,
-        s.f_client_hi,
-        &mut rng,
-    );
-    let ch = ChannelModel::new(s.shadowing_db);
-    let mut gain_rng = rng.fork(0xC0FFEE);
-    let main_gain: Vec<f64> = topo
-        .clients
-        .iter()
-        .map(|c| ch.gain(c.d_main_m, &mut gain_rng))
-        .collect();
-    let fed_gain: Vec<f64> = topo
-        .clients
-        .iter()
-        .map(|c| ch.gain(c.d_fed_m, &mut gain_rng))
-        .collect();
-    let noise = power::dbm_per_hz_to_watt_per_hz(s.noise_dbm_hz);
-
-    let arch = Gpt2Config::by_name(&cfg.model)?;
-    let profile = WorkloadProfile::new(arch, cfg.train.seq);
-
-    Ok(Scenario {
-        profile,
-        topo,
-        main_link: Link {
-            subch: SubchannelSet::equal_split(s.bandwidth_main_hz, s.subch_main),
-            gain_product: s.gain_main,
-            noise_psd: noise,
-            client_gain: main_gain,
-        },
-        fed_link: Link {
-            subch: SubchannelSet::equal_split(s.bandwidth_fed_hz, s.subch_fed),
-            gain_product: s.gain_fed,
-            noise_psd: noise,
-            client_gain: fed_gain,
-        },
-        kappa_client: s.kappa_client,
-        kappa_server: s.kappa_server,
-        f_server: s.f_server,
-        batch: cfg.train.batch,
-        local_steps: cfg.train.local_steps,
-        p_max_w: power::dbm_to_watt(s.p_max_dbm),
-        p_th_main_w: power::dbm_to_watt(s.p_th_main_dbm),
-        p_th_fed_w: power::dbm_to_watt(s.p_th_fed_dbm),
-    })
+    ScenarioBuilder::from_config(cfg.clone()).build()
 }
 
-/// A single sweep point: modify a copy of the base config, rebuild the
-/// scenario. Used by the figure benches.
+/// Materialize `(value, scenario)` pairs for a one-axis sweep.
+#[deprecated(note = "use sim::SweepRunner with a SweepAxis")]
 pub fn sweep<F: Fn(&mut Config, f64)>(
     base: &Config,
     values: &[f64],
@@ -77,43 +43,27 @@ pub fn sweep<F: Fn(&mut Config, f64)>(
     for &v in values {
         let mut cfg = base.clone();
         apply(&mut cfg, v);
-        out.push((v, build_scenario(&cfg)?));
+        out.push((v, ScenarioBuilder::from_config(cfg).build()?));
     }
     Ok(out)
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the shims themselves are under test here
     use super::*;
 
     #[test]
-    fn builds_paper_scenario() {
-        let cfg = Config::paper_defaults();
-        let scn = build_scenario(&cfg).unwrap();
-        assert_eq!(scn.k(), 5);
-        assert_eq!(scn.main_link.subch.len(), 20);
-        assert_eq!(scn.profile.blocks.len(), 12); // gpt2-s
-        assert!((scn.p_max_w - 15.0).abs() < 0.05);
-        // every gain positive and sane
-        for &g in scn.main_link.client_gain.iter().chain(&scn.fed_link.client_gain) {
-            assert!(g > 0.0 && g < 1.0);
-        }
-    }
-
-    #[test]
-    fn same_seed_same_scenario() {
+    fn build_scenario_shim_matches_builder() {
         let cfg = Config::paper_defaults();
         let a = build_scenario(&cfg).unwrap();
-        let b = build_scenario(&cfg).unwrap();
+        let b = ScenarioBuilder::from_config(cfg).build().unwrap();
         assert_eq!(a.main_link.client_gain, b.main_link.client_gain);
-        assert_eq!(
-            a.topo.clients.iter().map(|c| c.f_cycles).collect::<Vec<_>>(),
-            b.topo.clients.iter().map(|c| c.f_cycles).collect::<Vec<_>>()
-        );
+        assert_eq!(a.k(), b.k());
     }
 
     #[test]
-    fn sweep_applies_parameter() {
+    fn sweep_shim_applies_parameter() {
         let cfg = Config::paper_defaults();
         let pts = sweep(&cfg, &[250e3, 500e3, 1000e3], |c, v| {
             c.system.bandwidth_main_hz = v;

@@ -1,0 +1,524 @@
+//! Declarative parameter sweeps: *policies × scenario grid*, fanned out
+//! across `std::thread` workers.
+//!
+//! A [`SweepAxis`] names one config dimension and the values to visit
+//! (canned constructors cover the Figs. 5–8 axes); [`SweepRunner`]
+//! takes a base [`ScenarioBuilder`], one or more axes (their cartesian
+//! product forms the grid), and a policy list from the
+//! [`crate::opt::PolicyRegistry`], and produces a [`SweepReport`] with
+//! CSV/JSON writers.
+//!
+//! Every grid point is an independent pure computation (scenario
+//! sampling and all policies are seeded), so points are distributed
+//! over a work-stealing index and written back by position: reports are
+//! **byte-identical at any thread count** — asserted by the
+//! determinism test in `rust/tests/prop_policy.rs`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::Config;
+use crate::delay::ConvergenceModel;
+use crate::opt::policy::{AllocationPolicy, PolicyOutcome};
+use crate::sim::builder::ScenarioBuilder;
+use crate::util::csv::{ensure_parent_dir, escape_field};
+
+/// One sweep dimension: a report column name, the values to visit (in
+/// the column's display unit), and how a value maps onto the config.
+#[derive(Clone)]
+pub struct SweepAxis {
+    pub name: String,
+    pub values: Vec<f64>,
+    apply: Arc<dyn Fn(&mut Config, f64) + Send + Sync>,
+}
+
+impl SweepAxis {
+    /// A custom axis. `apply` receives the value exactly as listed in
+    /// `values`, so unit conversion belongs inside the closure.
+    pub fn new<F>(name: &str, values: &[f64], apply: F) -> SweepAxis
+    where
+        F: Fn(&mut Config, f64) + Send + Sync + 'static,
+    {
+        SweepAxis {
+            name: name.to_string(),
+            values: values.to_vec(),
+            apply: Arc::new(apply),
+        }
+    }
+
+    /// Fig. 5 axis: per-link bandwidth in kHz, applied to both links.
+    pub fn bandwidth_khz(values: &[f64]) -> SweepAxis {
+        SweepAxis::new("bandwidth_khz", values, |cfg, v| {
+            cfg.system.bandwidth_main_hz = v * 1e3;
+            cfg.system.bandwidth_fed_hz = v * 1e3;
+        })
+    }
+
+    /// Fig. 6 axis: client computing capability in FLOPs per cycle
+    /// (κ_client = 1/v).
+    pub fn client_flops_per_cycle(values: &[f64]) -> SweepAxis {
+        SweepAxis::new("client_flops_per_cycle", values, |cfg, v| {
+            cfg.system.kappa_client = 1.0 / v;
+        })
+    }
+
+    /// Fig. 7 axis: main-server capability in GHz (cycles/s × 1e9).
+    pub fn server_compute_ghz(values: &[f64]) -> SweepAxis {
+        SweepAxis::new("f_server_ghz", values, |cfg, v| {
+            cfg.system.f_server = v * 1e9;
+        })
+    }
+
+    /// Fig. 8 axis: per-client maximum transmit power in dBm.
+    pub fn p_max_dbm(values: &[f64]) -> SweepAxis {
+        SweepAxis::new("p_max_dbm", values, |cfg, v| {
+            cfg.system.p_max_dbm = v;
+        })
+    }
+
+    /// Scaling axis: number of participating clients K (values are
+    /// rounded; K >= 1 is enforced, and the scenario build rejects
+    /// grids where K exceeds the subchannel counts).
+    pub fn clients(values: &[f64]) -> SweepAxis {
+        SweepAxis::new("clients", values, |cfg, v| {
+            cfg.system.clients = v.round().max(1.0) as usize;
+        })
+    }
+
+    /// Canned axis lookup for the CLI (`sfllm sweep --axis <name>`).
+    pub fn by_name(name: &str, values: &[f64]) -> Result<SweepAxis> {
+        Ok(match name {
+            "bandwidth" | "bandwidth_khz" => SweepAxis::bandwidth_khz(values),
+            "client-compute" | "client_flops_per_cycle" => {
+                SweepAxis::client_flops_per_cycle(values)
+            }
+            "server-compute" | "f_server_ghz" => SweepAxis::server_compute_ghz(values),
+            "power" | "p_max_dbm" => SweepAxis::p_max_dbm(values),
+            "clients" => SweepAxis::clients(values),
+            other => bail!(
+                "unknown sweep axis '{other}' (available: bandwidth, \
+                 client-compute, server-compute, power, clients)"
+            ),
+        })
+    }
+}
+
+impl std::fmt::Debug for SweepAxis {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SweepAxis")
+            .field("name", &self.name)
+            .field("values", &self.values)
+            .finish()
+    }
+}
+
+/// One evaluated grid point.
+#[derive(Clone, Debug)]
+pub struct PointResult {
+    /// Axis coordinates, aligned with [`SweepReport::axis_names`].
+    pub coords: Vec<f64>,
+    /// Per-policy outcomes, aligned with [`SweepReport::policy_names`].
+    pub outcomes: Vec<PolicyOutcome>,
+}
+
+impl PointResult {
+    /// Objectives only, in policy order.
+    pub fn objectives(&self) -> Vec<f64> {
+        self.outcomes.iter().map(|o| o.objective).collect()
+    }
+}
+
+/// Structured result of a sweep run.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub axis_names: Vec<String>,
+    pub policy_names: Vec<String>,
+    pub points: Vec<PointResult>,
+}
+
+impl SweepReport {
+    /// CSV header: axis columns then one column per policy.
+    pub fn header(&self) -> Vec<String> {
+        self.axis_names
+            .iter()
+            .chain(self.policy_names.iter())
+            .cloned()
+            .collect()
+    }
+
+    /// The full report as a CSV string (used by the determinism test;
+    /// [`SweepReport::write_csv`] emits exactly these bytes). Header
+    /// fields are escaped like [`crate::util::csv::CsvWriter`] escapes
+    /// them; numeric rows never need quoting.
+    pub fn to_csv_string(&self) -> String {
+        let header: Vec<String> = self.header().iter().map(|f| escape_field(f)).collect();
+        let mut s = header.join(",");
+        s.push('\n');
+        for p in &self.points {
+            let row: Vec<String> = p
+                .coords
+                .iter()
+                .chain(p.objectives().iter())
+                .map(|v| format!("{v}"))
+                .collect();
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Write the CSV — exactly the [`SweepReport::to_csv_string`] bytes;
+    /// parent directories are created as needed.
+    pub fn write_csv(&self, path: &str) -> Result<()> {
+        ensure_parent_dir(path)?;
+        std::fs::write(path, self.to_csv_string())
+            .with_context(|| format!("writing {path}"))
+    }
+
+    /// The report as a JSON string, including each policy's chosen
+    /// split/rank (richer than the CSV objectives).
+    pub fn to_json_string(&self) -> String {
+        fn jstr(s: &str) -> String {
+            let mut out = String::with_capacity(s.len() + 2);
+            out.push('"');
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    c => out.push(c),
+                }
+            }
+            out.push('"');
+            out
+        }
+        fn jnum(v: f64) -> String {
+            if v.is_finite() {
+                format!("{v}")
+            } else {
+                "null".to_string()
+            }
+        }
+        let axes: Vec<String> = self.axis_names.iter().map(|s| jstr(s)).collect();
+        let pols: Vec<String> = self.policy_names.iter().map(|s| jstr(s)).collect();
+        let mut points = Vec::with_capacity(self.points.len());
+        for p in &self.points {
+            let coords: Vec<String> = self
+                .axis_names
+                .iter()
+                .zip(&p.coords)
+                .map(|(n, v)| format!("{}: {}", jstr(n), jnum(*v)))
+                .collect();
+            let outcomes: Vec<String> = p
+                .outcomes
+                .iter()
+                .map(|o| {
+                    format!(
+                        "{}: {{\"objective\": {}, \"l_c\": {}, \"rank\": {}, \"iterations\": {}}}",
+                        jstr(&o.policy),
+                        jnum(o.objective),
+                        o.alloc.l_c,
+                        o.alloc.rank,
+                        o.iterations
+                    )
+                })
+                .collect();
+            points.push(format!(
+                "{{\"coords\": {{{}}}, \"policies\": {{{}}}}}",
+                coords.join(", "),
+                outcomes.join(", ")
+            ));
+        }
+        format!(
+            "{{\n  \"axes\": [{}],\n  \"policies\": [{}],\n  \"points\": [\n    {}\n  ]\n}}\n",
+            axes.join(", "),
+            pols.join(", "),
+            points.join(",\n    ")
+        )
+    }
+
+    /// Write the JSON report (parent directories are created as needed).
+    pub fn write_json(&self, path: &str) -> Result<()> {
+        ensure_parent_dir(path)?;
+        std::fs::write(path, self.to_json_string())
+            .with_context(|| format!("writing {path}"))
+    }
+
+    /// Pretty console table; adds a reduction column when both
+    /// `proposed` and `baseline_a` are present (the paper's headline
+    /// "up to 60% lower than random" comparison).
+    pub fn print_table(&self) {
+        let prop = self.policy_names.iter().position(|n| n == "proposed");
+        let base_a = self.policy_names.iter().position(|n| n == "baseline_a");
+        let with_reduction = prop.is_some() && base_a.is_some();
+        for name in &self.axis_names {
+            print!("{name:>24} ");
+        }
+        for name in &self.policy_names {
+            print!("{name:>12} ");
+        }
+        if with_reduction {
+            print!("{:>10}", "red. vs a");
+        }
+        println!();
+        for p in &self.points {
+            for v in &p.coords {
+                print!("{v:>24.2} ");
+            }
+            let obj = p.objectives();
+            for v in &obj {
+                print!("{v:>12.1} ");
+            }
+            if let (Some(ip), Some(ia)) = (prop, base_a) {
+                print!("{:>9.0}%", 100.0 * (1.0 - obj[ip] / obj[ia]));
+            }
+            println!();
+        }
+    }
+}
+
+/// Declarative sweep executor. See the module docs for the contract.
+pub struct SweepRunner {
+    base: Config,
+    conv: ConvergenceModel,
+    axes: Vec<SweepAxis>,
+    policies: Vec<Arc<dyn AllocationPolicy>>,
+    threads: usize,
+}
+
+impl SweepRunner {
+    /// Start from a scenario builder (its config is the sweep base).
+    pub fn new(base: &ScenarioBuilder) -> SweepRunner {
+        SweepRunner {
+            base: base.config().clone(),
+            conv: ConvergenceModel::paper_default(),
+            axes: Vec::new(),
+            policies: Vec::new(),
+            threads: 0,
+        }
+    }
+
+    /// Add a sweep axis; multiple axes form a cartesian grid (later
+    /// axes vary fastest). With no axes the sweep is a single point.
+    pub fn over(mut self, axis: SweepAxis) -> SweepRunner {
+        self.axes.push(axis);
+        self
+    }
+
+    /// The policies to evaluate at every grid point (report columns,
+    /// in order). Usually `registry.resolve("all")?`.
+    pub fn policies(mut self, policies: Vec<Arc<dyn AllocationPolicy>>) -> SweepRunner {
+        self.policies = policies;
+        self
+    }
+
+    /// Override the convergence model E(r) (default: paper fit).
+    pub fn convergence(mut self, conv: ConvergenceModel) -> SweepRunner {
+        self.conv = conv;
+        self
+    }
+
+    /// Worker thread count; 0 (default) means all available cores.
+    pub fn threads(mut self, n: usize) -> SweepRunner {
+        self.threads = n;
+        self
+    }
+
+    fn grid(&self) -> Vec<Vec<f64>> {
+        let mut grid: Vec<Vec<f64>> = vec![Vec::new()];
+        for axis in &self.axes {
+            let mut next = Vec::with_capacity(grid.len() * axis.values.len());
+            for point in &grid {
+                for &v in &axis.values {
+                    let mut p = point.clone();
+                    p.push(v);
+                    next.push(p);
+                }
+            }
+            grid = next;
+        }
+        grid
+    }
+
+    fn run_point(&self, coords: &[f64]) -> Result<PointResult> {
+        let mut cfg = self.base.clone();
+        for (axis, &v) in self.axes.iter().zip(coords) {
+            (axis.apply)(&mut cfg, v);
+        }
+        let scn = ScenarioBuilder::from_config(cfg).build()?;
+        let mut outcomes = Vec::with_capacity(self.policies.len());
+        for policy in &self.policies {
+            outcomes.push(
+                policy
+                    .solve(&scn, &self.conv)
+                    .with_context(|| format!("policy {} at {coords:?}", policy.name()))?,
+            );
+        }
+        Ok(PointResult {
+            coords: coords.to_vec(),
+            outcomes,
+        })
+    }
+
+    /// Run the whole grid and collect the report. Points are fanned out
+    /// across worker threads but written back by grid index, so the
+    /// report (and its CSV/JSON serializations) is independent of the
+    /// thread count.
+    pub fn run(&self) -> Result<SweepReport> {
+        if self.policies.is_empty() {
+            bail!("sweep has no policies (use .policies(registry.resolve(..)?))");
+        }
+        for axis in &self.axes {
+            if axis.values.is_empty() {
+                bail!("sweep axis '{}' has no values", axis.name);
+            }
+        }
+        let grid = self.grid();
+        let jobs = grid.len();
+        let workers = if self.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.threads
+        }
+        .min(jobs)
+        .max(1);
+
+        let mut slots: Vec<Option<Result<PointResult>>> = Vec::with_capacity(jobs);
+        if workers == 1 {
+            for coords in &grid {
+                slots.push(Some(self.run_point(coords)));
+            }
+        } else {
+            slots.resize_with(jobs, || None);
+            let results = Mutex::new(&mut slots);
+            let next = AtomicUsize::new(0);
+            std::thread::scope(|s| {
+                for _ in 0..workers {
+                    s.spawn(|| loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= jobs {
+                            break;
+                        }
+                        let res = self.run_point(&grid[i]);
+                        results.lock().expect("sweep results lock")[i] = Some(res);
+                    });
+                }
+            });
+        }
+
+        let mut points = Vec::with_capacity(jobs);
+        for (i, slot) in slots.into_iter().enumerate() {
+            points.push(slot.ok_or_else(|| anyhow!("sweep point {i} never ran"))??);
+        }
+        Ok(SweepReport {
+            axis_names: self.axes.iter().map(|a| a.name.clone()).collect(),
+            policy_names: self.policies.iter().map(|p| p.name().to_string()).collect(),
+            points,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::PolicyRegistry;
+
+    fn tiny_base() -> ScenarioBuilder {
+        // 2 clients, short sequence: keeps BCD cheap in unit tests
+        ScenarioBuilder::new()
+            .clients(2)
+            .tweak(|c| c.train.seq = 128)
+    }
+
+    fn reg() -> PolicyRegistry {
+        PolicyRegistry::paper_suite(&[1, 4], 11, 1)
+    }
+
+    #[test]
+    fn single_point_sweep_with_no_axes() {
+        let report = SweepRunner::new(&tiny_base())
+            .policies(reg().resolve("proposed").unwrap())
+            .threads(1)
+            .run()
+            .unwrap();
+        assert_eq!(report.points.len(), 1);
+        assert!(report.points[0].coords.is_empty());
+        assert_eq!(report.policy_names, vec!["proposed"]);
+        assert!(report.points[0].outcomes[0].objective > 0.0);
+    }
+
+    #[test]
+    fn cartesian_grid_enumerates_all_combinations() {
+        let report = SweepRunner::new(&tiny_base())
+            .over(SweepAxis::bandwidth_khz(&[250.0, 500.0]))
+            .over(SweepAxis::p_max_dbm(&[30.0, 35.0, 40.0]))
+            .policies(reg().resolve("baseline_a").unwrap())
+            .threads(2)
+            .run()
+            .unwrap();
+        assert_eq!(report.points.len(), 6);
+        // later axis varies fastest
+        assert_eq!(report.points[0].coords, vec![250.0, 30.0]);
+        assert_eq!(report.points[1].coords, vec![250.0, 35.0]);
+        assert_eq!(report.points[3].coords, vec![500.0, 30.0]);
+        assert_eq!(report.header(), vec!["bandwidth_khz", "p_max_dbm", "baseline_a"]);
+    }
+
+    #[test]
+    fn csv_shape_matches_grid() {
+        let report = SweepRunner::new(&tiny_base())
+            .over(SweepAxis::server_compute_ghz(&[5.0, 10.0]))
+            .policies(reg().resolve("all").unwrap())
+            .threads(1)
+            .run()
+            .unwrap();
+        let csv = report.to_csv_string();
+        let lines: Vec<&str> = csv.trim_end().lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(
+            lines[0],
+            "f_server_ghz,proposed,baseline_a,baseline_b,baseline_c,baseline_d"
+        );
+        assert_eq!(lines[1].split(',').count(), 6);
+    }
+
+    #[test]
+    fn empty_policy_list_is_an_error() {
+        let err = SweepRunner::new(&tiny_base()).threads(1).run().unwrap_err();
+        assert!(format!("{err}").contains("no policies"));
+    }
+
+    #[test]
+    fn axis_by_name_resolves_canned_axes() {
+        for name in ["bandwidth", "client-compute", "server-compute", "power", "clients"] {
+            assert!(SweepAxis::by_name(name, &[1.0]).is_ok(), "{name}");
+        }
+        assert!(SweepAxis::by_name("nope", &[1.0]).is_err());
+    }
+
+    #[test]
+    fn json_report_is_well_formed_enough() {
+        let report = SweepRunner::new(&tiny_base())
+            .over(SweepAxis::clients(&[2.0]))
+            .policies(reg().resolve("proposed").unwrap())
+            .threads(1)
+            .run()
+            .unwrap();
+        let json = report.to_json_string();
+        let parsed = crate::util::json::Json::parse(&json).unwrap();
+        let pts = parsed.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts.len(), 1);
+        let obj = pts[0]
+            .get("policies")
+            .unwrap()
+            .get("proposed")
+            .unwrap()
+            .get("objective")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(obj > 0.0);
+    }
+}

@@ -9,6 +9,18 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+/// Create the parent directory of an output file, so writers never
+/// fail on a fresh checkout just because `results/` doesn't exist yet.
+pub fn ensure_parent_dir<P: AsRef<Path>>(path: P) -> Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    Ok(())
+}
+
 /// Streaming CSV writer with a fixed header.
 pub struct CsvWriter {
     out: BufWriter<File>,
@@ -18,12 +30,7 @@ pub struct CsvWriter {
 impl CsvWriter {
     /// Create (truncating) `path` and write the header row.
     pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> Result<CsvWriter> {
-        if let Some(dir) = path.as_ref().parent() {
-            if !dir.as_os_str().is_empty() {
-                std::fs::create_dir_all(dir)
-                    .with_context(|| format!("creating {}", dir.display()))?;
-            }
-        }
+        ensure_parent_dir(&path)?;
         let f = File::create(&path)
             .with_context(|| format!("creating {}", path.as_ref().display()))?;
         let mut w = CsvWriter {
@@ -41,12 +48,7 @@ impl CsvWriter {
                 self.out.write_all(b",")?;
             }
             first = false;
-            if f.contains(',') || f.contains('"') || f.contains('\n') {
-                let escaped = f.replace('"', "\"\"");
-                write!(self.out, "\"{escaped}\"")?;
-            } else {
-                self.out.write_all(f.as_bytes())?;
-            }
+            self.out.write_all(escape_field(f).as_bytes())?;
         }
         self.out.write_all(b"\n")?;
         Ok(())
@@ -68,6 +70,18 @@ impl CsvWriter {
     pub fn flush(&mut self) -> Result<()> {
         self.out.flush()?;
         Ok(())
+    }
+}
+
+/// Escape one field exactly the way [`CsvWriter`] serializes it:
+/// quoted (with `""` doubling) iff it contains a comma, quote, or
+/// newline. Shared with [`crate::sim::SweepReport`] so its in-memory
+/// CSV string and the file on disk are byte-identical.
+pub fn escape_field(f: &str) -> String {
+    if f.contains(',') || f.contains('"') || f.contains('\n') {
+        format!("\"{}\"", f.replace('"', "\"\""))
+    } else {
+        f.to_string()
     }
 }
 

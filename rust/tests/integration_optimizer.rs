@@ -4,12 +4,16 @@
 
 use sfllm::config::Config;
 use sfllm::delay::ConvergenceModel;
-use sfllm::opt::baselines;
 use sfllm::opt::bcd::{self, BcdOptions};
-use sfllm::sim::build_scenario;
+use sfllm::opt::PolicyRegistry;
+use sfllm::sim::ScenarioBuilder;
 
 fn paper_scenario() -> sfllm::delay::Scenario {
-    build_scenario(&Config::paper_defaults()).unwrap()
+    ScenarioBuilder::preset("paper").unwrap().build().unwrap()
+}
+
+fn scenario_from(cfg: Config) -> sfllm::delay::Scenario {
+    ScenarioBuilder::from_config(cfg).build().unwrap()
 }
 
 fn opts() -> BcdOptions {
@@ -31,10 +35,16 @@ fn bcd_on_paper_scenario_converges() {
 
 #[test]
 fn proposed_dominates_all_baselines_on_paper_scenario() {
-    let scn = paper_scenario();
-    let conv = ConvergenceModel::paper_default();
-    let [p, a, b, c, d] =
-        baselines::compare_all(&scn, &conv, &[1, 2, 4, 6, 8], 42, 5).unwrap();
+    // pins the behaviour of the deprecated compare_all shim
+    #[allow(deprecated)]
+    let [p, a, b, c, d] = sfllm::opt::baselines::compare_all(
+        &paper_scenario(),
+        &ConvergenceModel::paper_default(),
+        &[1, 2, 4, 6, 8],
+        42,
+        5,
+    )
+    .unwrap();
     assert!(p <= a && p <= b && p <= c && p <= d, "p={p} a={a} b={b} c={c} d={d}");
     // paper claims up to ~60% reduction vs baseline a at Table II defaults
     let reduction = 1.0 - p / a;
@@ -46,6 +56,28 @@ fn proposed_dominates_all_baselines_on_paper_scenario() {
 }
 
 #[test]
+fn policy_registry_reproduces_the_comparison() {
+    // the same comparison through the new experiment API
+    let scn = paper_scenario();
+    let conv = ConvergenceModel::paper_default();
+    let reg = PolicyRegistry::paper_suite(&[1, 2, 4, 6, 8], 42, 5);
+    let mut objectives = std::collections::BTreeMap::new();
+    for policy in reg.resolve("all").unwrap() {
+        let out = policy.solve(&scn, &conv).unwrap();
+        assert!(out.objective.is_finite() && out.objective > 0.0, "{}", out.policy);
+        out.alloc
+            .validate(scn.main_link.subch.len(), scn.fed_link.subch.len())
+            .unwrap_or_else(|e| panic!("{}: {e}", out.policy));
+        assert!(scn.power_feasible(&out.alloc, 1e-6), "{}", out.policy);
+        objectives.insert(out.policy, out.objective);
+    }
+    let p = objectives["proposed"];
+    let a = objectives["baseline_a"];
+    assert!(p <= a, "proposed {p} must beat random {a}");
+    assert!(1.0 - p / a > 0.25, "reduction vs random too small: p={p} a={a}");
+}
+
+#[test]
 fn fig5_trend_latency_decreases_with_bandwidth() {
     let conv = ConvergenceModel::paper_default();
     let mut last = f64::INFINITY;
@@ -53,7 +85,7 @@ fn fig5_trend_latency_decreases_with_bandwidth() {
         let mut cfg = Config::paper_defaults();
         cfg.system.bandwidth_main_hz = bw;
         cfg.system.bandwidth_fed_hz = bw;
-        let scn = build_scenario(&cfg).unwrap();
+        let scn = scenario_from(cfg);
         let t = bcd::optimize(&scn, &conv, &opts()).unwrap().objective;
         assert!(t < last, "bandwidth {bw}: {t} !< {last}");
         last = t;
@@ -68,7 +100,7 @@ fn fig6_trend_latency_decreases_with_client_compute() {
     for kappa_inv in [512.0, 1024.0, 4096.0] {
         let mut cfg = Config::paper_defaults();
         cfg.system.kappa_client = 1.0 / kappa_inv;
-        let scn = build_scenario(&cfg).unwrap();
+        let scn = scenario_from(cfg);
         let t = bcd::optimize(&scn, &conv, &opts()).unwrap().objective;
         assert!(t < last, "kappa 1/{kappa_inv}: {t} !< {last}");
         last = t;
@@ -82,7 +114,7 @@ fn fig7_trend_latency_decreases_with_server_compute() {
     for f_s in [2.5e9, 5e9, 20e9] {
         let mut cfg = Config::paper_defaults();
         cfg.system.f_server = f_s;
-        let scn = build_scenario(&cfg).unwrap();
+        let scn = scenario_from(cfg);
         let t = bcd::optimize(&scn, &conv, &opts()).unwrap().objective;
         assert!(t <= last, "f_s {f_s}: {t} !<= {last}");
         last = t;
@@ -96,7 +128,7 @@ fn fig8_trend_latency_decreases_with_transmit_power() {
     for p_dbm in [31.76, 41.76, 47.0] {
         let mut cfg = Config::paper_defaults();
         cfg.system.p_max_dbm = p_dbm;
-        let scn = build_scenario(&cfg).unwrap();
+        let scn = scenario_from(cfg);
         let t = bcd::optimize(&scn, &conv, &opts()).unwrap().objective;
         assert!(t <= last, "p_max {p_dbm} dBm: {t} !<= {last}");
         last = t;
@@ -110,11 +142,11 @@ fn weak_clients_shift_split_toward_server() {
     strong.system.kappa_client = 1.0 / 16384.0; // very strong clients
     let mut weak = Config::paper_defaults();
     weak.system.kappa_client = 1.0 / 128.0; // very weak clients
-    let l_strong = bcd::optimize(&build_scenario(&strong).unwrap(), &conv, &opts())
+    let l_strong = bcd::optimize(&scenario_from(strong), &conv, &opts())
         .unwrap()
         .alloc
         .l_c;
-    let l_weak = bcd::optimize(&build_scenario(&weak).unwrap(), &conv, &opts())
+    let l_weak = bcd::optimize(&scenario_from(weak), &conv, &opts())
         .unwrap()
         .alloc
         .l_c;

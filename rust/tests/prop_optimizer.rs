@@ -10,7 +10,7 @@ use sfllm::opt::assignment::algorithm2;
 use sfllm::opt::bcd::{self, BcdOptions};
 use sfllm::opt::power::{solve_power, waterfill_min_power};
 use sfllm::opt::{baselines, rank, split};
-use sfllm::sim::build_scenario;
+use sfllm::sim::ScenarioBuilder;
 use sfllm::util::prop::check;
 use sfllm::util::rng::Rng;
 
@@ -28,7 +28,7 @@ fn random_scenario(rng: &mut Rng) -> Scenario {
     cfg.train.batch = 1 + rng.below(32);
     cfg.train.seq = 128 << rng.below(3);
     cfg.model = if rng.f64() < 0.5 { "gpt2-s" } else { "gpt2-m" }.into();
-    build_scenario(&cfg).expect("scenario build")
+    ScenarioBuilder::from_config(cfg).build().expect("scenario build")
 }
 
 const RANKS: [usize; 5] = [1, 2, 4, 6, 8];

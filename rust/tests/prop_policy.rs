@@ -1,0 +1,112 @@
+//! Property tests over the experiment API: every registered policy
+//! must return a *feasible* allocation on every scenario preset, and
+//! `SweepRunner` must be byte-deterministic across thread counts.
+
+use sfllm::delay::{ConvergenceModel, Scenario};
+use sfllm::opt::policy::PolicyOutcome;
+use sfllm::opt::PolicyRegistry;
+use sfllm::sim::{ScenarioBuilder, SweepAxis, SweepRunner, PRESETS};
+use sfllm::util::prop::check;
+
+const RANKS: [usize; 3] = [1, 4, 8];
+
+/// C1/C2/C6 via validate, C4/C5 via power_feasible, plus: every client
+/// holds at least one subchannel on both links, and 1 <= l_c < L.
+fn assert_feasible(scn: &Scenario, out: &PolicyOutcome) -> Result<(), String> {
+    out.alloc
+        .validate(scn.main_link.subch.len(), scn.fed_link.subch.len())
+        .map_err(|e| format!("{}: {e}", out.policy))?;
+    if !scn.power_feasible(&out.alloc, 1e-6) {
+        return Err(format!("{}: power budget C4/C5 violated", out.policy));
+    }
+    for k in 0..scn.k() {
+        if out.alloc.assign_main[k].is_empty() {
+            return Err(format!("{}: client {k} starved on main link", out.policy));
+        }
+        if out.alloc.assign_fed[k].is_empty() {
+            return Err(format!("{}: client {k} starved on fed link", out.policy));
+        }
+    }
+    let l = scn.profile.blocks.len();
+    if out.alloc.l_c < 1 || out.alloc.l_c >= l {
+        return Err(format!(
+            "{}: split l_c={} outside [1, {})",
+            out.policy, out.alloc.l_c, l
+        ));
+    }
+    if !out.objective.is_finite() || out.objective <= 0.0 {
+        return Err(format!("{}: bad objective {}", out.policy, out.objective));
+    }
+    Ok(())
+}
+
+#[test]
+fn every_policy_feasible_on_every_preset() {
+    let conv = ConvergenceModel::paper_default();
+    for preset in PRESETS {
+        let scn = ScenarioBuilder::preset(preset).unwrap().build().unwrap();
+        let reg = PolicyRegistry::paper_suite(&RANKS, 42, 2);
+        for policy in reg.resolve("all").unwrap() {
+            let out = policy
+                .solve(&scn, &conv)
+                .unwrap_or_else(|e| panic!("{preset}/{}: {e:#}", policy.name()));
+            assert_feasible(&scn, &out)
+                .unwrap_or_else(|e| panic!("preset {preset}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn prop_policies_feasible_on_random_seeds() {
+    let conv = ConvergenceModel::paper_default();
+    check("policy feasibility over seeds", 0x90C1, 8, |rng| {
+        let seed = rng.next_u64();
+        let scn = ScenarioBuilder::new()
+            .seed(seed)
+            .clients(2 + rng.below(4))
+            .build()
+            .map_err(|e| format!("{e:#}"))?;
+        let reg = PolicyRegistry::paper_suite(&RANKS, seed, 1);
+        for policy in reg.resolve("all").map_err(|e| format!("{e:#}"))? {
+            let out = policy
+                .solve(&scn, &conv)
+                .map_err(|e| format!("{} (scenario seed {seed:#x}): {e:#}", policy.name()))?;
+            assert_feasible(&scn, &out)
+                .map_err(|e| format!("scenario seed {seed:#x}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+fn determinism_runner(threads: usize) -> SweepRunner {
+    let base = ScenarioBuilder::new().clients(3).tweak(|c| c.train.seq = 256);
+    let reg = PolicyRegistry::paper_suite(&RANKS, 7, 2);
+    SweepRunner::new(&base)
+        .over(SweepAxis::bandwidth_khz(&[250.0, 500.0]))
+        .over(SweepAxis::p_max_dbm(&[33.76, 41.76]))
+        .policies(reg.resolve("all").unwrap())
+        .threads(threads)
+}
+
+#[test]
+fn sweep_report_identical_at_any_thread_count() {
+    let single = determinism_runner(1).run().unwrap().to_csv_string();
+    let multi = determinism_runner(4).run().unwrap().to_csv_string();
+    assert_eq!(single, multi, "threads must not change the report bytes");
+    assert_eq!(single.trim_end().lines().count(), 1 + 4); // header + 2x2 grid
+}
+
+#[test]
+fn sweep_csv_file_matches_report_and_creates_dirs() {
+    let report = determinism_runner(2).run().unwrap();
+    let dir = std::env::temp_dir().join("sfllm_sweep_det");
+    std::fs::remove_dir_all(&dir).ok();
+    let path = dir.join("nested").join("report.csv");
+    report.write_csv(path.to_str().unwrap()).unwrap();
+    let on_disk = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(on_disk, report.to_csv_string());
+    let json_path = dir.join("nested2").join("report.json");
+    report.write_json(json_path.to_str().unwrap()).unwrap();
+    assert!(json_path.exists());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,252 @@
+//! Offline, API-compatible subset of the `anyhow` error crate.
+//!
+//! The build image has no network access, so the real crates.io
+//! `anyhow` cannot be fetched; this vendored drop-in implements exactly
+//! the surface the sfllm crate uses:
+//!
+//! * [`Error`] — an opaque error value holding a context chain;
+//! * [`Result<T>`] — alias with `Error` as the default error type;
+//! * [`anyhow!`] / [`bail!`] — ad-hoc error construction;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on both
+//!   `Result` and `Option`;
+//! * `From<E: std::error::Error>` so `?` converts library errors.
+//!
+//! Formatting matches the real crate where it matters: `{e}` prints the
+//! outermost message, `{e:#}` prints the whole chain joined by `: `,
+//! and `{e:?}` prints the message plus a `Caused by:` list.
+
+use std::fmt;
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Opaque error: an outermost message plus the chain of causes.
+pub struct Error {
+    /// `chain[0]` is the outermost context, the last entry the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    fn push_context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// Messages from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`; that keeps this blanket conversion coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+mod private {
+    use super::Error;
+
+    /// Sealed conversion used by [`super::Context`]: covers both
+    /// `Error` itself and every std error type.
+    pub trait IntoAnyhow {
+        fn into_anyhow(self) -> Error;
+    }
+
+    impl IntoAnyhow for Error {
+        fn into_anyhow(self) -> Error {
+            self
+        }
+    }
+
+    impl<E> IntoAnyhow for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_anyhow(self) -> Error {
+            Error::from(self)
+        }
+    }
+}
+
+/// Attach context to errors (`Result`) or turn `None` into an error.
+pub trait Context<T, E> {
+    /// Wrap the error with a fixed context message.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display;
+
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: private::IntoAnyhow,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display,
+    {
+        self.map_err(|e| e.into_anyhow().push_context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_anyhow().push_context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Result::<(), _>::Err(io_err())
+            .context("reading manifest")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: no such file");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<i32> {
+            let n: i32 = "not a number".parse()?;
+            Ok(n)
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+        assert_eq!(Some(1).context("unused").unwrap(), 1);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(flag: bool) -> Result<()> {
+            if flag {
+                bail!("flag was {flag}");
+            }
+            Ok(())
+        }
+        assert_eq!(format!("{}", f(true).unwrap_err()), "flag was true");
+        let e = anyhow!("x = {}", 7);
+        assert_eq!(format!("{e}"), "x = 7");
+        let e2 = anyhow!(String::from("owned"));
+        assert_eq!(format!("{e2}"), "owned");
+    }
+
+    #[test]
+    fn context_stacks_outermost_first() {
+        let e = Result::<(), _>::Err(io_err())
+            .context("layer 1")
+            .with_context(|| format!("layer {}", 2))
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "layer 2");
+        assert_eq!(format!("{e:#}"), "layer 2: layer 1: no such file");
+        assert_eq!(e.root_cause(), "no such file");
+    }
+}

@@ -1,0 +1,138 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The build image ships no PJRT shared library and no network to fetch
+//! the real `xla` crate, so this stub mirrors exactly the API surface
+//! `sfllm::runtime` consumes and fails fast at the *first* entry point
+//! ([`PjRtClient::cpu`]) with a clear message. Everything downstream of
+//! a client is therefore unreachable in stub builds, but still
+//! type-checks, so the whole training stack compiles and the
+//! simulation/optimizer layers (which never touch PJRT) work fully.
+//!
+//! Swapping in a real PJRT backend is a one-line change in
+//! `rust/Cargo.toml`: point the `xla` path dependency at the real
+//! bindings. Runtime-dependent tests are gated behind the
+//! `SFLLM_RUNTIME_TESTS=1` environment variable for the same reason.
+
+use std::fmt;
+
+/// Stub error: carries the "backend unavailable" explanation.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "PJRT backend unavailable in this build: {what} needs the real `xla` \
+         bindings (swap the `xla` path dependency in rust/Cargo.toml; see \
+         DESIGN.md, runtime section)"
+    ))
+}
+
+/// PJRT client handle. In the stub, construction always fails.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+/// Parsed HLO module (stub: never constructed successfully).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// Device-resident buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Host literal value.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    pub fn to_vec<T: Copy>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        let msg = err.to_string();
+        assert!(msg.contains("PJRT backend unavailable"), "{msg}");
+        assert!(msg.contains("PjRtClient::cpu"), "{msg}");
+    }
+}
