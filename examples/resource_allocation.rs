@@ -89,7 +89,10 @@ fn main() -> Result<()> {
     let report = SweepRunner::new(&builder)
         .policies(registry.resolve(&spec)?)
         .run()?;
-    let point = &report.points[0];
+    let Some(point) = report.points.first() else {
+        report.print_errors();
+        anyhow::bail!("scenario could not be evaluated");
+    };
     let objectives = point.objectives();
     let reference = objectives
         .first()

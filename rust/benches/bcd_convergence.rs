@@ -5,7 +5,7 @@
 //!
 //! Writes `results/bcd_convergence.csv`.
 
-use sfllm::delay::ConvergenceModel;
+use sfllm::delay::{ConvergenceModel, WorkloadCache};
 use sfllm::opt::bcd::{self, BcdOptions};
 use sfllm::sim::ScenarioBuilder;
 use sfllm::util::csv::CsvWriter;
@@ -13,6 +13,8 @@ use sfllm::util::stats;
 
 fn main() -> anyhow::Result<()> {
     let conv = ConvergenceModel::paper_default();
+    // all seeds/inits share one model + rank set -> one workload table
+    let cache = WorkloadCache::new();
     let mut csv = CsvWriter::create(
         "results/bcd_convergence.csv",
         &["seed", "init_l_c", "init_rank", "iterations", "objective"],
@@ -22,7 +24,7 @@ fn main() -> anyhow::Result<()> {
     for seed in [1u64, 7, 42, 99, 1234] {
         for (init_l_c, init_rank) in [(1usize, 1usize), (6, 4), (11, 8)] {
             let scn = ScenarioBuilder::new().seed(seed).build()?;
-            let res = bcd::optimize(
+            let res = bcd::optimize_cached(
                 &scn,
                 &conv,
                 &BcdOptions {
@@ -30,6 +32,7 @@ fn main() -> anyhow::Result<()> {
                     init_rank,
                     ..BcdOptions::default()
                 },
+                &cache,
             )?;
             println!(
                 "  seed {seed:5} init (l_c={init_l_c:2}, r={init_rank}) -> {:2} iters, \

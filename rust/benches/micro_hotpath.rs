@@ -6,6 +6,10 @@
 //! * Algorithm 2 greedy assignment,
 //! * one full BCD optimize() on the Table-II scenario,
 //! * delay-model evaluation,
+//! * the joint split×rank grid: clone-per-candidate `total_delay` vs
+//!   the cached `DelayEvaluator` (the P3/P4 engine), plus a large-K
+//!   axis on the `many_clients` preset showing the evaluator scaling
+//!   to thousands of clients,
 //! * FedAvg + Adam step on tiny-sized adapters,
 //! * coordinator round overhead over the mock model (channel + thread
 //!   cost with zero compute).
@@ -16,7 +20,7 @@ use std::time::Instant;
 
 use sfllm::coordinator::mock::MockModel;
 use sfllm::coordinator::{train, OptKind, Optimizer, TrainOptions};
-use sfllm::delay::ConvergenceModel;
+use sfllm::delay::{ConvergenceModel, DelayEvaluator, WorkloadCache};
 use sfllm::model::lora::{AdapterSet, Tensor};
 use sfllm::opt::bcd::{self, BcdOptions};
 use sfllm::opt::{assignment, power};
@@ -87,6 +91,68 @@ fn main() -> anyhow::Result<()> {
         let r = bcd::optimize(&scn, &conv, &BcdOptions::default()).unwrap();
         std::hint::black_box(r.objective);
     });
+
+    // the P3/P4 joint grid, old way vs cached evaluator. The clone path
+    // is what best_split/best_rank did per candidate before delay::eval:
+    // clone the whole Allocation, recompute every subchannel rate.
+    let ranks = [1usize, 2, 4, 6, 8];
+    let splits: Vec<usize> = scn.profile.split_candidates().collect();
+    let grid = splits.len() * ranks.len();
+    println!("\njoint split x rank grid ({grid} candidates):");
+    let t_clone = bench("grid scan, clone-per-candidate total_delay", 500, || {
+        let mut best = f64::INFINITY;
+        for &l_c in &splits {
+            for &r in &ranks {
+                let mut cand = alloc2.clone();
+                cand.l_c = l_c;
+                cand.rank = r;
+                best = best.min(scn.total_delay(&cand, &conv));
+            }
+        }
+        std::hint::black_box(best);
+    });
+    let cache = WorkloadCache::new();
+    let t_cached = bench("grid scan, cached DelayEvaluator (incl. build)", 500, || {
+        let ev = DelayEvaluator::new(&scn, &alloc2, &conv, cache.table_for(&scn.profile, &ranks));
+        std::hint::black_box(ev.best_split_rank());
+    });
+    let ev = DelayEvaluator::new(&scn, &alloc2, &conv, cache.table_for(&scn.profile, &ranks));
+    bench("grid scan, cached DelayEvaluator (prebuilt)", 2000, || {
+        std::hint::black_box(ev.best_split_rank());
+    });
+    println!(
+        "  -> cached evaluator speedup on the full grid: {:.1}x{}",
+        t_clone / t_cached,
+        if t_cached < t_clone { "" } else { "  (REGRESSION: cache slower than clones!)" }
+    );
+
+    // large-K axis: the evaluator at production client counts
+    println!("\nDelayEvaluator at scale (many_clients preset):");
+    for k in [100usize, 1000, 4000] {
+        let m = k.max(1024);
+        let scn_k = ScenarioBuilder::preset("many_clients")?
+            .clients(k)
+            .subchannels(m, m)
+            .build()?;
+        let alloc_k = bcd::initial_alloc(&scn_k, 6, 4);
+        let table = cache.table_for(&scn_k.profile, &ranks);
+        let ev_k = DelayEvaluator::new(&scn_k, &alloc_k, &conv, table.clone());
+        bench(
+            &format!("evaluator build, K={k} M={m}"),
+            if k >= 4000 { 50 } else { 200 },
+            || {
+                let e = DelayEvaluator::new(&scn_k, &alloc_k, &conv, table.clone());
+                std::hint::black_box(&e);
+            },
+        );
+        bench(
+            &format!("full {grid}-point grid scan, K={k}"),
+            if k >= 4000 { 50 } else { 200 },
+            || {
+                std::hint::black_box(ev_k.best_split_rank());
+            },
+        );
+    }
 
     // adapter math at tiny-model scale: 2 blocks x (q,v) x (A,B), d=192 r=4
     let mk = || AdapterSet {

@@ -1,0 +1,385 @@
+//! Cached delay evaluation for the P3/P4 candidate scans.
+//!
+//! `Scenario::total_delay` is exact but wasteful inside the optimizer's
+//! exhaustive searches: every candidate (l_c, rank) used to clone the
+//! whole `Allocation` and recompute every subchannel rate, even though
+//! the uplink rates depend only on the communication block (assignment
+//! + PSDs) and the workload sums depend only on (profile, l_c, rank).
+//!
+//! [`DelayEvaluator`] factors the computation accordingly. Built once
+//! per (scenario, assignment, PSD) block, it precomputes
+//!
+//! * per-client uplink rates to both servers (Eqs. 9/14), and
+//! * per-(l_c, rank) workload sums as a [`WorkloadTable`] lookup,
+//!
+//! and then serves `eval(l_c, rank)` — the total training delay of
+//! Eq. 17 — as an O(K) pass with **zero allocation** and **bit-identical
+//! results** to `Scenario::total_delay` (the arithmetic replicates the
+//! order of operations of `Scenario::phase_delays` exactly; asserted by
+//! `rust/tests/prop_eval.rs`). The joint split×rank exhaustive scan of
+//! [`DelayEvaluator::best_split_rank`] — the paper's "exhaustive search
+//! … for optimal split position and rank selection" — is what P3/P4 in
+//! [`crate::opt::bcd`] run on.
+//!
+//! [`WorkloadCache`] shares the (profile, rank set) tables across
+//! evaluator builds: all BCD iterations, baseline draws, and
+//! [`crate::sim::SweepRunner`] grid points that keep the same model and
+//! sequence length hit the same table.
+
+use std::sync::{Arc, Mutex};
+
+use crate::delay::{Allocation, ConvergenceModel, Scenario};
+use crate::model::{WorkloadProfile, WorkloadTable};
+
+/// The per-(l_c, rank) workload sums one delay evaluation consumes.
+struct Workload {
+    client_fwd: f64,
+    client_bwd: f64,
+    server_fwd: f64,
+    server_bwd: f64,
+    act_bits: f64,
+    adapter_bits: f64,
+}
+
+/// Cached total-delay evaluator over one communication block.
+///
+/// Valid as long as the assignment and PSDs it was built from stay
+/// fixed; rebuild after every P1/P2 update (the constructor is O(K·M),
+/// i.e. one rate computation per subchannel — the same cost as a single
+/// `total_delay` call).
+pub struct DelayEvaluator<'s> {
+    scn: &'s Scenario,
+    conv: &'s ConvergenceModel,
+    table: Arc<WorkloadTable>,
+    /// E(r) per candidate rank, aligned with `table.ranks()`.
+    rounds: Vec<f64>,
+    /// Per-client uplink rates under the frozen assignment/PSDs.
+    rate_main: Vec<f64>,
+    rate_fed: Vec<f64>,
+}
+
+impl<'s> DelayEvaluator<'s> {
+    /// Build from a shared workload table (see [`WorkloadCache`]).
+    pub fn new(
+        scn: &'s Scenario,
+        alloc: &Allocation,
+        conv: &'s ConvergenceModel,
+        table: Arc<WorkloadTable>,
+    ) -> DelayEvaluator<'s> {
+        let k_n = scn.k();
+        let rounds = table.ranks().iter().map(|&r| conv.rounds(r)).collect();
+        DelayEvaluator {
+            scn,
+            conv,
+            rounds,
+            rate_main: (0..k_n).map(|k| scn.rate_main(alloc, k)).collect(),
+            rate_fed: (0..k_n).map(|k| scn.rate_fed(alloc, k)).collect(),
+            table,
+        }
+    }
+
+    /// Convenience constructor that builds its own single-use table.
+    pub fn build(
+        scn: &'s Scenario,
+        alloc: &Allocation,
+        conv: &'s ConvergenceModel,
+        ranks: &[usize],
+    ) -> DelayEvaluator<'s> {
+        let table = Arc::new(WorkloadTable::new(&scn.profile, ranks));
+        DelayEvaluator::new(scn, alloc, conv, table)
+    }
+
+    /// The candidate ranks the cached table covers.
+    pub fn ranks(&self) -> &[usize] {
+        self.table.ranks()
+    }
+
+    /// Admissible split points (1 ..= L-1).
+    pub fn splits(&self) -> std::ops::Range<usize> {
+        self.scn.profile.split_candidates()
+    }
+
+    /// Total training delay T (Eq. 17) at (`l_c`, `rank`) under the
+    /// frozen communication block. Ranks outside the cached candidate
+    /// set fall back to the profile's prefix sums — same arithmetic,
+    /// same bits, no table hit.
+    pub fn eval(&self, l_c: usize, rank: usize) -> f64 {
+        match self.table.rank_index(rank) {
+            Some(ri) => self.total(&self.lookup(l_c, ri), self.rounds[ri]),
+            None => {
+                let p: &WorkloadProfile = &self.scn.profile;
+                self.total(
+                    &Workload {
+                        client_fwd: p.client_fwd_flops(l_c, rank),
+                        client_bwd: p.client_bwd_flops(l_c, rank),
+                        server_fwd: p.server_fwd_flops(l_c, rank),
+                        server_bwd: p.server_bwd_flops(l_c, rank),
+                        act_bits: p.activation_bits(l_c),
+                        adapter_bits: p.client_adapter_bits(l_c, rank),
+                    },
+                    self.conv.rounds(rank),
+                )
+            }
+        }
+    }
+
+    /// Table lookup of the workload sums at (`l_c`, rank index `ri`).
+    fn lookup(&self, l_c: usize, ri: usize) -> Workload {
+        Workload {
+            client_fwd: self.table.client_fwd_flops(l_c, ri),
+            client_bwd: self.table.client_bwd_flops(l_c, ri),
+            server_fwd: self.table.server_fwd_flops(l_c, ri),
+            server_bwd: self.table.server_bwd_flops(l_c, ri),
+            act_bits: self.table.activation_bits(l_c),
+            adapter_bits: self.table.adapter_bits(l_c, ri),
+        }
+    }
+
+    /// Eq. 17 with the workload sums in hand. The expressions replicate
+    /// `Scenario::phase_delays` / `PhaseDelays::t_local` operation by
+    /// operation so the result is bit-identical to the uncached path.
+    fn total(&self, w: &Workload, rounds: f64) -> f64 {
+        let scn = self.scn;
+        let k_n = scn.k();
+        let b = scn.batch as f64;
+        let mut stage1 = 0.0f64;
+        let mut stage3 = 0.0f64;
+        let mut t_fed = 0.0f64;
+        for k in 0..k_n {
+            let f_k = scn.topo.clients[k].f_cycles;
+            let client_fwd = b * scn.kappa_client * w.client_fwd / f_k;
+            let act_upload = if self.rate_main[k] > 0.0 {
+                b * w.act_bits / self.rate_main[k]
+            } else {
+                f64::INFINITY
+            };
+            stage1 = stage1.max(client_fwd + act_upload);
+            stage3 = stage3.max(b * scn.kappa_client * w.client_bwd / f_k);
+            t_fed = t_fed.max(if self.rate_fed[k] > 0.0 {
+                w.adapter_bits / self.rate_fed[k]
+            } else {
+                f64::INFINITY
+            });
+        }
+        let server_fwd = k_n as f64 * b * scn.kappa_server * w.server_fwd / scn.f_server;
+        let server_bwd = k_n as f64 * b * scn.kappa_server * w.server_bwd / scn.f_server;
+        let t_local = stage1 + server_fwd + server_bwd + stage3;
+        rounds * (scn.local_steps as f64 * t_local + t_fed)
+    }
+
+    /// P3 alone: argmin over split points at a fixed rank. Ties resolve
+    /// to the smaller l_c (less client compute).
+    pub fn best_split(&self, rank: usize) -> (usize, f64) {
+        let mut best = (self.splits().start, f64::INFINITY);
+        for l_c in self.splits() {
+            let t = self.eval(l_c, rank);
+            if t < best.1 {
+                best = (l_c, t);
+            }
+        }
+        best
+    }
+
+    /// P4 alone: argmin over the cached candidate ranks at a fixed
+    /// split. Ties resolve to the earlier candidate.
+    pub fn best_rank(&self, l_c: usize) -> (usize, f64) {
+        let mut best = (self.table.ranks()[0], f64::INFINITY);
+        for (ri, &r) in self.table.ranks().iter().enumerate() {
+            let t = self.total(&self.lookup(l_c, ri), self.rounds[ri]);
+            if t < best.1 {
+                best = (r, t);
+            }
+        }
+        best
+    }
+
+    /// The joint P3×P4 exhaustive scan (Eqs. 25/26 solved together):
+    /// argmin of Eq. 17 over the full split×rank candidate grid.
+    /// Returns (l_c*, rank*, T*). Ties resolve to the smaller l_c, then
+    /// the earlier candidate rank — consistent with [`Self::best_split`]
+    /// followed by [`Self::best_rank`].
+    pub fn best_split_rank(&self) -> (usize, usize, f64) {
+        let mut best = (self.splits().start, self.table.ranks()[0], f64::INFINITY);
+        for l_c in self.splits() {
+            for (ri, &r) in self.table.ranks().iter().enumerate() {
+                let t = self.total(&self.lookup(l_c, ri), self.rounds[ri]);
+                if t < best.2 {
+                    best = (l_c, r, t);
+                }
+            }
+        }
+        best
+    }
+}
+
+/// Identity of a [`WorkloadTable`]: everything `WorkloadProfile::new`
+/// reads, plus the candidate rank set.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct TableKey {
+    n_layers: usize,
+    d_model: usize,
+    n_heads: usize,
+    vocab: usize,
+    seq: usize,
+    ranks: Vec<usize>,
+}
+
+impl TableKey {
+    fn of(profile: &WorkloadProfile, ranks: &[usize]) -> TableKey {
+        TableKey {
+            n_layers: profile.cfg.n_layers,
+            d_model: profile.cfg.d_model,
+            n_heads: profile.cfg.n_heads,
+            vocab: profile.cfg.vocab,
+            seq: profile.seq,
+            ranks: ranks.to_vec(),
+        }
+    }
+}
+
+/// Thread-safe share point for [`WorkloadTable`]s, keyed by the model
+/// dimensions, sequence length and rank set that fully determine a
+/// table. One cache per [`crate::sim::SweepRunner`] lets every grid
+/// point, BCD iteration and baseline draw reuse the same table instead
+/// of recomputing the prefix sums.
+///
+/// Profiles are assumed to come from `WorkloadProfile::new` (the only
+/// constructor in-tree); a hand-mutated `blocks` vector would alias its
+/// key.
+#[derive(Default)]
+pub struct WorkloadCache {
+    entries: Mutex<Vec<(TableKey, Arc<WorkloadTable>)>>,
+}
+
+impl WorkloadCache {
+    pub fn new() -> WorkloadCache {
+        WorkloadCache::default()
+    }
+
+    /// Fetch (or build and memoize) the table for `(profile, ranks)`.
+    pub fn table_for(&self, profile: &WorkloadProfile, ranks: &[usize]) -> Arc<WorkloadTable> {
+        let key = TableKey::of(profile, ranks);
+        let mut entries = self.entries.lock().expect("workload cache lock");
+        if let Some((_, table)) = entries.iter().find(|(k, _)| *k == key) {
+            return table.clone();
+        }
+        let table = Arc::new(WorkloadTable::new(profile, ranks));
+        entries.push((key, table.clone()));
+        table
+    }
+
+    /// Number of distinct tables currently memoized.
+    pub fn tables(&self) -> usize {
+        self.entries.lock().expect("workload cache lock").len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delay::testutil::toy_scenario;
+
+    const RANKS: [usize; 5] = [1, 2, 4, 6, 8];
+
+    fn toy_alloc() -> Allocation {
+        Allocation {
+            assign_main: vec![vec![0, 1], vec![2, 3]],
+            assign_fed: vec![vec![0], vec![1]],
+            psd_main: vec![5e-5; 4],
+            psd_fed: vec![5e-5; 2],
+            l_c: 6,
+            rank: 4,
+        }
+    }
+
+    #[test]
+    fn eval_matches_total_delay_bit_for_bit() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let alloc = toy_alloc();
+        let ev = DelayEvaluator::build(&scn, &alloc, &conv, &RANKS);
+        for l_c in scn.profile.split_candidates() {
+            for &r in &RANKS {
+                let mut cand = alloc.clone();
+                cand.l_c = l_c;
+                cand.rank = r;
+                let want = scn.total_delay(&cand, &conv);
+                let got = ev.eval(l_c, r);
+                assert_eq!(got.to_bits(), want.to_bits(), "l_c={l_c} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn eval_outside_candidate_set_falls_back_bit_for_bit() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let alloc = toy_alloc();
+        let ev = DelayEvaluator::build(&scn, &alloc, &conv, &[1, 8]);
+        let mut cand = alloc.clone();
+        cand.rank = 3; // not in the table
+        cand.l_c = 5;
+        assert_eq!(
+            ev.eval(5, 3).to_bits(),
+            scn.total_delay(&cand, &conv).to_bits()
+        );
+    }
+
+    #[test]
+    fn starved_client_evaluates_to_infinity() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let mut alloc = toy_alloc();
+        // client 1 loses its fed subchannel -> infinite adapter upload
+        alloc.assign_fed[1].clear();
+        let ev = DelayEvaluator::build(&scn, &alloc, &conv, &RANKS);
+        assert!(ev.eval(6, 4).is_infinite());
+        assert_eq!(
+            ev.eval(6, 4).to_bits(),
+            scn.total_delay(&alloc, &conv).to_bits()
+        );
+    }
+
+    #[test]
+    fn joint_scan_is_grid_argmin_with_smallest_tiebreak() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let alloc = toy_alloc();
+        let ev = DelayEvaluator::build(&scn, &alloc, &conv, &RANKS);
+        let (l_star, r_star, t_star) = ev.best_split_rank();
+        assert!(scn.profile.split_candidates().contains(&l_star));
+        assert!(RANKS.contains(&r_star));
+        for l_c in scn.profile.split_candidates() {
+            for &r in &RANKS {
+                assert!(ev.eval(l_c, r) >= t_star, "({l_c}, {r}) beats the scan");
+            }
+        }
+        assert_eq!(t_star.to_bits(), ev.eval(l_star, r_star).to_bits());
+    }
+
+    #[test]
+    fn joint_scan_never_worse_than_either_single_scan() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let alloc = toy_alloc();
+        let ev = DelayEvaluator::build(&scn, &alloc, &conv, &RANKS);
+        let (_, _, t_joint) = ev.best_split_rank();
+        let (l_split, t_split) = ev.best_split(alloc.rank);
+        let (_, t_rank) = ev.best_rank(l_split);
+        assert!(t_joint <= t_split);
+        assert!(t_joint <= t_rank);
+    }
+
+    #[test]
+    fn cache_shares_tables_and_keys_on_ranks() {
+        let scn = toy_scenario();
+        let cache = WorkloadCache::new();
+        let a = cache.table_for(&scn.profile, &RANKS);
+        let b = cache.table_for(&scn.profile, &RANKS);
+        assert!(Arc::ptr_eq(&a, &b), "same key must share one table");
+        assert_eq!(cache.tables(), 1);
+        let c = cache.table_for(&scn.profile, &[1, 8]);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.tables(), 2);
+    }
+}

@@ -12,8 +12,10 @@
 
 pub mod convergence;
 pub mod energy;
+pub mod eval;
 
 pub use convergence::ConvergenceModel;
+pub use eval::{DelayEvaluator, WorkloadCache};
 
 use crate::model::WorkloadProfile;
 use crate::net::{Link, Topology};

@@ -21,13 +21,15 @@
 //!   FLOPs/bytes workload model (paper Table III), LoRA adapter state.
 //! * [`net`] — wireless substrate: path loss, shadow fading, FDMA
 //!   subchannels, Shannon rates (Eqs. 9/14).
-//! * [`delay`] — the Section-V latency model (Eqs. 8–17) and the E(r)
-//!   convergence-steps model.
+//! * [`delay`] — the Section-V latency model (Eqs. 8–17), the E(r)
+//!   convergence-steps model, and [`delay::eval`]: the cached
+//!   delay-evaluation engine the exhaustive searches run on.
 //! * [`opt`] — Algorithm 2 (greedy subchannel assignment), the exact
-//!   convex power-control solver for P2, exhaustive split/rank search
-//!   (P3/P4), the BCD loop (Algorithm 3), baselines a–d, and the
-//!   [`opt::policy`] layer: the `AllocationPolicy` trait + string-keyed
-//!   `PolicyRegistry` every experiment selects schemes from.
+//!   convex power-control solver for P2, the joint split×rank
+//!   exhaustive scan (P3×P4), the BCD loop (Algorithm 3), baselines
+//!   a–d, and the [`opt::policy`] layer: the `AllocationPolicy` trait +
+//!   string-keyed `PolicyRegistry` every experiment selects schemes
+//!   from.
 //! * [`runtime`] — PJRT engine: load HLO-text artifacts, compile once,
 //!   execute from the training hot path.
 //! * [`data`] — synthetic E2E-style corpus generator + byte tokenizer.

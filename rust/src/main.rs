@@ -15,12 +15,13 @@
 //! * `info`     — list available artifact variants.
 //!
 //! Scenario flags shared by `optimize`/`latency`/`sweep`:
-//! `--preset <paper|dense_cell|weak_edge|asymmetric_links>`,
+//! `--preset <paper|dense_cell|weak_edge|asymmetric_links|many_clients>`,
 //! `--config <toml>`, `--clients`, `--seed`, `--model`, `--batch`,
 //! `--local-steps`. Policy flags: `--policy`/`--policies` (names from
 //! the registry, comma-separated, or `all`) and `--draws` (baseline
 //! averaging). `sweep` additionally takes `--threads` (grid workers;
-//! 0 = all cores).
+//! 0 = all cores); infeasible grid points are reported as skipped rows
+//! rather than aborting the sweep.
 //!
 //! Defaults reproduce the paper's Table II setup.
 
@@ -198,7 +199,10 @@ fn cmd_latency(args: &mut Args) -> Result<()> {
         .policies(reg.resolve(&spec)?)
         .threads(1)
         .run()?;
-    let point = &report.points[0];
+    let Some(point) = report.points.first() else {
+        report.print_errors();
+        bail!("scenario could not be evaluated");
+    };
 
     println!("total training delay (s), lower is better:");
     let objectives = point.objectives();
@@ -248,6 +252,14 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
         .threads(threads)
         .run()?;
     report.print_table();
+    if !report.errors.is_empty() {
+        println!(
+            "{} of {} grid point(s) skipped as infeasible ({} error row(s) above)",
+            report.skipped_points(),
+            report.skipped_points() + report.points.len(),
+            report.errors.len()
+        );
+    }
     report.write_csv(&out)?;
     println!("series written to {out}");
     if let Some(path) = json {

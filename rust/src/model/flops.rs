@@ -163,6 +163,99 @@ impl WorkloadProfile {
     }
 }
 
+/// Precomputed per-(l_c, rank) workload sums over a candidate rank set.
+///
+/// The prefix sums behind [`WorkloadProfile::client_fwd_flops`] & co. are
+/// re-walked on every delay evaluation; the P3/P4 joint scan evaluates
+/// the whole split×rank grid every BCD iteration, so
+/// [`crate::delay::eval::DelayEvaluator`] tabulates them once per
+/// (profile, rank set) and reads them back as O(1) lookups. Every entry
+/// is produced by the corresponding `WorkloadProfile` method, so lookups
+/// are bit-identical to the uncached path (asserted by the property
+/// tests in `rust/tests/prop_eval.rs`).
+#[derive(Clone, Debug)]
+pub struct WorkloadTable {
+    ranks: Vec<usize>,
+    /// Number of blocks L; tables are indexed by l_c in 0..=L.
+    l_max: usize,
+    /// Row-major (l_c, rank-index) tables, (L+1) × ranks.len().
+    client_fwd: Vec<f64>,
+    client_bwd: Vec<f64>,
+    server_fwd: Vec<f64>,
+    server_bwd: Vec<f64>,
+    adapter_bits: Vec<f64>,
+    /// Per-l_c activation upload bits (rank-independent), L+1 entries.
+    act_bits: Vec<f64>,
+}
+
+impl WorkloadTable {
+    pub fn new(profile: &WorkloadProfile, ranks: &[usize]) -> WorkloadTable {
+        assert!(!ranks.is_empty(), "empty candidate rank set");
+        let l_max = profile.blocks.len();
+        let cells = (l_max + 1) * ranks.len();
+        let mut t = WorkloadTable {
+            ranks: ranks.to_vec(),
+            l_max,
+            client_fwd: Vec::with_capacity(cells),
+            client_bwd: Vec::with_capacity(cells),
+            server_fwd: Vec::with_capacity(cells),
+            server_bwd: Vec::with_capacity(cells),
+            adapter_bits: Vec::with_capacity(cells),
+            act_bits: (0..=l_max).map(|l| profile.activation_bits(l)).collect(),
+        };
+        for l_c in 0..=l_max {
+            for &r in ranks {
+                t.client_fwd.push(profile.client_fwd_flops(l_c, r));
+                t.client_bwd.push(profile.client_bwd_flops(l_c, r));
+                t.server_fwd.push(profile.server_fwd_flops(l_c, r));
+                t.server_bwd.push(profile.server_bwd_flops(l_c, r));
+                t.adapter_bits.push(profile.client_adapter_bits(l_c, r));
+            }
+        }
+        t
+    }
+
+    /// The candidate rank set, in construction order (the joint scan's
+    /// tie-break order).
+    pub fn ranks(&self) -> &[usize] {
+        &self.ranks
+    }
+
+    /// Position of `rank` in the candidate set, if present.
+    pub fn rank_index(&self, rank: usize) -> Option<usize> {
+        self.ranks.iter().position(|&r| r == rank)
+    }
+
+    fn idx(&self, l_c: usize, ri: usize) -> usize {
+        debug_assert!(ri < self.ranks.len());
+        l_c.min(self.l_max) * self.ranks.len() + ri
+    }
+
+    pub fn client_fwd_flops(&self, l_c: usize, ri: usize) -> f64 {
+        self.client_fwd[self.idx(l_c, ri)]
+    }
+
+    pub fn client_bwd_flops(&self, l_c: usize, ri: usize) -> f64 {
+        self.client_bwd[self.idx(l_c, ri)]
+    }
+
+    pub fn server_fwd_flops(&self, l_c: usize, ri: usize) -> f64 {
+        self.server_fwd[self.idx(l_c, ri)]
+    }
+
+    pub fn server_bwd_flops(&self, l_c: usize, ri: usize) -> f64 {
+        self.server_bwd[self.idx(l_c, ri)]
+    }
+
+    pub fn adapter_bits(&self, l_c: usize, ri: usize) -> f64 {
+        self.adapter_bits[self.idx(l_c, ri)]
+    }
+
+    pub fn activation_bits(&self, l_c: usize) -> f64 {
+        self.act_bits[l_c.min(self.l_max)]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -242,5 +335,40 @@ mod tests {
     fn zero_rank_means_zero_adapter_upload() {
         let p = profile();
         assert_eq!(p.client_adapter_bits(6, 0), 0.0);
+    }
+
+    #[test]
+    fn workload_table_matches_profile_bit_for_bit() {
+        let p = profile();
+        let ranks = [1usize, 2, 4, 6, 8];
+        let t = WorkloadTable::new(&p, &ranks);
+        for l_c in 0..=p.blocks.len() {
+            assert_eq!(t.activation_bits(l_c).to_bits(), p.activation_bits(l_c).to_bits());
+            for (ri, &r) in ranks.iter().enumerate() {
+                assert_eq!(t.rank_index(r), Some(ri));
+                for (got, want) in [
+                    (t.client_fwd_flops(l_c, ri), p.client_fwd_flops(l_c, r)),
+                    (t.client_bwd_flops(l_c, ri), p.client_bwd_flops(l_c, r)),
+                    (t.server_fwd_flops(l_c, ri), p.server_fwd_flops(l_c, r)),
+                    (t.server_bwd_flops(l_c, ri), p.server_bwd_flops(l_c, r)),
+                    (t.adapter_bits(l_c, ri), p.client_adapter_bits(l_c, r)),
+                ] {
+                    assert_eq!(got.to_bits(), want.to_bits(), "l_c={l_c} r={r}");
+                }
+            }
+        }
+        assert_eq!(t.rank_index(3), None);
+    }
+
+    #[test]
+    fn workload_table_clamps_like_profile() {
+        let p = profile();
+        let t = WorkloadTable::new(&p, &[4]);
+        // beyond-L lookups clamp, exactly as the profile methods do
+        assert_eq!(
+            t.client_fwd_flops(99, 0).to_bits(),
+            p.client_fwd_flops(99, 4).to_bits()
+        );
+        assert_eq!(t.activation_bits(99).to_bits(), p.activation_bits(99).to_bits());
     }
 }

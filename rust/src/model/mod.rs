@@ -6,6 +6,6 @@ pub mod flops;
 pub mod gpt2;
 pub mod lora;
 
-pub use flops::{LayerWorkload, WorkloadProfile};
+pub use flops::{LayerWorkload, WorkloadProfile, WorkloadTable};
 pub use gpt2::Gpt2Config;
 pub use lora::AdapterSet;

@@ -15,9 +15,9 @@
 
 use anyhow::Result;
 
-use crate::delay::{Allocation, ConvergenceModel, Scenario};
-use crate::opt::bcd::{self, BcdOptions};
-use crate::opt::{power, rank, split};
+use crate::delay::{Allocation, ConvergenceModel, DelayEvaluator, Scenario, WorkloadCache};
+use crate::opt::bcd;
+use crate::opt::power;
 use crate::util::rng::Rng;
 
 /// Random assignment: first a random 1-per-client pass, then uniform.
@@ -75,19 +75,15 @@ pub fn baseline_b(
     conv: &ConvergenceModel,
     ranks: &[usize],
     rng: &mut Rng,
+    cache: &WorkloadCache,
 ) -> (Allocation, f64) {
     let mut alloc = random_alloc(scn, ranks, rng);
-    // alternate the two exhaustive searches to a fixed point (<= L*R evals)
-    for _ in 0..4 {
-        let (l, _) = split::best_split(scn, &alloc, conv);
-        alloc.l_c = l;
-        let (r, _) = rank::best_rank(scn, &alloc, conv, ranks);
-        if r == alloc.rank {
-            break;
-        }
-        alloc.rank = r;
-    }
-    let t = scn.total_delay(&alloc, conv);
+    // one joint split×rank scan on the cached evaluator — the true grid
+    // argmin, which the old alternating 1-D scans only approximated
+    let ev = DelayEvaluator::new(scn, &alloc, conv, cache.table_for(&scn.profile, ranks));
+    let (l, r, t) = ev.best_split_rank();
+    alloc.l_c = l;
+    alloc.rank = r;
     (alloc, t)
 }
 
@@ -98,7 +94,9 @@ pub fn baseline_c(
     conv: &ConvergenceModel,
     ranks: &[usize],
     rng: &mut Rng,
+    cache: &WorkloadCache,
 ) -> Result<(Allocation, f64)> {
+    let table = cache.table_for(&scn.profile, ranks);
     let l = scn.profile.blocks.len();
     let frozen_l_c = 1 + rng.below(l.saturating_sub(1).max(1));
     let mut alloc = bcd::initial_alloc(scn, frozen_l_c, 4);
@@ -117,7 +115,8 @@ pub fn baseline_c(
             alloc = cand;
             obj = o;
         }
-        let (r, t_r) = rank::best_rank(scn, &alloc, conv, ranks);
+        let ev = DelayEvaluator::new(scn, &alloc, conv, table.clone());
+        let (r, t_r) = ev.best_rank(alloc.l_c);
         if t_r <= obj {
             alloc.rank = r;
             obj = t_r;
@@ -135,7 +134,9 @@ pub fn baseline_d(
     conv: &ConvergenceModel,
     ranks: &[usize],
     rng: &mut Rng,
+    cache: &WorkloadCache,
 ) -> Result<(Allocation, f64)> {
+    let table = cache.table_for(&scn.profile, ranks);
     let frozen_rank = *rng.choose(ranks);
     let mut alloc = bcd::initial_alloc(scn, (scn.profile.blocks.len() / 2).max(1), frozen_rank);
     let mut obj = scn.total_delay(&alloc, conv);
@@ -153,7 +154,8 @@ pub fn baseline_d(
             alloc = cand;
             obj = o;
         }
-        let (l_c, t_s) = split::best_split(scn, &alloc, conv);
+        let ev = DelayEvaluator::new(scn, &alloc, conv, table.clone());
+        let (l_c, t_s) = ev.best_split(alloc.rank);
         if t_s <= obj {
             alloc.l_c = l_c;
             obj = t_s;
@@ -165,45 +167,8 @@ pub fn baseline_d(
     Ok((alloc, obj))
 }
 
-/// Run the proposed scheme plus all four baselines; returns
-/// `(proposed, a, b, c, d)` objectives, averaging the random baselines
-/// over `draws` seeded repetitions.
-///
-/// Deprecated: the experiment API now expresses this as a policy list —
-/// `PolicyRegistry::paper_suite(ranks, seed, draws).resolve("all")` run
-/// through a [`crate::sim::SweepRunner`] (or `solve`d directly). The
-/// shim is kept so existing callers migrate in-tree; its draw streams
-/// differ slightly from per-policy solves (one shared rng across all
-/// four baselines per draw here, an independent stream per policy
-/// there), which does not change any qualitative result.
-#[deprecated(note = "use opt::PolicyRegistry::paper_suite(..) with sim::SweepRunner")]
-pub fn compare_all(
-    scn: &Scenario,
-    conv: &ConvergenceModel,
-    ranks: &[usize],
-    seed: u64,
-    draws: usize,
-) -> Result<[f64; 5]> {
-    let opts = BcdOptions {
-        ranks: ranks.to_vec(),
-        ..BcdOptions::default()
-    };
-    let proposed = bcd::optimize(scn, conv, &opts)?.objective;
-    let mut acc = [0.0f64; 4];
-    for d in 0..draws {
-        let mut rng = Rng::new(seed ^ (d as u64).wrapping_mul(0x9E3779B97F4A7C15));
-        acc[0] += baseline_a(scn, conv, ranks, &mut rng).1;
-        acc[1] += baseline_b(scn, conv, ranks, &mut rng).1;
-        acc[2] += baseline_c(scn, conv, ranks, &mut rng)?.1;
-        acc[3] += baseline_d(scn, conv, ranks, &mut rng)?.1;
-    }
-    let n = draws.max(1) as f64;
-    Ok([proposed, acc[0] / n, acc[1] / n, acc[2] / n, acc[3] / n])
-}
-
 #[cfg(test)]
 mod tests {
-    #![allow(deprecated)] // compare_all's behaviour is pinned by these tests
     use super::*;
     use crate::delay::testutil::toy_scenario;
 
@@ -213,11 +178,12 @@ mod tests {
     fn all_baselines_feasible() {
         let scn = toy_scenario();
         let conv = ConvergenceModel::paper_default();
+        let cache = WorkloadCache::new();
         let mut rng = Rng::new(1);
         let (a, _) = baseline_a(&scn, &conv, &RANKS, &mut rng);
-        let (b, _) = baseline_b(&scn, &conv, &RANKS, &mut rng);
-        let (c, _) = baseline_c(&scn, &conv, &RANKS, &mut rng).unwrap();
-        let (d, _) = baseline_d(&scn, &conv, &RANKS, &mut rng).unwrap();
+        let (b, _) = baseline_b(&scn, &conv, &RANKS, &mut rng, &cache);
+        let (c, _) = baseline_c(&scn, &conv, &RANKS, &mut rng, &cache).unwrap();
+        let (d, _) = baseline_d(&scn, &conv, &RANKS, &mut rng, &cache).unwrap();
         for (name, alloc) in [("a", &a), ("b", &b), ("c", &c), ("d", &d)] {
             alloc
                 .validate(scn.main_link.subch.len(), scn.fed_link.subch.len())
@@ -227,20 +193,40 @@ mod tests {
     }
 
     #[test]
-    fn proposed_beats_every_baseline() {
+    fn baseline_b_objective_is_the_joint_grid_argmin() {
         let scn = toy_scenario();
         let conv = ConvergenceModel::paper_default();
-        let [p, a, b, c, d] = compare_all(&scn, &conv, &RANKS, 7, 3).unwrap();
-        assert!(p <= a && p <= b && p <= c && p <= d, "p={p} a={a} b={b} c={c} d={d}");
+        let cache = WorkloadCache::new();
+        let mut rng = Rng::new(9);
+        let (alloc, t) = baseline_b(&scn, &conv, &RANKS, &mut rng, &cache);
+        assert_eq!(t.to_bits(), scn.total_delay(&alloc, &conv).to_bits());
+        for l_c in scn.profile.split_candidates() {
+            for &r in &RANKS {
+                let mut cand = alloc.clone();
+                cand.l_c = l_c;
+                cand.rank = r;
+                assert!(scn.total_delay(&cand, &conv) >= t, "({l_c}, {r}) beats baseline b");
+            }
+        }
     }
 
     #[test]
     fn partial_optimization_helps() {
         // each partially-optimized baseline should beat fully-random (a)
-        // on average over draws
+        // on average over draws (same shared-stream draws the removed
+        // compare_all shim used, so the pinned behaviour carries over)
         let scn = toy_scenario();
         let conv = ConvergenceModel::paper_default();
-        let [_, a, b, c, d] = compare_all(&scn, &conv, &RANKS, 3, 5).unwrap();
+        let cache = WorkloadCache::new();
+        let mut acc = [0.0f64; 4];
+        for d in 0..5u64 {
+            let mut rng = Rng::new(3 ^ d.wrapping_mul(0x9E3779B97F4A7C15));
+            acc[0] += baseline_a(&scn, &conv, &RANKS, &mut rng).1;
+            acc[1] += baseline_b(&scn, &conv, &RANKS, &mut rng, &cache).1;
+            acc[2] += baseline_c(&scn, &conv, &RANKS, &mut rng, &cache).unwrap().1;
+            acc[3] += baseline_d(&scn, &conv, &RANKS, &mut rng, &cache).unwrap().1;
+        }
+        let [a, b, c, d] = acc.map(|x| x / 5.0);
         assert!(b <= a * 1.05, "b={b} vs a={a}");
         assert!(c <= a * 1.05, "c={c} vs a={a}");
         assert!(d <= a * 1.05, "d={d} vs a={a}");

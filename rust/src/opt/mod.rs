@@ -8,10 +8,13 @@
 //! * [`power`] — P2, the convex power-control subproblem, solved
 //!   *exactly* by bisection on the epigraph delay + per-client KKT
 //!   water-filling (no external solver needed; see module docs);
-//! * [`split`] — P3, exhaustive search over split points;
-//! * [`rank`] — P4, exhaustive search over candidate ranks;
-//! * [`bcd`] — Algorithm 3, the alternating (block-coordinate-descent)
-//!   loop over the four subproblems;
+//! * [`split`] / [`rank`] — standalone single-call P3 / P4 exhaustive
+//!   scans (thin wrappers over the cached evaluator; the baselines use
+//!   [`crate::delay::DelayEvaluator`] directly so repeat scans share
+//!   one workload table);
+//! * [`bcd`] — Algorithm 3: the alternating (block-coordinate-descent)
+//!   loop, with P3+P4 run as one **joint** split×rank exhaustive scan
+//!   on the cached [`crate::delay::DelayEvaluator`];
 //! * [`baselines`] — baselines a–d from Section VII-C (the raw seeded
 //!   draw functions);
 //! * [`policy`] — the experiment-facing API: the [`AllocationPolicy`]

@@ -18,7 +18,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use crate::delay::{Allocation, ConvergenceModel, Scenario};
+use crate::delay::{Allocation, ConvergenceModel, Scenario, WorkloadCache};
 use crate::opt::baselines;
 use crate::opt::bcd::{self, BcdOptions};
 use crate::util::rng::Rng;
@@ -44,13 +44,28 @@ pub struct PolicyOutcome {
 /// A named allocation scheme: scenario in, allocation + objective out.
 ///
 /// Implementations must be deterministic functions of
-/// `(self, scenario, convergence model)` — see the module docs.
+/// `(self, scenario, convergence model)` — see the module docs. The
+/// [`WorkloadCache`] passed to [`AllocationPolicy::solve_cached`] is a
+/// pure memo of per-(l_c, rank) workload tables and must never change a
+/// result, only its cost — [`crate::sim::SweepRunner`] hands every grid
+/// point the same cache so solves over the same model/rank set share
+/// one table.
 pub trait AllocationPolicy: Send + Sync {
     /// Stable identifier used by [`PolicyRegistry`] and report columns.
     fn name(&self) -> &str;
 
-    /// Solve the scenario, returning the allocation and objective.
-    fn solve(&self, scn: &Scenario, conv: &ConvergenceModel) -> Result<PolicyOutcome>;
+    /// Solve the scenario, reusing workload tables from `cache`.
+    fn solve_cached(
+        &self,
+        scn: &Scenario,
+        conv: &ConvergenceModel,
+        cache: &WorkloadCache,
+    ) -> Result<PolicyOutcome>;
+
+    /// Solve the scenario with a private single-use cache.
+    fn solve(&self, scn: &Scenario, conv: &ConvergenceModel) -> Result<PolicyOutcome> {
+        self.solve_cached(scn, conv, &WorkloadCache::new())
+    }
 }
 
 /// The proposed scheme: Algorithm 3, BCD over subproblems P1–P4.
@@ -80,8 +95,13 @@ impl AllocationPolicy for Proposed {
         "proposed"
     }
 
-    fn solve(&self, scn: &Scenario, conv: &ConvergenceModel) -> Result<PolicyOutcome> {
-        let res = bcd::optimize(scn, conv, &self.opts)?;
+    fn solve_cached(
+        &self,
+        scn: &Scenario,
+        conv: &ConvergenceModel,
+        cache: &WorkloadCache,
+    ) -> Result<PolicyOutcome> {
+        let res = bcd::optimize_cached(scn, conv, &self.opts, cache)?;
         Ok(PolicyOutcome {
             policy: self.name().to_string(),
             alloc: res.alloc,
@@ -158,16 +178,27 @@ impl AllocationPolicy for RandomBaseline {
         self.kind.label()
     }
 
-    fn solve(&self, scn: &Scenario, conv: &ConvergenceModel) -> Result<PolicyOutcome> {
+    fn solve_cached(
+        &self,
+        scn: &Scenario,
+        conv: &ConvergenceModel,
+        cache: &WorkloadCache,
+    ) -> Result<PolicyOutcome> {
         let mut sum = 0.0;
         let mut best: Option<(Allocation, f64)> = None;
         for d in 0..self.draws {
             let mut rng = self.draw_rng(d as u64);
             let (alloc, t) = match self.kind {
                 BaselineKind::A => baselines::baseline_a(scn, conv, &self.ranks, &mut rng),
-                BaselineKind::B => baselines::baseline_b(scn, conv, &self.ranks, &mut rng),
-                BaselineKind::C => baselines::baseline_c(scn, conv, &self.ranks, &mut rng)?,
-                BaselineKind::D => baselines::baseline_d(scn, conv, &self.ranks, &mut rng)?,
+                BaselineKind::B => {
+                    baselines::baseline_b(scn, conv, &self.ranks, &mut rng, cache)
+                }
+                BaselineKind::C => {
+                    baselines::baseline_c(scn, conv, &self.ranks, &mut rng, cache)?
+                }
+                BaselineKind::D => {
+                    baselines::baseline_d(scn, conv, &self.ranks, &mut rng, cache)?
+                }
             };
             sum += t;
             if best.as_ref().map(|&(_, bt)| t < bt).unwrap_or(true) {
@@ -331,6 +362,24 @@ mod tests {
             let b = policy.solve(&scn, &conv).unwrap();
             assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "{}", policy.name());
         }
+    }
+
+    #[test]
+    fn shared_cache_never_changes_a_result() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let cache = crate::delay::WorkloadCache::new();
+        for policy in suite().resolve("all").unwrap() {
+            let fresh = policy.solve(&scn, &conv).unwrap();
+            let cached = policy.solve_cached(&scn, &conv, &cache).unwrap();
+            let again = policy.solve_cached(&scn, &conv, &cache).unwrap();
+            assert_eq!(fresh.objective.to_bits(), cached.objective.to_bits(), "{}", policy.name());
+            assert_eq!(cached.objective.to_bits(), again.objective.to_bits(), "{}", policy.name());
+            assert_eq!(cached.alloc.l_c, fresh.alloc.l_c, "{}", policy.name());
+            assert_eq!(cached.alloc.rank, fresh.alloc.rank, "{}", policy.name());
+        }
+        // proposed + all baselines share the one (profile, ranks) table
+        assert_eq!(cache.tables(), 1);
     }
 
     #[test]

@@ -4,10 +4,19 @@
 //! ΔΘ_c) against convergence speed E(r); with everything else fixed the
 //! candidate set is small ({1, 2, 4, 6, 8} in the paper), so exhaustive
 //! evaluation of Eq. 17 is exact.
+//!
+//! Inside the BCD loop P4 no longer runs alone: [`crate::opt::bcd`]
+//! scans split and rank *jointly* on a cached
+//! [`crate::delay::DelayEvaluator`]. This standalone entry point is a
+//! one-call convenience wrapper over that evaluator; repeat-scan
+//! callers like baseline c use
+//! [`crate::delay::DelayEvaluator::best_rank`] directly on a shared
+//! table instead.
 
-use crate::delay::{Allocation, ConvergenceModel, Scenario};
+use crate::delay::{Allocation, ConvergenceModel, DelayEvaluator, Scenario};
 
-/// Returns (best rank, its total delay) over `candidates`.
+/// Returns (best rank, its total delay) over `candidates`. Ties resolve
+/// to the earlier candidate.
 pub fn best_rank(
     scn: &Scenario,
     alloc: &Allocation,
@@ -15,16 +24,7 @@ pub fn best_rank(
     candidates: &[usize],
 ) -> (usize, f64) {
     assert!(!candidates.is_empty());
-    let mut best = (candidates[0], f64::INFINITY);
-    for &r in candidates {
-        let mut cand = alloc.clone();
-        cand.rank = r;
-        let t = scn.total_delay(&cand, conv);
-        if t < best.1 {
-            best = (r, t);
-        }
-    }
-    best
+    DelayEvaluator::build(scn, alloc, conv, candidates).best_rank(alloc.l_c)
 }
 
 #[cfg(test)]

@@ -4,8 +4,16 @@
 //! (Eq. 17) at every admissible split prefix and keep the argmin. The
 //! candidate count equals the block count, so exhaustive search is
 //! exact and cheap — precisely the paper's argument.
+//!
+//! Inside the BCD loop P3 no longer runs alone: [`crate::opt::bcd`]
+//! scans split and rank *jointly* on a cached
+//! [`crate::delay::DelayEvaluator`]. This standalone entry point is a
+//! one-call convenience wrapper over that evaluator (single-rank
+//! table); repeat-scan callers like baseline d use
+//! [`crate::delay::DelayEvaluator::best_split`] directly on a shared
+//! table instead.
 
-use crate::delay::{Allocation, ConvergenceModel, Scenario};
+use crate::delay::{Allocation, ConvergenceModel, DelayEvaluator, Scenario};
 
 /// Returns (best l_c, its total delay). Ties resolve to the smaller
 /// l_c (less client compute).
@@ -14,16 +22,7 @@ pub fn best_split(
     alloc: &Allocation,
     conv: &ConvergenceModel,
 ) -> (usize, f64) {
-    let mut best = (alloc.l_c, f64::INFINITY);
-    for l_c in scn.profile.split_candidates() {
-        let mut cand = alloc.clone();
-        cand.l_c = l_c;
-        let t = scn.total_delay(&cand, conv);
-        if t < best.1 {
-            best = (l_c, t);
-        }
-    }
-    best
+    DelayEvaluator::build(scn, alloc, conv, &[alloc.rank]).best_split(alloc.rank)
 }
 
 #[cfg(test)]

@@ -1,8 +1,8 @@
 //! Fluent, seeded scenario construction with named heterogeneity
 //! presets.
 //!
-//! [`ScenarioBuilder`] replaces the old `build_scenario` free function:
-//! it starts from a preset (or an explicit [`Config`]), lets callers
+//! [`ScenarioBuilder`] is the one way to make a [`Scenario`]: it
+//! starts from a preset (or an explicit [`Config`]), lets callers
 //! override the knobs experiments actually sweep — clients, bandwidth,
 //! compute, power, seed — and then samples the geometry/fading exactly
 //! as Sec. VII-A prescribes. The same builder value can be rebuilt any
@@ -17,7 +17,13 @@ use crate::net::{power, ChannelModel, Link, SubchannelSet, Topology};
 use crate::util::rng::Rng;
 
 /// Named scenario presets (see [`ScenarioBuilder::preset`]).
-pub const PRESETS: [&str; 4] = ["paper", "dense_cell", "weak_edge", "asymmetric_links"];
+pub const PRESETS: [&str; 5] = [
+    "paper",
+    "dense_cell",
+    "weak_edge",
+    "asymmetric_links",
+    "many_clients",
+];
 
 /// Fluent scenario constructor over a [`Config`].
 #[derive(Clone, Debug)]
@@ -54,7 +60,12 @@ impl ScenarioBuilder {
     ///   (0.2–0.6 GHz, 512 FLOPs/cycle): stresses the split decision;
     /// * `asymmetric_links` — wide main-server uplink (1 MHz / 32
     ///   subchannels) against a narrow federated link (125 kHz / 8),
-    ///   with a far main server: stresses the two-link power trade.
+    ///   with a far main server: stresses the two-link power trade;
+    /// * `many_clients` — the production-scale regime: 1000 clients in
+    ///   a 250 m cell sharing 1024 subchannels and 20 MHz per link,
+    ///   with a raised per-server power budget. Exercises the cached
+    ///   delay-evaluation path at large K (see the large-K axis of
+    ///   `benches/micro_hotpath.rs`).
     pub fn preset(name: &str) -> Result<ScenarioBuilder> {
         let mut cfg = Config::paper_defaults();
         match name {
@@ -79,6 +90,16 @@ impl ScenarioBuilder {
                 cfg.system.bandwidth_fed_hz = 125e3;
                 cfg.system.subch_fed = 8;
                 cfg.system.d_main_m = 200.0;
+            }
+            "many_clients" => {
+                cfg.system.clients = 1000;
+                cfg.system.subch_main = 1024;
+                cfg.system.subch_fed = 1024;
+                cfg.system.bandwidth_main_hz = 20e6;
+                cfg.system.bandwidth_fed_hz = 20e6;
+                cfg.system.d_max_m = 250.0;
+                cfg.system.p_th_main_dbm = 50.0;
+                cfg.system.p_th_fed_dbm = 50.0;
             }
             other => bail!(
                 "unknown scenario preset '{other}' (available: {})",
@@ -262,6 +283,16 @@ mod tests {
             assert!(scn.main_link.subch.len() >= scn.k(), "{name}");
             assert!(scn.fed_link.subch.len() >= scn.k(), "{name}");
         }
+    }
+
+    #[test]
+    fn many_clients_is_production_scale() {
+        let b = ScenarioBuilder::preset("many_clients").unwrap();
+        assert_eq!(b.config().system.clients, 1000);
+        let scn = b.build().unwrap();
+        assert_eq!(scn.k(), 1000);
+        assert!(scn.main_link.subch.len() >= scn.k());
+        assert_eq!(scn.main_link.client_gain.len(), 1000);
     }
 
     #[test]

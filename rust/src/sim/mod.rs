@@ -4,73 +4,22 @@
 //!
 //! * [`builder`] — [`ScenarioBuilder`]: fluent, seeded scenario
 //!   construction with named heterogeneity presets (`paper`,
-//!   `dense_cell`, `weak_edge`, `asymmetric_links`);
+//!   `dense_cell`, `weak_edge`, `asymmetric_links`, `many_clients`);
 //! * [`mod@sweep`] — [`SweepAxis`] / [`SweepRunner`] / [`SweepReport`]:
 //!   declarative *policies × grid* sweeps fanned out across
-//!   `std::thread` workers, with deterministic CSV/JSON reports;
+//!   `std::thread` workers, with deterministic CSV/JSON reports,
+//!   per-point error rows for infeasible grid corners, and a shared
+//!   [`crate::delay::WorkloadCache`] across grid points;
 //! * the policies themselves live in [`crate::opt::policy`].
 //!
 //! Every figure bench (Figs. 5–8), the `optimize`/`latency`/`sweep`
 //! CLI subcommands, and the resource-allocation example run on this
-//! API. The old `build_scenario`/`sweep` free functions remain as thin
-//! deprecated shims.
+//! API. (The deprecated `build_scenario`/`sweep` free functions are
+//! gone — `ScenarioBuilder::from_config(cfg).build()` and
+//! [`SweepRunner`] are the only spellings.)
 
 pub mod builder;
 pub mod sweep;
 
 pub use self::builder::{ScenarioBuilder, PRESETS};
-pub use self::sweep::{PointResult, SweepAxis, SweepReport, SweepRunner};
-
-use anyhow::Result;
-
-use crate::config::Config;
-use crate::delay::Scenario;
-
-/// Build a scenario straight from a config.
-#[deprecated(note = "use sim::ScenarioBuilder::from_config(cfg).build()")]
-pub fn build_scenario(cfg: &Config) -> Result<Scenario> {
-    ScenarioBuilder::from_config(cfg.clone()).build()
-}
-
-/// Materialize `(value, scenario)` pairs for a one-axis sweep.
-#[deprecated(note = "use sim::SweepRunner with a SweepAxis")]
-pub fn sweep<F: Fn(&mut Config, f64)>(
-    base: &Config,
-    values: &[f64],
-    apply: F,
-) -> Result<Vec<(f64, Scenario)>> {
-    let mut out = Vec::with_capacity(values.len());
-    for &v in values {
-        let mut cfg = base.clone();
-        apply(&mut cfg, v);
-        out.push((v, ScenarioBuilder::from_config(cfg).build()?));
-    }
-    Ok(out)
-}
-
-#[cfg(test)]
-mod tests {
-    #![allow(deprecated)] // the shims themselves are under test here
-    use super::*;
-
-    #[test]
-    fn build_scenario_shim_matches_builder() {
-        let cfg = Config::paper_defaults();
-        let a = build_scenario(&cfg).unwrap();
-        let b = ScenarioBuilder::from_config(cfg).build().unwrap();
-        assert_eq!(a.main_link.client_gain, b.main_link.client_gain);
-        assert_eq!(a.k(), b.k());
-    }
-
-    #[test]
-    fn sweep_shim_applies_parameter() {
-        let cfg = Config::paper_defaults();
-        let pts = sweep(&cfg, &[250e3, 500e3, 1000e3], |c, v| {
-            c.system.bandwidth_main_hz = v;
-        })
-        .unwrap();
-        assert_eq!(pts.len(), 3);
-        assert!((pts[0].1.main_link.subch.total_hz() - 250e3).abs() < 1e-6);
-        assert!((pts[2].1.main_link.subch.total_hz() - 1000e3).abs() < 1e-6);
-    }
-}
+pub use self::sweep::{PointError, PointResult, SweepAxis, SweepReport, SweepRunner};

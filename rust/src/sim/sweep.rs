@@ -13,6 +13,12 @@
 //! over a work-stealing index and written back by position: reports are
 //! **byte-identical at any thread count** — asserted by the
 //! determinism test in `rust/tests/prop_policy.rs`.
+//!
+//! All points share one [`crate::delay::WorkloadCache`], so every grid
+//! point with the same model/sequence/rank set reuses the cached
+//! per-(l_c, rank) workload tables, and an infeasible grid point (say,
+//! a `clients` value exceeding the subchannel count) is recorded as a
+//! [`PointError`] row instead of failing the whole sweep.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -20,7 +26,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::Config;
-use crate::delay::ConvergenceModel;
+use crate::delay::{ConvergenceModel, WorkloadCache};
 use crate::opt::policy::{AllocationPolicy, PolicyOutcome};
 use crate::sim::builder::ScenarioBuilder;
 use crate::util::csv::{ensure_parent_dir, escape_field};
@@ -130,12 +136,32 @@ impl PointResult {
     }
 }
 
-/// Structured result of a sweep run.
+/// A grid point that could not be evaluated — e.g. a `clients` axis
+/// value exceeding the subchannel count, or a policy failing on a
+/// degenerate scenario. Recorded instead of failing the whole sweep.
+#[derive(Clone, Debug)]
+pub struct PointError {
+    /// Index of the failing point in the cartesian grid (distinguishes
+    /// points even when duplicate axis values give identical coords).
+    pub point: usize,
+    /// Axis coordinates of the failing point.
+    pub coords: Vec<f64>,
+    /// The policy that failed, or `None` when the scenario itself
+    /// could not be built.
+    pub policy: Option<String>,
+    pub message: String,
+}
+
+/// Structured result of a sweep run. `points` holds the grid points
+/// that evaluated successfully (in grid order); `errors` holds the
+/// rest, also in grid order. CSV output contains only `points`; JSON
+/// carries both.
 #[derive(Clone, Debug)]
 pub struct SweepReport {
     pub axis_names: Vec<String>,
     pub policy_names: Vec<String>,
     pub points: Vec<PointResult>,
+    pub errors: Vec<PointError>,
 }
 
 impl SweepReport {
@@ -188,6 +214,11 @@ impl SweepReport {
                     '"' => out.push_str("\\\""),
                     '\\' => out.push_str("\\\\"),
                     '\n' => out.push_str("\\n"),
+                    // error messages can carry arbitrary control chars;
+                    // escape them so the report stays spec-valid JSON
+                    c if (c as u32) < 0x20 => {
+                        out.push_str(&format!("\\u{:04x}", c as u32));
+                    }
                     c => out.push(c),
                 }
             }
@@ -231,11 +262,31 @@ impl SweepReport {
                 outcomes.join(", ")
             ));
         }
+        let errors: Vec<String> = self
+            .errors
+            .iter()
+            .map(|e| {
+                let coords: Vec<String> = self
+                    .axis_names
+                    .iter()
+                    .zip(&e.coords)
+                    .map(|(n, v)| format!("{}: {}", jstr(n), jnum(*v)))
+                    .collect();
+                format!(
+                    "{{\"point\": {}, \"coords\": {{{}}}, \"policy\": {}, \"message\": {}}}",
+                    e.point,
+                    coords.join(", "),
+                    e.policy.as_deref().map(jstr).unwrap_or_else(|| "null".to_string()),
+                    jstr(&e.message)
+                )
+            })
+            .collect();
         format!(
-            "{{\n  \"axes\": [{}],\n  \"policies\": [{}],\n  \"points\": [\n    {}\n  ]\n}}\n",
+            "{{\n  \"axes\": [{}],\n  \"policies\": [{}],\n  \"points\": [\n    {}\n  ],\n  \"errors\": [{}]\n}}\n",
             axes.join(", "),
             pols.join(", "),
-            points.join(",\n    ")
+            points.join(",\n    "),
+            errors.join(", ")
         )
     }
 
@@ -276,6 +327,36 @@ impl SweepReport {
             }
             println!();
         }
+        self.print_errors();
+    }
+
+    /// Print one line per error row — the single rendering of
+    /// [`PointError`]s shared by [`SweepReport::print_table`] and the
+    /// CLI/example surfaces.
+    pub fn print_errors(&self) {
+        for e in &self.errors {
+            println!(
+                "  ! point {:?} skipped ({}): {}",
+                e.coords,
+                e.policy.as_deref().unwrap_or("scenario"),
+                e.message
+            );
+        }
+    }
+
+    /// Number of distinct grid points that produced error rows (a point
+    /// with several failing policies yields several rows but counts
+    /// once; rows for one point are adjacent, in grid order).
+    pub fn skipped_points(&self) -> usize {
+        let mut skipped = 0;
+        let mut last = None;
+        for e in &self.errors {
+            if last != Some(e.point) {
+                skipped += 1;
+                last = Some(e.point);
+            }
+        }
+        skipped
     }
 }
 
@@ -342,30 +423,67 @@ impl SweepRunner {
         grid
     }
 
-    fn run_point(&self, coords: &[f64]) -> Result<PointResult> {
+    /// Evaluate one grid point: apply the axis values, sample the
+    /// scenario, run every policy against the shared workload cache.
+    /// Failures become [`PointError`] rows rather than aborting the
+    /// sweep — a grid is allowed to contain infeasible corners (e.g. a
+    /// `clients` value exceeding the subchannel count). Every policy is
+    /// attempted even after one fails, so each failing policy gets its
+    /// own error row; a point with any failure is dropped from
+    /// [`SweepReport::points`] as a whole, because a `PointResult` (and
+    /// its CSV row) must carry one outcome per policy column.
+    fn run_point(
+        &self,
+        point: usize,
+        coords: &[f64],
+        cache: &WorkloadCache,
+    ) -> Result<PointResult, Vec<PointError>> {
         let mut cfg = self.base.clone();
         for (axis, &v) in self.axes.iter().zip(coords) {
             (axis.apply)(&mut cfg, v);
         }
-        let scn = ScenarioBuilder::from_config(cfg).build()?;
+        let scn = match ScenarioBuilder::from_config(cfg).build() {
+            Ok(scn) => scn,
+            Err(e) => {
+                return Err(vec![PointError {
+                    point,
+                    coords: coords.to_vec(),
+                    policy: None,
+                    message: format!("{e:#}"),
+                }])
+            }
+        };
         let mut outcomes = Vec::with_capacity(self.policies.len());
+        let mut errors = Vec::new();
         for policy in &self.policies {
-            outcomes.push(
-                policy
-                    .solve(&scn, &self.conv)
-                    .with_context(|| format!("policy {} at {coords:?}", policy.name()))?,
-            );
+            match policy.solve_cached(&scn, &self.conv, cache) {
+                Ok(outcome) => outcomes.push(outcome),
+                Err(e) => errors.push(PointError {
+                    point,
+                    coords: coords.to_vec(),
+                    policy: Some(policy.name().to_string()),
+                    message: format!("{e:#}"),
+                }),
+            }
         }
-        Ok(PointResult {
-            coords: coords.to_vec(),
-            outcomes,
-        })
+        if errors.is_empty() {
+            Ok(PointResult {
+                coords: coords.to_vec(),
+                outcomes,
+            })
+        } else {
+            Err(errors)
+        }
     }
 
     /// Run the whole grid and collect the report. Points are fanned out
     /// across worker threads but written back by grid index, so the
     /// report (and its CSV/JSON serializations) is independent of the
-    /// thread count.
+    /// thread count. All points share one [`WorkloadCache`], so grid
+    /// points with the same model/sequence/rank set reuse the cached
+    /// workload tables. Infeasible points land in
+    /// [`SweepReport::errors`]; `Err` is reserved for misuse of the
+    /// runner itself (no policies, an empty axis).
     pub fn run(&self) -> Result<SweepReport> {
         if self.policies.is_empty() {
             bail!("sweep has no policies (use .policies(registry.resolve(..)?))");
@@ -385,10 +503,11 @@ impl SweepRunner {
         .min(jobs)
         .max(1);
 
-        let mut slots: Vec<Option<Result<PointResult>>> = Vec::with_capacity(jobs);
+        let cache = WorkloadCache::new();
+        let mut slots: Vec<Option<Result<PointResult, Vec<PointError>>>> = Vec::with_capacity(jobs);
         if workers == 1 {
-            for coords in &grid {
-                slots.push(Some(self.run_point(coords)));
+            for (i, coords) in grid.iter().enumerate() {
+                slots.push(Some(self.run_point(i, coords, &cache)));
             }
         } else {
             slots.resize_with(jobs, || None);
@@ -401,7 +520,7 @@ impl SweepRunner {
                         if i >= jobs {
                             break;
                         }
-                        let res = self.run_point(&grid[i]);
+                        let res = self.run_point(i, &grid[i], &cache);
                         results.lock().expect("sweep results lock")[i] = Some(res);
                     });
                 }
@@ -409,13 +528,18 @@ impl SweepRunner {
         }
 
         let mut points = Vec::with_capacity(jobs);
+        let mut errors = Vec::new();
         for (i, slot) in slots.into_iter().enumerate() {
-            points.push(slot.ok_or_else(|| anyhow!("sweep point {i} never ran"))??);
+            match slot.ok_or_else(|| anyhow!("sweep point {i} never ran"))? {
+                Ok(point) => points.push(point),
+                Err(es) => errors.extend(es),
+            }
         }
         Ok(SweepReport {
             axis_names: self.axes.iter().map(|a| a.name.clone()).collect(),
             policy_names: self.policies.iter().map(|p| p.name().to_string()).collect(),
             points,
+            errors,
         })
     }
 }
@@ -488,6 +612,124 @@ mod tests {
     fn empty_policy_list_is_an_error() {
         let err = SweepRunner::new(&tiny_base()).threads(1).run().unwrap_err();
         assert!(format!("{err}").contains("no policies"));
+    }
+
+    #[test]
+    fn infeasible_grid_point_becomes_error_row() {
+        // 25 clients exceed the paper preset's 20 subchannels per link
+        let report = SweepRunner::new(&tiny_base())
+            .over(SweepAxis::clients(&[2.0, 25.0, 3.0]))
+            .policies(reg().resolve("proposed").unwrap())
+            .threads(2)
+            .run()
+            .unwrap();
+        assert_eq!(report.points.len(), 2);
+        assert_eq!(report.points[0].coords, vec![2.0]);
+        assert_eq!(report.points[1].coords, vec![3.0]);
+        assert_eq!(report.errors.len(), 1);
+        let e = &report.errors[0];
+        assert_eq!(e.coords, vec![25.0]);
+        assert!(e.policy.is_none(), "scenario build failed, not a policy");
+        assert!(e.message.contains("subchannel"), "{}", e.message);
+        // CSV carries only the feasible rows
+        assert_eq!(report.to_csv_string().trim_end().lines().count(), 1 + 2);
+        // JSON carries the error row too
+        let json = report.to_json_string();
+        let parsed = crate::util::json::Json::parse(&json).unwrap();
+        let errs = parsed.get("errors").unwrap().as_arr().unwrap();
+        assert_eq!(errs.len(), 1);
+        assert!(errs[0]
+            .get("message")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("subchannel"));
+    }
+
+    #[test]
+    fn every_failing_policy_gets_its_own_error_row() {
+        struct Failing(&'static str);
+        impl AllocationPolicy for Failing {
+            fn name(&self) -> &str {
+                self.0
+            }
+            fn solve_cached(
+                &self,
+                _scn: &crate::delay::Scenario,
+                _conv: &ConvergenceModel,
+                _cache: &WorkloadCache,
+            ) -> Result<PolicyOutcome> {
+                anyhow::bail!("deliberate {} failure", self.0)
+            }
+        }
+        let mut policies = reg().resolve("proposed").unwrap();
+        policies.push(Arc::new(Failing("fail_x")));
+        policies.push(Arc::new(Failing("fail_y")));
+        // duplicate axis value on purpose: the two grid points share
+        // coords and must still count as two skipped points
+        let report = SweepRunner::new(&tiny_base())
+            .over(SweepAxis::clients(&[2.0, 2.0]))
+            .policies(policies)
+            .threads(1)
+            .run()
+            .unwrap();
+        // both failing policies are diagnosed at both points; and since a
+        // CSV row needs every policy column, the points carry no rows
+        assert!(report.points.is_empty());
+        assert_eq!(report.errors.len(), 4);
+        assert_eq!(report.skipped_points(), 2, "rows per point must collapse to one");
+        assert_eq!(report.errors[0].policy.as_deref(), Some("fail_x"));
+        assert_eq!(report.errors[1].policy.as_deref(), Some("fail_y"));
+        assert_eq!(report.errors[0].point, 0);
+        assert_eq!(report.errors[2].point, 1);
+        assert_eq!(report.errors[0].coords, vec![2.0]);
+        assert_eq!(report.errors[2].coords, vec![2.0]);
+        assert!(report.errors[0].message.contains("fail_x failure"));
+    }
+
+    #[test]
+    fn json_escapes_control_characters_in_error_messages() {
+        let report = SweepReport {
+            axis_names: vec!["x".into()],
+            policy_names: vec!["proposed".into()],
+            points: vec![],
+            errors: vec![PointError {
+                point: 0,
+                coords: vec![1.0],
+                policy: None,
+                message: "tab\there\rdone".into(),
+            }],
+        };
+        let json = report.to_json_string();
+        assert!(!json.contains('\t'), "raw control char leaked into JSON");
+        let parsed = crate::util::json::Json::parse(&json).unwrap();
+        let msg = parsed.get("errors").unwrap().as_arr().unwrap()[0]
+            .get("message")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+        assert_eq!(msg, "tab\there\rdone");
+    }
+
+    #[test]
+    fn error_rows_are_deterministic_across_thread_counts() {
+        let run = |threads: usize| {
+            SweepRunner::new(&tiny_base())
+                .over(SweepAxis::clients(&[25.0, 2.0, 30.0]))
+                .policies(reg().resolve("proposed").unwrap())
+                .threads(threads)
+                .run()
+                .unwrap()
+        };
+        let a = run(1);
+        let b = run(3);
+        assert_eq!(a.to_csv_string(), b.to_csv_string());
+        assert_eq!(a.errors.len(), b.errors.len());
+        for (x, y) in a.errors.iter().zip(&b.errors) {
+            assert_eq!(x.coords, y.coords);
+            assert_eq!(x.message, y.message);
+        }
     }
 
     #[test]

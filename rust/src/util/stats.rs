@@ -1,34 +1,71 @@
 //! Small statistics helpers used by benches and the experiment harness.
+//!
+//! Sweep data can legitimately contain non-finite delays — an
+//! infeasible grid point reports `f64::INFINITY` (a zero-rate client in
+//! `Scenario::phase_delays`) — so every aggregate here is defined on
+//! the *finite* subset of its input: `mean`/`std_dev` skip non-finite
+//! values instead of poisoning to NaN, and `percentile` orders with
+//! `total_cmp` instead of panicking on NaN.
 
-/// Arithmetic mean; 0.0 for empty input.
+/// Arithmetic mean of the finite entries; non-finite values (±∞, NaN)
+/// are skipped. 0.0 when no finite entry exists.
 pub fn mean(xs: &[f64]) -> f64 {
-    if xs.is_empty() {
-        return 0.0;
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for &x in xs {
+        if x.is_finite() {
+            sum += x;
+            n += 1;
+        }
     }
-    xs.iter().sum::<f64>() / xs.len() as f64
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
 }
 
-/// Population standard deviation.
+/// Population standard deviation of the finite entries; 0.0 when fewer
+/// than two finite entries exist.
 pub fn std_dev(xs: &[f64]) -> f64 {
-    if xs.len() < 2 {
-        return 0.0;
-    }
     let m = mean(xs);
-    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for &x in xs {
+        if x.is_finite() {
+            acc += (x - m) * (x - m);
+            n += 1;
+        }
+    }
+    if n < 2 {
+        0.0
+    } else {
+        (acc / n as f64).sqrt()
+    }
 }
 
-/// Percentile by linear interpolation, p in [0, 100].
+/// Percentile by linear interpolation, p in [0, 100]. NaNs are dropped;
+/// ±∞ participate (an infeasible tail shows up as an infinite high
+/// percentile). 0.0 for input with no non-NaN entry.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
-    if lo == hi {
+    if lo == hi || v[lo] == v[hi] {
+        // the equal-value guard also keeps inf..inf from producing
+        // inf + 0*(inf - inf) = NaN
         v[lo]
+    } else if !v[lo].is_finite() {
+        // interpolating away from an infinite endpoint saturates at it
+        // (-inf..x stays -inf; also covers -inf..inf without inf - inf)
+        v[lo]
+    } else if !v[hi].is_finite() {
+        v[hi]
     } else {
         v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
     }
@@ -95,5 +132,36 @@ mod tests {
     fn empty_inputs_are_safe() {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn non_finite_values_do_not_poison_mean_or_std() {
+        // infeasible sweep points report infinite delay
+        assert_eq!(mean(&[1.0, f64::INFINITY, 3.0]), 2.0);
+        assert_eq!(mean(&[1.0, f64::NAN, 3.0]), 2.0);
+        assert_eq!(mean(&[f64::INFINITY, f64::NAN]), 0.0);
+        let finite = std_dev(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(std_dev(&[1.0, 2.0, f64::NEG_INFINITY, 3.0, 4.0, f64::NAN]), finite);
+        assert_eq!(std_dev(&[f64::INFINITY, 5.0]), 0.0);
+    }
+
+    #[test]
+    fn percentile_is_nan_safe_and_keeps_infinities() {
+        // NaN used to panic via partial_cmp().unwrap()
+        assert_eq!(percentile(&[2.0, f64::NAN, 1.0, 3.0], 50.0), 2.0);
+        assert_eq!(percentile(&[f64::NAN, f64::NAN], 50.0), 0.0);
+        // infinite tail is visible at the top, finite body below
+        let v = [1.0, 2.0, 3.0, f64::INFINITY];
+        assert_eq!(percentile(&v, 100.0), f64::INFINITY);
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        // all-infinite input interpolates to infinity, not NaN
+        assert_eq!(percentile(&[f64::INFINITY, f64::INFINITY], 50.0), f64::INFINITY);
+        // infinite endpoints never leak NaN out of the interpolation
+        assert_eq!(percentile(&[f64::NEG_INFINITY, 1.0], 50.0), f64::NEG_INFINITY);
+        assert_eq!(percentile(&[1.0, f64::INFINITY], 50.0), f64::INFINITY);
+        assert_eq!(
+            percentile(&[f64::NEG_INFINITY, f64::INFINITY], 50.0),
+            f64::NEG_INFINITY
+        );
     }
 }

@@ -35,29 +35,7 @@ fn bcd_on_paper_scenario_converges() {
 
 #[test]
 fn proposed_dominates_all_baselines_on_paper_scenario() {
-    // pins the behaviour of the deprecated compare_all shim
-    #[allow(deprecated)]
-    let [p, a, b, c, d] = sfllm::opt::baselines::compare_all(
-        &paper_scenario(),
-        &ConvergenceModel::paper_default(),
-        &[1, 2, 4, 6, 8],
-        42,
-        5,
-    )
-    .unwrap();
-    assert!(p <= a && p <= b && p <= c && p <= d, "p={p} a={a} b={b} c={c} d={d}");
-    // paper claims up to ~60% reduction vs baseline a at Table II defaults
-    let reduction = 1.0 - p / a;
-    assert!(
-        reduction > 0.25,
-        "expected a substantial reduction vs random, got {:.0}%",
-        reduction * 100.0
-    );
-}
-
-#[test]
-fn policy_registry_reproduces_the_comparison() {
-    // the same comparison through the new experiment API
+    // the paper's Sec. VII-C comparison through the policy registry
     let scn = paper_scenario();
     let conv = ConvergenceModel::paper_default();
     let reg = PolicyRegistry::paper_suite(&[1, 2, 4, 6, 8], 42, 5);
@@ -72,8 +50,11 @@ fn policy_registry_reproduces_the_comparison() {
         objectives.insert(out.policy, out.objective);
     }
     let p = objectives["proposed"];
+    for (name, &t) in &objectives {
+        assert!(p <= t * (1.0 + 1e-9), "proposed {p} must beat {name} {t}");
+    }
+    // paper claims up to ~60% reduction vs baseline a at Table II defaults
     let a = objectives["baseline_a"];
-    assert!(p <= a, "proposed {p} must beat random {a}");
     assert!(1.0 - p / a > 0.25, "reduction vs random too small: p={p} a={a}");
 }
 

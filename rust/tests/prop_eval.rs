@@ -1,0 +1,168 @@
+//! Properties of the cached delay-evaluation engine (`delay::eval`) and
+//! the joint P3×P4 scan built on it:
+//!
+//! * `DelayEvaluator::eval(l, r)` must match `Scenario::total_delay`
+//!   **bit-for-bit** on every scenario preset — the cache is a pure
+//!   speedup, never a numerical change;
+//! * the joint split×rank scan is never worse than the sequential
+//!   P3-then-P4 scans it replaced, on every preset;
+//! * a handcrafted regression where the sequential scans provably get
+//!   stuck at a coordinate-wise optimum the joint scan escapes.
+
+use sfllm::delay::{Allocation, ConvergenceModel, DelayEvaluator, Scenario};
+use sfllm::model::{Gpt2Config, WorkloadProfile};
+use sfllm::net::topology::ClientSite;
+use sfllm::net::{Link, SubchannelSet, Topology};
+use sfllm::opt::bcd;
+use sfllm::opt::{rank, split};
+use sfllm::sim::{ScenarioBuilder, PRESETS};
+
+const RANKS: [usize; 5] = [1, 2, 4, 6, 8];
+
+#[test]
+fn evaluator_matches_total_delay_bit_for_bit_on_every_preset() {
+    let conv = ConvergenceModel::paper_default();
+    for preset in PRESETS {
+        let scn = ScenarioBuilder::preset(preset).unwrap().build().unwrap();
+        let alloc = bcd::initial_alloc(&scn, (scn.profile.blocks.len() / 2).max(1), 4);
+        let ev = DelayEvaluator::build(&scn, &alloc, &conv, &RANKS);
+        for l_c in scn.profile.split_candidates() {
+            for &r in &RANKS {
+                let mut cand = alloc.clone();
+                cand.l_c = l_c;
+                cand.rank = r;
+                let want = scn.total_delay(&cand, &conv);
+                let got = ev.eval(l_c, r);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "{preset} (l_c={l_c}, r={r}): cached {got} vs exact {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn joint_scan_never_worse_than_sequential_on_every_preset() {
+    let conv = ConvergenceModel::paper_default();
+    for preset in PRESETS {
+        for (init_l, init_r) in [(1usize, 1usize), (6, 4), (11, 8)] {
+            let scn = ScenarioBuilder::preset(preset).unwrap().build().unwrap();
+            let init_l = init_l.min(scn.profile.blocks.len() - 1).max(1);
+            let alloc = bcd::initial_alloc(&scn, init_l, init_r);
+
+            // sequential P3 -> P4, exactly the old Algorithm 3 inner step
+            let (l_seq, t_split) = split::best_split(&scn, &alloc, &conv);
+            let mut mid = alloc.clone();
+            mid.l_c = l_seq;
+            let (_, t_rank) = rank::best_rank(&scn, &mid, &conv, &RANKS);
+            let t_seq = t_split.min(t_rank);
+
+            // joint grid scan on the cached evaluator
+            let ev = DelayEvaluator::build(&scn, &alloc, &conv, &RANKS);
+            let (_, _, t_joint) = ev.best_split_rank();
+
+            assert!(
+                t_joint <= t_seq,
+                "{preset} init ({init_l}, {init_r}): joint {t_joint} > sequential {t_seq}"
+            );
+        }
+    }
+}
+
+/// One client, one subchannel per link, numbers chosen so that split
+/// depth and rank genuinely trade off:
+///
+/// * server compute is 3x the client per block (f_s = f_k/3 at equal
+///   kappa), so at rank 1 the delay strictly falls with deeper splits
+///   and sequential P3 drives the split to the deepest candidate;
+/// * the federated uplink is slow (~1.64 Mbit/s), so the adapter upload
+///   costs ~0.06 s per (rank x client-block) — at the deep split,
+///   raising the rank to 8 adds far more upload than the halved E(r)
+///   saves, and sequential P4 keeps rank 1;
+/// * jointly, a shallow split at rank 8 wins: few client blocks keep
+///   the upload small while E(r) still halves.
+fn trap_scenario() -> Scenario {
+    Scenario {
+        profile: WorkloadProfile::new(Gpt2Config::gpt2_s(), 128),
+        topo: Topology {
+            clients: vec![ClientSite {
+                d_main_m: 1.0,
+                d_fed_m: 1.0,
+                f_cycles: 1.0e9,
+            }],
+        },
+        // snr_coeff = gain_product * client_gain / noise_psd, chosen
+        // directly: main uplink 1 Gbit/s (SE = log2(1+1) = 1), fed
+        // uplink 1e6 * log2(1 + 2.113) ~ 1.64 Mbit/s at PSD 1 W/Hz.
+        main_link: Link {
+            subch: SubchannelSet::equal_split(1e9, 1),
+            gain_product: 1.0,
+            noise_psd: 1.0,
+            client_gain: vec![1.0],
+        },
+        fed_link: Link {
+            subch: SubchannelSet::equal_split(1e6, 1),
+            gain_product: 1.0,
+            noise_psd: 1.0,
+            client_gain: vec![2.113],
+        },
+        kappa_client: 1.0 / 1024.0,
+        kappa_server: 1.0 / 1024.0,
+        f_server: 1.0e9 / 3.0,
+        batch: 4,
+        local_steps: 3,
+        p_max_w: 1e30,
+        p_th_main_w: 1e30,
+        p_th_fed_w: 1e30,
+    }
+}
+
+#[test]
+fn sequential_scans_get_trapped_where_the_joint_scan_escapes() {
+    let scn = trap_scenario();
+    // E(1) = 2 * E(8): the rank-8 payoff the sequential order misses
+    let conv = ConvergenceModel::table(vec![(1, 48.0), (8, 24.0)]);
+    let ranks = [1usize, 8];
+    let alloc = Allocation {
+        assign_main: vec![vec![0]],
+        assign_fed: vec![vec![0]],
+        psd_main: vec![1.0],
+        psd_fed: vec![1.0],
+        l_c: 6,
+        rank: 1,
+    };
+
+    // sequential P3 -> P4 lands on (deepest split, rank 1) ...
+    let (l_seq, t_split) = split::best_split(&scn, &alloc, &conv);
+    assert_eq!(l_seq, scn.profile.blocks.len() - 1, "P3 should go deepest at rank 1");
+    let mut mid = alloc.clone();
+    mid.l_c = l_seq;
+    let (r_seq, t_rank) = rank::best_rank(&scn, &mid, &conv, &ranks);
+    assert_eq!(r_seq, 1, "P4 should keep rank 1 at the deep split");
+    let t_seq = t_split.min(t_rank);
+
+    // ... while the joint scan finds the shallow high-rank optimum
+    let ev = DelayEvaluator::build(&scn, &alloc, &conv, &ranks);
+    let (l_joint, r_joint, t_joint) = ev.best_split_rank();
+    assert_eq!(r_joint, 8, "joint scan should pick the high rank");
+    assert!(
+        l_joint < l_seq,
+        "joint split {l_joint} should be shallower than sequential {l_seq}"
+    );
+    assert!(
+        t_joint < t_seq * 0.95,
+        "joint {t_joint} should strictly beat sequential {t_seq}"
+    );
+
+    // and the joint result is the true grid argmin
+    for l_c in scn.profile.split_candidates() {
+        for &r in &ranks {
+            let mut cand = alloc.clone();
+            cand.l_c = l_c;
+            cand.rank = r;
+            assert!(scn.total_delay(&cand, &conv) >= t_joint, "({l_c}, {r}) beats the joint scan");
+        }
+    }
+}
