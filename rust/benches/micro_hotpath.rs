@@ -23,8 +23,9 @@ use sfllm::coordinator::{train, OptKind, Optimizer, TrainOptions};
 use sfllm::delay::{ConvergenceModel, DelayEvaluator, WorkloadCache};
 use sfllm::model::lora::{AdapterSet, Tensor};
 use sfllm::opt::bcd::{self, BcdOptions};
+use sfllm::opt::policy::Proposed;
 use sfllm::opt::{assignment, power};
-use sfllm::sim::ScenarioBuilder;
+use sfllm::sim::{ReOptStrategy, RoundSimulator, ScenarioBuilder};
 
 fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     // warmup
@@ -153,6 +154,31 @@ fn main() -> anyhow::Result<()> {
             },
         );
     }
+
+    // round-varying engine: one full dynamic run per op. one_shot pays
+    // E(r) evaluator rebuilds; every_round adds a BCD re-solve per
+    // round, all sharing one WorkloadCache across the whole run.
+    println!("\nround-varying simulator (paper preset, rho=0.8, ~28 rounds):");
+    let scn_dyn = ScenarioBuilder::new()
+        .channel_correlation(0.8)
+        .dynamics_seed(7)
+        .build()?;
+    let dyn_cache = WorkloadCache::new();
+    let ranks_vec: Vec<usize> = ranks.to_vec();
+    let sim = RoundSimulator::new(&scn_dyn, &conv, &dyn_cache, &ranks_vec);
+    let proposed = Proposed::with_ranks(&ranks_vec);
+    bench("dynamic run, one_shot", 50, || {
+        let r = sim.run(&proposed, ReOptStrategy::OneShot).unwrap();
+        std::hint::black_box(r.realized_delay);
+    });
+    bench("dynamic run, periodic:5", 10, || {
+        let r = sim.run(&proposed, ReOptStrategy::Periodic(5)).unwrap();
+        std::hint::black_box(r.realized_delay);
+    });
+    bench("dynamic run, every_round", 5, || {
+        let r = sim.run(&proposed, ReOptStrategy::EveryRound).unwrap();
+        std::hint::black_box(r.realized_delay);
+    });
 
     // adapter math at tiny-model scale: 2 blocks x (q,v) x (A,B), d=192 r=4
     let mk = || AdapterSet {

@@ -106,11 +106,59 @@ impl Default for TrainConfig {
     }
 }
 
+/// Round-varying environment dynamics consumed by
+/// [`crate::sim::RoundSimulator`]. The defaults freeze every process,
+/// so a config that never touches this section behaves exactly like
+/// the static model.
+#[derive(Clone, Debug)]
+pub struct DynamicsConfig {
+    /// AR(1) round-to-round shadowing correlation ρ in [0, 1];
+    /// 1.0 freezes the channel at its initial draw.
+    pub rho: f64,
+    /// Stationary shadowing std σ (dB) of the AR(1) process; negative
+    /// means "inherit `system.shadowing_db`" (resolved at build time).
+    pub shadow_sigma_db: f64,
+    /// Log-normal per-round jitter σ on client compute capability
+    /// (`f_k(e) = f_k · exp(σ·w)`, median-preserving); 0 disables.
+    pub compute_jitter: f64,
+    /// Per-round probability an active client drops out; 0 disables
+    /// the whole dropout process.
+    pub dropout: f64,
+    /// Per-round probability a dropped client returns.
+    pub rejoin: f64,
+    /// Seed of the dynamics streams (independent of the scenario seed,
+    /// so redrawing the environment keeps the geometry fixed).
+    pub seed: u64,
+    /// Safety cap on simulated rounds per run.
+    pub max_rounds: usize,
+    /// Default re-optimization strategy spec for config-driven
+    /// surfaces: `one_shot`, `every_round`, `periodic:<J>`, or
+    /// `on_degrade:<threshold>` (see `sim::ReOptStrategy::parse`).
+    pub strategy: String,
+}
+
+impl Default for DynamicsConfig {
+    fn default() -> Self {
+        DynamicsConfig {
+            rho: 1.0,
+            shadow_sigma_db: -1.0,
+            compute_jitter: 0.0,
+            dropout: 0.0,
+            rejoin: 0.25,
+            seed: 1,
+            max_rounds: 10_000,
+            strategy: "one_shot".to_string(),
+        }
+    }
+}
+
 /// Top-level config bundle.
 #[derive(Clone, Debug, Default)]
 pub struct Config {
     pub system: SystemConfig,
     pub train: TrainConfig,
+    /// Round-varying dynamics (static by default).
+    pub dynamics: DynamicsConfig,
     /// Model variant name for the workload model ("gpt2-s", "gpt2-m", "tiny").
     pub model: String,
 }
@@ -120,6 +168,7 @@ impl Config {
         Config {
             system: SystemConfig::default(),
             train: TrainConfig::default(),
+            dynamics: DynamicsConfig::default(),
             model: "gpt2-s".to_string(),
         }
     }
@@ -169,6 +218,15 @@ impl Config {
                 .map(|x| x as usize)
                 .collect();
         }
+        let d = &mut c.dynamics;
+        d.rho = doc.f64_or("dynamics.rho", d.rho)?;
+        d.shadow_sigma_db = doc.f64_or("dynamics.shadow_sigma_db", d.shadow_sigma_db)?;
+        d.compute_jitter = doc.f64_or("dynamics.compute_jitter", d.compute_jitter)?;
+        d.dropout = doc.f64_or("dynamics.dropout", d.dropout)?;
+        d.rejoin = doc.f64_or("dynamics.rejoin", d.rejoin)?;
+        d.seed = doc.usize_or("dynamics.seed", d.seed as usize)? as u64;
+        d.max_rounds = doc.usize_or("dynamics.max_rounds", d.max_rounds)?;
+        d.strategy = doc.str_or("dynamics.strategy", &d.strategy)?;
         c.model = doc.str_or("model", &c.model)?;
         Ok(())
     }
@@ -224,6 +282,28 @@ mod tests {
         assert_eq!(c.train.batch, 4);
         // untouched values keep paper defaults
         assert_eq!(c.system.subch_fed, 20);
+    }
+
+    #[test]
+    fn dynamics_default_static_and_toml_overridable() {
+        let c = Config::paper_defaults();
+        assert_eq!(c.dynamics.rho, 1.0);
+        assert_eq!(c.dynamics.compute_jitter, 0.0);
+        assert_eq!(c.dynamics.dropout, 0.0);
+        assert!(c.dynamics.shadow_sigma_db < 0.0, "must inherit by default");
+        assert_eq!(c.dynamics.strategy, "one_shot");
+        let doc = TomlDoc::parse(
+            "[dynamics]\nrho = 0.8\ndropout = 0.05\nstrategy = \"periodic:5\"\nseed = 9\n",
+        )
+        .unwrap();
+        let c = Config::from_toml(&doc).unwrap();
+        assert_eq!(c.dynamics.rho, 0.8);
+        assert_eq!(c.dynamics.dropout, 0.05);
+        assert_eq!(c.dynamics.strategy, "periodic:5");
+        assert_eq!(c.dynamics.seed, 9);
+        // untouched dynamics keys keep their defaults
+        assert_eq!(c.dynamics.rejoin, 0.25);
+        assert_eq!(c.dynamics.max_rounds, 10_000);
     }
 
     #[test]

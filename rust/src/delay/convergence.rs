@@ -47,34 +47,58 @@ impl ConvergenceModel {
         match self {
             ConvergenceModel::Fitted { e_inf, c, alpha } => e_inf * (1.0 + c / r.powf(*alpha)),
             ConvergenceModel::Table(points) => {
-                // interpolate linearly in u = 1/r, which straightens the
-                // hyperbolic trend
-                let u = 1.0 / r;
-                let pt = |&(pr, pe): &(usize, f64)| (1.0 / pr.max(1) as f64, pe);
-                let first = pt(points.first().unwrap());
-                let last = pt(points.last().unwrap());
-                // table sorted by r ascending -> u descending
-                if u >= first.0 {
-                    return first.1;
+                assert!(!points.is_empty(), "empty convergence table");
+                // `table()` sorts and deduplicates, but the variant is
+                // public and can be constructed directly — normalize
+                // here before interpolating rather than trusting the
+                // invariant (an unsorted table silently mis-clamps).
+                if points.windows(2).all(|w| w[0].0 < w[1].0) {
+                    Self::interp_table(points, r)
+                } else {
+                    let mut sorted = points.clone();
+                    sorted.sort_by_key(|&(pr, _)| pr);
+                    sorted.dedup_by_key(|&mut (pr, _)| pr);
+                    Self::interp_table(&sorted, r)
                 }
-                if u <= last.0 {
-                    return last.1;
-                }
-                for w in points.windows(2) {
-                    let (u0, e0) = pt(&w[0]);
-                    let (u1, e1) = pt(&w[1]);
-                    if u <= u0 && u >= u1 {
-                        let t = if (u0 - u1).abs() < 1e-12 { 0.0 } else { (u0 - u) / (u0 - u1) };
-                        return e0 + t * (e1 - e0);
-                    }
-                }
-                last.1
             }
         }
     }
 
+    /// Table interpolation at rank `r`, linear in u = 1/r (which
+    /// straightens the hyperbolic trend), clamped outside the table.
+    /// `points` must be sorted by rank ascending without duplicates.
+    fn interp_table(points: &[(usize, f64)], r: f64) -> f64 {
+        let u = 1.0 / r;
+        let pt = |&(pr, pe): &(usize, f64)| (1.0 / pr.max(1) as f64, pe);
+        let first = pt(points.first().unwrap());
+        let last = pt(points.last().unwrap());
+        // table sorted by r ascending -> u descending
+        if u >= first.0 {
+            return first.1;
+        }
+        if u <= last.0 {
+            return last.1;
+        }
+        for w in points.windows(2) {
+            let (u0, e0) = pt(&w[0]);
+            let (u1, e1) = pt(&w[1]);
+            if u <= u0 && u >= u1 {
+                let t = if (u0 - u1).abs() < 1e-12 { 0.0 } else { (u0 - u) / (u0 - u1) };
+                return e0 + t * (e1 - e0);
+            }
+        }
+        last.1
+    }
+
     /// Least-squares fit of the parametric law to measured points
     /// (grid search over alpha, closed-form for e_inf/c at fixed alpha).
+    ///
+    /// Only fits with a non-negative slope `b` are admissible: `b < 0`
+    /// means `c < 0`, an E(r) that *increases* with rank — which would
+    /// invert P4's trade-off and make the optimizer always pick the
+    /// maximum rank. When no alpha admits a valid fit (e.g. noisy
+    /// measurements that happen to trend upward), the model falls back
+    /// to the flat fit `E(r) = mean(E)`.
     pub fn fit(points: &[(usize, f64)]) -> ConvergenceModel {
         assert!(points.len() >= 2, "need at least two points to fit");
         let mut best = (f64::INFINITY, 1.0, 0.0, 1.0); // (sse, e_inf, c, alpha)
@@ -85,7 +109,7 @@ impl ConvergenceModel {
             let xs: Vec<f64> = points.iter().map(|&(r, _)| (r.max(1) as f64).powf(-alpha)).collect();
             let ys: Vec<f64> = points.iter().map(|&(_, e)| e).collect();
             let (a, b) = crate::util::stats::linear_fit(&xs, &ys);
-            if a > 0.0 {
+            if a > 0.0 && b >= 0.0 {
                 let sse: f64 = xs
                     .iter()
                     .zip(&ys)
@@ -99,6 +123,10 @@ impl ConvergenceModel {
                 }
             }
             alpha += 0.05;
+        }
+        if !best.0.is_finite() {
+            let mean = points.iter().map(|&(_, e)| e).sum::<f64>() / points.len() as f64;
+            return ConvergenceModel::fitted(mean.max(1e-9), 0.0, 1.0);
         }
         ConvergenceModel::fitted(best.1, best.2, best.3)
     }
@@ -144,5 +172,66 @@ mod tests {
     fn rank_zero_treated_as_one() {
         let m = ConvergenceModel::paper_default();
         assert_eq!(m.rounds(0), m.rounds(1));
+    }
+
+    #[test]
+    fn fit_on_noisy_decreasing_measurements_keeps_c_nonnegative() {
+        // Fig. 4-shaped data with measurement noise: E must still come
+        // out non-increasing in rank (c >= 0), never inverted
+        let pts = vec![
+            (1usize, 47.3),
+            (2, 34.1),
+            (4, 29.8),
+            (6, 27.2),
+            (8, 26.9),
+        ];
+        let fit = ConvergenceModel::fit(&pts);
+        if let ConvergenceModel::Fitted { e_inf, c, .. } = &fit {
+            assert!(*e_inf > 0.0);
+            assert!(*c >= 0.0, "negative c {c} inverts the rank trade-off");
+        } else {
+            panic!("fit must return the parametric form");
+        }
+        let mut prev = f64::INFINITY;
+        for r in [1usize, 2, 4, 6, 8, 16] {
+            let e = fit.rounds(r);
+            assert!(e <= prev + 1e-9, "E({r})={e} rose above {prev}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn fit_on_increasing_measurements_falls_back_flat_not_inverted() {
+        // adversarial: rounds that (nonsensically) grow with rank used
+        // to produce c < 0, i.e. an E(r) increasing in rank that made
+        // P4 always pick the maximum rank
+        let pts = vec![(1usize, 20.0), (2, 24.0), (4, 30.0), (8, 40.0)];
+        let fit = ConvergenceModel::fit(&pts);
+        let e1 = fit.rounds(1);
+        let e8 = fit.rounds(8);
+        assert!(
+            e8 <= e1 + 1e-9,
+            "E(8)={e8} > E(1)={e1}: fit still rewards higher rank"
+        );
+        if let ConvergenceModel::Fitted { c, .. } = &fit {
+            assert!(*c >= 0.0, "clamp failed: c = {c}");
+        }
+        // the flat fallback sits at the sample mean
+        assert!((e1 - 28.5).abs() < 1e-9, "flat fallback off: {e1}");
+    }
+
+    #[test]
+    fn directly_constructed_unsorted_table_matches_normalized_one() {
+        // the public variant bypasses `table()`'s sort/dedup
+        let raw = ConvergenceModel::Table(vec![(8, 30.0), (1, 100.0), (4, 40.0), (4, 999.0)]);
+        let norm = ConvergenceModel::table(vec![(8, 30.0), (1, 100.0), (4, 40.0), (4, 999.0)]);
+        for r in [0usize, 1, 2, 3, 4, 5, 6, 8, 12, 16] {
+            assert_eq!(raw.rounds(r).to_bits(), norm.rounds(r).to_bits(), "rank {r}");
+        }
+        // interpolation is sane, not clamp-everything
+        assert_eq!(raw.rounds(1), 100.0);
+        assert_eq!(raw.rounds(8), 30.0);
+        let e2 = raw.rounds(2);
+        assert!(e2 < 100.0 && e2 > 40.0, "E(2)={e2}");
     }
 }

@@ -106,20 +106,51 @@ impl<'s> DelayEvaluator<'s> {
     pub fn eval(&self, l_c: usize, rank: usize) -> f64 {
         match self.table.rank_index(rank) {
             Some(ri) => self.total(&self.lookup(l_c, ri), self.rounds[ri]),
-            None => {
-                let p: &WorkloadProfile = &self.scn.profile;
-                self.total(
-                    &Workload {
-                        client_fwd: p.client_fwd_flops(l_c, rank),
-                        client_bwd: p.client_bwd_flops(l_c, rank),
-                        server_fwd: p.server_fwd_flops(l_c, rank),
-                        server_bwd: p.server_bwd_flops(l_c, rank),
-                        act_bits: p.activation_bits(l_c),
-                        adapter_bits: p.client_adapter_bits(l_c, rank),
-                    },
-                    self.conv.rounds(rank),
-                )
-            }
+            None => self.total(&self.profile_workload(l_c, rank), self.conv.rounds(rank)),
+        }
+    }
+
+    /// One-round delay `I·T_local + max_k T_k^f` at (`l_c`, `rank`) —
+    /// Eq. 17 without the E(r) factor; [`Self::eval`] is exactly
+    /// `E(rank) ×` this value (same bits).
+    pub fn round_delay(&self, l_c: usize, rank: usize) -> f64 {
+        self.round(&self.workload(l_c, rank), None)
+    }
+
+    /// [`Self::round_delay`] restricted to the clients marked `true` in
+    /// `active` (dropped clients neither compute nor upload, and the
+    /// server only batches the active cohort). With an all-`true` mask
+    /// the arithmetic — and therefore the bits — match
+    /// [`Self::round_delay`]. Returns 0 for an all-`false` mask.
+    pub fn round_delay_active(&self, l_c: usize, rank: usize, active: &[bool]) -> f64 {
+        assert_eq!(
+            active.len(),
+            self.scn.k(),
+            "participation mask length must equal the client count"
+        );
+        self.round(&self.workload(l_c, rank), Some(active))
+    }
+
+    /// The workload sums at (`l_c`, `rank`): table hit for cached
+    /// candidate ranks, profile prefix-sum fallback otherwise.
+    fn workload(&self, l_c: usize, rank: usize) -> Workload {
+        match self.table.rank_index(rank) {
+            Some(ri) => self.lookup(l_c, ri),
+            None => self.profile_workload(l_c, rank),
+        }
+    }
+
+    /// Off-table fallback: the profile's prefix sums — same arithmetic,
+    /// same bits as the tabulated path.
+    fn profile_workload(&self, l_c: usize, rank: usize) -> Workload {
+        let p: &WorkloadProfile = &self.scn.profile;
+        Workload {
+            client_fwd: p.client_fwd_flops(l_c, rank),
+            client_bwd: p.client_bwd_flops(l_c, rank),
+            server_fwd: p.server_fwd_flops(l_c, rank),
+            server_bwd: p.server_bwd_flops(l_c, rank),
+            act_bits: p.activation_bits(l_c),
+            adapter_bits: p.client_adapter_bits(l_c, rank),
         }
     }
 
@@ -135,17 +166,34 @@ impl<'s> DelayEvaluator<'s> {
         }
     }
 
-    /// Eq. 17 with the workload sums in hand. The expressions replicate
-    /// `Scenario::phase_delays` / `PhaseDelays::t_local` operation by
-    /// operation so the result is bit-identical to the uncached path.
+    /// Eq. 17 with the workload sums in hand: `E(r) ×` the one-round
+    /// delay of [`Self::round`].
     fn total(&self, w: &Workload, rounds: f64) -> f64 {
+        rounds * self.round(w, None)
+    }
+
+    /// One-round delay `I·T_local + max_k T_k^f` with the workload sums
+    /// in hand, optionally restricted to the active clients. The
+    /// expressions replicate `Scenario::phase_delays` /
+    /// `PhaseDelays::t_local` operation by operation — and the masked
+    /// path performs the identical float sequence when every client is
+    /// active — so [`Self::eval`] stays bit-identical to the uncached
+    /// `Scenario::total_delay`.
+    fn round(&self, w: &Workload, active: Option<&[bool]>) -> f64 {
         let scn = self.scn;
         let k_n = scn.k();
         let b = scn.batch as f64;
         let mut stage1 = 0.0f64;
         let mut stage3 = 0.0f64;
         let mut t_fed = 0.0f64;
+        let mut n_active = 0usize;
         for k in 0..k_n {
+            if let Some(mask) = active {
+                if !mask[k] {
+                    continue;
+                }
+            }
+            n_active += 1;
             let f_k = scn.topo.clients[k].f_cycles;
             let client_fwd = b * scn.kappa_client * w.client_fwd / f_k;
             let act_upload = if self.rate_main[k] > 0.0 {
@@ -161,10 +209,10 @@ impl<'s> DelayEvaluator<'s> {
                 f64::INFINITY
             });
         }
-        let server_fwd = k_n as f64 * b * scn.kappa_server * w.server_fwd / scn.f_server;
-        let server_bwd = k_n as f64 * b * scn.kappa_server * w.server_bwd / scn.f_server;
+        let server_fwd = n_active as f64 * b * scn.kappa_server * w.server_fwd / scn.f_server;
+        let server_bwd = n_active as f64 * b * scn.kappa_server * w.server_bwd / scn.f_server;
         let t_local = stage1 + server_fwd + server_bwd + stage3;
-        rounds * (scn.local_steps as f64 * t_local + t_fed)
+        scn.local_steps as f64 * t_local + t_fed
     }
 
     /// P3 alone: argmin over split points at a fixed rank. Ties resolve
@@ -368,6 +416,57 @@ mod tests {
         let (_, t_rank) = ev.best_rank(l_split);
         assert!(t_joint <= t_split);
         assert!(t_joint <= t_rank);
+    }
+
+    #[test]
+    fn eval_is_rounds_times_round_delay_bit_for_bit() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let alloc = toy_alloc();
+        let ev = DelayEvaluator::build(&scn, &alloc, &conv, &RANKS);
+        for l_c in scn.profile.split_candidates() {
+            for &r in &[1usize, 3, 4, 8] {
+                // 3 exercises the off-table fallback
+                let d = ev.round_delay(l_c, r);
+                let want = conv.rounds(r) * d;
+                assert_eq!(ev.eval(l_c, r).to_bits(), want.to_bits(), "l_c={l_c} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn full_participation_mask_matches_unmasked_bit_for_bit() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let alloc = toy_alloc();
+        let ev = DelayEvaluator::build(&scn, &alloc, &conv, &RANKS);
+        let all = vec![true; scn.k()];
+        for l_c in scn.profile.split_candidates() {
+            let a = ev.round_delay(l_c, 4);
+            let b = ev.round_delay_active(l_c, 4, &all);
+            assert_eq!(a.to_bits(), b.to_bits(), "l_c={l_c}");
+        }
+    }
+
+    #[test]
+    fn dropped_clients_leave_the_round() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let alloc = toy_alloc();
+        let ev = DelayEvaluator::build(&scn, &alloc, &conv, &RANKS);
+        let full = ev.round_delay(6, 4);
+        // client 1 dropped: server batches one client, maxima over {0}
+        let d0 = ev.round_delay_active(6, 4, &[true, false]);
+        assert!(d0 < full, "single-client round {d0} not cheaper than {full}");
+        assert!(d0.is_finite() && d0 > 0.0);
+        // nobody active: an idle round costs nothing
+        assert_eq!(ev.round_delay_active(6, 4, &[false, false]), 0.0);
+        // dropping the starved client makes an infinite round finite
+        let mut starved = toy_alloc();
+        starved.assign_fed[1].clear();
+        let ev2 = DelayEvaluator::build(&scn, &starved, &conv, &RANKS);
+        assert!(ev2.round_delay(6, 4).is_infinite());
+        assert!(ev2.round_delay_active(6, 4, &[true, false]).is_finite());
     }
 
     #[test]

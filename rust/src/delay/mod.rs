@@ -27,6 +27,10 @@ pub struct Scenario {
     pub topo: Topology,
     pub main_link: Link,
     pub fed_link: Link,
+    /// Round-varying environment process parameters (frozen by
+    /// default); consumed by [`crate::sim::RoundSimulator`], inert for
+    /// every static evaluation path.
+    pub dynamics: crate::config::DynamicsConfig,
     /// GPU cycles per FLOP on clients / main server (κ_k, κ_s).
     pub kappa_client: f64,
     pub kappa_server: f64,
@@ -289,6 +293,7 @@ pub mod testutil {
             topo,
             main_link,
             fed_link,
+            dynamics: crate::config::DynamicsConfig::default(),
             kappa_client: 1.0 / 1024.0,
             kappa_server: 1.0 / 32768.0,
             f_server: 5.0e9,

@@ -20,7 +20,8 @@
 //! * [`model`] — GPT-2 architecture profiles and the per-layer
 //!   FLOPs/bytes workload model (paper Table III), LoRA adapter state.
 //! * [`net`] — wireless substrate: path loss, shadow fading, FDMA
-//!   subchannels, Shannon rates (Eqs. 9/14).
+//!   subchannels, Shannon rates (Eqs. 9/14), and the seeded AR(1)
+//!   shadowing process behind the round-varying simulations.
 //! * [`delay`] — the Section-V latency model (Eqs. 8–17), the E(r)
 //!   convergence-steps model, and [`delay::eval`]: the cached
 //!   delay-evaluation engine the exhaustive searches run on.
@@ -36,9 +37,12 @@
 //! * [`coordinator`] — Algorithm 1 end-to-end: threaded clients, main
 //!   server, federated server, SGD + FedAvg on host buffers.
 //! * [`sim`] — experiment harness: `ScenarioBuilder` (seeded scenario
-//!   construction with heterogeneity presets) and `SweepRunner`
-//!   (multi-threaded policy × grid sweeps with CSV/JSON reports), the
-//!   machinery behind every figure bench and the CLI subcommands.
+//!   construction with heterogeneity presets), `SweepRunner`
+//!   (multi-threaded policy × grid sweeps with CSV/JSON reports), and
+//!   `RoundSimulator` (round-varying channel/compute/membership
+//!   dynamics with re-optimization strategies and realized-delay
+//!   accounting) — the machinery behind every figure bench and the
+//!   CLI subcommands.
 
 pub mod config;
 pub mod coordinator;

@@ -11,28 +11,37 @@
 //!                (default: `proposed` vs baselines a–d);
 //! * `sweep`    — run a policy sweep along a named axis across worker
 //!                threads, writing CSV/JSON reports;
+//! * `dynamic`  — play the fine-tuning run out over E(r) rounds under
+//!                round-varying channel/compute/membership dynamics,
+//!                comparing re-optimization strategies (`one_shot`,
+//!                `every_round`, `periodic:J`, `on_degrade:θ`) by
+//!                *realized* total delay;
 //! * `table3`   — print the GPT2-S complexity table (paper Table III);
 //! * `info`     — list available artifact variants.
 //!
-//! Scenario flags shared by `optimize`/`latency`/`sweep`:
-//! `--preset <paper|dense_cell|weak_edge|asymmetric_links|many_clients>`,
+//! Scenario flags shared by `optimize`/`latency`/`sweep`/`dynamic`:
+//! `--preset <paper|dense_cell|weak_edge|asymmetric_links|many_clients|mobile_edge>`,
 //! `--config <toml>`, `--clients`, `--seed`, `--model`, `--batch`,
 //! `--local-steps`. Policy flags: `--policy`/`--policies` (names from
 //! the registry, comma-separated, or `all`) and `--draws` (baseline
 //! averaging). `sweep` additionally takes `--threads` (grid workers;
 //! 0 = all cores); infeasible grid points are reported as skipped rows
-//! rather than aborting the sweep.
+//! rather than aborting the sweep. `dynamic` takes `--strategies`
+//! (comma-separated strategy specs) and `--rounds-out` (per-round CSV
+//! trace of the first policy × strategy pair).
 //!
 //! Defaults reproduce the paper's Table II setup.
 
 use anyhow::{bail, Context, Result};
 use sfllm::config::Config;
 use sfllm::coordinator::{train, OptKind, TrainOptions};
-use sfllm::delay::ConvergenceModel;
+use sfllm::delay::{ConvergenceModel, WorkloadCache};
 use sfllm::model::{Gpt2Config, WorkloadProfile};
-use sfllm::opt::PolicyRegistry;
+use sfllm::opt::{AllocationPolicy, PolicyRegistry};
 use sfllm::runtime::{Manifest, SflModel, SflRuntime};
-use sfllm::sim::{ScenarioBuilder, SweepAxis, SweepRunner};
+use sfllm::sim::{
+    DynamicPolicy, ReOptStrategy, RoundSimulator, ScenarioBuilder, SweepAxis, SweepRunner,
+};
 use sfllm::util::cli::Args;
 use sfllm::util::csv::CsvWriter;
 
@@ -55,16 +64,18 @@ fn run() -> Result<()> {
         "optimize" => cmd_optimize(&mut args),
         "latency" => cmd_latency(&mut args),
         "sweep" => cmd_sweep(&mut args),
+        "dynamic" => cmd_dynamic(&mut args),
         "table3" => cmd_table3(&mut args),
         "info" => cmd_info(&mut args),
         _ => {
             println!(
                 "sfllm — split federated learning for LLMs (paper reproduction)\n\n\
-                 usage: sfllm <train|optimize|latency|sweep|table3|info> [--options]\n\n\
+                 usage: sfllm <train|optimize|latency|sweep|dynamic|table3|info> [--options]\n\n\
                  train     run Algorithm 1 over an artifact variant\n\
                  optimize  solve one scenario with a named policy (default: proposed)\n\
                  latency   compare policies (proposed vs baselines a-d) on one scenario\n\
                  sweep     sweep policies along an axis (--axis, --values, --threads)\n\
+                 dynamic   simulate round-varying dynamics, comparing re-opt strategies\n\
                  table3    print the GPT2-S complexity table (Table III)\n\
                  info      list artifact variants"
             );
@@ -265,6 +276,127 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
     if let Some(path) = json {
         report.write_json(&path)?;
         println!("json report written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_dynamic(args: &mut Args) -> Result<()> {
+    let spec = args.str_or("policies", "proposed");
+    let strategies_spec = args.str_or(
+        "strategies",
+        "one_shot,every_round,periodic:5,on_degrade:0.25",
+    );
+    let draws = args.usize_or("draws", 5)?;
+    let out = args.get("out");
+    let rounds_out = args.get("rounds-out");
+    let builder = builder_from_args(args)?;
+    args.finish()?;
+
+    let cfg = builder.config().clone();
+    let d = &cfg.dynamics;
+    println!(
+        "dynamics: rho={} sigma={} dB, compute jitter {}, dropout {} / rejoin {}, seed {}",
+        d.rho,
+        if d.shadow_sigma_db < 0.0 { cfg.system.shadowing_db } else { d.shadow_sigma_db },
+        d.compute_jitter,
+        d.dropout,
+        d.rejoin,
+        d.seed
+    );
+
+    let strategies: Vec<ReOptStrategy> = strategies_spec
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(ReOptStrategy::parse)
+        .collect::<Result<_>>()?;
+    if strategies.is_empty() {
+        bail!("--strategies resolved to an empty list");
+    }
+    let reg = registry_for(&cfg, draws);
+    let inners = reg.resolve(&spec)?;
+    let mut policies: Vec<std::sync::Arc<dyn AllocationPolicy>> = Vec::new();
+    for inner in &inners {
+        for &st in &strategies {
+            policies.push(std::sync::Arc::new(DynamicPolicy::new(
+                inner.clone(),
+                st,
+                &cfg.train.ranks,
+            )));
+        }
+    }
+
+    // one convergence model for both the comparison table and the
+    // --rounds-out trace, so the two surfaces can never disagree
+    let conv = ConvergenceModel::paper_default();
+    let report = SweepRunner::new(&builder)
+        .policies(policies)
+        .convergence(conv.clone())
+        .threads(1)
+        .run()?;
+    let Some(point) = report.points.first() else {
+        report.print_errors();
+        bail!("scenario could not be evaluated");
+    };
+
+    println!("realized total delay (s), lower is better:");
+    let objectives = point.objectives();
+    for (i, inner) in inners.iter().enumerate() {
+        let base = i * strategies.len(); // one column per strategy, inner-major
+        let one_shot = strategies
+            .iter()
+            .position(|s| *s == ReOptStrategy::OneShot)
+            .map(|j| objectives[base + j]);
+        for j in 0..strategies.len() {
+            let name = &report.policy_names[base + j];
+            let t = objectives[base + j];
+            match one_shot {
+                Some(os) if os > 0.0 && os.is_finite() => println!(
+                    "  {name:28} {t:12.2}   ({:+.1}% vs {}+one_shot)",
+                    100.0 * (t / os - 1.0),
+                    inner.name()
+                ),
+                _ => println!("  {name:28} {t:12.2}"),
+            }
+        }
+    }
+    if let Some(path) = out {
+        report.write_csv(&path)?;
+        println!("report written to {path}");
+    }
+
+    if let Some(path) = rounds_out {
+        // per-round trace of the first policy under the first strategy
+        // (a deterministic replay of the sweep's first column, with the
+        // per-round fields PolicyOutcome does not carry)
+        let scn = builder.build()?;
+        let cache = WorkloadCache::new();
+        let sim = RoundSimulator::new(&scn, &conv, &cache, &cfg.train.ranks);
+        let run = sim.run(inners[0].as_ref(), strategies[0])?;
+        let mut w = CsvWriter::create(
+            &path,
+            &["round", "weight", "delay_s", "l_c", "rank", "active", "resolved"],
+        )?;
+        for r in &run.rounds {
+            w.row_f64(&[
+                r.round as f64,
+                r.weight,
+                r.delay,
+                r.l_c as f64,
+                r.rank as f64,
+                r.active as f64,
+                if r.resolved { 1.0 } else { 0.0 },
+            ])?;
+        }
+        w.flush()?;
+        println!(
+            "per-round trace of {}+{} written to {path} \
+             (realized {:.2} s vs static prediction {:.2} s)",
+            inners[0].name(),
+            strategies[0].label(),
+            run.realized_delay,
+            run.static_prediction
+        );
     }
     Ok(())
 }

@@ -22,9 +22,13 @@ impl ChannelModel {
         ChannelModel { shadowing_db }
     }
 
-    /// Path loss in dB at distance `d_m` meters.
+    /// Path loss in dB at distance `d_m` meters. Distances below the
+    /// 1 m reference are clamped to it: the log-distance model is only
+    /// calibrated in the far field, and letting it run to near-zero
+    /// distances produces *negative* path loss (linear gain > 1, and
+    /// with it absurd Shannon rates).
     pub fn path_loss_db(&self, d_m: f64) -> f64 {
-        let d_km = (d_m / 1000.0).max(1e-6);
+        let d_km = d_m.max(1.0) / 1000.0;
         128.1 + 37.6 * d_km.log10()
     }
 
@@ -83,6 +87,29 @@ mod tests {
             .sum::<f64>()
             / n as f64;
         assert!(mean_db.abs() < 0.2, "mean shadow {mean_db} dB");
+    }
+
+    #[test]
+    fn near_field_clamps_to_one_meter_reference() {
+        let m = ChannelModel::new(0.0);
+        // everything at or below 1 m sees the 1 m loss
+        let pl_1m = m.path_loss_db(1.0);
+        assert!((pl_1m - (128.1 - 3.0 * 37.6)).abs() < 1e-9);
+        assert_eq!(m.path_loss_db(0.0), pl_1m);
+        assert_eq!(m.path_loss_db(1e-3), pl_1m);
+        assert_eq!(m.path_loss_db(0.999), pl_1m);
+    }
+
+    #[test]
+    fn deterministic_gain_never_exceeds_unity() {
+        // the 1 mm clamp used to give d=1e-3 m a path loss of
+        // 128.1 - 6*37.6 = -97.5 dB, i.e. linear gain ~5.6e9
+        let m = ChannelModel::new(0.0);
+        for d in [0.0, 1e-6, 1e-3, 0.1, 0.5, 1.0, 2.0, 10.0, 1e3, 1e6] {
+            let g = m.gain_deterministic(d);
+            assert!(g > 0.0 && g <= 1.0, "d={d}: gain {g}");
+            assert!(m.path_loss_db(d) > 0.0, "d={d}: negative path loss");
+        }
     }
 
     #[test]

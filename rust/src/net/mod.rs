@@ -2,14 +2,17 @@
 //!
 //! Deterministic simulator of everything the paper's testbed provides
 //! the optimizer: client geometry, average channel gains with path loss
-//! and log-normal shadowing, FDMA subchannels, and Shannon uplink rates
-//! (Eqs. 9 and 14).
+//! and log-normal shadowing, FDMA subchannels, Shannon uplink rates
+//! (Eqs. 9 and 14), and the seeded AR(1) shadowing process that
+//! [`crate::sim::RoundSimulator`] evolves round by round.
 
 pub mod channel;
 pub mod fdma;
 pub mod power;
+pub mod process;
 pub mod topology;
 
 pub use channel::ChannelModel;
 pub use fdma::{Link, SubchannelSet};
+pub use process::{ChannelProcess, ChannelState};
 pub use topology::Topology;

@@ -1,0 +1,286 @@
+//! Round-varying channel dynamics: per-client shadow fading evolved as
+//! a seeded AR(1) Gauss–Markov process across global rounds.
+//!
+//! The static substrate draws shadowing once per scenario (the paper's
+//! "average channel gain" reading of Eqs. 9/14). Multi-round runs over
+//! mobile edge networks see the shadowing *drift* instead; the standard
+//! model is the Gauss–Markov recursion
+//!
+//! `s_{e+1} = ρ·s_e + sqrt(1 − ρ²)·σ·w_e`,   `w_e ~ N(0, 1)`
+//!
+//! which keeps the stationary distribution at the scenario's N(0, σ²)
+//! log-normal shadowing while correlating consecutive rounds by ρ.
+//! `ρ = 1` (or `σ = 0`) freezes the state — the process then touches
+//! neither the shadows nor its RNG, so a frozen trajectory reproduces
+//! the static scenario bit for bit.
+//!
+//! [`ChannelState`] is the shadow vector itself (both uplinks); it can
+//! be sampled fresh — exactly the draw order `ScenarioBuilder` uses —
+//! or recovered from an already-built scenario's linear gains.
+//! [`ChannelProcess`] owns a state plus the AR(1) parameters and a
+//! seeded RNG stream, and is what [`crate::sim::RoundSimulator`] steps
+//! once per simulated round.
+
+use crate::net::channel::ChannelModel;
+use crate::net::power::{db_to_linear, linear_to_db};
+use crate::net::topology::Topology;
+use crate::util::rng::Rng;
+
+/// Per-client shadow fading (dB) on the main and federated uplinks.
+#[derive(Clone, Debug)]
+pub struct ChannelState {
+    pub shadow_main_db: Vec<f64>,
+    pub shadow_fed_db: Vec<f64>,
+}
+
+impl ChannelState {
+    /// Draw an initial state: N(0, σ²) in dB per client per link, all
+    /// main-link draws first and then all fed-link draws — the exact
+    /// order (and therefore the exact values) `ScenarioBuilder::build`
+    /// consumes from its gain stream, so a scenario and a process
+    /// seeded alike start from identical shadowing. With `σ = 0` no
+    /// randomness is consumed, matching [`ChannelModel::gain`].
+    pub fn sample(k: usize, model: &ChannelModel, rng: &mut Rng) -> ChannelState {
+        let draw_all = |rng: &mut Rng| -> Vec<f64> {
+            (0..k)
+                .map(|_| {
+                    if model.shadowing_db > 0.0 {
+                        rng.normal_ms(0.0, model.shadowing_db)
+                    } else {
+                        0.0
+                    }
+                })
+                .collect()
+        };
+        let shadow_main_db = draw_all(rng);
+        let shadow_fed_db = draw_all(rng);
+        ChannelState {
+            shadow_main_db,
+            shadow_fed_db,
+        }
+    }
+
+    /// Recover the state that reproduces the given *linear* gains under
+    /// `model` — the inverse of [`ChannelState::gains`], up to a
+    /// floating-point round trip (~1e-12 dB). This lets a dynamic
+    /// process continue from a scenario that only stored its gains
+    /// (including hand-built test scenarios whose gains were never
+    /// derived from a distance at all).
+    pub fn recover(
+        topo: &Topology,
+        model: &ChannelModel,
+        main_gain: &[f64],
+        fed_gain: &[f64],
+    ) -> ChannelState {
+        let shadow = |d: f64, g: f64| -linear_to_db(g) - model.path_loss_db(d);
+        ChannelState {
+            shadow_main_db: topo
+                .clients
+                .iter()
+                .zip(main_gain)
+                .map(|(c, &g)| shadow(c.d_main_m, g))
+                .collect(),
+            shadow_fed_db: topo
+                .clients
+                .iter()
+                .zip(fed_gain)
+                .map(|(c, &g)| shadow(c.d_fed_m, g))
+                .collect(),
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.shadow_main_db.len()
+    }
+
+    /// Linear gains (main, fed) for the current state — the same
+    /// `db_to_linear(-(path_loss + shadow))` expression as
+    /// [`ChannelModel::gain`], so equal shadows give bit-equal gains.
+    pub fn gains(&self, topo: &Topology, model: &ChannelModel) -> (Vec<f64>, Vec<f64>) {
+        let main = topo
+            .clients
+            .iter()
+            .zip(&self.shadow_main_db)
+            .map(|(c, &s)| db_to_linear(-(model.path_loss_db(c.d_main_m) + s)))
+            .collect();
+        let fed = topo
+            .clients
+            .iter()
+            .zip(&self.shadow_fed_db)
+            .map(|(c, &s)| db_to_linear(-(model.path_loss_db(c.d_fed_m) + s)))
+            .collect();
+        (main, fed)
+    }
+}
+
+/// Seeded AR(1) evolution of a [`ChannelState`].
+#[derive(Clone, Debug)]
+pub struct ChannelProcess {
+    model: ChannelModel,
+    state: ChannelState,
+    rho: f64,
+    /// Innovation std `sqrt(1 − ρ²)·σ` (dB); 0 freezes the process.
+    innovation_db: f64,
+    rng: Rng,
+}
+
+impl ChannelProcess {
+    /// `model.shadowing_db` is the stationary shadowing std σ; `rho`
+    /// the round-to-round correlation in [0, 1].
+    pub fn new(model: ChannelModel, state: ChannelState, rho: f64, seed: u64) -> ChannelProcess {
+        assert!(
+            (0.0..=1.0).contains(&rho),
+            "AR(1) correlation must be in [0, 1], got {rho}"
+        );
+        let innovation_db = (1.0 - rho * rho).max(0.0).sqrt() * model.shadowing_db;
+        ChannelProcess {
+            model,
+            state,
+            rho,
+            innovation_db,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// True when stepping can never change the state (`ρ = 1` or
+    /// `σ = 0`): callers may then skip rewriting gains entirely and
+    /// keep the static scenario's vectors bit-for-bit.
+    pub fn is_frozen(&self) -> bool {
+        self.innovation_db == 0.0
+    }
+
+    /// Advance one round: `s ← ρ·s + sqrt(1 − ρ²)·σ·w`. Frozen
+    /// processes return immediately without consuming randomness.
+    pub fn step(&mut self) {
+        if self.is_frozen() {
+            return;
+        }
+        for s in self
+            .state
+            .shadow_main_db
+            .iter_mut()
+            .chain(self.state.shadow_fed_db.iter_mut())
+        {
+            *s = self.rho * *s + self.rng.normal_ms(0.0, self.innovation_db);
+        }
+    }
+
+    pub fn state(&self) -> &ChannelState {
+        &self.state
+    }
+
+    /// Current linear gains (main, fed).
+    pub fn gains(&self, topo: &Topology) -> (Vec<f64>, Vec<f64>) {
+        self.state.gains(topo, &self.model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::topology::ClientSite;
+
+    fn topo2() -> Topology {
+        Topology {
+            clients: vec![
+                ClientSite { d_main_m: 100.0, d_fed_m: 10.0, f_cycles: 1e9 },
+                ClientSite { d_main_m: 150.0, d_fed_m: 18.0, f_cycles: 1.5e9 },
+            ],
+        }
+    }
+
+    #[test]
+    fn sample_matches_the_builder_draw_order() {
+        // drawing all main shadows first, then all fed shadows, must
+        // consume the rng exactly like two sequential gain() passes
+        let model = ChannelModel::new(8.0);
+        let topo = topo2();
+        let state = ChannelState::sample(2, &model, &mut Rng::new(77));
+        let (main, fed) = state.gains(&topo, &model);
+        let mut rng = Rng::new(77);
+        let want_main: Vec<f64> =
+            topo.clients.iter().map(|c| model.gain(c.d_main_m, &mut rng)).collect();
+        let want_fed: Vec<f64> =
+            topo.clients.iter().map(|c| model.gain(c.d_fed_m, &mut rng)).collect();
+        assert_eq!(main, want_main);
+        assert_eq!(fed, want_fed);
+    }
+
+    #[test]
+    fn recover_round_trips_gains_to_high_precision() {
+        let model = ChannelModel::new(8.0);
+        let topo = topo2();
+        let state = ChannelState::sample(2, &model, &mut Rng::new(5));
+        let (main, fed) = state.gains(&topo, &model);
+        let rec = ChannelState::recover(&topo, &model, &main, &fed);
+        for (a, b) in state.shadow_main_db.iter().zip(&rec.shadow_main_db) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+        for (a, b) in state.shadow_fed_db.iter().zip(&rec.shadow_fed_db) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn frozen_process_never_moves_and_consumes_no_randomness() {
+        let model = ChannelModel::new(8.0);
+        let topo = topo2();
+        let state = ChannelState::sample(2, &model, &mut Rng::new(9));
+        let before = state.clone();
+        let mut p = ChannelProcess::new(model.clone(), state, 1.0, 3);
+        assert!(p.is_frozen());
+        for _ in 0..10 {
+            p.step();
+        }
+        assert_eq!(p.state().shadow_main_db, before.shadow_main_db);
+        assert_eq!(p.state().shadow_fed_db, before.shadow_fed_db);
+        let (g, _) = p.gains(&topo);
+        let (g0, _) = before.gains(&topo, &model);
+        assert_eq!(g, g0, "frozen gains must be bit-identical");
+        // sigma = 0 freezes too, at any rho
+        let m0 = ChannelModel::new(0.0);
+        let s0 = ChannelState::sample(2, &m0, &mut Rng::new(1));
+        assert!(ChannelProcess::new(m0, s0, 0.3, 4).is_frozen());
+    }
+
+    #[test]
+    fn process_is_deterministic_per_seed() {
+        let model = ChannelModel::new(8.0);
+        let run = |seed| {
+            let state = ChannelState::sample(2, &model, &mut Rng::new(11));
+            let mut p = ChannelProcess::new(model.clone(), state, 0.7, seed);
+            for _ in 0..25 {
+                p.step();
+            }
+            p.state().shadow_main_db.clone()
+        };
+        assert_eq!(run(42), run(42));
+        assert_ne!(run(42), run(43));
+    }
+
+    #[test]
+    fn stationary_moments_and_lag1_correlation() {
+        // one client, many rounds: mean ~0, std ~sigma, lag-1 corr ~rho
+        let sigma = 8.0;
+        let rho = 0.8;
+        let model = ChannelModel::new(sigma);
+        let state = ChannelState::sample(1, &model, &mut Rng::new(2));
+        let mut p = ChannelProcess::new(model, state, rho, 6);
+        let n = 60_000;
+        let mut xs = Vec::with_capacity(n);
+        for _ in 0..n {
+            p.step();
+            xs.push(p.state().shadow_main_db[0]);
+        }
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.3, "mean {mean}");
+        assert!((var.sqrt() - sigma).abs() < 0.4, "std {}", var.sqrt());
+        let mut num = 0.0;
+        for w in xs.windows(2) {
+            num += (w[0] - mean) * (w[1] - mean);
+        }
+        let corr = num / ((n - 1) as f64 * var);
+        assert!((corr - rho).abs() < 0.05, "lag-1 corr {corr}");
+    }
+}

@@ -8,21 +8,22 @@
 //! as Sec. VII-A prescribes. The same builder value can be rebuilt any
 //! number of times; identical settings give identical scenarios.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::Config;
 use crate::delay::Scenario;
 use crate::model::{Gpt2Config, WorkloadProfile};
-use crate::net::{power, ChannelModel, Link, SubchannelSet, Topology};
+use crate::net::{power, ChannelModel, ChannelState, Link, SubchannelSet, Topology};
 use crate::util::rng::Rng;
 
 /// Named scenario presets (see [`ScenarioBuilder::preset`]).
-pub const PRESETS: [&str; 5] = [
+pub const PRESETS: [&str; 6] = [
     "paper",
     "dense_cell",
     "weak_edge",
     "asymmetric_links",
     "many_clients",
+    "mobile_edge",
 ];
 
 /// Fluent scenario constructor over a [`Config`].
@@ -65,7 +66,13 @@ impl ScenarioBuilder {
     ///   a 250 m cell sharing 1024 subchannels and 20 MHz per link,
     ///   with a raised per-server power budget. Exercises the cached
     ///   delay-evaluation path at large K (see the large-K axis of
-    ///   `benches/micro_hotpath.rs`).
+    ///   `benches/micro_hotpath.rs`);
+    /// * `mobile_edge` — the round-varying regime: 12 clients in a
+    ///   100 m cell whose shadowing drifts as an AR(1) process
+    ///   (ρ = 0.85), with compute jitter and occasional dropout/return
+    ///   — the FedsLLM-style mobile deployment the dynamic engine
+    ///   ([`crate::sim::RoundSimulator`]) simulates; the default
+    ///   re-optimization strategy is `periodic:5`.
     pub fn preset(name: &str) -> Result<ScenarioBuilder> {
         let mut cfg = Config::paper_defaults();
         match name {
@@ -100,6 +107,19 @@ impl ScenarioBuilder {
                 cfg.system.d_max_m = 250.0;
                 cfg.system.p_th_main_dbm = 50.0;
                 cfg.system.p_th_fed_dbm = 50.0;
+            }
+            "mobile_edge" => {
+                cfg.system.clients = 12;
+                cfg.system.subch_main = 24;
+                cfg.system.subch_fed = 24;
+                cfg.system.bandwidth_main_hz = 1e6;
+                cfg.system.bandwidth_fed_hz = 1e6;
+                cfg.system.d_max_m = 100.0;
+                cfg.dynamics.rho = 0.85;
+                cfg.dynamics.compute_jitter = 0.08;
+                cfg.dynamics.dropout = 0.05;
+                cfg.dynamics.rejoin = 0.5;
+                cfg.dynamics.strategy = "periodic:5".to_string();
             }
             other => bail!(
                 "unknown scenario preset '{other}' (available: {})",
@@ -160,6 +180,41 @@ impl ScenarioBuilder {
         self
     }
 
+    /// AR(1) round-to-round shadowing correlation ρ in [0, 1]
+    /// (1.0 = the channel stays at its initial draw).
+    pub fn channel_correlation(mut self, rho: f64) -> ScenarioBuilder {
+        self.cfg.dynamics.rho = rho;
+        self
+    }
+
+    /// Per-round client dropout / rejoin probabilities.
+    pub fn dropout(mut self, p_drop: f64, p_rejoin: f64) -> ScenarioBuilder {
+        self.cfg.dynamics.dropout = p_drop;
+        self.cfg.dynamics.rejoin = p_rejoin;
+        self
+    }
+
+    /// Log-normal σ of the per-round client compute jitter (0 = off).
+    pub fn compute_jitter(mut self, sigma: f64) -> ScenarioBuilder {
+        self.cfg.dynamics.compute_jitter = sigma;
+        self
+    }
+
+    /// Dynamics stream seed (independent of the scenario seed, so the
+    /// environment can be redrawn over a fixed geometry).
+    pub fn dynamics_seed(mut self, seed: u64) -> ScenarioBuilder {
+        self.cfg.dynamics.seed = seed;
+        self
+    }
+
+    /// Default re-optimization strategy spec (`one_shot`,
+    /// `every_round`, `periodic:<J>`, `on_degrade:<threshold>`) used by
+    /// config-driven dynamic surfaces; validated at [`Self::build`].
+    pub fn reopt_strategy(mut self, spec: &str) -> ScenarioBuilder {
+        self.cfg.dynamics.strategy = spec.to_string();
+        self
+    }
+
     /// Escape hatch: arbitrary config mutation for axes the named
     /// setters don't cover.
     pub fn tweak<F: FnOnce(&mut Config)>(mut self, f: F) -> ScenarioBuilder {
@@ -197,6 +252,30 @@ impl ScenarioBuilder {
                 s.subch_fed
             );
         }
+        let mut dynamics = self.cfg.dynamics.clone();
+        if !(0.0..=1.0).contains(&dynamics.rho) {
+            bail!("dynamics.rho must be in [0, 1], got {}", dynamics.rho);
+        }
+        if !(0.0..=1.0).contains(&dynamics.dropout) || !(0.0..=1.0).contains(&dynamics.rejoin) {
+            bail!(
+                "dynamics dropout/rejoin must be probabilities in [0, 1], got {} / {}",
+                dynamics.dropout,
+                dynamics.rejoin
+            );
+        }
+        if dynamics.compute_jitter < 0.0 || !dynamics.compute_jitter.is_finite() {
+            bail!(
+                "dynamics.compute_jitter must be finite and >= 0, got {}",
+                dynamics.compute_jitter
+            );
+        }
+        crate::sim::dynamic::ReOptStrategy::parse(&dynamics.strategy)
+            .context("dynamics.strategy")?;
+        if dynamics.shadow_sigma_db < 0.0 {
+            // "inherit" sentinel: the AR(1) process keeps the static
+            // model's stationary shadowing
+            dynamics.shadow_sigma_db = s.shadowing_db;
+        }
         let mut rng = Rng::new(s.seed);
         let topo = Topology::sample(
             s.clients,
@@ -208,16 +287,10 @@ impl ScenarioBuilder {
         );
         let ch = ChannelModel::new(s.shadowing_db);
         let mut gain_rng = rng.fork(0xC0FFEE);
-        let main_gain: Vec<f64> = topo
-            .clients
-            .iter()
-            .map(|c| ch.gain(c.d_main_m, &mut gain_rng))
-            .collect();
-        let fed_gain: Vec<f64> = topo
-            .clients
-            .iter()
-            .map(|c| ch.gain(c.d_fed_m, &mut gain_rng))
-            .collect();
+        // all main-link draws, then all fed-link draws — the order
+        // ChannelState::sample fixes, shared with the dynamic process
+        let shadows = ChannelState::sample(s.clients, &ch, &mut gain_rng);
+        let (main_gain, fed_gain) = shadows.gains(&topo, &ch);
         let noise = power::dbm_per_hz_to_watt_per_hz(s.noise_dbm_hz);
 
         let arch = Gpt2Config::by_name(&self.cfg.model)?;
@@ -226,6 +299,7 @@ impl ScenarioBuilder {
         Ok(Scenario {
             profile,
             topo,
+            dynamics,
             main_link: Link {
                 subch: SubchannelSet::equal_split(s.bandwidth_main_hz, s.subch_main),
                 gain_product: s.gain_main,
@@ -302,6 +376,79 @@ mod tests {
         let weak = ScenarioBuilder::preset("weak_edge").unwrap();
         let paper = ScenarioBuilder::preset("paper").unwrap();
         assert!(weak.config().system.f_client_hi < paper.config().system.f_client_lo);
+    }
+
+    #[test]
+    fn gain_sampling_matches_the_legacy_inline_draws_bit_for_bit() {
+        // the ChannelState refactor must not move any rng draw: same
+        // seed, same gains as two sequential ch.gain() passes
+        let scn = ScenarioBuilder::new().seed(123).build().unwrap();
+        let s = ScenarioBuilder::new().seed(123).into_config().system;
+        let mut rng = Rng::new(s.seed);
+        let topo = crate::net::Topology::sample(
+            s.clients,
+            s.d_max_m,
+            s.d_main_m,
+            s.f_client_lo,
+            s.f_client_hi,
+            &mut rng,
+        );
+        let ch = ChannelModel::new(s.shadowing_db);
+        let mut gain_rng = rng.fork(0xC0FFEE);
+        let main: Vec<f64> = topo
+            .clients
+            .iter()
+            .map(|c| ch.gain(c.d_main_m, &mut gain_rng))
+            .collect();
+        let fed: Vec<f64> = topo
+            .clients
+            .iter()
+            .map(|c| ch.gain(c.d_fed_m, &mut gain_rng))
+            .collect();
+        assert_eq!(scn.main_link.client_gain, main);
+        assert_eq!(scn.fed_link.client_gain, fed);
+    }
+
+    #[test]
+    fn mobile_edge_is_dynamic_and_other_presets_stay_static() {
+        let b = ScenarioBuilder::preset("mobile_edge").unwrap();
+        let scn = b.build().unwrap();
+        assert_eq!(scn.k(), 12);
+        assert!(scn.dynamics.rho < 1.0);
+        assert!(scn.dynamics.dropout > 0.0 && scn.dynamics.compute_jitter > 0.0);
+        assert_eq!(scn.dynamics.strategy, "periodic:5");
+        // the sigma sentinel resolves to the scenario's shadowing
+        assert_eq!(scn.dynamics.shadow_sigma_db, b.config().system.shadowing_db);
+        for name in ["paper", "dense_cell", "weak_edge", "asymmetric_links", "many_clients"] {
+            let scn = ScenarioBuilder::preset(name).unwrap().build().unwrap();
+            assert_eq!(scn.dynamics.rho, 1.0, "{name} must stay static");
+            assert_eq!(scn.dynamics.dropout, 0.0, "{name} must stay static");
+        }
+    }
+
+    #[test]
+    fn dynamics_setters_apply_and_bad_values_are_rejected() {
+        let scn = ScenarioBuilder::new()
+            .channel_correlation(0.7)
+            .dropout(0.1, 0.6)
+            .compute_jitter(0.05)
+            .dynamics_seed(99)
+            .reopt_strategy("on_degrade:0.3")
+            .build()
+            .unwrap();
+        assert_eq!(scn.dynamics.rho, 0.7);
+        assert_eq!(scn.dynamics.dropout, 0.1);
+        assert_eq!(scn.dynamics.rejoin, 0.6);
+        assert_eq!(scn.dynamics.compute_jitter, 0.05);
+        assert_eq!(scn.dynamics.seed, 99);
+        assert_eq!(scn.dynamics.strategy, "on_degrade:0.3");
+
+        assert!(ScenarioBuilder::new().channel_correlation(1.5).build().is_err());
+        assert!(ScenarioBuilder::new().channel_correlation(-0.1).build().is_err());
+        assert!(ScenarioBuilder::new().dropout(2.0, 0.5).build().is_err());
+        assert!(ScenarioBuilder::new().compute_jitter(-1.0).build().is_err());
+        let err = ScenarioBuilder::new().reopt_strategy("typo").build().unwrap_err();
+        assert!(format!("{err:#}").contains("strategy"), "{err:#}");
     }
 
     #[test]

@@ -1,0 +1,698 @@
+//! Round-varying simulation: realized-delay accounting over a drifting
+//! environment, plus re-optimization strategies on top of any
+//! [`AllocationPolicy`].
+//!
+//! The static model scores an allocation by Eq. 17's *prediction*
+//! `E(r)·(I·T_local + max_k T_k^f)` against one frozen channel draw.
+//! [`RoundSimulator`] instead plays the fine-tuning run out round by
+//! round: per-client shadowing evolves as a seeded AR(1) Gauss–Markov
+//! process ([`crate::net::ChannelProcess`]), client compute optionally
+//! jitters, clients drop out and return — and the run accumulates the
+//! **realized** total delay `Σ_e w_e·(I·T_local(e) + max_k T_k^f(e))`.
+//!
+//! Accounting details that make the engine exact where the static
+//! model applies:
+//!
+//! * **Progress.** Each round at rank r advances convergence by
+//!   `1/E(r)`; the run ends when one unit of progress is reached, the
+//!   final round weighted by the remaining fraction. A rank change
+//!   rescales the remaining rounds by `E(r_new)/E(r_old)`.
+//! * **Run-length accumulation.** Consecutive rounds with an identical
+//!   realized delay collapse into one `weight × delay` product, so a
+//!   frozen environment degenerates to the closed-form `E(r)·d` — the
+//!   realized total of a frozen run under [`ReOptStrategy::OneShot`]
+//!   is **bit-identical** to `Scenario::total_delay` (property-tested
+//!   in `rust/tests/prop_dynamic.rs`).
+//!
+//! Re-solves go through the same [`crate::delay::WorkloadCache`] for
+//! the whole run, so only the channel-dependent half of the evaluator
+//! (per-client rates) is ever recomputed. When a strategy does
+//! re-solve, the adopted allocation is the best of {fresh solve,
+//! incumbent, round-0 allocation} under the *current* channel, so
+//! re-optimizing can never do worse than holding still on any round.
+//!
+//! [`DynamicPolicy`] adapts a `(policy, strategy)` pair back into an
+//! [`AllocationPolicy`] whose objective is the realized delay, which
+//! plugs the dynamic engine straight into [`crate::sim::SweepRunner`]
+//! grids (dynamics axes: `SweepAxis::channel_correlation`,
+//! `SweepAxis::dropout`, `SweepAxis::reopt_period`) and the `dynamic`
+//! CLI subcommand.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::delay::{Allocation, ConvergenceModel, DelayEvaluator, Scenario, WorkloadCache};
+use crate::model::WorkloadTable;
+use crate::net::{ChannelModel, ChannelProcess, ChannelState};
+use crate::opt::policy::{AllocationPolicy, PolicyOutcome};
+use crate::util::rng::Rng;
+
+/// When (and whether) to re-run the allocation policy as the
+/// environment drifts.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ReOptStrategy {
+    /// Solve once on the initial channel, hold the allocation for the
+    /// whole run (the static model's implicit assumption).
+    OneShot,
+    /// Re-solve at the start of every round.
+    EveryRound,
+    /// Re-solve every J rounds (J >= 1; `Periodic(1)` == `EveryRound`).
+    Periodic(usize),
+    /// Re-solve only when the incumbent's realized round delay exceeds
+    /// `(1 + threshold) ×` its value at the last solve.
+    OnDegrade(f64),
+}
+
+impl ReOptStrategy {
+    /// Parse a CLI/config spec: `one_shot`, `every_round`,
+    /// `periodic:<J>`, `on_degrade:<threshold>`.
+    pub fn parse(spec: &str) -> Result<ReOptStrategy> {
+        let spec = spec.trim();
+        let (head, arg) = match spec.split_once(':') {
+            Some((h, a)) => (h.trim(), Some(a.trim())),
+            None => (spec, None),
+        };
+        Ok(match (head, arg) {
+            ("one_shot", None) => ReOptStrategy::OneShot,
+            ("every_round", None) => ReOptStrategy::EveryRound,
+            ("periodic", Some(a)) => {
+                let j: usize = a
+                    .parse()
+                    .map_err(|e| anyhow!("bad periodic period '{a}': {e}"))?;
+                if j == 0 {
+                    bail!("periodic re-opt period must be >= 1");
+                }
+                ReOptStrategy::Periodic(j)
+            }
+            ("on_degrade", Some(a)) => {
+                let th: f64 = a
+                    .parse()
+                    .map_err(|e| anyhow!("bad on_degrade threshold '{a}': {e}"))?;
+                if !th.is_finite() || th < 0.0 {
+                    bail!("on_degrade threshold must be finite and >= 0, got {th}");
+                }
+                ReOptStrategy::OnDegrade(th)
+            }
+            _ => bail!(
+                "unknown re-optimization strategy '{spec}' \
+                 (available: one_shot, every_round, periodic:<J>, on_degrade:<threshold>)"
+            ),
+        })
+    }
+
+    /// The spec string [`Self::parse`] round-trips.
+    pub fn label(&self) -> String {
+        match self {
+            ReOptStrategy::OneShot => "one_shot".to_string(),
+            ReOptStrategy::EveryRound => "every_round".to_string(),
+            ReOptStrategy::Periodic(j) => format!("periodic:{j}"),
+            ReOptStrategy::OnDegrade(th) => format!("on_degrade:{th}"),
+        }
+    }
+}
+
+/// One simulated global round.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Fraction of a full round counted toward the total (1.0 except
+    /// possibly the final, partial round).
+    pub weight: f64,
+    /// Realized per-round delay `I·T_local + max_k T_k^f` (s).
+    pub delay: f64,
+    pub l_c: usize,
+    pub rank: usize,
+    /// Clients participating this round.
+    pub active: usize,
+    /// Whether the policy was (re-)solved this round (always true for
+    /// round 0).
+    pub resolved: bool,
+}
+
+/// Outcome of one dynamic run.
+#[derive(Clone, Debug)]
+pub struct DynamicOutcome {
+    /// Realized total delay `Σ_e w_e·(I·T_local(e) + max_k T_k^f(e))`.
+    pub realized_delay: f64,
+    /// Eq. 17's static prediction for the round-0 solve — what the
+    /// one-shot optimizer believes the run will cost.
+    pub static_prediction: f64,
+    /// Allocation in force when the run finished.
+    pub final_alloc: Allocation,
+    /// Per-round trace, in order.
+    pub rounds: Vec<RoundRecord>,
+    /// Policy re-solves performed after round 0.
+    pub resolves: usize,
+}
+
+/// Plays a scenario's fine-tuning run out over `E(r)` global rounds
+/// under the scenario's [`crate::config::DynamicsConfig`].
+pub struct RoundSimulator<'a> {
+    base: &'a Scenario,
+    conv: &'a ConvergenceModel,
+    cache: &'a WorkloadCache,
+    ranks: Vec<usize>,
+}
+
+impl<'a> RoundSimulator<'a> {
+    /// `ranks` is the candidate rank set shared with the policies being
+    /// simulated, so evaluator builds hit the same cached
+    /// [`WorkloadTable`] the solves use.
+    pub fn new(
+        base: &'a Scenario,
+        conv: &'a ConvergenceModel,
+        cache: &'a WorkloadCache,
+        ranks: &[usize],
+    ) -> RoundSimulator<'a> {
+        assert!(!ranks.is_empty(), "empty candidate rank set");
+        RoundSimulator {
+            base,
+            conv,
+            cache,
+            ranks: ranks.to_vec(),
+        }
+    }
+
+    /// Round delay of `alloc` on the current `scn` under `active`, and
+    /// its cost per unit of convergence progress (`E(rank) ×` delay —
+    /// the quantity re-opt candidates are compared on).
+    fn round_cost(
+        &self,
+        scn: &Scenario,
+        table: &Arc<WorkloadTable>,
+        alloc: &Allocation,
+        active: &[bool],
+    ) -> (f64, f64) {
+        let ev = DelayEvaluator::new(scn, alloc, self.conv, table.clone());
+        let d = ev.round_delay_active(alloc.l_c, alloc.rank, active);
+        (d, self.conv.rounds(alloc.rank) * d)
+    }
+
+    /// Simulate one full run of `policy` under `strategy`.
+    ///
+    /// Dropped clients keep their subchannels but neither compute nor
+    /// upload during their absent rounds; rounds always advance full
+    /// convergence progress (the E(r) model tracks rounds, not cohort
+    /// size). Policy solves see the current channel but not the
+    /// participation mask.
+    pub fn run(
+        &self,
+        policy: &dyn AllocationPolicy,
+        strategy: ReOptStrategy,
+    ) -> Result<DynamicOutcome> {
+        let dynamics = &self.base.dynamics;
+        if dynamics.shadow_sigma_db < 0.0 && dynamics.rho < 1.0 {
+            // same bug class as a directly-constructed ConvergenceModel
+            // table: the -1 "inherit" sentinel is resolved by
+            // ScenarioBuilder::build; silently clamping it to 0 here
+            // would freeze a channel the caller asked to drift
+            bail!(
+                "dynamics.shadow_sigma_db is the unresolved 'inherit' sentinel ({}) \
+                 but rho = {} requests channel drift; build the scenario through \
+                 ScenarioBuilder or set dynamics.shadow_sigma_db explicitly",
+                dynamics.shadow_sigma_db,
+                dynamics.rho
+            );
+        }
+        let k_n = self.base.k();
+        let table = self.cache.table_for(&self.base.profile, &self.ranks);
+
+        // working copy whose gains / compute / membership evolve
+        let mut scn = self.base.clone();
+        let base_f: Vec<f64> = scn.topo.clients.iter().map(|c| c.f_cycles).collect();
+
+        // independent seeded streams per dynamics knob, so toggling one
+        // never shifts another's draws
+        let mut root = Rng::new(dynamics.seed);
+        let mut jitter_rng = root.fork(0x4A17);
+        let mut drop_rng = root.fork(0xD509);
+        let process_seed = root.fork(0x5AD0).next_u64();
+        let sigma = dynamics.shadow_sigma_db.max(0.0);
+        let model = ChannelModel::new(sigma);
+        let state = ChannelState::recover(
+            &scn.topo,
+            &model,
+            &scn.main_link.client_gain,
+            &scn.fed_link.client_gain,
+        );
+        let mut process = ChannelProcess::new(model, state, dynamics.rho, process_seed);
+
+        // round 0: solve on the initial (static) scenario
+        let out0 = policy
+            .solve_cached(&scn, self.conv, self.cache)
+            .context("dynamic run: round-0 solve")?;
+        let alloc0 = out0.alloc;
+        let static_prediction = scn.total_delay(&alloc0, self.conv);
+
+        let mut alloc = alloc0.clone();
+        // whether the incumbent currently *is* the round-0 allocation
+        // (lets the adoption step skip evaluating alloc0 twice)
+        let mut incumbent_is_initial = true;
+        let mut active = vec![true; k_n];
+        // rounds left to convergence at the current rank
+        let mut remaining = self.conv.rounds(alloc.rank);
+        // round delay at the last solve (OnDegrade reference)
+        let mut solved_delay = f64::INFINITY;
+        let mut resolves = 0usize;
+        let mut rounds: Vec<RoundRecord> = Vec::new();
+
+        // realized-delay accumulator: run-length compressed so equal
+        // consecutive round delays collapse into one weight×delay
+        // product (see the module docs for why this matters)
+        let mut realized = 0.0f64;
+        let mut seg_weight = 0.0f64;
+        let mut seg_delay = 0.0f64;
+
+        let mut round = 0usize;
+        while remaining > 0.0 {
+            if round >= dynamics.max_rounds {
+                bail!(
+                    "dynamic run exceeded dynamics.max_rounds = {} \
+                     (strategy {}, {:.1} rounds still remaining)",
+                    dynamics.max_rounds,
+                    strategy.label(),
+                    remaining
+                );
+            }
+
+            let mut resolved = round == 0;
+            // round delay of the current (scn, alloc, active), computed
+            // at most once per round: the strategy decision and the
+            // candidate adoption reuse their evaluator passes
+            let mut d_round: Option<f64> = None;
+            if round > 0 {
+                // --- evolve the environment
+                process.step();
+                if !process.is_frozen() {
+                    let (main, fed) = process.gains(&scn.topo);
+                    scn.main_link.client_gain = main;
+                    scn.fed_link.client_gain = fed;
+                }
+                if dynamics.compute_jitter > 0.0 {
+                    for (c, &f0) in scn.topo.clients.iter_mut().zip(&base_f) {
+                        c.f_cycles = f0 * (dynamics.compute_jitter * jitter_rng.normal()).exp();
+                    }
+                }
+                if dynamics.dropout > 0.0 {
+                    let prev = active.clone();
+                    for (k, a) in active.iter_mut().enumerate() {
+                        let u = drop_rng.f64();
+                        if prev[k] {
+                            if u < dynamics.dropout {
+                                *a = false;
+                            }
+                        } else if u < dynamics.rejoin {
+                            *a = true;
+                        }
+                    }
+                    if !active.iter().any(|&a| a) {
+                        // never simulate an empty federation: discard
+                        // this round's membership draws
+                        active = prev;
+                    }
+                }
+
+                // --- decide whether to re-solve. The incumbent's cost
+                // computed for the OnDegrade trigger seeds the adoption
+                // step below, so no round evaluates one allocation twice.
+                let mut incumbent_cost: Option<(f64, f64)> = None;
+                let due = match strategy {
+                    ReOptStrategy::OneShot => false,
+                    ReOptStrategy::EveryRound => true,
+                    ReOptStrategy::Periodic(j) => round % j.max(1) == 0,
+                    ReOptStrategy::OnDegrade(th) => {
+                        let cost = self.round_cost(&scn, &table, &alloc, &active);
+                        let triggered = cost.0 > solved_delay * (1.0 + th);
+                        d_round = Some(cost.0);
+                        incumbent_cost = Some(cost);
+                        triggered
+                    }
+                };
+                if due {
+                    let fresh = policy
+                        .solve_cached(&scn, self.conv, self.cache)
+                        .with_context(|| format!("dynamic run: re-solve at round {round}"))?;
+                    resolves += 1;
+                    resolved = true;
+                    // adopt the cheapest of {incumbent, round-0, fresh}
+                    // under the *current* channel (cost per unit of
+                    // progress); ties keep the earlier candidate, so a
+                    // frozen channel never churns the allocation. The
+                    // round-0 candidate is skipped while the incumbent
+                    // *is* the round-0 allocation.
+                    let (mut best_d, mut best_obj) = match incumbent_cost {
+                        Some(cost) => cost,
+                        None => self.round_cost(&scn, &table, &alloc, &active),
+                    };
+                    let mut best_alloc = alloc.clone();
+                    if !incumbent_is_initial {
+                        let (d_c, obj) = self.round_cost(&scn, &table, &alloc0, &active);
+                        if obj < best_obj {
+                            best_obj = obj;
+                            best_d = d_c;
+                            best_alloc = alloc0.clone();
+                            incumbent_is_initial = true;
+                        }
+                    }
+                    let (d_f, obj_f) = self.round_cost(&scn, &table, &fresh.alloc, &active);
+                    if obj_f < best_obj {
+                        best_d = d_f;
+                        best_alloc = fresh.alloc;
+                        incumbent_is_initial = false;
+                    }
+                    if best_alloc.rank != alloc.rank {
+                        // convert the remaining progress to the new
+                        // rank's round count
+                        let e_old = self.conv.rounds(alloc.rank);
+                        let e_new = self.conv.rounds(best_alloc.rank);
+                        remaining *= e_new / e_old;
+                    }
+                    alloc = best_alloc;
+                    d_round = Some(best_d);
+                }
+            }
+
+            // --- realize this round
+            let d = match d_round {
+                Some(d) => d,
+                None => self.round_cost(&scn, &table, &alloc, &active).0,
+            };
+            if resolved {
+                solved_delay = d;
+            }
+            let weight = if remaining < 1.0 { remaining } else { 1.0 };
+            if seg_weight > 0.0 && d.to_bits() == seg_delay.to_bits() {
+                seg_weight += weight;
+            } else {
+                realized += seg_weight * seg_delay;
+                seg_weight = weight;
+                seg_delay = d;
+            }
+            rounds.push(RoundRecord {
+                round,
+                weight,
+                delay: d,
+                l_c: alloc.l_c,
+                rank: alloc.rank,
+                active: active.iter().filter(|&&a| a).count(),
+                resolved,
+            });
+            remaining -= weight;
+            round += 1;
+        }
+        realized += seg_weight * seg_delay;
+
+        Ok(DynamicOutcome {
+            realized_delay: realized,
+            static_prediction,
+            final_alloc: alloc,
+            rounds,
+            resolves,
+        })
+    }
+}
+
+/// A `(policy, re-opt strategy)` pair exposed as an
+/// [`AllocationPolicy`] whose objective is the **realized** dynamic
+/// delay — so `SweepRunner` grids, reports, and the CLI compare
+/// re-optimization strategies exactly like any other policy column.
+///
+/// With an explicit strategy the policy is named
+/// `<inner>+<strategy>` (e.g. `proposed+every_round`); with
+/// [`DynamicPolicy::from_scenario`] the strategy is parsed per solve
+/// from the scenario's `dynamics.strategy`, which is what makes the
+/// `SweepAxis::reopt_period` axis work.
+pub struct DynamicPolicy {
+    inner: Arc<dyn AllocationPolicy>,
+    strategy: Option<ReOptStrategy>,
+    ranks: Vec<usize>,
+    name: String,
+}
+
+impl DynamicPolicy {
+    pub fn new(
+        inner: Arc<dyn AllocationPolicy>,
+        strategy: ReOptStrategy,
+        ranks: &[usize],
+    ) -> DynamicPolicy {
+        let name = format!("{}+{}", inner.name(), strategy.label());
+        DynamicPolicy {
+            inner,
+            strategy: Some(strategy),
+            ranks: ranks.to_vec(),
+            name,
+        }
+    }
+
+    /// Defer the strategy to each scenario's `dynamics.strategy` spec.
+    pub fn from_scenario(inner: Arc<dyn AllocationPolicy>, ranks: &[usize]) -> DynamicPolicy {
+        let name = format!("dyn:{}", inner.name());
+        DynamicPolicy {
+            inner,
+            strategy: None,
+            ranks: ranks.to_vec(),
+            name,
+        }
+    }
+}
+
+impl AllocationPolicy for DynamicPolicy {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn solve_cached(
+        &self,
+        scn: &Scenario,
+        conv: &ConvergenceModel,
+        cache: &WorkloadCache,
+    ) -> Result<PolicyOutcome> {
+        let strategy = match self.strategy {
+            Some(s) => s,
+            None => ReOptStrategy::parse(&scn.dynamics.strategy)?,
+        };
+        let sim = RoundSimulator::new(scn, conv, cache, &self.ranks);
+        let out = sim.run(self.inner.as_ref(), strategy)?;
+        Ok(PolicyOutcome {
+            policy: self.name.clone(),
+            alloc: out.final_alloc,
+            objective: out.realized_delay,
+            trajectory: Some(out.rounds.iter().map(|r| r.delay).collect()),
+            iterations: out.rounds.len(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::policy::Proposed;
+    use crate::sim::ScenarioBuilder;
+
+    const RANKS: [usize; 2] = [1, 4];
+
+    fn small_conv() -> ConvergenceModel {
+        // keep simulated runs short in unit tests: E(1) = 8, E(4) ~ 5.2
+        ConvergenceModel::fitted(4.0, 1.0, 0.85)
+    }
+
+    fn dynamic_builder(rho: f64) -> ScenarioBuilder {
+        ScenarioBuilder::new()
+            .clients(3)
+            .channel_correlation(rho)
+            .tweak(|c| {
+                c.train.seq = 128;
+                c.dynamics.seed = 11;
+            })
+    }
+
+    #[test]
+    fn strategy_specs_round_trip_and_reject_garbage() {
+        for spec in ["one_shot", "every_round", "periodic:5", "on_degrade:0.25"] {
+            let s = ReOptStrategy::parse(spec).unwrap();
+            assert_eq!(s.label(), spec);
+            assert_eq!(ReOptStrategy::parse(&s.label()).unwrap(), s);
+        }
+        assert_eq!(
+            ReOptStrategy::parse("  periodic: 3 ").unwrap(),
+            ReOptStrategy::Periodic(3)
+        );
+        for bad in [
+            "nope",
+            "periodic",
+            "periodic:0",
+            "periodic:x",
+            "on_degrade",
+            "on_degrade:-1",
+            "one_shot:2",
+        ] {
+            assert!(ReOptStrategy::parse(bad).is_err(), "{bad} should fail");
+        }
+    }
+
+    #[test]
+    fn one_shot_run_records_consistent_accounting() {
+        let scn = dynamic_builder(0.7).build().unwrap();
+        let conv = small_conv();
+        let cache = WorkloadCache::new();
+        let sim = RoundSimulator::new(&scn, &conv, &cache, &RANKS);
+        let policy = Proposed::with_ranks(&RANKS);
+        let out = sim.run(&policy, ReOptStrategy::OneShot).unwrap();
+
+        assert!(out.realized_delay.is_finite() && out.realized_delay > 0.0);
+        assert_eq!(out.resolves, 0, "one-shot must never re-solve");
+        // weights: all 1.0 except a final fractional round, summing to
+        // E(rank) of the (never-changing) round-0 rank
+        let e = conv.rounds(out.final_alloc.rank);
+        let wsum: f64 = out.rounds.iter().map(|r| r.weight).sum();
+        assert!((wsum - e).abs() < 1e-9, "weights {wsum} vs E {e}");
+        assert_eq!(out.rounds.len(), e.ceil() as usize);
+        for (i, r) in out.rounds.iter().enumerate() {
+            assert_eq!(r.round, i);
+            assert_eq!(r.rank, out.final_alloc.rank);
+            assert_eq!(r.active, scn.k());
+            assert_eq!(r.resolved, i == 0);
+            assert!(r.weight > 0.0 && r.weight <= 1.0);
+        }
+        // realized total equals the (naively summed) trace within fp
+        let naive: f64 = out.rounds.iter().map(|r| r.weight * r.delay).sum();
+        assert!((out.realized_delay - naive).abs() <= 1e-9 * naive.abs());
+    }
+
+    #[test]
+    fn periodic_resolves_on_schedule_and_every_round_always() {
+        let scn = dynamic_builder(0.6).build().unwrap();
+        let conv = small_conv();
+        let cache = WorkloadCache::new();
+        let sim = RoundSimulator::new(&scn, &conv, &cache, &RANKS);
+        let policy = Proposed::with_ranks(&RANKS);
+
+        let per = sim.run(&policy, ReOptStrategy::Periodic(3)).unwrap();
+        for r in &per.rounds {
+            let expect = r.round == 0 || r.round % 3 == 0;
+            assert_eq!(r.resolved, expect, "round {}", r.round);
+        }
+        assert_eq!(per.resolves, per.rounds.iter().filter(|r| r.round > 0 && r.resolved).count());
+
+        let every = sim.run(&policy, ReOptStrategy::EveryRound).unwrap();
+        assert!(every.rounds.iter().all(|r| r.resolved));
+        assert_eq!(every.resolves, every.rounds.len() - 1);
+    }
+
+    #[test]
+    fn on_degrade_threshold_zero_resolves_on_any_worsening_and_huge_never() {
+        let scn = dynamic_builder(0.3).build().unwrap();
+        // longer run (~13 rounds) so a fast-mixing channel is certain
+        // to produce at least one worse-than-last-solve round
+        let conv = ConvergenceModel::fitted(8.0, 1.0, 0.85);
+        let cache = WorkloadCache::new();
+        let sim = RoundSimulator::new(&scn, &conv, &cache, &RANKS);
+        let policy = Proposed::with_ranks(&RANKS);
+
+        let never = sim.run(&policy, ReOptStrategy::OnDegrade(1e12)).unwrap();
+        assert_eq!(never.resolves, 0, "astronomic threshold must behave one-shot");
+        let one_shot = sim.run(&policy, ReOptStrategy::OneShot).unwrap();
+        assert_eq!(
+            never.realized_delay.to_bits(),
+            one_shot.realized_delay.to_bits(),
+            "never-triggering on_degrade must equal one_shot bit-for-bit"
+        );
+
+        let eager = sim.run(&policy, ReOptStrategy::OnDegrade(0.0)).unwrap();
+        // with rho = 0.3 the channel moves every round; some round must
+        // realize worse than its last solve and trigger
+        assert!(eager.resolves > 0, "threshold 0 never triggered");
+        assert!(eager.realized_delay.is_finite() && eager.realized_delay > 0.0);
+    }
+
+    #[test]
+    fn dropout_shrinks_rounds_and_rejoin_recovers() {
+        let scn = dynamic_builder(0.9)
+            .tweak(|c| {
+                c.dynamics.dropout = 0.4;
+                c.dynamics.rejoin = 0.5;
+            })
+            .build()
+            .unwrap();
+        let conv = small_conv();
+        let cache = WorkloadCache::new();
+        let sim = RoundSimulator::new(&scn, &conv, &cache, &RANKS);
+        let out = sim
+            .run(&Proposed::with_ranks(&RANKS), ReOptStrategy::OneShot)
+            .unwrap();
+        assert!(out.rounds.iter().all(|r| r.active >= 1), "empty federation simulated");
+        assert!(
+            out.rounds.iter().any(|r| r.active < scn.k()),
+            "40% dropout never dropped anyone"
+        );
+        assert!(out.realized_delay.is_finite() && out.realized_delay > 0.0);
+    }
+
+    #[test]
+    fn max_rounds_cap_fails_loudly() {
+        let scn = dynamic_builder(1.0)
+            .tweak(|c| c.dynamics.max_rounds = 2)
+            .build()
+            .unwrap();
+        let conv = small_conv(); // needs ~6 rounds > cap
+        let cache = WorkloadCache::new();
+        let sim = RoundSimulator::new(&scn, &conv, &cache, &RANKS);
+        let err = sim
+            .run(&Proposed::with_ranks(&RANKS), ReOptStrategy::OneShot)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("max_rounds"), "{err:#}");
+    }
+
+    #[test]
+    fn dynamic_policy_wraps_the_simulator() {
+        let scn = dynamic_builder(0.8).build().unwrap();
+        let conv = small_conv();
+        let cache = WorkloadCache::new();
+        let inner: Arc<dyn AllocationPolicy> = Arc::new(Proposed::with_ranks(&RANKS));
+        let dynp = DynamicPolicy::new(inner.clone(), ReOptStrategy::Periodic(2), &RANKS);
+        assert_eq!(dynp.name(), "proposed+periodic:2");
+        let out = dynp.solve_cached(&scn, &conv, &cache).unwrap();
+        let sim = RoundSimulator::new(&scn, &conv, &cache, &RANKS);
+        let direct = sim.run(inner.as_ref(), ReOptStrategy::Periodic(2)).unwrap();
+        assert_eq!(out.objective.to_bits(), direct.realized_delay.to_bits());
+        assert_eq!(out.iterations, direct.rounds.len());
+        let traj = out.trajectory.expect("dynamic policy must report a trace");
+        assert_eq!(traj.len(), direct.rounds.len());
+
+        // config-driven strategy: scenario says periodic:2
+        let scn2 = dynamic_builder(0.8)
+            .reopt_strategy("periodic:2")
+            .build()
+            .unwrap();
+        let from_cfg = DynamicPolicy::from_scenario(inner, &RANKS);
+        assert_eq!(from_cfg.name(), "dyn:proposed");
+        let out2 = from_cfg.solve_cached(&scn2, &conv, &cache).unwrap();
+        assert_eq!(out2.objective.to_bits(), out.objective.to_bits());
+    }
+
+    #[test]
+    fn runs_are_deterministic_across_repeats() {
+        let scn = dynamic_builder(0.5)
+            .tweak(|c| {
+                c.dynamics.compute_jitter = 0.1;
+                c.dynamics.dropout = 0.1;
+            })
+            .build()
+            .unwrap();
+        let conv = small_conv();
+        let cache = WorkloadCache::new();
+        let sim = RoundSimulator::new(&scn, &conv, &cache, &RANKS);
+        let policy = Proposed::with_ranks(&RANKS);
+        let a = sim.run(&policy, ReOptStrategy::EveryRound).unwrap();
+        let b = sim.run(&policy, ReOptStrategy::EveryRound).unwrap();
+        assert_eq!(a.realized_delay.to_bits(), b.realized_delay.to_bits());
+        assert_eq!(a.rounds.len(), b.rounds.len());
+        for (x, y) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(x.delay.to_bits(), y.delay.to_bits());
+            assert_eq!(x.weight.to_bits(), y.weight.to_bits());
+            assert_eq!(x.active, y.active);
+            assert_eq!(x.rank, y.rank);
+        }
+    }
+}

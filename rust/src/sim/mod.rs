@@ -1,25 +1,37 @@
-//! Experiment harness: scenario construction, policy sweeps, reports.
+//! Experiment harness: scenario construction, policy sweeps, dynamic
+//! multi-round simulation, reports.
 //!
-//! Three pieces (see DESIGN.md for the architecture):
+//! Four pieces (see DESIGN.md for the architecture):
 //!
 //! * [`builder`] — [`ScenarioBuilder`]: fluent, seeded scenario
 //!   construction with named heterogeneity presets (`paper`,
-//!   `dense_cell`, `weak_edge`, `asymmetric_links`, `many_clients`);
+//!   `dense_cell`, `weak_edge`, `asymmetric_links`, `many_clients`,
+//!   `mobile_edge`), including the round-varying dynamics knobs;
 //! * [`mod@sweep`] — [`SweepAxis`] / [`SweepRunner`] / [`SweepReport`]:
 //!   declarative *policies × grid* sweeps fanned out across
 //!   `std::thread` workers, with deterministic CSV/JSON reports,
 //!   per-point error rows for infeasible grid corners, and a shared
 //!   [`crate::delay::WorkloadCache`] across grid points;
+//! * [`dynamic`] — [`RoundSimulator`] / [`ReOptStrategy`] /
+//!   [`DynamicPolicy`]: the round-varying engine — AR(1) channel
+//!   drift, compute jitter, dropout — that accumulates *realized*
+//!   total delay and re-optimizes mid-run (`one_shot`, `every_round`,
+//!   `periodic:J`, `on_degrade:θ`);
 //! * the policies themselves live in [`crate::opt::policy`].
 //!
-//! Every figure bench (Figs. 5–8), the `optimize`/`latency`/`sweep`
-//! CLI subcommands, and the resource-allocation example run on this
-//! API. (The deprecated `build_scenario`/`sweep` free functions are
-//! gone — `ScenarioBuilder::from_config(cfg).build()` and
-//! [`SweepRunner`] are the only spellings.)
+//! Every figure bench (Figs. 5–8), the
+//! `optimize`/`latency`/`sweep`/`dynamic` CLI subcommands, and the
+//! resource-allocation / dynamic-reopt examples run on this API. (The
+//! deprecated `build_scenario`/`sweep` free functions are gone —
+//! `ScenarioBuilder::from_config(cfg).build()` and [`SweepRunner`] are
+//! the only spellings.)
 
 pub mod builder;
+pub mod dynamic;
 pub mod sweep;
 
 pub use self::builder::{ScenarioBuilder, PRESETS};
+pub use self::dynamic::{
+    DynamicOutcome, DynamicPolicy, ReOptStrategy, RoundRecord, RoundSimulator,
+};
 pub use self::sweep::{PointError, PointResult, SweepAxis, SweepReport, SweepRunner};

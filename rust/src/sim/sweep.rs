@@ -93,6 +93,31 @@ impl SweepAxis {
         })
     }
 
+    /// Dynamics axis: AR(1) round-to-round shadowing correlation ρ
+    /// (1.0 = static channel). Meaningful for
+    /// [`crate::sim::DynamicPolicy`] columns.
+    pub fn channel_correlation(values: &[f64]) -> SweepAxis {
+        SweepAxis::new("channel_rho", values, |cfg, v| {
+            cfg.dynamics.rho = v;
+        })
+    }
+
+    /// Dynamics axis: per-round client dropout probability.
+    pub fn dropout(values: &[f64]) -> SweepAxis {
+        SweepAxis::new("dropout", values, |cfg, v| {
+            cfg.dynamics.dropout = v;
+        })
+    }
+
+    /// Dynamics axis: re-optimization period J — sets the config
+    /// strategy to `periodic:<J>` (values are rounded, J >= 1), which
+    /// [`crate::sim::DynamicPolicy::from_scenario`] columns pick up.
+    pub fn reopt_period(values: &[f64]) -> SweepAxis {
+        SweepAxis::new("reopt_period", values, |cfg, v| {
+            cfg.dynamics.strategy = format!("periodic:{}", (v.round().max(1.0)) as usize);
+        })
+    }
+
     /// Canned axis lookup for the CLI (`sfllm sweep --axis <name>`).
     pub fn by_name(name: &str, values: &[f64]) -> Result<SweepAxis> {
         Ok(match name {
@@ -103,9 +128,13 @@ impl SweepAxis {
             "server-compute" | "f_server_ghz" => SweepAxis::server_compute_ghz(values),
             "power" | "p_max_dbm" => SweepAxis::p_max_dbm(values),
             "clients" => SweepAxis::clients(values),
+            "correlation" | "channel_rho" => SweepAxis::channel_correlation(values),
+            "dropout" => SweepAxis::dropout(values),
+            "reopt-period" | "reopt_period" => SweepAxis::reopt_period(values),
             other => bail!(
                 "unknown sweep axis '{other}' (available: bandwidth, \
-                 client-compute, server-compute, power, clients)"
+                 client-compute, server-compute, power, clients, \
+                 correlation, dropout, reopt-period)"
             ),
         })
     }
@@ -734,10 +763,32 @@ mod tests {
 
     #[test]
     fn axis_by_name_resolves_canned_axes() {
-        for name in ["bandwidth", "client-compute", "server-compute", "power", "clients"] {
+        for name in [
+            "bandwidth",
+            "client-compute",
+            "server-compute",
+            "power",
+            "clients",
+            "correlation",
+            "dropout",
+            "reopt-period",
+        ] {
             assert!(SweepAxis::by_name(name, &[1.0]).is_ok(), "{name}");
         }
         assert!(SweepAxis::by_name("nope", &[1.0]).is_err());
+    }
+
+    #[test]
+    fn dynamics_axes_write_the_dynamics_config() {
+        let mut cfg = Config::paper_defaults();
+        (SweepAxis::channel_correlation(&[0.6]).apply)(&mut cfg, 0.6);
+        (SweepAxis::dropout(&[0.1]).apply)(&mut cfg, 0.1);
+        (SweepAxis::reopt_period(&[4.0]).apply)(&mut cfg, 4.0);
+        assert_eq!(cfg.dynamics.rho, 0.6);
+        assert_eq!(cfg.dynamics.dropout, 0.1);
+        assert_eq!(cfg.dynamics.strategy, "periodic:4");
+        (SweepAxis::reopt_period(&[0.0]).apply)(&mut cfg, 0.0);
+        assert_eq!(cfg.dynamics.strategy, "periodic:1", "J clamps to >= 1");
     }
 
     #[test]

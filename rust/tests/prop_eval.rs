@@ -93,6 +93,7 @@ fn trap_scenario() -> Scenario {
                 f_cycles: 1.0e9,
             }],
         },
+        dynamics: sfllm::config::DynamicsConfig::default(),
         // snr_coeff = gain_product * client_gain / noise_psd, chosen
         // directly: main uplink 1 Gbit/s (SE = log2(1+1) = 1), fed
         // uplink 1e6 * log2(1 + 2.113) ~ 1.64 Mbit/s at PSD 1 W/Hz.
