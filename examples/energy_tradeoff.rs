@@ -1,0 +1,101 @@
+//! Energy/delay Pareto sweep — the "energy-efficient SflLLM" study the
+//! paper names as future work, on the PR-4 objective engine.
+//!
+//! Sweeps λ of the weighted objective `T + λ·E` from 0 (pure delay)
+//! upward, solving the full Algorithm-3 BCD at each point on one shared
+//! `WorkloadCache`, and prints the traced Pareto frontier: as λ grows
+//! the optimizer gives up delay to buy energy, typically by moving to a
+//! shallower split / smaller rank and a leaner power profile. The
+//! endpoints are pinned by two extra solves under the pure `delay` and
+//! pure `energy` objectives.
+//!
+//! ```bash
+//! cargo run --release --example energy_tradeoff -- \
+//!     [--preset battery_edge] [--model tiny] [--lambdas 0,0.01,0.05,0.2,1]
+//! ```
+
+use anyhow::{Context, Result};
+use sfllm::config::Config;
+use sfllm::delay::{ConvergenceModel, WorkloadCache};
+use sfllm::opt::bcd::{self, BcdOptions};
+use sfllm::opt::Objective;
+use sfllm::sim::ScenarioBuilder;
+use sfllm::util::cli::Args;
+
+fn main() -> Result<()> {
+    let mut args = Args::from_env();
+    let preset = args.str_or("preset", "battery_edge");
+    let lambdas_spec = args.str_or("lambdas", "0,0.005,0.02,0.05,0.2,1");
+    let mut cfg = ScenarioBuilder::preset(&preset)?.into_config();
+    cfg.apply_file_and_args(&mut args)?;
+    args.finish()?;
+    let lambdas: Vec<f64> = lambdas_spec
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse::<f64>().with_context(|| format!("bad --lambdas entry '{s}'")))
+        .collect::<Result<_>>()?;
+
+    let scn = ScenarioBuilder::from_config(cfg.clone()).build()?;
+    let conv = ConvergenceModel::paper_default();
+    let cache = WorkloadCache::new();
+    let solve = |objective: Objective| -> Result<bcd::BcdResult> {
+        bcd::optimize_cached(
+            &scn,
+            &conv,
+            &BcdOptions {
+                ranks: cfg.train.ranks.clone(),
+                objective: Some(objective),
+                ..BcdOptions::default()
+            },
+            &cache,
+        )
+    };
+
+    println!(
+        "energy/delay Pareto sweep on preset '{preset}' \
+         (model {}, K={}, zeta={:.1e}):",
+        cfg.model, cfg.system.clients, cfg.objective.zeta
+    );
+    println!(
+        "{:>12} {:>6} {:>6} {:>14} {:>14}",
+        "objective", "l_c", "rank", "delay (s)", "energy (kJ)"
+    );
+    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+    for &lambda in &lambdas {
+        let res = solve(Objective::Weighted { lambda })?;
+        let label = format!("λ={lambda}");
+        println!(
+            "{label:>12} {:>6} {:>6} {:>14.1} {:>14.2}",
+            res.alloc.l_c,
+            res.alloc.rank,
+            res.delay,
+            res.energy / 1e3
+        );
+        rows.push((label, res.delay, res.energy));
+    }
+    for (label, objective) in [("delay", Objective::Delay), ("energy", Objective::Energy)] {
+        let res = solve(objective)?;
+        println!(
+            "{label:>12} {:>6} {:>6} {:>14.1} {:>14.2}",
+            res.alloc.l_c,
+            res.alloc.rank,
+            res.delay,
+            res.energy / 1e3
+        );
+        rows.push((label.to_string(), res.delay, res.energy));
+    }
+
+    // frontier sanity: more weight on energy never buys *more* energy
+    let first = rows.first().expect("at least one lambda");
+    let last = rows[lambdas.len().saturating_sub(1)].clone();
+    println!(
+        "\nλ={} → λ={}: delay {:+.1}%, energy {:+.1}% — the traced \
+         frontier of the delay/energy trade (paper Sec. VIII future work).",
+        lambdas.first().copied().unwrap_or(0.0),
+        lambdas.last().copied().unwrap_or(0.0),
+        100.0 * (last.1 / first.1 - 1.0),
+        100.0 * (last.2 / first.2 - 1.0),
+    );
+    Ok(())
+}

@@ -2,9 +2,14 @@
 //! convergence speed (the paper's Sec. V discussion and subproblem P4).
 //!
 //! For each candidate rank, re-optimizes communication (Algorithm 2 +
-//! exact P2) with the rank frozen and reports per-round delay, E(r) and
-//! total delay — showing why the optimizer's chosen rank wins even when
-//! a smaller rank has the cheaper round.
+//! exact P2) with the rank frozen and reports per-round delay, E(r),
+//! total delay and total energy — showing why the optimizer's chosen
+//! rank wins even when a smaller rank has the cheaper round.
+//!
+//! All solves share one `WorkloadCache`, and the energy column comes
+//! straight off the cached engine (`BcdResult::energy`, produced by
+//! `DelayEvaluator::eval_energy` — bit-identical to the closed-form
+//! `delay::energy::total_energy`, with zero per-candidate allocation).
 //!
 //! ```bash
 //! cargo run --release --example rank_sweep -- [--model gpt2-s]
@@ -12,9 +17,9 @@
 
 use anyhow::Result;
 use sfllm::config::Config;
-use sfllm::delay::energy::{total_energy, DEFAULT_ZETA};
-use sfllm::delay::ConvergenceModel;
+use sfllm::delay::{ConvergenceModel, WorkloadCache};
 use sfllm::opt::bcd::{self, BcdOptions};
+use sfllm::opt::Objective;
 use sfllm::sim::ScenarioBuilder;
 use sfllm::util::cli::Args;
 
@@ -24,6 +29,8 @@ fn main() -> Result<()> {
     args.finish()?;
     let scn = ScenarioBuilder::from_config(cfg.clone()).build()?;
     let conv = ConvergenceModel::paper_default();
+    let cache = WorkloadCache::new();
+    let objective = Objective::from_config(&scn.objective)?;
 
     println!(
         "rank sweep on {} (K={}, Table II channel):",
@@ -35,8 +42,9 @@ fn main() -> Result<()> {
     );
     let mut best = (0usize, f64::INFINITY);
     for &r in &cfg.train.ranks {
-        // freeze the rank, optimize everything else
-        let res = bcd::optimize(
+        // freeze the rank, optimize everything else; every solve reuses
+        // the shared workload cache
+        let res = bcd::optimize_cached(
             &scn,
             &conv,
             &BcdOptions {
@@ -44,29 +52,35 @@ fn main() -> Result<()> {
                 init_rank: r, // freeze: search set and start are both {r}
                 ..BcdOptions::default()
             },
+            &cache,
         )?;
         let ph = scn.phase_delays(&res.alloc);
-        let energy = total_energy(&scn, &res.alloc, &conv, DEFAULT_ZETA);
+        // the table always reports delay/energy in their own columns;
+        // the solve minimizes whatever --objective asked for
         println!(
             "{:>5} {:>10.1} {:>12.4} {:>12.4} {:>14.1} {:>14.2}",
             r,
             conv.rounds(r),
             ph.t_local(),
             ph.t_fed(),
-            res.objective,
-            energy / 1e3,
+            res.delay,
+            res.energy / 1e3,
         );
         if res.objective < best.1 {
             best = (r, res.objective);
         }
     }
     println!(
-        "\nbest rank: {} at {:.1} s — per-round cost rises with rank but \
-         E(r) falls; the optimum balances the two (paper Fig. 4-6 narrative).\n\
+        "\nbest rank: {} (objective '{}' = {:.1}) — per-round cost rises \
+         with rank but E(r) falls; the optimum balances the two (paper \
+         Fig. 4-6 narrative).\n\
          The energy column is this repo's future-work extension (paper \
          Sec. VIII): the delay-optimal rank is not automatically the \
-         energy-optimal one.",
-        best.0, best.1
+         energy-optimal one — run `--objective energy` (or see \
+         examples/energy_tradeoff.rs) to optimize that axis instead.",
+        best.0,
+        objective.label(),
+        best.1
     );
     Ok(())
 }

@@ -7,9 +7,10 @@
 //! * one full BCD optimize() on the Table-II scenario,
 //! * delay-model evaluation,
 //! * the joint split×rank grid: clone-per-candidate `total_delay` vs
-//!   the cached `DelayEvaluator` (the P3/P4 engine), plus a large-K
-//!   axis on the `many_clients` preset showing the evaluator scaling
-//!   to thousands of clients,
+//!   the cached `DelayEvaluator` (the P3/P4 engine), plus an
+//!   energy-objective axis (delay vs energy vs weighted scans on the
+//!   same evaluator) and a large-K axis on the `many_clients` preset
+//!   showing the evaluator scaling to thousands of clients,
 //! * FedAvg + Adam step on tiny-sized adapters,
 //! * coordinator round overhead over the mock model (channel + thread
 //!   cost with zero compute).
@@ -24,7 +25,7 @@ use sfllm::delay::{ConvergenceModel, DelayEvaluator, WorkloadCache};
 use sfllm::model::lora::{AdapterSet, Tensor};
 use sfllm::opt::bcd::{self, BcdOptions};
 use sfllm::opt::policy::Proposed;
-use sfllm::opt::{assignment, power};
+use sfllm::opt::{assignment, power, Objective};
 use sfllm::sim::{ReOptStrategy, RoundSimulator, ScenarioBuilder};
 
 fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
@@ -126,6 +127,23 @@ fn main() -> anyhow::Result<()> {
         t_clone / t_cached,
         if t_cached < t_clone { "" } else { "  (REGRESSION: cache slower than clones!)" }
     );
+
+    // objective axis on the same prebuilt evaluator: the energy and
+    // weighted scans pay one extra O(K) energy pass per candidate; the
+    // delay-objective scan must cost the same as the plain one
+    println!("\nobjective-aware grid scan ({grid} candidates, prebuilt evaluator):");
+    bench("grid scan, objective = delay", 2000, || {
+        std::hint::black_box(ev.best_split_rank_obj(&Objective::Delay));
+    });
+    bench("grid scan, objective = energy", 2000, || {
+        std::hint::black_box(ev.best_split_rank_obj(&Objective::Energy));
+    });
+    bench("grid scan, objective = weighted:0.05", 2000, || {
+        std::hint::black_box(ev.best_split_rank_obj(&Objective::Weighted { lambda: 0.05 }));
+    });
+    bench("single eval_energy(l_c, r)", 20000, || {
+        std::hint::black_box(ev.eval_energy(6, 4));
+    });
 
     // large-K axis: the evaluator at production client counts
     println!("\nDelayEvaluator at scale (many_clients preset):");

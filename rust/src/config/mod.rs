@@ -152,6 +152,39 @@ impl Default for DynamicsConfig {
     }
 }
 
+/// Optimization-objective and energy-model parameters consumed by
+/// [`crate::opt::Objective::from_config`] and the energy evaluation
+/// paths. The defaults reproduce the paper exactly: a pure-delay
+/// objective, with the energy model inert until a surface asks for it.
+#[derive(Clone, Debug)]
+pub struct ObjectiveConfig {
+    /// Objective spec: `delay`, `energy`, `weighted[:<lambda>]`, or
+    /// `budget[:<joules>]` (see `opt::Objective::parse`). A bare
+    /// `weighted` / `budget` takes its parameter from the `lambda` /
+    /// `budget_j` fields below.
+    pub kind: String,
+    /// λ weight (seconds per joule) of the `weighted` objective
+    /// `T + λ·E`; λ = 0 is exactly the delay objective.
+    pub lambda: f64,
+    /// Energy budget (J) of the `budget` objective (minimize delay
+    /// subject to total energy ≤ budget); infinite = unconstrained.
+    pub budget_j: f64,
+    /// Effective switched-capacitance coefficient ζ (J·s²/cycle³) of
+    /// the client compute-energy model `ζ·f²·cycles`.
+    pub zeta: f64,
+}
+
+impl Default for ObjectiveConfig {
+    fn default() -> Self {
+        ObjectiveConfig {
+            kind: "delay".to_string(),
+            lambda: 0.0,
+            budget_j: f64::INFINITY,
+            zeta: crate::delay::energy::DEFAULT_ZETA,
+        }
+    }
+}
+
 /// Top-level config bundle.
 #[derive(Clone, Debug, Default)]
 pub struct Config {
@@ -159,6 +192,8 @@ pub struct Config {
     pub train: TrainConfig,
     /// Round-varying dynamics (static by default).
     pub dynamics: DynamicsConfig,
+    /// Optimization objective / energy model (pure delay by default).
+    pub objective: ObjectiveConfig,
     /// Model variant name for the workload model ("gpt2-s", "gpt2-m", "tiny").
     pub model: String,
 }
@@ -169,6 +204,7 @@ impl Config {
             system: SystemConfig::default(),
             train: TrainConfig::default(),
             dynamics: DynamicsConfig::default(),
+            objective: ObjectiveConfig::default(),
             model: "gpt2-s".to_string(),
         }
     }
@@ -227,6 +263,11 @@ impl Config {
         d.seed = doc.usize_or("dynamics.seed", d.seed as usize)? as u64;
         d.max_rounds = doc.usize_or("dynamics.max_rounds", d.max_rounds)?;
         d.strategy = doc.str_or("dynamics.strategy", &d.strategy)?;
+        let o = &mut c.objective;
+        o.kind = doc.str_or("objective.kind", &o.kind)?;
+        o.lambda = doc.f64_or("objective.lambda", o.lambda)?;
+        o.budget_j = doc.f64_or("objective.budget_j", o.budget_j)?;
+        o.zeta = doc.f64_or("objective.zeta", o.zeta)?;
         c.model = doc.str_or("model", &c.model)?;
         Ok(())
     }
@@ -250,6 +291,10 @@ impl Config {
         self.model = args.str_or("model", &self.model);
         self.train.batch = args.usize_or("batch", self.train.batch)?;
         self.train.local_steps = args.usize_or("local-steps", self.train.local_steps)?;
+        self.objective.kind = args.str_or("objective", &self.objective.kind);
+        self.objective.lambda = args.f64_or("lambda", self.objective.lambda)?;
+        self.objective.budget_j = args.f64_or("energy-budget", self.objective.budget_j)?;
+        self.objective.zeta = args.f64_or("zeta", self.objective.zeta)?;
         Ok(())
     }
 }
@@ -314,6 +359,39 @@ mod tests {
         let c = Config::from_args(&mut args).unwrap();
         assert_eq!(c.system.clients, 3);
         assert_eq!(c.system.seed, 7);
+        args.finish().unwrap();
+    }
+
+    #[test]
+    fn objective_defaults_are_pure_delay_and_toml_overridable() {
+        let c = Config::paper_defaults();
+        assert_eq!(c.objective.kind, "delay");
+        assert_eq!(c.objective.lambda, 0.0);
+        assert!(c.objective.budget_j.is_infinite());
+        assert_eq!(c.objective.zeta, crate::delay::energy::DEFAULT_ZETA);
+        let doc = TomlDoc::parse(
+            "[objective]\nkind = \"weighted\"\nlambda = 0.05\nzeta = 2e-28\n",
+        )
+        .unwrap();
+        let c = Config::from_toml(&doc).unwrap();
+        assert_eq!(c.objective.kind, "weighted");
+        assert_eq!(c.objective.lambda, 0.05);
+        assert_eq!(c.objective.zeta, 2e-28);
+        // untouched objective keys keep their defaults
+        assert!(c.objective.budget_j.is_infinite());
+    }
+
+    #[test]
+    fn objective_cli_flags_override() {
+        let mut args = Args::from_iter(
+            ["--objective", "energy", "--zeta", "5e-29", "--lambda", "0.2"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = Config::from_args(&mut args).unwrap();
+        assert_eq!(c.objective.kind, "energy");
+        assert_eq!(c.objective.zeta, 5e-29);
+        assert_eq!(c.objective.lambda, 0.2);
         args.finish().unwrap();
     }
 }

@@ -1,8 +1,9 @@
 //! Energy model — the paper's stated future-work extension
 //! ("exploring an energy-efficient SflLLM framework"), built on the
-//! same Section-V quantities.
+//! same Section-V quantities and promoted to a first-class objective
+//! by `opt::Objective`.
 //!
-//! Per local round, client k spends:
+//! Per **local** round, client k spends:
 //!
 //! * compute energy `E_cmp = zeta_k * f_k^2 * C_k` — the standard
 //!   CMOS dynamic-power model (energy per cycle ∝ f², as in the
@@ -11,15 +12,50 @@
 //! * transmit energy `E_tx = P_k * T_k` on each uplink — transmit
 //!   power times airtime, both already produced by the delay model.
 //!
-//! This enables the energy/delay trade-off study in
-//! `examples/rank_sweep.rs` (energy column) and the ablation test in
-//! `rust/tests/integration_optimizer.rs`.
+//! # The amortization contract
+//!
+//! [`round_energy`] is a **per-local-round** ledger: the adapter upload
+//! to the federated server happens once per *global* round (I local
+//! rounds), so its energy enters the ledger divided by `I`
+//! (`Scenario::local_steps`). [`total_energy`] is then
+//! `E(r) · (I · E_round)` — the exact energy analogue of Eq. 17's
+//! `E(r)·(I·T_local + T_fed)` — which restores the federated upload to
+//! once per global round. `local_steps ≥ 1` is validated at scenario
+//! build ([`crate::sim::ScenarioBuilder::build`]); these functions
+//! assert it rather than papering over `I = 0` with a `max(1)` that
+//! silently zeroed the total.
+//!
+//! # Infeasibility is explicit
+//!
+//! A client with a zero uplink rate has an *infinite* airtime; its
+//! transmit energy is reported as `+∞` via [`tx_energy`] — mirroring
+//! the delay model's explicit-infinity handling — and never as the
+//! silent NaN of `0·∞` (a starved client also has zero transmit
+//! power). No energy path can emit NaN.
+//!
+//! Consumers: `DelayEvaluator::eval_energy` (bit-identical cached
+//! path, property-tested in `rust/tests/prop_eval.rs`), the
+//! objective-aware P3×P4 scans, `sim::RoundSimulator`'s realized-energy
+//! accounting, and the `examples/rank_sweep.rs` /
+//! `examples/energy_tradeoff.rs` studies.
 
 use super::{Allocation, PhaseDelays, Scenario};
 
 /// Effective switched-capacitance coefficient (J·s²/cycle³ scale).
-/// Typical edge-device magnitude; configurable per study.
+/// Typical edge-device magnitude; configurable per study via
+/// `config::ObjectiveConfig::zeta` (→ `Scenario::objective.zeta`).
 pub const DEFAULT_ZETA: f64 = 1e-28;
+
+/// Transmit energy `P·T` with explicit infeasibility: an infinite
+/// airtime (starved uplink) costs infinite energy even at zero
+/// transmit power — never the silent NaN of `0·∞`.
+pub fn tx_energy(power_w: f64, airtime_s: f64) -> f64 {
+    if airtime_s.is_finite() {
+        power_w * airtime_s
+    } else {
+        f64::INFINITY
+    }
+}
 
 /// Energy ledger for one local round (Joules).
 #[derive(Clone, Debug, Default)]
@@ -28,8 +64,9 @@ pub struct RoundEnergy {
     pub client_compute: Vec<f64>,
     /// Per-client activation-upload transmit energy.
     pub act_upload: Vec<f64>,
-    /// Per-client federated-upload transmit energy (amortized per round:
-    /// the adapter upload happens once every I rounds).
+    /// Per-client federated-upload transmit energy, amortized per local
+    /// round: the adapter upload happens once every I local rounds, so
+    /// each ledger entry carries 1/I of it (see the module docs).
     pub fed_upload: Vec<f64>,
 }
 
@@ -49,10 +86,30 @@ impl RoundEnergy {
     }
 }
 
-/// Compute the per-round energy ledger for an allocation.
+/// Compute the per-local-round energy ledger for an allocation.
+///
+/// Requires `scn.local_steps >= 1` (the scenario-build invariant; see
+/// the module docs for the amortization contract).
 pub fn round_energy(scn: &Scenario, alloc: &Allocation, zeta: f64) -> RoundEnergy {
-    let ph: PhaseDelays = scn.phase_delays(alloc);
+    let ph = scn.phase_delays(alloc);
+    round_energy_with_phases(scn, alloc, zeta, &ph)
+}
+
+/// [`round_energy`] with the phase delays already in hand, so callers
+/// that need both totals (e.g. `opt::objective::score_alloc`) pay for
+/// one `Scenario::phase_delays` pass instead of two.
+pub fn round_energy_with_phases(
+    scn: &Scenario,
+    alloc: &Allocation,
+    zeta: f64,
+    ph: &PhaseDelays,
+) -> RoundEnergy {
+    assert!(
+        scn.local_steps >= 1,
+        "local_steps must be >= 1 (validated at scenario build)"
+    );
     let b = scn.batch as f64;
+    let steps = scn.local_steps as f64;
     let mut out = RoundEnergy::default();
     for k in 0..scn.k() {
         let f_k = scn.topo.clients[k].f_cycles;
@@ -62,23 +119,40 @@ pub fn round_energy(scn: &Scenario, alloc: &Allocation, zeta: f64) -> RoundEnerg
                 + scn.profile.client_bwd_flops(alloc.l_c, alloc.rank));
         let cycles = scn.kappa_client * flops;
         out.client_compute.push(zeta * f_k * f_k * cycles);
-        // transmit energy = power * airtime
-        out.act_upload.push(scn.power_main(alloc, k) * ph.act_upload[k]);
+        // transmit energy = power * airtime, infinity-explicit
+        out.act_upload
+            .push(tx_energy(scn.power_main(alloc, k), ph.act_upload[k]));
         out.fed_upload
-            .push(scn.power_fed(alloc, k) * ph.fed_upload[k] / scn.local_steps.max(1) as f64);
+            .push(tx_energy(scn.power_fed(alloc, k), ph.fed_upload[k]) / steps);
     }
     out
 }
 
-/// Total training energy: per-round energy × rounds (Eq. 17 structure).
+/// Total training energy `E(r) · (I · E_round)` — the energy analogue
+/// of Eq. 17, with exactly this association so the dynamic engine's
+/// run-length-compressed realized-energy accumulation reproduces it
+/// bit for bit on frozen runs (`rust/tests/prop_dynamic.rs`).
 pub fn total_energy(
     scn: &Scenario,
     alloc: &Allocation,
     conv: &super::ConvergenceModel,
     zeta: f64,
 ) -> f64 {
-    let per_round = round_energy(scn, alloc, zeta).total();
-    conv.rounds(alloc.rank) * scn.local_steps as f64 * per_round
+    let ph = scn.phase_delays(alloc);
+    total_energy_with_phases(scn, alloc, conv, zeta, &ph)
+}
+
+/// [`total_energy`] with the phase delays already in hand (same bits —
+/// `round_energy` consumes the phases verbatim).
+pub fn total_energy_with_phases(
+    scn: &Scenario,
+    alloc: &Allocation,
+    conv: &super::ConvergenceModel,
+    zeta: f64,
+    ph: &PhaseDelays,
+) -> f64 {
+    let per_round = round_energy_with_phases(scn, alloc, zeta, ph).total();
+    conv.rounds(alloc.rank) * (scn.local_steps as f64 * per_round)
 }
 
 #[cfg(test)]
@@ -140,6 +214,63 @@ mod tests {
         let e1 = total_energy(&scn, &a, &ConvergenceModel::fitted(10.0, 0.0, 1.0), DEFAULT_ZETA);
         let e2 = total_energy(&scn, &a, &ConvergenceModel::fitted(20.0, 0.0, 1.0), DEFAULT_ZETA);
         assert!((e2 - 2.0 * e1).abs() < 1e-9 * e1);
+    }
+
+    #[test]
+    fn starved_client_energy_is_infinite_never_nan() {
+        // a zero-rate client used to make 0·∞ = NaN propagate silently
+        // through total(); infeasibility must be an explicit infinity
+        let scn = toy_scenario();
+        let mut starved = alloc();
+        starved.assign_fed[1].clear(); // client 1: no fed subchannels
+        let e = round_energy(&scn, &starved, DEFAULT_ZETA);
+        assert!(e.fed_upload[1].is_infinite());
+        assert!(!e.fed_upload[1].is_nan());
+        let total = e.total();
+        assert!(total.is_infinite() && !total.is_nan());
+        let t = total_energy(&scn, &starved, &ConvergenceModel::paper_default(), DEFAULT_ZETA);
+        assert!(t.is_infinite() && !t.is_nan());
+        // same for the main link
+        let mut starved_main = alloc();
+        starved_main.assign_main[0].clear();
+        let e2 = round_energy(&scn, &starved_main, DEFAULT_ZETA);
+        assert!(e2.act_upload[0].is_infinite() && !e2.act_upload[0].is_nan());
+    }
+
+    #[test]
+    fn fed_energy_is_amortized_over_local_steps_consistently() {
+        // the ledger carries 1/I of the adapter upload; the total must
+        // restore it to exactly once per global round: I rounds of the
+        // ledger sum to (I·compute + I·act + fed_once) per global round
+        let scn = toy_scenario(); // I = 3
+        let a = alloc();
+        let e = round_energy(&scn, &a, DEFAULT_ZETA);
+        let fed_once: f64 = (0..scn.k())
+            .map(|k| {
+                let ph = scn.phase_delays(&a);
+                tx_energy(scn.power_fed(&a, k), ph.fed_upload[k])
+            })
+            .sum();
+        let ledger_fed: f64 = e.fed_upload.iter().sum();
+        assert!(
+            (scn.local_steps as f64 * ledger_fed - fed_once).abs() <= 1e-12 * fed_once,
+            "I x amortized fed energy {ledger_fed} must equal the one-shot upload {fed_once}"
+        );
+        // and the global-round structure of total_energy matches
+        let conv = ConvergenceModel::fitted(10.0, 0.0, 1.0); // E(r) = 10
+        let want = 10.0 * (scn.local_steps as f64 * e.total());
+        let got = total_energy(&scn, &a, &conv, DEFAULT_ZETA);
+        assert_eq!(got.to_bits(), want.to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "local_steps")]
+    fn zero_local_steps_is_rejected_loudly() {
+        // a hand-built scenario with I = 0 used to yield *zero* total
+        // energy (the `.max(1)` papering); now it fails fast
+        let mut scn = toy_scenario();
+        scn.local_steps = 0;
+        let _ = round_energy(&scn, &alloc(), DEFAULT_ZETA);
     }
 
     #[test]

@@ -21,6 +21,17 @@
 //! … for optimal split position and rank selection" — is what P3/P4 in
 //! [`crate::opt::bcd`] run on.
 //!
+//! The same factoring serves the **energy** model:
+//! [`DelayEvaluator::eval_energy`] is bit-identical to
+//! `delay::energy::total_energy` at the scenario's ζ (per-client powers
+//! are cached next to the rates; the `fwd+bwd` energy FLOPs are one
+//! more [`WorkloadTable`] column), and
+//! [`DelayEvaluator::best_split_rank_obj`] runs the joint grid scan
+//! under any [`crate::opt::Objective`] — with [`Objective::Delay`]
+//! (and λ = 0) it performs the identical float comparisons as
+//! [`DelayEvaluator::best_split_rank`], so promoting the objective to a
+//! parameter changed no delay-optimal result anywhere.
+//!
 //! [`WorkloadCache`] shares the (profile, rank set) tables across
 //! evaluator builds: all BCD iterations, baseline draws, and
 //! [`crate::sim::SweepRunner`] grid points that keep the same model and
@@ -28,10 +39,13 @@
 
 use std::sync::{Arc, Mutex};
 
+use crate::delay::energy::tx_energy;
 use crate::delay::{Allocation, ConvergenceModel, Scenario};
 use crate::model::{WorkloadProfile, WorkloadTable};
+use crate::opt::Objective;
 
-/// The per-(l_c, rank) workload sums one delay evaluation consumes.
+/// The per-(l_c, rank) workload sums one delay/energy evaluation
+/// consumes.
 struct Workload {
     client_fwd: f64,
     client_bwd: f64,
@@ -39,6 +53,8 @@ struct Workload {
     server_bwd: f64,
     act_bits: f64,
     adapter_bits: f64,
+    /// `client_fwd + client_bwd`, pre-added (the energy model's Φ).
+    client_energy: f64,
 }
 
 /// Cached total-delay evaluator over one communication block.
@@ -56,6 +72,12 @@ pub struct DelayEvaluator<'s> {
     /// Per-client uplink rates under the frozen assignment/PSDs.
     rate_main: Vec<f64>,
     rate_fed: Vec<f64>,
+    /// Per-client transmit powers (C4's LHS) under the same frozen
+    /// block — the energy model's `P_k` factors.
+    power_main: Vec<f64>,
+    power_fed: Vec<f64>,
+    /// Switched-capacitance ζ, from `Scenario::objective.zeta`.
+    zeta: f64,
 }
 
 impl<'s> DelayEvaluator<'s> {
@@ -74,6 +96,9 @@ impl<'s> DelayEvaluator<'s> {
             rounds,
             rate_main: (0..k_n).map(|k| scn.rate_main(alloc, k)).collect(),
             rate_fed: (0..k_n).map(|k| scn.rate_fed(alloc, k)).collect(),
+            power_main: (0..k_n).map(|k| scn.power_main(alloc, k)).collect(),
+            power_fed: (0..k_n).map(|k| scn.power_fed(alloc, k)).collect(),
+            zeta: scn.objective.zeta,
             table,
         }
     }
@@ -151,6 +176,7 @@ impl<'s> DelayEvaluator<'s> {
             server_bwd: p.server_bwd_flops(l_c, rank),
             act_bits: p.activation_bits(l_c),
             adapter_bits: p.client_adapter_bits(l_c, rank),
+            client_energy: p.client_fwd_flops(l_c, rank) + p.client_bwd_flops(l_c, rank),
         }
     }
 
@@ -163,6 +189,7 @@ impl<'s> DelayEvaluator<'s> {
             server_bwd: self.table.server_bwd_flops(l_c, ri),
             act_bits: self.table.activation_bits(l_c),
             adapter_bits: self.table.adapter_bits(l_c, ri),
+            client_energy: self.table.client_energy_flops(l_c, ri),
         }
     }
 
@@ -215,6 +242,87 @@ impl<'s> DelayEvaluator<'s> {
         scn.local_steps as f64 * t_local + t_fed
     }
 
+    /// Total training energy `E(r)·(I·E_round)` at (`l_c`, `rank`)
+    /// under the frozen communication block — **bit-identical** to
+    /// `delay::energy::total_energy` at the scenario's ζ (asserted by
+    /// `rust/tests/prop_eval.rs`), with the same zero-allocation /
+    /// table-fallback structure as [`Self::eval`].
+    pub fn eval_energy(&self, l_c: usize, rank: usize) -> f64 {
+        match self.table.rank_index(rank) {
+            Some(ri) => self.total_energy(&self.lookup(l_c, ri), self.rounds[ri]),
+            None => self.total_energy(&self.profile_workload(l_c, rank), self.conv.rounds(rank)),
+        }
+    }
+
+    /// Per-local-round energy ledger total at (`l_c`, `rank`) —
+    /// `delay::energy::round_energy(..).total()` on the cached block
+    /// (same bits); [`Self::eval_energy`] is exactly
+    /// `E(rank) × (I ×` this value `)`.
+    pub fn round_energy_total(&self, l_c: usize, rank: usize) -> f64 {
+        self.round_energy(&self.workload(l_c, rank), None)
+    }
+
+    /// [`Self::round_energy_total`] restricted to the clients marked
+    /// `true` in `active`: dropped clients spend nothing — no compute,
+    /// no uploads. With an all-`true` mask the arithmetic (and the
+    /// bits) match the unmasked total. Returns 0 for an all-`false`
+    /// mask.
+    pub fn round_energy_active(&self, l_c: usize, rank: usize, active: &[bool]) -> f64 {
+        assert_eq!(
+            active.len(),
+            self.scn.k(),
+            "participation mask length must equal the client count"
+        );
+        self.round_energy(&self.workload(l_c, rank), Some(active))
+    }
+
+    /// Energy analogue of [`Self::total`]: `E(r) × (I × E_round)` —
+    /// exactly `delay::energy::total_energy`'s association.
+    fn total_energy(&self, w: &Workload, rounds: f64) -> f64 {
+        rounds * (self.scn.local_steps as f64 * self.round_energy(w, None))
+    }
+
+    /// Per-local-round energy with the workload sums in hand,
+    /// optionally restricted to the active clients. Replicates
+    /// `delay::energy::round_energy` + `RoundEnergy::total` operation
+    /// by operation: three component accumulators filled in client
+    /// order, then `(compute + act) + fed` — so the cached path stays
+    /// bit-identical to the uncached one. Starved uplinks contribute an
+    /// explicit `+∞` via [`tx_energy`], never NaN.
+    fn round_energy(&self, w: &Workload, active: Option<&[bool]>) -> f64 {
+        let scn = self.scn;
+        let b = scn.batch as f64;
+        let steps = scn.local_steps as f64;
+        debug_assert!(scn.local_steps >= 1, "validated at scenario build");
+        let mut compute = 0.0f64;
+        let mut act = 0.0f64;
+        let mut fed = 0.0f64;
+        for k in 0..scn.k() {
+            if let Some(mask) = active {
+                if !mask[k] {
+                    continue;
+                }
+            }
+            let f_k = scn.topo.clients[k].f_cycles;
+            let flops = b * w.client_energy;
+            let cycles = scn.kappa_client * flops;
+            compute += self.zeta * f_k * f_k * cycles;
+            let act_airtime = if self.rate_main[k] > 0.0 {
+                b * w.act_bits / self.rate_main[k]
+            } else {
+                f64::INFINITY
+            };
+            act += tx_energy(self.power_main[k], act_airtime);
+            let fed_airtime = if self.rate_fed[k] > 0.0 {
+                w.adapter_bits / self.rate_fed[k]
+            } else {
+                f64::INFINITY
+            };
+            fed += tx_energy(self.power_fed[k], fed_airtime) / steps;
+        }
+        compute + act + fed
+    }
+
     /// P3 alone: argmin over split points at a fixed rank. Ties resolve
     /// to the smaller l_c (less client compute).
     pub fn best_split(&self, rank: usize) -> (usize, f64) {
@@ -258,6 +366,108 @@ impl<'s> DelayEvaluator<'s> {
         }
         best
     }
+
+    /// The joint P3×P4 scan under an arbitrary [`Objective`]: argmin of
+    /// `obj.score(T, E)` over the split×rank candidate grid, with the
+    /// same iteration order and strict-`<` tie-break as
+    /// [`Self::best_split_rank`]. Under [`Objective::Delay`] (and any
+    /// objective with `needs_energy() == false`) the scan performs the
+    /// **identical float comparisons** as the plain delay scan — energy
+    /// is only computed once, for the winner's report — so the delay
+    /// path is bit-identical (property-tested).
+    pub fn best_split_rank_obj(&self, obj: &Objective) -> GridChoice {
+        let need_e = obj.needs_energy();
+        let mut best = GridChoice {
+            l_c: self.splits().start,
+            rank: self.table.ranks()[0],
+            delay: f64::INFINITY,
+            energy: f64::INFINITY,
+            score: f64::INFINITY,
+        };
+        for l_c in self.splits() {
+            for (ri, &r) in self.table.ranks().iter().enumerate() {
+                let w = self.lookup(l_c, ri);
+                let d = self.total(&w, self.rounds[ri]);
+                let e = if need_e {
+                    self.total_energy(&w, self.rounds[ri])
+                } else {
+                    0.0
+                };
+                let s = obj.score(d, e);
+                if s < best.score {
+                    best = GridChoice {
+                        l_c,
+                        rank: r,
+                        delay: d,
+                        energy: e,
+                        score: s,
+                    };
+                }
+            }
+        }
+        if !need_e {
+            // score comparisons never touched energy; fill the winner's
+            // report column with one post-hoc evaluation
+            best.energy = self.eval_energy(best.l_c, best.rank);
+        }
+        best
+    }
+
+    /// P3 alone under an arbitrary objective: argmin of the score over
+    /// split points at a fixed rank; returns (l_c*, score*). Identical
+    /// comparisons to [`Self::best_split`] when the objective never
+    /// consumes energy.
+    pub fn best_split_obj(&self, rank: usize, obj: &Objective) -> (usize, f64) {
+        let need_e = obj.needs_energy();
+        let mut best = (self.splits().start, f64::INFINITY);
+        for l_c in self.splits() {
+            let d = self.eval(l_c, rank);
+            let e = if need_e { self.eval_energy(l_c, rank) } else { 0.0 };
+            let s = obj.score(d, e);
+            if s < best.1 {
+                best = (l_c, s);
+            }
+        }
+        best
+    }
+
+    /// P4 alone under an arbitrary objective: argmin of the score over
+    /// the cached candidate ranks at a fixed split; returns
+    /// (rank*, score*). Identical comparisons to [`Self::best_rank`]
+    /// when the objective never consumes energy.
+    pub fn best_rank_obj(&self, l_c: usize, obj: &Objective) -> (usize, f64) {
+        let need_e = obj.needs_energy();
+        let mut best = (self.table.ranks()[0], f64::INFINITY);
+        for (ri, &r) in self.table.ranks().iter().enumerate() {
+            let w = self.lookup(l_c, ri);
+            let d = self.total(&w, self.rounds[ri]);
+            let e = if need_e {
+                self.total_energy(&w, self.rounds[ri])
+            } else {
+                0.0
+            };
+            let s = obj.score(d, e);
+            if s < best.1 {
+                best = (r, s);
+            }
+        }
+        best
+    }
+}
+
+/// One grid candidate chosen by [`DelayEvaluator::best_split_rank_obj`]:
+/// the argmin coordinates plus all three report quantities.
+#[derive(Clone, Copy, Debug)]
+pub struct GridChoice {
+    pub l_c: usize,
+    pub rank: usize,
+    /// Total training delay T (Eq. 17) at the winner.
+    pub delay: f64,
+    /// Total training energy at the winner (scenario ζ).
+    pub energy: f64,
+    /// The objective score the scan minimized
+    /// (`obj.score(delay, energy)`).
+    pub score: f64,
 }
 
 /// Identity of a [`WorkloadTable`]: everything `WorkloadProfile::new`
@@ -467,6 +677,139 @@ mod tests {
         let ev2 = DelayEvaluator::build(&scn, &starved, &conv, &RANKS);
         assert!(ev2.round_delay(6, 4).is_infinite());
         assert!(ev2.round_delay_active(6, 4, &[true, false]).is_finite());
+    }
+
+    #[test]
+    fn eval_energy_matches_total_energy_bit_for_bit() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let alloc = toy_alloc();
+        let ev = DelayEvaluator::build(&scn, &alloc, &conv, &RANKS);
+        for l_c in scn.profile.split_candidates() {
+            for &r in &[1usize, 3, 4, 8] {
+                // 3 exercises the off-table fallback
+                let mut cand = alloc.clone();
+                cand.l_c = l_c;
+                cand.rank = r;
+                let want =
+                    crate::delay::energy::total_energy(&scn, &cand, &conv, scn.objective.zeta);
+                let got = ev.eval_energy(l_c, r);
+                assert_eq!(got.to_bits(), want.to_bits(), "l_c={l_c} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn eval_energy_is_rounds_times_steps_times_round_energy() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let alloc = toy_alloc();
+        let ev = DelayEvaluator::build(&scn, &alloc, &conv, &RANKS);
+        for l_c in scn.profile.split_candidates() {
+            let e_round = ev.round_energy_total(l_c, 4);
+            let want = conv.rounds(4) * (scn.local_steps as f64 * e_round);
+            assert_eq!(ev.eval_energy(l_c, 4).to_bits(), want.to_bits(), "l_c={l_c}");
+        }
+    }
+
+    #[test]
+    fn energy_mask_all_active_matches_unmasked_and_dropouts_spend_nothing() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let alloc = toy_alloc();
+        let ev = DelayEvaluator::build(&scn, &alloc, &conv, &RANKS);
+        let all = vec![true; scn.k()];
+        let full = ev.round_energy_total(6, 4);
+        assert_eq!(full.to_bits(), ev.round_energy_active(6, 4, &all).to_bits());
+        let solo = ev.round_energy_active(6, 4, &[true, false]);
+        assert!(solo > 0.0 && solo < full, "dropping a client must shed its spend");
+        assert_eq!(ev.round_energy_active(6, 4, &[false, false]), 0.0);
+    }
+
+    #[test]
+    fn starved_client_energy_is_infinite_not_nan() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let mut alloc = toy_alloc();
+        alloc.assign_fed[1].clear(); // zero fed rate, zero fed power
+        let ev = DelayEvaluator::build(&scn, &alloc, &conv, &RANKS);
+        let e = ev.eval_energy(6, 4);
+        assert!(e.is_infinite() && !e.is_nan(), "got {e}");
+        // dropping the starved client makes the spend finite again
+        assert!(ev.round_energy_active(6, 4, &[true, false]).is_finite());
+    }
+
+    #[test]
+    fn delay_objective_scan_is_bit_identical_to_plain_scan() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let alloc = toy_alloc();
+        let ev = DelayEvaluator::build(&scn, &alloc, &conv, &RANKS);
+        let (l, r, t) = ev.best_split_rank();
+        for obj in [Objective::Delay, Objective::Weighted { lambda: 0.0 }] {
+            let c = ev.best_split_rank_obj(&obj);
+            assert_eq!((c.l_c, c.rank), (l, r), "{obj:?}");
+            assert_eq!(c.score.to_bits(), t.to_bits(), "{obj:?}");
+            assert_eq!(c.delay.to_bits(), t.to_bits(), "{obj:?}");
+            assert_eq!(c.energy.to_bits(), ev.eval_energy(l, r).to_bits(), "{obj:?}");
+        }
+        // the 1-D scans agree with their delay twins too
+        let (ls, ts) = ev.best_split(4);
+        let (lo, so) = ev.best_split_obj(4, &Objective::Delay);
+        assert_eq!((ls, ts.to_bits()), (lo, so.to_bits()));
+        let (rs, tr) = ev.best_rank(6);
+        let (ro, sr) = ev.best_rank_obj(6, &Objective::Delay);
+        assert_eq!((rs, tr.to_bits()), (ro, sr.to_bits()));
+    }
+
+    #[test]
+    fn energy_objective_scan_is_the_energy_grid_argmin() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let alloc = toy_alloc();
+        let ev = DelayEvaluator::build(&scn, &alloc, &conv, &RANKS);
+        let c = ev.best_split_rank_obj(&Objective::Energy);
+        assert_eq!(c.score.to_bits(), c.energy.to_bits());
+        for l_c in scn.profile.split_candidates() {
+            for &r in &RANKS {
+                assert!(
+                    ev.eval_energy(l_c, r) >= c.energy,
+                    "({l_c}, {r}) beats the energy scan"
+                );
+            }
+        }
+        assert_eq!(c.delay.to_bits(), ev.eval(c.l_c, c.rank).to_bits());
+    }
+
+    #[test]
+    fn budget_objective_is_constrained_delay() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let alloc = toy_alloc();
+        let ev = DelayEvaluator::build(&scn, &alloc, &conv, &RANKS);
+        let (l, r, t) = ev.best_split_rank();
+        // a generous budget reproduces the delay argmin
+        let generous = ev.best_split_rank_obj(&Objective::EnergyBudget {
+            joules: f64::INFINITY,
+        });
+        assert_eq!((generous.l_c, generous.rank), (l, r));
+        assert_eq!(generous.score.to_bits(), t.to_bits());
+        // a budget nobody can meet leaves every candidate at +inf
+        let starved = ev.best_split_rank_obj(&Objective::EnergyBudget { joules: 1e-30 });
+        assert!(starved.score.is_infinite() && !starved.score.is_nan());
+        // a budget pinned just under the delay argmin's energy must
+        // move the choice (when some other candidate still fits it)
+        let e_star = ev.eval_energy(l, r);
+        let budget = e_star * (1.0 - 1e-9);
+        let cheaper = ev.best_split_rank_obj(&Objective::Energy);
+        if cheaper.energy <= budget {
+            let pinched = ev.best_split_rank_obj(&Objective::EnergyBudget { joules: budget });
+            assert!(
+                (pinched.l_c, pinched.rank) != (l, r),
+                "budget below the delay optimum's energy must exclude it"
+            );
+            assert!(pinched.energy <= budget);
+        }
     }
 
     #[test]

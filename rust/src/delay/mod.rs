@@ -15,7 +15,7 @@ pub mod energy;
 pub mod eval;
 
 pub use convergence::ConvergenceModel;
-pub use eval::{DelayEvaluator, WorkloadCache};
+pub use eval::{DelayEvaluator, GridChoice, WorkloadCache};
 
 use crate::model::WorkloadProfile;
 use crate::net::{Link, Topology};
@@ -31,6 +31,11 @@ pub struct Scenario {
     /// default); consumed by [`crate::sim::RoundSimulator`], inert for
     /// every static evaluation path.
     pub dynamics: crate::config::DynamicsConfig,
+    /// Optimization-objective / energy-model parameters (pure delay by
+    /// default); resolved by policies via
+    /// `crate::opt::Objective::from_config`, with `objective.zeta`
+    /// feeding every energy evaluation (validated at scenario build).
+    pub objective: crate::config::ObjectiveConfig,
     /// GPU cycles per FLOP on clients / main server (κ_k, κ_s).
     pub kappa_client: f64,
     pub kappa_server: f64,
@@ -294,6 +299,7 @@ pub mod testutil {
             main_link,
             fed_link,
             dynamics: crate::config::DynamicsConfig::default(),
+            objective: crate::config::ObjectiveConfig::default(),
             kappa_client: 1.0 / 1024.0,
             kappa_server: 1.0 / 32768.0,
             f_server: 5.0e9,

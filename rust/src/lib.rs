@@ -23,14 +23,16 @@
 //!   subchannels, Shannon rates (Eqs. 9/14), and the seeded AR(1)
 //!   shadowing process behind the round-varying simulations.
 //! * [`delay`] — the Section-V latency model (Eqs. 8–17), the E(r)
-//!   convergence-steps model, and [`delay::eval`]: the cached
-//!   delay-evaluation engine the exhaustive searches run on.
+//!   convergence-steps model, the [`delay::energy`] model (the paper's
+//!   future-work energy axis), and [`delay::eval`]: the cached
+//!   delay/energy-evaluation engine the exhaustive searches run on.
 //! * [`opt`] — Algorithm 2 (greedy subchannel assignment), the exact
 //!   convex power-control solver for P2, the joint split×rank
-//!   exhaustive scan (P3×P4), the BCD loop (Algorithm 3), baselines
-//!   a–d, and the [`opt::policy`] layer: the `AllocationPolicy` trait +
-//!   string-keyed `PolicyRegistry` every experiment selects schemes
-//!   from.
+//!   exhaustive scan (P3×P4, objective-aware), the BCD loop
+//!   (Algorithm 3), baselines a–d, the [`opt::objective`] catalogue
+//!   (delay / energy / weighted / budget), and the [`opt::policy`]
+//!   layer: the `AllocationPolicy` trait + string-keyed
+//!   `PolicyRegistry` every experiment selects schemes from.
 //! * [`runtime`] — PJRT engine: load HLO-text artifacts, compile once,
 //!   execute from the training hot path.
 //! * [`data`] — synthetic E2E-style corpus generator + byte tokenizer.

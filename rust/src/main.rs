@@ -20,15 +20,20 @@
 //! * `info`     — list available artifact variants.
 //!
 //! Scenario flags shared by `optimize`/`latency`/`sweep`/`dynamic`:
-//! `--preset <paper|dense_cell|weak_edge|asymmetric_links|many_clients|mobile_edge>`,
+//! `--preset <paper|dense_cell|weak_edge|asymmetric_links|many_clients|mobile_edge|battery_edge>`,
 //! `--config <toml>`, `--clients`, `--seed`, `--model`, `--batch`,
-//! `--local-steps`. Policy flags: `--policy`/`--policies` (names from
-//! the registry, comma-separated, or `all`) and `--draws` (baseline
-//! averaging). `sweep` additionally takes `--threads` (grid workers;
-//! 0 = all cores); infeasible grid points are reported as skipped rows
+//! `--local-steps`, plus the objective flags `--objective
+//! <delay|energy|weighted[:λ]|budget[:J]>`, `--lambda <s/J>`,
+//! `--energy-budget <J>` and `--zeta <J·s²/cycle³>` (the energy
+//! model's switched capacitance). Policy flags: `--policy`/`--policies`
+//! (names from the registry, comma-separated, or `all`) and `--draws`
+//! (baseline averaging). `sweep` additionally takes `--threads` (grid
+//! workers; 0 = all cores) and `--energy` (adds per-policy `:energy`
+//! CSV columns); infeasible grid points are reported as skipped rows
 //! rather than aborting the sweep. `dynamic` takes `--strategies`
 //! (comma-separated strategy specs) and `--rounds-out` (per-round CSV
-//! trace of the first policy × strategy pair).
+//! trace of the first policy × strategy pair, including realized
+//! energy).
 //!
 //! Defaults reproduce the paper's Table II setup.
 
@@ -74,7 +79,7 @@ fn run() -> Result<()> {
                  train     run Algorithm 1 over an artifact variant\n\
                  optimize  solve one scenario with a named policy (default: proposed)\n\
                  latency   compare policies (proposed vs baselines a-d) on one scenario\n\
-                 sweep     sweep policies along an axis (--axis, --values, --threads)\n\
+                 sweep     sweep policies along an axis (--axis, --values, --threads, --energy)\n\
                  dynamic   simulate round-varying dynamics, comparing re-opt strategies\n\
                  table3    print the GPT2-S complexity table (Table III)\n\
                  info      list artifact variants"
@@ -168,22 +173,27 @@ fn cmd_optimize(args: &mut Args) -> Result<()> {
     let reg = registry_for(builder.config(), draws);
     let out = reg.get(&policy_name)?.solve(&scn, &conv)?;
 
+    let objective = sfllm::opt::Objective::from_config(&scn.objective)?;
     match &out.trajectory {
         Some(traj) => {
             println!("{policy_name} converged in {} iterations", out.iterations);
             println!("objective trajectory: {traj:?}");
         }
         None => println!(
-            "{policy_name}: mean objective over {} seeded draws {:.2} s; \
+            "{policy_name}: mean objective over {} seeded draws {:.2}; \
              showing the best draw's allocation",
             out.iterations, out.objective
         ),
     }
     println!(
-        "chosen: split l_c={} rank r={}  ->  total delay {:.2} s",
+        "chosen: split l_c={} rank r={}  ->  total delay {:.2} s, \
+         energy {:.2} kJ (objective {}: {:.2})",
         out.alloc.l_c,
         out.alloc.rank,
-        scn.total_delay(&out.alloc, &conv)
+        out.delay,
+        out.energy / 1e3,
+        objective.label(),
+        out.objective
     );
     for k in 0..scn.k() {
         println!(
@@ -215,17 +225,25 @@ fn cmd_latency(args: &mut Args) -> Result<()> {
         bail!("scenario could not be evaluated");
     };
 
-    println!("total training delay (s), lower is better:");
+    let objective = sfllm::opt::Objective::from_config(&builder.config().objective)?;
+    println!(
+        "objective '{}' (lower is better), with delay/energy breakdown:",
+        objective.label()
+    );
     let objectives = point.objectives();
     let proposed = report
         .policy_names
         .iter()
         .position(|n| n == "proposed")
         .map(|i| objectives[i]);
-    for (name, t) in report.policy_names.iter().zip(&objectives) {
+    for (i, (name, t)) in report.policy_names.iter().zip(&objectives).enumerate() {
+        let o = &point.outcomes[i];
+        let detail = format!("delay {:9.2} s  energy {:9.2} kJ", o.delay, o.energy / 1e3);
         match proposed {
-            Some(p) if p > 0.0 => println!("  {name:12} {t:10.2}  x{:.2}", t / p),
-            _ => println!("  {name:12} {t:10.2}"),
+            Some(p) if p > 0.0 => {
+                println!("  {name:12} {t:10.2}  x{:.2}  ({detail})", t / p)
+            }
+            _ => println!("  {name:12} {t:10.2}  ({detail})"),
         }
     }
     if let Some(path) = out {
@@ -251,6 +269,7 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
     let spec = args.str_or("policies", "all");
     let draws = args.usize_or("draws", 5)?;
     let threads = args.usize_or("threads", 0)?;
+    let energy = args.flag("energy");
     let out = args.str_or("out", "results/sweep.csv");
     let json = args.get("json");
     let builder = builder_from_args(args)?;
@@ -261,6 +280,7 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
         .over(SweepAxis::by_name(&axis_name, &values)?)
         .policies(reg.resolve(&spec)?)
         .threads(threads)
+        .report_energy(energy)
         .run()?;
     report.print_table();
     if !report.errors.is_empty() {
@@ -375,13 +395,14 @@ fn cmd_dynamic(args: &mut Args) -> Result<()> {
         let run = sim.run(inners[0].as_ref(), strategies[0])?;
         let mut w = CsvWriter::create(
             &path,
-            &["round", "weight", "delay_s", "l_c", "rank", "active", "resolved"],
+            &["round", "weight", "delay_s", "energy_j", "l_c", "rank", "active", "resolved"],
         )?;
         for r in &run.rounds {
             w.row_f64(&[
                 r.round as f64,
                 r.weight,
                 r.delay,
+                r.energy,
                 r.l_c as f64,
                 r.rank as f64,
                 r.active as f64,
@@ -391,10 +412,11 @@ fn cmd_dynamic(args: &mut Args) -> Result<()> {
         w.flush()?;
         println!(
             "per-round trace of {}+{} written to {path} \
-             (realized {:.2} s vs static prediction {:.2} s)",
+             (realized {:.2} s / {:.2} kJ vs static prediction {:.2} s)",
             inners[0].name(),
             strategies[0].label(),
             run.realized_delay,
+            run.realized_energy / 1e3,
             run.static_prediction
         );
     }

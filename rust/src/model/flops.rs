@@ -184,6 +184,11 @@ pub struct WorkloadTable {
     server_fwd: Vec<f64>,
     server_bwd: Vec<f64>,
     adapter_bits: Vec<f64>,
+    /// Energy-side sum `client_fwd + client_bwd` — the per-sample FLOPs
+    /// the compute-energy model `ζ·f²·κ·b·Φ` bills a client for, stored
+    /// pre-added so `DelayEvaluator::eval_energy` replicates
+    /// `delay::energy::round_energy`'s `(fwd + bwd)` bit for bit.
+    client_energy: Vec<f64>,
     /// Per-l_c activation upload bits (rank-independent), L+1 entries.
     act_bits: Vec<f64>,
 }
@@ -201,6 +206,7 @@ impl WorkloadTable {
             server_fwd: Vec::with_capacity(cells),
             server_bwd: Vec::with_capacity(cells),
             adapter_bits: Vec::with_capacity(cells),
+            client_energy: Vec::with_capacity(cells),
             act_bits: (0..=l_max).map(|l| profile.activation_bits(l)).collect(),
         };
         for l_c in 0..=l_max {
@@ -210,6 +216,8 @@ impl WorkloadTable {
                 t.server_fwd.push(profile.server_fwd_flops(l_c, r));
                 t.server_bwd.push(profile.server_bwd_flops(l_c, r));
                 t.adapter_bits.push(profile.client_adapter_bits(l_c, r));
+                t.client_energy
+                    .push(profile.client_fwd_flops(l_c, r) + profile.client_bwd_flops(l_c, r));
             }
         }
         t
@@ -249,6 +257,12 @@ impl WorkloadTable {
 
     pub fn adapter_bits(&self, l_c: usize, ri: usize) -> f64 {
         self.adapter_bits[self.idx(l_c, ri)]
+    }
+
+    /// `client_fwd_flops + client_bwd_flops` — the energy model's
+    /// per-sample client FLOPs, pre-added at table build.
+    pub fn client_energy_flops(&self, l_c: usize, ri: usize) -> f64 {
+        self.client_energy[self.idx(l_c, ri)]
     }
 
     pub fn activation_bits(&self, l_c: usize) -> f64 {
@@ -352,6 +366,10 @@ mod tests {
                     (t.server_fwd_flops(l_c, ri), p.server_fwd_flops(l_c, r)),
                     (t.server_bwd_flops(l_c, ri), p.server_bwd_flops(l_c, r)),
                     (t.adapter_bits(l_c, ri), p.client_adapter_bits(l_c, r)),
+                    (
+                        t.client_energy_flops(l_c, ri),
+                        p.client_fwd_flops(l_c, r) + p.client_bwd_flops(l_c, r),
+                    ),
                 ] {
                     assert_eq!(got.to_bits(), want.to_bits(), "l_c={l_c} r={r}");
                 }

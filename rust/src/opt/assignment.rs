@@ -220,6 +220,7 @@ mod tests {
             main_link,
             fed_link,
             dynamics: crate::config::DynamicsConfig::default(),
+            objective: crate::config::ObjectiveConfig::default(),
             kappa_client: 1.0 / 1024.0,
             kappa_server: 1.0 / 32768.0,
             f_server: 5e9,

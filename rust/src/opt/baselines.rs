@@ -12,11 +12,19 @@
 //! assignments still give each client at least one subchannel per link
 //! (otherwise its delay is unboundedly infinite and the comparison
 //! collapses to a degenerate case the paper clearly doesn't plot).
+//!
+//! Every baseline scores its draw under the scenario's
+//! [`crate::opt::Objective`] — the "proposed" blocks of b/c/d optimize
+//! the same objective the proposed scheme does, so a baseline column
+//! next to an energy-objective `proposed` column is an apples-to-apples
+//! comparison. Under the default delay objective every draw is
+//! bit-identical to the pure-delay baselines.
 
 use anyhow::Result;
 
 use crate::delay::{Allocation, ConvergenceModel, DelayEvaluator, Scenario, WorkloadCache};
 use crate::opt::bcd;
+use crate::opt::objective::{score_alloc, Objective};
 use crate::opt::power;
 use crate::util::rng::Rng;
 
@@ -56,16 +64,17 @@ fn random_alloc(scn: &Scenario, ranks: &[usize], rng: &mut Rng) -> Allocation {
     alloc
 }
 
-/// Baseline a: everything random.
+/// Baseline a: everything random, scored under the scenario objective.
 pub fn baseline_a(
     scn: &Scenario,
     conv: &ConvergenceModel,
     ranks: &[usize],
     rng: &mut Rng,
-) -> (Allocation, f64) {
+) -> Result<(Allocation, f64)> {
+    let objective = Objective::from_config(&scn.objective)?;
     let alloc = random_alloc(scn, ranks, rng);
-    let t = scn.total_delay(&alloc, conv);
-    (alloc, t)
+    let t = score_alloc(scn, &alloc, conv, &objective);
+    Ok((alloc, t))
 }
 
 /// Baseline b: random subchannels + PSD; proposed (exhaustive joint)
@@ -76,15 +85,16 @@ pub fn baseline_b(
     ranks: &[usize],
     rng: &mut Rng,
     cache: &WorkloadCache,
-) -> (Allocation, f64) {
+) -> Result<(Allocation, f64)> {
+    let objective = Objective::from_config(&scn.objective)?;
     let mut alloc = random_alloc(scn, ranks, rng);
     // one joint split×rank scan on the cached evaluator — the true grid
     // argmin, which the old alternating 1-D scans only approximated
     let ev = DelayEvaluator::new(scn, &alloc, conv, cache.table_for(&scn.profile, ranks));
-    let (l, r, t) = ev.best_split_rank();
-    alloc.l_c = l;
-    alloc.rank = r;
-    (alloc, t)
+    let choice = ev.best_split_rank_obj(&objective);
+    alloc.l_c = choice.l_c;
+    alloc.rank = choice.rank;
+    Ok((alloc, choice.score))
 }
 
 /// Baseline c: random split; proposed subchannel/power/rank via BCD
@@ -96,11 +106,12 @@ pub fn baseline_c(
     rng: &mut Rng,
     cache: &WorkloadCache,
 ) -> Result<(Allocation, f64)> {
+    let objective = Objective::from_config(&scn.objective)?;
     let table = cache.table_for(&scn.profile, ranks);
     let l = scn.profile.blocks.len();
     let frozen_l_c = 1 + rng.below(l.saturating_sub(1).max(1));
     let mut alloc = bcd::initial_alloc(scn, frozen_l_c, 4);
-    let mut obj = scn.total_delay(&alloc, conv);
+    let mut obj = score_alloc(scn, &alloc, conv, &objective);
     for _ in 0..8 {
         let prev = obj;
         let a = crate::opt::assignment::algorithm2(scn, alloc.l_c, alloc.rank);
@@ -110,13 +121,13 @@ pub fn baseline_c(
         let ps = power::solve_power(scn, &cand)?;
         cand.psd_main = ps.psd_main;
         cand.psd_fed = ps.psd_fed;
-        let o = scn.total_delay(&cand, conv);
+        let o = score_alloc(scn, &cand, conv, &objective);
         if o <= obj {
             alloc = cand;
             obj = o;
         }
         let ev = DelayEvaluator::new(scn, &alloc, conv, table.clone());
-        let (r, t_r) = ev.best_rank(alloc.l_c);
+        let (r, t_r) = ev.best_rank_obj(alloc.l_c, &objective);
         if t_r <= obj {
             alloc.rank = r;
             obj = t_r;
@@ -136,10 +147,11 @@ pub fn baseline_d(
     rng: &mut Rng,
     cache: &WorkloadCache,
 ) -> Result<(Allocation, f64)> {
+    let objective = Objective::from_config(&scn.objective)?;
     let table = cache.table_for(&scn.profile, ranks);
     let frozen_rank = *rng.choose(ranks);
     let mut alloc = bcd::initial_alloc(scn, (scn.profile.blocks.len() / 2).max(1), frozen_rank);
-    let mut obj = scn.total_delay(&alloc, conv);
+    let mut obj = score_alloc(scn, &alloc, conv, &objective);
     for _ in 0..8 {
         let prev = obj;
         let a = crate::opt::assignment::algorithm2(scn, alloc.l_c, alloc.rank);
@@ -149,13 +161,13 @@ pub fn baseline_d(
         let ps = power::solve_power(scn, &cand)?;
         cand.psd_main = ps.psd_main;
         cand.psd_fed = ps.psd_fed;
-        let o = scn.total_delay(&cand, conv);
+        let o = score_alloc(scn, &cand, conv, &objective);
         if o <= obj {
             alloc = cand;
             obj = o;
         }
         let ev = DelayEvaluator::new(scn, &alloc, conv, table.clone());
-        let (l_c, t_s) = ev.best_split(alloc.rank);
+        let (l_c, t_s) = ev.best_split_obj(alloc.rank, &objective);
         if t_s <= obj {
             alloc.l_c = l_c;
             obj = t_s;
@@ -180,8 +192,8 @@ mod tests {
         let conv = ConvergenceModel::paper_default();
         let cache = WorkloadCache::new();
         let mut rng = Rng::new(1);
-        let (a, _) = baseline_a(&scn, &conv, &RANKS, &mut rng);
-        let (b, _) = baseline_b(&scn, &conv, &RANKS, &mut rng, &cache);
+        let (a, _) = baseline_a(&scn, &conv, &RANKS, &mut rng).unwrap();
+        let (b, _) = baseline_b(&scn, &conv, &RANKS, &mut rng, &cache).unwrap();
         let (c, _) = baseline_c(&scn, &conv, &RANKS, &mut rng, &cache).unwrap();
         let (d, _) = baseline_d(&scn, &conv, &RANKS, &mut rng, &cache).unwrap();
         for (name, alloc) in [("a", &a), ("b", &b), ("c", &c), ("d", &d)] {
@@ -198,7 +210,7 @@ mod tests {
         let conv = ConvergenceModel::paper_default();
         let cache = WorkloadCache::new();
         let mut rng = Rng::new(9);
-        let (alloc, t) = baseline_b(&scn, &conv, &RANKS, &mut rng, &cache);
+        let (alloc, t) = baseline_b(&scn, &conv, &RANKS, &mut rng, &cache).unwrap();
         assert_eq!(t.to_bits(), scn.total_delay(&alloc, &conv).to_bits());
         for l_c in scn.profile.split_candidates() {
             for &r in &RANKS {
@@ -221,8 +233,8 @@ mod tests {
         let mut acc = [0.0f64; 4];
         for d in 0..5u64 {
             let mut rng = Rng::new(3 ^ d.wrapping_mul(0x9E3779B97F4A7C15));
-            acc[0] += baseline_a(&scn, &conv, &RANKS, &mut rng).1;
-            acc[1] += baseline_b(&scn, &conv, &RANKS, &mut rng, &cache).1;
+            acc[0] += baseline_a(&scn, &conv, &RANKS, &mut rng).unwrap().1;
+            acc[1] += baseline_b(&scn, &conv, &RANKS, &mut rng, &cache).unwrap().1;
             acc[2] += baseline_c(&scn, &conv, &RANKS, &mut rng, &cache).unwrap().1;
             acc[3] += baseline_d(&scn, &conv, &RANKS, &mut rng, &cache).unwrap().1;
         }

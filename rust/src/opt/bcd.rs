@@ -17,10 +17,20 @@
 //! block update if it does not worsen the objective, which makes the
 //! trajectory monotonically non-increasing (asserted by the property
 //! tests) while preserving the paper's update order.
+//!
+//! The loop is objective-generic ([`crate::opt::Objective`]): the
+//! P1/P2 block is scored through `objective::score_alloc` (so a comm
+//! block that wins delay but loses the weighted or budgeted score is
+//! rejected — P2 itself still solves the paper's min-max delay
+//! program, the objective enters at the acceptance step), and P3+P4
+//! run as [`DelayEvaluator::best_split_rank_obj`]. Under the default
+//! [`Objective::Delay`] every comparison is bit-identical to the
+//! pure-delay loop.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::delay::{Allocation, ConvergenceModel, DelayEvaluator, Scenario, WorkloadCache};
+use crate::opt::objective::{score_alloc, Objective};
 use crate::opt::{assignment, power};
 
 /// Options for the BCD loop.
@@ -35,6 +45,10 @@ pub struct BcdOptions {
     /// Initial split point and rank.
     pub init_l_c: usize,
     pub init_rank: usize,
+    /// Optimization objective; `None` (the default) resolves the
+    /// scenario's own `objective` config — which is pure delay unless
+    /// a config/preset/axis says otherwise.
+    pub objective: Option<Objective>,
 }
 
 impl Default for BcdOptions {
@@ -45,6 +59,7 @@ impl Default for BcdOptions {
             ranks: vec![1, 2, 4, 6, 8],
             init_l_c: 0, // 0 = pick the middle of the model
             init_rank: 4,
+            objective: None,
         }
     }
 }
@@ -53,8 +68,13 @@ impl Default for BcdOptions {
 #[derive(Clone, Debug)]
 pub struct BcdResult {
     pub alloc: Allocation,
-    /// Final objective: total training delay T (Eq. 17), seconds.
+    /// Final objective score (equals `delay` under the delay
+    /// objective; joules under `energy`; etc.).
     pub objective: f64,
+    /// Total training delay T (Eq. 17) of `alloc`, seconds.
+    pub delay: f64,
+    /// Total training energy of `alloc` at the scenario's ζ, joules.
+    pub energy: f64,
     /// Objective after every outer iteration (monotone non-increasing).
     pub trajectory: Vec<f64>,
     pub iterations: usize,
@@ -129,6 +149,10 @@ pub fn optimize_cached(
     opts: &BcdOptions,
     cache: &WorkloadCache,
 ) -> Result<BcdResult> {
+    let objective = match opts.objective {
+        Some(o) => o,
+        None => Objective::from_config(&scn.objective)?,
+    };
     let table = cache.table_for(&scn.profile, &opts.ranks);
     let init_l_c = if opts.init_l_c == 0 {
         (scn.profile.blocks.len() / 2).max(1)
@@ -136,7 +160,7 @@ pub fn optimize_cached(
         opts.init_l_c
     };
     let mut alloc = initial_alloc(scn, init_l_c, opts.init_rank);
-    let mut obj = scn.total_delay(&alloc, conv);
+    let mut obj = score_alloc(scn, &alloc, conv, &objective);
     let mut trajectory = vec![obj];
     let mut iters = 0;
 
@@ -145,7 +169,9 @@ pub fn optimize_cached(
         let prev_obj = obj;
 
         // --- P1 + P2: assignment then exact power, accepted only if
-        // they do not worsen the objective (BCD safeguard).
+        // they do not worsen the objective (BCD safeguard). P2 solves
+        // the paper's min-max delay program; the objective decides at
+        // the acceptance step whether its power profile is kept.
         let mut cand = alloc.clone();
         let a = assignment::algorithm2(scn, cand.l_c, cand.rank);
         cand.assign_main = a.assign_main;
@@ -153,18 +179,19 @@ pub fn optimize_cached(
         let ps = power::solve_power(scn, &cand)?;
         cand.psd_main = ps.psd_main;
         cand.psd_fed = ps.psd_fed;
-        let cand_obj = scn.total_delay(&cand, conv);
+        let cand_obj = score_alloc(scn, &cand, conv, &objective);
         if cand_obj <= obj {
             alloc = cand;
             obj = cand_obj;
         } else {
             // keep assignment fixed, still re-solve power exactly for the
-            // current assignment (never hurts: P2 is exact)
+            // current assignment (never hurts under the delay objective:
+            // P2 is exact; other objectives judge it at acceptance)
             let ps = power::solve_power(scn, &alloc)?;
             let mut cand2 = alloc.clone();
             cand2.psd_main = ps.psd_main;
             cand2.psd_fed = ps.psd_fed;
-            let o2 = scn.total_delay(&cand2, conv);
+            let o2 = score_alloc(scn, &cand2, conv, &objective);
             if o2 <= obj {
                 alloc = cand2;
                 obj = o2;
@@ -177,11 +204,11 @@ pub fn optimize_cached(
         // joint argmin is never worse). The communication block just
         // got fixed above, so the evaluator is valid for the whole scan.
         let ev = DelayEvaluator::new(scn, &alloc, conv, table.clone());
-        let (l_star, r_star, t_joint) = ev.best_split_rank();
-        if t_joint <= obj {
-            alloc.l_c = l_star;
-            alloc.rank = r_star;
-            obj = t_joint;
+        let choice = ev.best_split_rank_obj(&objective);
+        if choice.score <= obj {
+            alloc.l_c = choice.l_c;
+            alloc.rank = choice.rank;
+            obj = choice.score;
         }
 
         trajectory.push(obj);
@@ -190,9 +217,25 @@ pub fn optimize_cached(
         }
     }
 
+    if !obj.is_finite() {
+        bail!(
+            "BCD objective '{}' is non-finite ({obj}): the scenario is \
+             infeasible under this objective (starved uplink, or an \
+             energy budget no candidate meets)",
+            objective.label()
+        );
+    }
+    // final report quantities, on the same cached engine (eval /
+    // eval_energy are bit-identical to the uncached totals)
+    let ev = DelayEvaluator::new(scn, &alloc, conv, table);
+    let delay = ev.eval(alloc.l_c, alloc.rank);
+    let energy = ev.eval_energy(alloc.l_c, alloc.rank);
+
     Ok(BcdResult {
         alloc,
         objective: obj,
+        delay,
+        energy,
         trajectory,
         iterations: iters,
     })
@@ -313,6 +356,108 @@ mod tests {
         assert_eq!(a.objective.to_bits(), b.objective.to_bits());
         assert_eq!(a.objective.to_bits(), c.objective.to_bits());
         assert_eq!(cache.tables(), 1, "repeat solves must share one table");
+    }
+
+    #[test]
+    fn result_reports_delay_and_energy_of_the_final_alloc() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let res = optimize(&scn, &conv, &BcdOptions::default()).unwrap();
+        // delay objective: score IS the delay
+        assert_eq!(res.objective.to_bits(), res.delay.to_bits());
+        assert_eq!(
+            res.delay.to_bits(),
+            scn.total_delay(&res.alloc, &conv).to_bits()
+        );
+        assert_eq!(
+            res.energy.to_bits(),
+            crate::delay::energy::total_energy(&scn, &res.alloc, &conv, scn.objective.zeta)
+                .to_bits()
+        );
+        assert!(res.energy.is_finite() && res.energy > 0.0);
+    }
+
+    #[test]
+    fn weighted_lambda_zero_matches_the_delay_objective_bit_for_bit() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let base = optimize(&scn, &conv, &BcdOptions::default()).unwrap();
+        let w0 = optimize(
+            &scn,
+            &conv,
+            &BcdOptions {
+                objective: Some(Objective::Weighted { lambda: 0.0 }),
+                ..BcdOptions::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(base.objective.to_bits(), w0.objective.to_bits());
+        assert_eq!(base.alloc.l_c, w0.alloc.l_c);
+        assert_eq!(base.alloc.rank, w0.alloc.rank);
+        assert_eq!(base.trajectory.len(), w0.trajectory.len());
+        for (a, b) in base.trajectory.iter().zip(&w0.trajectory) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn energy_objective_descends_energy_and_reports_it_as_the_score() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let init = initial_alloc(&scn, 6, 4);
+        let e_init =
+            crate::delay::energy::total_energy(&scn, &init, &conv, scn.objective.zeta);
+        let e = optimize(
+            &scn,
+            &conv,
+            &BcdOptions {
+                objective: Some(Objective::Energy),
+                init_l_c: 6,
+                init_rank: 4,
+                ..BcdOptions::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(e.objective.to_bits(), e.energy.to_bits());
+        // the acceptance safeguard makes the energy trajectory monotone
+        // non-increasing from the initial allocation's energy
+        assert!(
+            e.energy <= e_init * (1.0 + 1e-12),
+            "final energy {} above initial {}",
+            e.energy,
+            e_init
+        );
+        for w in e.trajectory.windows(2) {
+            assert!(w[1] <= w[0] * (1.0 + 1e-12), "trajectory rose: {:?}", e.trajectory);
+        }
+        // and the final (l_c, rank) is energy-grid-optimal for the
+        // final communication block
+        let ev = DelayEvaluator::build(&scn, &e.alloc, &conv, &[1, 2, 4, 6, 8]);
+        for l_c in scn.profile.split_candidates() {
+            for &r in &[1usize, 2, 4, 6, 8] {
+                assert!(
+                    ev.eval_energy(l_c, r) >= e.energy * (1.0 - 1e-12),
+                    "({l_c}, {r}) beats the energy BCD result"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn impossible_energy_budget_fails_with_an_explicit_error() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let err = optimize(
+            &scn,
+            &conv,
+            &BcdOptions {
+                objective: Some(Objective::EnergyBudget { joules: 1e-30 }),
+                ..BcdOptions::default()
+            },
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("non-finite") || msg.contains("infeasible"), "{msg}");
     }
 
     #[test]

@@ -15,6 +15,10 @@
 //! * [`bcd`] — Algorithm 3: the alternating (block-coordinate-descent)
 //!   loop, with P3+P4 run as one **joint** split×rank exhaustive scan
 //!   on the cached [`crate::delay::DelayEvaluator`];
+//! * [`objective`] — the optimization-objective catalogue
+//!   ([`Objective`]: delay, energy, λ-weighted sum, energy budget)
+//!   every scoring path shares — the energy axis the paper names as
+//!   future work;
 //! * [`baselines`] — baselines a–d from Section VII-C (the raw seeded
 //!   draw functions);
 //! * [`policy`] — the experiment-facing API: the [`AllocationPolicy`]
@@ -26,10 +30,12 @@
 pub mod assignment;
 pub mod baselines;
 pub mod bcd;
+pub mod objective;
 pub mod policy;
 pub mod power;
 pub mod rank;
 pub mod split;
 
 pub use bcd::{BcdOptions, BcdResult};
+pub use objective::Objective;
 pub use policy::{AllocationPolicy, PolicyOutcome, PolicyRegistry};

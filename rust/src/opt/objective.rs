@@ -1,0 +1,271 @@
+//! Optimization objectives over the (delay, energy) pair — the energy
+//! extension the paper names as future work ("exploring an
+//! energy-efficient SflLLM framework"), promoted to a first-class axis
+//! of the Section-VI optimizer.
+//!
+//! Every objective is a scalarization of the two Section-V totals:
+//! total training delay `T` (Eq. 17) and total training energy `E`
+//! (`delay::energy::total_energy`, same `E(r)·(I·…)` structure):
+//!
+//! * [`Objective::Delay`] — the paper's problem P: minimize `T`;
+//! * [`Objective::Energy`] — minimize `E`;
+//! * [`Objective::Weighted`] — minimize `T + λ·E` (λ in s/J; λ = 0 is
+//!   **exactly** the delay objective, bit for bit);
+//! * [`Objective::EnergyBudget`] — minimize `T` subject to
+//!   `E ≤ budget`; over-budget candidates score `+∞`, so an exhausted
+//!   budget surfaces as an explicit infeasibility error rather than a
+//!   silently wrong allocation.
+//!
+//! The scoring contract is shared by every consumer — the BCD
+//! acceptance steps (P1/P2), the joint P3×P4 grid scan
+//! ([`crate::delay::DelayEvaluator::best_split_rank_obj`]), the
+//! baselines, and the dynamic engine's re-opt adoption — so "optimal
+//! under objective O" means the same thing on every path.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::ObjectiveConfig;
+use crate::delay::{Allocation, ConvergenceModel, Scenario};
+
+/// A scalarization of (total delay T, total energy E). See the module
+/// docs for the catalogue.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Objective {
+    /// Minimize T (the paper's problem P).
+    Delay,
+    /// Minimize E.
+    Energy,
+    /// Minimize `T + lambda·E` (lambda in seconds per joule).
+    Weighted { lambda: f64 },
+    /// Minimize T subject to `E ≤ joules`.
+    EnergyBudget { joules: f64 },
+}
+
+impl Objective {
+    /// Parse a CLI/config spec: `delay`, `energy`, `weighted:<lambda>`,
+    /// `budget:<joules>`. Bare `weighted` / `budget` are only valid
+    /// through [`Objective::from_config`], which supplies the parameter
+    /// from the config's `lambda` / `budget_j` fields.
+    pub fn parse(spec: &str) -> Result<Objective> {
+        Objective::parse_with(spec, None, None)
+    }
+
+    /// Resolve a config section: the `kind` spec, with bare `weighted` /
+    /// `budget` taking their parameter from the sibling fields.
+    pub fn from_config(cfg: &ObjectiveConfig) -> Result<Objective> {
+        Objective::parse_with(&cfg.kind, Some(cfg.lambda), Some(cfg.budget_j))
+    }
+
+    fn parse_with(
+        spec: &str,
+        default_lambda: Option<f64>,
+        default_budget: Option<f64>,
+    ) -> Result<Objective> {
+        let spec = spec.trim();
+        let (head, arg) = match spec.split_once(':') {
+            Some((h, a)) => (h.trim(), Some(a.trim())),
+            None => (spec, None),
+        };
+        let num = |what: &str, arg: Option<&str>, default: Option<f64>| -> Result<f64> {
+            match arg {
+                Some(a) => a
+                    .parse::<f64>()
+                    .map_err(|e| anyhow!("bad {what} '{a}': {e}")),
+                None => default.ok_or_else(|| {
+                    anyhow!("objective '{spec}' needs an inline parameter (e.g. '{spec}:0.05')")
+                }),
+            }
+        };
+        Ok(match head {
+            "delay" if arg.is_none() => Objective::Delay,
+            "energy" if arg.is_none() => Objective::Energy,
+            "weighted" => {
+                let lambda = num("weighted lambda", arg, default_lambda)?;
+                if !lambda.is_finite() || lambda < 0.0 {
+                    bail!("weighted objective lambda must be finite and >= 0, got {lambda}");
+                }
+                Objective::Weighted { lambda }
+            }
+            "budget" | "energy_budget" => {
+                let joules = num("energy budget", arg, default_budget)?;
+                if joules.is_nan() || joules <= 0.0 {
+                    bail!("energy budget must be > 0 joules (or inf), got {joules}");
+                }
+                Objective::EnergyBudget { joules }
+            }
+            _ => bail!(
+                "unknown objective '{spec}' \
+                 (available: delay, energy, weighted:<lambda>, budget:<joules>)"
+            ),
+        })
+    }
+
+    /// A spec string [`Objective::parse`] round-trips.
+    pub fn label(&self) -> String {
+        match self {
+            Objective::Delay => "delay".to_string(),
+            Objective::Energy => "energy".to_string(),
+            Objective::Weighted { lambda } => format!("weighted:{lambda}"),
+            Objective::EnergyBudget { joules } => format!("budget:{joules}"),
+        }
+    }
+
+    /// Whether [`Objective::score`] reads its `energy` argument. When
+    /// this is `false` callers may pass any placeholder (0.0) — the
+    /// delay objective, λ = 0, and an infinite budget never consume
+    /// energy, which is what keeps those paths bit-identical to the
+    /// pure-delay scans.
+    pub fn needs_energy(&self) -> bool {
+        match self {
+            Objective::Delay => false,
+            Objective::Energy => true,
+            Objective::Weighted { lambda } => *lambda != 0.0,
+            Objective::EnergyBudget { joules } => joules.is_finite(),
+        }
+    }
+
+    /// The scalar this objective minimizes, given the candidate's total
+    /// delay (s) and total energy (J). Infinite inputs propagate as
+    /// infinite scores (explicit infeasibility); no combination can
+    /// produce NaN — the λ = 0 and infinite-budget branches return the
+    /// delay untouched instead of evaluating `0·∞`.
+    pub fn score(&self, delay: f64, energy: f64) -> f64 {
+        match self {
+            Objective::Delay => delay,
+            Objective::Energy => energy,
+            Objective::Weighted { lambda } => {
+                if *lambda == 0.0 {
+                    delay
+                } else {
+                    delay + lambda * energy
+                }
+            }
+            Objective::EnergyBudget { joules } => {
+                if joules.is_infinite() || energy <= *joules {
+                    delay
+                } else {
+                    f64::INFINITY
+                }
+            }
+        }
+    }
+}
+
+/// Score one concrete allocation under `obj`: Eq. 17's total delay,
+/// plus the energy total at the scenario's ζ when the objective
+/// consumes it. This is the uncached counterpart of the evaluator's
+/// grid scans, used by the BCD P1/P2 acceptance steps and the
+/// baselines' final scoring; under [`Objective::Delay`] it is exactly
+/// `Scenario::total_delay` (same bits).
+pub fn score_alloc(
+    scn: &Scenario,
+    alloc: &Allocation,
+    conv: &ConvergenceModel,
+    obj: &Objective,
+) -> f64 {
+    if !obj.needs_energy() {
+        return obj.score(scn.total_delay(alloc, conv), 0.0);
+    }
+    // both totals from one phase-delay pass; the delay expression
+    // replicates `Scenario::total_delay` operation for operation (same
+    // bits), so energy-aware scoring costs one evaluation, not two
+    let ph = scn.phase_delays(alloc);
+    let delay = conv.rounds(alloc.rank) * (scn.local_steps as f64 * ph.t_local() + ph.t_fed());
+    let energy =
+        crate::delay::energy::total_energy_with_phases(scn, alloc, conv, scn.objective.zeta, &ph);
+    obj.score(delay, energy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_round_trip_and_reject_garbage() {
+        for spec in ["delay", "energy", "weighted:0.25", "budget:5000"] {
+            let o = Objective::parse(spec).unwrap();
+            assert_eq!(o.label(), spec);
+            assert_eq!(Objective::parse(&o.label()).unwrap(), o);
+        }
+        assert_eq!(
+            Objective::parse(" weighted: 0.5 ").unwrap(),
+            Objective::Weighted { lambda: 0.5 }
+        );
+        assert_eq!(
+            Objective::parse("energy_budget:10").unwrap(),
+            Objective::EnergyBudget { joules: 10.0 }
+        );
+        for bad in [
+            "nope",
+            "weighted",   // bare spec without config defaults
+            "weighted:-1",
+            "weighted:nan",
+            "budget",
+            "budget:0",
+            "budget:-5",
+            "delay:2",
+            "energy:1",
+        ] {
+            assert!(Objective::parse(bad).is_err(), "{bad} should fail");
+        }
+    }
+
+    #[test]
+    fn from_config_supplies_bare_parameters() {
+        let mut cfg = ObjectiveConfig::default();
+        assert_eq!(Objective::from_config(&cfg).unwrap(), Objective::Delay);
+        cfg.kind = "weighted".to_string();
+        cfg.lambda = 0.1;
+        assert_eq!(
+            Objective::from_config(&cfg).unwrap(),
+            Objective::Weighted { lambda: 0.1 }
+        );
+        cfg.kind = "weighted:0.7".to_string();
+        // inline parameter beats the field
+        assert_eq!(
+            Objective::from_config(&cfg).unwrap(),
+            Objective::Weighted { lambda: 0.7 }
+        );
+        cfg.kind = "budget".to_string();
+        cfg.budget_j = 123.0;
+        assert_eq!(
+            Objective::from_config(&cfg).unwrap(),
+            Objective::EnergyBudget { joules: 123.0 }
+        );
+        cfg.lambda = -3.0;
+        cfg.kind = "weighted".to_string();
+        assert!(Objective::from_config(&cfg).is_err(), "negative lambda");
+    }
+
+    #[test]
+    fn score_semantics_and_no_nan() {
+        let d = 100.0;
+        let e = 3000.0;
+        assert_eq!(Objective::Delay.score(d, e), d);
+        assert_eq!(Objective::Energy.score(d, e), e);
+        assert_eq!(Objective::Weighted { lambda: 0.01 }.score(d, e), d + 0.01 * e);
+        // lambda = 0 returns the delay bits untouched, even against an
+        // infinite energy (the 0*inf = NaN trap)
+        let w0 = Objective::Weighted { lambda: 0.0 };
+        assert_eq!(w0.score(d, f64::INFINITY).to_bits(), d.to_bits());
+        assert!(!w0.needs_energy());
+        // budget: pass-through under budget, +inf over it, and an
+        // infinite budget never consumes energy
+        let b = Objective::EnergyBudget { joules: 5000.0 };
+        assert_eq!(b.score(d, e), d);
+        assert!(b.score(d, 6000.0).is_infinite());
+        assert!(b.needs_energy());
+        let b_inf = Objective::EnergyBudget { joules: f64::INFINITY };
+        assert!(!b_inf.needs_energy());
+        assert_eq!(b_inf.score(d, f64::INFINITY).to_bits(), d.to_bits());
+        // infinite inputs propagate as infinity, never NaN
+        for obj in [
+            Objective::Delay,
+            Objective::Energy,
+            Objective::Weighted { lambda: 0.5 },
+            Objective::EnergyBudget { joules: 5000.0 },
+        ] {
+            assert!(!obj.score(f64::INFINITY, f64::INFINITY).is_nan(), "{obj:?}");
+        }
+    }
+}

@@ -32,8 +32,16 @@ pub struct PolicyOutcome {
     /// best draw's allocation while [`PolicyOutcome::objective`] is the
     /// mean over draws (the quantity the paper plots).
     pub alloc: Allocation,
-    /// Total training delay T (Eq. 17), seconds.
+    /// The objective score the policy minimized — total training delay
+    /// T (Eq. 17, seconds) under the default delay objective; joules
+    /// under `energy`; the scalarized value for `weighted`/`budget`
+    /// (see [`crate::opt::Objective`]).
     pub objective: f64,
+    /// Total training delay T (Eq. 17) of `alloc`, seconds —
+    /// regardless of the objective.
+    pub delay: f64,
+    /// Total training energy of `alloc` at the scenario's ζ, joules.
+    pub energy: f64,
     /// Objective after every outer iteration, when the policy is
     /// iterative (BCD); `None` for one-shot baselines.
     pub trajectory: Option<Vec<f64>>,
@@ -106,6 +114,8 @@ impl AllocationPolicy for Proposed {
             policy: self.name().to_string(),
             alloc: res.alloc,
             objective: res.objective,
+            delay: res.delay,
+            energy: res.energy,
             trajectory: Some(res.trajectory),
             iterations: res.iterations,
         })
@@ -189,9 +199,9 @@ impl AllocationPolicy for RandomBaseline {
         for d in 0..self.draws {
             let mut rng = self.draw_rng(d as u64);
             let (alloc, t) = match self.kind {
-                BaselineKind::A => baselines::baseline_a(scn, conv, &self.ranks, &mut rng),
+                BaselineKind::A => baselines::baseline_a(scn, conv, &self.ranks, &mut rng)?,
                 BaselineKind::B => {
-                    baselines::baseline_b(scn, conv, &self.ranks, &mut rng, cache)
+                    baselines::baseline_b(scn, conv, &self.ranks, &mut rng, cache)?
                 }
                 BaselineKind::C => {
                     baselines::baseline_c(scn, conv, &self.ranks, &mut rng, cache)?
@@ -206,10 +216,15 @@ impl AllocationPolicy for RandomBaseline {
             }
         }
         let (alloc, _) = best.expect("draws >= 1");
+        let delay = scn.total_delay(&alloc, conv);
+        let energy =
+            crate::delay::energy::total_energy(scn, &alloc, conv, scn.objective.zeta);
         Ok(PolicyOutcome {
             policy: self.name().to_string(),
             alloc,
             objective: sum / self.draws as f64,
+            delay,
+            energy,
             trajectory: None,
             iterations: self.draws,
         })
@@ -380,6 +395,52 @@ mod tests {
         }
         // proposed + all baselines share the one (profile, ranks) table
         assert_eq!(cache.tables(), 1);
+    }
+
+    #[test]
+    fn outcomes_carry_delay_and_energy_for_every_policy() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        for policy in suite().resolve("all").unwrap() {
+            let out = policy.solve(&scn, &conv).unwrap();
+            assert_eq!(
+                out.delay.to_bits(),
+                scn.total_delay(&out.alloc, &conv).to_bits(),
+                "{}",
+                out.policy
+            );
+            assert_eq!(
+                out.energy.to_bits(),
+                crate::delay::energy::total_energy(&scn, &out.alloc, &conv, scn.objective.zeta)
+                    .to_bits(),
+                "{}",
+                out.policy
+            );
+            assert!(out.energy.is_finite() && out.energy > 0.0, "{}", out.policy);
+        }
+        // under the default delay objective the proposed score IS delay
+        let p = suite().get("proposed").unwrap().solve(&scn, &conv).unwrap();
+        assert_eq!(p.objective.to_bits(), p.delay.to_bits());
+    }
+
+    #[test]
+    fn energy_objective_flows_from_the_scenario_to_every_policy() {
+        // scenario-driven objective: every registry policy minimizes
+        // energy and reports it as the score
+        let mut scn = toy_scenario();
+        scn.objective.kind = "energy".to_string();
+        let conv = ConvergenceModel::paper_default();
+        for policy in suite().resolve("all").unwrap() {
+            let out = policy.solve(&scn, &conv).unwrap();
+            assert!(out.objective.is_finite() && out.objective > 0.0, "{}", out.policy);
+            if out.policy == "proposed" {
+                assert_eq!(
+                    out.objective.to_bits(),
+                    out.energy.to_bits(),
+                    "proposed must score by energy"
+                );
+            }
+        }
     }
 
     #[test]

@@ -17,13 +17,14 @@ use crate::net::{power, ChannelModel, ChannelState, Link, SubchannelSet, Topolog
 use crate::util::rng::Rng;
 
 /// Named scenario presets (see [`ScenarioBuilder::preset`]).
-pub const PRESETS: [&str; 6] = [
+pub const PRESETS: [&str; 7] = [
     "paper",
     "dense_cell",
     "weak_edge",
     "asymmetric_links",
     "many_clients",
     "mobile_edge",
+    "battery_edge",
 ];
 
 /// Fluent scenario constructor over a [`Config`].
@@ -72,7 +73,12 @@ impl ScenarioBuilder {
     ///   (ρ = 0.85), with compute jitter and occasional dropout/return
     ///   — the FedsLLM-style mobile deployment the dynamic engine
     ///   ([`crate::sim::RoundSimulator`]) simulates; the default
-    ///   re-optimization strategy is `periodic:5`.
+    ///   re-optimization strategy is `periodic:5`;
+    /// * `battery_edge` — the energy-bound regime: 6 battery-powered
+    ///   clients (0.4–0.9 GHz) on 1 W-class radios with tight server
+    ///   power budgets, optimizing the λ-weighted delay/energy sum
+    ///   (`objective = weighted`, λ = 0.05 s/J) — the scenario family
+    ///   behind `examples/energy_tradeoff.rs`.
     pub fn preset(name: &str) -> Result<ScenarioBuilder> {
         let mut cfg = Config::paper_defaults();
         match name {
@@ -107,6 +113,16 @@ impl ScenarioBuilder {
                 cfg.system.d_max_m = 250.0;
                 cfg.system.p_th_main_dbm = 50.0;
                 cfg.system.p_th_fed_dbm = 50.0;
+            }
+            "battery_edge" => {
+                cfg.system.clients = 6;
+                cfg.system.f_client_lo = 0.4e9;
+                cfg.system.f_client_hi = 0.9e9;
+                cfg.system.p_max_dbm = 30.0; // 1 W-class mobile radio
+                cfg.system.p_th_main_dbm = 36.0; // ~4 W per server
+                cfg.system.p_th_fed_dbm = 36.0;
+                cfg.objective.kind = "weighted".to_string();
+                cfg.objective.lambda = 0.05;
             }
             "mobile_edge" => {
                 cfg.system.clients = 12;
@@ -252,6 +268,24 @@ impl ScenarioBuilder {
                 s.subch_fed
             );
         }
+        if self.cfg.train.local_steps == 0 {
+            bail!(
+                "train.local_steps must be >= 1: Eq. 17 counts I local \
+                 rounds per global round and the energy model amortizes \
+                 the federated upload over them"
+            );
+        }
+        if self.cfg.train.batch == 0 {
+            bail!("train.batch must be >= 1");
+        }
+        let objective = self.cfg.objective.clone();
+        crate::opt::Objective::from_config(&objective).context("objective")?;
+        if !objective.zeta.is_finite() || objective.zeta <= 0.0 {
+            bail!(
+                "objective.zeta must be finite and > 0 (J·s²/cycle³), got {}",
+                objective.zeta
+            );
+        }
         let mut dynamics = self.cfg.dynamics.clone();
         if !(0.0..=1.0).contains(&dynamics.rho) {
             bail!("dynamics.rho must be in [0, 1], got {}", dynamics.rho);
@@ -300,6 +334,7 @@ impl ScenarioBuilder {
             profile,
             topo,
             dynamics,
+            objective,
             main_link: Link {
                 subch: SubchannelSet::equal_split(s.bandwidth_main_hz, s.subch_main),
                 gain_product: s.gain_main,
@@ -419,11 +454,66 @@ mod tests {
         assert_eq!(scn.dynamics.strategy, "periodic:5");
         // the sigma sentinel resolves to the scenario's shadowing
         assert_eq!(scn.dynamics.shadow_sigma_db, b.config().system.shadowing_db);
-        for name in ["paper", "dense_cell", "weak_edge", "asymmetric_links", "many_clients"] {
+        for name in [
+            "paper",
+            "dense_cell",
+            "weak_edge",
+            "asymmetric_links",
+            "many_clients",
+            "battery_edge",
+        ] {
             let scn = ScenarioBuilder::preset(name).unwrap().build().unwrap();
             assert_eq!(scn.dynamics.rho, 1.0, "{name} must stay static");
             assert_eq!(scn.dynamics.dropout, 0.0, "{name} must stay static");
         }
+    }
+
+    #[test]
+    fn battery_edge_is_energy_weighted_and_other_presets_stay_delay_only() {
+        let b = ScenarioBuilder::preset("battery_edge").unwrap();
+        let scn = b.build().unwrap();
+        assert_eq!(scn.k(), 6);
+        assert_eq!(scn.objective.kind, "weighted");
+        assert_eq!(scn.objective.lambda, 0.05);
+        assert!((scn.p_max_w - 1.0).abs() < 0.01, "1 W-class radio");
+        let paper = ScenarioBuilder::preset("paper").unwrap();
+        assert!(b.config().system.f_client_hi < paper.config().system.f_client_lo);
+        for name in ["paper", "dense_cell", "weak_edge", "asymmetric_links", "mobile_edge"] {
+            let scn = ScenarioBuilder::preset(name).unwrap().build().unwrap();
+            assert_eq!(scn.objective.kind, "delay", "{name} must stay delay-only");
+        }
+    }
+
+    #[test]
+    fn degenerate_training_and_objective_configs_are_rejected() {
+        let err = ScenarioBuilder::new()
+            .tweak(|c| c.train.local_steps = 0)
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("local_steps"), "{err:#}");
+        assert!(ScenarioBuilder::new().tweak(|c| c.train.batch = 0).build().is_err());
+        let err = ScenarioBuilder::new()
+            .tweak(|c| c.objective.kind = "typo".to_string())
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("objective"), "{err:#}");
+        assert!(ScenarioBuilder::new()
+            .tweak(|c| c.objective.zeta = 0.0)
+            .build()
+            .is_err());
+        assert!(ScenarioBuilder::new()
+            .tweak(|c| c.objective.zeta = f64::NAN)
+            .build()
+            .is_err());
+        // a bare weighted/budget kind resolves via the config fields
+        let scn = ScenarioBuilder::new()
+            .tweak(|c| {
+                c.objective.kind = "budget".to_string();
+                c.objective.budget_j = 1e6;
+            })
+            .build()
+            .unwrap();
+        assert_eq!(scn.objective.budget_j, 1e6);
     }
 
     #[test]

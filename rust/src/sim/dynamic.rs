@@ -8,7 +8,10 @@
 //! round: per-client shadowing evolves as a seeded AR(1) Gauss–Markov
 //! process ([`crate::net::ChannelProcess`]), client compute optionally
 //! jitters, clients drop out and return — and the run accumulates the
-//! **realized** total delay `Σ_e w_e·(I·T_local(e) + max_k T_k^f(e))`.
+//! **realized** total delay `Σ_e w_e·(I·T_local(e) + max_k T_k^f(e))`
+//! alongside the **realized** total energy `Σ_e w_e·(I·E_round(e))`:
+//! dropped clients spend nothing in their absent rounds, and compute
+//! jitter rescales compute energy via `f²` (the delay scales `1/f`).
 //!
 //! Accounting details that make the engine exact where the static
 //! model applies:
@@ -21,8 +24,11 @@
 //!   realized delay collapse into one `weight × delay` product, so a
 //!   frozen environment degenerates to the closed-form `E(r)·d` — the
 //!   realized total of a frozen run under [`ReOptStrategy::OneShot`]
-//!   is **bit-identical** to `Scenario::total_delay` (property-tested
-//!   in `rust/tests/prop_dynamic.rs`).
+//!   is **bit-identical** to `Scenario::total_delay`. Energy gets its
+//!   own run-length segments, so the frozen realized energy is equally
+//!   bit-identical to `delay::energy::total_energy`'s
+//!   `E(r)·(I·E_round)` (both property-tested in
+//!   `rust/tests/prop_dynamic.rs`).
 //!
 //! Re-solves go through the same [`crate::delay::WorkloadCache`] for
 //! the whole run, so only the channel-dependent half of the evaluator
@@ -46,6 +52,7 @@ use crate::delay::{Allocation, ConvergenceModel, DelayEvaluator, Scenario, Workl
 use crate::model::WorkloadTable;
 use crate::net::{ChannelModel, ChannelProcess, ChannelState};
 use crate::opt::policy::{AllocationPolicy, PolicyOutcome};
+use crate::opt::Objective;
 use crate::util::rng::Rng;
 
 /// When (and whether) to re-run the allocation policy as the
@@ -121,6 +128,9 @@ pub struct RoundRecord {
     pub weight: f64,
     /// Realized per-round delay `I·T_local + max_k T_k^f` (s).
     pub delay: f64,
+    /// Realized per-round energy `I·E_round` (J) of the active cohort
+    /// (dropped clients spend nothing).
+    pub energy: f64,
     pub l_c: usize,
     pub rank: usize,
     /// Clients participating this round.
@@ -135,6 +145,9 @@ pub struct RoundRecord {
 pub struct DynamicOutcome {
     /// Realized total delay `Σ_e w_e·(I·T_local(e) + max_k T_k^f(e))`.
     pub realized_delay: f64,
+    /// Realized total energy `Σ_e w_e·(I·E_round(e))` (J); on a frozen
+    /// run this is bit-identical to `delay::energy::total_energy`.
+    pub realized_energy: f64,
     /// Eq. 17's static prediction for the round-0 solve — what the
     /// one-shot optimizer believes the run will cost.
     pub static_prediction: f64,
@@ -144,6 +157,15 @@ pub struct DynamicOutcome {
     pub rounds: Vec<RoundRecord>,
     /// Policy re-solves performed after round 0.
     pub resolves: usize,
+}
+
+/// Realized per-round quantities of one (scenario, allocation, cohort)
+/// evaluation — see [`RoundSimulator::round_cost`].
+#[derive(Clone, Copy, Debug)]
+struct RoundCost {
+    delay: f64,
+    energy: f64,
+    score: f64,
 }
 
 /// Plays a scenario's fine-tuning run out over `E(r)` global rounds
@@ -174,19 +196,30 @@ impl<'a> RoundSimulator<'a> {
         }
     }
 
-    /// Round delay of `alloc` on the current `scn` under `active`, and
-    /// its cost per unit of convergence progress (`E(rank) ×` delay —
-    /// the quantity re-opt candidates are compared on).
+    /// Realized per-round cost of `alloc` on the current `scn` under
+    /// `active`: the round delay, the per-global-round energy spend
+    /// `I·E_round`, and the objective score per unit of convergence
+    /// progress (`obj.score(E(rank)·delay, E(rank)·energy)` — the
+    /// quantity re-opt candidates are compared on; under the delay
+    /// objective this is exactly `E(rank)·delay`, same bits as the
+    /// pre-energy engine).
     fn round_cost(
         &self,
         scn: &Scenario,
         table: &Arc<WorkloadTable>,
         alloc: &Allocation,
         active: &[bool],
-    ) -> (f64, f64) {
+        obj: &Objective,
+    ) -> RoundCost {
         let ev = DelayEvaluator::new(scn, alloc, self.conv, table.clone());
         let d = ev.round_delay_active(alloc.l_c, alloc.rank, active);
-        (d, self.conv.rounds(alloc.rank) * d)
+        let e = scn.local_steps as f64 * ev.round_energy_active(alloc.l_c, alloc.rank, active);
+        let rounds = self.conv.rounds(alloc.rank);
+        RoundCost {
+            delay: d,
+            energy: e,
+            score: obj.score(rounds * d, rounds * e),
+        }
     }
 
     /// Simulate one full run of `policy` under `strategy`.
@@ -216,6 +249,7 @@ impl<'a> RoundSimulator<'a> {
             );
         }
         let k_n = self.base.k();
+        let objective = Objective::from_config(&self.base.objective)?;
         let table = self.cache.table_for(&self.base.profile, &self.ranks);
 
         // working copy whose gains / compute / membership evolve
@@ -259,10 +293,15 @@ impl<'a> RoundSimulator<'a> {
 
         // realized-delay accumulator: run-length compressed so equal
         // consecutive round delays collapse into one weight×delay
-        // product (see the module docs for why this matters)
+        // product (see the module docs for why this matters); energy
+        // gets its own segments so its frozen closed form is equally
+        // bit-exact
         let mut realized = 0.0f64;
         let mut seg_weight = 0.0f64;
         let mut seg_delay = 0.0f64;
+        let mut realized_e = 0.0f64;
+        let mut seg_weight_e = 0.0f64;
+        let mut seg_energy = 0.0f64;
 
         let mut round = 0usize;
         while remaining > 0.0 {
@@ -277,10 +316,10 @@ impl<'a> RoundSimulator<'a> {
             }
 
             let mut resolved = round == 0;
-            // round delay of the current (scn, alloc, active), computed
+            // round cost of the current (scn, alloc, active), computed
             // at most once per round: the strategy decision and the
             // candidate adoption reuse their evaluator passes
-            let mut d_round: Option<f64> = None;
+            let mut cost_round: Option<RoundCost> = None;
             if round > 0 {
                 // --- evolve the environment
                 process.step();
@@ -316,15 +355,15 @@ impl<'a> RoundSimulator<'a> {
                 // --- decide whether to re-solve. The incumbent's cost
                 // computed for the OnDegrade trigger seeds the adoption
                 // step below, so no round evaluates one allocation twice.
-                let mut incumbent_cost: Option<(f64, f64)> = None;
+                let mut incumbent_cost: Option<RoundCost> = None;
                 let due = match strategy {
                     ReOptStrategy::OneShot => false,
                     ReOptStrategy::EveryRound => true,
                     ReOptStrategy::Periodic(j) => round % j.max(1) == 0,
                     ReOptStrategy::OnDegrade(th) => {
-                        let cost = self.round_cost(&scn, &table, &alloc, &active);
-                        let triggered = cost.0 > solved_delay * (1.0 + th);
-                        d_round = Some(cost.0);
+                        let cost = self.round_cost(&scn, &table, &alloc, &active, &objective);
+                        let triggered = cost.delay > solved_delay * (1.0 + th);
+                        cost_round = Some(cost);
                         incumbent_cost = Some(cost);
                         triggered
                     }
@@ -336,28 +375,27 @@ impl<'a> RoundSimulator<'a> {
                     resolves += 1;
                     resolved = true;
                     // adopt the cheapest of {incumbent, round-0, fresh}
-                    // under the *current* channel (cost per unit of
-                    // progress); ties keep the earlier candidate, so a
-                    // frozen channel never churns the allocation. The
-                    // round-0 candidate is skipped while the incumbent
-                    // *is* the round-0 allocation.
-                    let (mut best_d, mut best_obj) = match incumbent_cost {
+                    // under the *current* channel (objective score per
+                    // unit of progress); ties keep the earlier
+                    // candidate, so a frozen channel never churns the
+                    // allocation. The round-0 candidate is skipped
+                    // while the incumbent *is* the round-0 allocation.
+                    let mut best = match incumbent_cost {
                         Some(cost) => cost,
-                        None => self.round_cost(&scn, &table, &alloc, &active),
+                        None => self.round_cost(&scn, &table, &alloc, &active, &objective),
                     };
                     let mut best_alloc = alloc.clone();
                     if !incumbent_is_initial {
-                        let (d_c, obj) = self.round_cost(&scn, &table, &alloc0, &active);
-                        if obj < best_obj {
-                            best_obj = obj;
-                            best_d = d_c;
+                        let c0 = self.round_cost(&scn, &table, &alloc0, &active, &objective);
+                        if c0.score < best.score {
+                            best = c0;
                             best_alloc = alloc0.clone();
                             incumbent_is_initial = true;
                         }
                     }
-                    let (d_f, obj_f) = self.round_cost(&scn, &table, &fresh.alloc, &active);
-                    if obj_f < best_obj {
-                        best_d = d_f;
+                    let cf = self.round_cost(&scn, &table, &fresh.alloc, &active, &objective);
+                    if cf.score < best.score {
+                        best = cf;
                         best_alloc = fresh.alloc;
                         incumbent_is_initial = false;
                     }
@@ -369,15 +407,16 @@ impl<'a> RoundSimulator<'a> {
                         remaining *= e_new / e_old;
                     }
                     alloc = best_alloc;
-                    d_round = Some(best_d);
+                    cost_round = Some(best);
                 }
             }
 
             // --- realize this round
-            let d = match d_round {
-                Some(d) => d,
-                None => self.round_cost(&scn, &table, &alloc, &active).0,
+            let cost = match cost_round {
+                Some(c) => c,
+                None => self.round_cost(&scn, &table, &alloc, &active, &objective),
             };
+            let (d, e) = (cost.delay, cost.energy);
             if resolved {
                 solved_delay = d;
             }
@@ -389,10 +428,18 @@ impl<'a> RoundSimulator<'a> {
                 seg_weight = weight;
                 seg_delay = d;
             }
+            if seg_weight_e > 0.0 && e.to_bits() == seg_energy.to_bits() {
+                seg_weight_e += weight;
+            } else {
+                realized_e += seg_weight_e * seg_energy;
+                seg_weight_e = weight;
+                seg_energy = e;
+            }
             rounds.push(RoundRecord {
                 round,
                 weight,
                 delay: d,
+                energy: e,
                 l_c: alloc.l_c,
                 rank: alloc.rank,
                 active: active.iter().filter(|&&a| a).count(),
@@ -402,9 +449,11 @@ impl<'a> RoundSimulator<'a> {
             round += 1;
         }
         realized += seg_weight * seg_delay;
+        realized_e += seg_weight_e * seg_energy;
 
         Ok(DynamicOutcome {
             realized_delay: realized,
+            realized_energy: realized_e,
             static_prediction,
             final_alloc: alloc,
             rounds,
@@ -415,8 +464,11 @@ impl<'a> RoundSimulator<'a> {
 
 /// A `(policy, re-opt strategy)` pair exposed as an
 /// [`AllocationPolicy`] whose objective is the **realized** dynamic
-/// delay — so `SweepRunner` grids, reports, and the CLI compare
-/// re-optimization strategies exactly like any other policy column.
+/// score — `obj.score(realized delay, realized energy)` under the
+/// scenario's objective, i.e. exactly the realized delay for the
+/// default delay objective — so `SweepRunner` grids, reports, and the
+/// CLI compare re-optimization strategies exactly like any other
+/// policy column.
 ///
 /// With an explicit strategy the policy is named
 /// `<inner>+<strategy>` (e.g. `proposed+every_round`); with
@@ -474,10 +526,16 @@ impl AllocationPolicy for DynamicPolicy {
         };
         let sim = RoundSimulator::new(scn, conv, cache, &self.ranks);
         let out = sim.run(self.inner.as_ref(), strategy)?;
+        // the realized analogue of the static scoring: under the
+        // default delay objective this is exactly the realized delay
+        let objective = Objective::from_config(&scn.objective)?
+            .score(out.realized_delay, out.realized_energy);
         Ok(PolicyOutcome {
             policy: self.name.clone(),
             alloc: out.final_alloc,
-            objective: out.realized_delay,
+            objective,
+            delay: out.realized_delay,
+            energy: out.realized_energy,
             trajectory: Some(out.rounds.iter().map(|r| r.delay).collect()),
             iterations: out.rounds.len(),
         })
@@ -555,9 +613,13 @@ mod tests {
             assert_eq!(r.resolved, i == 0);
             assert!(r.weight > 0.0 && r.weight <= 1.0);
         }
-        // realized total equals the (naively summed) trace within fp
+        // realized totals equal the (naively summed) trace within fp
         let naive: f64 = out.rounds.iter().map(|r| r.weight * r.delay).sum();
         assert!((out.realized_delay - naive).abs() <= 1e-9 * naive.abs());
+        let naive_e: f64 = out.rounds.iter().map(|r| r.weight * r.energy).sum();
+        assert!(out.realized_energy.is_finite() && out.realized_energy > 0.0);
+        assert!((out.realized_energy - naive_e).abs() <= 1e-9 * naive_e.abs());
+        assert!(out.rounds.iter().all(|r| r.energy > 0.0 && r.energy.is_finite()));
     }
 
     #[test]

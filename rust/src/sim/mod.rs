@@ -6,7 +6,8 @@
 //! * [`builder`] — [`ScenarioBuilder`]: fluent, seeded scenario
 //!   construction with named heterogeneity presets (`paper`,
 //!   `dense_cell`, `weak_edge`, `asymmetric_links`, `many_clients`,
-//!   `mobile_edge`), including the round-varying dynamics knobs;
+//!   `mobile_edge`, `battery_edge`), including the round-varying
+//!   dynamics knobs and the objective/energy parameters;
 //! * [`mod@sweep`] — [`SweepAxis`] / [`SweepRunner`] / [`SweepReport`]:
 //!   declarative *policies × grid* sweeps fanned out across
 //!   `std::thread` workers, with deterministic CSV/JSON reports,
@@ -15,8 +16,8 @@
 //! * [`dynamic`] — [`RoundSimulator`] / [`ReOptStrategy`] /
 //!   [`DynamicPolicy`]: the round-varying engine — AR(1) channel
 //!   drift, compute jitter, dropout — that accumulates *realized*
-//!   total delay and re-optimizes mid-run (`one_shot`, `every_round`,
-//!   `periodic:J`, `on_degrade:θ`);
+//!   total delay **and realized energy** and re-optimizes mid-run
+//!   (`one_shot`, `every_round`, `periodic:J`, `on_degrade:θ`);
 //! * the policies themselves live in [`crate::opt::policy`].
 //!
 //! Every figure bench (Figs. 5–8), the

@@ -118,6 +118,25 @@ impl SweepAxis {
         })
     }
 
+    /// Energy axis: switched-capacitance ζ (J·s²/cycle³) of the client
+    /// compute-energy model — the device-efficiency dimension of the
+    /// energy/delay trade-off.
+    pub fn zeta(values: &[f64]) -> SweepAxis {
+        SweepAxis::new("zeta", values, |cfg, v| {
+            cfg.objective.zeta = v;
+        })
+    }
+
+    /// Energy axis: λ of the weighted objective `T + λ·E` (s/J). Also
+    /// forces `objective.kind = "weighted"` so the axis is effective on
+    /// any base config — λ = 0 is exactly the delay objective.
+    pub fn lambda(values: &[f64]) -> SweepAxis {
+        SweepAxis::new("lambda", values, |cfg, v| {
+            cfg.objective.kind = "weighted".to_string();
+            cfg.objective.lambda = v;
+        })
+    }
+
     /// Canned axis lookup for the CLI (`sfllm sweep --axis <name>`).
     pub fn by_name(name: &str, values: &[f64]) -> Result<SweepAxis> {
         Ok(match name {
@@ -131,10 +150,12 @@ impl SweepAxis {
             "correlation" | "channel_rho" => SweepAxis::channel_correlation(values),
             "dropout" => SweepAxis::dropout(values),
             "reopt-period" | "reopt_period" => SweepAxis::reopt_period(values),
+            "zeta" => SweepAxis::zeta(values),
+            "lambda" => SweepAxis::lambda(values),
             other => bail!(
                 "unknown sweep axis '{other}' (available: bandwidth, \
                  client-compute, server-compute, power, clients, \
-                 correlation, dropout, reopt-period)"
+                 correlation, dropout, reopt-period, zeta, lambda)"
             ),
         })
     }
@@ -162,6 +183,11 @@ impl PointResult {
     /// Objectives only, in policy order.
     pub fn objectives(&self) -> Vec<f64> {
         self.outcomes.iter().map(|o| o.objective).collect()
+    }
+
+    /// Total training energies (J), in policy order.
+    pub fn energies(&self) -> Vec<f64> {
+        self.outcomes.iter().map(|o| o.energy).collect()
     }
 }
 
@@ -191,16 +217,28 @@ pub struct SweepReport {
     pub policy_names: Vec<String>,
     pub points: Vec<PointResult>,
     pub errors: Vec<PointError>,
+    /// Whether the CSV surface carries per-policy `<name>:energy`
+    /// columns next to the objective columns (set via
+    /// [`SweepRunner::report_energy`]; JSON always carries delay and
+    /// energy).
+    pub energy_columns: bool,
 }
 
 impl SweepReport {
-    /// CSV header: axis columns then one column per policy.
+    /// CSV header: axis columns, one objective column per policy, and —
+    /// when energy reporting is on — one `<policy>:energy` column per
+    /// policy.
     pub fn header(&self) -> Vec<String> {
-        self.axis_names
+        let mut h: Vec<String> = self
+            .axis_names
             .iter()
             .chain(self.policy_names.iter())
             .cloned()
-            .collect()
+            .collect();
+        if self.energy_columns {
+            h.extend(self.policy_names.iter().map(|n| format!("{n}:energy")));
+        }
+        h
     }
 
     /// The full report as a CSV string (used by the determinism test;
@@ -212,10 +250,16 @@ impl SweepReport {
         let mut s = header.join(",");
         s.push('\n');
         for p in &self.points {
+            let energies = if self.energy_columns {
+                p.energies()
+            } else {
+                Vec::new()
+            };
             let row: Vec<String> = p
                 .coords
                 .iter()
                 .chain(p.objectives().iter())
+                .chain(energies.iter())
                 .map(|v| format!("{v}"))
                 .collect();
             s.push_str(&row.join(","));
@@ -276,9 +320,12 @@ impl SweepReport {
                 .iter()
                 .map(|o| {
                     format!(
-                        "{}: {{\"objective\": {}, \"l_c\": {}, \"rank\": {}, \"iterations\": {}}}",
+                        "{}: {{\"objective\": {}, \"delay\": {}, \"energy\": {}, \
+                         \"l_c\": {}, \"rank\": {}, \"iterations\": {}}}",
                         jstr(&o.policy),
                         jnum(o.objective),
+                        jnum(o.delay),
+                        jnum(o.energy),
                         o.alloc.l_c,
                         o.alloc.rank,
                         o.iterations
@@ -396,6 +443,7 @@ pub struct SweepRunner {
     axes: Vec<SweepAxis>,
     policies: Vec<Arc<dyn AllocationPolicy>>,
     threads: usize,
+    energy_columns: bool,
 }
 
 impl SweepRunner {
@@ -407,6 +455,7 @@ impl SweepRunner {
             axes: Vec::new(),
             policies: Vec::new(),
             threads: 0,
+            energy_columns: false,
         }
     }
 
@@ -433,6 +482,14 @@ impl SweepRunner {
     /// Worker thread count; 0 (default) means all available cores.
     pub fn threads(mut self, n: usize) -> SweepRunner {
         self.threads = n;
+        self
+    }
+
+    /// Add per-policy `<name>:energy` columns to the CSV surface
+    /// (default off, keeping legacy report shapes byte-stable; the JSON
+    /// report always carries delay and energy).
+    pub fn report_energy(mut self, on: bool) -> SweepRunner {
+        self.energy_columns = on;
         self
     }
 
@@ -569,6 +626,7 @@ impl SweepRunner {
             policy_names: self.policies.iter().map(|p| p.name().to_string()).collect(),
             points,
             errors,
+            energy_columns: self.energy_columns,
         })
     }
 }
@@ -728,6 +786,7 @@ mod tests {
                 policy: None,
                 message: "tab\there\rdone".into(),
             }],
+            energy_columns: false,
         };
         let json = report.to_json_string();
         assert!(!json.contains('\t'), "raw control char leaked into JSON");
@@ -789,6 +848,46 @@ mod tests {
         assert_eq!(cfg.dynamics.strategy, "periodic:4");
         (SweepAxis::reopt_period(&[0.0]).apply)(&mut cfg, 0.0);
         assert_eq!(cfg.dynamics.strategy, "periodic:1", "J clamps to >= 1");
+    }
+
+    #[test]
+    fn energy_axes_write_the_objective_config() {
+        let mut cfg = Config::paper_defaults();
+        (SweepAxis::zeta(&[2e-28]).apply)(&mut cfg, 2e-28);
+        assert_eq!(cfg.objective.zeta, 2e-28);
+        (SweepAxis::lambda(&[0.05]).apply)(&mut cfg, 0.05);
+        assert_eq!(cfg.objective.kind, "weighted");
+        assert_eq!(cfg.objective.lambda, 0.05);
+    }
+
+    #[test]
+    fn energy_columns_extend_csv_and_json_always_carries_energy() {
+        let report = SweepRunner::new(&tiny_base())
+            .over(SweepAxis::lambda(&[0.0, 0.01]))
+            .policies(reg().resolve("proposed").unwrap())
+            .threads(1)
+            .report_energy(true)
+            .run()
+            .unwrap();
+        assert_eq!(report.header(), vec!["lambda", "proposed", "proposed:energy"]);
+        let csv = report.to_csv_string();
+        let lines: Vec<&str> = csv.trim_end().lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[1].split(',').count(), 3);
+        // energy column carries the outcome's energy verbatim
+        let e0: f64 = lines[1].split(',').nth(2).unwrap().parse().unwrap();
+        assert_eq!(e0.to_bits(), report.points[0].outcomes[0].energy.to_bits());
+        assert!(e0 > 0.0);
+        // JSON: delay + energy present regardless of the CSV flag
+        let json = report.to_json_string();
+        let parsed = crate::util::json::Json::parse(&json).unwrap();
+        let p0 = &parsed.get("points").unwrap().as_arr().unwrap()[0];
+        let pol = p0.get("policies").unwrap().get("proposed").unwrap();
+        assert!(pol.get("energy").unwrap().as_f64().unwrap() > 0.0);
+        assert!(pol.get("delay").unwrap().as_f64().unwrap() > 0.0);
+        // at lambda = 0 the weighted objective IS the delay
+        let p = &report.points[0].outcomes[0];
+        assert_eq!(p.objective.to_bits(), p.delay.to_bits());
     }
 
     #[test]

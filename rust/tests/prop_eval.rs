@@ -7,13 +7,19 @@
 //! * the joint split×rank scan is never worse than the sequential
 //!   P3-then-P4 scans it replaced, on every preset;
 //! * a handcrafted regression where the sequential scans provably get
-//!   stuck at a coordinate-wise optimum the joint scan escapes.
+//!   stuck at a coordinate-wise optimum the joint scan escapes;
+//! * energy properties: `eval_energy` bit-identical to the closed-form
+//!   `total_energy` on every preset, `Weighted{lambda: 0}` reproducing
+//!   the delay argmin exactly, and a higher ζ never lowering an
+//!   energy-optimal objective.
 
+use sfllm::delay::energy::total_energy;
 use sfllm::delay::{Allocation, ConvergenceModel, DelayEvaluator, Scenario};
 use sfllm::model::{Gpt2Config, WorkloadProfile};
 use sfllm::net::topology::ClientSite;
 use sfllm::net::{Link, SubchannelSet, Topology};
 use sfllm::opt::bcd;
+use sfllm::opt::Objective;
 use sfllm::opt::{rank, split};
 use sfllm::sim::{ScenarioBuilder, PRESETS};
 
@@ -39,6 +45,80 @@ fn evaluator_matches_total_delay_bit_for_bit_on_every_preset() {
                     "{preset} (l_c={l_c}, r={r}): cached {got} vs exact {want}"
                 );
             }
+        }
+    }
+}
+
+#[test]
+fn eval_energy_matches_total_energy_bit_for_bit_on_every_preset() {
+    let conv = ConvergenceModel::paper_default();
+    for preset in PRESETS {
+        let scn = ScenarioBuilder::preset(preset).unwrap().build().unwrap();
+        let alloc = bcd::initial_alloc(&scn, (scn.profile.blocks.len() / 2).max(1), 4);
+        let ev = DelayEvaluator::build(&scn, &alloc, &conv, &RANKS);
+        for l_c in scn.profile.split_candidates() {
+            for &r in &[1usize, 3, 4, 8] {
+                // rank 3 exercises the off-table fallback
+                let mut cand = alloc.clone();
+                cand.l_c = l_c;
+                cand.rank = r;
+                let want = total_energy(&scn, &cand, &conv, scn.objective.zeta);
+                let got = ev.eval_energy(l_c, r);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "{preset} (l_c={l_c}, r={r}): cached {got} vs exact {want}"
+                );
+                assert!(!got.is_nan(), "{preset}: NaN energy");
+            }
+        }
+    }
+}
+
+#[test]
+fn weighted_lambda_zero_reproduces_the_delay_argmin_exactly_on_every_preset() {
+    let conv = ConvergenceModel::paper_default();
+    for preset in PRESETS {
+        let scn = ScenarioBuilder::preset(preset).unwrap().build().unwrap();
+        let alloc = bcd::initial_alloc(&scn, (scn.profile.blocks.len() / 2).max(1), 4);
+        let ev = DelayEvaluator::build(&scn, &alloc, &conv, &RANKS);
+        let (l, r, t) = ev.best_split_rank();
+        for obj in [Objective::Delay, Objective::Weighted { lambda: 0.0 }] {
+            let c = ev.best_split_rank_obj(&obj);
+            assert_eq!((c.l_c, c.rank), (l, r), "{preset} {obj:?}");
+            assert_eq!(c.score.to_bits(), t.to_bits(), "{preset} {obj:?}");
+        }
+    }
+}
+
+#[test]
+fn higher_zeta_never_lowers_an_energy_optimal_objective_on_every_preset() {
+    // total energy is monotone non-decreasing in zeta pointwise (the
+    // compute term is linear in it, transmit is constant), so the grid
+    // minimum under Objective::Energy must be monotone too
+    let conv = ConvergenceModel::paper_default();
+    for preset in PRESETS {
+        let base = ScenarioBuilder::preset(preset).unwrap();
+        let mut prev = 0.0f64;
+        for (i, zeta) in [5e-29, 1e-28, 4e-28].into_iter().enumerate() {
+            let scn = base
+                .clone()
+                .tweak(|c| c.objective.zeta = zeta)
+                .build()
+                .unwrap();
+            let alloc = bcd::initial_alloc(&scn, (scn.profile.blocks.len() / 2).max(1), 4);
+            let ev = DelayEvaluator::build(&scn, &alloc, &conv, &RANKS);
+            let best = ev.best_split_rank_obj(&Objective::Energy);
+            assert!(best.score.is_finite() && best.score > 0.0, "{preset}");
+            if i > 0 {
+                assert!(
+                    best.score >= prev,
+                    "{preset}: zeta {zeta} lowered the energy optimum \
+                     ({} < {prev})",
+                    best.score
+                );
+            }
+            prev = best.score;
         }
     }
 }
@@ -94,6 +174,7 @@ fn trap_scenario() -> Scenario {
             }],
         },
         dynamics: sfllm::config::DynamicsConfig::default(),
+        objective: sfllm::config::ObjectiveConfig::default(),
         // snr_coeff = gain_product * client_gain / noise_psd, chosen
         // directly: main uplink 1 Gbit/s (SE = log2(1+1) = 1), fed
         // uplink 1e6 * log2(1 + 2.113) ~ 1.64 Mbit/s at PSD 1 W/Hz.

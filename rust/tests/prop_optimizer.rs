@@ -155,7 +155,8 @@ fn prop_bcd_monotone_and_beats_baselines() {
             }
         }
         let mut brng = rng.fork(7);
-        let (_, ta) = baselines::baseline_a(&scn, &conv, &RANKS, &mut brng);
+        let (_, ta) =
+            baselines::baseline_a(&scn, &conv, &RANKS, &mut brng).map_err(|e| e.to_string())?;
         if res.objective > ta * (1.0 + 1e-9) {
             return Err(format!("proposed {} worse than random {}", res.objective, ta));
         }
