@@ -1,0 +1,431 @@
+//! The tracked perf-bench harness behind the `bench` CLI subcommand.
+//!
+//! Runs the `micro_hotpath` axes — the optimizer pieces the BCD loop
+//! and the round-varying simulator hit per iteration/round — and emits
+//! a machine-readable JSON report (`BENCH_pr5.json`) so the repo's perf
+//! trajectory is tracked in CI instead of living in bench stdout:
+//!
+//! * `algorithm2` — the heap-based Algorithm 2 vs the naive reference
+//!   scan at K ∈ {5, 100, 1000} on the `many_clients` preset;
+//! * `p2_power` — the exact P2 solve, cold vs warm-started
+//!   (`solve_power_hinted` with the previous optimum + reused probe
+//!   buffers, the BCD loop's steady state);
+//! * `solve_cached` — one full proposed-policy solve (Algorithm 3 on
+//!   the cached engine) at the same K scaling points;
+//! * `grid_scan` — the joint split×rank grid, clone-per-candidate vs
+//!   the cached `DelayEvaluator`;
+//! * `dynamic` — full round-varying runs per re-opt strategy on the
+//!   paper preset (ρ = 0.8), with the actual-solver-call count
+//!   (`fresh_solves`) next to the wall time.
+//!
+//! Timings auto-scale their iteration counts to a small per-axis time
+//! budget, so a default run stays CI-friendly (~1–2 min); `--full`
+//! quadruples the budgets for lower-variance numbers. CI validates the
+//! JSON and uploads it as an artifact (see `.github/workflows/ci.yml`);
+//! EXPERIMENTS.md §Perf narrates the trajectory.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::delay::{ConvergenceModel, DelayEvaluator, WorkloadCache};
+use crate::opt::policy::Proposed;
+use crate::opt::{assignment, bcd, power, AllocationPolicy};
+use crate::sim::{ReOptStrategy, RoundSimulator, ScenarioBuilder};
+
+/// Options for one harness run.
+#[derive(Clone, Debug, Default)]
+pub struct BenchOptions {
+    /// 4x the per-measurement time budget (lower variance, slower run).
+    pub full: bool,
+}
+
+/// One `algorithm2` scaling point: heap engine vs naive reference.
+#[derive(Clone, Debug)]
+pub struct Algo2Point {
+    pub k: usize,
+    pub m: usize,
+    pub heap_us: f64,
+    pub reference_us: f64,
+    pub speedup: f64,
+}
+
+/// One P2 point: cold solve vs warm-started (hint + scratch) solve.
+#[derive(Clone, Debug)]
+pub struct P2Point {
+    pub k: usize,
+    pub cold_us: f64,
+    pub warm_us: f64,
+    pub speedup: f64,
+}
+
+/// One full proposed-policy solve (BCD on the cached engine).
+#[derive(Clone, Debug)]
+pub struct SolvePoint {
+    pub k: usize,
+    pub us: f64,
+}
+
+/// The joint split×rank grid, clone-per-candidate vs cached evaluator.
+#[derive(Clone, Debug)]
+pub struct GridScanPoint {
+    pub clone_us: f64,
+    pub cached_us: f64,
+    pub speedup: f64,
+}
+
+/// One dynamic-run strategy point.
+#[derive(Clone, Debug)]
+pub struct DynPoint {
+    pub strategy: String,
+    pub ms: f64,
+    pub rounds: usize,
+    pub fresh_solves: usize,
+}
+
+/// Everything one harness run measured.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub algorithm2: Vec<Algo2Point>,
+    pub p2_power: Vec<P2Point>,
+    pub solve_cached: Vec<SolvePoint>,
+    pub grid_scan: GridScanPoint,
+    pub dynamic: Vec<DynPoint>,
+}
+
+/// Seconds per op: one warmup + measurement pass sizes the iteration
+/// count to `budget_s`, then the timed loop runs.
+fn time_auto<F: FnMut()>(budget_s: f64, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    f(); // warmup + pilot
+    let pilot = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_s / pilot) as usize).clamp(2, 2000);
+    let t1 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t1.elapsed().as_secs_f64() / iters as f64
+}
+
+fn jnum(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// The K-scaling `algorithm2` axis on the `many_clients` preset: heap
+/// engine vs naive reference at each K, with the shared per-point time
+/// budget. Exposed on its own so `benches/micro_hotpath.rs` and the
+/// JSON harness measure through the *same* loop — the CI-tracked
+/// numbers and the human-facing bench cannot drift apart.
+pub fn algorithm2_axis(budget_s: f64) -> Result<Vec<Algo2Point>> {
+    let mut points = Vec::new();
+    for &k in &[5usize, 100, 1000] {
+        let scn = scaling_scenario(k)?;
+        let m = scn.main_link.subch.len();
+        eprintln!("bench: algorithm2 axis K={k} M={m} ...");
+        let heap_s = {
+            let mut scratch = assignment::AssignScratch::new();
+            time_auto(budget_s, || {
+                let a = assignment::algorithm2_with(&scn, 6, 4, &mut scratch);
+                std::hint::black_box(&a);
+            })
+        };
+        let reference_s = time_auto(budget_s, || {
+            let a = assignment::algorithm2_reference(&scn, 6, 4);
+            std::hint::black_box(&a);
+        });
+        points.push(Algo2Point {
+            k,
+            m,
+            heap_us: heap_s * 1e6,
+            reference_us: reference_s * 1e6,
+            speedup: reference_s / heap_s,
+        });
+    }
+    Ok(points)
+}
+
+/// The scaling points' shared scenario: `many_clients` at the given K.
+fn scaling_scenario(k: usize) -> Result<crate::delay::Scenario> {
+    ScenarioBuilder::preset("many_clients")
+        .context("many_clients preset")?
+        .clients(k)
+        .build()
+        .with_context(|| format!("building many_clients K={k}"))
+}
+
+/// Run every axis and collect the report.
+pub fn run(opts: &BenchOptions) -> Result<BenchReport> {
+    let budget = if opts.full { 0.6 } else { 0.15 };
+    let conv = ConvergenceModel::paper_default();
+    let ranks = [1usize, 2, 4, 6, 8];
+    let cache = WorkloadCache::new();
+
+    let algorithm2 = algorithm2_axis(budget)?;
+
+    // --- P2 + solve_cached scaling on many_clients --------------------
+    let mut p2_power = Vec::new();
+    let mut solve_cached = Vec::new();
+    for &k in &[5usize, 100, 1000] {
+        let scn = scaling_scenario(k)?;
+
+        // P2 on the Algorithm-2 assignment for this K
+        eprintln!("bench: p2_power axis K={k} ...");
+        let a2 = assignment::algorithm2(&scn, 6, 4);
+        let alloc = crate::delay::Allocation {
+            assign_main: a2.assign_main,
+            assign_fed: a2.assign_fed,
+            psd_main: vec![0.0; scn.main_link.subch.len()],
+            psd_fed: vec![0.0; scn.fed_link.subch.len()],
+            l_c: 6,
+            rank: 4,
+        };
+        let cold_s = time_auto(budget, || {
+            let s = power::solve_power(&scn, &alloc).unwrap();
+            std::hint::black_box(s.t1);
+        });
+        let seed_sol = power::solve_power(&scn, &alloc)?;
+        let hint = Some((seed_sol.t1, seed_sol.t3));
+        let mut pscratch = power::PowerScratch::default();
+        let warm_s = time_auto(budget, || {
+            let s = power::solve_power_hinted(&scn, &alloc, hint, &mut pscratch).unwrap();
+            std::hint::black_box(s.t1);
+        });
+        p2_power.push(P2Point {
+            k,
+            cold_us: cold_s * 1e6,
+            warm_us: warm_s * 1e6,
+            speedup: cold_s / warm_s,
+        });
+
+        // full proposed solve on the cached engine
+        eprintln!("bench: solve_cached axis K={k} ...");
+        let policy = Proposed::with_ranks(&ranks);
+        let solve_s = time_auto(budget.max(0.4), || {
+            let out = policy.solve_cached(&scn, &conv, &cache).unwrap();
+            std::hint::black_box(out.objective);
+        });
+        solve_cached.push(SolvePoint { k, us: solve_s * 1e6 });
+    }
+
+    // --- joint grid: clone-per-candidate vs cached evaluator ----------
+    eprintln!("bench: grid_scan axis ...");
+    let scn = ScenarioBuilder::new().build()?;
+    let alloc = bcd::initial_alloc(&scn, 6, 4);
+    let splits: Vec<usize> = scn.profile.split_candidates().collect();
+    let clone_s = time_auto(budget, || {
+        let mut best = f64::INFINITY;
+        for &l_c in &splits {
+            for &r in &ranks {
+                let mut cand = alloc.clone();
+                cand.l_c = l_c;
+                cand.rank = r;
+                best = best.min(scn.total_delay(&cand, &conv));
+            }
+        }
+        std::hint::black_box(best);
+    });
+    let cached_s = time_auto(budget, || {
+        let ev = DelayEvaluator::new(&scn, &alloc, &conv, cache.table_for(&scn.profile, &ranks));
+        std::hint::black_box(ev.best_split_rank());
+    });
+    let grid_scan = GridScanPoint {
+        clone_us: clone_s * 1e6,
+        cached_us: cached_s * 1e6,
+        speedup: clone_s / cached_s,
+    };
+
+    // --- dynamic runs per strategy -------------------------------------
+    let scn_dyn = ScenarioBuilder::new()
+        .channel_correlation(0.8)
+        .dynamics_seed(7)
+        .build()?;
+    let dyn_cache = WorkloadCache::new();
+    let ranks_vec: Vec<usize> = ranks.to_vec();
+    let sim = RoundSimulator::new(&scn_dyn, &conv, &dyn_cache, &ranks_vec);
+    let proposed = Proposed::with_ranks(&ranks_vec);
+    let mut dynamic = Vec::new();
+    for strategy in [
+        ReOptStrategy::OneShot,
+        ReOptStrategy::Periodic(5),
+        ReOptStrategy::EveryRound,
+    ] {
+        eprintln!("bench: dynamic axis {} ...", strategy.label());
+        let probe = sim.run(&proposed, strategy)?;
+        let s = time_auto(budget.max(0.3), || {
+            let r = sim.run(&proposed, strategy).unwrap();
+            std::hint::black_box(r.realized_delay);
+        });
+        dynamic.push(DynPoint {
+            strategy: strategy.label(),
+            ms: s * 1e3,
+            rounds: probe.rounds.len(),
+            fresh_solves: probe.fresh_solves,
+        });
+    }
+
+    Ok(BenchReport {
+        algorithm2,
+        p2_power,
+        solve_cached,
+        grid_scan,
+        dynamic,
+    })
+}
+
+impl BenchReport {
+    /// Human-readable summary.
+    pub fn print(&self) {
+        println!("perf bench (tracked axes — see EXPERIMENTS.md §Perf):");
+        println!("\nalgorithm2: heap engine vs naive reference (many_clients preset):");
+        for p in &self.algorithm2 {
+            println!(
+                "  K={:<5} M={:<5} heap {:>10.2} us   reference {:>10.2} us   speedup {:>6.1}x",
+                p.k, p.m, p.heap_us, p.reference_us, p.speedup
+            );
+        }
+        println!("\nP2 exact solve: cold vs warm-started (hint + probe scratch):");
+        for p in &self.p2_power {
+            println!(
+                "  K={:<5} cold {:>10.2} us   warm {:>10.2} us   speedup {:>6.2}x",
+                p.k, p.cold_us, p.warm_us, p.speedup
+            );
+        }
+        println!("\nfull proposed solve (Algorithm 3, cached engine):");
+        for p in &self.solve_cached {
+            println!("  K={:<5} {:>12.2} us/solve", p.k, p.us);
+        }
+        println!("\njoint split x rank grid:");
+        println!(
+            "  clone-per-candidate {:>10.2} us   cached evaluator {:>10.2} us   speedup {:>6.1}x",
+            self.grid_scan.clone_us, self.grid_scan.cached_us, self.grid_scan.speedup
+        );
+        println!("\ndynamic runs (paper preset, rho=0.8):");
+        for p in &self.dynamic {
+            println!(
+                "  {:<16} {:>10.2} ms/run   ({} rounds, {} fresh solves)",
+                p.strategy, p.ms, p.rounds, p.fresh_solves
+            );
+        }
+    }
+
+    /// The machine-readable report (schema `sfllm-bench-v1`).
+    pub fn to_json_string(&self) -> String {
+        let algorithm2: Vec<String> = self
+            .algorithm2
+            .iter()
+            .map(|p| {
+                format!(
+                    "{{\"k\": {}, \"m\": {}, \"heap_us\": {}, \"reference_us\": {}, \"speedup\": {}}}",
+                    p.k,
+                    p.m,
+                    jnum(p.heap_us),
+                    jnum(p.reference_us),
+                    jnum(p.speedup)
+                )
+            })
+            .collect();
+        let p2: Vec<String> = self
+            .p2_power
+            .iter()
+            .map(|p| {
+                format!(
+                    "{{\"k\": {}, \"cold_us\": {}, \"warm_us\": {}, \"speedup\": {}}}",
+                    p.k,
+                    jnum(p.cold_us),
+                    jnum(p.warm_us),
+                    jnum(p.speedup)
+                )
+            })
+            .collect();
+        let solve: Vec<String> = self
+            .solve_cached
+            .iter()
+            .map(|p| format!("{{\"k\": {}, \"us\": {}}}", p.k, jnum(p.us)))
+            .collect();
+        let dynamic: Vec<String> = self
+            .dynamic
+            .iter()
+            .map(|p| {
+                format!(
+                    "{{\"strategy\": \"{}\", \"ms\": {}, \"rounds\": {}, \"fresh_solves\": {}}}",
+                    p.strategy,
+                    jnum(p.ms),
+                    p.rounds,
+                    p.fresh_solves
+                )
+            })
+            .collect();
+        let unix = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        format!(
+            "{{\n  \"schema\": \"sfllm-bench-v1\",\n  \"pr\": \"pr5\",\n  \
+             \"provenance\": \"generated by `sfllm bench`\",\n  \"unix_time\": {unix},\n  \
+             \"axes\": {{\n    \"algorithm2\": [{}],\n    \"p2_power\": [{}],\n    \
+             \"solve_cached\": [{}],\n    \"grid_scan\": {{\"clone_us\": {}, \"cached_us\": {}, \
+             \"speedup\": {}}},\n    \"dynamic\": [{}]\n  }}\n}}\n",
+            algorithm2.join(", "),
+            p2.join(", "),
+            solve.join(", "),
+            jnum(self.grid_scan.clone_us),
+            jnum(self.grid_scan.cached_us),
+            jnum(self.grid_scan.speedup),
+            dynamic.join(", ")
+        )
+    }
+
+    /// Write the JSON report (parent directories created as needed).
+    pub fn write_json(&self, path: &str) -> Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        std::fs::write(path, self.to_json_string()).with_context(|| format!("writing {path}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_is_parseable_and_carries_the_axis_keys() {
+        // a hand-built report (running the axes is a bench, not a test)
+        let rep = BenchReport {
+            algorithm2: vec![Algo2Point {
+                k: 5,
+                m: 1024,
+                heap_us: 10.0,
+                reference_us: 100.0,
+                speedup: 10.0,
+            }],
+            p2_power: vec![P2Point { k: 5, cold_us: 50.0, warm_us: 25.0, speedup: 2.0 }],
+            solve_cached: vec![SolvePoint { k: 5, us: 1234.5 }],
+            grid_scan: GridScanPoint { clone_us: 9.0, cached_us: 3.0, speedup: 3.0 },
+            dynamic: vec![DynPoint {
+                strategy: "every_round".to_string(),
+                ms: 42.0,
+                rounds: 28,
+                fresh_solves: 27,
+            }],
+        };
+        let j = crate::util::json::Json::parse(&rep.to_json_string()).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "sfllm-bench-v1");
+        let axes = j.get("axes").unwrap();
+        for key in ["algorithm2", "p2_power", "solve_cached", "grid_scan", "dynamic"] {
+            assert!(axes.get(key).is_ok(), "missing axis {key}");
+        }
+        let a2 = &axes.get("algorithm2").unwrap().as_arr().unwrap()[0];
+        assert_eq!(a2.get("k").unwrap().as_usize().unwrap(), 5);
+        assert!(a2.get("speedup").unwrap().as_f64().unwrap() > 1.0);
+        let d = &axes.get("dynamic").unwrap().as_arr().unwrap()[0];
+        assert_eq!(d.get("fresh_solves").unwrap().as_usize().unwrap(), 27);
+    }
+}

@@ -36,7 +36,17 @@
 //! evaluator builds: all BCD iterations, baseline draws, and
 //! [`crate::sim::SweepRunner`] grid points that keep the same model and
 //! sequence length hit the same table.
+//!
+//! The channel-dependent half of the evaluator is factored out as
+//! [`RateColumns`] (the four per-client column vectors), with
+//! [`ColumnCache`] serving **delta updates** to the round-varying
+//! simulator: between rounds only the rate rows of clients whose gain
+//! actually changed are recomputed (the power columns never read a
+//! gain), and a frozen channel recomputes nothing — all bit-identical
+//! to a from-scratch [`DelayEvaluator::new`] build (property-tested in
+//! `rust/tests/prop_eval.rs`).
 
+use std::borrow::Cow;
 use std::sync::{Arc, Mutex};
 
 use crate::delay::energy::tx_energy;
@@ -69,13 +79,15 @@ pub struct DelayEvaluator<'s> {
     table: Arc<WorkloadTable>,
     /// E(r) per candidate rank, aligned with `table.ranks()`.
     rounds: Vec<f64>,
-    /// Per-client uplink rates under the frozen assignment/PSDs.
-    rate_main: Vec<f64>,
-    rate_fed: Vec<f64>,
+    /// Per-client uplink rates under the frozen assignment/PSDs
+    /// (owned when computed here, borrowed when served by a
+    /// [`ColumnCache`] — the delta path allocates nothing per build).
+    rate_main: Cow<'s, [f64]>,
+    rate_fed: Cow<'s, [f64]>,
     /// Per-client transmit powers (C4's LHS) under the same frozen
     /// block — the energy model's `P_k` factors.
-    power_main: Vec<f64>,
-    power_fed: Vec<f64>,
+    power_main: Cow<'s, [f64]>,
+    power_fed: Cow<'s, [f64]>,
     /// Switched-capacitance ζ, from `Scenario::objective.zeta`.
     zeta: f64,
 }
@@ -88,16 +100,72 @@ impl<'s> DelayEvaluator<'s> {
         conv: &'s ConvergenceModel,
         table: Arc<WorkloadTable>,
     ) -> DelayEvaluator<'s> {
-        let k_n = scn.k();
+        DelayEvaluator::with_columns(scn, conv, table, RateColumns::compute(scn, alloc))
+    }
+
+    /// Build from precomputed per-client columns (see [`RateColumns`] /
+    /// [`ColumnCache`]): the round-varying simulator's delta path,
+    /// which hands back cached rows instead of recomputing every
+    /// subchannel rate. With `RateColumns::compute`'s output this is
+    /// exactly [`DelayEvaluator::new`].
+    pub fn with_columns(
+        scn: &'s Scenario,
+        conv: &'s ConvergenceModel,
+        table: Arc<WorkloadTable>,
+        cols: RateColumns,
+    ) -> DelayEvaluator<'s> {
+        DelayEvaluator::from_cows(
+            scn,
+            conv,
+            table,
+            Cow::Owned(cols.rate_main),
+            Cow::Owned(cols.rate_fed),
+            Cow::Owned(cols.power_main),
+            Cow::Owned(cols.power_fed),
+        )
+    }
+
+    /// [`Self::with_columns`] borrowing the columns in place — the
+    /// round simulator's per-round path, which builds an evaluator over
+    /// a [`ColumnCache`] entry without copying (or allocating) a single
+    /// row.
+    pub fn with_cached_columns(
+        scn: &'s Scenario,
+        conv: &'s ConvergenceModel,
+        table: Arc<WorkloadTable>,
+        cols: &'s RateColumns,
+    ) -> DelayEvaluator<'s> {
+        DelayEvaluator::from_cows(
+            scn,
+            conv,
+            table,
+            Cow::Borrowed(&cols.rate_main),
+            Cow::Borrowed(&cols.rate_fed),
+            Cow::Borrowed(&cols.power_main),
+            Cow::Borrowed(&cols.power_fed),
+        )
+    }
+
+    /// The one constructor both column paths share.
+    #[allow(clippy::too_many_arguments)]
+    fn from_cows(
+        scn: &'s Scenario,
+        conv: &'s ConvergenceModel,
+        table: Arc<WorkloadTable>,
+        rate_main: Cow<'s, [f64]>,
+        rate_fed: Cow<'s, [f64]>,
+        power_main: Cow<'s, [f64]>,
+        power_fed: Cow<'s, [f64]>,
+    ) -> DelayEvaluator<'s> {
         let rounds = table.ranks().iter().map(|&r| conv.rounds(r)).collect();
         DelayEvaluator {
             scn,
             conv,
             rounds,
-            rate_main: (0..k_n).map(|k| scn.rate_main(alloc, k)).collect(),
-            rate_fed: (0..k_n).map(|k| scn.rate_fed(alloc, k)).collect(),
-            power_main: (0..k_n).map(|k| scn.power_main(alloc, k)).collect(),
-            power_fed: (0..k_n).map(|k| scn.power_fed(alloc, k)).collect(),
+            rate_main,
+            rate_fed,
+            power_main,
+            power_fed,
             zeta: scn.objective.zeta,
             table,
         }
@@ -468,6 +536,162 @@ pub struct GridChoice {
     /// The objective score the scan minimized
     /// (`obj.score(delay, energy)`).
     pub score: f64,
+}
+
+/// The four per-client column vectors a [`DelayEvaluator`] serves
+/// delay/energy evaluations from: uplink rates to both servers
+/// (channel-**dependent**) and transmit powers (channel-**independent**
+/// — `Σ_i p_i·B_i` never reads a gain), all under one frozen
+/// communication block (assignment + PSDs).
+#[derive(Clone, Debug, Default)]
+pub struct RateColumns {
+    pub rate_main: Vec<f64>,
+    pub rate_fed: Vec<f64>,
+    pub power_main: Vec<f64>,
+    pub power_fed: Vec<f64>,
+}
+
+impl RateColumns {
+    /// Compute all four columns from scratch — exactly the per-client
+    /// maps [`DelayEvaluator::new`] performs (it delegates here).
+    pub fn compute(scn: &Scenario, alloc: &Allocation) -> RateColumns {
+        let k_n = scn.k();
+        RateColumns {
+            rate_main: (0..k_n).map(|k| scn.rate_main(alloc, k)).collect(),
+            rate_fed: (0..k_n).map(|k| scn.rate_fed(alloc, k)).collect(),
+            power_main: (0..k_n).map(|k| scn.power_main(alloc, k)).collect(),
+            power_fed: (0..k_n).map(|k| scn.power_fed(alloc, k)).collect(),
+        }
+    }
+}
+
+/// One [`ColumnCache`] entry: the communication block plus a snapshot
+/// of **everything else the columns read** — the per-client SNR
+/// coefficients `G·γ_k/σ²` (which fold the channel gains, the antenna
+/// gain product, and the noise PSD into the one number the Shannon
+/// rate consumes) and the per-subchannel bandwidths. Keying on the
+/// full input set means the cache can never serve stale columns, even
+/// if a caller hands it scenarios that differ in more than their
+/// gains.
+struct ColumnEntry {
+    assign_main: Vec<Vec<usize>>,
+    assign_fed: Vec<Vec<usize>>,
+    psd_main: Vec<f64>,
+    psd_fed: Vec<f64>,
+    bw_main: Vec<f64>,
+    bw_fed: Vec<f64>,
+    snr_main: Vec<f64>,
+    snr_fed: Vec<f64>,
+    cols: RateColumns,
+}
+
+fn snr_coeffs(link: &crate::net::Link) -> Vec<f64> {
+    (0..link.k()).map(|k| link.snr_coeff(k)).collect()
+}
+
+impl ColumnEntry {
+    fn new(scn: &Scenario, alloc: &Allocation) -> ColumnEntry {
+        ColumnEntry {
+            assign_main: alloc.assign_main.clone(),
+            assign_fed: alloc.assign_fed.clone(),
+            psd_main: alloc.psd_main.clone(),
+            psd_fed: alloc.psd_fed.clone(),
+            bw_main: scn.main_link.subch.bandwidth_hz.clone(),
+            bw_fed: scn.fed_link.subch.bandwidth_hz.clone(),
+            snr_main: snr_coeffs(&scn.main_link),
+            snr_fed: snr_coeffs(&scn.fed_link),
+            cols: RateColumns::compute(scn, alloc),
+        }
+    }
+
+    /// Does this entry hold columns for `alloc`'s communication block
+    /// on `scn`'s band plan? (The split/rank coordinates are
+    /// irrelevant: rates and powers read only the assignment, the
+    /// PSDs, the bandwidths, and the SNR coefficients — the last are
+    /// delta-refreshed per client in [`Self::refresh`].)
+    fn matches(&self, scn: &Scenario, alloc: &Allocation) -> bool {
+        self.assign_main == alloc.assign_main
+            && self.assign_fed == alloc.assign_fed
+            && self.psd_main == alloc.psd_main
+            && self.psd_fed == alloc.psd_fed
+            && self.bw_main == scn.main_link.subch.bandwidth_hz
+            && self.bw_fed == scn.fed_link.subch.bandwidth_hz
+            && self.snr_main.len() == scn.main_link.k()
+            && self.snr_fed.len() == scn.fed_link.k()
+    }
+
+    /// Refresh the channel-dependent rows of clients whose SNR
+    /// coefficient moved since the snapshot. Each refreshed row runs
+    /// the exact `Scenario::rate_*` computation a full rebuild would,
+    /// and an unchanged coefficient reproduces the cached value by
+    /// determinism — so the delta result is bit-identical to
+    /// [`RateColumns::compute`] (property-tested in
+    /// `rust/tests/prop_eval.rs`). Powers read neither gains nor noise
+    /// and are left untouched.
+    fn refresh(&mut self, scn: &Scenario, alloc: &Allocation) {
+        for k in 0..scn.k() {
+            let sm = scn.main_link.snr_coeff(k);
+            if sm != self.snr_main[k] {
+                self.snr_main[k] = sm;
+                self.cols.rate_main[k] = scn.rate_main(alloc, k);
+            }
+            let sf = scn.fed_link.snr_coeff(k);
+            if sf != self.snr_fed[k] {
+                self.snr_fed[k] = sf;
+                self.cols.rate_fed[k] = scn.rate_fed(alloc, k);
+            }
+        }
+    }
+}
+
+/// Delta-updating cache of [`RateColumns`], keyed by communication
+/// block, for the round-varying simulator: per round only the rate rows
+/// of clients whose channel gain actually changed are recomputed, a
+/// frozen channel (ρ = 1 / σ = 0) recomputes **nothing**, and the
+/// gain-independent power columns are computed once per block, ever.
+/// A small LRU (the dynamic engine's adoption step juggles at most
+/// three candidate blocks: incumbent, round-0, fresh) bounds the
+/// footprint.
+pub struct ColumnCache {
+    entries: Vec<ColumnEntry>,
+    capacity: usize,
+}
+
+impl ColumnCache {
+    /// `capacity` = number of distinct communication blocks kept (≥ 1).
+    pub fn new(capacity: usize) -> ColumnCache {
+        ColumnCache {
+            entries: Vec::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Columns for `(scn, alloc)` — bit-identical to
+    /// [`RateColumns::compute`], served from the cache when possible.
+    /// The most recently used entry sits at the back; a miss evicts the
+    /// front.
+    pub fn columns_for(&mut self, scn: &Scenario, alloc: &Allocation) -> &RateColumns {
+        if let Some(i) = self.entries.iter().position(|e| e.matches(scn, alloc)) {
+            let mut e = self.entries.remove(i);
+            e.refresh(scn, alloc);
+            self.entries.push(e);
+        } else {
+            if self.entries.len() >= self.capacity {
+                self.entries.remove(0);
+            }
+            self.entries.push(ColumnEntry::new(scn, alloc));
+        }
+        &self.entries.last().expect("just pushed").cols
+    }
+
+    /// Number of blocks currently cached.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
 }
 
 /// Identity of a [`WorkloadTable`]: everything `WorkloadProfile::new`

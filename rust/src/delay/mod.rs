@@ -15,7 +15,7 @@ pub mod energy;
 pub mod eval;
 
 pub use convergence::ConvergenceModel;
-pub use eval::{DelayEvaluator, GridChoice, WorkloadCache};
+pub use eval::{ColumnCache, DelayEvaluator, GridChoice, RateColumns, WorkloadCache};
 
 use crate::model::WorkloadProfile;
 use crate::net::{Link, Topology};

@@ -38,6 +38,9 @@
 //! * [`data`] — synthetic E2E-style corpus generator + byte tokenizer.
 //! * [`coordinator`] — Algorithm 1 end-to-end: threaded clients, main
 //!   server, federated server, SGD + FedAvg on host buffers.
+//! * [`bench`] — the tracked perf-bench harness (`sfllm bench`):
+//!   machine-readable timings for the optimizer/simulator hot paths,
+//!   emitted as `BENCH_pr5.json` and validated/uploaded by CI.
 //! * [`sim`] — experiment harness: `ScenarioBuilder` (seeded scenario
 //!   construction with heterogeneity presets), `SweepRunner`
 //!   (multi-threaded policy × grid sweeps with CSV/JSON reports), and
@@ -46,6 +49,7 @@
 //!   accounting) — the machinery behind every figure bench and the
 //!   CLI subcommands.
 
+pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -16,6 +16,11 @@
 //!                comparing re-optimization strategies (`one_shot`,
 //!                `every_round`, `periodic:J`, `on_degrade:θ`) by
 //!                *realized* total delay;
+//! * `bench`    — run the tracked perf axes (heap Algorithm 2 vs the
+//!                naive reference, warm vs cold P2, full-solve and
+//!                dynamic-run scaling) and emit the machine-readable
+//!                report CI archives (`--json BENCH_pr5.json`,
+//!                `--full` for lower-variance timings);
 //! * `table3`   — print the GPT2-S complexity table (paper Table III);
 //! * `info`     — list available artifact variants.
 //!
@@ -70,17 +75,19 @@ fn run() -> Result<()> {
         "latency" => cmd_latency(&mut args),
         "sweep" => cmd_sweep(&mut args),
         "dynamic" => cmd_dynamic(&mut args),
+        "bench" => cmd_bench(&mut args),
         "table3" => cmd_table3(&mut args),
         "info" => cmd_info(&mut args),
         _ => {
             println!(
                 "sfllm — split federated learning for LLMs (paper reproduction)\n\n\
-                 usage: sfllm <train|optimize|latency|sweep|dynamic|table3|info> [--options]\n\n\
+                 usage: sfllm <train|optimize|latency|sweep|dynamic|bench|table3|info> [--options]\n\n\
                  train     run Algorithm 1 over an artifact variant\n\
                  optimize  solve one scenario with a named policy (default: proposed)\n\
                  latency   compare policies (proposed vs baselines a-d) on one scenario\n\
                  sweep     sweep policies along an axis (--axis, --values, --threads, --energy)\n\
                  dynamic   simulate round-varying dynamics, comparing re-opt strategies\n\
+                 bench     run the tracked perf axes (--json <path>, --full)\n\
                  table3    print the GPT2-S complexity table (Table III)\n\
                  info      list artifact variants"
             );
@@ -419,6 +426,20 @@ fn cmd_dynamic(args: &mut Args) -> Result<()> {
             run.realized_energy / 1e3,
             run.static_prediction
         );
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &mut Args) -> Result<()> {
+    let json = args.get("json");
+    let full = args.flag("full");
+    args.finish()?;
+
+    let report = sfllm::bench::run(&sfllm::bench::BenchOptions { full })?;
+    report.print();
+    if let Some(path) = json {
+        report.write_json(&path)?;
+        println!("bench report written to {path}");
     }
     Ok(())
 }

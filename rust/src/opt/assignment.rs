@@ -1,4 +1,5 @@
-//! P1 — greedy subchannel assignment (paper Algorithm 2).
+//! P1 — greedy subchannel assignment (paper Algorithm 2), as an
+//! **incremental engine**.
 //!
 //! Phase 1 guarantees every client at least one subchannel on each
 //! link, pairing the *weakest* client (lowest f_k on the main link,
@@ -6,13 +7,54 @@
 //! subchannel. Phase 2 repeatedly gives the widest remaining subchannel
 //! to the current straggler — the client with the largest
 //! `T_k^F + T_k^s` (main link) or `T_k^f` (fed link) — skipping clients
-//! whose power caps C4/C5 a further subchannel would violate at the
-//! current PSD.
+//! for whom the power caps C4/C5 the subchannel *at hand* would violate
+//! at the current PSD. (Eligibility is re-tested per subchannel: a
+//! client barred from a wide subchannel may still fit a narrower,
+//! cheaper one later in the pass — the old implementation latched the
+//! exclusion for the rest of the pass, permanently starving the
+//! straggler; see `rust/tests/prop_assignment.rs` for the regression.)
 //!
 //! During assignment the rates are evaluated at a *nominal* PSD (the
 //! per-link total budget spread uniformly over the whole band); the
 //! exact PSDs are re-optimized right after by [`super::power`], matching
 //! the BCD ordering of Algorithm 3.
+//!
+//! ## The incremental hot path
+//!
+//! The straggler scan used to recompute every client's stage delay
+//! (summing that client's subchannel rates from scratch) and the full
+//! per-link transmit-power total for **every one** of the N phase-2
+//! grants — `O(N·K·(K+S))` work dominated by `log2` rate evaluations.
+//! [`algorithm2`] instead keeps
+//!
+//! * a per-client **rate accumulator** (one new `subch_rate` per grant,
+//!   added in exactly the left-to-right order the from-scratch sum
+//!   folds in, so every derived float is bit-identical),
+//! * a per-client **power accumulator** (same argument), and
+//! * a **lazy max-heap** over straggler delays: only the granted
+//!   client's delay ever changes, so each grant pushes one fresh entry
+//!   and stale entries are discarded on pop via a per-client epoch.
+//!
+//! which brings a grant down to `O(log K)` heap work plus one `O(K)`
+//! float-add pass for the C5 total. (The C5 total is deliberately
+//! re-summed grouped by client — the exact summation order of the
+//! reference scan — because the nominal PSD fills the budget *exactly*
+//! when every subchannel is granted, so the final grants sit on the C5
+//! float boundary and any re-association could flip them.)
+//!
+//! [`algorithm2_reference`] keeps the naive `O(N·K·(K+S))` scan as the
+//! executable spec: `rust/tests/prop_assignment.rs` asserts the heap
+//! engine is **bit-identical** to it on every preset and on seeded
+//! random scenarios, and `benches/micro_hotpath.rs` / the `bench` CLI
+//! subcommand track the speedup (the `algorithm2` axis).
+//!
+//! [`AssignScratch`] hoists the widest-first subchannel order and the
+//! phase-1 client order (plus all accumulator buffers) out of the call,
+//! so the BCD loop's repeated `algorithm2` invocations on one scenario
+//! sort each link once instead of once per iteration.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
 
 use crate::delay::Scenario;
 use crate::net::Link;
@@ -41,10 +83,215 @@ fn widest_first(link: &Link) -> Vec<usize> {
     ids
 }
 
-/// One link's greedy pass. `initial_priority` ranks clients for phase 1
-/// (largest value served first); `stage_delay` evaluates the phase-2
-/// straggler metric for a client given its current subchannel set.
-fn greedy_link<FP, FD>(
+/// One straggler-heap entry. Max-heap order: larger delay first, ties
+/// to the **smaller** client index — the same client the reference
+/// scan's first-maximum linear pass selects.
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    delay: f64,
+    k: usize,
+    epoch: u32,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // total_cmp matches partial_cmp on the non-negative delays the
+        // stage metrics produce (including +inf for starved clients)
+        self.delay
+            .total_cmp(&other.delay)
+            .then_with(|| other.k.cmp(&self.k))
+    }
+}
+
+/// Per-link reusable state: the two cached sort orders (invalidated by
+/// comparing against the exact inputs they were computed from, so a
+/// scratch can never serve a stale order) and the phase-2 accumulators.
+#[derive(Default)]
+struct LinkScratch {
+    /// Widest-first subchannel order + the bandwidths it was sorted from.
+    widest: Vec<usize>,
+    widest_src: Vec<f64>,
+    /// Phase-1 client order + the priority values it was sorted from.
+    order: Vec<usize>,
+    order_src: Vec<f64>,
+    /// Per-client accumulated uplink rate / transmit power at the
+    /// nominal PSD.
+    rate: Vec<f64>,
+    power: Vec<f64>,
+    /// Lazy-deletion epoch per client (entry is live iff epochs match).
+    epoch: Vec<u32>,
+    heap: BinaryHeap<Entry>,
+    /// Clients set aside because C4 barred them from the subchannel at
+    /// hand; restored to the heap before the next subchannel.
+    deferred: Vec<Entry>,
+}
+
+impl LinkScratch {
+    /// Refresh the cached orders if their inputs changed and reset the
+    /// per-call accumulators.
+    fn prepare<FP: Fn(usize) -> f64>(&mut self, link: &Link, k_n: usize, priority: FP) {
+        if self.widest_src != link.subch.bandwidth_hz {
+            self.widest = widest_first(link);
+            self.widest_src.clear();
+            self.widest_src.extend_from_slice(&link.subch.bandwidth_hz);
+        }
+        let prio: Vec<f64> = (0..k_n).map(&priority).collect();
+        if self.order_src != prio {
+            let mut order: Vec<usize> = (0..k_n).collect();
+            // weakest (largest priority value) first, ties by index —
+            // the reference's exact sort
+            order.sort_by(|&a, &b| prio[b].partial_cmp(&prio[a]).unwrap().then(a.cmp(&b)));
+            self.order = order;
+            self.order_src = prio;
+        }
+        self.rate.clear();
+        self.rate.resize(k_n, 0.0);
+        self.power.clear();
+        self.power.resize(k_n, 0.0);
+        self.epoch.clear();
+        self.epoch.resize(k_n, 0);
+        self.heap.clear();
+        self.deferred.clear();
+    }
+}
+
+/// Reusable state for repeated [`algorithm2_with`] calls: the sorted
+/// subchannel/client orders per link plus all phase-2 buffers. One
+/// scratch serves any sequence of calls — the cached orders are
+/// validated against their exact inputs on every call, so reusing a
+/// scratch across scenarios is safe (just pointless). The BCD loop
+/// keeps one scratch per `optimize` call so its iterations sort each
+/// link once.
+#[derive(Default)]
+pub struct AssignScratch {
+    main: LinkScratch,
+    fed: LinkScratch,
+}
+
+impl AssignScratch {
+    pub fn new() -> AssignScratch {
+        AssignScratch::default()
+    }
+}
+
+/// One link's greedy pass on the incremental engine. `stage_delay`
+/// evaluates the phase-2 straggler metric from a client's *accumulated*
+/// uplink rate.
+fn greedy_link_fast<FD>(
+    link: &Link,
+    k_n: usize,
+    psd_nominal: f64,
+    p_max_w: f64,
+    p_th_w: f64,
+    ls: &mut LinkScratch,
+    stage_delay: FD,
+) -> Vec<Vec<usize>>
+where
+    FD: Fn(usize, f64) -> f64,
+{
+    let mut assign: Vec<Vec<usize>> = vec![Vec::new(); k_n];
+    let LinkScratch {
+        widest,
+        order,
+        rate,
+        power,
+        epoch,
+        heap,
+        deferred,
+        ..
+    } = ls;
+
+    // Phase 1: weakest client first, widest subchannel each. Rates and
+    // powers accumulate in grant order — the same left-to-right folds
+    // the reference's from-scratch sums perform.
+    let mut wi = 0usize;
+    for &k in order.iter() {
+        if wi >= widest.len() {
+            break;
+        }
+        let ch = widest[wi];
+        wi += 1;
+        assign[k].push(ch);
+        rate[k] += link.subch_rate(k, ch, psd_nominal);
+        power[k] += link.power_w(ch, psd_nominal);
+    }
+
+    // Phase 2: widest remaining subchannel to the current straggler,
+    // respecting C4 (per-client) and C5 (per-link total) at the nominal
+    // PSD, straggler search served by the lazy max-heap.
+    for (k, &r) in rate.iter().enumerate() {
+        heap.push(Entry {
+            delay: stage_delay(k, r),
+            k,
+            epoch: 0,
+        });
+    }
+    while wi < widest.len() {
+        let ch = widest[wi];
+        wi += 1;
+        let add_power = link.power_w(ch, psd_nominal);
+        // C5 is client-independent, so it is decided once per
+        // subchannel. The total is re-summed grouped by client — the
+        // reference scan's exact association — because the nominal PSD
+        // fills the budget exactly once every subchannel is granted,
+        // parking the final grants on the C5 float boundary.
+        let total: f64 = power.iter().sum();
+        let mut chosen: Option<usize> = None;
+        if total + add_power <= p_th_w {
+            while let Some(e) = heap.pop() {
+                if e.epoch != epoch[e.k] {
+                    continue; // stale: superseded by a later grant
+                }
+                if power[e.k] + add_power > p_max_w {
+                    // C4 would break for THIS subchannel only: set the
+                    // client aside and retry it on the next (narrower,
+                    // cheaper) subchannel instead of latching it out.
+                    deferred.push(e);
+                    continue;
+                }
+                chosen = Some(e.k);
+                break;
+            }
+        }
+        // all clients capped: spread the rest round-robin; the exact
+        // P2 solve will de-rate the PSDs anyway.
+        let k = chosen.unwrap_or(ch % k_n);
+        assign[k].push(ch);
+        rate[k] += link.subch_rate(k, ch, psd_nominal);
+        power[k] += add_power;
+        epoch[k] += 1;
+        heap.push(Entry {
+            delay: stage_delay(k, rate[k]),
+            k,
+            epoch: epoch[k],
+        });
+        for e in deferred.drain(..) {
+            heap.push(e);
+        }
+    }
+    assign
+}
+
+/// One link's greedy pass, naive form — the executable spec the heap
+/// engine is property-tested against (`rust/tests/prop_assignment.rs`).
+/// `initial_priority` ranks clients for phase 1 (largest value served
+/// first); `stage_delay` evaluates the phase-2 straggler metric for a
+/// client given its current subchannel set.
+fn greedy_link_reference<FP, FD>(
     link: &Link,
     k_n: usize,
     psd_nominal: f64,
@@ -76,18 +323,20 @@ where
     }
 
     // Phase 2: widest remaining subchannel to the current straggler,
-    // respecting C4 (per-client) and C5 (per-link total) at the nominal PSD.
+    // respecting C4/C5 at the nominal PSD. Eligibility is per
+    // subchannel: a client the power caps bar from this subchannel is
+    // skipped for this subchannel only.
     let client_power = |subs: &[usize]| -> f64 {
         subs.iter().map(|&i| link.power_w(i, psd_nominal)).sum()
     };
-    let mut eligible: Vec<bool> = vec![true; k_n];
     while let Some(ch) = remaining.pop() {
         let add_power = link.power_w(ch, psd_nominal);
+        let mut blocked: Vec<bool> = vec![false; k_n];
         loop {
-            // straggler among eligible clients
+            // straggler among the clients not blocked for this subchannel
             let mut best: Option<(usize, f64)> = None;
             for k in 0..k_n {
-                if !eligible[k] {
+                if blocked[k] {
                     continue;
                 }
                 let d = stage_delay(k, &assign[k]);
@@ -106,7 +355,7 @@ where
             if client_power(&assign[k]) + add_power > p_max_w
                 || total + add_power > p_th_w
             {
-                eligible[k] = false; // C4/C5 would break: drop from A
+                blocked[k] = true; // C4/C5 would break: skip for this subchannel
                 continue;
             }
             assign[k].push(ch);
@@ -116,62 +365,172 @@ where
     assign
 }
 
-/// Algorithm 2 over both links for the current (l_c, rank).
-pub fn algorithm2(scn: &Scenario, l_c: usize, rank: usize) -> AssignmentResult {
-    let k_n = scn.k();
-    let b = scn.batch as f64;
+/// The shared per-call setup of both Algorithm-2 engines: the nominal
+/// PSDs, the phase-1 priorities, and every constant the straggler
+/// metrics read. Factoring it out guarantees the heap engine and the
+/// reference scan always solve the *same* problem — the only thing the
+/// two entry points differ in is the greedy pass itself.
+struct Algo2Setup {
+    psd_main_nominal: f64,
+    psd_fed_nominal: f64,
+    /// `b · Γ_s(l_c)` — the batch's activation payload (main link).
+    act_bits: f64,
+    /// `ΔΘ_c(l_c, r)` — the adapter payload (fed link).
+    adapter_bits: f64,
+    /// `T_k^F` per client (the additive compute term of the main-link
+    /// straggler metric).
+    fwd_delay: Vec<f64>,
+}
 
-    let psd_main_nominal = scn.p_th_main_w / scn.main_link.subch.total_hz();
-    let psd_fed_nominal = scn.p_th_fed_w / scn.fed_link.subch.total_hz();
+impl Algo2Setup {
+    fn new(scn: &Scenario, l_c: usize, rank: usize) -> Algo2Setup {
+        let b = scn.batch as f64;
+        Algo2Setup {
+            psd_main_nominal: scn.p_th_main_w / scn.main_link.subch.total_hz(),
+            psd_fed_nominal: scn.p_th_fed_w / scn.fed_link.subch.total_hz(),
+            act_bits: b * scn.profile.activation_bits(l_c),
+            adapter_bits: scn.profile.client_adapter_bits(l_c, rank),
+            fwd_delay: (0..scn.k())
+                .map(|k| {
+                    b * scn.kappa_client * scn.profile.client_fwd_flops(l_c, rank)
+                        / scn.topo.clients[k].f_cycles
+                })
+                .collect(),
+        }
+    }
+
+    /// Main-link straggler metric `T_k^F + T_k^s` from an accumulated
+    /// rate.
+    fn main_delay(&self, k: usize, rate: f64) -> f64 {
+        if rate <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.fwd_delay[k] + self.act_bits / rate
+        }
+    }
+
+    /// Fed-link straggler metric `T_k^f` from an accumulated rate.
+    fn fed_delay(&self, rate: f64) -> f64 {
+        if rate <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.adapter_bits / rate
+        }
+    }
+}
+
+/// Algorithm 2 over both links for the current (l_c, rank), on the
+/// incremental heap engine with a private single-use scratch. Use
+/// [`algorithm2_with`] to amortize the per-link sorts across repeated
+/// calls.
+pub fn algorithm2(scn: &Scenario, l_c: usize, rank: usize) -> AssignmentResult {
+    algorithm2_with(scn, l_c, rank, &mut AssignScratch::new())
+}
+
+/// [`algorithm2`] with caller-provided reusable state: repeated calls
+/// for the same scenario (every BCD iteration) reuse one widest-first
+/// subchannel order and one phase-1 client order per link instead of
+/// re-sorting both links per call.
+pub fn algorithm2_with(
+    scn: &Scenario,
+    l_c: usize,
+    rank: usize,
+    scratch: &mut AssignScratch,
+) -> AssignmentResult {
+    let k_n = scn.k();
+    let s = Algo2Setup::new(scn, l_c, rank);
 
     // ---- main link: straggler metric T_k^F + T_k^s ----------------------
-    let act_bits = b * scn.profile.activation_bits(l_c);
-    let fwd_delay: Vec<f64> = (0..k_n)
-        .map(|k| {
-            b * scn.kappa_client * scn.profile.client_fwd_flops(l_c, rank)
-                / scn.topo.clients[k].f_cycles
-        })
-        .collect();
     let main = {
         let link = &scn.main_link;
-        greedy_link(
+        // phase 1: weakest compute first (arg min f_k == arg max -f_k)
+        scratch
+            .main
+            .prepare(link, k_n, |k| -scn.topo.clients[k].f_cycles);
+        greedy_link_fast(
             link,
             k_n,
-            psd_main_nominal,
+            s.psd_main_nominal,
             scn.p_max_w,
             scn.p_th_main_w,
-            // phase 1: weakest compute first (arg min f_k == arg max -f_k)
-            |k| -scn.topo.clients[k].f_cycles,
-            |k, subs| {
-                let rate: f64 = subs.iter().map(|&i| link.subch_rate(k, i, psd_main_nominal)).sum();
-                if rate <= 0.0 {
-                    f64::INFINITY
-                } else {
-                    fwd_delay[k] + act_bits / rate
-                }
-            },
+            &mut scratch.main,
+            |k, rate| s.main_delay(k, rate),
         )
     };
 
     // ---- fed link: straggler metric T_k^f --------------------------------
-    let adapter_bits = scn.profile.client_adapter_bits(l_c, rank);
     let fed = {
         let link = &scn.fed_link;
-        greedy_link(
+        // phase 1: farthest client first (worst channel to fed server)
+        scratch
+            .fed
+            .prepare(link, k_n, |k| scn.topo.clients[k].d_fed_m);
+        greedy_link_fast(
             link,
             k_n,
-            psd_fed_nominal,
+            s.psd_fed_nominal,
             scn.p_max_w,
             scn.p_th_fed_w,
-            // phase 1: farthest client first (worst channel to fed server)
+            &mut scratch.fed,
+            |_, rate| s.fed_delay(rate),
+        )
+    };
+
+    AssignmentResult {
+        assign_main: main,
+        assign_fed: fed,
+        psd_main_nominal: s.psd_main_nominal,
+        psd_fed_nominal: s.psd_fed_nominal,
+    }
+}
+
+/// Algorithm 2 on the naive quadratic scan — the reference
+/// implementation the heap engine must match **bit for bit** (same
+/// grants, in the same per-client order). Kept callable (not
+/// `#[cfg(test)]`) so `rust/tests/prop_assignment.rs` and the perf
+/// harness (`benches/micro_hotpath.rs`, the `bench` CLI axis that
+/// tracks the speedup) can both reach it; production paths must use
+/// [`algorithm2`]. Both entry points draw the problem constants from
+/// one [`Algo2Setup`], so they can only ever differ in the greedy pass
+/// under test.
+pub fn algorithm2_reference(scn: &Scenario, l_c: usize, rank: usize) -> AssignmentResult {
+    let k_n = scn.k();
+    let s = Algo2Setup::new(scn, l_c, rank);
+
+    let main = {
+        let link = &scn.main_link;
+        greedy_link_reference(
+            link,
+            k_n,
+            s.psd_main_nominal,
+            scn.p_max_w,
+            scn.p_th_main_w,
+            |k| -scn.topo.clients[k].f_cycles,
+            |k, subs| {
+                let rate: f64 = subs
+                    .iter()
+                    .map(|&i| link.subch_rate(k, i, s.psd_main_nominal))
+                    .sum();
+                s.main_delay(k, rate)
+            },
+        )
+    };
+
+    let fed = {
+        let link = &scn.fed_link;
+        greedy_link_reference(
+            link,
+            k_n,
+            s.psd_fed_nominal,
+            scn.p_max_w,
+            scn.p_th_fed_w,
             |k| scn.topo.clients[k].d_fed_m,
             |k, subs| {
-                let rate: f64 = subs.iter().map(|&i| link.subch_rate(k, i, psd_fed_nominal)).sum();
-                if rate <= 0.0 {
-                    f64::INFINITY
-                } else {
-                    adapter_bits / rate
-                }
+                let rate: f64 = subs
+                    .iter()
+                    .map(|&i| link.subch_rate(k, i, s.psd_fed_nominal))
+                    .sum();
+                s.fed_delay(rate)
             },
         )
     };
@@ -179,8 +538,8 @@ pub fn algorithm2(scn: &Scenario, l_c: usize, rank: usize) -> AssignmentResult {
     AssignmentResult {
         assign_main: main,
         assign_fed: fed,
-        psd_main_nominal,
-        psd_fed_nominal,
+        psd_main_nominal: s.psd_main_nominal,
+        psd_fed_nominal: s.psd_fed_nominal,
     }
 }
 
@@ -297,5 +656,32 @@ mod tests {
         scn.main_link.client_gain[1] /= 8.0; // much worse channel
         let r = algorithm2(&scn, 2, 4);
         assert!(r.assign_main[1].len() >= r.assign_main[0].len());
+    }
+
+    #[test]
+    fn heap_engine_matches_reference_bit_for_bit() {
+        for (k, m, n) in [(5, 20, 20), (6, 4, 4), (3, 17, 9), (2, 10, 10)] {
+            let scn = scenario(k, m, n);
+            for (l_c, r) in [(2, 4), (6, 1), (9, 8)] {
+                let fast = algorithm2(&scn, l_c, r);
+                let refr = algorithm2_reference(&scn, l_c, r);
+                assert_eq!(fast.assign_main, refr.assign_main, "main K={k} M={m} l={l_c} r={r}");
+                assert_eq!(fast.assign_fed, refr.assign_fed, "fed K={k} N={n} l={l_c} r={r}");
+                assert_eq!(fast.psd_main_nominal.to_bits(), refr.psd_main_nominal.to_bits());
+                assert_eq!(fast.psd_fed_nominal.to_bits(), refr.psd_fed_nominal.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical_to_fresh_calls() {
+        let scn = scenario(5, 20, 20);
+        let mut scratch = AssignScratch::new();
+        for (l_c, r) in [(2, 4), (6, 1), (2, 4), (9, 8)] {
+            let with = algorithm2_with(&scn, l_c, r, &mut scratch);
+            let fresh = algorithm2(&scn, l_c, r);
+            assert_eq!(with.assign_main, fresh.assign_main, "l={l_c} r={r}");
+            assert_eq!(with.assign_fed, fresh.assign_fed, "l={l_c} r={r}");
+        }
     }
 }

@@ -22,6 +22,31 @@
 //!    the exact feasibility test, and bisection on `T` yields the exact
 //!    optimum of the min-max program.
 //!
+//! ## §Perf iteration 3 — allocation-free probes and warm starts
+//!
+//! A [`Link`] stores one gain **per client** (there is no per-subchannel
+//! fading in the model), so every water-fill the T-bisection performs is
+//! the *equal-gain* case, whose closed form needs no per-subchannel
+//! `g`/`b` vectors at all: the feasibility oracle now computes one
+//! scalar PSD per client ([`waterfill_equal_gain`]) and writes into a
+//! reused probe buffer ([`ProbeScratch`]) — zero allocation across the
+//! ~60 probes × K clients of a solve, where the old path built three
+//! `Vec`s per client per probe. (The general unequal-gain water-fill
+//! stays available as [`waterfill_min_power`], the property-tested
+//! public API.)
+//!
+//! [`solve_link_hinted`] additionally accepts a **warm-start hint** —
+//! the previous BCD iteration's `(t1, t3)` — probed once to seed
+//! monotone skip bounds: feasibility is monotone in `T`, so a canonical
+//! bisection midpoint at/above a probed-feasible `T` is feasible (and
+//! at/below a probed-infeasible one is infeasible) *without running the
+//! oracle*. The bisection therefore visits the **identical**
+//! `(lo, hi, T*)` sequence as the cold solve — the hint only removes
+//! probes whose outcome is implied — and the PSD image is materialized
+//! at the exact accepted `T*`, keeping the solution bit-identical to
+//! the unhinted path for any hint whatsoever (property-tested in
+//! `rust/tests/prop_optimizer.rs`).
+//!
 //! The unit tests verify water-filling optimality against random
 //! perturbations and the equal-gain closed form; `tests/prop_optimizer.rs`
 //! re-verifies both properties and the bisection tightness as seeded
@@ -43,6 +68,23 @@ pub struct PowerSolution {
     pub t3: f64,
 }
 
+/// Reusable probe buffers for one link's T-bisection (the candidate and
+/// incumbent per-subchannel PSD images).
+#[derive(Clone, Debug, Default)]
+pub struct ProbeScratch {
+    probe: Vec<f64>,
+    best: Vec<f64>,
+}
+
+/// Scratch for a full [`solve_power_hinted`] call: one
+/// [`ProbeScratch`] per link, reused across every feasibility probe of
+/// every BCD iteration.
+#[derive(Clone, Debug, Default)]
+pub struct PowerScratch {
+    main: ProbeScratch,
+    fed: ProbeScratch,
+}
+
 /// Water-filling: minimum power for one client to push `rate` bit/s
 /// through its assigned subchannels. Returns (total watts, per-subchannel
 /// PSD, aligned with `subs`).
@@ -60,10 +102,8 @@ pub fn waterfill_min_power(link: &Link, k: usize, subs: &[usize], rate: f64) -> 
     // inner bisection from the P2 hot loop entirely.
     let equal_gain = g.windows(2).all(|w| (w[0] - w[1]).abs() <= 1e-12 * w[0].abs());
     if equal_gain {
-        let b_tot: f64 = b.iter().sum();
-        let se = rate / b_tot; // bit/s/Hz, uniform across subchannels
-        let psd_common = (se.exp2() - 1.0) / g[0];
-        return (psd_common * b_tot, vec![psd_common; subs.len()]);
+        let (power, psd_common) = waterfill_equal_gain(link, k, subs, rate);
+        return (power, vec![psd_common; subs.len()]);
     }
 
     // rate achieved at water level lam: sum_i B_i * max(0, log2(lam*g_i/ln2))
@@ -124,9 +164,25 @@ pub fn waterfill_min_power(link: &Link, k: usize, subs: &[usize], rate: f64) -> 
     (power, psd)
 }
 
+/// The equal-gain water-fill closed form every in-tree link hits (a
+/// [`Link`] carries one gain per *client*, never per subchannel): the
+/// KKT water level spreads rate uniformly per Hz, so one scalar PSD
+/// covers all of the client's subchannels. Returns
+/// `(total watts, common PSD)` — bit-identical to
+/// [`waterfill_min_power`]'s equal-gain path (same folds, same ops),
+/// with zero allocation.
+fn waterfill_equal_gain(link: &Link, k: usize, subs: &[usize], rate: f64) -> (f64, f64) {
+    let b_tot: f64 = subs.iter().map(|&i| link.subch.bandwidth_hz[i]).sum();
+    let se = rate / b_tot; // bit/s/Hz, uniform across subchannels
+    let psd_common = (se.exp2() - 1.0) / link.snr_coeff(k);
+    (psd_common * b_tot, psd_common)
+}
+
 /// Feasibility oracle for one link: can every client k reach delay
 /// `a_k + C_k/R_k <= t` within per-client cap and total cap? On success
-/// returns the per-subchannel PSD vector (indexed by global subchannel id).
+/// the per-subchannel PSD image (indexed by global subchannel id) is
+/// left in `psd`; on failure `psd` holds garbage. Allocation-free.
+#[allow(clippy::too_many_arguments)]
 fn feasible_at(
     link: &Link,
     assign: &[Vec<usize>],
@@ -135,30 +191,32 @@ fn feasible_at(
     t: f64,
     p_max_w: f64,
     p_th_w: f64,
-) -> Option<Vec<f64>> {
-    let mut psd = vec![0.0; link.subch.len()];
+    psd: &mut [f64],
+) -> bool {
+    psd.fill(0.0);
     let mut total = 0.0;
     for (k, subs) in assign.iter().enumerate() {
         if c_bits[k] <= 0.0 {
             continue;
         }
         if t <= a[k] {
-            return None;
+            return false;
         }
+        debug_assert!(!subs.is_empty(), "validated by solve_link");
         let rate = c_bits[k] / (t - a[k]);
-        let (pw, psds) = waterfill_min_power(link, k, subs, rate);
+        let (pw, psd_common) = waterfill_equal_gain(link, k, subs, rate);
         if !pw.is_finite() || pw > p_max_w * (1.0 + 1e-12) {
-            return None;
+            return false;
         }
         total += pw;
-        for (&i, &p) in subs.iter().zip(&psds) {
-            psd[i] = p;
+        for &i in subs {
+            psd[i] = psd_common;
         }
     }
     if total > p_th_w * (1.0 + 1e-12) {
-        return None;
+        return false;
     }
-    Some(psd)
+    true
 }
 
 /// Exact min-max delay power allocation for one link.
@@ -172,6 +230,27 @@ pub fn solve_link(
     c_bits: &[f64],
     p_max_w: f64,
     p_th_w: f64,
+) -> Result<(f64, Vec<f64>)> {
+    solve_link_hinted(link, assign, a, c_bits, p_max_w, p_th_w, None, &mut ProbeScratch::default())
+}
+
+/// [`solve_link`] with a warm-start hint and caller-provided probe
+/// buffers. The hint (typically the previous BCD iteration's optimum)
+/// is probed once and converted into monotone skip bounds; the
+/// bisection then walks the *canonical* midpoint sequence, skipping
+/// oracle calls whose outcome the bounds imply. Any hint — stale, way
+/// off, non-finite — yields the bit-identical `(T*, psd)` of the cold
+/// solve; a good hint just pays fewer probes.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_link_hinted(
+    link: &Link,
+    assign: &[Vec<usize>],
+    a: &[f64],
+    c_bits: &[f64],
+    p_max_w: f64,
+    p_th_w: f64,
+    hint: Option<f64>,
+    scratch: &mut ProbeScratch,
 ) -> Result<(f64, Vec<f64>)> {
     let k_n = assign.len();
     if a.len() != k_n || c_bits.len() != k_n {
@@ -209,32 +288,94 @@ pub fn solve_link(
         .filter(|(_, &c)| c > 0.0)
         .map(|(&ak, _)| ak)
         .fold(0.0f64, f64::max);
-    // bisection on T
-    let mut best = feasible_at(link, assign, a, c_bits, hi, p_max_w, p_th_w)
-        .ok_or_else(|| anyhow::anyhow!("upper bound infeasible (internal)"))?;
+
+    let m = link.subch.len();
+    scratch.probe.clear();
+    scratch.probe.resize(m, 0.0);
+    scratch.best.clear();
+    scratch.best.resize(m, 0.0);
+
+    // canonical upper-bound probe — also the fallback PSD image
+    if !feasible_at(link, assign, a, c_bits, hi, p_max_w, p_th_w, &mut scratch.best) {
+        bail!("upper bound infeasible (internal)");
+    }
     let mut t_star = hi;
+    let mut best_t = hi; // the t `scratch.best` was computed at
+
+    // Warm start: one probe at the hint seeds the monotone skip bounds.
+    // Feasibility is monotone in t, so every skipped decision equals
+    // what the oracle would have returned — the (lo, hi, t*) sequence
+    // is the cold solve's, bit for bit.
+    let mut known_feasible = f64::INFINITY;
+    let mut known_infeasible = f64::NEG_INFINITY;
+    if let Some(h) = hint {
+        if h.is_finite() && h > lo && h < hi {
+            if feasible_at(link, assign, a, c_bits, h, p_max_w, p_th_w, &mut scratch.probe) {
+                known_feasible = h;
+            } else {
+                known_infeasible = h;
+            }
+        }
+    }
+
+    // bisection on T
     // §Perf iteration 1: 1e-9 relative tolerance on T* (delays are
     // seconds; decisions differ at >1e-3) — was 100 iters @ 1e-12.
     for _ in 0..60 {
         let mid = 0.5 * (lo + hi);
-        match feasible_at(link, assign, a, c_bits, mid, p_max_w, p_th_w) {
-            Some(psd) => {
-                best = psd;
-                t_star = mid;
-                hi = mid;
-            }
-            None => lo = mid,
+        let feas = if mid >= known_feasible {
+            true // implied by a probed-feasible t <= mid
+        } else if mid <= known_infeasible {
+            false // implied by a probed-infeasible t >= mid
+        } else if feasible_at(link, assign, a, c_bits, mid, p_max_w, p_th_w, &mut scratch.probe) {
+            std::mem::swap(&mut scratch.probe, &mut scratch.best);
+            best_t = mid;
+            known_feasible = known_feasible.min(mid);
+            true
+        } else {
+            known_infeasible = known_infeasible.max(mid);
+            false
+        };
+        if feas {
+            t_star = mid;
+            hi = mid;
+        } else {
+            lo = mid;
         }
         if (hi - lo) / hi.max(1e-30) < 1e-9 {
             break;
         }
     }
-    Ok((t_star, best))
+    if best_t != t_star {
+        // t* was accepted through the skip fast path; materialize its
+        // exact PSD image with one final oracle call.
+        let ok = feasible_at(link, assign, a, c_bits, t_star, p_max_w, p_th_w, &mut scratch.best);
+        if !ok {
+            // cannot happen while the oracle is monotone in t; fail
+            // loudly rather than return a PSD image from another t
+            bail!("warm-start accepted an infeasible T* (internal)");
+        }
+    }
+    Ok((t_star, scratch.best.clone()))
 }
 
 /// Solve P2 for the full scenario under a fixed assignment/split/rank:
 /// independent exact solves for the main and fed links.
 pub fn solve_power(scn: &Scenario, alloc: &Allocation) -> Result<PowerSolution> {
+    solve_power_hinted(scn, alloc, None, &mut PowerScratch::default())
+}
+
+/// [`solve_power`] with warm-start hints `(t1, t3)` (the previous BCD
+/// iteration's epigraph optima) and reusable probe buffers —
+/// bit-identical results for any hint, fewer feasibility probes for a
+/// good one. The BCD loop threads its last `PowerSolution` through
+/// here; one-shot callers use [`solve_power`].
+pub fn solve_power_hinted(
+    scn: &Scenario,
+    alloc: &Allocation,
+    hint: Option<(f64, f64)>,
+    scratch: &mut PowerScratch,
+) -> Result<PowerSolution> {
     let k_n = scn.k();
     let b = scn.batch as f64;
     let (l_c, r) = (alloc.l_c, alloc.rank);
@@ -247,13 +388,15 @@ pub fn solve_power(scn: &Scenario, alloc: &Allocation) -> Result<PowerSolution> 
         })
         .collect();
     let c_main: Vec<f64> = (0..k_n).map(|_| b * scn.profile.activation_bits(l_c)).collect();
-    let (t1, psd_main) = solve_link(
+    let (t1, psd_main) = solve_link_hinted(
         &scn.main_link,
         &alloc.assign_main,
         &a_main,
         &c_main,
         scn.p_max_w,
         scn.p_th_main_w,
+        hint.map(|h| h.0),
+        &mut scratch.main,
     )?;
 
     // fed link: no compute offset, payload = Delta Theta_c bits
@@ -261,13 +404,15 @@ pub fn solve_power(scn: &Scenario, alloc: &Allocation) -> Result<PowerSolution> 
     let c_fed: Vec<f64> = (0..k_n)
         .map(|_| scn.profile.client_adapter_bits(l_c, r))
         .collect();
-    let (t3, psd_fed) = solve_link(
+    let (t3, psd_fed) = solve_link_hinted(
         &scn.fed_link,
         &alloc.assign_fed,
         &a_fed,
         &c_fed,
         scn.p_max_w,
         scn.p_th_fed_w,
+        hint.map(|h| h.1),
+        &mut scratch.fed,
     )?;
 
     Ok(PowerSolution {
@@ -293,6 +438,19 @@ mod tests {
         }
     }
 
+    fn feasible(
+        link: &Link,
+        assign: &[Vec<usize>],
+        a: &[f64],
+        c: &[f64],
+        t: f64,
+        p_max: f64,
+        p_th: f64,
+    ) -> bool {
+        let mut psd = vec![0.0; link.subch.len()];
+        feasible_at(link, assign, a, c, t, p_max, p_th, &mut psd)
+    }
+
     #[test]
     fn waterfill_equal_bandwidth_closed_form() {
         // equal gains & bandwidths -> equal rate split
@@ -307,6 +465,19 @@ mod tests {
         }
         let total_rate: f64 = (0..4).map(|i| link.subch_rate(0, i, psd[i])).sum();
         assert!((total_rate - rate).abs() / rate < 1e-9);
+    }
+
+    #[test]
+    fn equal_gain_helper_matches_public_waterfill_bit_for_bit() {
+        let link = test_link(vec![10e3, 40e3, 25e3], vec![5e-10]);
+        for &rate in &[1e4, 8e5, 3e6] {
+            let (p_pub, psd_pub) = waterfill_min_power(&link, 0, &[0, 1, 2], rate);
+            let (p_fast, psd_common) = waterfill_equal_gain(&link, 0, &[0, 1, 2], rate);
+            assert_eq!(p_pub.to_bits(), p_fast.to_bits(), "rate {rate}");
+            for &p in &psd_pub {
+                assert_eq!(p.to_bits(), psd_common.to_bits(), "rate {rate}");
+            }
+        }
     }
 
     #[test]
@@ -368,9 +539,38 @@ mod tests {
         assert!((worst - t).abs() / t < 1e-3, "max delay {worst} vs T* {t}");
         // shrinking T* must be infeasible
         assert!(
-            feasible_at(&link, &assign, &a, &c, t * 0.999, 15.0, 20.0).is_none(),
+            !feasible(&link, &assign, &a, &c, t * 0.999, 15.0, 20.0),
             "T* not tight"
         );
+    }
+
+    #[test]
+    fn hinted_solve_is_bit_identical_for_any_hint() {
+        let link = test_link(vec![25e3; 6], vec![8.9e-10, 3e-10]);
+        let assign = vec![vec![0, 1, 2], vec![3, 4, 5]];
+        let a = vec![0.5, 0.1];
+        let c = vec![2e6, 2e6];
+        let (t_cold, psd_cold) = solve_link(&link, &assign, &a, &c, 15.0, 20.0).unwrap();
+        let mut scratch = ProbeScratch::default();
+        for hint in [
+            None,
+            Some(t_cold),
+            Some(t_cold * (1.0 + 1e-9)),
+            Some(t_cold * 0.5),
+            Some(t_cold * 64.0),
+            Some(0.0),
+            Some(f64::NAN),
+            Some(f64::INFINITY),
+            Some(-3.0),
+        ] {
+            let (t, psd) =
+                solve_link_hinted(&link, &assign, &a, &c, 15.0, 20.0, hint, &mut scratch).unwrap();
+            assert_eq!(t.to_bits(), t_cold.to_bits(), "hint {hint:?}");
+            assert_eq!(psd.len(), psd_cold.len());
+            for (x, y) in psd.iter().zip(&psd_cold) {
+                assert_eq!(x.to_bits(), y.to_bits(), "hint {hint:?}");
+            }
+        }
     }
 
     #[test]

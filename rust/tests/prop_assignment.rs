@@ -1,0 +1,195 @@
+//! Properties of the incremental (heap-based) Algorithm 2 engine
+//! (`opt::assignment`):
+//!
+//! * **Bit-identity** — `algorithm2` (cached rate/power accumulators +
+//!   lazy straggler max-heap) must produce the *exact* grants of the
+//!   naive `algorithm2_reference` scan — same subchannels, same
+//!   clients, same per-client order — on every builder preset and on
+//!   seeded random scenarios whose power budgets are squeezed until the
+//!   C4/C5 caps genuinely bind (the only regime where the two engines'
+//!   control flow actually diverges from the trivial path).
+//! * **Scratch transparency** — reusing one [`AssignScratch`] across
+//!   calls (the BCD loop's hoisted per-link sort orders) never changes
+//!   a grant versus fresh single-use calls.
+//! * **Per-subchannel eligibility (bugfix)** — a client barred by C4
+//!   from a wide subchannel is re-tested on later, narrower ones: the
+//!   old implementation latched the exclusion for the rest of the
+//!   pass, permanently starving the straggler it was built to serve.
+
+use sfllm::config::Config;
+use sfllm::delay::Scenario;
+use sfllm::model::{Gpt2Config, WorkloadProfile};
+use sfllm::net::topology::ClientSite;
+use sfllm::net::{Link, SubchannelSet, Topology};
+use sfllm::opt::assignment::{
+    algorithm2, algorithm2_reference, algorithm2_with, AssignScratch,
+};
+use sfllm::sim::{ScenarioBuilder, PRESETS};
+use sfllm::util::prop::check;
+
+const RANKS: [usize; 5] = [1, 2, 4, 6, 8];
+
+fn assert_identical(scn: &Scenario, l_c: usize, rank: usize, tag: &str) -> Result<(), String> {
+    let fast = algorithm2(scn, l_c, rank);
+    let refr = algorithm2_reference(scn, l_c, rank);
+    if fast.assign_main != refr.assign_main {
+        return Err(format!(
+            "{tag}: main grants diverge at l_c={l_c} r={rank}: {:?} vs {:?}",
+            fast.assign_main, refr.assign_main
+        ));
+    }
+    if fast.assign_fed != refr.assign_fed {
+        return Err(format!(
+            "{tag}: fed grants diverge at l_c={l_c} r={rank}: {:?} vs {:?}",
+            fast.assign_fed, refr.assign_fed
+        ));
+    }
+    if fast.psd_main_nominal.to_bits() != refr.psd_main_nominal.to_bits()
+        || fast.psd_fed_nominal.to_bits() != refr.psd_fed_nominal.to_bits()
+    {
+        return Err(format!("{tag}: nominal PSDs diverge"));
+    }
+    Ok(())
+}
+
+#[test]
+fn heap_engine_is_bit_identical_to_the_reference_on_every_preset() {
+    for preset in PRESETS {
+        let scn = ScenarioBuilder::preset(preset)
+            .unwrap()
+            .tweak(|c| c.train.seq = 128)
+            .build()
+            .unwrap();
+        let l_mid = (scn.profile.blocks.len() / 2).max(1);
+        for (l_c, r) in [(l_mid, 4), (1, 1), (scn.profile.blocks.len() - 1, 8)] {
+            assert_identical(&scn, l_c, r, preset).unwrap_or_else(|e| panic!("{e}"));
+        }
+    }
+}
+
+#[test]
+fn heap_engine_is_bit_identical_on_seeded_random_scenarios() {
+    check("algorithm2 heap == reference", 0x5EED, 40, |rng| {
+        let mut cfg = Config::paper_defaults();
+        cfg.system.clients = 2 + rng.below(9); // 2..=10
+        cfg.system.subch_main = cfg.system.clients + rng.below(40);
+        cfg.system.subch_fed = cfg.system.clients + rng.below(40);
+        cfg.system.bandwidth_main_hz = rng.range(100e3, 4e6);
+        cfg.system.bandwidth_fed_hz = rng.range(100e3, 4e6);
+        cfg.system.d_main_m = rng.range(50.0, 300.0);
+        cfg.system.seed = rng.next_u64();
+        // squeeze the power caps so C4/C5 genuinely bind: this is the
+        // regime where the straggler heap, the deferred retests, and
+        // the round-robin fallback all fire
+        cfg.system.p_max_dbm = rng.range(30.0, 42.0);
+        cfg.system.p_th_main_dbm = rng.range(38.0, 47.0);
+        cfg.system.p_th_fed_dbm = rng.range(38.0, 47.0);
+        cfg.train.batch = 1 + rng.below(32);
+        cfg.train.seq = 128 << rng.below(2);
+        let scn = ScenarioBuilder::from_config(cfg).build().expect("scenario build");
+        let l_c = 1 + rng.below(scn.profile.blocks.len() - 1);
+        let r = *rng.choose(&RANKS);
+        assert_identical(&scn, l_c, r, "random")
+    });
+}
+
+#[test]
+fn scratch_reuse_never_changes_a_grant() {
+    check("AssignScratch transparency", 0x5C8A, 15, |rng| {
+        let mut cfg = Config::paper_defaults();
+        cfg.system.clients = 2 + rng.below(6);
+        cfg.system.subch_main = cfg.system.clients + rng.below(20);
+        cfg.system.subch_fed = cfg.system.clients + rng.below(20);
+        cfg.system.seed = rng.next_u64();
+        cfg.train.seq = 128;
+        let scn = ScenarioBuilder::from_config(cfg).build().expect("scenario build");
+        let mut scratch = AssignScratch::new();
+        for _ in 0..4 {
+            let l_c = 1 + rng.below(scn.profile.blocks.len() - 1);
+            let r = *rng.choose(&RANKS);
+            let with = algorithm2_with(&scn, l_c, r, &mut scratch);
+            let fresh = algorithm2(&scn, l_c, r);
+            if with.assign_main != fresh.assign_main || with.assign_fed != fresh.assign_fed {
+                return Err(format!("scratch reuse diverged at l_c={l_c} r={r}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Handcrafted scenario reproducing the eligibility-latch bug: the
+/// straggler (client 0: 0.01 GHz — orders of magnitude slower than
+/// client 1) is barred by C4 from a wide phase-2 subchannel, and a
+/// narrower (cheaper) subchannel later in the pass *does* fit its cap.
+/// The old `eligible[k] = false` latch dropped client 0 for the rest of
+/// the pass, handing the narrow subchannel to the fast client; the
+/// per-subchannel retest gives it to the straggler.
+fn latch_trap_scenario() -> Scenario {
+    let topo = Topology {
+        clients: vec![
+            ClientSite { d_main_m: 100.0, d_fed_m: 10.0, f_cycles: 0.01e9 },
+            ClientSite { d_main_m: 100.0, d_fed_m: 10.0, f_cycles: 5.0e9 },
+        ],
+    };
+    // widest-first order: ids [0 (300k), 2 (150k), 1 (100k), 3 (50k), 4 (49k)]
+    // nominal PSD = 64.9 W / 649 kHz = 1e-4 W/Hz
+    // -> per-subchannel powers ~ [30, 10, 15, 5, 4.9] W
+    let main_link = Link {
+        subch: SubchannelSet { bandwidth_hz: vec![300e3, 100e3, 150e3, 50e3, 49e3] },
+        gain_product: 160.0,
+        noise_psd: 3.98e-21,
+        client_gain: vec![8.9e-10, 8.9e-10],
+    };
+    let fed_link = Link {
+        subch: SubchannelSet::equal_split(500e3, 2),
+        gain_product: 80.0,
+        noise_psd: 3.98e-21,
+        client_gain: vec![1.2e-9, 1.2e-9],
+    };
+    Scenario {
+        profile: WorkloadProfile::new(Gpt2Config::gpt2_s(), 128),
+        topo,
+        main_link,
+        fed_link,
+        dynamics: sfllm::config::DynamicsConfig::default(),
+        objective: sfllm::config::ObjectiveConfig::default(),
+        kappa_client: 1.0 / 1024.0,
+        kappa_server: 1.0 / 32768.0,
+        f_server: 5e9,
+        batch: 4,
+        local_steps: 3,
+        // phase 1 parks client 0 at 30 W and client 1 at 15 W. The
+        // 100 kHz subchannel (+10 W) busts client 0's 38 W cap (40 W)
+        // but fits client 1; the 50 kHz one (+5 W -> 35 W) fits the
+        // straggler again.
+        p_max_w: 38.0,
+        p_th_main_w: 64.9,
+        p_th_fed_w: 50.0,
+    }
+}
+
+#[test]
+fn client_barred_from_a_wide_subchannel_still_gets_a_narrower_one() {
+    let scn = latch_trap_scenario();
+    let fast = algorithm2(&scn, 3, 4);
+    let refr = algorithm2_reference(&scn, 3, 4);
+    assert_eq!(fast.assign_main, refr.assign_main, "engines diverge");
+    assert_eq!(fast.assign_fed, refr.assign_fed, "engines diverge");
+    // phase 1: client 0 (weakest) takes id 0, client 1 takes id 2
+    assert_eq!(fast.assign_main[0][0], 0);
+    assert_eq!(fast.assign_main[1][0], 2);
+    // the wide 100 kHz subchannel (id 1) busts the straggler's cap and
+    // lands on client 1 ...
+    assert!(
+        fast.assign_main[1].contains(&1),
+        "wide subchannel should fall to the fast client: {:?}",
+        fast.assign_main
+    );
+    // ... and the narrow 50 kHz one (id 3) must come back to the
+    // straggler — the latched implementation gave it to client 1
+    assert!(
+        fast.assign_main[0].contains(&3),
+        "straggler lost the narrow subchannel it can afford: {:?}",
+        fast.assign_main
+    );
+}

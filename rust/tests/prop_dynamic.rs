@@ -341,3 +341,121 @@ fn reopt_period_axis_drives_config_strategy_columns() {
         "config-driven periodic:2 diverged from the explicit strategy"
     );
 }
+
+// ---------------------------------------------------------------------------
+// PR-5: the delta re-optimization path (column cache + fresh-solve memo).
+
+#[test]
+fn frozen_runs_do_zero_solver_work_beyond_the_adoption_compare_on_every_preset() {
+    // ρ = 1 freezes the channel: after round 0 the scenario handed to
+    // the policy is bit-static, so a re-solve would reproduce the memo
+    // exactly — the engine must serve it without running the solver
+    // (fresh_solves == 0) under EVERY strategy, while still counting
+    // the strategy's re-solve decisions and realizing the exact
+    // OneShot totals.
+    let conv = short_conv();
+    for preset in PRESETS {
+        let scn = preset_builder(preset)
+            .channel_correlation(1.0)
+            .tweak(|c| {
+                c.dynamics.compute_jitter = 0.0;
+                c.dynamics.dropout = 0.0;
+            })
+            .build()
+            .unwrap();
+        let cache = WorkloadCache::new();
+        let sim = RoundSimulator::new(&scn, &conv, &cache, &RANKS);
+        let policy = Proposed::with_ranks(&RANKS);
+        let one = sim.run(&policy, ReOptStrategy::OneShot).unwrap();
+        assert_eq!(one.fresh_solves, 0, "{preset}: one_shot never re-solves");
+        for strategy in [ReOptStrategy::EveryRound, ReOptStrategy::OnDegrade(0.0)] {
+            let run = sim.run(&policy, strategy).unwrap();
+            assert_eq!(
+                run.fresh_solves, 0,
+                "{preset}: frozen {} ran the solver",
+                strategy.label()
+            );
+            assert_eq!(
+                run.realized_delay.to_bits(),
+                one.realized_delay.to_bits(),
+                "{preset}: frozen {} moved the realized delay",
+                strategy.label()
+            );
+            assert_eq!(
+                run.realized_energy.to_bits(),
+                one.realized_energy.to_bits(),
+                "{preset}: frozen {} moved the realized energy",
+                strategy.label()
+            );
+            for (a, b) in run.rounds.iter().zip(&one.rounds) {
+                assert_eq!(a.delay.to_bits(), b.delay.to_bits(), "{preset}: round {}", a.round);
+                assert_eq!(a.energy.to_bits(), b.energy.to_bits(), "{preset}: round {}", a.round);
+                assert_eq!(a.weight.to_bits(), b.weight.to_bits(), "{preset}: round {}", a.round);
+                assert_eq!((a.l_c, a.rank), (b.l_c, b.rank), "{preset}: round {}", a.round);
+            }
+        }
+    }
+}
+
+#[test]
+fn drifting_every_round_solves_fresh_every_round() {
+    // the memo must never serve a stale solution once the channel moves
+    let scn = preset_builder("mobile_edge")
+        .channel_correlation(0.5)
+        .build()
+        .unwrap();
+    let conv = short_conv();
+    let cache = WorkloadCache::new();
+    let sim = RoundSimulator::new(&scn, &conv, &cache, &RANKS);
+    let run = sim
+        .run(&Proposed::with_ranks(&RANKS), ReOptStrategy::EveryRound)
+        .unwrap();
+    assert_eq!(run.fresh_solves, run.resolves, "drift must defeat the memo");
+    assert!(run.fresh_solves > 0);
+}
+
+#[test]
+fn frozen_dynamic_sweep_bytes_are_reproducible_and_strategy_invariant() {
+    // the frozen-channel invariant at the sweep-report surface: the
+    // every_round column (served entirely by the delta path: cached
+    // rate columns + memoized solves) must carry the exact bytes of
+    // the one_shot column, and repeated runs — whose ColumnCaches and
+    // memos are freshly stateful each time — must reproduce the report
+    // byte for byte.
+    let builder = preset_builder("mobile_edge").channel_correlation(1.0).tweak(|c| {
+        c.dynamics.compute_jitter = 0.0;
+        c.dynamics.dropout = 0.0;
+    });
+    let conv = short_conv();
+    let inner: Arc<dyn AllocationPolicy> = Arc::new(Proposed::with_ranks(&RANKS));
+    let run_sweep = || {
+        let policies: Vec<Arc<dyn AllocationPolicy>> = vec![
+            Arc::new(DynamicPolicy::new(inner.clone(), ReOptStrategy::OneShot, &RANKS)),
+            Arc::new(DynamicPolicy::new(inner.clone(), ReOptStrategy::EveryRound, &RANKS)),
+        ];
+        SweepRunner::new(&builder)
+            .policies(policies)
+            .convergence(conv.clone())
+            .threads(1)
+            .run()
+            .unwrap()
+    };
+    let a = run_sweep();
+    let b = run_sweep();
+    assert_eq!(a.to_csv_string(), b.to_csv_string(), "sweep CSV bytes moved across runs");
+    assert_eq!(a.to_json_string(), b.to_json_string(), "sweep JSON bytes moved across runs");
+    let p = a.points.first().expect("one grid point");
+    assert_eq!(
+        p.outcomes[0].objective.to_bits(),
+        p.outcomes[1].objective.to_bits(),
+        "frozen every_round column diverged from one_shot"
+    );
+    assert_eq!(
+        p.outcomes[0].delay.to_bits(),
+        p.outcomes[1].delay.to_bits(),
+    );
+    assert_eq!(
+        p.outcomes[0].energy.to_bits(),
+        p.outcomes[1].energy.to_bits(),
+    );
+}

@@ -248,3 +248,104 @@ fn sequential_scans_get_trapped_where_the_joint_scan_escapes() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// PR-5: the delta column engine (RateColumns / ColumnCache) behind the
+// round-varying simulator's re-opt path.
+
+#[test]
+fn column_cache_delta_updates_are_bit_identical_to_cold_computes() {
+    use sfllm::delay::{ColumnCache, RateColumns};
+    use sfllm::util::rng::Rng;
+
+    let conv = ConvergenceModel::paper_default();
+    let mut scn = ScenarioBuilder::preset("mobile_edge")
+        .unwrap()
+        .tweak(|c| c.train.seq = 128)
+        .build()
+        .unwrap();
+    let l_mid = (scn.profile.blocks.len() / 2).max(1);
+    let alloc_a = bcd::initial_alloc(&scn, l_mid, 4);
+    // a second, guaranteed-distinct communication block
+    let mut alloc_b = alloc_a.clone();
+    alloc_b.l_c = 1;
+    alloc_b.rank = 1;
+    alloc_b.psd_main.iter_mut().for_each(|p| *p *= 0.5);
+    let mut cache = ColumnCache::new(4);
+    let mut rng = Rng::new(0xC01);
+
+    for round in 0..12 {
+        // drift a random subset of gains (none / some / all)
+        let kind = round % 3;
+        for k in 0..scn.k() {
+            if kind == 1 && rng.f64() < 0.5 {
+                continue; // partial drift
+            }
+            if kind > 0 {
+                scn.main_link.client_gain[k] *= rng.range(0.8, 1.25);
+                scn.fed_link.client_gain[k] *= rng.range(0.8, 1.25);
+            }
+        }
+        for alloc in [&alloc_a, &alloc_b] {
+            let cold = RateColumns::compute(&scn, alloc);
+            let cached = cache.columns_for(&scn, alloc).clone();
+            for (name, a, b) in [
+                ("rate_main", &cold.rate_main, &cached.rate_main),
+                ("rate_fed", &cold.rate_fed, &cached.rate_fed),
+                ("power_main", &cold.power_main, &cached.power_main),
+                ("power_fed", &cold.power_fed, &cached.power_fed),
+            ] {
+                assert_eq!(a.len(), b.len());
+                for (k, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "round {round}: {name}[{k}] diverged: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+    assert_eq!(cache.len(), 2, "two communication blocks -> two entries");
+
+    // and an evaluator built over cached columns serves the exact
+    // uncached evaluations
+    let cols = cache.columns_for(&scn, &alloc_a).clone();
+    let table = std::sync::Arc::new(sfllm::model::WorkloadTable::new(&scn.profile, &RANKS));
+    let ev_cached = DelayEvaluator::with_columns(&scn, &conv, table.clone(), cols);
+    let ev_cold = DelayEvaluator::new(&scn, &alloc_a, &conv, table);
+    for l_c in scn.profile.split_candidates() {
+        for &r in &RANKS {
+            assert_eq!(
+                ev_cached.eval(l_c, r).to_bits(),
+                ev_cold.eval(l_c, r).to_bits(),
+                "delay diverged at ({l_c}, {r})"
+            );
+            assert_eq!(
+                ev_cached.eval_energy(l_c, r).to_bits(),
+                ev_cold.eval_energy(l_c, r).to_bits(),
+                "energy diverged at ({l_c}, {r})"
+            );
+        }
+    }
+}
+
+#[test]
+fn column_cache_evicts_least_recently_used_blocks() {
+    use sfllm::delay::ColumnCache;
+
+    let scn = ScenarioBuilder::new().build().unwrap();
+    let mut cache = ColumnCache::new(2);
+    let a = bcd::initial_alloc(&scn, 6, 4);
+    let mut b = a.clone();
+    b.psd_main.iter_mut().for_each(|p| *p *= 0.5);
+    let mut c = a.clone();
+    c.psd_main.iter_mut().for_each(|p| *p *= 0.25);
+    cache.columns_for(&scn, &a);
+    cache.columns_for(&scn, &b);
+    assert_eq!(cache.len(), 2);
+    cache.columns_for(&scn, &c); // evicts the LRU entry (a)
+    assert_eq!(cache.len(), 2);
+    cache.columns_for(&scn, &b); // still cached
+    assert_eq!(cache.len(), 2);
+}

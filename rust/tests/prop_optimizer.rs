@@ -8,7 +8,7 @@ use sfllm::config::Config;
 use sfllm::delay::{ConvergenceModel, Scenario};
 use sfllm::opt::assignment::algorithm2;
 use sfllm::opt::bcd::{self, BcdOptions};
-use sfllm::opt::power::{solve_power, waterfill_min_power};
+use sfllm::opt::power::{solve_power, solve_power_hinted, waterfill_min_power, PowerScratch};
 use sfllm::opt::{baselines, rank, split};
 use sfllm::sim::ScenarioBuilder;
 use sfllm::util::prop::check;
@@ -130,6 +130,60 @@ fn prop_power_solution_feasible_and_tight() {
             .fold(0.0f64, f64::max);
         if (worst - sol.t1).abs() / sol.t1.max(1e-12) > 1e-3 {
             return Err(format!("t1 {} but achieved {}", sol.t1, worst));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_warm_started_p2_is_bit_identical_for_any_hint() {
+    // solve_power_hinted's monotone-skip warm start must never move a
+    // bit of the solution — for the previous optimum (the BCD hint),
+    // for garbage hints, for non-finite hints — and scratch reuse
+    // across solves must be equally invisible.
+    check("P2 warm-start bit-identity", 0x9A9A, 20, |rng| {
+        let scn = random_scenario(rng);
+        let l_c = 1 + rng.below(scn.profile.blocks.len() - 1);
+        let r = *rng.choose(&RANKS);
+        let a = algorithm2(&scn, l_c, r);
+        let alloc = sfllm::delay::Allocation {
+            assign_main: a.assign_main,
+            assign_fed: a.assign_fed,
+            psd_main: vec![0.0; scn.main_link.subch.len()],
+            psd_fed: vec![0.0; scn.fed_link.subch.len()],
+            l_c,
+            rank: r,
+        };
+        let cold = solve_power(&scn, &alloc).map_err(|e| e.to_string())?;
+        let mut scratch = PowerScratch::default();
+        let hints = [
+            None,
+            Some((cold.t1, cold.t3)),
+            Some((cold.t1 * (1.0 + 1e-9), cold.t3 * (1.0 - 1e-9))),
+            Some((cold.t1 * 0.25, cold.t3 * 8.0)),
+            Some((rng.range(1e-9, 1e4), rng.range(1e-9, 1e4))),
+            Some((f64::NAN, f64::INFINITY)),
+            Some((0.0, -1.0)),
+        ];
+        for hint in hints {
+            let warm =
+                solve_power_hinted(&scn, &alloc, hint, &mut scratch).map_err(|e| e.to_string())?;
+            if warm.t1.to_bits() != cold.t1.to_bits() || warm.t3.to_bits() != cold.t3.to_bits() {
+                return Err(format!(
+                    "hint {hint:?} moved T*: ({}, {}) vs ({}, {})",
+                    warm.t1, warm.t3, cold.t1, cold.t3
+                ));
+            }
+            for (x, y) in warm.psd_main.iter().zip(&cold.psd_main) {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!("hint {hint:?} moved a main PSD: {x} vs {y}"));
+                }
+            }
+            for (x, y) in warm.psd_fed.iter().zip(&cold.psd_fed) {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!("hint {hint:?} moved a fed PSD: {x} vs {y}"));
+                }
+            }
         }
         Ok(())
     });
