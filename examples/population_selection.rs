@@ -1,0 +1,93 @@
+//! Population-engine walk-through on the `metro_population` preset: a
+//! fleet of 10^5 modeled clients whose channel/compute state is lazily
+//! materialized from per-client seeded streams, with a 64-client cohort
+//! re-selected every round and the slowest 10% of each cohort cut by the
+//! straggler deadline. The example plays the same seeded fleet out under
+//! every cohort-selection policy × re-optimization strategy and compares
+//! realized total fine-tuning delay, solver work, and how far into the
+//! population each selector reached.
+//!
+//! Per-round cost is O(cohort), not O(population) — only the selected
+//! cohort is ever lowered into a `Scenario` for the incremental solver.
+//!
+//! ```bash
+//! cargo run --release --example population_selection -- \
+//!     [--population 100000] [--cohort 64] [--deadline-drop 0.1] \
+//!     [--selectors uniform,weighted,staleness:5] \
+//!     [--strategies one_shot,periodic:5]
+//! ```
+
+use anyhow::Result;
+use sfllm::delay::{ConvergenceModel, WorkloadCache};
+use sfllm::opt::PolicyRegistry;
+use sfllm::sim::{Population, PopulationSimulator, ReOptStrategy, ScenarioBuilder};
+use sfllm::util::cli::Args;
+
+fn main() -> Result<()> {
+    let mut args = Args::from_env();
+    let selectors_spec = args.str_or("selectors", "uniform,weighted,staleness:5");
+    let strategies_spec = args.str_or("strategies", "one_shot,periodic:5");
+    let mut cfg = ScenarioBuilder::preset("metro_population")?.into_config();
+    cfg.apply_file_and_args(&mut args)?;
+    args.finish()?;
+
+    println!(
+        "=== metro_population: {} modeled clients | cohort {} | deadline cuts slowest {:.0}% ===",
+        cfg.population.size,
+        cfg.population.cohort,
+        100.0 * cfg.population.deadline_drop
+    );
+    let d = &cfg.dynamics;
+    println!(
+        "    dynamics: rho={} | jitter {} | dropout {}/{}",
+        d.rho, d.compute_jitter, d.dropout, d.rejoin
+    );
+
+    let conv = ConvergenceModel::paper_default();
+    let cache = WorkloadCache::new();
+    let reg = PolicyRegistry::paper_suite(&cfg.train.ranks, cfg.system.seed, 3);
+    let proposed = reg.get("proposed")?;
+
+    let mut strategies = Vec::new();
+    for spec in strategies_spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        strategies.push(ReOptStrategy::parse(spec)?);
+    }
+
+    for sel in selectors_spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let mut scfg = cfg.clone();
+        scfg.population.selector = sel.to_string();
+        let pop = Population::new(&scfg)?;
+        let sim = PopulationSimulator::new(&pop, &conv, &cache, &scfg.train.ranks);
+        println!("\nselector {}:", pop.selector_label());
+        let mut one_shot = None;
+        for &strategy in &strategies {
+            let out = sim.run(proposed.as_ref(), strategy)?;
+            let vs = match one_shot {
+                Some(base) if base > 0.0 && strategy != ReOptStrategy::OneShot => {
+                    format!(" ({:+.1}% vs one_shot)", 100.0 * (out.realized_delay / base - 1.0))
+                }
+                _ => String::new(),
+            };
+            if strategy == ReOptStrategy::OneShot {
+                one_shot = Some(out.realized_delay);
+            }
+            println!(
+                "  {:<14} realized {:>9.1} s{vs} | {} rounds | {} fresh solves | \
+                 reached {} clients | {} deadline cuts",
+                strategy.label(),
+                out.realized_delay,
+                out.rounds.len(),
+                out.fresh_solves,
+                out.unique_participants,
+                out.deadline_drops
+            );
+        }
+    }
+
+    println!(
+        "\nEvery number above touched only O(cohort) state per round; the other \
+         ~{} clients were advanced in closed form when (re-)selected.",
+        cfg.population.size.saturating_sub(cfg.population.cohort)
+    );
+    Ok(())
+}

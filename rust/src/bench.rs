@@ -2,7 +2,7 @@
 //!
 //! Runs the `micro_hotpath` axes — the optimizer pieces the BCD loop
 //! and the round-varying simulator hit per iteration/round — and emits
-//! a machine-readable JSON report (`BENCH_pr5.json`) so the repo's perf
+//! a machine-readable JSON report (`BENCH_pr6.json`) so the repo's perf
 //! trajectory is tracked in CI instead of living in bench stdout:
 //!
 //! * `algorithm2` — the heap-based Algorithm 2 vs the naive reference
@@ -16,12 +16,21 @@
 //!   the cached `DelayEvaluator`;
 //! * `dynamic` — full round-varying runs per re-opt strategy on the
 //!   paper preset (ρ = 0.8), with the actual-solver-call count
-//!   (`fresh_solves`) next to the wall time.
+//!   (`fresh_solves`) next to the wall time;
+//! * `population` — per-round cohort cost on the `metro_population`
+//!   preset at population ∈ {10^3, 10^4, 10^5} with the cohort fixed
+//!   at 64: the whole point of the lazy population engine is that
+//!   `round_ms` is O(cohort), so it must stay flat (CI asserts ≤2x
+//!   between 10^3 and 10^5) while `select_us` — the only O(population)
+//!   step — is tracked separately.
 //!
 //! Timings auto-scale their iteration counts to a small per-axis time
 //! budget, so a default run stays CI-friendly (~1–2 min); `--full`
-//! quadruples the budgets for lower-variance numbers. CI validates the
-//! JSON and uploads it as an artifact (see `.github/workflows/ci.yml`);
+//! quadruples the budgets for lower-variance numbers. The report stamps
+//! its provenance (real `unix_time` plus the `rustc --version` string)
+//! so cross-PR artifact comparisons know what produced each number. CI
+//! validates the JSON, gates on >25% regressions vs the previous PR's
+//! artifact, and uploads it (see `.github/workflows/ci.yml`);
 //! EXPERIMENTS.md §Perf narrates the trajectory.
 
 use std::time::Instant;
@@ -31,7 +40,10 @@ use anyhow::{Context, Result};
 use crate::delay::{ConvergenceModel, DelayEvaluator, WorkloadCache};
 use crate::opt::policy::Proposed;
 use crate::opt::{assignment, bcd, power, AllocationPolicy};
-use crate::sim::{ReOptStrategy, RoundSimulator, ScenarioBuilder};
+use crate::sim::{
+    Population, PopulationSimulator, PopulationState, ReOptStrategy, RoundSimulator,
+    ScenarioBuilder,
+};
 
 /// Options for one harness run.
 #[derive(Clone, Debug, Default)]
@@ -83,6 +95,19 @@ pub struct DynPoint {
     pub fresh_solves: usize,
 }
 
+/// One population scaling point: cohort selection + per-round cost on
+/// the `metro_population` preset at a fixed cohort of 64.
+#[derive(Clone, Debug)]
+pub struct PopPoint {
+    pub population: usize,
+    pub cohort: usize,
+    /// One cohort selection over the whole fleet (the O(population) step).
+    pub select_us: f64,
+    /// Full-run wall time divided by rounds (must stay O(cohort)).
+    pub round_ms: f64,
+    pub rounds: usize,
+}
+
 /// Everything one harness run measured.
 #[derive(Clone, Debug)]
 pub struct BenchReport {
@@ -91,6 +116,10 @@ pub struct BenchReport {
     pub solve_cached: Vec<SolvePoint>,
     pub grid_scan: GridScanPoint,
     pub dynamic: Vec<DynPoint>,
+    pub population: Vec<PopPoint>,
+    /// `rustc --version` of the toolchain that produced this report
+    /// (`"unknown"` when no rustc is on PATH).
+    pub rustc: String,
 }
 
 /// Seconds per op: one warmup + measurement pass sizes the iteration
@@ -155,6 +184,68 @@ fn scaling_scenario(k: usize) -> Result<crate::delay::Scenario> {
         .clients(k)
         .build()
         .with_context(|| format!("building many_clients K={k}"))
+}
+
+/// The toolchain provenance string stamped into the JSON report.
+fn rustc_version() -> String {
+    std::process::Command::new("rustc")
+        .arg("--version")
+        .output()
+        .ok()
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// The population scaling axis: `metro_population` with the fleet size
+/// swept across three decades while the cohort stays at 64. Uses a
+/// short fitted convergence model so each probe run finishes in a few
+/// dozen rounds; the per-round number is what CI gates on.
+pub fn population_axis(budget_s: f64) -> Result<Vec<PopPoint>> {
+    let conv = ConvergenceModel::fitted(4.0, 1.0, 0.85);
+    let ranks = vec![1usize, 4];
+    let mut points = Vec::new();
+    for &n in &[1_000usize, 10_000, 100_000] {
+        eprintln!("bench: population axis N={n} ...");
+        let mut cfg = ScenarioBuilder::preset("metro_population")
+            .context("metro_population preset")?
+            .into_config();
+        cfg.population.size = n;
+        cfg.train.ranks = ranks.clone();
+        let pop = Population::new(&cfg)
+            .with_context(|| format!("population axis: building the N={n} fleet"))?;
+
+        // selection alone — the only step allowed to scale with N
+        let mut state = PopulationState::new(pop.size());
+        let mut round = 0usize;
+        let select_s = time_auto(budget_s, || {
+            let cohort = pop.select(&mut state, round);
+            std::hint::black_box(&cohort);
+            round += 1;
+        });
+
+        // full runs: per-round cost must be independent of N
+        let cache = WorkloadCache::new();
+        let sim = PopulationSimulator::new(&pop, &conv, &cache, &ranks);
+        let proposed = Proposed::with_ranks(&ranks);
+        let probe = sim
+            .run(&proposed, ReOptStrategy::Periodic(5))
+            .with_context(|| format!("population axis: probe run at N={n}"))?;
+        let rounds = probe.rounds.len().max(1);
+        let run_s = time_auto(budget_s.max(0.3), || {
+            let r = sim.run(&proposed, ReOptStrategy::Periodic(5)).unwrap();
+            std::hint::black_box(r.realized_delay);
+        });
+        points.push(PopPoint {
+            population: n,
+            cohort: pop.cohort(),
+            select_us: select_s * 1e6,
+            round_ms: run_s * 1e3 / rounds as f64,
+            rounds,
+        });
+    }
+    Ok(points)
 }
 
 /// Run every axis and collect the report.
@@ -267,12 +358,17 @@ pub fn run(opts: &BenchOptions) -> Result<BenchReport> {
         });
     }
 
+    // --- population scaling at fixed cohort ----------------------------
+    let population = population_axis(budget)?;
+
     Ok(BenchReport {
         algorithm2,
         p2_power,
         solve_cached,
         grid_scan,
         dynamic,
+        population,
+        rustc: rustc_version(),
     })
 }
 
@@ -310,6 +406,14 @@ impl BenchReport {
                 p.strategy, p.ms, p.rounds, p.fresh_solves
             );
         }
+        println!("\npopulation scaling (metro_population, cohort fixed):");
+        for p in &self.population {
+            println!(
+                "  N={:<7} cohort={:<4} select {:>10.2} us   round {:>10.3} ms   ({} rounds)",
+                p.population, p.cohort, p.select_us, p.round_ms, p.rounds
+            );
+        }
+        println!("\ntoolchain: {}", self.rustc);
     }
 
     /// The machine-readable report (schema `sfllm-bench-v1`).
@@ -359,23 +463,41 @@ impl BenchReport {
                 )
             })
             .collect();
+        let population: Vec<String> = self
+            .population
+            .iter()
+            .map(|p| {
+                format!(
+                    "{{\"population\": {}, \"cohort\": {}, \"select_us\": {}, \
+                     \"round_ms\": {}, \"rounds\": {}}}",
+                    p.population,
+                    p.cohort,
+                    jnum(p.select_us),
+                    jnum(p.round_ms),
+                    p.rounds
+                )
+            })
+            .collect();
         let unix = std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)
             .map(|d| d.as_secs())
             .unwrap_or(0);
+        let rustc = self.rustc.replace('\\', "\\\\").replace('"', "\\\"");
         format!(
-            "{{\n  \"schema\": \"sfllm-bench-v1\",\n  \"pr\": \"pr5\",\n  \
+            "{{\n  \"schema\": \"sfllm-bench-v1\",\n  \"pr\": \"pr6\",\n  \
              \"provenance\": \"generated by `sfllm bench`\",\n  \"unix_time\": {unix},\n  \
+             \"rustc\": \"{rustc}\",\n  \
              \"axes\": {{\n    \"algorithm2\": [{}],\n    \"p2_power\": [{}],\n    \
              \"solve_cached\": [{}],\n    \"grid_scan\": {{\"clone_us\": {}, \"cached_us\": {}, \
-             \"speedup\": {}}},\n    \"dynamic\": [{}]\n  }}\n}}\n",
+             \"speedup\": {}}},\n    \"dynamic\": [{}],\n    \"population\": [{}]\n  }}\n}}\n",
             algorithm2.join(", "),
             p2.join(", "),
             solve.join(", "),
             jnum(self.grid_scan.clone_us),
             jnum(self.grid_scan.cached_us),
             jnum(self.grid_scan.speedup),
-            dynamic.join(", ")
+            dynamic.join(", "),
+            population.join(", ")
         )
     }
 
@@ -415,11 +537,30 @@ mod tests {
                 rounds: 28,
                 fresh_solves: 27,
             }],
+            population: vec![PopPoint {
+                population: 100_000,
+                cohort: 64,
+                select_us: 120.0,
+                round_ms: 3.5,
+                rounds: 30,
+            }],
+            rustc: "rustc 1.0.0 (\"quoted\")".to_string(),
         };
         let j = crate::util::json::Json::parse(&rep.to_json_string()).unwrap();
         assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "sfllm-bench-v1");
+        assert_eq!(j.get("pr").unwrap().as_str().unwrap(), "pr6");
+        // provenance: a real timestamp plus the (escaped) toolchain string
+        assert!(j.get("unix_time").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("rustc").unwrap().as_str().unwrap(), "rustc 1.0.0 (\"quoted\")");
         let axes = j.get("axes").unwrap();
-        for key in ["algorithm2", "p2_power", "solve_cached", "grid_scan", "dynamic"] {
+        for key in [
+            "algorithm2",
+            "p2_power",
+            "solve_cached",
+            "grid_scan",
+            "dynamic",
+            "population",
+        ] {
             assert!(axes.get(key).is_ok(), "missing axis {key}");
         }
         let a2 = &axes.get("algorithm2").unwrap().as_arr().unwrap()[0];
@@ -427,5 +568,14 @@ mod tests {
         assert!(a2.get("speedup").unwrap().as_f64().unwrap() > 1.0);
         let d = &axes.get("dynamic").unwrap().as_arr().unwrap()[0];
         assert_eq!(d.get("fresh_solves").unwrap().as_usize().unwrap(), 27);
+        let p = &axes.get("population").unwrap().as_arr().unwrap()[0];
+        assert_eq!(p.get("population").unwrap().as_usize().unwrap(), 100_000);
+        assert_eq!(p.get("cohort").unwrap().as_usize().unwrap(), 64);
+        assert!(p.get("round_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn rustc_version_never_panics_and_is_nonempty() {
+        assert!(!rustc_version().is_empty());
     }
 }

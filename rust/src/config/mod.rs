@@ -152,6 +152,43 @@ impl Default for DynamicsConfig {
     }
 }
 
+/// Population-scale simulation parameters consumed by
+/// [`crate::sim::Population`] / the `population` CLI subcommand: a
+/// fleet of `size` modeled clients out of which a `cohort` is invited
+/// each round by a `selector`, with an optional straggler deadline.
+/// `system.clients` is ignored on this path — the cohort takes its
+/// place as the per-round K.
+#[derive(Clone, Debug)]
+pub struct PopulationConfig {
+    /// Modeled fleet size (clients are lazily materialized; 10^5–10^6
+    /// is cheap).
+    pub size: usize,
+    /// Per-round cohort size (clamped to `size`); must fit on the
+    /// subchannels.
+    pub cohort: usize,
+    /// Selection policy spec: `uniform`, `weighted`, or
+    /// `staleness:<tau>` (see `sim::selector::parse_selector`).
+    pub selector: String,
+    /// Straggler deadline: drop the slowest fraction in [0, 1) of the
+    /// round's online cohort from the aggregate; 0 disables.
+    pub deadline_drop: f64,
+    /// Seed of the population streams (geometry + selection lifecycle;
+    /// the environment evolution keys on `dynamics.seed`).
+    pub seed: u64,
+}
+
+impl Default for PopulationConfig {
+    fn default() -> Self {
+        PopulationConfig {
+            size: 10_000,
+            cohort: 64,
+            selector: "uniform".to_string(),
+            deadline_drop: 0.0,
+            seed: 2,
+        }
+    }
+}
+
 /// Optimization-objective and energy-model parameters consumed by
 /// [`crate::opt::Objective::from_config`] and the energy evaluation
 /// paths. The defaults reproduce the paper exactly: a pure-delay
@@ -192,6 +229,9 @@ pub struct Config {
     pub train: TrainConfig,
     /// Round-varying dynamics (static by default).
     pub dynamics: DynamicsConfig,
+    /// Population-scale simulation (only the `population` surfaces read
+    /// this section).
+    pub population: PopulationConfig,
     /// Optimization objective / energy model (pure delay by default).
     pub objective: ObjectiveConfig,
     /// Model variant name for the workload model ("gpt2-s", "gpt2-m", "tiny").
@@ -204,6 +244,7 @@ impl Config {
             system: SystemConfig::default(),
             train: TrainConfig::default(),
             dynamics: DynamicsConfig::default(),
+            population: PopulationConfig::default(),
             objective: ObjectiveConfig::default(),
             model: "gpt2-s".to_string(),
         }
@@ -263,6 +304,12 @@ impl Config {
         d.seed = doc.usize_or("dynamics.seed", d.seed as usize)? as u64;
         d.max_rounds = doc.usize_or("dynamics.max_rounds", d.max_rounds)?;
         d.strategy = doc.str_or("dynamics.strategy", &d.strategy)?;
+        let p = &mut c.population;
+        p.size = doc.usize_or("population.size", p.size)?;
+        p.cohort = doc.usize_or("population.cohort", p.cohort)?;
+        p.selector = doc.str_or("population.selector", &p.selector)?;
+        p.deadline_drop = doc.f64_or("population.deadline_drop", p.deadline_drop)?;
+        p.seed = doc.usize_or("population.seed", p.seed as usize)? as u64;
         let o = &mut c.objective;
         o.kind = doc.str_or("objective.kind", &o.kind)?;
         o.lambda = doc.f64_or("objective.lambda", o.lambda)?;
@@ -291,6 +338,12 @@ impl Config {
         self.model = args.str_or("model", &self.model);
         self.train.batch = args.usize_or("batch", self.train.batch)?;
         self.train.local_steps = args.usize_or("local-steps", self.train.local_steps)?;
+        self.population.size = args.usize_or("population", self.population.size)?;
+        self.population.cohort = args.usize_or("cohort", self.population.cohort)?;
+        self.population.selector = args.str_or("selector", &self.population.selector);
+        self.population.deadline_drop =
+            args.f64_or("deadline-drop", self.population.deadline_drop)?;
+        self.population.seed = args.u64_or("population-seed", self.population.seed)?;
         self.objective.kind = args.str_or("objective", &self.objective.kind);
         self.objective.lambda = args.f64_or("lambda", self.objective.lambda)?;
         self.objective.budget_j = args.f64_or("energy-budget", self.objective.budget_j)?;
@@ -359,6 +412,54 @@ mod tests {
         let c = Config::from_args(&mut args).unwrap();
         assert_eq!(c.system.clients, 3);
         assert_eq!(c.system.seed, 7);
+        args.finish().unwrap();
+    }
+
+    #[test]
+    fn population_defaults_and_toml_overrides() {
+        let c = Config::paper_defaults();
+        assert_eq!(c.population.size, 10_000);
+        assert_eq!(c.population.cohort, 64);
+        assert_eq!(c.population.selector, "uniform");
+        assert_eq!(c.population.deadline_drop, 0.0);
+        assert_eq!(c.population.seed, 2);
+        let doc = TomlDoc::parse(
+            "[population]\nsize = 100000\ncohort = 32\nselector = \"staleness:5\"\n\
+             deadline_drop = 0.1\nseed = 77\n",
+        )
+        .unwrap();
+        let c = Config::from_toml(&doc).unwrap();
+        assert_eq!(c.population.size, 100_000);
+        assert_eq!(c.population.cohort, 32);
+        assert_eq!(c.population.selector, "staleness:5");
+        assert_eq!(c.population.deadline_drop, 0.1);
+        assert_eq!(c.population.seed, 77);
+    }
+
+    #[test]
+    fn population_cli_flags_override() {
+        let mut args = Args::from_iter(
+            [
+                "--population",
+                "500000",
+                "--cohort",
+                "128",
+                "--selector",
+                "weighted",
+                "--deadline-drop",
+                "0.05",
+                "--population-seed",
+                "3",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        let c = Config::from_args(&mut args).unwrap();
+        assert_eq!(c.population.size, 500_000);
+        assert_eq!(c.population.cohort, 128);
+        assert_eq!(c.population.selector, "weighted");
+        assert_eq!(c.population.deadline_drop, 0.05);
+        assert_eq!(c.population.seed, 3);
         args.finish().unwrap();
     }
 

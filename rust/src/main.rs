@@ -16,6 +16,13 @@
 //!                comparing re-optimization strategies (`one_shot`,
 //!                `every_round`, `periodic:J`, `on_degrade:θ`) by
 //!                *realized* total delay;
+//! * `population` — play the run out over a modeled population of
+//!                10^5–10^6 clients (default preset
+//!                `metro_population`): per-round cohort selection
+//!                (`--selector uniform|weighted|staleness:<τ>`),
+//!                straggler deadlines (`--deadline-drop x`), and
+//!                dropout/rejoin, at O(cohort) per-round cost
+//!                (`--population`, `--cohort`, `--population-seed`);
 //! * `bench`    — run the tracked perf axes (heap Algorithm 2 vs the
 //!                naive reference, warm vs cold P2, full-solve and
 //!                dynamic-run scaling) and emit the machine-readable
@@ -24,8 +31,9 @@
 //! * `table3`   — print the GPT2-S complexity table (paper Table III);
 //! * `info`     — list available artifact variants.
 //!
-//! Scenario flags shared by `optimize`/`latency`/`sweep`/`dynamic`:
-//! `--preset <paper|dense_cell|weak_edge|asymmetric_links|many_clients|mobile_edge|battery_edge>`,
+//! Scenario flags shared by `optimize`/`latency`/`sweep`/`dynamic`/
+//! `population`:
+//! `--preset <paper|dense_cell|weak_edge|asymmetric_links|many_clients|mobile_edge|battery_edge|metro_population>`,
 //! `--config <toml>`, `--clients`, `--seed`, `--model`, `--batch`,
 //! `--local-steps`, plus the objective flags `--objective
 //! <delay|energy|weighted[:λ]|budget[:J]>`, `--lambda <s/J>`,
@@ -50,7 +58,8 @@ use sfllm::model::{Gpt2Config, WorkloadProfile};
 use sfllm::opt::{AllocationPolicy, PolicyRegistry};
 use sfllm::runtime::{Manifest, SflModel, SflRuntime};
 use sfllm::sim::{
-    DynamicPolicy, ReOptStrategy, RoundSimulator, ScenarioBuilder, SweepAxis, SweepRunner,
+    DynamicPolicy, Population, PopulationSimulator, ReOptStrategy, RoundSimulator,
+    ScenarioBuilder, SweepAxis, SweepRunner,
 };
 use sfllm::util::cli::Args;
 use sfllm::util::csv::CsvWriter;
@@ -75,18 +84,20 @@ fn run() -> Result<()> {
         "latency" => cmd_latency(&mut args),
         "sweep" => cmd_sweep(&mut args),
         "dynamic" => cmd_dynamic(&mut args),
+        "population" => cmd_population(&mut args),
         "bench" => cmd_bench(&mut args),
         "table3" => cmd_table3(&mut args),
         "info" => cmd_info(&mut args),
         _ => {
             println!(
                 "sfllm — split federated learning for LLMs (paper reproduction)\n\n\
-                 usage: sfllm <train|optimize|latency|sweep|dynamic|bench|table3|info> [--options]\n\n\
+                 usage: sfllm <train|optimize|latency|sweep|dynamic|population|bench|table3|info> [--options]\n\n\
                  train     run Algorithm 1 over an artifact variant\n\
                  optimize  solve one scenario with a named policy (default: proposed)\n\
                  latency   compare policies (proposed vs baselines a-d) on one scenario\n\
                  sweep     sweep policies along an axis (--axis, --values, --threads, --energy)\n\
                  dynamic   simulate round-varying dynamics, comparing re-opt strategies\n\
+                 population  simulate cohort selection over a 10^5-client fleet (O(cohort)/round)\n\
                  bench     run the tracked perf axes (--json <path>, --full)\n\
                  table3    print the GPT2-S complexity table (Table III)\n\
                  info      list artifact variants"
@@ -422,6 +433,114 @@ fn cmd_dynamic(args: &mut Args) -> Result<()> {
              (realized {:.2} s / {:.2} kJ vs static prediction {:.2} s)",
             inners[0].name(),
             strategies[0].label(),
+            run.realized_delay,
+            run.realized_energy / 1e3,
+            run.static_prediction
+        );
+    }
+    Ok(())
+}
+
+fn cmd_population(args: &mut Args) -> Result<()> {
+    let spec = args.str_or("policies", "proposed");
+    let strategies_spec = args.str_or("strategies", "one_shot,periodic:5");
+    let draws = args.usize_or("draws", 5)?;
+    let rounds_out = args.get("rounds-out");
+    let preset = args.str_or("preset", "metro_population");
+    let mut cfg = ScenarioBuilder::preset(&preset)?.into_config();
+    cfg.apply_file_and_args(args)?;
+    args.finish()?;
+
+    let pop = Population::new(&cfg)?;
+    println!(
+        "population: {} modeled clients, cohort {} per round ({}), deadline drop {:.0}%, seed {}",
+        pop.size(),
+        pop.cohort(),
+        pop.selector_label(),
+        100.0 * pop.deadline_drop(),
+        cfg.population.seed
+    );
+    let d = &pop.template().dynamics;
+    println!(
+        "dynamics: rho={} sigma={} dB, compute jitter {}, dropout {} / rejoin {}, seed {}",
+        d.rho, d.shadow_sigma_db, d.compute_jitter, d.dropout, d.rejoin, d.seed
+    );
+
+    let strategies: Vec<ReOptStrategy> = strategies_spec
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(ReOptStrategy::parse)
+        .collect::<Result<_>>()?;
+    if strategies.is_empty() {
+        bail!("--strategies resolved to an empty list");
+    }
+    let reg = registry_for(&cfg, draws);
+    let inners = reg.resolve(&spec)?;
+    let conv = ConvergenceModel::paper_default();
+    let cache = WorkloadCache::new();
+    let sim = PopulationSimulator::new(&pop, &conv, &cache, &cfg.train.ranks);
+
+    println!("realized total delay (s), lower is better:");
+    // the first (policy, strategy) run feeds --rounds-out
+    let mut first_run = None;
+    for inner in &inners {
+        let mut one_shot: Option<f64> = None;
+        for &st in &strategies {
+            let t0 = std::time::Instant::now();
+            let out = sim.run(inner.as_ref(), st)?;
+            let elapsed = t0.elapsed().as_secs_f64();
+            let name = format!("{}+{}", inner.name(), st.label());
+            let ms_per_round = 1e3 * elapsed / out.rounds.len().max(1) as f64;
+            if st == ReOptStrategy::OneShot {
+                one_shot = Some(out.realized_delay);
+            }
+            let vs = match one_shot {
+                Some(os) if os > 0.0 && os.is_finite() && st != ReOptStrategy::OneShot => {
+                    format!("  ({:+.1}% vs one_shot)", 100.0 * (out.realized_delay / os - 1.0))
+                }
+                _ => String::new(),
+            };
+            println!("  {name:28} {:12.2}{vs}", out.realized_delay);
+            println!(
+                "  {:28} {} rounds, {} fresh solves, reached {} clients, \
+                 {} deadline cuts, {:.2} ms/round",
+                "", out.rounds.len(), out.fresh_solves, out.unique_participants,
+                out.deadline_drops, ms_per_round
+            );
+            if first_run.is_none() {
+                first_run = Some((name, out));
+            }
+        }
+    }
+
+    if let Some(path) = rounds_out {
+        let (name, run) = first_run.expect("at least one policy x strategy ran");
+        let mut w = CsvWriter::create(
+            &path,
+            &[
+                "round", "weight", "delay_s", "energy_j", "l_c", "rank", "cohort", "active",
+                "dropped", "resolved",
+            ],
+        )?;
+        for r in &run.rounds {
+            w.row_f64(&[
+                r.round as f64,
+                r.weight,
+                r.delay,
+                r.energy,
+                r.l_c as f64,
+                r.rank as f64,
+                r.cohort as f64,
+                r.active as f64,
+                r.dropped as f64,
+                if r.resolved { 1.0 } else { 0.0 },
+            ])?;
+        }
+        w.flush()?;
+        println!(
+            "per-round trace of {name} written to {path} \
+             (realized {:.2} s / {:.2} kJ vs static prediction {:.2} s)",
             run.realized_delay,
             run.realized_energy / 1e3,
             run.static_prediction

@@ -14,5 +14,5 @@ pub mod topology;
 
 pub use channel::ChannelModel;
 pub use fdma::{Link, SubchannelSet};
-pub use process::{ChannelProcess, ChannelState};
+pub use process::{ar1_jump, ChannelProcess, ChannelState};
 pub use topology::Topology;

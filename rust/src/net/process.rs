@@ -113,6 +113,48 @@ impl ChannelState {
     }
 }
 
+/// Closed-form `gap`-step composition of the AR(1) recursion: the
+/// coefficients `(ρ^gap, σ·sqrt(1 − ρ^{2gap}))` such that
+///
+/// `s' = ρ^gap·s + σ·sqrt(1 − ρ^{2gap})·w`,   `w ~ N(0, 1)`
+///
+/// has exactly the distribution of `gap` sequential steps from `s`
+/// (iterating the recursion telescopes the innovations into one
+/// Gaussian of that variance). This is what lets a population engine
+/// advance a client that skipped `gap` rounds in O(1) instead of O(gap).
+///
+/// Exactness contract, relied on by `sim::population` and property
+/// tests: at `gap = 1` the returned pair is **bit-identical** to the
+/// eager step's `(rho, innovation_db)` — ρ^1 is ρ itself (the binary
+/// exponentiation multiplies by 1.0, exact in IEEE 754) and ρ^2 is
+/// computed as `ρ·ρ`, the same expression [`ChannelProcess::new`]
+/// folds into `innovation_db`. For larger gaps the equivalence to
+/// `gap` sequential steps is distributional, not path-bitwise: `gap`
+/// steps consume `gap` independent Gaussians while the jump consumes
+/// one, so no bijection of draws can make the trajectories equal —
+/// see DESIGN.md (PR-6) for why that is a theorem, not a limitation.
+pub fn ar1_jump(rho: f64, sigma_db: f64, gap: u64) -> (f64, f64) {
+    if gap == 0 {
+        return (1.0, 0.0);
+    }
+    // binary exponentiation; `1.0 * x` and `x * y` are exact/commutative
+    // in IEEE 754, so gap = 1 returns rho's own bits
+    let mut rho_k = 1.0f64;
+    let mut base = rho;
+    let mut e = gap;
+    while e > 0 {
+        if e & 1 == 1 {
+            rho_k *= base;
+        }
+        e >>= 1;
+        if e > 0 {
+            base *= base;
+        }
+    }
+    let sigma_k = (1.0 - rho_k * rho_k).max(0.0).sqrt() * sigma_db;
+    (rho_k, sigma_k)
+}
+
 /// Seeded AR(1) evolution of a [`ChannelState`].
 #[derive(Clone, Debug)]
 pub struct ChannelProcess {
@@ -162,6 +204,28 @@ impl ChannelProcess {
             .chain(self.state.shadow_fed_db.iter_mut())
         {
             *s = self.rho * *s + self.rng.normal_ms(0.0, self.innovation_db);
+        }
+    }
+
+    /// Advance `gap` rounds in one O(1)-per-client jump:
+    /// `s ← ρ^gap·s + σ·sqrt(1 − ρ^{2gap})·w`, one innovation draw per
+    /// shadow regardless of the gap (see [`ar1_jump`]). `advance(1)` is
+    /// bit-identical to [`Self::step`]; larger gaps are exact in
+    /// distribution but draw one Gaussian where `gap` sequential steps
+    /// would draw `gap` — the whole point of the closed form. Frozen
+    /// processes (and `gap = 0`) return without consuming randomness.
+    pub fn advance(&mut self, gap: u64) {
+        if self.is_frozen() || gap == 0 {
+            return;
+        }
+        let (rho_k, sigma_k) = ar1_jump(self.rho, self.model.shadowing_db, gap);
+        for s in self
+            .state
+            .shadow_main_db
+            .iter_mut()
+            .chain(self.state.shadow_fed_db.iter_mut())
+        {
+            *s = rho_k * *s + self.rng.normal_ms(0.0, sigma_k);
         }
     }
 
@@ -256,6 +320,127 @@ mod tests {
         };
         assert_eq!(run(42), run(42));
         assert_ne!(run(42), run(43));
+    }
+
+    #[test]
+    fn ar1_jump_at_gap_one_reproduces_the_step_coefficients_bit_for_bit() {
+        for rho in [0.0, 0.3, 0.85, 0.999, 1.0] {
+            for sigma in [0.0, 4.0, 8.0] {
+                let (rho_k, sigma_k) = ar1_jump(rho, sigma, 1);
+                assert_eq!(rho_k.to_bits(), rho.to_bits(), "rho={rho}");
+                let innovation = (1.0 - rho * rho).max(0.0).sqrt() * sigma;
+                assert_eq!(sigma_k.to_bits(), innovation.to_bits(), "rho={rho} sigma={sigma}");
+            }
+        }
+        // gap = 0 is the identity jump
+        assert_eq!(ar1_jump(0.7, 8.0, 0), (1.0, 0.0));
+    }
+
+    #[test]
+    fn ar1_jump_variance_matches_iterated_composition() {
+        // composing the 1-step recursion k times gives variance
+        // sigma^2 (1 - rho^{2k}); the closed form must agree to fp
+        // accuracy for every gap (and decay rho^k for the mean term)
+        let (rho, sigma) = (0.85f64, 8.0f64);
+        for gap in [1u64, 2, 3, 7, 32, 1000] {
+            let (rho_k, sigma_k) = ar1_jump(rho, sigma, gap);
+            let want_rho = rho.powi(gap as i32);
+            let want_sig = (1.0 - rho.powi(2 * gap as i32)).max(0.0).sqrt() * sigma;
+            assert!((rho_k - want_rho).abs() <= 1e-12 * want_rho.max(1e-300), "gap {gap}");
+            assert!((sigma_k - want_sig).abs() <= 1e-12 * sigma, "gap {gap}");
+        }
+        // huge gaps forget the state entirely: stationary redraw
+        let (rho_k, sigma_k) = ar1_jump(rho, sigma, 100_000);
+        assert_eq!(rho_k, 0.0);
+        assert_eq!(sigma_k, sigma);
+    }
+
+    #[test]
+    fn advance_one_is_bit_identical_to_step() {
+        let model = ChannelModel::new(8.0);
+        let state = ChannelState::sample(3, &model, &mut Rng::new(21));
+        let mut stepped = ChannelProcess::new(model.clone(), state.clone(), 0.8, 17);
+        let mut jumped = ChannelProcess::new(model, state, 0.8, 17);
+        for round in 0..40 {
+            stepped.step();
+            jumped.advance(1);
+            for (a, b) in stepped
+                .state()
+                .shadow_main_db
+                .iter()
+                .chain(&stepped.state().shadow_fed_db)
+                .zip(jumped.state().shadow_main_db.iter().chain(&jumped.state().shadow_fed_db))
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn advance_gap_consumes_one_draw_per_shadow_and_freezes_correctly() {
+        let model = ChannelModel::new(8.0);
+        let state = ChannelState::sample(2, &model, &mut Rng::new(4));
+        // frozen: no state change, no rng consumption, at any gap
+        let mut frozen = ChannelProcess::new(model.clone(), state.clone(), 1.0, 5);
+        let before = frozen.state().clone();
+        frozen.advance(1000);
+        assert_eq!(frozen.state().shadow_main_db, before.shadow_main_db);
+        // gap = 0 is a no-op even when unfrozen
+        let mut p = ChannelProcess::new(model.clone(), state.clone(), 0.6, 5);
+        let s0 = p.state().clone();
+        p.advance(0);
+        assert_eq!(p.state().shadow_main_db, s0.shadow_main_db);
+        // a gap-k jump and k steps consume different draw counts, so
+        // the trajectories must diverge — bitwise path equality across
+        // decompositions is impossible by construction (see ar1_jump
+        // docs); determinism per (seed, gap) still holds
+        let run = |gap: u64| {
+            let mut p =
+                ChannelProcess::new(model.clone(), state.clone(), 0.6, 5);
+            p.advance(gap);
+            p.state().shadow_main_db.clone()
+        };
+        assert_eq!(run(7), run(7), "same gap must be deterministic");
+        let mut stepped = ChannelProcess::new(model.clone(), state, 0.6, 5);
+        for _ in 0..7 {
+            stepped.step();
+        }
+        assert_ne!(run(7), stepped.state().shadow_main_db);
+    }
+
+    #[test]
+    fn advance_gap_matches_stepping_in_distribution() {
+        // many independent clients, one jump of gap 9 vs 9 steps:
+        // match of mean decay and stationary variance within mc error
+        let sigma = 8.0;
+        let rho = 0.9;
+        let gap = 9u64;
+        let k = 20_000;
+        let model = ChannelModel::new(sigma);
+        let init = ChannelState {
+            shadow_main_db: vec![10.0; k],
+            shadow_fed_db: vec![0.0; k],
+        };
+        let mut jump = ChannelProcess::new(model.clone(), init.clone(), rho, 31);
+        jump.advance(gap);
+        let mut step = ChannelProcess::new(model, init, rho, 32);
+        for _ in 0..gap {
+            step.step();
+        }
+        let stats = |xs: &[f64]| {
+            let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+            let var =
+                xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+            (mean, var)
+        };
+        let (mj, vj) = stats(&jump.state().shadow_main_db);
+        let (ms, vs) = stats(&step.state().shadow_main_db);
+        let want_mean = 10.0 * rho.powi(gap as i32);
+        let want_var = sigma * sigma * (1.0 - rho.powi(2 * gap as i32));
+        assert!((mj - want_mean).abs() < 0.2, "jump mean {mj} vs {want_mean}");
+        assert!((ms - want_mean).abs() < 0.2, "step mean {ms} vs {want_mean}");
+        assert!((vj - want_var).abs() < 2.0, "jump var {vj} vs {want_var}");
+        assert!((vs - want_var).abs() < 2.0, "step var {vs} vs {want_var}");
     }
 
     #[test]

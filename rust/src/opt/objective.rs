@@ -211,6 +211,21 @@ mod tests {
     }
 
     #[test]
+    fn parse_errors_name_the_valid_specs() {
+        // descriptive errors: a typo'd spec tells the user what exists,
+        // a bad parameter echoes the offending value
+        let unknown = Objective::parse("latency").unwrap_err().to_string();
+        assert!(unknown.contains("latency") && unknown.contains("delay"), "{unknown}");
+        assert!(unknown.contains("weighted:<lambda>"), "{unknown}");
+        let bare = Objective::parse("weighted").unwrap_err().to_string();
+        assert!(bare.contains("weighted:0.05"), "{bare}");
+        let bad_num = Objective::parse("budget:lots").unwrap_err().to_string();
+        assert!(bad_num.contains("lots"), "{bad_num}");
+        let neg = Objective::parse("weighted:-2").unwrap_err().to_string();
+        assert!(neg.contains(">= 0") && neg.contains("-2"), "{neg}");
+    }
+
+    #[test]
     fn from_config_supplies_bare_parameters() {
         let mut cfg = ObjectiveConfig::default();
         assert_eq!(Objective::from_config(&cfg).unwrap(), Objective::Delay);

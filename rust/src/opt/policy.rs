@@ -58,6 +58,16 @@ pub struct PolicyOutcome {
 /// result, only its cost — [`crate::sim::SweepRunner`] hands every grid
 /// point the same cache so solves over the same model/rank set share
 /// one table.
+///
+/// **Cohort-view contract:** workload tables are keyed on the model
+/// profile and candidate rank set only — never on K, the channel, or
+/// anything else a per-round cohort view changes. A caller that lowers
+/// shifting cohorts out of a large population
+/// ([`crate::sim::PopulationSimulator`]) therefore solves every view
+/// against one shared table, and a solve over a cohort view must be
+/// bit-identical to a solve over any other scenario with the same
+/// per-client numbers. Policies must not stash per-scenario state
+/// across calls.
 pub trait AllocationPolicy: Send + Sync {
     /// Stable identifier used by [`PolicyRegistry`] and report columns.
     fn name(&self) -> &str;
@@ -394,6 +404,30 @@ mod tests {
             assert_eq!(cached.alloc.rank, fresh.alloc.rank, "{}", policy.name());
         }
         // proposed + all baselines share the one (profile, ranks) table
+        assert_eq!(cache.tables(), 1);
+    }
+
+    #[test]
+    fn cohort_views_of_every_size_share_one_workload_table() {
+        // the cohort-view contract: tables key on (profile, ranks) only,
+        // so solves over views of different K all hit the same entry
+        let mut cfg = crate::config::Config::paper_defaults();
+        cfg.model = "tiny".to_string();
+        cfg.train.seq = 64;
+        let conv = ConvergenceModel::paper_default();
+        let cache = crate::delay::WorkloadCache::new();
+        let policy = Proposed::with_ranks(&RANKS);
+        for k in [3usize, 5, 8] {
+            let mut kcfg = cfg.clone();
+            kcfg.system.clients = k;
+            let scn = crate::sim::ScenarioBuilder::from_config(kcfg).build().unwrap();
+            let shared = policy.solve_cached(&scn, &conv, &cache).unwrap();
+            // and the shared table never changes the result for any K
+            let private = policy.solve(&scn, &conv).unwrap();
+            assert_eq!(shared.objective.to_bits(), private.objective.to_bits(), "K={k}");
+            assert_eq!(shared.alloc.l_c, private.alloc.l_c, "K={k}");
+            assert_eq!(shared.alloc.rank, private.alloc.rank, "K={k}");
+        }
         assert_eq!(cache.tables(), 1);
     }
 

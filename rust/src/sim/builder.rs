@@ -17,7 +17,7 @@ use crate::net::{power, ChannelModel, ChannelState, Link, SubchannelSet, Topolog
 use crate::util::rng::Rng;
 
 /// Named scenario presets (see [`ScenarioBuilder::preset`]).
-pub const PRESETS: [&str; 7] = [
+pub const PRESETS: [&str; 8] = [
     "paper",
     "dense_cell",
     "weak_edge",
@@ -25,6 +25,7 @@ pub const PRESETS: [&str; 7] = [
     "many_clients",
     "mobile_edge",
     "battery_edge",
+    "metro_population",
 ];
 
 /// Fluent scenario constructor over a [`Config`].
@@ -78,7 +79,17 @@ impl ScenarioBuilder {
     ///   clients (0.4–0.9 GHz) on 1 W-class radios with tight server
     ///   power budgets, optimizing the λ-weighted delay/energy sum
     ///   (`objective = weighted`, λ = 0.05 s/J) — the scenario family
-    ///   behind `examples/energy_tradeoff.rs`.
+    ///   behind `examples/energy_tradeoff.rs`;
+    /// * `metro_population` — the population-scale regime: a fleet of
+    ///   100 000 modeled clients in a 400 m metro cell, of which a
+    ///   64-client cohort is invited each round (`staleness:5`
+    ///   selection, 10% straggler deadline) onto 128 subchannels and
+    ///   4 MHz per link, with drifting shadowing (ρ = 0.9), compute
+    ///   jitter, and dropout/rejoin — the scenario behind the
+    ///   `population` CLI subcommand and
+    ///   [`crate::sim::PopulationSimulator`]. (`system.clients` is
+    ///   set to the cohort so the preset also builds as a plain
+    ///   64-client scenario.)
     pub fn preset(name: &str) -> Result<ScenarioBuilder> {
         let mut cfg = Config::paper_defaults();
         match name {
@@ -135,6 +146,24 @@ impl ScenarioBuilder {
                 cfg.dynamics.compute_jitter = 0.08;
                 cfg.dynamics.dropout = 0.05;
                 cfg.dynamics.rejoin = 0.5;
+                cfg.dynamics.strategy = "periodic:5".to_string();
+            }
+            "metro_population" => {
+                cfg.population.size = 100_000;
+                cfg.population.cohort = 64;
+                cfg.population.selector = "staleness:5".to_string();
+                cfg.population.deadline_drop = 0.1;
+                cfg.system.clients = 64;
+                cfg.system.subch_main = 128;
+                cfg.system.subch_fed = 128;
+                cfg.system.bandwidth_main_hz = 4e6;
+                cfg.system.bandwidth_fed_hz = 4e6;
+                cfg.system.d_max_m = 400.0;
+                cfg.system.d_main_m = 500.0;
+                cfg.dynamics.rho = 0.9;
+                cfg.dynamics.compute_jitter = 0.05;
+                cfg.dynamics.dropout = 0.02;
+                cfg.dynamics.rejoin = 0.3;
                 cfg.dynamics.strategy = "periodic:5".to_string();
             }
             other => bail!(

@@ -160,6 +160,13 @@ pub struct RoundRecord {
     /// Whether the policy was (re-)solved this round (always true for
     /// round 0).
     pub resolved: bool,
+    /// Clients invited into the round's cohort. [`RoundSimulator`]
+    /// always invites everyone (`cohort == K`); the population engine
+    /// reports the selector's cohort size.
+    pub cohort: usize,
+    /// Cohort members cut by the straggler deadline this round (always
+    /// 0 for [`RoundSimulator`], which has no deadline).
+    pub dropped: usize,
 }
 
 /// Outcome of one dynamic run.
@@ -186,15 +193,55 @@ pub struct DynamicOutcome {
     /// determinism), so `fresh_solves <= resolves` — and a frozen
     /// ρ=1/σ=0 run reports 0 under every strategy.
     pub fresh_solves: usize,
+    /// Distinct clients ever invited into a cohort over the run.
+    /// [`RoundSimulator`] invites everyone every round, so this is K;
+    /// the population engine reports how far the selector reached into
+    /// the population.
+    pub unique_participants: usize,
+    /// Total cohort members cut by the straggler deadline, summed over
+    /// rounds (always 0 for [`RoundSimulator`]).
+    pub deadline_drops: usize,
 }
 
 /// Realized per-round quantities of one (scenario, allocation, cohort)
-/// evaluation — see [`RoundSimulator::round_cost`].
+/// evaluation — see [`round_cost`].
 #[derive(Clone, Copy, Debug)]
-struct RoundCost {
-    delay: f64,
-    energy: f64,
-    score: f64,
+pub(crate) struct RoundCost {
+    pub(crate) delay: f64,
+    pub(crate) energy: f64,
+    pub(crate) score: f64,
+}
+
+/// Realized per-round cost of `alloc` on `scn` under the participation
+/// mask `active`: the round delay, the per-global-round energy spend
+/// `I·E_round`, and the objective score per unit of convergence
+/// progress (`obj.score(E(rank)·delay, E(rank)·energy)` — the quantity
+/// re-opt candidates are compared on; under the delay objective this is
+/// exactly `E(rank)·delay`). The evaluator is built from `cols` — the
+/// run's delta [`ColumnCache`] — so only rate rows behind an actual
+/// gain change are recomputed (bit-identical to a cold build). Shared
+/// verbatim between [`RoundSimulator`] and
+/// [`crate::sim::PopulationSimulator`] so the degenerate-population
+/// anchor invariant compares the same arithmetic.
+pub(crate) fn round_cost(
+    scn: &Scenario,
+    conv: &ConvergenceModel,
+    table: &Arc<WorkloadTable>,
+    alloc: &Allocation,
+    active: &[bool],
+    obj: &Objective,
+    cols: &mut ColumnCache,
+) -> RoundCost {
+    let ev =
+        DelayEvaluator::with_cached_columns(scn, conv, table.clone(), cols.columns_for(scn, alloc));
+    let d = ev.round_delay_active(alloc.l_c, alloc.rank, active);
+    let e = scn.local_steps as f64 * ev.round_energy_active(alloc.l_c, alloc.rank, active);
+    let rounds = conv.rounds(alloc.rank);
+    RoundCost {
+        delay: d,
+        energy: e,
+        score: obj.score(rounds * d, rounds * e),
+    }
 }
 
 /// Plays a scenario's fine-tuning run out over `E(r)` global rounds
@@ -225,15 +272,8 @@ impl<'a> RoundSimulator<'a> {
         }
     }
 
-    /// Realized per-round cost of `alloc` on the current `scn` under
-    /// `active`: the round delay, the per-global-round energy spend
-    /// `I·E_round`, and the objective score per unit of convergence
-    /// progress (`obj.score(E(rank)·delay, E(rank)·energy)` — the
-    /// quantity re-opt candidates are compared on; under the delay
-    /// objective this is exactly `E(rank)·delay`, same bits as the
-    /// pre-energy engine). The evaluator is built from `cols` — the
-    /// run's delta [`ColumnCache`] — so only rate rows behind an actual
-    /// gain change are recomputed (bit-identical to a cold build).
+    /// See the free [`round_cost`]: realized per-round cost of `alloc`
+    /// on the current `scn` under `active`.
     #[allow(clippy::too_many_arguments)]
     fn round_cost(
         &self,
@@ -244,20 +284,7 @@ impl<'a> RoundSimulator<'a> {
         obj: &Objective,
         cols: &mut ColumnCache,
     ) -> RoundCost {
-        let ev = DelayEvaluator::with_cached_columns(
-            scn,
-            self.conv,
-            table.clone(),
-            cols.columns_for(scn, alloc),
-        );
-        let d = ev.round_delay_active(alloc.l_c, alloc.rank, active);
-        let e = scn.local_steps as f64 * ev.round_energy_active(alloc.l_c, alloc.rank, active);
-        let rounds = self.conv.rounds(alloc.rank);
-        RoundCost {
-            delay: d,
-            energy: e,
-            score: obj.score(rounds * d, rounds * e),
-        }
+        round_cost(scn, self.conv, table, alloc, active, obj, cols)
     }
 
     /// Simulate one full run of `policy` under `strategy`.
@@ -519,6 +546,8 @@ impl<'a> RoundSimulator<'a> {
                 rank: alloc.rank,
                 active: active.iter().filter(|&&a| a).count(),
                 resolved,
+                cohort: k_n,
+                dropped: 0,
             });
             remaining -= weight;
             round += 1;
@@ -534,6 +563,8 @@ impl<'a> RoundSimulator<'a> {
             rounds,
             resolves,
             fresh_solves,
+            unique_participants: k_n,
+            deadline_drops: 0,
         })
     }
 }

@@ -6,7 +6,7 @@
 //! * [`builder`] — [`ScenarioBuilder`]: fluent, seeded scenario
 //!   construction with named heterogeneity presets (`paper`,
 //!   `dense_cell`, `weak_edge`, `asymmetric_links`, `many_clients`,
-//!   `mobile_edge`, `battery_edge`), including the round-varying
+//!   `mobile_edge`, `battery_edge`, `metro_population`), including the round-varying
 //!   dynamics knobs and the objective/energy parameters;
 //! * [`mod@sweep`] — [`SweepAxis`] / [`SweepRunner`] / [`SweepReport`]:
 //!   declarative *policies × grid* sweeps fanned out across
@@ -18,6 +18,13 @@
 //!   drift, compute jitter, dropout — that accumulates *realized*
 //!   total delay **and realized energy** and re-optimizes mid-run
 //!   (`one_shot`, `every_round`, `periodic:J`, `on_degrade:θ`);
+//! * [`population`] + [`selector`] — [`Population`] /
+//!   [`PopulationSimulator`]: the event-driven population engine —
+//!   10^5–10^6 modeled clients with lazily materialized per-client
+//!   state, per-round cohort [`Selector`]s (`uniform`, `weighted`,
+//!   `staleness:τ`), straggler deadlines, and dropout/rejoin, at
+//!   O(cohort) per-round cost (the `metro_population` preset and the
+//!   `population` CLI subcommand run on it);
 //! * the policies themselves live in [`crate::opt::policy`].
 //!
 //! Every figure bench (Figs. 5–8), the
@@ -29,10 +36,17 @@
 
 pub mod builder;
 pub mod dynamic;
+pub mod population;
+pub mod selector;
 pub mod sweep;
 
 pub use self::builder::{ScenarioBuilder, PRESETS};
 pub use self::dynamic::{
     DynamicOutcome, DynamicPolicy, ReOptStrategy, RoundRecord, RoundSimulator,
+};
+pub use self::population::{Observation, Population, PopulationSimulator, PopulationState};
+pub use self::selector::{
+    parse_selector, SelectionCtx, Selector, StalenessAware, Uniform, WeightIndex,
+    WeightProportional,
 };
 pub use self::sweep::{PointError, PointResult, SweepAxis, SweepReport, SweepRunner};

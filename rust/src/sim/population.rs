@@ -1,0 +1,1153 @@
+//! Event-driven population engine: 10^5–10^6 modeled clients, O(cohort)
+//! per-round simulation.
+//!
+//! [`crate::sim::RoundSimulator`] iterates every client every round —
+//! the right model for the paper's K = 5 testbed, hopeless for a
+//! production deployment where a coordinator samples a small cohort out
+//! of a huge fleet each round (xaynet's invite/aggregate lifecycle).
+//! [`Population`] models that fleet without ever holding it in memory:
+//!
+//! * **Per-client forked streams.** Every random quantity a client ever
+//!   produces comes from a counter-based stream that is a pure function
+//!   of `(seed, purpose tag, client id, round)` — see [`stream`]. No
+//!   client shares RNG state with any other, so client `i`'s trajectory
+//!   is bit-identical no matter which *other* clients were selected, in
+//!   what order, or on how many threads. Geometry and the selection
+//!   lifecycle key on `population.seed`; the channel/compute/availability
+//!   evolution keys on `dynamics.seed`, preserving the repo-wide
+//!   convention that redrawing the environment keeps the geometry fixed.
+//! * **Lazy, run-length-compressed state.** A client's state is only
+//!   materialized when first observed ([`Population::observe`]), and a
+//!   client skipped for `gap` rounds is advanced in O(1): the AR(1)
+//!   shadowing jumps through the closed form of
+//!   [`crate::net::process::ar1_jump`] (one Gaussian per shadow instead
+//!   of `gap`), compute jitter is i.i.d. per round so only the current
+//!   round's draw is taken, and the dropout/rejoin 2-state Markov chain
+//!   advances through its closed-form `gap`-step marginal
+//!   `p_on = π + (s − π)·λ^gap` with `π = q/(p+q)`, `λ = 1 − p − q`.
+//!   At `gap = 1` the shadow jump is **bit-identical** to the eager
+//!   per-round step (the [`ar1_jump`] exactness contract); at larger
+//!   gaps the equivalence is distributional — `gap` steps consume `gap`
+//!   Gaussians while the jump consumes one, so no path-bitwise
+//!   equality across decompositions can exist (see DESIGN.md, PR-6).
+//! * **Cohort lowering.** Each round a [`Selector`] invites
+//!   `min(cohort, size)` clients; only they are observed and lowered
+//!   into a [`Scenario`] *view* (the template scenario with the
+//!   cohort's sites and gains spliced in) that hits the incremental
+//!   solver stack — [`crate::delay::WorkloadCache`] for the workload
+//!   table, [`crate::delay::ColumnCache`] for delta rate columns, and
+//!   the policies' warm-started BCD — so per-round cost is O(cohort),
+//!   independent of population size.
+//!
+//! [`PopulationSimulator`] replays the whole fine-tuning run over that
+//! lifecycle and reuses [`RoundRecord`]/[`DynamicOutcome`] accounting.
+//! Two extra production effects are first-class:
+//!
+//! * **Straggler deadlines** (`population.deadline_drop = x`): after
+//!   the round's allocation is fixed, the slowest `⌊x·online⌋` cohort
+//!   members (by realized client-side phase delay `T_k^F + T_k^s +
+//!   T_k^B + T_k^f`) are cut from the round's aggregate — they still
+//!   held their subchannels, but contribute neither delay nor energy,
+//!   exactly like a dropout that round.
+//! * **Dropout / rendezvous-rejoin**: selection is availability-blind
+//!   (invitees may turn out offline, as in xaynet's invite-then-wait
+//!   coordinator); offline invitees are masked out of the aggregate
+//!   and rejoin through the Markov chain above.
+//!
+//! **Anchor invariant** (property-tested in
+//! `rust/tests/prop_population.rs` and the module tests): a degenerate
+//! population — `population == K`, a full-participation selector, no
+//! deadline — reproduces [`RoundSimulator`] on
+//! [`Population::scenario`] **bit for bit**. In that dense regime the
+//! engine switches to the exact shared-stream evolution the round
+//! simulator uses (one AR(1) process, one jitter stream, one dropout
+//! stream over all K clients), so every record, every re-solve
+//! decision, and both realized totals carry identical bits.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Config;
+use crate::delay::{Allocation, ColumnCache, ConvergenceModel, Scenario, WorkloadCache};
+use crate::model::WorkloadTable;
+use crate::net::power::db_to_linear;
+use crate::net::process::ar1_jump;
+use crate::net::topology::ClientSite;
+use crate::net::{ChannelModel, ChannelProcess, ChannelState};
+use crate::opt::policy::AllocationPolicy;
+use crate::opt::{bcd, power, Objective};
+use crate::sim::builder::ScenarioBuilder;
+use crate::sim::dynamic::{round_cost, DynamicOutcome, ReOptStrategy, RoundCost, RoundRecord};
+use crate::sim::selector::{parse_selector, SelectionCtx, Selector, WeightIndex};
+use crate::util::rng::Rng;
+
+/// Stream purpose tag: per-client static draws (placement, compute
+/// capability, initial shadowing).
+pub(crate) const TAG_STATIC: u64 = 0x51A7;
+/// Stream purpose tag: per-(client, round) observation draws (shadow
+/// innovations, jitter, availability).
+pub(crate) const TAG_OBSERVE: u64 = 0x0B5E;
+/// Stream purpose tag: per-round cohort selection.
+pub(crate) const TAG_SELECT: u64 = 0x5E1E;
+
+/// Counter-based stream derivation: a pure function of
+/// `(seed, tag, a, b)`, so any draw in the population is addressable
+/// without materializing any other. The odd multipliers decorrelate the
+/// coordinates before `Rng::new`'s SplitMix64 expansion scrambles the
+/// combined key.
+pub(crate) fn stream(seed: u64, tag: u64, a: u64, b: u64) -> Rng {
+    Rng::new(
+        seed ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ a.wrapping_mul(0x2545_F491_4F6C_DD1D)
+            ^ b.wrapping_mul(0xD1B5_4A32_D192_ED03),
+    )
+}
+
+/// One client's state as seen at one round.
+#[derive(Clone, Copy, Debug)]
+pub struct Observation {
+    /// Distance to the main server (m).
+    pub d_main_m: f64,
+    /// Distance to the federated server (m).
+    pub d_fed_m: f64,
+    /// Effective compute capability this round (cycles/s; the static
+    /// capability rescaled by the round's jitter draw).
+    pub f_cycles: f64,
+    /// Linear channel gain to the main / federated server.
+    pub gain_main: f64,
+    pub gain_fed: f64,
+    /// Whether the client is reachable this round (dropout/rejoin
+    /// chain; round 0 is always online, like the round simulator).
+    pub online: bool,
+}
+
+/// Materialized state of one client (only selected clients ever get
+/// one).
+#[derive(Clone, Debug)]
+struct ClientSlot {
+    /// Static placement and capability (f_cycles = the base f_k).
+    site: ClientSite,
+    /// AR(1) shadow fading state (dB) on both uplinks.
+    shadow_main_db: f64,
+    shadow_fed_db: f64,
+    /// Effective compute at `last_round` (jittered f_k).
+    f_round: f64,
+    online: bool,
+    /// Round the state above is current for.
+    last_round: usize,
+}
+
+/// Mutable per-run state of a population: lazily materialized client
+/// slots, the invitation history the staleness selector reads, and the
+/// lazily built weight index. [`Population`] itself stays immutable so
+/// several runs (strategies, policies) can share one population.
+pub struct PopulationState {
+    slots: HashMap<usize, ClientSlot>,
+    /// Per-client last-invited round, encoded `round + 1` (0 = never).
+    last_invited: Vec<u32>,
+    weights: Option<WeightIndex>,
+}
+
+impl PopulationState {
+    pub fn new(size: usize) -> PopulationState {
+        PopulationState {
+            slots: HashMap::new(),
+            last_invited: vec![0; size],
+            weights: None,
+        }
+    }
+
+    /// Distinct clients materialized so far (== distinct clients ever
+    /// observed).
+    pub fn materialized(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+/// An immutable population of `size` modeled clients (see the module
+/// docs). Constructed from [`Config::population`] plus the usual
+/// system/train/dynamics sections; `system.clients` is ignored — the
+/// cohort size takes its place.
+pub struct Population {
+    /// Template config (with `system.clients` = effective cohort).
+    cfg: Config,
+    /// Cohort-sized template scenario: carries everything K-independent
+    /// (links, power budgets, workload profile, resolved dynamics);
+    /// per-round views splice the cohort's sites/gains into a clone.
+    template: Scenario,
+    selector: Box<dyn Selector>,
+    size: usize,
+    /// Effective cohort `min(population.cohort, size)`.
+    cohort: usize,
+    deadline_drop: f64,
+    /// `population.seed`: geometry + selection lifecycle.
+    seed: u64,
+    /// Static channel model (initial shadowing draw σ).
+    model: ChannelModel,
+    /// Resolved AR(1) parameters (dynamics σ is the resolved sentinel).
+    sigma_dyn: f64,
+    rho: f64,
+    /// `sqrt(1 − ρ²)·σ_dyn`; 0 freezes the channel (no draws consumed).
+    innovation_db: f64,
+}
+
+impl Population {
+    pub fn new(cfg: &Config) -> Result<Population> {
+        let p = &cfg.population;
+        if p.size == 0 {
+            bail!("population.size must be >= 1");
+        }
+        if p.cohort == 0 {
+            bail!("population.cohort must be >= 1");
+        }
+        if !(0.0..1.0).contains(&p.deadline_drop) {
+            bail!(
+                "population.deadline_drop must be in [0, 1) — 1 would cut the whole \
+                 cohort from every round — got {}",
+                p.deadline_drop
+            );
+        }
+        let selector = parse_selector(&p.selector).context("population.selector")?;
+        let cohort = p.cohort.min(p.size);
+        let mut tcfg = cfg.clone();
+        tcfg.system.clients = cohort;
+        // the builder validates everything a cohort view needs (cohort
+        // <= subchannels, objective/dynamics specs) and resolves the
+        // shadow-sigma inherit sentinel
+        let template = ScenarioBuilder::from_config(tcfg.clone())
+            .build()
+            .with_context(|| format!("population template (cohort K = {cohort})"))?;
+        let sigma_dyn = template.dynamics.shadow_sigma_db.max(0.0);
+        let rho = template.dynamics.rho;
+        let innovation_db = (1.0 - rho * rho).max(0.0).sqrt() * sigma_dyn;
+        let model = ChannelModel::new(tcfg.system.shadowing_db);
+        Ok(Population {
+            size: p.size,
+            cohort,
+            deadline_drop: p.deadline_drop,
+            seed: p.seed,
+            selector,
+            model,
+            sigma_dyn,
+            rho,
+            innovation_db,
+            cfg: tcfg,
+            template,
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Effective per-round cohort size (`min(population.cohort, size)`).
+    pub fn cohort(&self) -> usize {
+        self.cohort
+    }
+
+    pub fn deadline_drop(&self) -> f64 {
+        self.deadline_drop
+    }
+
+    pub fn selector_label(&self) -> String {
+        self.selector.label()
+    }
+
+    /// The cohort-sized template scenario (resolved dynamics,
+    /// objective, links).
+    pub fn template(&self) -> &Scenario {
+        &self.template
+    }
+
+    /// A client's static draws: disk placement, compute capability, and
+    /// initial shadowing — the same per-client quantities
+    /// `Topology::sample` + `ChannelState::sample` draw, taken from the
+    /// client's own [`stream`] instead of a shared sequential one.
+    fn static_client(&self, i: usize) -> (ClientSite, f64, f64) {
+        let s = &self.cfg.system;
+        let mut rng = stream(self.seed, TAG_STATIC, i as u64, 0);
+        // uniform over the disk: r = R*sqrt(u), fed server at origin,
+        // main server at (d_main_m, 0) — Topology::sample's geometry
+        let r = s.d_max_m * rng.f64().sqrt();
+        let theta = rng.range(0.0, 2.0 * std::f64::consts::PI);
+        let (x, y) = (r * theta.cos(), r * theta.sin());
+        let d_fed = (x * x + y * y).sqrt().max(1.0);
+        let dx = x - s.d_main_m;
+        let d_main = (dx * dx + y * y).sqrt().max(1.0);
+        let f = rng.range(s.f_client_lo, s.f_client_hi);
+        let (sm, sf) = if s.shadowing_db > 0.0 {
+            (
+                rng.normal_ms(0.0, s.shadowing_db),
+                rng.normal_ms(0.0, s.shadowing_db),
+            )
+        } else {
+            (0.0, 0.0)
+        };
+        (
+            ClientSite {
+                d_main_m: d_main,
+                d_fed_m: d_fed,
+                f_cycles: f,
+            },
+            sm,
+            sf,
+        )
+    }
+
+    /// Observe client `i` at `round`, lazily materializing and
+    /// advancing its state in O(1) regardless of how many rounds it was
+    /// skipped (see the module docs for the closed forms). Observations
+    /// per client must be monotone in `round`; re-observing the same
+    /// round returns the cached state and consumes nothing.
+    pub fn observe(&self, state: &mut PopulationState, i: usize, round: usize) -> Observation {
+        assert!(i < self.size, "client {i} out of population (size {})", self.size);
+        let slot = state.slots.entry(i).or_insert_with(|| {
+            let (site, sm, sf) = self.static_client(i);
+            ClientSlot {
+                f_round: site.f_cycles,
+                site,
+                shadow_main_db: sm,
+                shadow_fed_db: sf,
+                online: true,
+                last_round: 0,
+            }
+        });
+        assert!(
+            round >= slot.last_round,
+            "population observations must be monotone per client \
+             (client {i}: round {round} after round {})",
+            slot.last_round
+        );
+        if round > slot.last_round {
+            let gap = (round - slot.last_round) as u64;
+            let d = &self.template.dynamics;
+            let mut rng = stream(d.seed, TAG_OBSERVE, i as u64, round as u64);
+            // draw order is fixed and config-gated (never value-gated),
+            // so a knob toggles its own draws without shifting others'
+            if self.innovation_db != 0.0 {
+                let (rho_k, sigma_k) = ar1_jump(self.rho, self.sigma_dyn, gap);
+                slot.shadow_main_db = rho_k * slot.shadow_main_db + rng.normal_ms(0.0, sigma_k);
+                slot.shadow_fed_db = rho_k * slot.shadow_fed_db + rng.normal_ms(0.0, sigma_k);
+            }
+            if d.compute_jitter > 0.0 {
+                // i.i.d. per round: only the observed round's draw counts
+                slot.f_round = slot.site.f_cycles * (d.compute_jitter * rng.normal()).exp();
+            }
+            if d.dropout > 0.0 {
+                // 2-state Markov chain advanced by its gap-step marginal
+                let (p, q) = (d.dropout, d.rejoin);
+                let pi = q / (p + q);
+                let lam = 1.0 - p - q;
+                let lam_k = lam.powi(gap.min(i32::MAX as u64) as i32);
+                let s0 = if slot.online { 1.0 } else { 0.0 };
+                slot.online = rng.f64() < pi + (s0 - pi) * lam_k;
+            }
+            slot.last_round = round;
+        }
+        let gm = db_to_linear(-(self.model.path_loss_db(slot.site.d_main_m) + slot.shadow_main_db));
+        let gf = db_to_linear(-(self.model.path_loss_db(slot.site.d_fed_m) + slot.shadow_fed_db));
+        Observation {
+            d_main_m: slot.site.d_main_m,
+            d_fed_m: slot.site.d_fed_m,
+            f_cycles: slot.f_round,
+            gain_main: gm,
+            gain_fed: gf,
+            online: slot.online,
+        }
+    }
+
+    /// Select the round's cohort (sorted distinct ids, see
+    /// [`Selector`]) from the round's counter-based stream, updating
+    /// the invitation history. O(cohort) — except a one-time O(size)
+    /// weight-index build for weight-proportional policies.
+    pub fn select(&self, state: &mut PopulationState, round: usize) -> Vec<usize> {
+        if self.selector.needs_weights() && state.weights.is_none() {
+            state.weights = Some(WeightIndex::build(
+                (0..self.size).map(|i| self.static_client(i).0.f_cycles),
+            ));
+        }
+        let mut rng = stream(self.seed, TAG_SELECT, round as u64, 0);
+        let mut out = Vec::with_capacity(self.cohort);
+        {
+            let ctx = SelectionCtx {
+                size: self.size,
+                cohort: self.cohort,
+                round,
+                weights: state.weights.as_ref(),
+                last_invited: &state.last_invited,
+            };
+            self.selector.select(&ctx, &mut rng, &mut out);
+        }
+        for &i in &out {
+            state.last_invited[i] = round.min(u32::MAX as usize - 1) as u32 + 1;
+        }
+        out
+    }
+
+    /// Splice a cohort's observations into a scenario view: the
+    /// template with the cohort's sites, compute, and gains. Everything
+    /// else (links, budgets, profile, dynamics) is K-independent.
+    fn view_from(&self, obs: &[Observation]) -> Scenario {
+        let mut scn = self.template.clone();
+        scn.topo.clients = obs
+            .iter()
+            .map(|o| ClientSite {
+                d_main_m: o.d_main_m,
+                d_fed_m: o.d_fed_m,
+                f_cycles: o.f_cycles,
+            })
+            .collect();
+        scn.main_link.client_gain = obs.iter().map(|o| o.gain_main).collect();
+        scn.fed_link.client_gain = obs.iter().map(|o| o.gain_fed).collect();
+        scn
+    }
+
+    /// The full population lowered into one round-0 [`Scenario`] — only
+    /// solvable when every client fits on a subchannel, i.e. for the
+    /// degenerate populations the bit-identity anchor tests use (and
+    /// the dense engine mode evolves).
+    pub fn scenario(&self) -> Result<Scenario> {
+        let s = &self.cfg.system;
+        if self.size > s.subch_main || self.size > s.subch_fed {
+            bail!(
+                "a full-population scenario needs every client on a subchannel: \
+                 {} clients exceed (M = {}, N = {})",
+                self.size,
+                s.subch_main,
+                s.subch_fed
+            );
+        }
+        let mut state = PopulationState::new(self.size);
+        let obs: Vec<Observation> = (0..self.size).map(|i| self.observe(&mut state, i, 0)).collect();
+        Ok(self.view_from(&obs))
+    }
+}
+
+/// Dense-mode environment: the exact shared-stream evolution
+/// [`crate::sim::RoundSimulator::run`] performs over the full
+/// population scenario, transcribed so the degenerate-population anchor
+/// invariant holds bit for bit (this is deliberately *not* a call into
+/// `RoundSimulator` — the invariant would be vacuous).
+struct DenseEnv {
+    scn: Scenario,
+    base_f: Vec<f64>,
+    jitter_rng: Rng,
+    drop_rng: Rng,
+    process: ChannelProcess,
+    active: Vec<bool>,
+    jitter: f64,
+    dropout: f64,
+    rejoin: f64,
+}
+
+impl DenseEnv {
+    fn new(pop: &Population) -> Result<DenseEnv> {
+        let scn = pop.scenario()?;
+        let d = &scn.dynamics;
+        let base_f: Vec<f64> = scn.topo.clients.iter().map(|c| c.f_cycles).collect();
+        // the round simulator's stream forks, verbatim
+        let mut root = Rng::new(d.seed);
+        let jitter_rng = root.fork(0x4A17);
+        let drop_rng = root.fork(0xD509);
+        let process_seed = root.fork(0x5AD0).next_u64();
+        let sigma = d.shadow_sigma_db.max(0.0);
+        let model = ChannelModel::new(sigma);
+        let state = ChannelState::recover(
+            &scn.topo,
+            &model,
+            &scn.main_link.client_gain,
+            &scn.fed_link.client_gain,
+        );
+        let process = ChannelProcess::new(model, state, d.rho, process_seed);
+        let active = vec![true; scn.k()];
+        let (jitter, dropout, rejoin) = (d.compute_jitter, d.dropout, d.rejoin);
+        Ok(DenseEnv {
+            scn,
+            base_f,
+            jitter_rng,
+            drop_rng,
+            process,
+            active,
+            jitter,
+            dropout,
+            rejoin,
+        })
+    }
+
+    /// One round of environment evolution; returns whether anything the
+    /// solver sees changed (gains or compute — membership is invisible
+    /// to solves, as in the round simulator).
+    fn advance(&mut self) -> bool {
+        let mut dirty = false;
+        self.process.step();
+        if !self.process.is_frozen() {
+            let (main, fed) = self.process.gains(&self.scn.topo);
+            self.scn.main_link.client_gain = main;
+            self.scn.fed_link.client_gain = fed;
+            dirty = true;
+        }
+        if self.jitter > 0.0 {
+            for (c, &f0) in self.scn.topo.clients.iter_mut().zip(&self.base_f) {
+                c.f_cycles = f0 * (self.jitter * self.jitter_rng.normal()).exp();
+            }
+            dirty = true;
+        }
+        if self.dropout > 0.0 {
+            let prev = self.active.clone();
+            for (k, a) in self.active.iter_mut().enumerate() {
+                let u = self.drop_rng.f64();
+                if prev[k] {
+                    if u < self.dropout {
+                        *a = false;
+                    }
+                } else if u < self.rejoin {
+                    *a = true;
+                }
+            }
+            if !self.active.iter().any(|&a| a) {
+                // never simulate an empty federation
+                self.active = prev;
+            }
+        }
+        dirty
+    }
+}
+
+/// Re-communicate an incumbent allocation over a changed cohort: keep
+/// the split decision `(l_c, rank)`, rebuild the subchannel assignment
+/// (Algorithm 2) and the power PSDs (P2) for the new membership. The
+/// incumbent's own assignment/power vectors index the *previous*
+/// cohort's clients and are meaningless for the new one.
+fn comm_alloc(view: &Scenario, l_c: usize, rank: usize) -> Result<Allocation> {
+    let mut alloc = bcd::initial_alloc(view, l_c, rank);
+    let p = power::solve_power(view, &alloc)
+        .context("population run: re-communicating the incumbent over a changed cohort")?;
+    alloc.psd_main = p.psd_main;
+    alloc.psd_fed = p.psd_fed;
+    Ok(alloc)
+}
+
+/// Plays a fine-tuning run out over a [`Population`]: per-round cohort
+/// selection, lazy observation, O(cohort) solves/evaluation, straggler
+/// deadlines, and the same progress/run-length accounting as
+/// [`crate::sim::RoundSimulator`] (whose records and outcome type it
+/// reuses).
+pub struct PopulationSimulator<'a> {
+    pop: &'a Population,
+    conv: &'a ConvergenceModel,
+    cache: &'a WorkloadCache,
+    ranks: Vec<usize>,
+}
+
+impl<'a> PopulationSimulator<'a> {
+    /// `ranks` is the candidate rank set shared with the policies being
+    /// simulated, so evaluator builds hit the same cached table.
+    pub fn new(
+        pop: &'a Population,
+        conv: &'a ConvergenceModel,
+        cache: &'a WorkloadCache,
+        ranks: &[usize],
+    ) -> PopulationSimulator<'a> {
+        assert!(!ranks.is_empty(), "empty candidate rank set");
+        PopulationSimulator {
+            pop,
+            conv,
+            cache,
+            ranks: ranks.to_vec(),
+        }
+    }
+
+    /// Simulate one full run of `policy` under `strategy` (see
+    /// [`crate::sim::RoundSimulator::run`] for the shared accounting
+    /// semantics; this engine adds selection, deadlines, and cohort
+    /// rebasing).
+    pub fn run(
+        &self,
+        policy: &dyn AllocationPolicy,
+        strategy: ReOptStrategy,
+    ) -> Result<DynamicOutcome> {
+        let pop = self.pop;
+        let dynamics = pop.template.dynamics.clone();
+        let dense = pop.cohort >= pop.size;
+        let objective = Objective::from_config(&pop.template.objective)?;
+        let table: Arc<WorkloadTable> = self.cache.table_for(&pop.template.profile, &self.ranks);
+        let frozen_channel = pop.innovation_db == 0.0;
+
+        let mut state = PopulationState::new(pop.size);
+        let mut denv: Option<DenseEnv> = if dense { Some(DenseEnv::new(pop)?) } else { None };
+
+        // --- round 0: invite, observe, solve on the initial view
+        let mut cur_cohort = pop.select(&mut state, 0);
+        let (mut cur_view, mut online) = self.round_view(&mut state, &mut denv, &cur_cohort, 0);
+        let out0 = policy
+            .solve_cached(&cur_view, self.conv, self.cache)
+            .context("population run: round-0 solve")?;
+        let alloc0 = out0.alloc;
+        let static_prediction = cur_view.total_delay(&alloc0, self.conv);
+
+        let mut alloc = alloc0.clone();
+        let mut incumbent_is_initial = true;
+        // once the cohort has changed, the round-0 allocation indexes
+        // clients that are no longer in the view — retire it as a
+        // re-adoption candidate for good
+        let mut cohort_ever_changed = false;
+        let mut col_cache = ColumnCache::new(4);
+        let mut memo_fresh_alloc = alloc0.clone();
+        let mut env_dirty = false;
+        let mut fresh_solves = 0usize;
+        let mut resolves = 0usize;
+        let mut deadline_drops = 0usize;
+        let mut remaining = self.conv.rounds(alloc.rank);
+        let mut solved_delay = f64::INFINITY;
+        let mut rounds: Vec<RoundRecord> = Vec::new();
+
+        // run-length compressed realized-delay/energy accumulators
+        let mut realized = 0.0f64;
+        let mut seg_weight = 0.0f64;
+        let mut seg_delay = 0.0f64;
+        let mut realized_e = 0.0f64;
+        let mut seg_weight_e = 0.0f64;
+        let mut seg_energy = 0.0f64;
+
+        let mut round = 0usize;
+        while remaining > 0.0 {
+            if round >= dynamics.max_rounds {
+                bail!(
+                    "population run exceeded dynamics.max_rounds = {} \
+                     (strategy {}, {:.1} rounds still remaining)",
+                    dynamics.max_rounds,
+                    strategy.label(),
+                    remaining
+                );
+            }
+
+            let mut resolved = round == 0;
+            let mut cost_round: Option<RoundCost> = None;
+            let mut dropped = 0usize;
+            if round > 0 {
+                // --- evolve the environment and lower the new cohort
+                if let Some(env) = denv.as_mut() {
+                    env_dirty |= env.advance();
+                }
+                let cohort = pop.select(&mut state, round);
+                let cohort_changed = cohort != cur_cohort;
+                let (view, on) = self.round_view(&mut state, &mut denv, &cohort, round);
+                cur_view = view;
+                online = on;
+                if denv.is_none() {
+                    // a sparse view is rebuilt from fresh observations:
+                    // it drifts whenever the membership, the channel,
+                    // or the compute can have moved
+                    env_dirty |=
+                        cohort_changed || !frozen_channel || dynamics.compute_jitter > 0.0;
+                }
+                cur_cohort = cohort;
+                if cohort_changed {
+                    alloc = comm_alloc(&cur_view, alloc.l_c, alloc.rank)?;
+                    cohort_ever_changed = true;
+                    incumbent_is_initial = false;
+                }
+
+                // --- decide whether to re-solve (the incumbent cost
+                // computed for OnDegrade seeds the adoption step)
+                let mut incumbent_cost: Option<RoundCost> = None;
+                let due = match strategy {
+                    ReOptStrategy::OneShot => false,
+                    ReOptStrategy::EveryRound => true,
+                    ReOptStrategy::Periodic(j) => round % j.max(1) == 0,
+                    ReOptStrategy::OnDegrade(th) => {
+                        let cost = round_cost(
+                            &cur_view,
+                            self.conv,
+                            &table,
+                            &alloc,
+                            &online,
+                            &objective,
+                            &mut col_cache,
+                        );
+                        let triggered = cost.delay > solved_delay * (1.0 + th);
+                        cost_round = Some(cost);
+                        incumbent_cost = Some(cost);
+                        triggered
+                    }
+                };
+                if due {
+                    // memoized against drift exactly like the round
+                    // simulator: while nothing the solver sees has
+                    // changed, the fresh candidate IS the last solve
+                    let fresh_alloc = if env_dirty {
+                        let fresh = policy
+                            .solve_cached(&cur_view, self.conv, self.cache)
+                            .with_context(|| {
+                                format!("population run: re-solve at round {round}")
+                            })?;
+                        fresh_solves += 1;
+                        env_dirty = false;
+                        memo_fresh_alloc = fresh.alloc.clone();
+                        fresh.alloc
+                    } else {
+                        memo_fresh_alloc.clone()
+                    };
+                    resolves += 1;
+                    resolved = true;
+                    let mut best = match incumbent_cost {
+                        Some(cost) => cost,
+                        None => round_cost(
+                            &cur_view,
+                            self.conv,
+                            &table,
+                            &alloc,
+                            &online,
+                            &objective,
+                            &mut col_cache,
+                        ),
+                    };
+                    let mut best_alloc = alloc.clone();
+                    if !incumbent_is_initial && !cohort_ever_changed {
+                        let c0 = round_cost(
+                            &cur_view,
+                            self.conv,
+                            &table,
+                            &alloc0,
+                            &online,
+                            &objective,
+                            &mut col_cache,
+                        );
+                        if c0.score < best.score {
+                            best = c0;
+                            best_alloc = alloc0.clone();
+                            incumbent_is_initial = true;
+                        }
+                    }
+                    let cf = round_cost(
+                        &cur_view,
+                        self.conv,
+                        &table,
+                        &fresh_alloc,
+                        &online,
+                        &objective,
+                        &mut col_cache,
+                    );
+                    if cf.score < best.score {
+                        best = cf;
+                        best_alloc = fresh_alloc;
+                        incumbent_is_initial = false;
+                    }
+                    if best_alloc.rank != alloc.rank {
+                        let e_old = self.conv.rounds(alloc.rank);
+                        let e_new = self.conv.rounds(best_alloc.rank);
+                        remaining *= e_new / e_old;
+                    }
+                    alloc = best_alloc;
+                    cost_round = Some(best);
+                }
+            }
+
+            // --- straggler deadline: cut the slowest ⌊x·online⌋ cohort
+            // members by realized client-side phase delay
+            if pop.deadline_drop > 0.0 {
+                let online_count = online.iter().filter(|&&a| a).count();
+                let cut = ((pop.deadline_drop * online_count as f64).floor() as usize)
+                    .min(online_count.saturating_sub(1));
+                if cut > 0 {
+                    let pd = cur_view.phase_delays(&alloc);
+                    let mut times: Vec<(usize, f64)> = online
+                        .iter()
+                        .enumerate()
+                        .filter(|&(_, &a)| a)
+                        .map(|(k, _)| {
+                            (
+                                k,
+                                pd.client_fwd[k]
+                                    + pd.act_upload[k]
+                                    + pd.client_bwd[k]
+                                    + pd.fed_upload[k],
+                            )
+                        })
+                        .collect();
+                    // slowest first; ties broken by id for determinism
+                    times.sort_by(|a, b| {
+                        b.1.partial_cmp(&a.1)
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                            .then(a.0.cmp(&b.0))
+                    });
+                    for &(k, _) in times.iter().take(cut) {
+                        online[k] = false;
+                    }
+                    dropped = cut;
+                    deadline_drops += cut;
+                    // any cost computed above used the pre-deadline mask
+                    cost_round = None;
+                }
+            }
+
+            // --- realize this round
+            let cost = match cost_round {
+                Some(c) => c,
+                None => round_cost(
+                    &cur_view,
+                    self.conv,
+                    &table,
+                    &alloc,
+                    &online,
+                    &objective,
+                    &mut col_cache,
+                ),
+            };
+            let (d, e) = (cost.delay, cost.energy);
+            if resolved {
+                solved_delay = d;
+            }
+            let weight = if remaining < 1.0 { remaining } else { 1.0 };
+            if seg_weight > 0.0 && d.to_bits() == seg_delay.to_bits() {
+                seg_weight += weight;
+            } else {
+                realized += seg_weight * seg_delay;
+                seg_weight = weight;
+                seg_delay = d;
+            }
+            if seg_weight_e > 0.0 && e.to_bits() == seg_energy.to_bits() {
+                seg_weight_e += weight;
+            } else {
+                realized_e += seg_weight_e * seg_energy;
+                seg_weight_e = weight;
+                seg_energy = e;
+            }
+            rounds.push(RoundRecord {
+                round,
+                weight,
+                delay: d,
+                energy: e,
+                l_c: alloc.l_c,
+                rank: alloc.rank,
+                active: online.iter().filter(|&&a| a).count(),
+                resolved,
+                cohort: cur_cohort.len(),
+                dropped,
+            });
+            remaining -= weight;
+            round += 1;
+        }
+        realized += seg_weight * seg_delay;
+        realized_e += seg_weight_e * seg_energy;
+
+        let unique_participants = if dense { pop.size } else { state.materialized() };
+        Ok(DynamicOutcome {
+            realized_delay: realized,
+            realized_energy: realized_e,
+            static_prediction,
+            final_alloc: alloc,
+            rounds,
+            resolves,
+            fresh_solves,
+            unique_participants,
+            deadline_drops,
+        })
+    }
+
+    /// The round's scenario view and availability mask. Dense mode
+    /// reads the evolved full-population environment; sparse mode
+    /// observes exactly the cohort (O(cohort)). If every invitee is
+    /// offline the round proceeds with the full cohort instead — the
+    /// sparse analogue of the round simulator's empty-federation guard
+    /// (per-client chain states are left untouched).
+    fn round_view(
+        &self,
+        state: &mut PopulationState,
+        denv: &mut Option<DenseEnv>,
+        cohort: &[usize],
+        round: usize,
+    ) -> (Scenario, Vec<bool>) {
+        if let Some(env) = denv {
+            (env.scn.clone(), env.active.clone())
+        } else {
+            let obs: Vec<Observation> = cohort
+                .iter()
+                .map(|&i| self.pop.observe(state, i, round))
+                .collect();
+            let mut online: Vec<bool> = obs.iter().map(|o| o.online).collect();
+            if !online.iter().any(|&a| a) {
+                online = vec![true; online.len()];
+            }
+            (self.pop.view_from(&obs), online)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::policy::Proposed;
+    use crate::sim::RoundSimulator;
+
+    const RANKS: [usize; 2] = [1, 4];
+
+    fn small_conv() -> ConvergenceModel {
+        ConvergenceModel::fitted(4.0, 1.0, 0.85)
+    }
+
+    fn pop_config(size: usize, cohort: usize, selector: &str) -> Config {
+        let mut cfg = Config::paper_defaults();
+        cfg.model = "tiny".to_string();
+        cfg.train.seq = 64;
+        cfg.train.ranks = vec![1, 4];
+        cfg.system.subch_main = 16;
+        cfg.system.subch_fed = 16;
+        cfg.population.size = size;
+        cfg.population.cohort = cohort;
+        cfg.population.selector = selector.to_string();
+        cfg.population.deadline_drop = 0.0;
+        cfg.population.seed = 5;
+        cfg.dynamics.rho = 0.8;
+        cfg.dynamics.seed = 11;
+        cfg
+    }
+
+    #[test]
+    fn degenerate_population_reproduces_round_simulator_bit_for_bit() {
+        // population == K, full-participation selection, no deadline:
+        // the anchor invariant, including jitter and dropout
+        let mut cfg = pop_config(4, 4, "uniform");
+        cfg.dynamics.compute_jitter = 0.05;
+        cfg.dynamics.dropout = 0.1;
+        cfg.dynamics.rejoin = 0.4;
+        let pop = Population::new(&cfg).unwrap();
+        let scn = pop.scenario().unwrap();
+        let conv = small_conv();
+        let cache = WorkloadCache::new();
+        let policy = Proposed::with_ranks(&RANKS);
+        for strat in [ReOptStrategy::OneShot, ReOptStrategy::Periodic(2)] {
+            let rs = RoundSimulator::new(&scn, &conv, &cache, &RANKS)
+                .run(&policy, strat)
+                .unwrap();
+            let ps = PopulationSimulator::new(&pop, &conv, &cache, &RANKS)
+                .run(&policy, strat)
+                .unwrap();
+            assert_eq!(ps.realized_delay.to_bits(), rs.realized_delay.to_bits());
+            assert_eq!(ps.realized_energy.to_bits(), rs.realized_energy.to_bits());
+            assert_eq!(ps.static_prediction.to_bits(), rs.static_prediction.to_bits());
+            assert_eq!(ps.resolves, rs.resolves);
+            assert_eq!(ps.fresh_solves, rs.fresh_solves);
+            assert_eq!(ps.rounds.len(), rs.rounds.len());
+            for (a, b) in ps.rounds.iter().zip(&rs.rounds) {
+                assert_eq!(a.delay.to_bits(), b.delay.to_bits(), "round {}", a.round);
+                assert_eq!(a.energy.to_bits(), b.energy.to_bits());
+                assert_eq!(a.weight.to_bits(), b.weight.to_bits());
+                assert_eq!((a.l_c, a.rank, a.active, a.resolved), (b.l_c, b.rank, b.active, b.resolved));
+                assert_eq!(a.cohort, 4);
+                assert_eq!(a.dropped, 0);
+            }
+            assert_eq!(ps.unique_participants, 4);
+            assert_eq!(ps.deadline_drops, 0);
+        }
+    }
+
+    #[test]
+    fn lazy_observation_matches_eager_per_round_stepping_bit_for_bit() {
+        // observing every round produces gap-1 jumps, which must carry
+        // the exact bits of the eager AR(1) recursion (the ar1_jump
+        // exactness contract lifted to the population level)
+        let cfg = pop_config(50, 8, "uniform");
+        let pop = Population::new(&cfg).unwrap();
+        let mut state = PopulationState::new(pop.size());
+        let i = 7usize;
+        let (site, mut sm, mut sf) = pop.static_client(i);
+        let d_seed = pop.template().dynamics.seed;
+        for r in 1..=10usize {
+            let mut rng = stream(d_seed, TAG_OBSERVE, i as u64, r as u64);
+            sm = pop.rho * sm + rng.normal_ms(0.0, pop.innovation_db);
+            sf = pop.rho * sf + rng.normal_ms(0.0, pop.innovation_db);
+            let obs = pop.observe(&mut state, i, r);
+            let want_gm = db_to_linear(-(pop.model.path_loss_db(site.d_main_m) + sm));
+            let want_gf = db_to_linear(-(pop.model.path_loss_db(site.d_fed_m) + sf));
+            assert_eq!(obs.gain_main.to_bits(), want_gm.to_bits(), "round {r}");
+            assert_eq!(obs.gain_fed.to_bits(), want_gf.to_bits(), "round {r}");
+            assert_eq!(obs.f_cycles.to_bits(), site.f_cycles.to_bits(), "no jitter configured");
+            assert!(obs.online);
+        }
+    }
+
+    #[test]
+    fn observation_is_independent_of_other_clients_schedules() {
+        let mut cfg = pop_config(100, 8, "uniform");
+        cfg.dynamics.compute_jitter = 0.1;
+        cfg.dynamics.dropout = 0.15;
+        cfg.dynamics.rejoin = 0.5;
+        let pop = Population::new(&cfg).unwrap();
+        let mut a = PopulationState::new(pop.size());
+        let mut b = PopulationState::new(pop.size());
+        // b carries heavy unrelated traffic before client 3 is touched
+        for r in 1..=5usize {
+            for i in [0usize, 1, 2, 4, 9, 17, 63, 99] {
+                pop.observe(&mut b, i, r);
+            }
+        }
+        for r in [2usize, 5] {
+            let oa = pop.observe(&mut a, 3, r);
+            let ob = pop.observe(&mut b, 3, r);
+            assert_eq!(oa.gain_main.to_bits(), ob.gain_main.to_bits(), "round {r}");
+            assert_eq!(oa.gain_fed.to_bits(), ob.gain_fed.to_bits(), "round {r}");
+            assert_eq!(oa.f_cycles.to_bits(), ob.f_cycles.to_bits(), "round {r}");
+            assert_eq!(oa.online, ob.online, "round {r}");
+        }
+    }
+
+    #[test]
+    fn gap_jumps_are_deterministic_and_cached_within_a_round() {
+        let mut cfg = pop_config(40, 8, "uniform");
+        cfg.dynamics.compute_jitter = 0.1;
+        let pop = Population::new(&cfg).unwrap();
+        let one_jump = |round: usize| {
+            let mut s = PopulationState::new(pop.size());
+            pop.observe(&mut s, 11, round)
+        };
+        let x = one_jump(10);
+        let y = one_jump(10);
+        assert_eq!(x.gain_main.to_bits(), y.gain_main.to_bits());
+        assert_eq!(x.f_cycles.to_bits(), y.f_cycles.to_bits());
+        // re-observing the same round is served from the slot
+        let mut s = PopulationState::new(pop.size());
+        let first = pop.observe(&mut s, 11, 10);
+        let again = pop.observe(&mut s, 11, 10);
+        assert_eq!(first.gain_main.to_bits(), again.gain_main.to_bits());
+        assert_eq!(first.f_cycles.to_bits(), again.f_cycles.to_bits());
+        assert_eq!(s.materialized(), 1);
+    }
+
+    #[test]
+    fn staleness_selection_spreads_participation_deterministically() {
+        let cfg = pop_config(60, 10, "staleness:2");
+        let pop = Population::new(&cfg).unwrap();
+        let run = || {
+            let mut state = PopulationState::new(pop.size());
+            (0..3).map(|r| pop.select(&mut state, r)).collect::<Vec<_>>()
+        };
+        let rounds = run();
+        assert_eq!(rounds, run(), "selection must be reproducible");
+        for w in rounds.windows(2) {
+            assert!(
+                w[1].iter().all(|i| !w[0].contains(i)),
+                "tau = 2 must keep consecutive cohorts disjoint: {:?} then {:?}",
+                w[0],
+                w[1]
+            );
+        }
+        for c in &rounds {
+            assert_eq!(c.len(), 10);
+            assert!(c.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn straggler_deadline_drops_slowest_and_accounts() {
+        let mut cfg = pop_config(40, 10, "uniform");
+        cfg.dynamics.rho = 1.0; // frozen channel isolates the deadline
+        cfg.population.deadline_drop = 0.25;
+        let pop = Population::new(&cfg).unwrap();
+        let conv = small_conv();
+        let cache = WorkloadCache::new();
+        let policy = Proposed::with_ranks(&RANKS);
+        let out = PopulationSimulator::new(&pop, &conv, &cache, &RANKS)
+            .run(&policy, ReOptStrategy::OneShot)
+            .unwrap();
+        for r in &out.rounds {
+            assert_eq!(r.cohort, 10);
+            assert_eq!(r.dropped, 2, "floor(0.25 * 10) stragglers per round");
+            assert_eq!(r.active, 8);
+        }
+        assert_eq!(out.deadline_drops, 2 * out.rounds.len());
+
+        // cutting the slowest clients can only help the realized delay
+        let mut cfg_nd = cfg.clone();
+        cfg_nd.population.deadline_drop = 0.0;
+        let pop_nd = Population::new(&cfg_nd).unwrap();
+        let base = PopulationSimulator::new(&pop_nd, &conv, &cache, &RANKS)
+            .run(&policy, ReOptStrategy::OneShot)
+            .unwrap();
+        assert!(out.realized_delay <= base.realized_delay);
+        assert_eq!(base.deadline_drops, 0);
+    }
+
+    #[test]
+    fn sparse_runs_are_deterministic_and_track_participation() {
+        let mut cfg = pop_config(300, 8, "staleness:3");
+        cfg.dynamics.compute_jitter = 0.05;
+        cfg.dynamics.dropout = 0.1;
+        cfg.dynamics.rejoin = 0.4;
+        let pop = Population::new(&cfg).unwrap();
+        let conv = small_conv();
+        let cache = WorkloadCache::new();
+        let policy = Proposed::with_ranks(&RANKS);
+        let sim = PopulationSimulator::new(&pop, &conv, &cache, &RANKS);
+        let a = sim.run(&policy, ReOptStrategy::Periodic(3)).unwrap();
+        let b = sim.run(&policy, ReOptStrategy::Periodic(3)).unwrap();
+        assert_eq!(a.realized_delay.to_bits(), b.realized_delay.to_bits());
+        assert_eq!(a.realized_energy.to_bits(), b.realized_energy.to_bits());
+        assert_eq!(a.rounds.len(), b.rounds.len());
+        for (x, y) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(x.delay.to_bits(), y.delay.to_bits());
+            assert_eq!(x.active, y.active);
+            assert_eq!(x.cohort, 8);
+        }
+        // staleness rotation reaches deep into the population, but the
+        // engine only ever materializes what it observed
+        assert!(a.unique_participants > 8, "{}", a.unique_participants);
+        assert!(a.unique_participants <= 300);
+        assert!(a.fresh_solves > 0, "drifting sparse views must re-solve");
+    }
+
+    #[test]
+    fn weighted_selection_builds_the_index_lazily() {
+        let cfg = pop_config(200, 8, "weighted");
+        let pop = Population::new(&cfg).unwrap();
+        let mut state = PopulationState::new(pop.size());
+        assert!(state.weights.is_none());
+        let cohort = pop.select(&mut state, 0);
+        assert!(state.weights.is_some(), "weighted selector must build the index");
+        assert_eq!(cohort.len(), 8);
+        // and a full run goes through
+        let conv = small_conv();
+        let cache = WorkloadCache::new();
+        let out = PopulationSimulator::new(&pop, &conv, &cache, &RANKS)
+            .run(&Proposed::with_ranks(&RANKS), ReOptStrategy::OneShot)
+            .unwrap();
+        assert!(out.realized_delay.is_finite() && out.realized_delay > 0.0);
+    }
+
+    #[test]
+    fn invalid_population_configs_are_rejected_descriptively() {
+        let mut cfg = pop_config(100, 8, "uniform");
+        cfg.population.size = 0;
+        assert!(Population::new(&cfg).is_err());
+        let mut cfg = pop_config(100, 8, "uniform");
+        cfg.population.cohort = 0;
+        assert!(Population::new(&cfg).is_err());
+        let mut cfg = pop_config(100, 8, "uniform");
+        cfg.population.deadline_drop = 1.0;
+        let err = format!("{:#}", Population::new(&cfg).unwrap_err());
+        assert!(err.contains("deadline_drop"), "{err}");
+        let mut cfg = pop_config(100, 8, "uniform");
+        cfg.population.selector = "typo".to_string();
+        let err = format!("{:#}", Population::new(&cfg).unwrap_err());
+        assert!(err.contains("uniform") && err.contains("staleness"), "{err}");
+        // cohort must fit on the subchannels (validated by the template)
+        let mut cfg = pop_config(100, 8, "uniform");
+        cfg.population.cohort = 17; // subch = 16
+        let err = format!("{:#}", Population::new(&cfg).unwrap_err());
+        assert!(err.contains("subchannel"), "{err}");
+    }
+
+    #[test]
+    fn full_population_scenario_requires_subchannel_coverage() {
+        let cfg = pop_config(100, 8, "uniform"); // 100 > 16 subchannels
+        let pop = Population::new(&cfg).unwrap();
+        let err = format!("{:#}", pop.scenario().unwrap_err());
+        assert!(err.contains("subchannel"), "{err}");
+        let small = Population::new(&pop_config(12, 4, "uniform")).unwrap();
+        let scn = small.scenario().unwrap();
+        assert_eq!(scn.k(), 12);
+        assert!(scn.main_link.client_gain.iter().all(|&g| g > 0.0));
+    }
+}

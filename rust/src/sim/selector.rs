@@ -1,0 +1,453 @@
+//! Per-round cohort selection over a client population.
+//!
+//! The population engine ([`crate::sim::population`]) invites a small
+//! cohort (16–256 clients) out of 10^5–10^6 modeled clients each round;
+//! this module is the pluggable policy deciding *who*. The contract
+//! ([`Selector`]) is deliberately narrow so per-round selection cost is
+//! O(cohort), independent of population size:
+//!
+//! * selection sees only a [`SelectionCtx`] — population size, target
+//!   cohort, round index, invitation history, and (for weighted
+//!   policies) a prebuilt prefix-sum [`WeightIndex`] — never the
+//!   per-client channel/compute state, which stays lazily materialized;
+//! * the RNG handed in is a **counter-based per-round stream** (a pure
+//!   function of `(population seed, round)`, see
+//!   `population::stream`), so the cohort of round `e` is
+//!   independent of call order, thread placement, and whether earlier
+//!   rounds were ever selected — checkpoint/resume reproduces it
+//!   bit for bit;
+//! * the returned cohort is distinct client ids **sorted ascending**
+//!   (the canonical order the degenerate-population bit-identity
+//!   invariant and thread-invariance tests rely on);
+//! * selection is availability-blind: invitees may turn out to be
+//!   offline (no-shows are masked out by the simulator, mirroring
+//!   xaynet's invite-then-wait coordinator lifecycle).
+//!
+//! Three policies, spec-addressable for CLI/config
+//! ([`parse_selector`]): `uniform`, `weighted` (invitation probability
+//! ∝ compute capability `f_k`), and `staleness:<τ>` (uniform over
+//! clients not invited within the last τ rounds, with a deterministic
+//! fallback when the fresh pool runs dry).
+
+use std::collections::HashSet;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::rng::Rng;
+
+/// Everything a [`Selector`] may consult for one round's cohort.
+pub struct SelectionCtx<'a> {
+    /// Population size P.
+    pub size: usize,
+    /// Target cohort size C (>= 1; C >= P selects everyone).
+    pub cohort: usize,
+    /// Round index the cohort is being selected for.
+    pub round: usize,
+    /// Prefix-sum sampling index over per-client weights; built once
+    /// (O(P)) by the population, and only when
+    /// [`Selector::needs_weights`] asks for it.
+    pub weights: Option<&'a WeightIndex>,
+    /// Per-client last-invited round, encoded `round + 1` (0 = never
+    /// invited). `u32` keeps the history at 4 bytes/client for 10^6
+    /// clients.
+    pub last_invited: &'a [u32],
+}
+
+/// A cohort-selection policy. See the module docs for the contract
+/// (distinct sorted ids, O(cohort) per round, counter-based RNG).
+pub trait Selector: Send + Sync {
+    /// The spec string [`parse_selector`] round-trips.
+    fn label(&self) -> String;
+
+    /// Whether [`SelectionCtx::weights`] must be populated. Building
+    /// the index costs O(P) once per run; policies that never read it
+    /// keep the population fully lazy.
+    fn needs_weights(&self) -> bool {
+        false
+    }
+
+    /// Fill `out` with the round's cohort: `min(cohort, size)` distinct
+    /// client ids in ascending order.
+    fn select(&self, ctx: &SelectionCtx, rng: &mut Rng, out: &mut Vec<usize>);
+}
+
+/// Parse a CLI/config selector spec: `uniform`, `weighted`,
+/// `staleness:<τ>` (τ >= 1 rounds). Descriptive `Err`, never panics.
+pub fn parse_selector(spec: &str) -> Result<Box<dyn Selector>> {
+    let spec = spec.trim();
+    let (head, arg) = match spec.split_once(':') {
+        Some((h, a)) => (h.trim(), Some(a.trim())),
+        None => (spec, None),
+    };
+    Ok(match (head, arg) {
+        ("uniform", None) => Box::new(Uniform),
+        ("weighted", None) => Box::new(WeightProportional),
+        ("staleness", Some(a)) => {
+            let tau: usize = a
+                .parse()
+                .map_err(|e| anyhow!("bad staleness window '{a}': {e}"))?;
+            if tau == 0 {
+                bail!("staleness window must be >= 1 round (0 would be exactly `uniform`)");
+            }
+            Box::new(StalenessAware(tau))
+        }
+        _ => bail!(
+            "unknown selector '{spec}' \
+             (available: uniform, weighted, staleness:<tau>)"
+        ),
+    })
+}
+
+/// Prefix-sum index for weight-proportional sampling: one O(P) build,
+/// O(log P) per draw (binary search on the cumulative weight).
+#[derive(Clone, Debug)]
+pub struct WeightIndex {
+    /// `prefix[i]` = sum of weights `0..i`; `prefix[P]` is the total.
+    prefix: Vec<f64>,
+}
+
+impl WeightIndex {
+    /// Build from per-client weights (must be finite and > 0 — the
+    /// population uses compute capability `f_k`, which always is).
+    pub fn build<I: Iterator<Item = f64>>(weights: I) -> WeightIndex {
+        let mut prefix = vec![0.0];
+        let mut acc = 0.0f64;
+        for w in weights {
+            acc += w.max(0.0);
+            prefix.push(acc);
+        }
+        WeightIndex { prefix }
+    }
+
+    pub fn len(&self) -> usize {
+        self.prefix.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Draw one client id with probability ∝ its weight.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let total = *self.prefix.last().unwrap();
+        let u = rng.f64() * total;
+        // first i with prefix[i+1] > u
+        match self
+            .prefix
+            .partition_point(|&p| p <= u)
+        {
+            0 => 0,
+            i => (i - 1).min(self.len() - 1),
+        }
+    }
+}
+
+/// Uniform sampling without replacement (rejection on a `HashSet`;
+/// cohorts are far smaller than the population, so collisions are
+/// rare).
+pub struct Uniform;
+
+impl Selector for Uniform {
+    fn label(&self) -> String {
+        "uniform".to_string()
+    }
+
+    fn select(&self, ctx: &SelectionCtx, rng: &mut Rng, out: &mut Vec<usize>) {
+        out.clear();
+        if ctx.cohort >= ctx.size {
+            out.extend(0..ctx.size);
+            return;
+        }
+        let mut taken = HashSet::with_capacity(ctx.cohort);
+        while out.len() < ctx.cohort {
+            let i = rng.below(ctx.size);
+            if taken.insert(i) {
+                out.push(i);
+            }
+        }
+        out.sort_unstable();
+    }
+}
+
+/// Invitation probability ∝ compute capability `f_k` (fast clients are
+/// invited more often — the capacity-weighted regime heterogeneous
+/// split-fed deployments run). Pays one O(P) [`WeightIndex`] build for
+/// the whole run, then O(C log P) per round.
+pub struct WeightProportional;
+
+impl Selector for WeightProportional {
+    fn label(&self) -> String {
+        "weighted".to_string()
+    }
+
+    fn needs_weights(&self) -> bool {
+        true
+    }
+
+    fn select(&self, ctx: &SelectionCtx, rng: &mut Rng, out: &mut Vec<usize>) {
+        out.clear();
+        if ctx.cohort >= ctx.size {
+            out.extend(0..ctx.size);
+            return;
+        }
+        let idx = ctx
+            .weights
+            .expect("WeightProportional requires SelectionCtx::weights (needs_weights() = true)");
+        let mut taken = HashSet::with_capacity(ctx.cohort);
+        while out.len() < ctx.cohort {
+            let i = idx.sample(rng);
+            if taken.insert(i) {
+                out.push(i);
+            }
+        }
+        out.sort_unstable();
+    }
+}
+
+/// Uniform over clients **not** invited within the last τ rounds —
+/// spreads participation across the population (xaynet's
+/// once-per-epoch selection generalized to a sliding window).
+///
+/// Two-pass with a deterministic fallback: rejected-as-recent
+/// candidates are remembered in draw order and used to fill the cohort
+/// if the fresh pool runs dry (small populations, large cohorts); a
+/// final id-order sweep guarantees the exact cohort size in every
+/// case. All three passes are pure functions of the RNG stream, so the
+/// cohort stays reproducible.
+pub struct StalenessAware(pub usize);
+
+impl Selector for StalenessAware {
+    fn label(&self) -> String {
+        format!("staleness:{}", self.0)
+    }
+
+    fn select(&self, ctx: &SelectionCtx, rng: &mut Rng, out: &mut Vec<usize>) {
+        out.clear();
+        if ctx.cohort >= ctx.size {
+            out.extend(0..ctx.size);
+            return;
+        }
+        let tau = self.0;
+        // invited at round e' (= last_invited - 1), recent iff the
+        // current round is within (e', e' + tau]
+        let recent = |i: usize| -> bool {
+            match ctx.last_invited[i] {
+                0 => false,
+                li => ctx.round <= (li as usize - 1) + tau,
+            }
+        };
+        let mut taken = HashSet::with_capacity(ctx.cohort);
+        let mut fallback: Vec<usize> = Vec::new();
+        let max_attempts = 16 * ctx.cohort + 64;
+        let mut attempts = 0;
+        while out.len() < ctx.cohort && attempts < max_attempts {
+            attempts += 1;
+            let i = rng.below(ctx.size);
+            if taken.contains(&i) {
+                continue;
+            }
+            if recent(i) {
+                if !fallback.contains(&i) {
+                    fallback.push(i);
+                }
+                continue;
+            }
+            taken.insert(i);
+            out.push(i);
+        }
+        for i in fallback {
+            if out.len() >= ctx.cohort {
+                break;
+            }
+            if taken.insert(i) {
+                out.push(i);
+            }
+        }
+        let mut i = 0;
+        while out.len() < ctx.cohort {
+            if taken.insert(i) {
+                out.push(i);
+            }
+            i += 1;
+        }
+        out.sort_unstable();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx<'a>(
+        size: usize,
+        cohort: usize,
+        round: usize,
+        weights: Option<&'a WeightIndex>,
+        last_invited: &'a [u32],
+    ) -> SelectionCtx<'a> {
+        SelectionCtx { size, cohort, round, weights, last_invited }
+    }
+
+    #[test]
+    fn specs_round_trip_and_reject_garbage() {
+        for spec in ["uniform", "weighted", "staleness:5"] {
+            let s = parse_selector(spec).unwrap();
+            assert_eq!(s.label(), spec);
+            assert_eq!(parse_selector(&s.label()).unwrap().label(), spec);
+        }
+        assert_eq!(parse_selector("  staleness: 3 ").unwrap().label(), "staleness:3");
+        for bad in [
+            "nope",
+            "staleness",
+            "staleness:0",
+            "staleness:x",
+            "staleness:-1",
+            "uniform:2",
+            "weighted:1",
+            "",
+        ] {
+            let err = parse_selector(bad);
+            assert!(err.is_err(), "'{bad}' should fail");
+            let msg = format!("{:#}", err.unwrap_err());
+            assert!(!msg.is_empty());
+        }
+        // the catalog is in the unknown-spec error
+        let msg = format!("{:#}", parse_selector("typo").unwrap_err());
+        assert!(msg.contains("uniform") && msg.contains("staleness"), "{msg}");
+    }
+
+    #[test]
+    fn cohorts_are_distinct_sorted_and_exactly_sized() {
+        let none: [u32; 0] = [];
+        let hist = vec![0u32; 1000];
+        let widx = WeightIndex::build((0..1000).map(|i| 1.0 + i as f64));
+        let selectors: Vec<Box<dyn Selector>> = vec![
+            Box::new(Uniform),
+            Box::new(WeightProportional),
+            Box::new(StalenessAware(4)),
+        ];
+        let _ = none;
+        for s in &selectors {
+            for round in 0..5 {
+                let mut rng = Rng::new(900 + round as u64);
+                let mut out = Vec::new();
+                s.select(&ctx(1000, 64, round, Some(&widx), &hist), &mut rng, &mut out);
+                assert_eq!(out.len(), 64, "{}", s.label());
+                assert!(out.windows(2).all(|w| w[0] < w[1]), "{} not sorted-distinct", s.label());
+                assert!(out.iter().all(|&i| i < 1000), "{}", s.label());
+            }
+        }
+    }
+
+    #[test]
+    fn full_participation_when_cohort_covers_the_population() {
+        let hist = vec![7u32; 12]; // even "all recent" must yield everyone
+        let widx = WeightIndex::build((0..12).map(|_| 1.0));
+        let selectors: Vec<Box<dyn Selector>> = vec![
+            Box::new(Uniform),
+            Box::new(WeightProportional),
+            Box::new(StalenessAware(3)),
+        ];
+        for s in &selectors {
+            for cohort in [12, 20] {
+                let mut rng = Rng::new(1);
+                let before = rng.clone().next_u64();
+                let mut out = Vec::new();
+                s.select(&ctx(12, cohort, 9, Some(&widx), &hist), &mut rng, &mut out);
+                assert_eq!(out, (0..12).collect::<Vec<_>>(), "{}", s.label());
+                // full participation consumes no randomness
+                assert_eq!(rng.next_u64(), before, "{}", s.label());
+            }
+        }
+    }
+
+    #[test]
+    fn selection_is_deterministic_per_stream() {
+        let hist = vec![0u32; 500];
+        let widx = WeightIndex::build((0..500).map(|i| 1.0 + (i % 7) as f64));
+        let selectors: Vec<Box<dyn Selector>> = vec![
+            Box::new(Uniform),
+            Box::new(WeightProportional),
+            Box::new(StalenessAware(2)),
+        ];
+        for s in &selectors {
+            let run = || {
+                let mut rng = Rng::new(77);
+                let mut out = Vec::new();
+                s.select(&ctx(500, 32, 3, Some(&widx), &hist), &mut rng, &mut out);
+                out
+            };
+            assert_eq!(run(), run(), "{}", s.label());
+        }
+    }
+
+    #[test]
+    fn weighted_sampling_prefers_heavy_clients() {
+        // client 9 holds half the total weight: across many rounds it
+        // must be selected far more often than any light client
+        let weights: Vec<f64> = (0..10).map(|i| if i == 9 { 9.0 } else { 1.0 }).collect();
+        let widx = WeightIndex::build(weights.into_iter());
+        let hist = vec![0u32; 10];
+        let mut heavy = 0usize;
+        let mut light0 = 0usize;
+        for round in 0..2000 {
+            let mut rng = Rng::new(round as u64);
+            let mut out = Vec::new();
+            WeightProportional.select(&ctx(10, 2, round, Some(&widx), &hist), &mut rng, &mut out);
+            heavy += out.contains(&9) as usize;
+            light0 += out.contains(&0) as usize;
+        }
+        assert!(heavy > 2 * light0, "heavy {heavy} vs light {light0}");
+    }
+
+    #[test]
+    fn weight_index_respects_proportions() {
+        let widx = WeightIndex::build([1.0, 3.0].into_iter());
+        assert_eq!(widx.len(), 2);
+        let mut rng = Rng::new(5);
+        let mut counts = [0usize; 2];
+        for _ in 0..20_000 {
+            counts[widx.sample(&mut rng)] += 1;
+        }
+        let frac = counts[1] as f64 / 20_000.0;
+        assert!((frac - 0.75).abs() < 0.02, "frac {frac}");
+    }
+
+    #[test]
+    fn staleness_skips_recently_invited_clients() {
+        // clients 0..50 invited last round: a tau=3 selection at the
+        // next round must avoid them entirely (fresh pool is ample)
+        let mut hist = vec![0u32; 200];
+        for h in hist.iter_mut().take(50) {
+            *h = 10; // invited at round 9
+        }
+        let mut rng = Rng::new(3);
+        let mut out = Vec::new();
+        StalenessAware(3).select(&ctx(200, 20, 10, None, &hist), &mut rng, &mut out);
+        assert_eq!(out.len(), 20);
+        assert!(out.iter().all(|&i| i >= 50), "picked a recent client: {out:?}");
+        // once the window passes they are eligible again
+        let mut rng = Rng::new(3);
+        let mut out2 = Vec::new();
+        StalenessAware(3).select(&ctx(200, 20, 13, None, &hist), &mut rng, &mut out2);
+        // same stream, no rejections left -> the raw draws come through
+        assert!(out2.iter().any(|&i| i < 50) || out2 == out);
+    }
+
+    #[test]
+    fn staleness_falls_back_deterministically_when_everyone_is_recent() {
+        // every client invited last round: the fresh pool is empty, so
+        // the fallback must still fill the cohort, deterministically
+        let hist = vec![5u32; 30]; // all invited at round 4
+        let run = || {
+            let mut rng = Rng::new(11);
+            let mut out = Vec::new();
+            StalenessAware(10).select(&ctx(30, 8, 5, None, &hist), &mut rng, &mut out);
+            out
+        };
+        let a = run();
+        assert_eq!(a.len(), 8);
+        assert!(a.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(a, run());
+    }
+}

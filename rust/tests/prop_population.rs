@@ -1,0 +1,188 @@
+//! Properties of the event-driven population engine (`sim::population`):
+//! the degenerate-population anchor invariant against [`RoundSimulator`]
+//! on **every** preset, cohort-selection determinism, and the O(1)
+//! lazy-advance closed form.
+
+use sfllm::delay::{ConvergenceModel, WorkloadCache};
+use sfllm::net::ar1_jump;
+use sfllm::opt::policy::Proposed;
+use sfllm::sim::{
+    Population, PopulationSimulator, PopulationState, ReOptStrategy, RoundSimulator,
+    ScenarioBuilder, PRESETS,
+};
+
+const RANKS: [usize; 2] = [1, 4];
+
+fn short_conv() -> ConvergenceModel {
+    ConvergenceModel::fitted(4.0, 1.0, 0.85)
+}
+
+/// The preset's config shrunk to test size: tiny model, two ranks, and
+/// K clamped so the debug-mode solver stays fast. Everything else —
+/// links, objective, dynamics — is the preset's own.
+fn preset_config(preset: &str) -> sfllm::config::Config {
+    let mut cfg = ScenarioBuilder::preset(preset).unwrap().into_config();
+    cfg.model = "tiny".to_string();
+    cfg.train.seq = 64;
+    cfg.train.ranks = RANKS.to_vec();
+    cfg.system.clients = cfg.system.clients.min(8);
+    cfg
+}
+
+/// Degenerate the population: population == K, full-participation
+/// selection, no straggler deadline.
+fn degenerate(cfg: &mut sfllm::config::Config) {
+    cfg.population.size = cfg.system.clients;
+    cfg.population.cohort = cfg.system.clients;
+    cfg.population.selector = "uniform".to_string();
+    cfg.population.deadline_drop = 0.0;
+}
+
+#[test]
+fn degenerate_population_matches_round_simulator_on_every_preset() {
+    // The anchor invariant: with population == K, a full-participation
+    // selector, and no deadline, the population engine IS the round
+    // simulator — bit for bit, on every preset (frozen and dynamic,
+    // delay and energy objectives alike).
+    let conv = short_conv();
+    for preset in PRESETS {
+        let mut cfg = preset_config(preset);
+        degenerate(&mut cfg);
+        let pop = Population::new(&cfg).unwrap();
+        let scn = pop.scenario().unwrap();
+        let cache = WorkloadCache::new();
+        let policy = Proposed::with_ranks(&RANKS);
+        let rs = RoundSimulator::new(&scn, &conv, &cache, &RANKS);
+        let ps = PopulationSimulator::new(&pop, &conv, &cache, &RANKS);
+        for strat in [ReOptStrategy::OneShot, ReOptStrategy::Periodic(2)] {
+            let a = rs.run(&policy, strat).unwrap();
+            let b = ps.run(&policy, strat).unwrap();
+            let tag = format!("{preset}/{}", strat.label());
+            assert_eq!(
+                a.realized_delay.to_bits(),
+                b.realized_delay.to_bits(),
+                "realized delay drifted on {tag}"
+            );
+            assert_eq!(
+                a.realized_energy.to_bits(),
+                b.realized_energy.to_bits(),
+                "realized energy drifted on {tag}"
+            );
+            assert_eq!(
+                a.static_prediction.to_bits(),
+                b.static_prediction.to_bits(),
+                "static prediction drifted on {tag}"
+            );
+            assert_eq!(a.resolves, b.resolves, "resolves drifted on {tag}");
+            assert_eq!(a.fresh_solves, b.fresh_solves, "fresh solves drifted on {tag}");
+            assert_eq!(a.rounds.len(), b.rounds.len(), "round count drifted on {tag}");
+            assert_eq!(b.deadline_drops, 0, "no deadline configured on {tag}");
+            for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+                assert_eq!(ra.delay.to_bits(), rb.delay.to_bits(), "round delay on {tag}");
+                assert_eq!(ra.energy.to_bits(), rb.energy.to_bits(), "round energy on {tag}");
+                assert_eq!(ra.weight.to_bits(), rb.weight.to_bits(), "round weight on {tag}");
+                assert_eq!(
+                    (ra.l_c, ra.rank, ra.active, ra.resolved, ra.cohort, ra.dropped),
+                    (rb.l_c, rb.rank, rb.active, rb.resolved, rb.cohort, rb.dropped),
+                    "round shape on {tag}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cohort_selection_is_deterministic_across_fresh_states() {
+    // Same seed, fresh state → the same cohort sequence, for every
+    // selector family.
+    for selector in ["uniform", "weighted", "staleness:3"] {
+        let mut cfg = ScenarioBuilder::preset("metro_population")
+            .unwrap()
+            .into_config();
+        cfg.model = "tiny".to_string();
+        cfg.train.seq = 64;
+        cfg.population.size = 5_000;
+        cfg.population.cohort = 32;
+        cfg.population.selector = selector.to_string();
+        let pop = Population::new(&cfg).unwrap();
+        let mut s1 = PopulationState::new(pop.size());
+        let mut s2 = PopulationState::new(pop.size());
+        for round in 0..6 {
+            let c1 = pop.select(&mut s1, round);
+            let c2 = pop.select(&mut s2, round);
+            assert_eq!(c1, c2, "selector {selector} diverged at round {round}");
+            assert_eq!(c1.len(), 32, "selector {selector} cohort size");
+            for &i in &c1 {
+                assert!(i < pop.size(), "selector {selector} picked client {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn observations_are_schedule_independent_across_clients_and_o1_in_the_gap() {
+    // Client i's observed trajectory depends only on i's own observation
+    // schedule — never on which other clients were observed in between —
+    // and a 100k-round gap is one closed-form jump, not 100k steps.
+    let mut cfg = ScenarioBuilder::preset("metro_population")
+        .unwrap()
+        .into_config();
+    cfg.model = "tiny".to_string();
+    cfg.train.seq = 64;
+    cfg.population.size = 10_000;
+    let pop = Population::new(&cfg).unwrap();
+
+    // alone vs interleaved with hundreds of other clients
+    let mut lone = PopulationState::new(pop.size());
+    let mut busy = PopulationState::new(pop.size());
+    for round in [0usize, 3, 7, 20] {
+        let a = pop.observe(&mut lone, 42, round);
+        for other in 0..200 {
+            pop.observe(&mut busy, other, round);
+        }
+        let b = pop.observe(&mut busy, 42, round);
+        assert_eq!(a.gain_main.to_bits(), b.gain_main.to_bits(), "round {round}");
+        assert_eq!(a.gain_fed.to_bits(), b.gain_fed.to_bits(), "round {round}");
+        assert_eq!(a.f_cycles.to_bits(), b.f_cycles.to_bits(), "round {round}");
+        assert_eq!(a.online, b.online, "round {round}");
+    }
+
+    // a huge gap lands in O(1): same jump, same bits, twice
+    let mut g1 = PopulationState::new(pop.size());
+    let mut g2 = PopulationState::new(pop.size());
+    let o1 = pop.observe(&mut g1, 7, 100_000);
+    let o2 = pop.observe(&mut g2, 7, 100_000);
+    assert!(o1.gain_main.is_finite() && o1.gain_main > 0.0);
+    assert_eq!(o1.gain_main.to_bits(), o2.gain_main.to_bits());
+    assert_eq!(o1.gain_fed.to_bits(), o2.gain_fed.to_bits());
+}
+
+#[test]
+fn ar1_jump_composes_and_degenerates_exactly() {
+    // gap = 1 must return the eager step's own coefficients bit-for-bit
+    // (that is what makes the anchor invariant possible at all) ...
+    let (rho, sigma) = (0.8f64, 7.9f64);
+    let (r1, s1) = ar1_jump(rho, sigma, 1);
+    assert_eq!(r1.to_bits(), rho.to_bits());
+    assert_eq!(s1.to_bits(), ((1.0 - rho * rho).max(0.0).sqrt() * sigma).to_bits());
+    // ... gap = 0 is the identity ...
+    assert_eq!(ar1_jump(rho, sigma, 0), (1.0, 0.0));
+    // ... and a jump over a+b rounds is the composition of a jump over
+    // a then b: rho multiplies, variances fold as sigma_ab^2 =
+    // sigma_b^2 + rho_b^2 * sigma_a^2 (to rounding).
+    for (a, b) in [(1u64, 1u64), (2, 3), (10, 17), (1000, 4242)] {
+        let (ra, sa) = ar1_jump(rho, sigma, a);
+        let (rb, sb) = ar1_jump(rho, sigma, b);
+        let (rab, sab) = ar1_jump(rho, sigma, a + b);
+        assert!((rab - ra * rb).abs() < 1e-12, "rho composition at ({a},{b})");
+        let folded = (sb * sb + rb * rb * sa * sa).sqrt();
+        assert!(
+            (sab - folded).abs() < 1e-9,
+            "variance composition at ({a},{b}): {sab} vs {folded}"
+        );
+    }
+    // rho = 1 freezes the process at any gap
+    let (rf, sf) = ar1_jump(1.0, sigma, 12_345);
+    assert_eq!(rf, 1.0);
+    assert_eq!(sf, 0.0);
+}
