@@ -14,6 +14,10 @@
 //!   SFLLM_ROUNDS   global rounds E        (default 15)
 //!   SFLLM_CLIENTS  number of clients K    (default 3)
 
+// Timing harness: wall-clock reads are the point (clippy mirror of
+// sfllm-lint D002 opts out here).
+#![allow(clippy::disallowed_methods)]
+
 use anyhow::Result;
 use sfllm::coordinator::{train, OptKind, TrainOptions};
 use sfllm::runtime::{Manifest, SflModel, SflRuntime};

@@ -21,6 +21,10 @@
 //!
 //! §Perf in EXPERIMENTS.md records these numbers before/after tuning.
 
+// Timing harness: wall-clock reads are the point (clippy mirror of
+// sfllm-lint D002 opts out here).
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use sfllm::coordinator::mock::MockModel;

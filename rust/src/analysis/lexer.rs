@@ -1,0 +1,348 @@
+//! Minimal Rust lexer for the `sfllm-lint` analyzer.
+//!
+//! Token-level, not syntax-level: rules in [`super::rules`] match short
+//! token sequences (`Instant :: now`, `. unwrap (`, `[ 0 ]`), so the
+//! lexer only has to get the hard boundaries right — comments (kept,
+//! because `lint:allow` suppressions live there), strings in all their
+//! forms (raw, byte, char vs lifetime), and numbers including the
+//! tuple-field case where `b.1.partial_cmp` must lex as
+//! `b` `.` `1` `.` `partial_cmp`, never as the float `1.`.
+//!
+//! The lexer is byte-oriented; non-ASCII characters outside strings and
+//! comments are skipped (they never participate in any rule pattern).
+
+/// Token class. String-like literals all collapse to [`TokKind::Str`]
+/// with placeholder text — their contents never match a rule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Punct,
+    Num,
+    Str,
+    Lifetime,
+}
+
+/// One lexed token with the 1-based line it starts on.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub text: String,
+    pub line: u32,
+    pub kind: TokKind,
+}
+
+/// A `//` comment with the 1-based line it starts on (block comments
+/// are skipped — `lint:allow` must be a line comment).
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Byte length of the UTF-8 character whose leading byte is `b`
+/// (1 for anything malformed, so the scan always advances).
+fn utf8_len(b: u8) -> usize {
+    match b {
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        0xF0..=0xF4 => 4,
+        _ => 1,
+    }
+}
+
+fn count_newlines(b: &[u8]) -> u32 {
+    b.iter().filter(|&&x| x == b'\n').count() as u32
+}
+
+/// If byte position `i` starts a raw (optionally byte) string literal
+/// — `r"…"`, `r#"…"#`, `br#"…"#` — returns the index just past its
+/// closing delimiter (or `len` when unterminated).
+fn raw_string_end(b: &[u8], i: usize) -> Option<usize> {
+    let mut j = i;
+    if b.get(j) == Some(&b'b') {
+        j += 1;
+    }
+    if b.get(j) != Some(&b'r') {
+        return None;
+    }
+    j += 1;
+    let hash_start = j;
+    while b.get(j) == Some(&b'#') {
+        j += 1;
+    }
+    let hashes = j - hash_start;
+    if b.get(j) != Some(&b'"') {
+        return None;
+    }
+    j += 1;
+    while j + hashes < b.len() {
+        if b[j] == b'"' && b[j + 1..j + 1 + hashes].iter().all(|&x| x == b'#') {
+            return Some(j + 1 + hashes);
+        }
+        j += 1;
+    }
+    Some(b.len())
+}
+
+/// Lex `src` into tokens plus the `//` comments (which carry
+/// suppressions). Never fails: unrecognized bytes are skipped.
+pub fn lex(src: &str) -> (Vec<Tok>, Vec<Comment>) {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        if b[i..].starts_with(b"//") {
+            let j = b[i..].iter().position(|&x| x == b'\n').map_or(n, |p| i + p);
+            comments.push(Comment {
+                line,
+                text: src[i..j].to_string(),
+            });
+            i = j;
+            continue;
+        }
+        if b[i..].starts_with(b"/*") {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i..].starts_with(b"/*") {
+                    depth += 1;
+                    i += 2;
+                } else if b[i..].starts_with(b"*/") {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        if let Some(end) = raw_string_end(b, i) {
+            line += count_newlines(&b[i..end]);
+            toks.push(Tok {
+                text: "<rawstr>".to_string(),
+                line,
+                kind: TokKind::Str,
+            });
+            i = end;
+            continue;
+        }
+        if b[i..].starts_with(b"r#") && i + 2 < n && is_ident_start(b[i + 2]) {
+            let mut j = i + 2;
+            while j < n && is_ident_cont(b[j]) {
+                j += 1;
+            }
+            toks.push(Tok {
+                text: src[i + 2..j].to_string(),
+                line,
+                kind: TokKind::Ident,
+            });
+            i = j;
+            continue;
+        }
+        if c == b'"' || b[i..].starts_with(b"b\"") {
+            i += if c == b'b' { 2 } else { 1 };
+            while i < n {
+                if b[i] == b'\\' {
+                    // an escaped newline (string continuation) still
+                    // ends a physical line
+                    if b.get(i + 1) == Some(&b'\n') {
+                        line += 1;
+                    }
+                    i += 2;
+                    continue;
+                }
+                if b[i] == b'"' {
+                    i += 1;
+                    break;
+                }
+                if b[i] == b'\n' {
+                    line += 1;
+                }
+                i += 1;
+            }
+            toks.push(Tok {
+                text: "<str>".to_string(),
+                line,
+                kind: TokKind::Str,
+            });
+            continue;
+        }
+        if c == b'\'' {
+            // lifetime ('a, '_, 'outer) iff ident-shaped and NOT closed
+            // by another quote; otherwise a char literal
+            let mut j = i + 1;
+            while j < n && is_ident_cont(b[j]) {
+                j += 1;
+            }
+            if j > i + 1 && is_ident_start(b[i + 1]) && b.get(j) != Some(&b'\'') {
+                toks.push(Tok {
+                    text: src[i..j].to_string(),
+                    line,
+                    kind: TokKind::Lifetime,
+                });
+                i = j;
+                continue;
+            }
+            i += 1;
+            while i < n {
+                if b[i] == b'\\' {
+                    i += 2;
+                    continue;
+                }
+                if b[i] == b'\'' {
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+            toks.push(Tok {
+                text: "<char>".to_string(),
+                line,
+                kind: TokKind::Str,
+            });
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i + 1;
+            while j < n && is_ident_cont(b[j]) {
+                j += 1;
+            }
+            toks.push(Tok {
+                text: src[i..j].to_string(),
+                line,
+                kind: TokKind::Ident,
+            });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n && (b[j].is_ascii_digit() || b[j] == b'_') {
+                j += 1;
+            }
+            // fractional part only when a digit follows the dot, so a
+            // tuple-field access like `x.1.partial_cmp` stays `1`
+            if j + 1 < n && b[j] == b'.' && b[j + 1].is_ascii_digit() {
+                j += 2;
+                while j < n && (b[j].is_ascii_digit() || b[j] == b'_') {
+                    j += 1;
+                }
+            }
+            if j < n && (b[j] == b'e' || b[j] == b'E') {
+                let mut k = j + 1;
+                if k < n && (b[k] == b'+' || b[k] == b'-') {
+                    k += 1;
+                }
+                if k < n && (b[k].is_ascii_digit() || b[k] == b'_') {
+                    while k < n && (b[k].is_ascii_digit() || b[k] == b'_') {
+                        k += 1;
+                    }
+                    j = k;
+                }
+            }
+            // type suffix or hex/oct/bin body (0x…, 1f64, 3usize)
+            if j < n && is_ident_start(b[j]) {
+                j += 1;
+                while j < n && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+            }
+            toks.push(Tok {
+                text: src[i..j].to_string(),
+                line,
+                kind: TokKind::Num,
+            });
+            i = j;
+            continue;
+        }
+        if b[i..].starts_with(b"::") {
+            toks.push(Tok {
+                text: "::".to_string(),
+                line,
+                kind: TokKind::Punct,
+            });
+            i += 2;
+            continue;
+        }
+        if c.is_ascii() {
+            toks.push(Tok {
+                text: (c as char).to_string(),
+                line,
+                kind: TokKind::Punct,
+            });
+            i += 1;
+        } else {
+            i += utf8_len(c);
+        }
+    }
+    (toks, comments)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).0.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn tuple_field_access_does_not_become_a_float() {
+        assert_eq!(
+            texts("b.1.partial_cmp(&a.1)"),
+            ["b", ".", "1", ".", "partial_cmp", "(", "&", "a", ".", "1", ")"]
+        );
+        assert_eq!(texts("x = 1.5e-3;"), ["x", "=", "1.5e-3", ";"]);
+        assert_eq!(texts("0x9E37_79B9"), ["0x9E37_79B9"]);
+    }
+
+    #[test]
+    fn strings_and_lifetimes_do_not_leak_idents() {
+        assert_eq!(
+            texts(r##"let s = r#"Instant::now()"#; f('x', 'a');"##),
+            ["let", "s", "=", "<rawstr>", ";", "f", "(", "<char>", ",", "<char>", ")", ";"]
+        );
+        assert_eq!(
+            texts("fn f<'a>(x: &'a str) {}"),
+            ["fn", "f", "<", "'a", ">", "(", "x", ":", "&", "'a", "str", ")", "{", "}"]
+        );
+    }
+
+    #[test]
+    fn escaped_newline_in_string_still_counts_the_line() {
+        let (toks, _) = lex("let s = \"a \\\n b\";\nlet t = 1;");
+        assert_eq!(toks.last().unwrap().line, 3);
+    }
+
+    #[test]
+    fn comments_are_captured_with_lines() {
+        let (toks, comments) = lex("let a = 1; // lint:allow(D001) because\nlet b = 2;");
+        assert_eq!(comments.len(), 1);
+        assert_eq!(comments[0].line, 1);
+        assert!(comments[0].text.contains("lint:allow"));
+        assert_eq!(toks.last().unwrap().line, 2);
+    }
+}

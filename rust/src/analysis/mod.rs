@@ -1,0 +1,200 @@
+//! `sfllm-lint` — the offline static-analysis pass that machine-checks
+//! the repo's bit-reproducibility contract.
+//!
+//! Every result this crate ships (Eq. 17 predictions, frozen-run
+//! bit-identity, the incremental-vs-reference equivalences, the
+//! cross-PR bench gate) rests on three informal disciplines: fixed
+//! reduction orders, seeded counter-based RNG streams, and NaN-safe
+//! total-order comparisons. This module makes those disciplines
+//! CI-failing lint classes instead of code-review folklore: a
+//! dependency-free tokenizer ([`lexer`]) walks `rust/src`,
+//! `rust/benches`, `rust/tests`, and `examples/`, and a rule engine
+//! ([`rules`]) matches the hazard patterns (rule table in
+//! [`rules::RULES`]; rationale per rule in DESIGN.md "PR-7: the
+//! determinism contract").
+//!
+//! Entry points: [`lint_source`] for one in-memory file (what the
+//! fixture self-tests in `rust/tests/lint_self.rs` drive),
+//! [`lint_repo`] for the tree walk, and `sfllm lint [--root <dir>]
+//! [--json <path>]` on the CLI — exit status is nonzero on any
+//! unsuppressed finding, and the JSON report (`sfllm-lint-v1`) is what
+//! the CI `lint` job archives.
+//!
+//! Suppressions are inline: `// lint:allow(<RULE>) <justification>`,
+//! justification mandatory (≥ 10 chars). Unused suppressions are
+//! reported in the JSON (`"used": false`) but do not fail the run.
+
+pub mod lexer;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+pub use rules::{check_source, rule_ids, Finding, Suppression, RULES};
+
+/// Directories scanned by [`lint_repo`], relative to the repo root.
+pub const WALK_ROOTS: &[&str] = &["rust/src", "rust/benches", "rust/tests", "examples"];
+
+/// Full-repo lint result.
+#[derive(Clone, Debug)]
+pub struct LintReport {
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+    pub suppressions: Vec<Suppression>,
+}
+
+/// Lints one in-memory source file; `rel` (repo-relative, forward
+/// slashes) drives rule scoping. Alias of [`rules::check_source`].
+pub fn lint_source(rel: &str, src: &str) -> (Vec<Finding>, Vec<Suppression>) {
+    check_source(rel, src)
+}
+
+/// Deterministic (sorted) recursive walk, skipping `lint_fixtures`
+/// directories — fixtures fire by design.
+fn collect_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading directory {}", dir.display()))?
+        .collect::<std::io::Result<Vec<_>>>()
+        .with_context(|| format!("listing {}", dir.display()))?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let path = e.path();
+        if path.is_dir() {
+            if path.file_name() == Some(std::ffi::OsStr::new("lint_fixtures")) {
+                continue;
+            }
+            collect_files(&path, out)?;
+        } else if path.extension() == Some(std::ffi::OsStr::new("rs")) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Walks [`WALK_ROOTS`] under `root` and lints every `.rs` file.
+/// Findings are sorted by (file, line, rule); the walk itself is
+/// sorted, so the report is byte-stable across runs and machines.
+pub fn lint_repo(root: &Path) -> Result<LintReport> {
+    let mut files = Vec::new();
+    for r in WALK_ROOTS {
+        let base = root.join(r);
+        if base.is_dir() {
+            collect_files(&base, &mut files)?;
+        }
+    }
+    if files.is_empty() {
+        bail!("no Rust sources under {} (expected {:?})", root.display(), WALK_ROOTS);
+    }
+    let mut findings = Vec::new();
+    let mut suppressions = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let (f, s) = check_source(&rel, &src);
+        findings.extend(f);
+        suppressions.extend(s);
+    }
+    findings.sort_by(|a, b| {
+        a.file
+            .cmp(&b.file)
+            .then(a.line.cmp(&b.line))
+            .then(a.rule.cmp(b.rule))
+    });
+    Ok(LintReport {
+        files_scanned: files.len(),
+        findings,
+        suppressions,
+    })
+}
+
+/// Locates the repo root from the current directory: works from the
+/// repo root itself (`rust/src` exists) or from `rust/` (CI runs with
+/// `working-directory: rust`).
+pub fn detect_root() -> Result<PathBuf> {
+    let cwd = std::env::current_dir().context("reading current directory")?;
+    if cwd.join("rust/src").is_dir() {
+        return Ok(cwd);
+    }
+    if cwd.join("src").is_dir() {
+        if let Some(parent) = cwd.parent() {
+            if parent.join("rust/src").is_dir() {
+                return Ok(parent.to_path_buf());
+            }
+        }
+    }
+    bail!("cannot locate the repo root; run from the repo root or rust/, or pass --root <dir>")
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl LintReport {
+    /// Machine-readable report (schema `sfllm-lint-v1`), the artifact
+    /// the CI `lint` job uploads and gates on.
+    pub fn to_json(&self) -> String {
+        let findings: Vec<String> = self
+            .findings
+            .iter()
+            .map(|f| {
+                format!(
+                    "    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \
+                     \"snippet\": \"{}\", \"message\": \"{}\"}}",
+                    f.rule,
+                    json_escape(&f.file),
+                    f.line,
+                    json_escape(&f.snippet),
+                    json_escape(f.message)
+                )
+            })
+            .collect();
+        let sups: Vec<String> = self
+            .suppressions
+            .iter()
+            .map(|s| {
+                let rules: Vec<String> = s
+                    .rules
+                    .iter()
+                    .map(|r| format!("\"{}\"", json_escape(r)))
+                    .collect();
+                format!(
+                    "    {{\"rules\": [{}], \"file\": \"{}\", \"line\": {}, \
+                     \"justification\": \"{}\", \"used\": {}}}",
+                    rules.join(", "),
+                    json_escape(&s.file),
+                    s.line,
+                    json_escape(&s.justification),
+                    s.used
+                )
+            })
+            .collect();
+        format!(
+            "{{\n  \"schema\": \"sfllm-lint-v1\",\n  \"files_scanned\": {},\n  \
+             \"finding_count\": {},\n  \"suppression_count\": {},\n  \"findings\": [\n{}\n  ],\n  \
+             \"suppressions\": [\n{}\n  ]\n}}\n",
+            self.files_scanned,
+            self.findings.len(),
+            self.suppressions.len(),
+            findings.join(",\n"),
+            sups.join(",\n")
+        )
+    }
+}

@@ -1,0 +1,364 @@
+//! Rule engine for `sfllm-lint`: the determinism / numeric-safety /
+//! panic-surface contract, checked over the token stream.
+//!
+//! Rule catalogue (see DESIGN.md "PR-7: the determinism contract" for
+//! the motivating bug behind each ID):
+//!
+//! | ID   | class       | pattern |
+//! |------|-------------|---------|
+//! | D001 | determinism | `HashMap`/`HashSet` in non-test library code |
+//! | D002 | determinism | `Instant::now`/`SystemTime::now` outside `src/bench.rs` |
+//! | D003 | determinism | `thread_rng`/`ThreadRng`/`from_entropy`/`OsRng`/`rand::random` anywhere |
+//! | D004 | determinism | `.sum()`/`.fold()` in a non-test module that spawns threads |
+//! | N001 | numeric     | `partial_cmp(..).unwrap()`/`.expect()` on floats |
+//! | N002 | numeric     | bare `partial_cmp`/`f64::max`/`f64::min` in `opt/`/`delay/`/`sim/` |
+//! | P001 | panic       | `.unwrap()`/`.expect()` in `opt/`/`delay/`/`sim/` |
+//! | P002 | panic       | literal index `x[0]` in `opt/`/`delay/`/`sim/` |
+//! | A001 | hygiene     | `lint:allow` without justification or with unknown rule id |
+//!
+//! Suppression: `// lint:allow(<ID>[,<ID>…]) <justification>` covers
+//! findings on its own line; a comment alone on a line also covers the
+//! next line that carries code. Justification text is mandatory (≥ 10
+//! characters, enforced as A001). Only plain `//` comments can carry a
+//! suppression — doc comments (`///`, `//!`) are ignored, so prose
+//! like this paragraph can name the syntax safely.
+
+use super::lexer::{lex, Comment, Tok, TokKind};
+
+/// The rule catalogue: `(id, description)`.
+pub const RULES: &[(&str, &str)] = &[
+    ("D001", "order-nondeterministic hash container in library code"),
+    ("D002", "wall-clock read outside the bench harness"),
+    ("D003", "unseeded / entropy-based RNG"),
+    ("D004", "float reduction in a thread-spawning module"),
+    ("N001", "partial_cmp().unwrap() on floats"),
+    ("N002", "NaN-unsafe float ordering in scoring/argmin path"),
+    ("P001", "unwrap/expect in solver/simulator hot path"),
+    ("P002", "literal index into slice in solver/simulator hot path"),
+    ("A001", "lint:allow without justification or with unknown rule id"),
+];
+
+/// All rule IDs, in catalogue order.
+pub fn rule_ids() -> Vec<&'static str> {
+    RULES.iter().map(|(id, _)| *id).collect()
+}
+
+fn rule_message(rule: &str) -> &'static str {
+    RULES
+        .iter()
+        .find(|(id, _)| *id == rule)
+        .map(|(_, d)| *d)
+        .unwrap_or("unknown rule")
+}
+
+/// One lint finding, pointing at a repo-relative `file:line`.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: u32,
+    /// The matched token sequence, for the human report.
+    pub snippet: String,
+    /// The rule description.
+    pub message: &'static str,
+}
+
+/// One `lint:allow` suppression comment.
+#[derive(Clone, Debug)]
+pub struct Suppression {
+    pub file: String,
+    pub line: u32,
+    pub rules: Vec<String>,
+    pub justification: String,
+    /// Lines this suppression applies to (its own, plus the next code
+    /// line when the comment stands alone).
+    covers: Vec<u32>,
+    /// Whether any finding was actually silenced by it.
+    pub used: bool,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum FileClass {
+    Src,
+    Bench,
+    TestDir,
+    Example,
+    Other,
+}
+
+fn classify(rel: &str) -> FileClass {
+    if rel.starts_with("rust/src/") {
+        FileClass::Src
+    } else if rel.starts_with("rust/benches/") {
+        FileClass::Bench
+    } else if rel.starts_with("rust/tests/") {
+        FileClass::TestDir
+    } else if rel.starts_with("examples/") {
+        FileClass::Example
+    } else {
+        FileClass::Other
+    }
+}
+
+/// Marks every token inside a `#[cfg(test)]`-gated item or a `#[test]`
+/// function (attribute through matching close brace), so rules scoped
+/// to non-test code can skip them.
+fn test_mask(toks: &[Tok]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        let mut hit = false;
+        if toks[i].text == "#" && i + 1 < toks.len() && toks[i + 1].text == "[" {
+            let after = &toks[i + 2..];
+            let rest: Vec<&str> = after.iter().take(5).map(|t| t.text.as_str()).collect();
+            if rest.len() >= 5 && rest[..5] == ["cfg", "(", "test", ")", "]"] {
+                hit = true;
+            } else if rest.len() >= 2 && rest[..2] == ["test", "]"] {
+                hit = true;
+            }
+        }
+        if !hit {
+            i += 1;
+            continue;
+        }
+        let mut j = i;
+        while j < toks.len() && toks[j].text != "{" {
+            j += 1;
+        }
+        let mut depth = 0i64;
+        while j < toks.len() {
+            match toks[j].text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let end = toks.len().min(j + 1);
+        for m in mask.iter_mut().take(end).skip(i) {
+            *m = true;
+        }
+        i = j + 1;
+    }
+    mask
+}
+
+/// Parses `lint:allow(<ids>) <justification>` out of one comment.
+fn parse_allow(text: &str) -> Option<(Vec<String>, String)> {
+    let pos = text.find("lint:allow")?;
+    let rest = text[pos + "lint:allow".len()..].strip_prefix('(')?;
+    let close = rest.find(')')?;
+    let rules: Vec<String> = rest[..close]
+        .split(',')
+        .map(str::trim)
+        .filter(|r| !r.is_empty())
+        .map(str::to_string)
+        .collect();
+    let tail = rest[close + 1..].trim_start();
+    let tail = tail.strip_prefix(':').unwrap_or(tail);
+    Some((rules, tail.trim().to_string()))
+}
+
+fn collect_suppressions(
+    rel: &str,
+    src: &str,
+    toks: &[Tok],
+    comments: &[Comment],
+) -> Vec<Suppression> {
+    let lines: Vec<&str> = src.lines().collect();
+    let mut tok_lines: Vec<u32> = toks.iter().map(|t| t.line).collect();
+    tok_lines.sort_unstable();
+    tok_lines.dedup();
+    let mut out = Vec::new();
+    for c in comments {
+        // Doc comments can't carry suppressions — they *document* the
+        // allow syntax without invoking it.
+        if c.text.starts_with("///") || c.text.starts_with("//!") {
+            continue;
+        }
+        let Some((rules, justification)) = parse_allow(&c.text) else {
+            continue;
+        };
+        let mut covers = vec![c.line];
+        let alone = lines
+            .get(c.line as usize - 1)
+            .is_some_and(|l| l.trim_start().starts_with("//"));
+        if alone {
+            if let Some(&next) = tok_lines.iter().find(|&&l| l > c.line) {
+                covers.push(next);
+            }
+        }
+        out.push(Suppression {
+            file: rel.to_string(),
+            line: c.line,
+            rules,
+            justification,
+            covers,
+            used: false,
+        });
+    }
+    out
+}
+
+fn txt(toks: &[Tok], i: usize) -> &str {
+    toks.get(i).map(|t| t.text.as_str()).unwrap_or("")
+}
+
+/// Lints one source file. `rel` is the repo-relative path (forward
+/// slashes), which drives rule scoping; the file need not exist on
+/// disk, so fixtures and tests can feed synthetic sources.
+pub fn check_source(rel: &str, src: &str) -> (Vec<Finding>, Vec<Suppression>) {
+    let rel_norm = rel.replace('\\', "/");
+    let (toks, comments) = lex(src);
+    let mask = test_mask(&toks);
+    let mut sups = collect_suppressions(&rel_norm, src, &toks, &comments);
+    let cls = classify(&rel_norm);
+    let is_bench_mod = rel_norm == "rust/src/bench.rs";
+    let hot = ["rust/src/opt/", "rust/src/delay/", "rust/src/sim/"]
+        .iter()
+        .any(|d| rel_norm.starts_with(d));
+    let has_spawn = toks
+        .iter()
+        .any(|t| t.kind == TokKind::Ident && t.text == "spawn");
+
+    let mut raw: Vec<(&'static str, u32, String)> = Vec::new();
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        let lib_nontest = cls == FileClass::Src && !mask[i];
+        if t.kind == TokKind::Ident {
+            if (t.text == "HashMap" || t.text == "HashSet") && lib_nontest {
+                raw.push(("D001", t.line, t.text.clone()));
+            }
+            if (t.text == "Instant" || t.text == "SystemTime")
+                && txt(&toks, i + 1) == "::"
+                && txt(&toks, i + 2) == "now"
+                && lib_nontest
+                && !is_bench_mod
+            {
+                raw.push(("D002", t.line, format!("{}::now", t.text)));
+            }
+            if cls != FileClass::Other {
+                if matches!(
+                    t.text.as_str(),
+                    "thread_rng" | "ThreadRng" | "from_entropy" | "OsRng"
+                ) {
+                    raw.push(("D003", t.line, t.text.clone()));
+                }
+                if t.text == "rand" && txt(&toks, i + 1) == "::" && txt(&toks, i + 2) == "random" {
+                    raw.push(("D003", t.line, "rand::random".to_string()));
+                }
+            }
+            if (t.text == "sum" || t.text == "fold")
+                && i > 0
+                && toks[i - 1].text == "."
+                && has_spawn
+                && lib_nontest
+            {
+                raw.push(("D004", t.line, format!(".{}()", t.text)));
+            }
+            if t.text == "partial_cmp" && (i == 0 || toks[i - 1].text != "fn") {
+                let mut n001 = false;
+                if txt(&toks, i + 1) == "(" {
+                    let mut depth = 0i64;
+                    let mut j = i + 1;
+                    while j < toks.len() {
+                        match toks[j].text.as_str() {
+                            "(" => depth += 1,
+                            ")" => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        j += 1;
+                    }
+                    if txt(&toks, j + 1) == "."
+                        && matches!(txt(&toks, j + 2), "unwrap" | "expect")
+                    {
+                        n001 = true;
+                    }
+                }
+                if n001 && (lib_nontest || matches!(cls, FileClass::Bench | FileClass::Example)) {
+                    raw.push(("N001", t.line, "partial_cmp().unwrap()".to_string()));
+                } else if hot && lib_nontest {
+                    raw.push(("N002", t.line, "partial_cmp".to_string()));
+                }
+            }
+            if (t.text == "f64" || t.text == "f32")
+                && txt(&toks, i + 1) == "::"
+                && matches!(txt(&toks, i + 2), "max" | "min")
+                && hot
+                && lib_nontest
+            {
+                raw.push(("N002", t.line, format!("{}::{}", t.text, txt(&toks, i + 2))));
+            }
+            if matches!(t.text.as_str(), "unwrap" | "expect")
+                && i > 0
+                && toks[i - 1].text == "."
+                && txt(&toks, i + 1) == "("
+                && hot
+                && lib_nontest
+            {
+                raw.push(("P001", t.line, format!(".{}()", t.text)));
+            }
+        }
+        if t.kind == TokKind::Punct && t.text == "[" && i > 0 {
+            let p = &toks[i - 1];
+            let prev_ok = p.kind == TokKind::Ident || p.text == ")" || p.text == "]";
+            if prev_ok
+                && toks.get(i + 1).is_some_and(|x| x.kind == TokKind::Num)
+                && txt(&toks, i + 2) == "]"
+                && hot
+                && lib_nontest
+            {
+                raw.push(("P002", t.line, format!("[{}]", toks[i + 1].text)));
+            }
+        }
+    }
+
+    let mut findings = Vec::new();
+    for (rule, line, snippet) in raw {
+        let suppressed = sups.iter_mut().any(|s| {
+            let hit = s.covers.contains(&line) && s.rules.iter().any(|r| r == rule);
+            if hit {
+                s.used = true;
+            }
+            hit
+        });
+        if !suppressed {
+            findings.push(Finding {
+                rule,
+                file: rel_norm.clone(),
+                line,
+                snippet,
+                message: rule_message(rule),
+            });
+        }
+    }
+    for s in &sups {
+        let unknown = s.rules.iter().any(|r| !rule_ids().contains(&r.as_str()));
+        if s.rules.is_empty() || unknown || s.justification.chars().count() < 10 {
+            findings.push(Finding {
+                rule: "A001",
+                file: rel_norm.clone(),
+                line: s.line,
+                snippet: format!("lint:allow({})", s.rules.join(",")),
+                message: rule_message("A001"),
+            });
+        }
+    }
+    findings.sort_by(|a, b| {
+        a.file
+            .cmp(&b.file)
+            .then(a.line.cmp(&b.line))
+            .then(a.rule.cmp(b.rule))
+    });
+    (findings, sups)
+}

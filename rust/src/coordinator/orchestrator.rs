@@ -113,10 +113,12 @@ impl TrainReport {
 
 /// Train via Algorithm 1. `factory` builds the [`SflModel`] on the
 /// device thread (PJRT runtimes are not `Send`).
+#[allow(clippy::disallowed_methods)] // wall-clock telemetry, never feeds results
 pub fn train<F>(opts: &TrainOptions, factory: F) -> Result<TrainReport>
 where
     F: FnOnce() -> Result<Box<dyn SflModel>> + Send + 'static,
 {
+    // lint:allow(D002) real-training walltime report; never feeds simulated results
     let t_start = Instant::now();
     let (device, init, device_join) = spawn_device(factory)?;
     let res = train_inner(opts, &device, &init);
@@ -127,6 +129,7 @@ where
     Ok(report)
 }
 
+#[allow(clippy::disallowed_methods)] // wall-clock telemetry, never feeds results
 fn train_inner(
     opts: &TrainOptions,
     device: &DeviceHandle,
@@ -208,6 +211,7 @@ fn train_inner(
 
     for step in 1..=total_steps {
         // phase c/d: collect K uploads, compute, average server grads
+        // lint:allow(D002) per-phase walltime telemetry; never feeds simulated results
         let t0 = Instant::now();
         let mut uploads: Vec<Option<ActivationUpload>> = (0..k_n).map(|_| None).collect();
         for _ in 0..k_n {
@@ -253,6 +257,7 @@ fn train_inner(
 
         // aggregation every I steps
         if step % opts.local_steps == 0 {
+            // lint:allow(D002) per-phase walltime telemetry; never feeds simulated results
             let t1 = Instant::now();
             let mut sets: Vec<Option<AdapterSet>> = (0..k_n).map(|_| None).collect();
             for _ in 0..k_n {
@@ -269,6 +274,7 @@ fn train_inner(
             wall.aggregation += t1.elapsed().as_secs_f64();
 
             // validation on the freshly aggregated global model
+            // lint:allow(D002) per-phase walltime telemetry; never feeds simulated results
             let t2 = Instant::now();
             let mut vl = 0.0f64;
             for b in 0..opts.eval_batches {

@@ -133,19 +133,16 @@ pub struct PhaseDelays {
 impl PhaseDelays {
     /// T_local (Eq. 16).
     pub fn t_local(&self) -> f64 {
-        let stage1 = self
-            .client_fwd
-            .iter()
-            .zip(&self.act_upload)
-            .map(|(a, b)| a + b)
-            .fold(0.0f64, f64::max);
-        let stage3 = self.client_bwd.iter().copied().fold(0.0f64, f64::max);
+        let stage1 = crate::util::stats::stage_max(
+            self.client_fwd.iter().zip(&self.act_upload).map(|(a, b)| a + b),
+        );
+        let stage3 = crate::util::stats::stage_max(self.client_bwd.iter().copied());
         stage1 + self.server_fwd + self.server_bwd + stage3
     }
 
     /// max_k T_k^f — the aggregation-phase upload bottleneck.
     pub fn t_fed(&self) -> f64 {
-        self.fed_upload.iter().copied().fold(0.0f64, f64::max)
+        crate::util::stats::stage_max(self.fed_upload.iter().copied())
     }
 }
 

@@ -16,6 +16,9 @@
 //!
 //! * [`util`] — PRNG, CLI/TOML/JSON parsing, CSV, stats (offline image:
 //!   no external crates beyond `xla` + `anyhow`).
+//! * [`analysis`] — `sfllm-lint`: the dependency-free static-analysis
+//!   pass (`sfllm lint`) that machine-checks the determinism /
+//!   numeric-safety / panic-surface contract (DESIGN.md, PR-7).
 //! * [`config`] — typed experiment configuration (paper Table II).
 //! * [`model`] — GPT-2 architecture profiles and the per-layer
 //!   FLOPs/bytes workload model (paper Table III), LoRA adapter state.
@@ -49,6 +52,13 @@
 //!   accounting) — the machinery behind every figure bench and the
 //!   CLI subcommands.
 
+// Hygiene gates (PR-7): the lint contract is also carried by the
+// compiler where it can be — no unsafe anywhere in this crate, and no
+// lookalike identifiers.
+#![forbid(unsafe_code)]
+#![deny(non_ascii_idents)]
+
+pub mod analysis;
 pub mod bench;
 pub mod config;
 pub mod coordinator;

@@ -28,6 +28,12 @@
 //!                dynamic-run scaling) and emit the machine-readable
 //!                report CI archives (`--json BENCH_pr5.json`,
 //!                `--full` for lower-variance timings);
+//! * `lint`     — run `sfllm-lint`, the offline static-analysis pass
+//!                enforcing the determinism / numeric-safety /
+//!                panic-surface contract (rule table in
+//!                `analysis::rules::RULES`; `--json <path>` for the
+//!                machine-readable report CI gates on; exits nonzero
+//!                on any unsuppressed finding);
 //! * `table3`   — print the GPT2-S complexity table (paper Table III);
 //! * `info`     — list available artifact variants.
 //!
@@ -49,6 +55,8 @@
 //! energy).
 //!
 //! Defaults reproduce the paper's Table II setup.
+
+#![forbid(unsafe_code)]
 
 use anyhow::{bail, Context, Result};
 use sfllm::config::Config;
@@ -86,12 +94,13 @@ fn run() -> Result<()> {
         "dynamic" => cmd_dynamic(&mut args),
         "population" => cmd_population(&mut args),
         "bench" => cmd_bench(&mut args),
+        "lint" => cmd_lint(&mut args),
         "table3" => cmd_table3(&mut args),
         "info" => cmd_info(&mut args),
         _ => {
             println!(
                 "sfllm — split federated learning for LLMs (paper reproduction)\n\n\
-                 usage: sfllm <train|optimize|latency|sweep|dynamic|population|bench|table3|info> [--options]\n\n\
+                 usage: sfllm <train|optimize|latency|sweep|dynamic|population|bench|lint|table3|info> [--options]\n\n\
                  train     run Algorithm 1 over an artifact variant\n\
                  optimize  solve one scenario with a named policy (default: proposed)\n\
                  latency   compare policies (proposed vs baselines a-d) on one scenario\n\
@@ -99,6 +108,7 @@ fn run() -> Result<()> {
                  dynamic   simulate round-varying dynamics, comparing re-opt strategies\n\
                  population  simulate cohort selection over a 10^5-client fleet (O(cohort)/round)\n\
                  bench     run the tracked perf axes (--json <path>, --full)\n\
+                 lint      run the determinism/numeric-safety static analysis (--json <path>)\n\
                  table3    print the GPT2-S complexity table (Table III)\n\
                  info      list artifact variants"
             );
@@ -441,6 +451,7 @@ fn cmd_dynamic(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+#[allow(clippy::disallowed_methods)] // wall-clock ms/round display; never feeds results
 fn cmd_population(args: &mut Args) -> Result<()> {
     let spec = args.str_or("policies", "proposed");
     let strategies_spec = args.str_or("strategies", "one_shot,periodic:5");
@@ -487,6 +498,7 @@ fn cmd_population(args: &mut Args) -> Result<()> {
     for inner in &inners {
         let mut one_shot: Option<f64> = None;
         for &st in &strategies {
+            // lint:allow(D002) ms/round progress display only; never feeds simulated results
             let t0 = std::time::Instant::now();
             let out = sim.run(inner.as_ref(), st)?;
             let elapsed = t0.elapsed().as_secs_f64();
@@ -559,6 +571,39 @@ fn cmd_bench(args: &mut Args) -> Result<()> {
     if let Some(path) = json {
         report.write_json(&path)?;
         println!("bench report written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_lint(args: &mut Args) -> Result<()> {
+    let root = args.get("root");
+    let json = args.get("json");
+    args.finish()?;
+    let root = match root {
+        Some(r) => std::path::PathBuf::from(r),
+        None => sfllm::analysis::detect_root()?,
+    };
+    let report = sfllm::analysis::lint_repo(&root)?;
+    if let Some(path) = &json {
+        std::fs::write(path, report.to_json())
+            .with_context(|| format!("writing lint report to {path}"))?;
+    }
+    for f in &report.findings {
+        println!("{}:{}: [{}] {} ({})", f.file, f.line, f.rule, f.message, f.snippet);
+    }
+    let unused = report.suppressions.iter().filter(|s| !s.used).count();
+    println!(
+        "sfllm-lint: {} files scanned, {} finding(s), {} suppression(s) ({} unused)",
+        report.files_scanned, report.findings.len(), report.suppressions.len(), unused
+    );
+    if let Some(path) = &json {
+        println!("lint report written to {path}");
+    }
+    if !report.findings.is_empty() {
+        bail!(
+            "sfllm-lint: {} unsuppressed finding(s); see the determinism contract in DESIGN.md",
+            report.findings.len()
+        );
     }
     Ok(())
 }

@@ -74,10 +74,11 @@ pub struct AssignmentResult {
 /// determinism).
 fn widest_first(link: &Link) -> Vec<usize> {
     let mut ids: Vec<usize> = (0..link.subch.len()).collect();
+    // total_cmp == partial_cmp on the strictly positive bandwidths,
+    // without the NaN panic path
     ids.sort_by(|&a, &b| {
         link.subch.bandwidth_hz[b]
-            .partial_cmp(&link.subch.bandwidth_hz[a])
-            .unwrap()
+            .total_cmp(&link.subch.bandwidth_hz[a])
             .then(a.cmp(&b))
     });
     ids
@@ -153,8 +154,9 @@ impl LinkScratch {
         if self.order_src != prio {
             let mut order: Vec<usize> = (0..k_n).collect();
             // weakest (largest priority value) first, ties by index —
-            // the reference's exact sort
-            order.sort_by(|&a, &b| prio[b].partial_cmp(&prio[a]).unwrap().then(a.cmp(&b)));
+            // the reference's exact sort (total_cmp: priorities are
+            // finite and never NaN, so the order is unchanged)
+            order.sort_by(|&a, &b| prio[b].total_cmp(&prio[a]).then(a.cmp(&b)));
             self.order = order;
             self.order_src = prio;
         }
@@ -310,10 +312,10 @@ where
 
     // Phase 1: weakest client first, widest subchannel each.
     let mut order: Vec<usize> = (0..k_n).collect();
+    // total_cmp == partial_cmp on the NaN-free priorities
     order.sort_by(|&a, &b| {
         initial_priority(b)
-            .partial_cmp(&initial_priority(a))
-            .unwrap()
+            .total_cmp(&initial_priority(a))
             .then(a.cmp(&b))
     });
     for &k in &order {

@@ -225,7 +225,8 @@ impl AllocationPolicy for RandomBaseline {
                 best = Some((alloc, t));
             }
         }
-        let (alloc, _) = best.expect("draws >= 1");
+        let (alloc, _) =
+            best.ok_or_else(|| anyhow!("baseline {:?} completed zero draws", self.kind))?;
         let delay = scn.total_delay(&alloc, conv);
         let energy =
             crate::delay::energy::total_energy(scn, &alloc, conv, scn.objective.zeta);

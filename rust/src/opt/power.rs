@@ -100,6 +100,7 @@ pub fn waterfill_min_power(link: &Link, k: usize, subs: &[usize], rate: f64) -> 
     // KKT water level puts theta_i proportional to B_i, i.e. a common
     // spectral efficiency R/B_tot on every subchannel. This removes the
     // inner bisection from the P2 hot loop entirely.
+    // lint:allow(P002) windows(2) yields exactly-2-element slices, so w[0]/w[1] are in bounds
     let equal_gain = g.windows(2).all(|w| (w[0] - w[1]).abs() <= 1e-12 * w[0].abs());
     if equal_gain {
         let (power, psd_common) = waterfill_equal_gain(link, k, subs, rate);
@@ -282,12 +283,12 @@ pub fn solve_link_hinted(
         // nothing to send on this link
         return Ok((0.0, vec![0.0; link.subch.len()]));
     }
-    let mut lo = a
-        .iter()
-        .zip(c_bits)
-        .filter(|(_, &c)| c > 0.0)
-        .map(|(&ak, _)| ak)
-        .fold(0.0f64, f64::max);
+    let mut lo = crate::util::stats::stage_max(
+        a.iter()
+            .zip(c_bits)
+            .filter(|(_, &c)| c > 0.0)
+            .map(|(&ak, _)| ak),
+    );
 
     let m = link.subch.len();
     scratch.probe.clear();

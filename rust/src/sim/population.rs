@@ -64,7 +64,7 @@
 //! stream over all K clients), so every record, every re-solve
 //! decision, and both realized totals carry identical bits.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
@@ -144,7 +144,7 @@ struct ClientSlot {
 /// lazily built weight index. [`Population`] itself stays immutable so
 /// several runs (strategies, policies) can share one population.
 pub struct PopulationState {
-    slots: HashMap<usize, ClientSlot>,
+    slots: BTreeMap<usize, ClientSlot>,
     /// Per-client last-invited round, encoded `round + 1` (0 = never).
     last_invited: Vec<u32>,
     weights: Option<WeightIndex>,
@@ -153,7 +153,7 @@ pub struct PopulationState {
 impl PopulationState {
     pub fn new(size: usize) -> PopulationState {
         PopulationState {
-            slots: HashMap::new(),
+            slots: BTreeMap::new(),
             last_invited: vec![0; size],
             weights: None,
         }
@@ -767,12 +767,11 @@ impl<'a> PopulationSimulator<'a> {
                             )
                         })
                         .collect();
-                    // slowest first; ties broken by id for determinism
-                    times.sort_by(|a, b| {
-                        b.1.partial_cmp(&a.1)
-                            .unwrap_or(std::cmp::Ordering::Equal)
-                            .then(a.0.cmp(&b.0))
-                    });
+                    // slowest first; ties broken by id for determinism.
+                    // total_cmp: phase delays are non-negative sums
+                    // (possibly +inf), never NaN, so this matches the
+                    // old partial_cmp order minus the Equal fallback
+                    times.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
                     for &(k, _) in times.iter().take(cut) {
                         online[k] = false;
                     }
@@ -992,6 +991,42 @@ mod tests {
             assert_eq!(oa.f_cycles.to_bits(), ob.f_cycles.to_bits(), "round {r}");
             assert_eq!(oa.online, ob.online, "round {r}");
         }
+    }
+
+    #[test]
+    fn round_records_are_independent_of_slot_insertion_history() {
+        // the slot map must not leak materialization history:
+        // observing clients in any order yields bit-identical
+        // per-round observations and a sorted iteration order
+        let mut cfg = pop_config(80, 8, "uniform");
+        cfg.dynamics.compute_jitter = 0.1;
+        cfg.dynamics.dropout = 0.1;
+        cfg.dynamics.rejoin = 0.4;
+        let pop = Population::new(&cfg).unwrap();
+        let ids = [5usize, 63, 0, 41, 12, 79, 3];
+        let mut fwd = PopulationState::new(pop.size());
+        let mut rev = PopulationState::new(pop.size());
+        for &i in &ids {
+            pop.observe(&mut fwd, i, 4);
+        }
+        for &i in ids.iter().rev() {
+            pop.observe(&mut rev, i, 4);
+        }
+        for r in 5..=7usize {
+            for &i in &ids {
+                let a = pop.observe(&mut fwd, i, r);
+                let b = pop.observe(&mut rev, i, r);
+                assert_eq!(a.gain_main.to_bits(), b.gain_main.to_bits(), "client {i} round {r}");
+                assert_eq!(a.gain_fed.to_bits(), b.gain_fed.to_bits(), "client {i} round {r}");
+                assert_eq!(a.f_cycles.to_bits(), b.f_cycles.to_bits(), "client {i} round {r}");
+                assert_eq!(a.online, b.online, "client {i} round {r}");
+            }
+        }
+        // iteration order is by client id, not by materialization order
+        let fwd_keys: Vec<usize> = fwd.slots.keys().copied().collect();
+        let rev_keys: Vec<usize> = rev.slots.keys().copied().collect();
+        assert!(fwd_keys.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(fwd_keys, rev_keys);
     }
 
     #[test]

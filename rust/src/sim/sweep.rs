@@ -607,6 +607,7 @@ impl SweepRunner {
                             break;
                         }
                         let res = self.run_point(i, &grid[i], &cache);
+                        // lint:allow(P001) lock poisoning implies a sibling worker already panicked
                         results.lock().expect("sweep results lock")[i] = Some(res);
                     });
                 }

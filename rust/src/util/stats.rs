@@ -80,6 +80,29 @@ pub fn max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
 
+/// Straggler max over non-negative stage delays (Eqs. 16/17): the
+/// slowest participant bounds the stage, with 0.0 for an empty cohort.
+///
+/// Value-identical to `fold(0.0, f64::max)` on the non-negative,
+/// NaN-free inputs every preset produces, but NaN-*propagating* for
+/// both NaN signs — `f64::max` silently drops a NaN argument, and a
+/// `total_cmp`-based max would order negative-signed NaNs (what x86
+/// produces for 0·∞) *below* −∞ and drop them too. This is the
+/// sanctioned `N002` reduction for scoring/argmax paths in
+/// `opt/`/`delay/`/`sim/`.
+pub fn stage_max(xs: impl IntoIterator<Item = f64>) -> f64 {
+    let mut m = 0.0f64;
+    for x in xs {
+        if x.is_nan() {
+            return f64::NAN;
+        }
+        if x > m {
+            m = x;
+        }
+    }
+    m
+}
+
 /// Simple least-squares fit of y = a + b*x; returns (a, b).
 pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
     assert_eq!(xs.len(), ys.len());
@@ -132,6 +155,21 @@ mod tests {
     fn empty_inputs_are_safe() {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn stage_max_matches_fold_on_clean_input_and_propagates_nan() {
+        let xs = [0.25, 3.5, 1.0, f64::INFINITY, 2.0];
+        assert_eq!(
+            stage_max(xs.iter().copied()),
+            xs.iter().copied().fold(0.0f64, f64::max)
+        );
+        assert_eq!(stage_max([0.0f64; 0]), 0.0);
+        assert_eq!(stage_max([0.0, 0.5]), 0.5);
+        // f64::max would silently drop the NaN; stage_max surfaces it,
+        // including the negative-signed NaN x86 produces for 0*inf.
+        assert!(stage_max([1.0, f64::NAN, 2.0]).is_nan());
+        assert!(stage_max([1.0, -f64::NAN]).is_nan());
     }
 
     #[test]

@@ -1,0 +1,16 @@
+// A001 clean fixture: a justified suppression that actually silences a
+// finding.
+// lint:allow(D001) membership-only scratch set; iteration order never observed
+use std::collections::HashSet;
+
+pub fn distinct(xs: &[u32]) -> usize {
+    // lint:allow(D001) membership-only scratch set; iteration order never observed
+    let mut seen = HashSet::new();
+    let mut n = 0;
+    for &x in xs {
+        if seen.insert(x) {
+            n += 1;
+        }
+    }
+    n
+}

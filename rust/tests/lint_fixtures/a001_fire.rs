@@ -1,0 +1,8 @@
+// A001 firing fixture: suppressions must carry a real justification
+// and reference rules that exist.
+
+// lint:allow(D001) short
+pub fn noop() {}
+
+// lint:allow(Z999) unknown rule id with an otherwise fine justification
+pub fn noop2() {}

@@ -1,0 +1,23 @@
+// D001 clean fixture: BTreeMap iterates in key order; hash containers
+// remain fine inside #[cfg(test)] blocks.
+use std::collections::BTreeMap;
+
+pub fn tally(xs: &[u32]) -> BTreeMap<u32, u32> {
+    let mut m = BTreeMap::new();
+    for &x in xs {
+        *m.entry(x).or_insert(0) += 1;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashSet;
+
+    #[test]
+    fn hash_containers_are_fine_in_tests() {
+        let mut s = HashSet::new();
+        s.insert(1);
+        assert!(s.contains(&1));
+    }
+}

@@ -1,0 +1,5 @@
+// D002 clean fixture: provenance timestamps are passed in by the
+// caller (the bench harness is the only sanctioned wall-clock reader).
+pub fn provenance(unix_time: u64) -> String {
+    format!("run at {unix_time}")
+}

@@ -1,0 +1,6 @@
+// D002 firing fixture: wall-clock reads outside src/bench.rs make
+// results depend on the machine, not the seeds.
+pub fn stamp() -> f64 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_secs_f64()
+}

@@ -1,0 +1,7 @@
+// D003 clean fixture: every draw comes from a seeded counter-based
+// stream, a pure function of (seed, round).
+use crate::util::rng::Rng;
+
+pub fn jitter(seed: u64, round: u64) -> f64 {
+    Rng::new(seed ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15)).f64()
+}

@@ -1,0 +1,9 @@
+// D003 firing fixture: entropy-based RNG cannot reproduce a run.
+pub fn jitter() -> f64 {
+    let mut rng = rand::thread_rng();
+    rng.sample::<f64>()
+}
+
+pub fn noise() -> f64 {
+    rand::random::<f64>()
+}

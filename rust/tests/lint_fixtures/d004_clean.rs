@@ -1,0 +1,12 @@
+// D004 clean fixture: fixed-order indexed accumulation next to the
+// thread spawn keeps the reduction order explicit.
+pub fn parallel_total(xs: &[f64]) -> f64 {
+    std::thread::scope(|s| {
+        s.spawn(|| ());
+    });
+    let mut acc = 0.0;
+    for &x in xs {
+        acc += x;
+    }
+    acc
+}

@@ -1,0 +1,8 @@
+// D004 firing fixture: iterator reductions in a module that spawns
+// threads are where reduction-order bugs hide.
+pub fn parallel_total(xs: &[f64]) -> f64 {
+    std::thread::scope(|s| {
+        s.spawn(|| ());
+    });
+    xs.iter().sum()
+}

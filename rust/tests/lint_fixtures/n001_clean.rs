@@ -1,0 +1,7 @@
+// N001 clean fixture: total_cmp is a total order — NaN sorts, never
+// panics.
+pub fn argmin(xs: &[f64]) -> usize {
+    let mut order: Vec<usize> = (0..xs.len()).collect();
+    order.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]));
+    order[0]
+}

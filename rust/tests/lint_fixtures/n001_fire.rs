@@ -1,0 +1,7 @@
+// N001 firing fixture: partial_cmp().unwrap() panics on the first NaN
+// key (the PR-2 percentile bug shape).
+pub fn argmin(xs: &[f64]) -> usize {
+    let mut order: Vec<usize> = (0..xs.len()).collect();
+    order.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    order[0]
+}

@@ -1,0 +1,11 @@
+// N002 clean fixture (hot path): route straggler maxes through the
+// NaN-propagating util::stats helper; order with total_cmp.
+use crate::util::stats::stage_max;
+
+pub fn stage_bound(xs: &[f64]) -> f64 {
+    stage_max(xs.iter().copied())
+}
+
+pub fn better(a: f64, b: f64) -> bool {
+    a.total_cmp(&b) == std::cmp::Ordering::Less
+}

@@ -1,0 +1,9 @@
+// N002 firing fixture (hot path): f64::max silently drops NaN (the
+// PR-4 0*inf bug shape), and bare partial_cmp is a partial order.
+pub fn stage_bound(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(0.0f64, f64::max)
+}
+
+pub fn better(a: f64, b: f64) -> bool {
+    a.partial_cmp(&b) == Some(std::cmp::Ordering::Less)
+}

@@ -1,0 +1,9 @@
+// P001 clean fixture (hot path): descriptive anyhow errors instead of
+// panics.
+use anyhow::{anyhow, Result};
+
+pub fn last_entry(xs: &[f64]) -> Result<f64> {
+    xs.last()
+        .copied()
+        .ok_or_else(|| anyhow!("empty stage-delay vector"))
+}

@@ -1,0 +1,9 @@
+// P001 firing fixture (hot path): unwrap/expect turn a bad scenario
+// into a panic instead of a descriptive error.
+pub fn last_entry(xs: &[f64]) -> f64 {
+    *xs.last().unwrap()
+}
+
+pub fn first_entry(xs: &[f64]) -> f64 {
+    *xs.first().expect("non-empty")
+}

@@ -1,0 +1,5 @@
+// P002 clean fixture (hot path): Option-returning accessors make the
+// empty case explicit.
+pub fn first_rank(ranks: &[usize]) -> Option<usize> {
+    ranks.first().copied()
+}

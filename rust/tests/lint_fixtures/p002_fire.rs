@@ -1,0 +1,5 @@
+// P002 firing fixture (hot path): literal indexing panics on an empty
+// slice.
+pub fn first_rank(ranks: &[usize]) -> usize {
+    ranks[0]
+}

@@ -1,0 +1,261 @@
+//! Self-tests for `sfllm-lint` (PR-7).
+//!
+//! Two layers:
+//!
+//! 1. **Fixture corpus** (`tests/lint_fixtures/`): one firing and one
+//!    clean fixture per rule ID, embedded with `include_str!` and fed
+//!    through [`sfllm::analysis::check_source`] under a synthetic
+//!    repo-relative path (hot-path rules get an `rust/src/opt/` path).
+//!    A firing fixture must produce findings for exactly its rule; a
+//!    clean fixture must produce none.
+//! 2. **Repo-wide gate**: the real tree walk must come back with zero
+//!    unsuppressed findings — the same invariant the CI `lint` job and
+//!    `sfllm lint` enforce.
+
+use sfllm::analysis::{check_source, lint_repo, rule_ids};
+
+/// Synthetic path for rules that apply to all non-test library code.
+const SRC_REL: &str = "rust/src/fake/mod.rs";
+/// Synthetic path inside the hot scope (`opt/`, `delay/`, `sim/`).
+const HOT_REL: &str = "rust/src/opt/fixture.rs";
+
+struct Case {
+    rule: &'static str,
+    rel: &'static str,
+    fire: &'static str,
+    clean: &'static str,
+    /// Finding count expected from the firing fixture.
+    expected: usize,
+}
+
+const CASES: &[Case] = &[
+    Case {
+        rule: "D001",
+        rel: SRC_REL,
+        fire: include_str!("lint_fixtures/d001_fire.rs"),
+        clean: include_str!("lint_fixtures/d001_clean.rs"),
+        expected: 3,
+    },
+    Case {
+        rule: "D002",
+        rel: SRC_REL,
+        fire: include_str!("lint_fixtures/d002_fire.rs"),
+        clean: include_str!("lint_fixtures/d002_clean.rs"),
+        expected: 1,
+    },
+    Case {
+        rule: "D003",
+        rel: SRC_REL,
+        fire: include_str!("lint_fixtures/d003_fire.rs"),
+        clean: include_str!("lint_fixtures/d003_clean.rs"),
+        expected: 2,
+    },
+    Case {
+        rule: "D004",
+        rel: SRC_REL,
+        fire: include_str!("lint_fixtures/d004_fire.rs"),
+        clean: include_str!("lint_fixtures/d004_clean.rs"),
+        expected: 1,
+    },
+    Case {
+        rule: "N001",
+        rel: SRC_REL,
+        fire: include_str!("lint_fixtures/n001_fire.rs"),
+        clean: include_str!("lint_fixtures/n001_clean.rs"),
+        expected: 1,
+    },
+    Case {
+        rule: "N002",
+        rel: HOT_REL,
+        fire: include_str!("lint_fixtures/n002_fire.rs"),
+        clean: include_str!("lint_fixtures/n002_clean.rs"),
+        expected: 2,
+    },
+    Case {
+        rule: "P001",
+        rel: HOT_REL,
+        fire: include_str!("lint_fixtures/p001_fire.rs"),
+        clean: include_str!("lint_fixtures/p001_clean.rs"),
+        expected: 2,
+    },
+    Case {
+        rule: "P002",
+        rel: HOT_REL,
+        fire: include_str!("lint_fixtures/p002_fire.rs"),
+        clean: include_str!("lint_fixtures/p002_clean.rs"),
+        expected: 1,
+    },
+    Case {
+        rule: "A001",
+        rel: SRC_REL,
+        fire: include_str!("lint_fixtures/a001_fire.rs"),
+        clean: include_str!("lint_fixtures/a001_clean.rs"),
+        expected: 2,
+    },
+];
+
+#[test]
+fn every_rule_has_a_fixture_pair() {
+    let covered: Vec<&str> = CASES.iter().map(|c| c.rule).collect();
+    for id in rule_ids() {
+        let n = covered.iter().filter(|&&r| r == id).count();
+        assert_eq!(n, 1, "rule {id} needs exactly one fixture case");
+    }
+    assert_eq!(covered.len(), rule_ids().len());
+}
+
+#[test]
+fn firing_fixtures_fire_exactly_their_rule() {
+    for c in CASES {
+        let (findings, _) = check_source(c.rel, c.fire);
+        assert_eq!(findings.len(), c.expected, "{}: got {findings:?}", c.rule);
+        for f in &findings {
+            assert_eq!(f.rule, c.rule, "{}: stray finding {f:?}", c.rule);
+            assert_eq!(f.file, c.rel);
+            assert!(f.line > 0);
+            assert!(!f.snippet.is_empty());
+            assert!(!f.message.is_empty());
+        }
+    }
+}
+
+#[test]
+fn clean_fixtures_are_clean() {
+    for c in CASES {
+        let (findings, _) = check_source(c.rel, c.clean);
+        assert!(findings.is_empty(), "{} clean fixture fired: {findings:?}", c.rule);
+    }
+}
+
+#[test]
+fn clean_suppressions_are_marked_used() {
+    let a001_clean = include_str!("lint_fixtures/a001_clean.rs");
+    let (findings, sups) = check_source(SRC_REL, a001_clean);
+    assert!(findings.is_empty(), "{findings:?}");
+    assert_eq!(sups.len(), 2);
+    for s in &sups {
+        assert!(s.used, "suppression at line {} should be used", s.line);
+        assert_eq!(s.rules, ["D001"]);
+    }
+}
+
+#[test]
+fn suppression_covers_its_own_line() {
+    let src = "use std::collections::HashMap; // lint:allow(D001) membership probe only here\n";
+    let (findings, sups) = check_source(SRC_REL, src);
+    assert!(findings.is_empty(), "{findings:?}");
+    assert_eq!(sups.len(), 1);
+    assert!(sups[0].used);
+}
+
+#[test]
+fn standalone_suppression_covers_the_next_code_line() {
+    let src = "// lint:allow(D001) membership probe only here\n\
+               use std::collections::HashMap;\n";
+    let (findings, sups) = check_source(SRC_REL, src);
+    assert!(findings.is_empty(), "{findings:?}");
+    assert!(sups[0].used);
+}
+
+#[test]
+fn suppression_does_not_reach_two_lines_down() {
+    let src = "// lint:allow(D001) membership probe only here\n\
+               fn pad() {}\n\
+               use std::collections::HashMap;\n";
+    let (findings, sups) = check_source(SRC_REL, src);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, "D001");
+    assert_eq!(findings[0].line, 3);
+    assert!(!sups[0].used, "suppression two lines up must not apply");
+}
+
+#[test]
+fn empty_rule_list_is_a001() {
+    let src = "// lint:allow() forgot to name the rule being suppressed\nfn f() {}\n";
+    let (findings, _) = check_source(SRC_REL, src);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, "A001");
+}
+
+#[test]
+fn strings_and_comments_never_trigger_rules() {
+    let src = "// prose mentioning HashMap and Instant::now is fine\n\
+               pub fn banner() -> &'static str {\n\
+                   \"HashMap thread_rng Instant::now partial_cmp\"\n\
+               }\n";
+    let (findings, _) = check_source(SRC_REL, src);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn partial_cmp_definitions_are_exempt() {
+    // Implementing PartialOrd *defines* partial_cmp; only call sites
+    // are NaN hazards.
+    let src = "struct W(u64);\n\
+               impl PartialOrd for W {\n\
+                   fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {\n\
+                       Some(self.0.cmp(&other.0))\n\
+                   }\n\
+               }\n";
+    let (findings, _) = check_source(HOT_REL, src);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn cfg_test_blocks_are_exempt_from_lib_rules() {
+    let src = "#[cfg(test)]\n\
+               mod tests {\n\
+                   use std::collections::HashMap;\n\
+                   #[test]\n\
+                   fn t() {\n\
+                       let m: HashMap<u32, u32> = HashMap::new();\n\
+                       assert!(m.is_empty());\n\
+                   }\n\
+               }\n";
+    let (findings, _) = check_source(SRC_REL, src);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn hot_rules_do_not_apply_outside_the_hot_scope() {
+    // unwrap/expect and literal indexing are only banned in
+    // opt/ / delay/ / sim/; elsewhere they are ordinary Rust.
+    let src = "pub fn f(xs: &[f64]) -> f64 {\n    xs.first().copied().unwrap() + xs[0]\n}\n";
+    let (findings, _) = check_source("rust/src/util/fake.rs", src);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+/// The repo itself must be lint-clean: zero unsuppressed findings, and
+/// every suppression must carry a real justification. This is the same
+/// gate `sfllm lint` and the CI `lint` job enforce.
+#[test]
+fn repo_is_lint_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .to_path_buf();
+    let report = lint_repo(&root).expect("lint walk succeeds");
+    assert!(report.files_scanned > 50, "walk truncated: {} files", report.files_scanned);
+    let rendered: Vec<String> = report
+        .findings
+        .iter()
+        .map(|f| format!("{}:{}: [{}] {} ({})", f.file, f.line, f.rule, f.message, f.snippet))
+        .collect();
+    assert!(report.findings.is_empty(), "lint findings:\n{}", rendered.join("\n"));
+    for s in &report.suppressions {
+        let ok = s.justification.chars().count() >= 10;
+        assert!(ok, "{}:{}: suppression without a justification", s.file, s.line);
+    }
+    let json = report.to_json();
+    let parsed = sfllm::util::json::Json::parse(&json).expect("report JSON parses");
+    let schema = parsed
+        .get("schema")
+        .and_then(|j| j.as_str())
+        .expect("schema field");
+    assert_eq!(schema, "sfllm-lint-v1");
+    let count = parsed
+        .get("finding_count")
+        .and_then(|j| j.as_usize())
+        .expect("finding_count field");
+    assert_eq!(count, 0);
+}
