@@ -2,7 +2,7 @@
 //!
 //! Runs the `micro_hotpath` axes — the optimizer pieces the BCD loop
 //! and the round-varying simulator hit per iteration/round — and emits
-//! a machine-readable JSON report (`BENCH_pr6.json`) so the repo's perf
+//! a machine-readable JSON report (`BENCH_pr8.json`) so the repo's perf
 //! trajectory is tracked in CI instead of living in bench stdout:
 //!
 //! * `algorithm2` — the heap-based Algorithm 2 vs the naive reference
@@ -22,7 +22,11 @@
 //!   at 64: the whole point of the lazy population engine is that
 //!   `round_ms` is O(cohort), so it must stay flat (CI asserts ≤2x
 //!   between 10^3 and 10^5) while `select_us` — the only O(population)
-//!   step — is tracked separately.
+//!   step — is tracked separately;
+//! * `service` — the allocator service replaying a pure tick stream vs
+//!   the closed-loop `RoundSimulator` on the identical run: the cost of
+//!   event dispatch, sink streaming, and per-run session (re)build —
+//!   the number EXPERIMENTS.md quotes as service-mode overhead.
 //!
 //! Timings auto-scale their iteration counts to a small per-axis time
 //! budget, so a default run stays CI-friendly (~1–2 min); `--full`
@@ -54,6 +58,35 @@ use crate::sim::{
 pub struct BenchOptions {
     /// 4x the per-measurement time budget (lower variance, slower run).
     pub full: bool,
+}
+
+/// The production [`Clock`](crate::util::clock::Clock): wall time in
+/// seconds since the clock was created. Lives here because `bench.rs`
+/// is the one sanctioned home for `Instant::now` (lint rule D002 and
+/// the clippy `disallowed_methods` mirror both exempt this file);
+/// everything else takes a `&dyn Clock` and never reads ambient time.
+#[derive(Clone, Debug)]
+pub struct WallClock {
+    origin: Instant,
+}
+
+impl WallClock {
+    /// New clock whose epoch is "now".
+    pub fn new() -> Self {
+        WallClock { origin: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock::new()
+    }
+}
+
+impl crate::util::clock::Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
+    }
 }
 
 /// One `algorithm2` scaling point: heap engine vs naive reference.
@@ -112,6 +145,20 @@ pub struct PopPoint {
     pub rounds: usize,
 }
 
+/// Service-mode overhead: the allocator service replaying a pure tick
+/// stream vs the closed-loop round simulator on the identical run
+/// (same preset, policy, strategy, and convergence fit). `serve_ms`
+/// includes the per-run session (re)build the service pays on
+/// `scenario_loaded`; the workload cache is warm on both sides.
+#[derive(Clone, Debug)]
+pub struct ServicePoint {
+    pub rounds: usize,
+    pub sim_ms: f64,
+    pub serve_ms: f64,
+    /// `serve_ms / sim_ms` — what one run costs through the event loop.
+    pub overhead: f64,
+}
+
 /// Everything one harness run measured.
 #[derive(Clone, Debug)]
 pub struct BenchReport {
@@ -121,6 +168,7 @@ pub struct BenchReport {
     pub grid_scan: GridScanPoint,
     pub dynamic: Vec<DynPoint>,
     pub population: Vec<PopPoint>,
+    pub service: ServicePoint,
     /// `rustc --version` of the toolchain that produced this report
     /// (`"unknown"` when no rustc is on PATH).
     pub rustc: String,
@@ -365,6 +413,47 @@ pub fn run(opts: &BenchOptions) -> Result<BenchReport> {
     // --- population scaling at fixed cohort ----------------------------
     let population = population_axis(budget)?;
 
+    // --- service replay vs the closed loop ------------------------------
+    // identical run both ways: same preset config, same policy bits
+    // (the registry's "proposed" is Proposed::with_ranks), same
+    // strategy, same short convergence fit
+    eprintln!("bench: service axis ...");
+    let spec = {
+        let mut s = crate::service::RunSpec::preset("paper");
+        s.strategy = "periodic:5".to_string();
+        s.conv = Some([4.0, 1.0, 0.85]);
+        s
+    };
+    let svc_conv = spec.conv_model();
+    let svc_cfg = spec.build_config()?;
+    let scn_svc = ScenarioBuilder::from_config(svc_cfg.clone()).build()?;
+    let svc_cache = WorkloadCache::new();
+    let svc_sim = RoundSimulator::new(&scn_svc, &svc_conv, &svc_cache, &svc_cfg.train.ranks);
+    let svc_proposed = Proposed::with_ranks(&svc_cfg.train.ranks);
+    let sim_probe = svc_sim.run(&svc_proposed, ReOptStrategy::Periodic(5))?;
+    let sim_s = time_auto(budget.max(0.3), || {
+        let r = svc_sim.run(&svc_proposed, ReOptStrategy::Periodic(5)).unwrap();
+        std::hint::black_box(r.realized_delay);
+    });
+    let open = crate::service::Event::ScenarioLoaded(spec);
+    let mut svc = crate::service::AllocatorService::new()
+        .with_sink(Box::new(crate::service::AggregateSink::new()));
+    let serve_s = time_auto(budget.max(0.3), || {
+        // a finished run may be reopened: the service's workload cache
+        // stays warm across sessions, mirroring the long-running story
+        svc.process(&open).unwrap();
+        while !svc.is_finished() {
+            svc.process(&crate::service::Event::RoundTick).unwrap();
+        }
+        std::hint::black_box(svc.events_consumed());
+    });
+    let service = ServicePoint {
+        rounds: sim_probe.rounds.len(),
+        sim_ms: sim_s * 1e3,
+        serve_ms: serve_s * 1e3,
+        overhead: serve_s / sim_s,
+    };
+
     Ok(BenchReport {
         algorithm2,
         p2_power,
@@ -372,6 +461,7 @@ pub fn run(opts: &BenchOptions) -> Result<BenchReport> {
         grid_scan,
         dynamic,
         population,
+        service,
         rustc: rustc_version(),
     })
 }
@@ -417,6 +507,11 @@ impl BenchReport {
                 p.population, p.cohort, p.select_us, p.round_ms, p.rounds
             );
         }
+        println!("\nservice replay vs closed-loop simulator (identical run):");
+        println!(
+            "  sim {:>10.3} ms/run   serve {:>10.3} ms/run   overhead {:>6.2}x   ({} rounds)",
+            self.service.sim_ms, self.service.serve_ms, self.service.overhead, self.service.rounds
+        );
         println!("\ntoolchain: {}", self.rustc);
     }
 
@@ -486,14 +581,22 @@ impl BenchReport {
             .duration_since(std::time::UNIX_EPOCH)
             .map(|d| d.as_secs())
             .unwrap_or(0);
+        let service = format!(
+            "{{\"rounds\": {}, \"sim_ms\": {}, \"serve_ms\": {}, \"overhead\": {}}}",
+            self.service.rounds,
+            jnum(self.service.sim_ms),
+            jnum(self.service.serve_ms),
+            jnum(self.service.overhead)
+        );
         let rustc = self.rustc.replace('\\', "\\\\").replace('"', "\\\"");
         format!(
-            "{{\n  \"schema\": \"sfllm-bench-v1\",\n  \"pr\": \"pr6\",\n  \
+            "{{\n  \"schema\": \"sfllm-bench-v1\",\n  \"pr\": \"pr8\",\n  \
              \"provenance\": \"generated by `sfllm bench`\",\n  \"unix_time\": {unix},\n  \
              \"rustc\": \"{rustc}\",\n  \
              \"axes\": {{\n    \"algorithm2\": [{}],\n    \"p2_power\": [{}],\n    \
              \"solve_cached\": [{}],\n    \"grid_scan\": {{\"clone_us\": {}, \"cached_us\": {}, \
-             \"speedup\": {}}},\n    \"dynamic\": [{}],\n    \"population\": [{}]\n  }}\n}}\n",
+             \"speedup\": {}}},\n    \"dynamic\": [{}],\n    \"population\": [{}],\n    \
+             \"service\": {service}\n  }}\n}}\n",
             algorithm2.join(", "),
             p2.join(", "),
             solve.join(", "),
@@ -548,11 +651,17 @@ mod tests {
                 round_ms: 3.5,
                 rounds: 30,
             }],
+            service: ServicePoint {
+                rounds: 8,
+                sim_ms: 4.0,
+                serve_ms: 4.4,
+                overhead: 1.1,
+            },
             rustc: "rustc 1.0.0 (\"quoted\")".to_string(),
         };
         let j = crate::util::json::Json::parse(&rep.to_json_string()).unwrap();
         assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "sfllm-bench-v1");
-        assert_eq!(j.get("pr").unwrap().as_str().unwrap(), "pr6");
+        assert_eq!(j.get("pr").unwrap().as_str().unwrap(), "pr8");
         // provenance: a real timestamp plus the (escaped) toolchain string
         assert!(j.get("unix_time").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(j.get("rustc").unwrap().as_str().unwrap(), "rustc 1.0.0 (\"quoted\")");
@@ -564,6 +673,7 @@ mod tests {
             "grid_scan",
             "dynamic",
             "population",
+            "service",
         ] {
             assert!(axes.get(key).is_ok(), "missing axis {key}");
         }
@@ -576,6 +686,9 @@ mod tests {
         assert_eq!(p.get("population").unwrap().as_usize().unwrap(), 100_000);
         assert_eq!(p.get("cohort").unwrap().as_usize().unwrap(), 64);
         assert!(p.get("round_ms").unwrap().as_f64().unwrap() > 0.0);
+        let s = axes.get("service").unwrap();
+        assert_eq!(s.get("rounds").unwrap().as_usize().unwrap(), 8);
+        assert!(s.get("overhead").unwrap().as_f64().unwrap() > 1.0);
     }
 
     #[test]

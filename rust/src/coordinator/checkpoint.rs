@@ -2,22 +2,91 @@
 //! fine-tuning run can resume (or ship its adapters for serving).
 //!
 //! Self-contained little-endian binary format (no serde in the offline
-//! crate set):
+//! crate set), carried over [`crate::service::codec`] since PR-8:
 //!
 //! ```text
-//! magic "SFLA" | u32 version | u32 n_tensors
+//! magic "SFLA" | u32 version (= 1)
+//! u32 n_tensors
 //! per tensor: u32 name_len | name bytes | u32 ndim | u32 dims... | f32 data...
 //! ```
+//!
+//! The header is the versioning contract: a magic mismatch means "this
+//! is not an adapter checkpoint at all", a version mismatch means "a
+//! different schema wrote this" — both fail descriptively instead of
+//! misparsing bytes. [`encode`]/[`decode`] expose the byte form so
+//! other artifacts (e.g. a service checkpoint) can embed adapter sets
+//! verbatim.
 
-use std::io::{Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use crate::model::lora::{AdapterSet, Tensor};
+use crate::service::codec::{BinReader, BinWriter};
 
 const MAGIC: &[u8; 4] = b"SFLA";
 const VERSION: u32 = 1;
+/// Guard rails against reading a corrupt length as an allocation size.
+const MAX_NAME_LEN: usize = 4096;
+const MAX_NDIM: usize = 8;
+
+/// Serialize an adapter set to its checkpoint byte form.
+pub fn encode(set: &AdapterSet) -> Vec<u8> {
+    let mut w = BinWriter::with_header(MAGIC, VERSION);
+    w.u32(set.tensors.len() as u32);
+    for t in &set.tensors {
+        w.str(&t.name);
+        w.u32(t.shape.len() as u32);
+        for &d in &t.shape {
+            w.u32(d as u32);
+        }
+        for &v in &t.data {
+            w.f32(v);
+        }
+    }
+    w.into_bytes()
+}
+
+/// Parse checkpoint bytes (see the module docs for the format).
+pub fn decode(bytes: &[u8]) -> Result<AdapterSet> {
+    let mut r = BinReader::new(bytes);
+    r.expect_magic(MAGIC, "SfLLM adapter checkpoint")?;
+    let version = r.u32("adapter checkpoint version")?;
+    if version != VERSION {
+        bail!(
+            "unsupported adapter checkpoint version {version} \
+             (this build reads version {VERSION})"
+        );
+    }
+    let n = r.u32("tensor count")? as usize;
+    let mut tensors = Vec::new();
+    for _ in 0..n {
+        let name = r.str(MAX_NAME_LEN, "tensor name")?;
+        let ndim = r.u32("tensor ndim")? as usize;
+        if ndim > MAX_NDIM {
+            bail!("corrupt checkpoint: tensor '{name}' has ndim {ndim} (limit {MAX_NDIM})");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(r.u32("tensor dim")? as usize);
+        }
+        let numel: usize = shape.iter().product();
+        if numel.saturating_mul(4) > r.remaining() {
+            bail!(
+                "corrupt checkpoint: tensor '{name}' claims {numel} elements \
+                 but only {} bytes remain",
+                r.remaining()
+            );
+        }
+        let mut data = Vec::with_capacity(numel);
+        for _ in 0..numel {
+            data.push(r.f32("tensor data")?);
+        }
+        tensors.push(Tensor { name, shape, data });
+    }
+    r.expect_end("adapter checkpoint")?;
+    Ok(AdapterSet { tensors })
+}
 
 /// Write an adapter set to `path` (creating parent dirs).
 pub fn save<P: AsRef<Path>>(set: &AdapterSet, path: P) -> Result<()> {
@@ -26,78 +95,15 @@ pub fn save<P: AsRef<Path>>(set: &AdapterSet, path: P) -> Result<()> {
             std::fs::create_dir_all(dir)?;
         }
     }
-    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
-    f.write_all(MAGIC)?;
-    f.write_all(&VERSION.to_le_bytes())?;
-    f.write_all(&(set.tensors.len() as u32).to_le_bytes())?;
-    for t in &set.tensors {
-        let name = t.name.as_bytes();
-        f.write_all(&(name.len() as u32).to_le_bytes())?;
-        f.write_all(name)?;
-        f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
-        for &d in &t.shape {
-            f.write_all(&(d as u32).to_le_bytes())?;
-        }
-        for &v in &t.data {
-            f.write_all(&v.to_le_bytes())?;
-        }
-    }
-    f.flush()?;
-    Ok(())
-}
-
-fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
+    std::fs::write(&path, encode(set))
+        .with_context(|| format!("writing {}", path.as_ref().display()))
 }
 
 /// Load an adapter set from `path`.
 pub fn load<P: AsRef<Path>>(path: P) -> Result<AdapterSet> {
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(&path)
-            .with_context(|| format!("opening {}", path.as_ref().display()))?,
-    );
-    let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("not an SfLLM adapter checkpoint");
-    }
-    let version = read_u32(&mut f)?;
-    if version != VERSION {
-        bail!("unsupported checkpoint version {version}");
-    }
-    let n = read_u32(&mut f)? as usize;
-    let mut tensors = Vec::with_capacity(n);
-    for _ in 0..n {
-        let name_len = read_u32(&mut f)? as usize;
-        if name_len > 4096 {
-            bail!("corrupt checkpoint: name length {name_len}");
-        }
-        let mut name = vec![0u8; name_len];
-        f.read_exact(&mut name)?;
-        let ndim = read_u32(&mut f)? as usize;
-        if ndim > 8 {
-            bail!("corrupt checkpoint: ndim {ndim}");
-        }
-        let mut shape = Vec::with_capacity(ndim);
-        for _ in 0..ndim {
-            shape.push(read_u32(&mut f)? as usize);
-        }
-        let numel: usize = shape.iter().product();
-        let mut data = vec![0f32; numel];
-        let mut buf = vec![0u8; numel * 4];
-        f.read_exact(&mut buf)?;
-        for (i, c) in buf.chunks_exact(4).enumerate() {
-            data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
-        }
-        tensors.push(Tensor {
-            name: String::from_utf8(name)?,
-            shape,
-            data,
-        });
-    }
-    Ok(AdapterSet { tensors })
+    let bytes = std::fs::read(&path)
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    decode(&bytes).with_context(|| format!("reading {}", path.as_ref().display()))
 }
 
 /// Check that a loaded checkpoint matches the expected signature
@@ -157,6 +163,44 @@ mod tests {
         std::fs::write(&path, b"not a checkpoint at all").unwrap();
         assert!(load(&path).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupted_header_paths_fail_descriptively() {
+        let good = encode(&sample());
+
+        // magic: flip one byte
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        let err = decode(&bad_magic).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("not a SfLLM adapter checkpoint"),
+            "{err:#}"
+        );
+
+        // version: a future schema number must be refused, not misread
+        let mut bad_version = good.clone();
+        bad_version[4..8].copy_from_slice(&99u32.to_le_bytes());
+        let err = decode(&bad_version).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("version 99"), "{msg}");
+        assert!(msg.contains("reads version 1"), "{msg}");
+
+        // header cut mid-version
+        let err = decode(&good[..6]).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+
+        // oversized name length is rejected before allocation
+        let mut bad_name = good.clone();
+        // first tensor's name_len sits right after magic+version+count
+        bad_name[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&bad_name).is_err());
+
+        // trailing garbage after a well-formed body
+        let mut trailing = good.clone();
+        trailing.extend_from_slice(b"junk");
+        let err = decode(&trailing).unwrap_err();
+        assert!(format!("{err:#}").contains("trailing"), "{err:#}");
     }
 
     #[test]

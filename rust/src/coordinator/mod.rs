@@ -32,4 +32,4 @@ pub mod optim;
 pub mod orchestrator;
 
 pub use optim::{OptKind, Optimizer};
-pub use orchestrator::{train, TrainOptions, TrainReport};
+pub use orchestrator::{train, train_with, TrainOptions, TrainReport};

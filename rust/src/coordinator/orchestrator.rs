@@ -10,7 +10,6 @@
 //! global model on held-out data — the measurement Fig. 3 plots.
 
 use std::sync::mpsc::channel;
-use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
@@ -21,8 +20,10 @@ use super::optim::{OptKind, Optimizer};
 use crate::data::{
     generate_byte_corpus, generate_corpus, shard_by_food, shard_iid, Batcher, E2eSample,
 };
+use crate::bench::WallClock;
 use crate::model::lora::AdapterSet;
 use crate::runtime::SflModel;
+use crate::util::clock::Clock;
 use crate::util::rng::Rng;
 
 /// Training options (defaults follow the tiny-model experiment setup).
@@ -113,28 +114,53 @@ impl TrainReport {
 
 /// Train via Algorithm 1. `factory` builds the [`SflModel`] on the
 /// device thread (PJRT runtimes are not `Send`).
-#[allow(clippy::disallowed_methods)] // wall-clock telemetry, never feeds results
+///
+/// Walltimes in the report are real: this wires in the bench-owned
+/// [`WallClock`] (the one sanctioned home for wall-clock reads). Tests
+/// and the allocator service use [`train_with`] to inject a
+/// deterministic clock and observe round boundaries.
 pub fn train<F>(opts: &TrainOptions, factory: F) -> Result<TrainReport>
 where
     F: FnOnce() -> Result<Box<dyn SflModel>> + Send + 'static,
 {
-    // lint:allow(D002) real-training walltime report; never feeds simulated results
-    let t_start = Instant::now();
+    train_with(opts, factory, &WallClock::new(), |_| Ok(()))
+}
+
+/// [`train`] with an injectable [`Clock`] for the phase-walltime
+/// telemetry and an `on_round` hook fired after every federated
+/// aggregation (with the 1-based global round index). The hook is how
+/// a training run becomes an event producer for the PR-8 allocator
+/// service: each aggregation boundary maps to one `RoundTick`.
+pub fn train_with<F, H>(
+    opts: &TrainOptions,
+    factory: F,
+    clock: &dyn Clock,
+    on_round: H,
+) -> Result<TrainReport>
+where
+    F: FnOnce() -> Result<Box<dyn SflModel>> + Send + 'static,
+    H: FnMut(usize) -> Result<()>,
+{
+    let t_start = clock.now();
     let (device, init, device_join) = spawn_device(factory)?;
-    let res = train_inner(opts, &device, &init);
+    let res = train_inner(opts, &device, &init, clock, on_round);
     device.shutdown();
     let _ = device_join.join();
     let mut report = res?;
-    report.walltime.total = t_start.elapsed().as_secs_f64();
+    report.walltime.total = clock.now() - t_start;
     Ok(report)
 }
 
-#[allow(clippy::disallowed_methods)] // wall-clock telemetry, never feeds results
-fn train_inner(
+fn train_inner<H>(
     opts: &TrainOptions,
     device: &DeviceHandle,
     init: &DeviceInit,
-) -> Result<TrainReport> {
+    clock: &dyn Clock,
+    mut on_round: H,
+) -> Result<TrainReport>
+where
+    H: FnMut(usize) -> Result<()>,
+{
     let k_n = opts.clients;
     let total_steps = opts.local_steps * opts.global_rounds;
     let mut rng = Rng::new(opts.seed);
@@ -211,8 +237,7 @@ fn train_inner(
 
     for step in 1..=total_steps {
         // phase c/d: collect K uploads, compute, average server grads
-        // lint:allow(D002) per-phase walltime telemetry; never feeds simulated results
-        let t0 = Instant::now();
+        let t0 = clock.now();
         let mut uploads: Vec<Option<ActivationUpload>> = (0..k_n).map(|_| None).collect();
         for _ in 0..k_n {
             let u = up_rx.recv().map_err(|_| anyhow!("clients died"))?;
@@ -246,7 +271,7 @@ fn train_inner(
         }
         server_opt.step(&mut server_adapters, &grads)?;
         train_loss.push(step_loss / k_n as f64);
-        wall.server_compute += t0.elapsed().as_secs_f64();
+        wall.server_compute += clock.now() - t0;
 
         // phase e: ship activation gradients back
         for (k, ds) in ds_out.into_iter().enumerate() {
@@ -257,8 +282,7 @@ fn train_inner(
 
         // aggregation every I steps
         if step % opts.local_steps == 0 {
-            // lint:allow(D002) per-phase walltime telemetry; never feeds simulated results
-            let t1 = Instant::now();
+            let t1 = clock.now();
             let mut sets: Vec<Option<AdapterSet>> = (0..k_n).map(|_| None).collect();
             for _ in 0..k_n {
                 let u = fed_rx.recv().map_err(|_| anyhow!("clients died (fed)"))?;
@@ -271,11 +295,10 @@ fn train_inner(
                 tx.send(global_client_adapters.clone())
                     .map_err(|_| anyhow!("broadcast failed"))?;
             }
-            wall.aggregation += t1.elapsed().as_secs_f64();
+            wall.aggregation += clock.now() - t1;
 
             // validation on the freshly aggregated global model
-            // lint:allow(D002) per-phase walltime telemetry; never feeds simulated results
-            let t2 = Instant::now();
+            let t2 = clock.now();
             let mut vl = 0.0f64;
             for b in 0..opts.eval_batches {
                 let batch = val_batcher.eval_batch(b * init.batch);
@@ -284,7 +307,9 @@ fn train_inner(
                 vl += out.loss as f64;
             }
             val_loss.push((step, vl / opts.eval_batches as f64));
-            wall.evaluation += t2.elapsed().as_secs_f64();
+            wall.evaluation += clock.now() - t2;
+
+            on_round(step / opts.local_steps)?;
         }
     }
 
@@ -380,6 +405,53 @@ mod tests {
         assert_eq!(client.tensors[0].data, r.client_adapters.tensors[0].data);
         std::fs::remove_file(format!("{base}.client.ckpt")).ok();
         std::fs::remove_file(format!("{base}.server.ckpt")).ok();
+    }
+
+    #[test]
+    fn manual_clock_and_round_hook() {
+        use crate::util::clock::ManualClock;
+        let clock = ManualClock::new();
+        let mut rounds = Vec::new();
+        let r = train_with(
+            &opts(),
+            || Ok(Box::new(MockModel::new(2, 64, 3))),
+            &clock,
+            |round| {
+                clock.advance(1.0); // deterministic "time passes" per round
+                rounds.push(round);
+                Ok(())
+            },
+        )
+        .unwrap();
+        // the hook saw every aggregation boundary, in order
+        assert_eq!(rounds, vec![1, 2, 3]);
+        // walltime is exactly what the manual clock handed out: the
+        // report contains zero ambient wall-clock reads
+        assert_eq!(r.walltime.total, 3.0);
+        // the hook fires after each phase accrual, so with a frozen
+        // clock inside the phases every per-phase bucket stays exactly 0
+        assert_eq!(r.walltime.server_compute, 0.0);
+        assert_eq!(r.walltime.aggregation, 0.0);
+        assert_eq!(r.walltime.evaluation, 0.0);
+    }
+
+    #[test]
+    fn round_hook_error_aborts_run() {
+        use crate::util::clock::ManualClock;
+        let clock = ManualClock::new();
+        let err = train_with(
+            &opts(),
+            || Ok(Box::new(MockModel::new(2, 64, 3))),
+            &clock,
+            |round| {
+                if round >= 2 {
+                    anyhow::bail!("producer asked to stop at round {round}");
+                }
+                Ok(())
+            },
+        );
+        let msg = format!("{:#}", err.expect_err("must fail"));
+        assert!(msg.contains("stop at round 2"), "{msg}");
     }
 
     #[test]

@@ -51,6 +51,11 @@
 //!   dynamics with re-optimization strategies and realized-delay
 //!   accounting) — the machinery behind every figure bench and the
 //!   CLI subcommands.
+//! * [`service`] — the allocator service (PR-8): the policy /
+//!   evaluator / dynamic stack as a long-running engine driven by
+//!   typed deterministic events (`sfllm serve`), streaming per-round
+//!   metrics into pluggable sinks, with versioned bit-exact
+//!   checkpoint/resume.
 
 // Hygiene gates (PR-7): the lint contract is also carried by the
 // compiler where it can be — no unsafe anywhere in this crate, and no
@@ -68,5 +73,6 @@ pub mod model;
 pub mod net;
 pub mod opt;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod util;

@@ -23,6 +23,14 @@
 //!                straggler deadlines (`--deadline-drop x`), and
 //!                dropout/rejoin, at O(cohort) per-round cost
 //!                (`--population`, `--cohort`, `--population-seed`);
+//! * `serve`    — run the allocator service: replay a typed JSONL
+//!                event stream (`--events`) through the long-running
+//!                engine, streaming per-round JSONL metrics
+//!                (`--metrics-out`), writing versioned `SFCK`
+//!                checkpoints (`--checkpoint-out`, every N ticks via
+//!                `--checkpoint-every` or on in-stream
+//!                `checkpoint_requested` events), and resuming a
+//!                checkpointed run bit-identically (`--resume`);
 //! * `bench`    — run the tracked perf axes (heap Algorithm 2 vs the
 //!                naive reference, warm vs cold P2, full-solve and
 //!                dynamic-run scaling) and emit the machine-readable
@@ -93,6 +101,7 @@ fn run() -> Result<()> {
         "sweep" => cmd_sweep(&mut args),
         "dynamic" => cmd_dynamic(&mut args),
         "population" => cmd_population(&mut args),
+        "serve" => cmd_serve(&mut args),
         "bench" => cmd_bench(&mut args),
         "lint" => cmd_lint(&mut args),
         "table3" => cmd_table3(&mut args),
@@ -100,13 +109,15 @@ fn run() -> Result<()> {
         _ => {
             println!(
                 "sfllm — split federated learning for LLMs (paper reproduction)\n\n\
-                 usage: sfllm <train|optimize|latency|sweep|dynamic|population|bench|lint|table3|info> [--options]\n\n\
+                 usage: sfllm <train|optimize|latency|sweep|dynamic|population|serve|bench|lint|table3|info> [--options]\n\n\
                  train     run Algorithm 1 over an artifact variant\n\
                  optimize  solve one scenario with a named policy (default: proposed)\n\
                  latency   compare policies (proposed vs baselines a-d) on one scenario\n\
                  sweep     sweep policies along an axis (--axis, --values, --threads, --energy)\n\
                  dynamic   simulate round-varying dynamics, comparing re-opt strategies\n\
                  population  simulate cohort selection over a 10^5-client fleet (O(cohort)/round)\n\
+                 serve     replay a JSONL event stream through the allocator service\n\
+                           (--events, --metrics-out, --checkpoint-out, --checkpoint-every, --resume)\n\
                  bench     run the tracked perf axes (--json <path>, --full)\n\
                  lint      run the determinism/numeric-safety static analysis (--json <path>)\n\
                  table3    print the GPT2-S complexity table (Table III)\n\
@@ -416,28 +427,14 @@ fn cmd_dynamic(args: &mut Args) -> Result<()> {
     if let Some(path) = rounds_out {
         // per-round trace of the first policy under the first strategy
         // (a deterministic replay of the sweep's first column, with the
-        // per-round fields PolicyOutcome does not carry)
+        // per-round fields PolicyOutcome does not carry), under the
+        // shared service trace schema — cohort == K and dropped == 0
+        // for round-simulator runs
         let scn = builder.build()?;
         let cache = WorkloadCache::new();
         let sim = RoundSimulator::new(&scn, &conv, &cache, &cfg.train.ranks);
         let run = sim.run(inners[0].as_ref(), strategies[0])?;
-        let mut w = CsvWriter::create(
-            &path,
-            &["round", "weight", "delay_s", "energy_j", "l_c", "rank", "active", "resolved"],
-        )?;
-        for r in &run.rounds {
-            w.row_f64(&[
-                r.round as f64,
-                r.weight,
-                r.delay,
-                r.energy,
-                r.l_c as f64,
-                r.rank as f64,
-                r.active as f64,
-                if r.resolved { 1.0 } else { 0.0 },
-            ])?;
-        }
-        w.flush()?;
+        sfllm::service::write_rounds_csv(&path, &run.rounds)?;
         println!(
             "per-round trace of {}+{} written to {path} \
              (realized {:.2} s / {:.2} kJ vs static prediction {:.2} s)",
@@ -528,28 +525,7 @@ fn cmd_population(args: &mut Args) -> Result<()> {
 
     if let Some(path) = rounds_out {
         let (name, run) = first_run.expect("at least one policy x strategy ran");
-        let mut w = CsvWriter::create(
-            &path,
-            &[
-                "round", "weight", "delay_s", "energy_j", "l_c", "rank", "cohort", "active",
-                "dropped", "resolved",
-            ],
-        )?;
-        for r in &run.rounds {
-            w.row_f64(&[
-                r.round as f64,
-                r.weight,
-                r.delay,
-                r.energy,
-                r.l_c as f64,
-                r.rank as f64,
-                r.cohort as f64,
-                r.active as f64,
-                r.dropped as f64,
-                if r.resolved { 1.0 } else { 0.0 },
-            ])?;
-        }
-        w.flush()?;
+        sfllm::service::write_rounds_csv(&path, &run.rounds)?;
         println!(
             "per-round trace of {name} written to {path} \
              (realized {:.2} s / {:.2} kJ vs static prediction {:.2} s)",
@@ -557,6 +533,112 @@ fn cmd_population(args: &mut Args) -> Result<()> {
             run.realized_energy / 1e3,
             run.static_prediction
         );
+    }
+    Ok(())
+}
+
+/// `sfllm serve` — the allocator service over a replayable event file.
+///
+/// The stream is the complete description of the run: every random
+/// quantity comes from the seeded streams the opening `scenario_loaded`
+/// spec pins down, so replaying the file is bit-identical to having
+/// driven the service live, and a `--resume` of a checkpoint written
+/// mid-stream continues the uninterrupted run byte for byte (the
+/// property `rust/tests/prop_service.rs` holds on every preset).
+fn cmd_serve(args: &mut Args) -> Result<()> {
+    let events_path = match args.get("events") {
+        Some(p) => p,
+        None => bail!("serve requires --events <jsonl> (a typed event stream to replay)"),
+    };
+    let metrics_out = args.get("metrics-out");
+    let checkpoint_out = args.get("checkpoint-out");
+    let checkpoint_every = args.usize_or("checkpoint-every", 0)?;
+    let resume = args.get("resume");
+    args.finish()?;
+
+    if checkpoint_every > 0 && checkpoint_out.is_none() {
+        bail!("--checkpoint-every requires --checkpoint-out <path>");
+    }
+
+    let text = std::fs::read_to_string(&events_path)
+        .with_context(|| format!("reading event stream {events_path}"))?;
+    let events = sfllm::service::parse_events(&text)?;
+    if events.is_empty() {
+        bail!("{events_path} contains no events");
+    }
+
+    let mut svc = sfllm::service::AllocatorService::new();
+    if let Some(path) = &metrics_out {
+        svc.add_sink(Box::new(sfllm::service::JsonlSink::create(path)?));
+    }
+    if let Some(path) = &checkpoint_out {
+        svc.set_default_checkpoint(path);
+    }
+
+    // On resume: rebuild the session from the checkpoint, then skip the
+    // prefix of the stream the checkpointed run had already consumed.
+    let start = if let Some(ck_path) = &resume {
+        let bytes = std::fs::read(ck_path)
+            .with_context(|| format!("reading checkpoint {ck_path}"))?;
+        let header = sfllm::service::peek_header(&bytes)?;
+        match events.first() {
+            Some(sfllm::service::Event::ScenarioLoaded(spec))
+                if spec.fingerprint() == header.fingerprint => {}
+            Some(sfllm::service::Event::ScenarioLoaded(_)) => bail!(
+                "{ck_path} was written by a different run than {events_path} \
+                 describes (run fingerprints disagree)"
+            ),
+            _ => bail!("{events_path} must begin with a scenario_loaded event"),
+        }
+        svc.restore(&bytes)?;
+        let skip = header.events_consumed as usize;
+        if skip > events.len() {
+            bail!(
+                "{ck_path} had consumed {skip} events but {events_path} only \
+                 holds {}",
+                events.len()
+            );
+        }
+        let done = svc.summary().map(|s| s.rounds).unwrap_or(0);
+        println!(
+            "resumed {} run at round {done} ({skip} of {} events already consumed)",
+            header.mode.label(),
+            events.len()
+        );
+        skip
+    } else {
+        0
+    };
+
+    let mut ticks = 0usize;
+    for (i, e) in events.iter().enumerate().skip(start) {
+        svc.process(e)
+            .with_context(|| format!("event {} ({})", i + 1, e.kind()))?;
+        if matches!(e, sfllm::service::Event::RoundTick) {
+            ticks += 1;
+            if checkpoint_every > 0 && ticks % checkpoint_every == 0 {
+                let path = checkpoint_out.as_ref().expect("validated above");
+                svc.flush()?;
+                svc.write_checkpoint(path)?;
+            }
+        }
+    }
+    svc.flush()?;
+
+    match svc.summary() {
+        Some(s) => println!(
+            "served {} events: {} rounds, realized {:.2} s / {:.2} kJ \
+             (static prediction {:.2} s), {} resolves ({} fresh), converged: {}",
+            events.len() - start,
+            s.rounds,
+            s.realized_delay,
+            s.realized_energy / 1e3,
+            s.static_prediction,
+            s.resolves,
+            s.fresh_solves,
+            s.converged
+        ),
+        None => println!("served {} events (no run opened)", events.len() - start),
     }
     Ok(())
 }

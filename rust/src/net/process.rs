@@ -233,6 +233,29 @@ impl ChannelProcess {
         &self.state
     }
 
+    /// Overwrite the shadow state (checkpoint restore). The vectors
+    /// must keep the process's client count.
+    pub fn set_state(&mut self, state: ChannelState) {
+        assert_eq!(
+            state.k(),
+            self.state.k(),
+            "ChannelProcess::set_state: client count changed"
+        );
+        self.state = state;
+    }
+
+    /// Snapshot the innovation RNG's stream position (checkpoint save).
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// Restore the innovation RNG's stream position (checkpoint
+    /// restore): subsequent steps redraw the exact innovation sequence
+    /// the uninterrupted process would have drawn.
+    pub fn set_rng_state(&mut self, s: [u64; 4]) {
+        self.rng = Rng::from_state(s);
+    }
+
     /// Current linear gains (main, fed).
     pub fn gains(&self, topo: &Topology) -> (Vec<f64>, Vec<f64>) {
         self.state.gains(topo, &self.model)
@@ -406,6 +429,38 @@ mod tests {
             stepped.step();
         }
         assert_ne!(run(7), stepped.state().shadow_main_db);
+    }
+
+    #[test]
+    fn checkpoint_accessors_resume_the_exact_trajectory() {
+        let model = ChannelModel::new(8.0);
+        let state = ChannelState::sample(3, &model, &mut Rng::new(13));
+        let mut p = ChannelProcess::new(model.clone(), state.clone(), 0.8, 99);
+        for _ in 0..12 {
+            p.step();
+        }
+        // snapshot mid-trajectory, keep stepping the original
+        let saved_state = p.state().clone();
+        let saved_rng = p.rng_state();
+        for _ in 0..20 {
+            p.step();
+        }
+        // rebuild a fresh process from the immutable spec + snapshot
+        let mut q = ChannelProcess::new(model, state, 0.8, 99);
+        q.set_state(saved_state);
+        q.set_rng_state(saved_rng);
+        for _ in 0..20 {
+            q.step();
+        }
+        for (a, b) in p
+            .state()
+            .shadow_main_db
+            .iter()
+            .chain(&p.state().shadow_fed_db)
+            .zip(q.state().shadow_main_db.iter().chain(&q.state().shadow_fed_db))
+        {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

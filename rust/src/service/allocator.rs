@@ -1,0 +1,940 @@
+//! The allocator service (PR-8 tentpole): a long-running, observable,
+//! checkpoint/resumable engine over the policy / evaluator / dynamic
+//! stack.
+//!
+//! [`AllocatorService`] owns the process-lifetime caches (one
+//! [`WorkloadCache`]; each run's delta `ColumnCache` lives in its
+//! [`RoundCore`]) and consumes typed deterministic [`Event`]s — from an
+//! in-memory slice ([`AllocatorService::run_events`]) or a replayable
+//! JSONL file (`sfllm serve`). Per-round output streams into pluggable
+//! [`MetricSink`]s as it is produced, not at the end of the run.
+//!
+//! **The anchor invariant** (property-tested in
+//! `rust/tests/prop_service.rs` on every preset): a pure
+//! `scenario_loaded` + `round_tick`* stream reproduces
+//! [`crate::sim::RoundSimulator`] / [`crate::sim::PopulationSimulator`]
+//! bit for bit — the tick body executes the *same* [`RoundCore`] /
+//! [`DriftEnv`] statements the simulators execute (extracted into
+//! [`crate::sim::engine`], not transcribed) — and *checkpoint at event
+//! n, resume, finish* produces byte-identical metric streams to the
+//! uninterrupted run.
+//!
+//! What makes resume bit-exact is a strict split of a run's state:
+//!
+//! * **Immutable substrate** (scenario template, policy, strategy,
+//!   convergence model) — a pure function of the [`RunSpec`], rebuilt
+//!   from the checkpoint's fingerprint exactly as `scenario_loaded`
+//!   built it, *minus* the round-0 solve/selection (their results live
+//!   in the mutable half).
+//! * **Mutable trajectory** ([`RoundCore`] scalars + allocations, the
+//!   drift environment's gains/compute/membership and RNG stream
+//!   positions, population slots / invitation history / current view)
+//!   — serialized bit for bit by [`checkpoint`].
+//! * **Bit-transparent caches** ([`WorkloadCache`], `ColumnCache`) —
+//!   never serialized; a resumed run recomputes what it would have had
+//!   cached, with identical bits (the repo-wide cache contract).
+//!
+//! [`checkpoint`]: crate::service::checkpoint
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::delay::{ConvergenceModel, Scenario, WorkloadCache};
+use crate::model::WorkloadTable;
+use crate::net::topology::ClientSite;
+use crate::opt::policy::{AllocationPolicy, PolicyRegistry};
+use crate::opt::Objective;
+use crate::service::checkpoint::{self, Header};
+use crate::service::codec::{BinReader, BinWriter};
+use crate::service::event::{Event, RunMode, RunSpec};
+use crate::service::metrics::{MetricSink, RoundMetrics, RunSummary};
+use crate::sim::dynamic::RoundCost;
+use crate::sim::engine::{Adoption, DriftEnv, RoundCore, StepCtx};
+use crate::sim::population::{comm_alloc, deadline_cut, Population, PopulationState};
+use crate::sim::{ReOptStrategy, RoundRecord, ScenarioBuilder};
+use crate::util::json::Json;
+
+/// The per-run immutable substrate: everything `scenario_loaded`
+/// derives from the [`RunSpec`] that never mutates afterwards. Rebuilt
+/// (never serialized) on resume.
+struct SessionBase {
+    spec: RunSpec,
+    conv: ConvergenceModel,
+    objective: Objective,
+    table: Arc<WorkloadTable>,
+    strategy: ReOptStrategy,
+    policy: Arc<dyn AllocationPolicy>,
+    max_rounds: usize,
+    /// The template's `dynamics.compute_jitter` (sparse-population view
+    /// dirtiness — see [`crate::sim::PopulationSimulator::run`]).
+    compute_jitter: f64,
+}
+
+/// The engine-specific mutable half of a run.
+enum Engine {
+    /// The K-client round-simulator loop over one drifting scenario.
+    Dynamic {
+        env: DriftEnv,
+        /// `scn.k()` — the round simulator's `unique_participants`.
+        k_n: usize,
+    },
+    /// The population loop: cohort selection, sparse observation,
+    /// deadlines, incumbent rebasing.
+    Population {
+        pop: Population,
+        state: PopulationState,
+        /// Dense mode's evolved full-population environment.
+        denv: Option<DriftEnv>,
+        dense: bool,
+        frozen_channel: bool,
+        cur_cohort: Vec<usize>,
+        cur_view: Scenario,
+        online: Vec<bool>,
+        /// A pending `cohort_selected` override for the next tick.
+        cohort_override: Option<Vec<usize>>,
+    },
+}
+
+/// One loaded run: substrate + engine + the shared round core.
+struct Session {
+    base: SessionBase,
+    engine: Engine,
+    core: RoundCore,
+    /// One unit of convergence progress realized (ticks become no-ops).
+    finished: bool,
+    /// The run summary has been streamed (on convergence or shutdown).
+    summary_emitted: bool,
+}
+
+/// The long-running allocator: consumes [`Event`]s, drives the shared
+/// round engine, streams metrics, writes/loads checkpoints. See the
+/// module docs for the determinism contract.
+pub struct AllocatorService {
+    cache: WorkloadCache,
+    sinks: Vec<Box<dyn MetricSink>>,
+    session: Option<Session>,
+    /// Events processed so far (including the one being processed) —
+    /// recorded in checkpoints so a resuming replay knows how far to
+    /// skip.
+    events_consumed: u64,
+    /// Target of `checkpoint_requested` events that carry no path.
+    default_checkpoint: Option<PathBuf>,
+}
+
+impl Default for AllocatorService {
+    fn default() -> AllocatorService {
+        AllocatorService::new()
+    }
+}
+
+impl AllocatorService {
+    pub fn new() -> AllocatorService {
+        AllocatorService {
+            cache: WorkloadCache::new(),
+            sinks: Vec::new(),
+            session: None,
+            events_consumed: 0,
+            default_checkpoint: None,
+        }
+    }
+
+    /// Builder-style sink registration.
+    pub fn with_sink(mut self, sink: Box<dyn MetricSink>) -> AllocatorService {
+        self.sinks.push(sink);
+        self
+    }
+
+    pub fn add_sink(&mut self, sink: Box<dyn MetricSink>) {
+        self.sinks.push(sink);
+    }
+
+    /// Where path-less `checkpoint_requested` events write to.
+    pub fn set_default_checkpoint<P: Into<PathBuf>>(&mut self, path: P) {
+        self.default_checkpoint = Some(path.into());
+    }
+
+    pub fn events_consumed(&self) -> u64 {
+        self.events_consumed
+    }
+
+    /// Whether the loaded run has realized one unit of convergence
+    /// progress (no run loaded = false).
+    pub fn is_finished(&self) -> bool {
+        self.session.as_ref().map(|s| s.finished).unwrap_or(false)
+    }
+
+    /// Rounds realized since this process opened (or resumed) the run —
+    /// what the simulators would have put in
+    /// [`crate::sim::DynamicOutcome::rounds`]. A resumed service starts
+    /// this empty: earlier rounds were already streamed to the sinks.
+    pub fn rounds(&self) -> &[RoundRecord] {
+        self.session.as_ref().map(|s| s.core.rounds.as_slice()).unwrap_or(&[])
+    }
+
+    /// The running summary of the loaded run (totals realized so far;
+    /// `converged` says whether the run is finished).
+    pub fn summary(&self) -> Option<RunSummary> {
+        self.session.as_ref().map(summary_of)
+    }
+
+    /// Process one event. Errors are descriptive and leave the service
+    /// in a well-defined state (the offending event counts as
+    /// consumed).
+    pub fn process(&mut self, event: &Event) -> Result<()> {
+        self.events_consumed += 1;
+        match event {
+            Event::ScenarioLoaded(spec) => {
+                if let Some(s) = &self.session {
+                    if !s.finished {
+                        bail!(
+                            "scenario_loaded at round {} of an unfinished run: \
+                             one event stream drives one run at a time",
+                            s.core.round
+                        );
+                    }
+                }
+                let session = self.open_session(spec.clone())?;
+                self.session = Some(session);
+                Ok(())
+            }
+            Event::RoundTick => self.tick(),
+            Event::ChannelDrift => {
+                let session = self.require_session("channel_drift")?;
+                match &mut session.engine {
+                    Engine::Dynamic { env, .. } => {
+                        if env.advance() {
+                            session.core.env_dirty = true;
+                        }
+                        Ok(())
+                    }
+                    Engine::Population { denv, .. } => match denv.as_mut() {
+                        Some(env) => {
+                            if env.advance() {
+                                session.core.env_dirty = true;
+                            }
+                            Ok(())
+                        }
+                        None => bail!(
+                            "channel_drift is not available in sparse population mode: \
+                             per-client channels evolve from counter-based streams keyed \
+                             by round, so there is no extra step to take"
+                        ),
+                    },
+                }
+            }
+            Event::CohortSelected { ids } => {
+                let session = self.require_session("cohort_selected")?;
+                match &mut session.engine {
+                    Engine::Population { pop, cohort_override, .. } => {
+                        if ids.len() != pop.cohort() {
+                            bail!(
+                                "cohort_selected: {} ids, the run's cohort size is {}",
+                                ids.len(),
+                                pop.cohort()
+                            );
+                        }
+                        for &i in ids {
+                            if i >= pop.size() {
+                                bail!(
+                                    "cohort_selected: client id {i} out of population \
+                                     (size {})",
+                                    pop.size()
+                                );
+                            }
+                        }
+                        *cohort_override = Some(ids.clone());
+                        Ok(())
+                    }
+                    Engine::Dynamic { .. } => bail!(
+                        "cohort_selected requires population mode (the dynamic engine \
+                         invites every client every round)"
+                    ),
+                }
+            }
+            Event::ClientDropped { id } => self.set_member(*id, false),
+            Event::ClientRejoined { id } => self.set_member(*id, true),
+            Event::ReOptRequested => {
+                let session = self.require_session("reopt_requested")?;
+                session.core.force_reopt = true;
+                Ok(())
+            }
+            Event::CheckpointRequested { path } => {
+                let target = match path {
+                    Some(p) => PathBuf::from(p),
+                    None => match &self.default_checkpoint {
+                        Some(p) => p.clone(),
+                        None => bail!(
+                            "checkpoint_requested carries no path and no default \
+                             checkpoint path is configured (--checkpoint-out)"
+                        ),
+                    },
+                };
+                // flush first so a consumer of (metrics so far,
+                // checkpoint) sees a consistent pair
+                self.flush()?;
+                self.write_checkpoint(&target)
+            }
+            Event::Shutdown => {
+                if let Some(session) = &mut self.session {
+                    if !session.summary_emitted {
+                        session.summary_emitted = true;
+                        let s = summary_of(session);
+                        for sink in &mut self.sinks {
+                            sink.on_summary(&s)?;
+                        }
+                    }
+                }
+                self.flush()
+            }
+        }
+    }
+
+    /// Process a whole event stream in order.
+    pub fn run_events(&mut self, events: &[Event]) -> Result<()> {
+        for (i, e) in events.iter().enumerate() {
+            self.process(e)
+                .with_context(|| format!("event {} ({})", i + 1, e.kind()))?;
+        }
+        Ok(())
+    }
+
+    /// Flush every sink.
+    pub fn flush(&mut self) -> Result<()> {
+        for sink in &mut self.sinks {
+            sink.flush()?;
+        }
+        Ok(())
+    }
+
+    fn require_session(&mut self, what: &str) -> Result<&mut Session> {
+        match self.session.as_mut() {
+            Some(s) => Ok(s),
+            None => bail!("{what} before scenario_loaded"),
+        }
+    }
+
+    fn set_member(&mut self, id: usize, online: bool) -> Result<()> {
+        let what = if online { "client_rejoined" } else { "client_dropped" };
+        let session = self.require_session(what)?;
+        match &mut session.engine {
+            Engine::Dynamic { env, .. } => env.set_member(id, online),
+            Engine::Population { denv, .. } => match denv.as_mut() {
+                Some(env) => env.set_member(id, online),
+                None => bail!(
+                    "{what} is not available in sparse population mode: availability \
+                     evolves from each client's own seeded Markov chain (use \
+                     cohort_selected to steer participation instead)"
+                ),
+            },
+        }
+    }
+
+    // --- opening a run -------------------------------------------------
+
+    fn open_session(&self, spec: RunSpec) -> Result<Session> {
+        match spec.mode {
+            RunMode::Dynamic => {
+                let (base, env, k_n) = self.dynamic_parts(spec)?;
+                let out0 = base
+                    .policy
+                    .solve_cached(&env.scn, &base.conv, &self.cache)
+                    .context("service run: round-0 solve")?;
+                let static_prediction = env.scn.total_delay(&out0.alloc, &base.conv);
+                let core = RoundCore::new(out0.alloc, static_prediction, &base.conv);
+                Ok(Session {
+                    base,
+                    engine: Engine::Dynamic { env, k_n },
+                    core,
+                    finished: false,
+                    summary_emitted: false,
+                })
+            }
+            RunMode::Population => {
+                let (base, pop, dense) = self.population_parts(spec)?;
+                let frozen_channel = pop.channel_frozen();
+                let mut state = PopulationState::new(pop.size());
+                let mut denv = if dense {
+                    Some(DriftEnv::new(pop.scenario()?))
+                } else {
+                    None
+                };
+                let cur_cohort = pop.select(&mut state, 0);
+                let (cur_view, online) = pop.round_view(&mut state, &mut denv, &cur_cohort, 0);
+                let out0 = base
+                    .policy
+                    .solve_cached(&cur_view, &base.conv, &self.cache)
+                    .context("service run: round-0 solve")?;
+                let static_prediction = cur_view.total_delay(&out0.alloc, &base.conv);
+                let core = RoundCore::new(out0.alloc, static_prediction, &base.conv);
+                Ok(Session {
+                    base,
+                    engine: Engine::Population {
+                        pop,
+                        state,
+                        denv,
+                        dense,
+                        frozen_channel,
+                        cur_cohort,
+                        cur_view,
+                        online,
+                        cohort_override: None,
+                    },
+                    core,
+                    finished: false,
+                    summary_emitted: false,
+                })
+            }
+        }
+    }
+
+    /// The dynamic-mode substrate plus a *pristine* (round-0) drift
+    /// environment — shared by `scenario_loaded` and resume, which is
+    /// what guarantees a resumed substrate is the one the checkpointed
+    /// run was built on.
+    fn dynamic_parts(&self, spec: RunSpec) -> Result<(SessionBase, DriftEnv, usize)> {
+        let cfg = spec.build_config()?;
+        let scn = ScenarioBuilder::from_config(cfg.clone())
+            .build()
+            .with_context(|| format!("service run: scenario for preset '{}'", spec.preset))?;
+        let conv = spec.conv_model();
+        let objective = Objective::from_config(&scn.objective)?;
+        let table = self.cache.table_for(&scn.profile, &cfg.train.ranks);
+        let policy = PolicyRegistry::paper_suite(&cfg.train.ranks, cfg.system.seed, spec.draws)
+            .get(&spec.policy)?;
+        let strategy = ReOptStrategy::parse(&spec.strategy)?;
+        let max_rounds = scn.dynamics.max_rounds;
+        let compute_jitter = scn.dynamics.compute_jitter;
+        let k_n = scn.k();
+        let env = DriftEnv::new(scn);
+        Ok((
+            SessionBase {
+                spec,
+                conv,
+                objective,
+                table,
+                strategy,
+                policy,
+                max_rounds,
+                compute_jitter,
+            },
+            env,
+            k_n,
+        ))
+    }
+
+    /// The population-mode substrate (see [`Self::dynamic_parts`]).
+    fn population_parts(&self, spec: RunSpec) -> Result<(SessionBase, Population, bool)> {
+        let cfg = spec.build_config()?;
+        let pop = Population::new(&cfg)?;
+        let conv = spec.conv_model();
+        let objective = Objective::from_config(&pop.template().objective)?;
+        let table = self.cache.table_for(&pop.template().profile, &cfg.train.ranks);
+        let policy = PolicyRegistry::paper_suite(&cfg.train.ranks, cfg.system.seed, spec.draws)
+            .get(&spec.policy)?;
+        let strategy = ReOptStrategy::parse(&spec.strategy)?;
+        let max_rounds = pop.template().dynamics.max_rounds;
+        let compute_jitter = pop.template().dynamics.compute_jitter;
+        let dense = pop.cohort() >= pop.size();
+        Ok((
+            SessionBase {
+                spec,
+                conv,
+                objective,
+                table,
+                strategy,
+                policy,
+                max_rounds,
+                compute_jitter,
+            },
+            pop,
+            dense,
+        ))
+    }
+
+    // --- the tick ------------------------------------------------------
+
+    /// One round: drift / select / re-opt / realize / stream — the
+    /// simulators' loop bodies, statement for statement (see
+    /// [`crate::sim::RoundSimulator::run`] and
+    /// [`crate::sim::PopulationSimulator::run`]). Ticking a finished
+    /// run is a no-op, so replaying an event file with trailing ticks
+    /// past convergence stays valid.
+    fn tick(&mut self) -> Result<()> {
+        let session = match self.session.as_mut() {
+            Some(s) => s,
+            None => bail!("round_tick before scenario_loaded"),
+        };
+        if session.finished {
+            return Ok(());
+        }
+        let ctx = StepCtx {
+            conv: &session.base.conv,
+            cache: &self.cache,
+            table: &session.base.table,
+            objective: &session.base.objective,
+            strategy: session.base.strategy,
+            label: "service",
+        };
+        session.core.check_cap(session.base.max_rounds, &ctx)?;
+        let mut resolved = session.core.round == 0;
+        let mut cost_round: Option<RoundCost> = None;
+        let mut dropped = 0usize;
+        let mut adoption = Adoption::Fresh; // round 0 adopts its own solve
+        let record;
+        match &mut session.engine {
+            Engine::Dynamic { env, k_n } => {
+                if session.core.round > 0 {
+                    if env.advance() {
+                        session.core.env_dirty = true;
+                    }
+                    let re = session.core.maybe_reopt(
+                        &ctx,
+                        session.base.policy.as_ref(),
+                        &env.scn,
+                        &env.active,
+                    )?;
+                    resolved = re.resolved;
+                    cost_round = re.cost;
+                    adoption = re.adopted;
+                }
+                record = session.core.realize(
+                    &ctx,
+                    &env.scn,
+                    &env.active,
+                    cost_round,
+                    resolved,
+                    *k_n,
+                    0,
+                );
+            }
+            Engine::Population {
+                pop,
+                state,
+                denv,
+                dense: _,
+                frozen_channel,
+                cur_cohort,
+                cur_view,
+                online,
+                cohort_override,
+            } => {
+                if session.core.round > 0 {
+                    // --- evolve the environment and lower the new cohort
+                    if let Some(env) = denv.as_mut() {
+                        if env.advance() {
+                            session.core.env_dirty = true;
+                        }
+                    }
+                    let round = session.core.round;
+                    let cohort = match cohort_override.take() {
+                        Some(ids) => {
+                            // the override performs select()'s
+                            // invitation bookkeeping; the round's
+                            // selection draw is counter-based and
+                            // simply left unconsumed
+                            pop.mark_invited(state, &ids, round);
+                            ids
+                        }
+                        None => pop.select(state, round),
+                    };
+                    let cohort_changed = cohort != *cur_cohort;
+                    let (view, on) = pop.round_view(state, denv, &cohort, round);
+                    *cur_view = view;
+                    *online = on;
+                    if denv.is_none() {
+                        // a sparse view is rebuilt from fresh
+                        // observations: it drifts whenever the
+                        // membership, the channel, or the compute can
+                        // have moved
+                        session.core.env_dirty |= cohort_changed
+                            || !*frozen_channel
+                            || session.base.compute_jitter > 0.0;
+                    }
+                    *cur_cohort = cohort;
+                    if cohort_changed {
+                        let rebased = comm_alloc(
+                            cur_view,
+                            session.core.alloc.l_c,
+                            session.core.alloc.rank,
+                        )?;
+                        session.core.rebase_incumbent(rebased);
+                    }
+                    let re = session.core.maybe_reopt(
+                        &ctx,
+                        session.base.policy.as_ref(),
+                        cur_view,
+                        online,
+                    )?;
+                    resolved = re.resolved;
+                    cost_round = re.cost;
+                    adoption = re.adopted;
+                }
+
+                // --- straggler deadline: cut the slowest ⌊x·online⌋
+                // cohort members by realized client-side phase delay
+                let cut = deadline_cut(pop.deadline_drop(), cur_view, &session.core.alloc, online);
+                if cut > 0 {
+                    dropped = cut;
+                    session.core.deadline_drops += cut;
+                    // any cost computed above used the pre-deadline mask
+                    cost_round = None;
+                }
+
+                record = session.core.realize(
+                    &ctx,
+                    cur_view,
+                    online,
+                    cost_round,
+                    resolved,
+                    cur_cohort.len(),
+                    dropped,
+                );
+            }
+        }
+        let summary = if session.core.done() {
+            session.finished = true;
+            session.summary_emitted = true;
+            Some(summary_of(session))
+        } else {
+            None
+        };
+        let metrics = RoundMetrics { record, adoption };
+        for sink in &mut self.sinks {
+            sink.on_round(&metrics)?;
+        }
+        if let Some(s) = summary {
+            for sink in &mut self.sinks {
+                sink.on_summary(&s)?;
+            }
+        }
+        Ok(())
+    }
+
+    // --- checkpoint / resume -------------------------------------------
+
+    /// Serialize the loaded run as a versioned `SFCK` checkpoint (see
+    /// [`crate::service::checkpoint`] for what is and is not inside).
+    pub fn checkpoint_bytes(&self) -> Result<Vec<u8>> {
+        let session = match &self.session {
+            Some(s) => s,
+            None => bail!("nothing to checkpoint: no run loaded"),
+        };
+        let mut w = BinWriter::with_header(checkpoint::MAGIC, checkpoint::VERSION);
+        checkpoint::write_header(
+            &mut w,
+            &Header {
+                fingerprint: session.base.spec.fingerprint(),
+                events_consumed: self.events_consumed,
+                finished: session.finished,
+                mode: session.base.spec.mode,
+            },
+        );
+        checkpoint::write_core(&mut w, &session.core);
+        match &session.engine {
+            Engine::Dynamic { env, .. } => checkpoint::write_env(&mut w, env),
+            Engine::Population {
+                state,
+                denv,
+                dense,
+                cur_cohort,
+                cur_view,
+                online,
+                cohort_override,
+                ..
+            } => {
+                w.bool(*dense);
+                if let Some(env) = denv {
+                    checkpoint::write_env(&mut w, env);
+                }
+                state.checkpoint_write(&mut w);
+                w.usize_slice(cur_cohort);
+                match cohort_override {
+                    Some(ids) => {
+                        w.bool(true);
+                        w.usize_slice(ids);
+                    }
+                    None => w.bool(false),
+                }
+                // the current view splice: the cohort's sites, compute,
+                // and gains (everything view_from changes on the
+                // template), plus the availability mask
+                let d_main: Vec<f64> = cur_view.topo.clients.iter().map(|c| c.d_main_m).collect();
+                let d_fed: Vec<f64> = cur_view.topo.clients.iter().map(|c| c.d_fed_m).collect();
+                let f: Vec<f64> = cur_view.topo.clients.iter().map(|c| c.f_cycles).collect();
+                w.f64_slice(&d_main);
+                w.f64_slice(&d_fed);
+                w.f64_slice(&f);
+                w.f64_slice(&cur_view.main_link.client_gain);
+                w.f64_slice(&cur_view.fed_link.client_gain);
+                w.bool_slice(online);
+            }
+        }
+        Ok(w.into_bytes())
+    }
+
+    /// Write [`Self::checkpoint_bytes`] to `path` (creating parents).
+    pub fn write_checkpoint<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let bytes = self.checkpoint_bytes()?;
+        crate::util::csv::ensure_parent_dir(&path)?;
+        std::fs::write(&path, bytes)
+            .with_context(|| format!("writing checkpoint {}", path.as_ref().display()))
+    }
+
+    /// Load a checkpoint into an idle service: rebuild the immutable
+    /// substrate from the fingerprint, apply the mutable trajectory,
+    /// position `events_consumed`. The caller resumes the event stream
+    /// from there (skipping the already-consumed prefix); the
+    /// continuation is bit-identical to the uninterrupted run.
+    pub fn restore(&mut self, bytes: &[u8]) -> Result<()> {
+        if self.session.is_some() {
+            bail!("restore into a service that already has a run loaded");
+        }
+        let mut r = BinReader::new(bytes);
+        let header = checkpoint::read_header(&mut r)?;
+        let spec_json =
+            Json::parse(&header.fingerprint).context("service checkpoint: run fingerprint")?;
+        let spec =
+            RunSpec::from_json(&spec_json).context("service checkpoint: run fingerprint")?;
+        if spec.mode != header.mode {
+            bail!("corrupt service checkpoint: mode tag disagrees with the run fingerprint");
+        }
+        let core = checkpoint::read_core(&mut r)?;
+        let session = match spec.mode {
+            RunMode::Dynamic => {
+                let (base, mut env, k_n) = self.dynamic_parts(spec)?;
+                checkpoint::apply_env(&mut r, &mut env)?;
+                Session {
+                    base,
+                    engine: Engine::Dynamic { env, k_n },
+                    core,
+                    finished: header.finished,
+                    summary_emitted: header.finished,
+                }
+            }
+            RunMode::Population => {
+                let (base, pop, dense) = self.population_parts(spec)?;
+                let frozen_channel = pop.channel_frozen();
+                let dense_flag = r.bool("dense mode flag")?;
+                if dense_flag != dense {
+                    bail!(
+                        "corrupt service checkpoint: dense flag {dense_flag} disagrees \
+                         with the rebuilt population (cohort {} of {})",
+                        pop.cohort(),
+                        pop.size()
+                    );
+                }
+                let denv = if dense {
+                    let mut env = DriftEnv::new(pop.scenario()?);
+                    checkpoint::apply_env(&mut r, &mut env)?;
+                    Some(env)
+                } else {
+                    None
+                };
+                let state = PopulationState::checkpoint_read(&mut r, pop.size())?;
+                let cur_cohort = r.usize_slice("current cohort")?;
+                for &i in &cur_cohort {
+                    if i >= pop.size() {
+                        bail!(
+                            "corrupt service checkpoint: cohort id {i} out of population \
+                             (size {})",
+                            pop.size()
+                        );
+                    }
+                }
+                let cohort_override = if r.bool("cohort override flag")? {
+                    Some(r.usize_slice("cohort override")?)
+                } else {
+                    None
+                };
+                let d_main = r.f64_slice("view d_main")?;
+                let d_fed = r.f64_slice("view d_fed")?;
+                let f_cycles = r.f64_slice("view f_cycles")?;
+                let gain_main = r.f64_slice("view main gains")?;
+                let gain_fed = r.f64_slice("view fed gains")?;
+                let online = r.bool_slice("view online mask")?;
+                let k = d_main.len();
+                for (what, len) in [
+                    ("d_fed", d_fed.len()),
+                    ("f_cycles", f_cycles.len()),
+                    ("main gains", gain_main.len()),
+                    ("fed gains", gain_fed.len()),
+                    ("online mask", online.len()),
+                ] {
+                    if len != k {
+                        bail!(
+                            "corrupt service checkpoint: view {what} holds {len} clients, \
+                             d_main holds {k}"
+                        );
+                    }
+                }
+                let mut cur_view = pop.template().clone();
+                cur_view.topo.clients = (0..k)
+                    .map(|i| ClientSite {
+                        d_main_m: d_main[i],
+                        d_fed_m: d_fed[i],
+                        f_cycles: f_cycles[i],
+                    })
+                    .collect();
+                cur_view.main_link.client_gain = gain_main;
+                cur_view.fed_link.client_gain = gain_fed;
+                Session {
+                    base,
+                    engine: Engine::Population {
+                        pop,
+                        state,
+                        denv,
+                        dense,
+                        frozen_channel,
+                        cur_cohort,
+                        cur_view,
+                        online,
+                        cohort_override,
+                    },
+                    core,
+                    finished: header.finished,
+                    summary_emitted: header.finished,
+                }
+            }
+        };
+        r.expect_end("service checkpoint")?;
+        self.session = Some(session);
+        self.events_consumed = header.events_consumed;
+        Ok(())
+    }
+}
+
+/// The running summary of a session (the end-of-run totals when the
+/// session has converged).
+fn summary_of(session: &Session) -> RunSummary {
+    let (realized_delay, realized_energy) = session.core.totals();
+    let unique_participants = match &session.engine {
+        Engine::Dynamic { k_n, .. } => *k_n,
+        Engine::Population { pop, state, dense, .. } => {
+            if *dense {
+                pop.size()
+            } else {
+                state.materialized()
+            }
+        }
+    };
+    RunSummary {
+        rounds: session.core.round,
+        realized_delay,
+        realized_energy,
+        static_prediction: session.core.static_prediction,
+        resolves: session.core.resolves,
+        fresh_solves: session.core.fresh_solves,
+        deadline_drops: session.core.deadline_drops,
+        unique_participants,
+        final_l_c: session.core.alloc.l_c,
+        final_rank: session.core.alloc.rank,
+        converged: session.core.done(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::metrics::MemorySink;
+
+    fn tiny_spec() -> RunSpec {
+        let mut spec = RunSpec::preset("mobile_edge");
+        spec.model = Some("tiny".to_string());
+        spec.clients = Some(3);
+        spec.seq = Some(64);
+        spec.ranks = Some(vec![1, 4]);
+        spec.conv = Some([4.0, 1.0, 0.85]);
+        spec
+    }
+
+    #[test]
+    fn events_out_of_order_fail_descriptively() {
+        let mut svc = AllocatorService::new();
+        let err = format!("{:#}", svc.process(&Event::RoundTick).unwrap_err());
+        assert!(err.contains("before scenario_loaded"), "{err}");
+        let err = format!("{:#}", svc.process(&Event::ReOptRequested).unwrap_err());
+        assert!(err.contains("before scenario_loaded"), "{err}");
+        let err = format!("{:#}", svc.checkpoint_bytes().unwrap_err());
+        assert!(err.contains("nothing to checkpoint"), "{err}");
+
+        svc.process(&Event::ScenarioLoaded(tiny_spec())).unwrap();
+        // dynamic mode rejects population-only events
+        let err = format!(
+            "{:#}",
+            svc.process(&Event::CohortSelected { ids: vec![0, 1] }).unwrap_err()
+        );
+        assert!(err.contains("population mode"), "{err}");
+        // a second load mid-run is refused
+        let err = format!(
+            "{:#}",
+            svc.process(&Event::ScenarioLoaded(tiny_spec())).unwrap_err()
+        );
+        assert!(err.contains("unfinished run"), "{err}");
+    }
+
+    #[test]
+    fn a_run_streams_rounds_then_exactly_one_summary() {
+        let mut svc = AllocatorService::new().with_sink(Box::new(MemorySink::new(1024)));
+        svc.process(&Event::ScenarioLoaded(tiny_spec())).unwrap();
+        for _ in 0..64 {
+            svc.process(&Event::RoundTick).unwrap();
+            if svc.is_finished() {
+                break;
+            }
+        }
+        assert!(svc.is_finished(), "tiny run must converge within 64 rounds");
+        let n = svc.rounds().len();
+        assert!(n > 0);
+        let s = svc.summary().unwrap();
+        assert!(s.converged);
+        assert_eq!(s.rounds, n);
+        // ticking past convergence is a no-op
+        svc.process(&Event::RoundTick).unwrap();
+        assert_eq!(svc.rounds().len(), n);
+        // shutdown does not re-emit the summary
+        svc.process(&Event::Shutdown).unwrap();
+        // the realized totals are the weighted per-round sums (the
+        // run-length compressed accumulator agrees with the naive sum
+        // to fp error)
+        let naive: f64 = svc.rounds().iter().map(|r| r.weight * r.delay).sum();
+        assert!(s.realized_delay > 0.0);
+        assert!((s.realized_delay - naive).abs() <= 1e-9 * naive.max(1.0), "{naive}");
+    }
+
+    #[test]
+    fn forced_reopt_marks_the_next_round_resolved() {
+        let mut svc = AllocatorService::new();
+        svc.process(&Event::ScenarioLoaded(tiny_spec())).unwrap();
+        svc.process(&Event::RoundTick).unwrap(); // round 0
+        svc.process(&Event::RoundTick).unwrap(); // one_shot: held
+        assert!(!svc.rounds()[1].resolved);
+        svc.process(&Event::ReOptRequested).unwrap();
+        svc.process(&Event::RoundTick).unwrap();
+        assert!(svc.rounds()[2].resolved, "forced re-opt must resolve");
+        svc.process(&Event::RoundTick).unwrap();
+        assert!(!svc.rounds()[3].resolved, "the force is one-shot");
+    }
+
+    #[test]
+    fn restore_refuses_bad_inputs() {
+        let mut svc = AllocatorService::new();
+        svc.process(&Event::ScenarioLoaded(tiny_spec())).unwrap();
+        svc.process(&Event::RoundTick).unwrap();
+        let bytes = svc.checkpoint_bytes().unwrap();
+
+        // restore over a loaded run
+        let err = format!("{:#}", svc.restore(&bytes).unwrap_err());
+        assert!(err.contains("already has a run loaded"), "{err}");
+
+        // truncated payload
+        let mut fresh = AllocatorService::new();
+        let err = format!(
+            "{:#}",
+            fresh.restore(&bytes[..bytes.len() - 3]).unwrap_err()
+        );
+        assert!(!err.is_empty());
+        assert!(fresh.session.is_none(), "a failed restore must not half-load");
+    }
+}

@@ -1,0 +1,435 @@
+//! The versioned allocator-service checkpoint (`SFCK`): everything
+//! mutable in a half-finished run, serialized bit-exactly so that
+//! *checkpoint at round j, resume, finish* produces byte-identical
+//! metric streams to the uninterrupted run (property-tested in
+//! `rust/tests/prop_service.rs` on every preset).
+//!
+//! The layout splits a run into the two halves the determinism
+//! contract suggests:
+//!
+//! * **Immutable substrate** — scenario, policy, strategy, convergence
+//!   model. Not serialized: the checkpoint stores the run's
+//!   [`RunSpec`] fingerprint and the substrate is rebuilt from the
+//!   spec, exactly as `scenario_loaded` built it. A resume against a
+//!   different spec is a different run and is refused by fingerprint
+//!   comparison.
+//! * **Mutable trajectory** — the [`RoundCore`] scalars and
+//!   allocations, the [`DriftEnv`] gains/compute/membership and its
+//!   three RNG stream positions, and (population mode) the lazily
+//!   materialized client slots, invitation history, current cohort and
+//!   view splice. Serialized bit for bit ([`crate::service::codec`]).
+//!
+//! Deliberately *not* serialized: [`crate::delay::WorkloadCache`] and
+//! [`crate::delay::ColumnCache`] (bit-transparent caches, rebuilt cold
+//! — resumed runs recompute what they would have had cached, with
+//! identical bits), and the per-round record vector (records already
+//! streamed live in the metric sinks, not the checkpoint).
+//!
+//! [`RunSpec`]: crate::service::event::RunSpec
+
+use anyhow::{bail, Result};
+
+use crate::delay::Allocation;
+use crate::service::codec::{BinReader, BinWriter};
+use crate::service::event::RunMode;
+use crate::sim::engine::{DriftEnv, RoundCore};
+
+pub(crate) const MAGIC: &[u8; 4] = b"SFCK";
+pub(crate) const VERSION: u32 = 1;
+/// Fingerprints are canonical [`RunSpec`] JSON — small; the limit only
+/// guards against reading a corrupt length as an allocation size.
+const MAX_FINGERPRINT: usize = 1 << 16;
+
+/// The checkpoint header: enough to rebuild the immutable substrate
+/// (via the fingerprint) and to position the event stream (via
+/// `events_consumed`) before the payload is applied.
+#[derive(Clone, Debug)]
+pub struct Header {
+    /// Canonical spec JSON ([`crate::service::event::RunSpec::fingerprint`]).
+    pub fingerprint: String,
+    /// Events processed when the checkpoint was written (including the
+    /// opening `scenario_loaded`); a resuming replay skips this many.
+    pub events_consumed: u64,
+    /// Whether the run had already converged and streamed its summary.
+    pub finished: bool,
+    pub mode: RunMode,
+}
+
+pub(crate) fn write_header(w: &mut BinWriter, h: &Header) {
+    w.str(&h.fingerprint);
+    w.u64(h.events_consumed);
+    w.bool(h.finished);
+    w.u8(match h.mode {
+        RunMode::Dynamic => 0,
+        RunMode::Population => 1,
+    });
+}
+
+pub(crate) fn read_header(r: &mut BinReader) -> Result<Header> {
+    r.expect_magic(MAGIC, "SfLLM service checkpoint")?;
+    let version = r.u32("service checkpoint version")?;
+    if version != VERSION {
+        bail!(
+            "unsupported service checkpoint version {version} \
+             (this build reads version {VERSION})"
+        );
+    }
+    let fingerprint = r.str(MAX_FINGERPRINT, "run fingerprint")?;
+    let events_consumed = r.u64("events consumed")?;
+    let finished = r.bool("finished flag")?;
+    let mode = match r.u8("run mode")? {
+        0 => RunMode::Dynamic,
+        1 => RunMode::Population,
+        m => bail!("corrupt service checkpoint: unknown run mode byte {m}"),
+    };
+    Ok(Header {
+        fingerprint,
+        events_consumed,
+        finished,
+        mode,
+    })
+}
+
+/// Peek a checkpoint's header without touching the payload (the CLI
+/// uses this to rebuild the substrate before applying the rest).
+pub fn peek_header(bytes: &[u8]) -> Result<Header> {
+    read_header(&mut BinReader::new(bytes))
+}
+
+pub(crate) fn write_alloc(w: &mut BinWriter, a: &Allocation) {
+    w.usize(a.l_c);
+    w.usize(a.rank);
+    w.usize(a.assign_main.len());
+    for row in &a.assign_main {
+        w.usize_slice(row);
+    }
+    w.usize(a.assign_fed.len());
+    for row in &a.assign_fed {
+        w.usize_slice(row);
+    }
+    w.f64_slice(&a.psd_main);
+    w.f64_slice(&a.psd_fed);
+}
+
+pub(crate) fn read_alloc(r: &mut BinReader) -> Result<Allocation> {
+    let l_c = r.usize("allocation l_c")?;
+    let rank = r.usize("allocation rank")?;
+    let read_rows = |r: &mut BinReader, what: &str| -> Result<Vec<Vec<usize>>> {
+        let n = r.usize(what)?;
+        // each row costs at least its 8-byte length prefix
+        if n.saturating_mul(8) > r.remaining() {
+            bail!(
+                "corrupt service checkpoint: {what} claims {n} rows, only {} bytes remain",
+                r.remaining()
+            );
+        }
+        (0..n).map(|_| r.usize_slice(what)).collect()
+    };
+    let assign_main = read_rows(r, "allocation assign_main")?;
+    let assign_fed = read_rows(r, "allocation assign_fed")?;
+    let psd_main = r.f64_slice("allocation psd_main")?;
+    let psd_fed = r.f64_slice("allocation psd_fed")?;
+    Ok(Allocation {
+        l_c,
+        rank,
+        assign_main,
+        assign_fed,
+        psd_main,
+        psd_fed,
+    })
+}
+
+pub(crate) fn write_core(w: &mut BinWriter, c: &RoundCore) {
+    write_alloc(w, &c.alloc0);
+    write_alloc(w, &c.alloc);
+    write_alloc(w, &c.memo_fresh_alloc);
+    w.bool(c.incumbent_is_initial);
+    w.bool(c.initial_retired);
+    w.bool(c.env_dirty);
+    w.bool(c.force_reopt);
+    w.usize(c.fresh_solves);
+    w.usize(c.resolves);
+    w.usize(c.deadline_drops);
+    w.usize(c.round);
+    w.f64(c.remaining);
+    w.f64(c.solved_delay);
+    w.f64(c.static_prediction);
+    w.f64(c.realized);
+    w.f64(c.seg_weight);
+    w.f64(c.seg_delay);
+    w.f64(c.realized_e);
+    w.f64(c.seg_weight_e);
+    w.f64(c.seg_energy);
+}
+
+/// Restore a [`RoundCore`]. The column cache restarts cold
+/// (bit-transparent) and the record vector restarts empty (records
+/// already streamed live in the sinks).
+pub(crate) fn read_core(r: &mut BinReader) -> Result<RoundCore> {
+    let alloc0 = read_alloc(r)?;
+    let alloc = read_alloc(r)?;
+    let memo_fresh_alloc = read_alloc(r)?;
+    Ok(RoundCore {
+        alloc0,
+        alloc,
+        memo_fresh_alloc,
+        incumbent_is_initial: r.bool("core incumbent_is_initial")?,
+        initial_retired: r.bool("core initial_retired")?,
+        env_dirty: r.bool("core env_dirty")?,
+        force_reopt: r.bool("core force_reopt")?,
+        fresh_solves: r.usize("core fresh_solves")?,
+        resolves: r.usize("core resolves")?,
+        deadline_drops: r.usize("core deadline_drops")?,
+        round: r.usize("core round")?,
+        remaining: r.f64("core remaining")?,
+        solved_delay: r.f64("core solved_delay")?,
+        static_prediction: r.f64("core static_prediction")?,
+        realized: r.f64("core realized")?,
+        seg_weight: r.f64("core seg_weight")?,
+        seg_delay: r.f64("core seg_delay")?,
+        realized_e: r.f64("core realized_e")?,
+        seg_weight_e: r.f64("core seg_weight_e")?,
+        seg_energy: r.f64("core seg_energy")?,
+        col_cache: crate::delay::ColumnCache::new(4),
+        rounds: Vec::new(),
+    })
+}
+
+pub(crate) fn write_env(w: &mut BinWriter, env: &DriftEnv) {
+    w.f64_slice(&env.scn.main_link.client_gain);
+    w.f64_slice(&env.scn.fed_link.client_gain);
+    let f: Vec<f64> = env.scn.topo.clients.iter().map(|c| c.f_cycles).collect();
+    w.f64_slice(&f);
+    w.bool_slice(&env.active);
+    w.rng_state(env.jitter_rng.state());
+    w.rng_state(env.drop_rng.state());
+    w.rng_state(env.process.rng_state());
+    w.f64_slice(&env.process.state().shadow_main_db);
+    w.f64_slice(&env.process.state().shadow_fed_db);
+}
+
+/// Overwrite a freshly built (pristine) [`DriftEnv`]'s mutable state
+/// with a snapshot: gains, compute, membership, the three stream
+/// positions, and the AR(1) shadow state. After this, stepping the env
+/// redraws the exact sequence the snapshotted env would have drawn.
+pub(crate) fn apply_env(r: &mut BinReader, env: &mut DriftEnv) -> Result<()> {
+    let k = env.scn.k();
+    let gain_main = r.f64_slice("env main gains")?;
+    let gain_fed = r.f64_slice("env fed gains")?;
+    let f_cycles = r.f64_slice("env compute capabilities")?;
+    let active = r.bool_slice("env membership")?;
+    for (what, len) in [
+        ("main gains", gain_main.len()),
+        ("fed gains", gain_fed.len()),
+        ("compute capabilities", f_cycles.len()),
+        ("membership", active.len()),
+    ] {
+        if len != k {
+            bail!(
+                "corrupt service checkpoint: env {what} holds {len} clients, \
+                 the rebuilt scenario has {k}"
+            );
+        }
+    }
+    let jitter_rng = r.rng_state("env jitter rng")?;
+    let drop_rng = r.rng_state("env dropout rng")?;
+    let process_rng = r.rng_state("env channel rng")?;
+    let shadow_main_db = r.f64_slice("env main shadows")?;
+    let shadow_fed_db = r.f64_slice("env fed shadows")?;
+    if shadow_main_db.len() != k || shadow_fed_db.len() != k {
+        bail!(
+            "corrupt service checkpoint: env shadows hold {}/{} clients, \
+             the rebuilt scenario has {k}",
+            shadow_main_db.len(),
+            shadow_fed_db.len()
+        );
+    }
+    env.scn.main_link.client_gain = gain_main;
+    env.scn.fed_link.client_gain = gain_fed;
+    for (c, f) in env.scn.topo.clients.iter_mut().zip(f_cycles) {
+        c.f_cycles = f;
+    }
+    env.active = active;
+    env.jitter_rng = crate::util::rng::Rng::from_state(jitter_rng);
+    env.drop_rng = crate::util::rng::Rng::from_state(drop_rng);
+    env.process.set_state(crate::net::ChannelState {
+        shadow_main_db,
+        shadow_fed_db,
+    });
+    env.process.set_rng_state(process_rng);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::delay::ConvergenceModel;
+    use crate::sim::ScenarioBuilder;
+
+    fn tiny_scenario() -> crate::delay::Scenario {
+        let mut cfg = Config::paper_defaults();
+        cfg.model = "tiny".to_string();
+        cfg.train.seq = 64;
+        cfg.train.ranks = vec![1, 4];
+        cfg.system.clients = 3;
+        cfg.dynamics.seed = 11;
+        cfg.dynamics.rho = 0.8;
+        cfg.dynamics.compute_jitter = 0.05;
+        cfg.dynamics.dropout = 0.1;
+        cfg.dynamics.rejoin = 0.4;
+        ScenarioBuilder::from_config(cfg).build().unwrap()
+    }
+
+    fn sample_alloc(k: usize) -> Allocation {
+        Allocation {
+            l_c: 3,
+            rank: 4,
+            assign_main: (0..k).map(|i| vec![i]).collect(),
+            assign_fed: vec![(0..k).collect(), Vec::new()],
+            psd_main: (0..k).map(|i| 0.25 + i as f64).collect(),
+            psd_fed: (0..k).map(|i| 1.5 * i as f64).collect(),
+        }
+    }
+
+    #[test]
+    fn header_and_alloc_round_trip() {
+        let h = Header {
+            fingerprint: "{\"preset\":\"paper\"}".to_string(),
+            events_consumed: 41,
+            finished: false,
+            mode: RunMode::Population,
+        };
+        let mut w = BinWriter::with_header(MAGIC, VERSION);
+        write_header(&mut w, &h);
+        write_alloc(&mut w, &sample_alloc(4));
+        let bytes = w.into_bytes();
+
+        let mut r = BinReader::new(&bytes);
+        let back = read_header(&mut r).unwrap();
+        assert_eq!(back.fingerprint, h.fingerprint);
+        assert_eq!(back.events_consumed, 41);
+        assert!(!back.finished);
+        assert_eq!(back.mode, RunMode::Population);
+        let a = read_alloc(&mut r).unwrap();
+        let want = sample_alloc(4);
+        assert_eq!((a.l_c, a.rank), (want.l_c, want.rank));
+        assert_eq!(a.assign_main, want.assign_main);
+        assert_eq!(a.assign_fed, want.assign_fed);
+        assert_eq!(a.psd_main, want.psd_main);
+        assert_eq!(a.psd_fed, want.psd_fed);
+        r.expect_end("test blob").unwrap();
+
+        // header corruption fails descriptively
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        let err = format!("{:#}", peek_header(&bad).unwrap_err());
+        assert!(err.contains("not a SfLLM service checkpoint"), "{err}");
+        let mut bad = bytes.clone();
+        bad[4..8].copy_from_slice(&9u32.to_le_bytes());
+        let err = format!("{:#}", peek_header(&bad).unwrap_err());
+        assert!(err.contains("version 9") && err.contains("reads version 1"), "{err}");
+    }
+
+    #[test]
+    fn core_round_trips_every_scalar_bit_exactly() {
+        let conv = ConvergenceModel::fitted(4.0, 1.0, 0.85);
+        let mut core = RoundCore::new(sample_alloc(3), 1.75, &conv);
+        core.incumbent_is_initial = false;
+        core.initial_retired = true;
+        core.env_dirty = true;
+        core.force_reopt = true;
+        core.fresh_solves = 2;
+        core.resolves = 5;
+        core.deadline_drops = 7;
+        core.round = 9;
+        core.remaining = 3.25;
+        core.solved_delay = 1.125;
+        core.realized = 10.5;
+        core.seg_weight = 0.75;
+        core.seg_delay = 1.2000000000000002;
+        core.realized_e = 2048.25;
+        core.seg_weight_e = 1.0;
+        core.seg_energy = -0.0;
+        let mut w = BinWriter::new();
+        write_core(&mut w, &core);
+        let bytes = w.into_bytes();
+        let mut r = BinReader::new(&bytes);
+        let back = read_core(&mut r).unwrap();
+        r.expect_end("core").unwrap();
+        assert_eq!(back.alloc.psd_main, core.alloc.psd_main);
+        assert_eq!(back.alloc0.assign_main, core.alloc0.assign_main);
+        assert!(!back.incumbent_is_initial);
+        assert!(back.initial_retired && back.env_dirty && back.force_reopt);
+        assert_eq!(
+            (back.fresh_solves, back.resolves, back.deadline_drops, back.round),
+            (2, 5, 7, 9)
+        );
+        assert_eq!(back.remaining.to_bits(), core.remaining.to_bits());
+        assert_eq!(back.solved_delay.to_bits(), core.solved_delay.to_bits());
+        assert_eq!(back.seg_delay.to_bits(), core.seg_delay.to_bits());
+        assert_eq!(back.seg_energy.to_bits(), (-0.0f64).to_bits());
+        assert!(back.rounds.is_empty(), "records live in the sinks, not the checkpoint");
+        // totals must flush identically
+        assert_eq!(back.totals().0.to_bits(), core.totals().0.to_bits());
+        assert_eq!(back.totals().1.to_bits(), core.totals().1.to_bits());
+    }
+
+    #[test]
+    fn env_snapshot_resumes_the_exact_drift_trajectory() {
+        let scn = tiny_scenario();
+        let mut env = DriftEnv::new(scn.clone());
+        for _ in 0..7 {
+            env.advance();
+        }
+        let mut w = BinWriter::new();
+        write_env(&mut w, &env);
+        let bytes = w.into_bytes();
+
+        let mut resumed = DriftEnv::new(scn);
+        let mut r = BinReader::new(&bytes);
+        apply_env(&mut r, &mut resumed).unwrap();
+        r.expect_end("env").unwrap();
+
+        // identical state now, and identical evolution afterwards
+        for step in 0..9 {
+            assert_eq!(resumed.active, env.active, "step {step}");
+            for (a, b) in resumed
+                .scn
+                .main_link
+                .client_gain
+                .iter()
+                .chain(&resumed.scn.fed_link.client_gain)
+                .zip(env.scn.main_link.client_gain.iter().chain(&env.scn.fed_link.client_gain))
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "step {step}");
+            }
+            for (a, b) in resumed.scn.topo.clients.iter().zip(&env.scn.topo.clients) {
+                assert_eq!(a.f_cycles.to_bits(), b.f_cycles.to_bits(), "step {step}");
+            }
+            env.advance();
+            resumed.advance();
+        }
+    }
+
+    #[test]
+    fn env_snapshot_refuses_a_different_scenario_size() {
+        let scn = tiny_scenario();
+        let env = DriftEnv::new(scn);
+        let mut w = BinWriter::new();
+        write_env(&mut w, &env);
+        let bytes = w.into_bytes();
+
+        let mut cfg = Config::paper_defaults();
+        cfg.model = "tiny".to_string();
+        cfg.train.seq = 64;
+        cfg.system.clients = 5;
+        let other = ScenarioBuilder::from_config(cfg).build().unwrap();
+        let mut resumed = DriftEnv::new(other);
+        let err = format!(
+            "{:#}",
+            apply_env(&mut BinReader::new(&bytes), &mut resumed).unwrap_err()
+        );
+        assert!(err.contains("clients"), "{err}");
+    }
+}

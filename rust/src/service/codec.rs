@@ -1,0 +1,375 @@
+//! Little-endian byte codec shared by every binary artifact the repo
+//! writes: the adapter checkpoint ([`crate::coordinator::checkpoint`])
+//! and the allocator-service checkpoint
+//! ([`crate::service::checkpoint`]).
+//!
+//! The offline crate set has no serde, so each format is a hand-rolled
+//! length-prefixed layout; before PR-8 each writer also hand-rolled its
+//! byte plumbing. This module centralizes that plumbing with two
+//! properties the formats rely on:
+//!
+//! * **Bit-exact floats.** `f64`/`f32` round-trip through
+//!   `to_bits`/`from_bits`, never through text — the service
+//!   checkpoint's resume-equals-uninterrupted contract is bitwise.
+//! * **Descriptive failure.** Every read is bounds-checked and fails
+//!   with the byte offset and what was being decoded, never a panic —
+//!   checkpoint files are external input.
+
+use anyhow::{bail, Result};
+
+/// Append-only little-endian writer over an owned buffer.
+#[derive(Default)]
+pub struct BinWriter {
+    buf: Vec<u8>,
+}
+
+impl BinWriter {
+    pub fn new() -> BinWriter {
+        BinWriter { buf: Vec::new() }
+    }
+
+    /// Start a buffer with a 4-byte magic and a u32 schema version —
+    /// the common header of every versioned artifact.
+    pub fn with_header(magic: &[u8; 4], version: u32) -> BinWriter {
+        let mut w = BinWriter::new();
+        w.raw(magic);
+        w.u32(version);
+        w
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(u8::from(v));
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    /// u32 byte length + UTF-8 bytes.
+    pub fn str(&mut self, s: &str) {
+        debug_assert!(s.len() <= u32::MAX as usize);
+        self.u32(s.len() as u32);
+        self.raw(s.as_bytes());
+    }
+
+    /// u64 element count + bit-exact elements.
+    pub fn f64_slice(&mut self, v: &[f64]) {
+        self.usize(v.len());
+        for &x in v {
+            self.f64(x);
+        }
+    }
+
+    pub fn f32_slice(&mut self, v: &[f32]) {
+        self.usize(v.len());
+        for &x in v {
+            self.f32(x);
+        }
+    }
+
+    pub fn bool_slice(&mut self, v: &[bool]) {
+        self.usize(v.len());
+        for &x in v {
+            self.bool(x);
+        }
+    }
+
+    pub fn usize_slice(&mut self, v: &[usize]) {
+        self.usize(v.len());
+        for &x in v {
+            self.usize(x);
+        }
+    }
+
+    /// An [`crate::util::rng::Rng`] state snapshot (4 raw words).
+    pub fn rng_state(&mut self, s: [u64; 4]) {
+        for w in s {
+            self.u64(w);
+        }
+    }
+}
+
+/// Bounds-checked little-endian reader over a borrowed buffer.
+pub struct BinReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BinReader<'a> {
+    pub fn new(buf: &'a [u8]) -> BinReader<'a> {
+        BinReader { buf, pos: 0 }
+    }
+
+    /// Current byte offset (for error messages by callers).
+    pub fn offset(&self) -> usize {
+        self.pos
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "truncated input: {what} needs {n} bytes at offset {}, \
+                 only {} left",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Consume and verify the 4-byte magic; `what` names the artifact
+    /// in the error (e.g. "SfLLM adapter checkpoint").
+    pub fn expect_magic(&mut self, magic: &[u8; 4], what: &str) -> Result<()> {
+        let got = self.take(4, "magic")?;
+        if got != magic {
+            bail!(
+                "not a {what}: bad magic {:?} (expected {:?})",
+                String::from_utf8_lossy(got),
+                String::from_utf8_lossy(magic)
+            );
+        }
+        Ok(())
+    }
+
+    pub fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn bool(&mut self, what: &str) -> Result<bool> {
+        match self.u8(what)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => bail!("corrupt {what}: bool byte {v} at offset {}", self.pos - 1),
+        }
+    }
+
+    pub fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    pub fn usize(&mut self, what: &str) -> Result<usize> {
+        let v = self.u64(what)?;
+        match usize::try_from(v) {
+            Ok(u) => Ok(u),
+            Err(_) => bail!("corrupt {what}: value {v} exceeds usize"),
+        }
+    }
+
+    pub fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    pub fn f32(&mut self, what: &str) -> Result<f32> {
+        Ok(f32::from_bits(self.u32(what)?))
+    }
+
+    /// u32 byte length + UTF-8 bytes; `max_len` guards against reading
+    /// a corrupt length as an allocation size.
+    pub fn str(&mut self, max_len: usize, what: &str) -> Result<String> {
+        let len = self.u32(what)? as usize;
+        if len > max_len {
+            bail!("corrupt {what}: string length {len} exceeds limit {max_len}");
+        }
+        let bytes = self.take(len, what)?;
+        match std::str::from_utf8(bytes) {
+            Ok(s) => Ok(s.to_string()),
+            Err(e) => bail!("corrupt {what}: invalid UTF-8 ({e})"),
+        }
+    }
+
+    /// u64 element count + elements; the count is validated against the
+    /// bytes actually remaining before any allocation.
+    fn seq_len(&mut self, elem_bytes: usize, what: &str) -> Result<usize> {
+        let len = self.usize(what)?;
+        let need = len.saturating_mul(elem_bytes);
+        if need > self.remaining() {
+            bail!(
+                "corrupt {what}: {len} elements need {need} bytes at offset {}, \
+                 only {} left",
+                self.pos,
+                self.remaining()
+            );
+        }
+        Ok(len)
+    }
+
+    pub fn f64_slice(&mut self, what: &str) -> Result<Vec<f64>> {
+        let len = self.seq_len(8, what)?;
+        (0..len).map(|_| self.f64(what)).collect()
+    }
+
+    pub fn f32_slice(&mut self, what: &str) -> Result<Vec<f32>> {
+        let len = self.seq_len(4, what)?;
+        (0..len).map(|_| self.f32(what)).collect()
+    }
+
+    pub fn bool_slice(&mut self, what: &str) -> Result<Vec<bool>> {
+        let len = self.seq_len(1, what)?;
+        (0..len).map(|_| self.bool(what)).collect()
+    }
+
+    pub fn usize_slice(&mut self, what: &str) -> Result<Vec<usize>> {
+        let len = self.seq_len(8, what)?;
+        (0..len).map(|_| self.usize(what)).collect()
+    }
+
+    pub fn rng_state(&mut self, what: &str) -> Result<[u64; 4]> {
+        Ok([
+            self.u64(what)?,
+            self.u64(what)?,
+            self.u64(what)?,
+            self.u64(what)?,
+        ])
+    }
+
+    /// Fail if any bytes remain — trailing garbage means the file is
+    /// not what the schema version claims.
+    pub fn expect_end(&self, what: &str) -> Result<()> {
+        if self.remaining() > 0 {
+            bail!(
+                "corrupt {what}: {} trailing bytes after offset {}",
+                self.remaining(),
+                self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_every_primitive_bit_exactly() {
+        let mut w = BinWriter::with_header(b"TEST", 3);
+        w.u8(200);
+        w.bool(true);
+        w.bool(false);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 1);
+        w.usize(77);
+        w.f64(-0.0);
+        w.f64(f64::NAN);
+        w.f32(1.5e-38);
+        w.str("héllo");
+        w.f64_slice(&[1.0, f64::INFINITY, -3.25]);
+        w.bool_slice(&[true, false, true]);
+        w.usize_slice(&[0, 9, 18]);
+        w.rng_state([1, 2, 3, 4]);
+        let bytes = w.into_bytes();
+
+        let mut r = BinReader::new(&bytes);
+        r.expect_magic(b"TEST", "test blob").unwrap();
+        assert_eq!(r.u32("version").unwrap(), 3);
+        assert_eq!(r.u8("a").unwrap(), 200);
+        assert!(r.bool("b").unwrap());
+        assert!(!r.bool("c").unwrap());
+        assert_eq!(r.u32("d").unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64("e").unwrap(), u64::MAX - 1);
+        assert_eq!(r.usize("f").unwrap(), 77);
+        assert_eq!(r.f64("g").unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.f64("h").unwrap().to_bits(), f64::NAN.to_bits());
+        assert_eq!(r.f32("i").unwrap().to_bits(), 1.5e-38f32.to_bits());
+        assert_eq!(r.str(64, "j").unwrap(), "héllo");
+        let v = r.f64_slice("k").unwrap();
+        assert_eq!(v.len(), 3);
+        assert_eq!(v[1], f64::INFINITY);
+        assert_eq!(r.bool_slice("l").unwrap(), vec![true, false, true]);
+        assert_eq!(r.usize_slice("m").unwrap(), vec![0, 9, 18]);
+        assert_eq!(r.rng_state("n").unwrap(), [1, 2, 3, 4]);
+        r.expect_end("test blob").unwrap();
+    }
+
+    #[test]
+    fn bad_magic_and_truncation_fail_descriptively() {
+        let mut w = BinWriter::with_header(b"GOOD", 1);
+        w.u64(42);
+        let bytes = w.into_bytes();
+
+        let mut r = BinReader::new(&bytes);
+        let err = r.expect_magic(b"WANT", "thing").unwrap_err();
+        assert!(format!("{err:#}").contains("not a thing"), "{err:#}");
+
+        let mut r = BinReader::new(&bytes[..6]);
+        r.expect_magic(b"GOOD", "thing").unwrap();
+        let err = r.u32("version").unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+    }
+
+    #[test]
+    fn corrupt_lengths_are_rejected_before_allocation() {
+        let mut w = BinWriter::new();
+        w.usize(usize::MAX / 2);
+        let bytes = w.into_bytes();
+        let mut r = BinReader::new(&bytes);
+        let err = r.f64_slice("huge").unwrap_err();
+        assert!(format!("{err:#}").contains("corrupt huge"), "{err:#}");
+
+        let mut w = BinWriter::new();
+        w.u32(1_000_000);
+        w.raw(b"abc");
+        let bytes = w.into_bytes();
+        let mut r = BinReader::new(&bytes);
+        assert!(r.str(64, "name").is_err());
+
+        let mut w = BinWriter::new();
+        w.u8(7);
+        let bytes = w.into_bytes();
+        let mut r = BinReader::new(&bytes);
+        assert!(r.bool("flag").is_err());
+    }
+
+    #[test]
+    fn expect_end_catches_trailing_garbage() {
+        let mut w = BinWriter::new();
+        w.u32(5);
+        w.raw(b"xx");
+        let bytes = w.into_bytes();
+        let mut r = BinReader::new(&bytes);
+        r.u32("v").unwrap();
+        assert!(r.expect_end("blob").is_err());
+    }
+}

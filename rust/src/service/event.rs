@@ -1,0 +1,668 @@
+//! Typed deterministic events driving the allocator service.
+//!
+//! An event stream is the service's *only* input: a run is one
+//! [`Event::ScenarioLoaded`] (carrying a [`RunSpec`]) followed by
+//! [`Event::RoundTick`]s, optionally interleaved with membership /
+//! drift / re-optimization / checkpoint control events, and closed by
+//! [`Event::Shutdown`]. Events carry **no random payload** — every
+//! random quantity in a run comes from the seeded streams the spec
+//! pins down — so replaying a JSONL event file reproduces a run bit
+//! for bit, and an event file plus a [`ServiceCheckpoint`] is a
+//! complete, portable description of a half-finished run.
+//!
+//! The wire form is one JSON object per line, discriminated by its
+//! `"event"` key (see [`Event::from_json_line`]). Parsing is strict:
+//! unknown event names and unknown keys are errors, because an event
+//! file is external input and a silently ignored typo (`"cliend_id"`)
+//! would change what the run simulates.
+//!
+//! [`ServiceCheckpoint`]: crate::service::checkpoint
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Config;
+use crate::delay::ConvergenceModel;
+use crate::sim::ScenarioBuilder;
+use crate::util::json::Json;
+
+/// Which engine a run drives: the K-client round simulator loop or the
+/// population engine (cohort selection, deadlines, rebasing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunMode {
+    Dynamic,
+    Population,
+}
+
+impl RunMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RunMode::Dynamic => "dynamic",
+            RunMode::Population => "population",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<RunMode> {
+        match s {
+            "dynamic" => Ok(RunMode::Dynamic),
+            "population" => Ok(RunMode::Population),
+            other => bail!("unknown run mode '{other}' (expected dynamic | population)"),
+        }
+    }
+}
+
+/// Everything a `scenario_loaded` event pins down: the preset the
+/// immutable substrate comes from, a small set of overrides, and the
+/// policy / strategy / convergence model of the run. The spec's
+/// canonical JSON form ([`RunSpec::to_json`]) doubles as the
+/// checkpoint fingerprint: a resume against a different spec is a
+/// different run and is refused.
+///
+/// Deeper knobs (bandwidths, power budgets, dynamics rates, ...) come
+/// from the preset; the overrides here are the ones run harnesses
+/// actually vary per run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunSpec {
+    /// Scenario preset name (see [`ScenarioBuilder::preset`]).
+    pub preset: String,
+    pub mode: RunMode,
+    /// Model size key (`tiny` | `small` | ... ) overriding the preset's.
+    pub model: Option<String>,
+    pub clients: Option<usize>,
+    pub seq: Option<usize>,
+    pub ranks: Option<Vec<usize>>,
+    pub subch_main: Option<usize>,
+    pub subch_fed: Option<usize>,
+    /// `system.seed` (geometry + static channel draw).
+    pub seed: Option<u64>,
+    /// `dynamics.seed` (per-round drift streams).
+    pub dynamics_seed: Option<u64>,
+    pub max_rounds: Option<usize>,
+    /// Policy name in [`crate::opt::policy::PolicyRegistry::paper_suite`].
+    pub policy: String,
+    /// Re-optimization strategy spec (see
+    /// [`crate::sim::ReOptStrategy::parse`]).
+    pub strategy: String,
+    /// Seeded draws for the randomized baselines in the registry.
+    pub draws: usize,
+    /// Convergence fit `[e_inf, c, alpha]`; absent = the paper fit.
+    pub conv: Option<[f64; 3]>,
+    /// `population.size` (population mode).
+    pub population: Option<usize>,
+    pub cohort: Option<usize>,
+    pub selector: Option<String>,
+    pub deadline_drop: Option<f64>,
+    /// `population.seed` (geometry + selection lifecycle).
+    pub population_seed: Option<u64>,
+}
+
+/// Key order of the canonical spec serialization (also the exhaustive
+/// set of keys `scenario_loaded` accepts, minus the `event` tag).
+const SPEC_KEYS: &[&str] = &[
+    "preset",
+    "mode",
+    "model",
+    "clients",
+    "seq",
+    "ranks",
+    "subch_main",
+    "subch_fed",
+    "seed",
+    "dynamics_seed",
+    "max_rounds",
+    "policy",
+    "strategy",
+    "draws",
+    "conv",
+    "population",
+    "cohort",
+    "selector",
+    "deadline_drop",
+    "population_seed",
+];
+
+impl RunSpec {
+    /// A spec with every override absent: `preset` under the default
+    /// policy/strategy, dynamic mode.
+    pub fn preset(preset: &str) -> RunSpec {
+        RunSpec {
+            preset: preset.to_string(),
+            mode: RunMode::Dynamic,
+            model: None,
+            clients: None,
+            seq: None,
+            ranks: None,
+            subch_main: None,
+            subch_fed: None,
+            seed: None,
+            dynamics_seed: None,
+            max_rounds: None,
+            policy: "proposed".to_string(),
+            strategy: "one_shot".to_string(),
+            draws: 5,
+            conv: None,
+            population: None,
+            cohort: None,
+            selector: None,
+            deadline_drop: None,
+            population_seed: None,
+        }
+    }
+
+    /// Parse a spec from a parsed JSON object (the `scenario_loaded`
+    /// payload, or a checkpoint fingerprint being re-parsed on resume —
+    /// the `event` tag is tolerated and ignored).
+    pub(crate) fn from_json(v: &Json) -> Result<RunSpec> {
+        let obj = v.as_obj()?;
+        for key in obj.keys() {
+            if key != "event" && !SPEC_KEYS.contains(&key.as_str()) {
+                bail!("scenario_loaded: unknown key '{key}'");
+            }
+        }
+        let opt_str = |key: &str| -> Result<Option<String>> {
+            match obj.get(key) {
+                Some(v) => Ok(Some(
+                    v.as_str().with_context(|| format!("key '{key}'"))?.to_string(),
+                )),
+                None => Ok(None),
+            }
+        };
+        let opt_usize = |key: &str| -> Result<Option<usize>> {
+            match obj.get(key) {
+                Some(v) => Ok(Some(v.as_usize().with_context(|| format!("key '{key}'"))?)),
+                None => Ok(None),
+            }
+        };
+        let opt_f64 = |key: &str| -> Result<Option<f64>> {
+            match obj.get(key) {
+                Some(v) => Ok(Some(v.as_f64().with_context(|| format!("key '{key}'"))?)),
+                None => Ok(None),
+            }
+        };
+        let mut spec = RunSpec::preset(
+            opt_str("preset")?
+                .as_deref()
+                .context("scenario_loaded: missing key 'preset'")?,
+        );
+        if let Some(m) = opt_str("mode")? {
+            spec.mode = RunMode::parse(&m)?;
+        }
+        spec.model = opt_str("model")?;
+        spec.clients = opt_usize("clients")?;
+        spec.seq = opt_usize("seq")?;
+        if let Some(v) = obj.get("ranks") {
+            let arr = v.as_arr().context("key 'ranks'")?;
+            let mut ranks = Vec::with_capacity(arr.len());
+            for x in arr {
+                ranks.push(x.as_usize().context("key 'ranks'")?);
+            }
+            if ranks.is_empty() {
+                bail!("scenario_loaded: 'ranks' must not be empty");
+            }
+            spec.ranks = Some(ranks);
+        }
+        spec.subch_main = opt_usize("subch_main")?;
+        spec.subch_fed = opt_usize("subch_fed")?;
+        spec.seed = opt_usize("seed")?.map(|s| s as u64);
+        spec.dynamics_seed = opt_usize("dynamics_seed")?.map(|s| s as u64);
+        spec.max_rounds = opt_usize("max_rounds")?;
+        if let Some(p) = opt_str("policy")? {
+            spec.policy = p;
+        }
+        if let Some(s) = opt_str("strategy")? {
+            spec.strategy = s;
+        }
+        if let Some(d) = opt_usize("draws")? {
+            spec.draws = d;
+        }
+        if let Some(v) = obj.get("conv") {
+            let arr = v.as_arr().context("key 'conv'")?;
+            if arr.len() != 3 {
+                bail!(
+                    "scenario_loaded: 'conv' must be [e_inf, c, alpha] (got {} values)",
+                    arr.len()
+                );
+            }
+            let mut fit = [0.0f64; 3];
+            for (slot, x) in fit.iter_mut().zip(arr) {
+                *slot = x.as_f64().context("key 'conv'")?;
+            }
+            spec.conv = Some(fit);
+        }
+        spec.population = opt_usize("population")?;
+        spec.cohort = opt_usize("cohort")?;
+        spec.selector = opt_str("selector")?;
+        spec.deadline_drop = opt_f64("deadline_drop")?;
+        spec.population_seed = opt_usize("population_seed")?.map(|s| s as u64);
+        Ok(spec)
+    }
+
+    /// Canonical JSON form: fixed key order, overrides only when set.
+    /// Equal specs serialize to equal strings, which is what lets this
+    /// double as the checkpoint fingerprint.
+    pub fn to_json(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        parts.push(format!("\"preset\":{}", jstr(&self.preset)));
+        parts.push(format!("\"mode\":{}", jstr(self.mode.label())));
+        if let Some(m) = &self.model {
+            parts.push(format!("\"model\":{}", jstr(m)));
+        }
+        if let Some(n) = self.clients {
+            parts.push(format!("\"clients\":{n}"));
+        }
+        if let Some(n) = self.seq {
+            parts.push(format!("\"seq\":{n}"));
+        }
+        if let Some(r) = &self.ranks {
+            let xs: Vec<String> = r.iter().map(|x| format!("{x}")).collect();
+            parts.push(format!("\"ranks\":[{}]", xs.join(",")));
+        }
+        if let Some(n) = self.subch_main {
+            parts.push(format!("\"subch_main\":{n}"));
+        }
+        if let Some(n) = self.subch_fed {
+            parts.push(format!("\"subch_fed\":{n}"));
+        }
+        if let Some(s) = self.seed {
+            parts.push(format!("\"seed\":{s}"));
+        }
+        if let Some(s) = self.dynamics_seed {
+            parts.push(format!("\"dynamics_seed\":{s}"));
+        }
+        if let Some(n) = self.max_rounds {
+            parts.push(format!("\"max_rounds\":{n}"));
+        }
+        parts.push(format!("\"policy\":{}", jstr(&self.policy)));
+        parts.push(format!("\"strategy\":{}", jstr(&self.strategy)));
+        parts.push(format!("\"draws\":{}", self.draws));
+        if let Some(c) = &self.conv {
+            let xs: Vec<String> = c.iter().map(|x| jnum(*x)).collect();
+            parts.push(format!("\"conv\":[{}]", xs.join(",")));
+        }
+        if let Some(n) = self.population {
+            parts.push(format!("\"population\":{n}"));
+        }
+        if let Some(n) = self.cohort {
+            parts.push(format!("\"cohort\":{n}"));
+        }
+        if let Some(s) = &self.selector {
+            parts.push(format!("\"selector\":{}", jstr(s)));
+        }
+        if let Some(x) = self.deadline_drop {
+            parts.push(format!("\"deadline_drop\":{}", jnum(x)));
+        }
+        if let Some(s) = self.population_seed {
+            parts.push(format!("\"population_seed\":{s}"));
+        }
+        format!("{{{}}}", parts.join(","))
+    }
+
+    /// The resume identity of a run: equal fingerprints ⇔ equal specs.
+    pub fn fingerprint(&self) -> String {
+        self.to_json()
+    }
+
+    /// Lower the spec onto its preset's config.
+    pub fn build_config(&self) -> Result<Config> {
+        let mut cfg = ScenarioBuilder::preset(&self.preset)
+            .with_context(|| format!("run spec preset '{}'", self.preset))?
+            .into_config();
+        if let Some(m) = &self.model {
+            cfg.model = m.clone();
+        }
+        if let Some(n) = self.clients {
+            cfg.system.clients = n;
+        }
+        if let Some(s) = self.seq {
+            cfg.train.seq = s;
+        }
+        if let Some(r) = &self.ranks {
+            cfg.train.ranks = r.clone();
+        }
+        if let Some(n) = self.subch_main {
+            cfg.system.subch_main = n;
+        }
+        if let Some(n) = self.subch_fed {
+            cfg.system.subch_fed = n;
+        }
+        if let Some(s) = self.seed {
+            cfg.system.seed = s;
+        }
+        if let Some(s) = self.dynamics_seed {
+            cfg.dynamics.seed = s;
+        }
+        if let Some(n) = self.max_rounds {
+            cfg.dynamics.max_rounds = n;
+        }
+        if let Some(n) = self.population {
+            cfg.population.size = n;
+        }
+        if let Some(n) = self.cohort {
+            cfg.population.cohort = n;
+        }
+        if let Some(s) = &self.selector {
+            cfg.population.selector = s.clone();
+        }
+        if let Some(x) = self.deadline_drop {
+            cfg.population.deadline_drop = x;
+        }
+        if let Some(s) = self.population_seed {
+            cfg.population.seed = s;
+        }
+        Ok(cfg)
+    }
+
+    /// The run's convergence model (the paper fit unless overridden).
+    pub fn conv_model(&self) -> ConvergenceModel {
+        match self.conv {
+            Some([e_inf, c, alpha]) => ConvergenceModel::fitted(e_inf, c, alpha),
+            None => ConvergenceModel::paper_default(),
+        }
+    }
+}
+
+/// One typed input to the allocator service. See the module docs for
+/// the stream grammar; per-event semantics live on
+/// [`crate::service::AllocatorService::process`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// Open a run: build the scenario, solve round 0.
+    ScenarioLoaded(RunSpec),
+    /// Advance one round (drift, select, re-opt, realize, stream).
+    RoundTick,
+    /// Inject one extra channel-drift step before the next tick.
+    ChannelDrift,
+    /// Override the next tick's cohort (population mode; sorted
+    /// distinct client ids).
+    CohortSelected { ids: Vec<usize> },
+    /// Force a client offline (dynamic / dense-population membership).
+    ClientDropped { id: usize },
+    /// Force a client back online.
+    ClientRejoined { id: usize },
+    /// Make the next tick re-optimize regardless of strategy.
+    ReOptRequested,
+    /// Write a service checkpoint now (to `path`, or the configured
+    /// default when absent).
+    CheckpointRequested { path: Option<String> },
+    /// Flush sinks and close the stream.
+    Shutdown,
+}
+
+impl Event {
+    /// The wire discriminator (`"event"` key).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::ScenarioLoaded(_) => "scenario_loaded",
+            Event::RoundTick => "round_tick",
+            Event::ChannelDrift => "channel_drift",
+            Event::CohortSelected { .. } => "cohort_selected",
+            Event::ClientDropped { .. } => "client_dropped",
+            Event::ClientRejoined { .. } => "client_rejoined",
+            Event::ReOptRequested => "reopt_requested",
+            Event::CheckpointRequested { .. } => "checkpoint_requested",
+            Event::Shutdown => "shutdown",
+        }
+    }
+
+    /// Parse one JSONL line (strict: unknown events and keys fail).
+    pub fn from_json_line(line: &str) -> Result<Event> {
+        let v = Json::parse(line)?;
+        let obj = v.as_obj().context("an event is a JSON object")?;
+        let kind = v.get("event").context("missing 'event' key")?.as_str()?.to_string();
+        let only_keys = |allowed: &[&str]| -> Result<()> {
+            for key in obj.keys() {
+                if key != "event" && !allowed.contains(&key.as_str()) {
+                    bail!("{kind}: unknown key '{key}'");
+                }
+            }
+            Ok(())
+        };
+        match kind.as_str() {
+            "scenario_loaded" => Ok(Event::ScenarioLoaded(RunSpec::from_json(&v)?)),
+            "round_tick" => {
+                only_keys(&[])?;
+                Ok(Event::RoundTick)
+            }
+            "channel_drift" => {
+                only_keys(&[])?;
+                Ok(Event::ChannelDrift)
+            }
+            "cohort_selected" => {
+                only_keys(&["ids"])?;
+                let arr = v.get("ids")?.as_arr().context("cohort_selected: 'ids'")?;
+                let mut ids = Vec::with_capacity(arr.len());
+                for x in arr {
+                    ids.push(x.as_usize().context("cohort_selected: 'ids'")?);
+                }
+                if ids.is_empty() {
+                    bail!("cohort_selected: 'ids' must not be empty");
+                }
+                if !ids.windows(2).all(|w| w[0] < w[1]) {
+                    bail!("cohort_selected: 'ids' must be sorted and distinct (got {ids:?})");
+                }
+                Ok(Event::CohortSelected { ids })
+            }
+            "client_dropped" => {
+                only_keys(&["id"])?;
+                Ok(Event::ClientDropped { id: v.get("id")?.as_usize()? })
+            }
+            "client_rejoined" => {
+                only_keys(&["id"])?;
+                Ok(Event::ClientRejoined { id: v.get("id")?.as_usize()? })
+            }
+            "reopt_requested" => {
+                only_keys(&[])?;
+                Ok(Event::ReOptRequested)
+            }
+            "checkpoint_requested" => {
+                only_keys(&["path"])?;
+                let path = match obj.get("path") {
+                    Some(p) => Some(p.as_str().context("checkpoint_requested: 'path'")?.to_string()),
+                    None => None,
+                };
+                Ok(Event::CheckpointRequested { path })
+            }
+            "shutdown" => {
+                only_keys(&[])?;
+                Ok(Event::Shutdown)
+            }
+            other => bail!(
+                "unknown event '{other}' (expected scenario_loaded | round_tick | \
+                 channel_drift | cohort_selected | client_dropped | client_rejoined | \
+                 reopt_requested | checkpoint_requested | shutdown)"
+            ),
+        }
+    }
+
+    /// Serialize back to one JSONL line (round-trips through
+    /// [`Event::from_json_line`]; used to author fixtures).
+    pub fn to_json_line(&self) -> String {
+        match self {
+            Event::ScenarioLoaded(spec) => {
+                let body = spec.to_json();
+                // splice the discriminator in front of the spec fields
+                format!("{{\"event\":\"scenario_loaded\",{}", &body[1..])
+            }
+            Event::CohortSelected { ids } => {
+                let xs: Vec<String> = ids.iter().map(|x| format!("{x}")).collect();
+                format!("{{\"event\":\"cohort_selected\",\"ids\":[{}]}}", xs.join(","))
+            }
+            Event::ClientDropped { id } => {
+                format!("{{\"event\":\"client_dropped\",\"id\":{id}}}")
+            }
+            Event::ClientRejoined { id } => {
+                format!("{{\"event\":\"client_rejoined\",\"id\":{id}}}")
+            }
+            Event::CheckpointRequested { path } => match path {
+                Some(p) => format!("{{\"event\":\"checkpoint_requested\",\"path\":{}}}", jstr(p)),
+                None => "{\"event\":\"checkpoint_requested\"}".to_string(),
+            },
+            other => format!("{{\"event\":\"{}\"}}", other.kind()),
+        }
+    }
+}
+
+/// Parse a whole JSONL event file; blank lines and `#` comment lines
+/// are skipped, errors carry 1-based line numbers.
+pub fn parse_events(text: &str) -> Result<Vec<Event>> {
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        events
+            .push(Event::from_json_line(line).with_context(|| format!("events line {}", i + 1))?);
+    }
+    Ok(events)
+}
+
+/// JSON string literal (escapes quotes, backslashes, control chars).
+fn jstr(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Shortest round-trip float literal (the repo-wide text-float
+/// convention; event floats are always finite).
+fn jnum(v: f64) -> String {
+    format!("{v}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full_spec() -> RunSpec {
+        let mut spec = RunSpec::preset("mobile_edge");
+        spec.mode = RunMode::Population;
+        spec.model = Some("tiny".to_string());
+        spec.clients = Some(4);
+        spec.seq = Some(64);
+        spec.ranks = Some(vec![1, 4]);
+        spec.subch_main = Some(16);
+        spec.subch_fed = Some(16);
+        spec.seed = Some(7);
+        spec.dynamics_seed = Some(11);
+        spec.max_rounds = Some(400);
+        spec.policy = "proposed".to_string();
+        spec.strategy = "periodic:5".to_string();
+        spec.conv = Some([4.0, 1.0, 0.85]);
+        spec.population = Some(40);
+        spec.cohort = Some(8);
+        spec.selector = Some("staleness:2".to_string());
+        spec.deadline_drop = Some(0.25);
+        spec.population_seed = Some(5);
+        spec
+    }
+
+    #[test]
+    fn every_event_round_trips_through_jsonl() {
+        let events = vec![
+            Event::ScenarioLoaded(full_spec()),
+            Event::ScenarioLoaded(RunSpec::preset("paper")),
+            Event::RoundTick,
+            Event::ChannelDrift,
+            Event::CohortSelected { ids: vec![0, 3, 17] },
+            Event::ClientDropped { id: 2 },
+            Event::ClientRejoined { id: 2 },
+            Event::ReOptRequested,
+            Event::CheckpointRequested { path: None },
+            Event::CheckpointRequested { path: Some("out/ck.bin".to_string()) },
+            Event::Shutdown,
+        ];
+        for e in &events {
+            let line = e.to_json_line();
+            let back = Event::from_json_line(&line).unwrap_or_else(|err| {
+                panic!("{line}: {err:#}");
+            });
+            assert_eq!(&back, e, "{line}");
+        }
+        // a whole file, with comments and blanks
+        let mut text = String::from("# fixture\n\n");
+        for e in &events {
+            text.push_str(&e.to_json_line());
+            text.push('\n');
+        }
+        assert_eq!(parse_events(&text).unwrap(), events);
+    }
+
+    #[test]
+    fn spec_defaults_and_fingerprint_are_stable() {
+        let spec = RunSpec::preset("paper");
+        assert_eq!(spec.policy, "proposed");
+        assert_eq!(spec.strategy, "one_shot");
+        assert_eq!(spec.mode, RunMode::Dynamic);
+        assert_eq!(spec.draws, 5);
+        // minimal wire form parses to the same spec
+        let parsed = match Event::from_json_line(
+            "{\"event\":\"scenario_loaded\",\"preset\":\"paper\"}",
+        )
+        .unwrap()
+        {
+            Event::ScenarioLoaded(s) => s,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(parsed, spec);
+        assert_eq!(parsed.fingerprint(), spec.fingerprint());
+        assert_ne!(spec.fingerprint(), full_spec().fingerprint());
+    }
+
+    #[test]
+    fn spec_lowers_onto_its_presets_config() {
+        let cfg = full_spec().build_config().unwrap();
+        assert_eq!(cfg.model, "tiny");
+        assert_eq!(cfg.system.clients, 4);
+        assert_eq!(cfg.train.seq, 64);
+        assert_eq!(cfg.train.ranks, vec![1, 4]);
+        assert_eq!(cfg.system.subch_main, 16);
+        assert_eq!(cfg.dynamics.seed, 11);
+        assert_eq!(cfg.dynamics.max_rounds, 400);
+        assert_eq!(cfg.population.size, 40);
+        assert_eq!(cfg.population.cohort, 8);
+        assert_eq!(cfg.population.selector, "staleness:2");
+        assert_eq!(cfg.population.seed, 5);
+        // conv override vs default
+        let conv = full_spec().conv_model();
+        assert_eq!(conv.rounds(4), 4.0 * (1.0 + 1.0 / 4f64.powf(0.85)));
+        assert!(RunSpec::preset("paper").build_config().is_ok());
+        assert!(RunSpec::preset("no_such_preset").build_config().is_err());
+    }
+
+    #[test]
+    fn strict_parsing_rejects_typos_descriptively() {
+        let err = |line: &str| format!("{:#}", Event::from_json_line(line).unwrap_err());
+        assert!(err("{\"event\":\"round_tik\"}").contains("unknown event"));
+        assert!(err("{\"event\":\"round_tick\",\"count\":3}").contains("unknown key 'count'"));
+        assert!(
+            err("{\"event\":\"scenario_loaded\",\"preset\":\"paper\",\"cliens\":4}")
+                .contains("unknown key 'cliens'")
+        );
+        assert!(err("{\"event\":\"scenario_loaded\"}").contains("preset"));
+        assert!(err("{\"event\":\"client_dropped\"}").contains("id"));
+        assert!(err("{\"event\":\"cohort_selected\",\"ids\":[]}").contains("empty"));
+        assert!(err("{\"event\":\"cohort_selected\",\"ids\":[3,1]}").contains("sorted"));
+        assert!(
+            err("{\"event\":\"scenario_loaded\",\"preset\":\"paper\",\"conv\":[1,2]}")
+                .contains("e_inf")
+        );
+        assert!(err("{\"event\":\"scenario_loaded\",\"preset\":\"paper\",\"mode\":\"x\"}")
+            .contains("unknown run mode"));
+        // file-level errors carry line numbers
+        let text = "{\"event\":\"round_tick\"}\n{\"event\":\"nope\"}\n";
+        let msg = format!("{:#}", parse_events(text).unwrap_err());
+        assert!(msg.contains("line 2"), "{msg}");
+    }
+}

@@ -1,0 +1,472 @@
+//! Metric surfaces of the allocator service: the shared per-round
+//! record schema and the pluggable sinks service runs stream into.
+//!
+//! One schema, three encodings, all byte-stable:
+//!
+//! * **CSV** ([`write_rounds_csv`]) — the `--rounds-out` trace of the
+//!   `dynamic` and `population` subcommands and of `sfllm serve`. One
+//!   row per round, columns [`TRACE_COLUMNS`], floats in Rust's
+//!   shortest round-trip `{}` form (booleans as 0/1). Identical inputs
+//!   produce identical bytes on every platform — golden-file tested
+//!   below.
+//! * **JSONL** ([`JsonlSink`]) — one self-describing object per line
+//!   (`"type":"round"` / `"type":"summary"`), same field names and the
+//!   same number formatting as the CSV, so the two surfaces can never
+//!   disagree on a value.
+//! * **In-memory** ([`MemorySink`] ring, [`AggregateSink`] totals) —
+//!   for embedding the service and for tests.
+//!
+//! The field names are the contract documented in DESIGN.md (PR-8):
+//! `round` (index), `weight` (convergence progress realized, ≤ 1),
+//! `delay_s`/`energy_j` (realized per-round), `l_c`/`rank` (the
+//! incumbent split decision), `cohort` (invited), `active` (online
+//! after dropout/deadline), `dropped` (deadline cuts this round),
+//! `resolved` (whether a re-opt decision ran). Round records from the
+//! round simulator have `cohort == K` and `dropped == 0`.
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::sim::engine::Adoption;
+use crate::sim::RoundRecord;
+use crate::util::csv::CsvWriter;
+
+/// Column order of the shared per-round trace (CSV and JSONL).
+pub const TRACE_COLUMNS: [&str; 10] = [
+    "round", "weight", "delay_s", "energy_j", "l_c", "rank", "cohort", "active", "dropped",
+    "resolved",
+];
+
+/// One round's record plus what the allocator adopted that round.
+#[derive(Clone, Debug)]
+pub struct RoundMetrics {
+    pub record: RoundRecord,
+    /// Which candidate the re-opt step kept ([`Adoption::Held`] when no
+    /// re-solve was due).
+    pub adoption: Adoption,
+}
+
+/// End-of-run totals (also emitted on shutdown of an unfinished run,
+/// with the totals realized so far).
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    /// Rounds realized by the run so far.
+    pub rounds: usize,
+    pub realized_delay: f64,
+    pub realized_energy: f64,
+    pub static_prediction: f64,
+    pub resolves: usize,
+    pub fresh_solves: usize,
+    pub deadline_drops: usize,
+    pub unique_participants: usize,
+    pub final_l_c: usize,
+    pub final_rank: usize,
+    /// Whether the run reached one unit of convergence progress.
+    pub converged: bool,
+}
+
+/// Where a service run streams its per-round output.
+pub trait MetricSink {
+    fn on_round(&mut self, m: &RoundMetrics) -> Result<()>;
+    fn on_summary(&mut self, s: &RunSummary) -> Result<()>;
+    /// Flush any buffered output (called on checkpoint and shutdown).
+    fn flush(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Format a float exactly like [`CsvWriter::row_f64`]: Rust's shortest
+/// round-trip `{}` Display. Non-finite values become `null` so JSONL
+/// lines stay parseable (the CSV writer prints `inf`/`NaN` as-is;
+/// realized delays are finite in any feasible run).
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// The shared row encoding of one record, in [`TRACE_COLUMNS`] order.
+fn trace_row(r: &RoundRecord) -> [f64; 10] {
+    [
+        r.round as f64,
+        r.weight,
+        r.delay,
+        r.energy,
+        r.l_c as f64,
+        r.rank as f64,
+        r.cohort as f64,
+        r.active as f64,
+        r.dropped as f64,
+        if r.resolved { 1.0 } else { 0.0 },
+    ]
+}
+
+/// Write a per-round trace as CSV under the shared schema — the one
+/// writer behind every `--rounds-out` flag.
+pub fn write_rounds_csv<P: AsRef<Path>>(path: P, rounds: &[RoundRecord]) -> Result<()> {
+    let mut w = CsvWriter::create(path, &TRACE_COLUMNS)?;
+    for r in rounds {
+        w.row_f64(&trace_row(r))?;
+    }
+    w.flush()
+}
+
+/// One round as a JSONL line (no trailing newline).
+pub fn round_json(m: &RoundMetrics) -> String {
+    let r = &m.record;
+    format!(
+        "{{\"type\":\"round\",\"round\":{},\"weight\":{},\"delay_s\":{},\"energy_j\":{},\
+         \"l_c\":{},\"rank\":{},\"cohort\":{},\"active\":{},\"dropped\":{},\
+         \"resolved\":{},\"adopted\":\"{}\"}}",
+        r.round,
+        num(r.weight),
+        num(r.delay),
+        num(r.energy),
+        r.l_c,
+        r.rank,
+        r.cohort,
+        r.active,
+        r.dropped,
+        r.resolved,
+        m.adoption.label()
+    )
+}
+
+/// The run summary as a JSONL line (no trailing newline).
+pub fn summary_json(s: &RunSummary) -> String {
+    format!(
+        "{{\"type\":\"summary\",\"rounds\":{},\"realized_delay_s\":{},\
+         \"realized_energy_j\":{},\"static_prediction_s\":{},\"resolves\":{},\
+         \"fresh_solves\":{},\"deadline_drops\":{},\"unique_participants\":{},\
+         \"final_l_c\":{},\"final_rank\":{},\"converged\":{}}}",
+        s.rounds,
+        num(s.realized_delay),
+        num(s.realized_energy),
+        num(s.static_prediction),
+        s.resolves,
+        s.fresh_solves,
+        s.deadline_drops,
+        s.unique_participants,
+        s.final_l_c,
+        s.final_rank,
+        s.converged
+    )
+}
+
+/// Bounded in-memory ring of the most recent rounds plus the summary.
+pub struct MemorySink {
+    cap: usize,
+    rounds: VecDeque<RoundMetrics>,
+    summary: Option<RunSummary>,
+}
+
+impl MemorySink {
+    /// Keep at most `cap` most-recent rounds (`cap >= 1`).
+    pub fn new(cap: usize) -> MemorySink {
+        MemorySink {
+            cap: cap.max(1),
+            rounds: VecDeque::new(),
+            summary: None,
+        }
+    }
+
+    pub fn rounds(&self) -> impl Iterator<Item = &RoundMetrics> {
+        self.rounds.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.rounds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rounds.is_empty()
+    }
+
+    pub fn summary(&self) -> Option<&RunSummary> {
+        self.summary.as_ref()
+    }
+}
+
+impl MetricSink for MemorySink {
+    fn on_round(&mut self, m: &RoundMetrics) -> Result<()> {
+        if self.rounds.len() == self.cap {
+            self.rounds.pop_front();
+        }
+        self.rounds.push_back(m.clone());
+        Ok(())
+    }
+
+    fn on_summary(&mut self, s: &RunSummary) -> Result<()> {
+        self.summary = Some(s.clone());
+        Ok(())
+    }
+}
+
+/// Byte-stable JSONL stream (one object per line; see the module docs
+/// for the schema).
+pub struct JsonlSink<W: Write> {
+    out: W,
+}
+
+impl JsonlSink<BufWriter<File>> {
+    /// Create (truncating) a JSONL file, creating parent dirs.
+    pub fn create<P: AsRef<Path>>(path: P) -> Result<JsonlSink<BufWriter<File>>> {
+        crate::util::csv::ensure_parent_dir(&path)?;
+        let f = File::create(&path)
+            .with_context(|| format!("creating {}", path.as_ref().display()))?;
+        Ok(JsonlSink {
+            out: BufWriter::new(f),
+        })
+    }
+}
+
+impl<W: Write> JsonlSink<W> {
+    /// Stream into any writer (a `Vec<u8>` in tests).
+    pub fn new(out: W) -> JsonlSink<W> {
+        JsonlSink { out }
+    }
+
+    pub fn into_inner(self) -> W {
+        self.out
+    }
+}
+
+impl<W: Write> MetricSink for JsonlSink<W> {
+    fn on_round(&mut self, m: &RoundMetrics) -> Result<()> {
+        self.out.write_all(round_json(m).as_bytes())?;
+        self.out.write_all(b"\n")?;
+        Ok(())
+    }
+
+    fn on_summary(&mut self, s: &RunSummary) -> Result<()> {
+        self.out.write_all(summary_json(s).as_bytes())?;
+        self.out.write_all(b"\n")?;
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// O(1)-memory aggregate over a run: weighted totals and extrema of the
+/// realized per-round delay.
+#[derive(Default)]
+pub struct AggregateSink {
+    rounds: usize,
+    weight_sum: f64,
+    delay_wsum: f64,
+    energy_wsum: f64,
+    delay_min: Option<f64>,
+    delay_max: Option<f64>,
+    resolves: usize,
+    summary: Option<RunSummary>,
+}
+
+impl AggregateSink {
+    pub fn new() -> AggregateSink {
+        AggregateSink::default()
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.rounds
+    }
+
+    /// Weighted totals `(Σ w·d, Σ w·e)` of the rounds seen so far.
+    /// Naive summation — within fp error of, but not bit-identical to,
+    /// the engine's run-length-compressed accumulators.
+    pub fn weighted_totals(&self) -> (f64, f64) {
+        (self.delay_wsum, self.energy_wsum)
+    }
+
+    pub fn delay_range(&self) -> Option<(f64, f64)> {
+        match (self.delay_min, self.delay_max) {
+            (Some(lo), Some(hi)) => Some((lo, hi)),
+            _ => None,
+        }
+    }
+
+    pub fn resolves(&self) -> usize {
+        self.resolves
+    }
+
+    pub fn summary(&self) -> Option<&RunSummary> {
+        self.summary.as_ref()
+    }
+}
+
+impl MetricSink for AggregateSink {
+    fn on_round(&mut self, m: &RoundMetrics) -> Result<()> {
+        let r = &m.record;
+        self.rounds += 1;
+        self.weight_sum += r.weight;
+        self.delay_wsum += r.weight * r.delay;
+        self.energy_wsum += r.weight * r.energy;
+        self.delay_min = Some(match self.delay_min {
+            Some(lo) if lo < r.delay => lo,
+            _ => r.delay,
+        });
+        self.delay_max = Some(match self.delay_max {
+            Some(hi) if hi > r.delay => hi,
+            _ => r.delay,
+        });
+        if r.resolved {
+            self.resolves += 1;
+        }
+        Ok(())
+    }
+
+    fn on_summary(&mut self, s: &RunSummary) -> Result<()> {
+        self.summary = Some(s.clone());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-constructed records with exactly-representable floats, so
+    /// the golden bytes are platform-independent by construction (no
+    /// libm in sight).
+    fn sample_rounds() -> Vec<RoundRecord> {
+        vec![
+            RoundRecord {
+                round: 0,
+                weight: 1.0,
+                delay: 1.5,
+                energy: 2048.25,
+                l_c: 3,
+                rank: 4,
+                active: 5,
+                resolved: true,
+                cohort: 5,
+                dropped: 0,
+            },
+            RoundRecord {
+                round: 1,
+                weight: 0.25,
+                delay: 1.5,
+                energy: 1024.125,
+                l_c: 3,
+                rank: 4,
+                active: 4,
+                resolved: false,
+                cohort: 5,
+                dropped: 1,
+            },
+        ]
+    }
+
+    fn sample_summary() -> RunSummary {
+        RunSummary {
+            rounds: 2,
+            realized_delay: 1.875,
+            realized_energy: 2304.28125,
+            static_prediction: 1.75,
+            resolves: 1,
+            fresh_solves: 1,
+            deadline_drops: 1,
+            unique_participants: 5,
+            final_l_c: 3,
+            final_rank: 4,
+            converged: true,
+        }
+    }
+
+    #[test]
+    fn csv_trace_matches_the_committed_golden_bytes() {
+        let golden = include_str!("../../tests/fixtures/rounds_trace.golden.csv");
+        let dir = std::env::temp_dir().join(format!("sfllm_trace_{}", std::process::id()));
+        let path = dir.join("trace.csv");
+        write_rounds_csv(&path, &sample_rounds()).unwrap();
+        let got = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(got, golden, "trace schema drifted from the golden file");
+        // writing twice is byte-identical
+        write_rounds_csv(&path, &sample_rounds()).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), golden);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn jsonl_matches_the_committed_golden_bytes() {
+        let golden = include_str!("../../tests/fixtures/rounds_trace.golden.jsonl");
+        let mut sink = JsonlSink::new(Vec::new());
+        for (i, r) in sample_rounds().into_iter().enumerate() {
+            let adoption = if i == 0 { Adoption::Fresh } else { Adoption::Held };
+            sink.on_round(&RoundMetrics {
+                record: r,
+                adoption,
+            })
+            .unwrap();
+        }
+        sink.on_summary(&sample_summary()).unwrap();
+        let got = String::from_utf8(sink.into_inner()).unwrap();
+        assert_eq!(got, golden, "JSONL schema drifted from the golden file");
+    }
+
+    #[test]
+    fn memory_sink_is_a_ring() {
+        let mut sink = MemorySink::new(2);
+        for r in sample_rounds() {
+            sink.on_round(&RoundMetrics {
+                record: r,
+                adoption: Adoption::Held,
+            })
+            .unwrap();
+        }
+        let extra = {
+            let mut r = sample_rounds().remove(0);
+            r.round = 2;
+            r
+        };
+        sink.on_round(&RoundMetrics {
+            record: extra,
+            adoption: Adoption::Incumbent,
+        })
+        .unwrap();
+        assert_eq!(sink.len(), 2);
+        let kept: Vec<usize> = sink.rounds().map(|m| m.record.round).collect();
+        assert_eq!(kept, vec![1, 2], "oldest round must be evicted");
+        assert!(sink.summary().is_none());
+        sink.on_summary(&sample_summary()).unwrap();
+        assert_eq!(sink.summary().map(|s| s.rounds), Some(2));
+    }
+
+    #[test]
+    fn aggregate_sink_totals_and_extrema() {
+        let mut sink = AggregateSink::new();
+        for r in sample_rounds() {
+            sink.on_round(&RoundMetrics {
+                record: r,
+                adoption: Adoption::Held,
+            })
+            .unwrap();
+        }
+        assert_eq!(sink.rounds(), 2);
+        assert_eq!(sink.resolves(), 1);
+        let (d, e) = sink.weighted_totals();
+        assert_eq!(d, 1.0 * 1.5 + 0.25 * 1.5);
+        assert_eq!(e, 1.0 * 2048.25 + 0.25 * 1024.125);
+        assert_eq!(sink.delay_range(), Some((1.5, 1.5)));
+    }
+
+    #[test]
+    fn non_finite_values_stay_parseable_json() {
+        let mut r = sample_rounds().remove(0);
+        r.delay = f64::INFINITY;
+        let line = round_json(&RoundMetrics {
+            record: r,
+            adoption: Adoption::Held,
+        });
+        assert!(line.contains("\"delay_s\":null"), "{line}");
+        assert!(!line.contains("inf"), "{line}");
+    }
+}

@@ -1,0 +1,47 @@
+//! The allocator service (PR-8): the policy / evaluator / dynamic
+//! stack packaged as a long-running, observable, checkpoint/resumable
+//! engine.
+//!
+//! Where the `sim` simulators run one closed loop to completion and
+//! return an outcome, the service is *driven*: it consumes typed
+//! deterministic [`Event`]s (from memory, or replayed from a JSONL
+//! file — `sfllm serve`), advances the same shared round engine
+//! ([`crate::sim::engine`]) one tick at a time, and streams per-round
+//! records into pluggable [`MetricSink`]s as they are produced. Because
+//! events carry no random payload — every random quantity comes from
+//! the seeded streams the [`RunSpec`] pins down — an event file is a
+//! complete, portable, replayable description of a run, and replaying
+//! it is bit-identical to having run it live.
+//!
+//! Layout:
+//!
+//! * [`event`] — the typed event vocabulary and its strict JSONL wire
+//!   form; [`RunSpec`], whose canonical JSON doubles as the checkpoint
+//!   fingerprint;
+//! * [`allocator`] — [`AllocatorService`] itself: session lifecycle,
+//!   the tick (the simulators' loop bodies, statement for statement),
+//!   checkpoint/resume;
+//! * [`metrics`] — the shared round-record schema (CSV / JSONL / in-
+//!   memory) behind every `--rounds-out` flag and service stream;
+//! * [`checkpoint`] — the versioned `SFCK` state codec;
+//! * [`codec`] — the little-endian binary primitives shared with the
+//!   adapter checkpoint format ([`crate::coordinator::checkpoint`]).
+//!
+//! The contract tying it together (property-tested in
+//! `rust/tests/prop_service.rs`): a pure tick stream reproduces
+//! [`crate::sim::RoundSimulator`] / [`crate::sim::PopulationSimulator`]
+//! bit for bit on every preset, and *checkpoint at event n + resume*
+//! continues the uninterrupted run byte-identically.
+
+pub mod allocator;
+pub mod checkpoint;
+pub mod codec;
+pub mod event;
+pub mod metrics;
+
+pub use self::allocator::AllocatorService;
+pub use self::checkpoint::peek_header;
+pub use self::event::{parse_events, Event, RunMode, RunSpec};
+pub use self::metrics::{
+    write_rounds_csv, AggregateSink, JsonlSink, MemorySink, MetricSink, RoundMetrics, RunSummary,
+};

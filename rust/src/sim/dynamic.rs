@@ -72,10 +72,9 @@ use crate::delay::{
     Allocation, ColumnCache, ConvergenceModel, DelayEvaluator, Scenario, WorkloadCache,
 };
 use crate::model::WorkloadTable;
-use crate::net::{ChannelModel, ChannelProcess, ChannelState};
 use crate::opt::policy::{AllocationPolicy, PolicyOutcome};
 use crate::opt::Objective;
-use crate::util::rng::Rng;
+use crate::sim::engine::{DriftEnv, RoundCore, StepCtx};
 
 /// When (and whether) to re-run the allocation policy as the
 /// environment drifts.
@@ -272,21 +271,6 @@ impl<'a> RoundSimulator<'a> {
         }
     }
 
-    /// See the free [`round_cost`]: realized per-round cost of `alloc`
-    /// on the current `scn` under `active`.
-    #[allow(clippy::too_many_arguments)]
-    fn round_cost(
-        &self,
-        scn: &Scenario,
-        table: &Arc<WorkloadTable>,
-        alloc: &Allocation,
-        active: &[bool],
-        obj: &Objective,
-        cols: &mut ColumnCache,
-    ) -> RoundCost {
-        round_cost(scn, self.conv, table, alloc, active, obj, cols)
-    }
-
     /// Simulate one full run of `policy` under `strategy`.
     ///
     /// Dropped clients keep their subchannels but neither compute nor
@@ -317,255 +301,44 @@ impl<'a> RoundSimulator<'a> {
         let objective = Objective::from_config(&self.base.objective)?;
         let table = self.cache.table_for(&self.base.profile, &self.ranks);
 
-        // working copy whose gains / compute / membership evolve
-        let mut scn = self.base.clone();
-        let base_f: Vec<f64> = scn.topo.clients.iter().map(|c| c.f_cycles).collect();
-
-        // independent seeded streams per dynamics knob, so toggling one
-        // never shifts another's draws
-        let mut root = Rng::new(dynamics.seed);
-        let mut jitter_rng = root.fork(0x4A17);
-        let mut drop_rng = root.fork(0xD509);
-        let process_seed = root.fork(0x5AD0).next_u64();
-        let sigma = dynamics.shadow_sigma_db.max(0.0);
-        let model = ChannelModel::new(sigma);
-        let state = ChannelState::recover(
-            &scn.topo,
-            &model,
-            &scn.main_link.client_gain,
-            &scn.fed_link.client_gain,
-        );
-        let mut process = ChannelProcess::new(model, state, dynamics.rho, process_seed);
+        // working copy whose gains / compute / membership evolve, plus
+        // the seeded drift streams (PR-8: shared engine state — the
+        // statements live in `sim::engine`, transplanted verbatim)
+        let mut env = DriftEnv::new(self.base.clone());
 
         // round 0: solve on the initial (static) scenario
         let out0 = policy
-            .solve_cached(&scn, self.conv, self.cache)
+            .solve_cached(&env.scn, self.conv, self.cache)
             .context("dynamic run: round-0 solve")?;
-        let alloc0 = out0.alloc;
-        let static_prediction = scn.total_delay(&alloc0, self.conv);
+        let static_prediction = env.scn.total_delay(&out0.alloc, self.conv);
+        let mut core = RoundCore::new(out0.alloc, static_prediction, self.conv);
+        let ctx = StepCtx {
+            conv: self.conv,
+            cache: self.cache,
+            table: &table,
+            objective: &objective,
+            strategy,
+            label: "dynamic",
+        };
 
-        let mut alloc = alloc0.clone();
-        // whether the incumbent currently *is* the round-0 allocation
-        // (lets the adoption step skip evaluating alloc0 twice)
-        let mut incumbent_is_initial = true;
-        // --- delta re-optimization state ---
-        // per-candidate rate/power columns, refreshed only where gains
-        // actually moved (3 live candidates + 1 slack)
-        let mut col_cache = ColumnCache::new(4);
-        // the last actually-solved allocation, valid as the "fresh"
-        // candidate while the environment has not drifted since
-        let mut memo_fresh_alloc = alloc0.clone();
-        let mut env_dirty = false;
-        let mut fresh_solves = 0usize;
-        let mut active = vec![true; k_n];
-        // rounds left to convergence at the current rank
-        let mut remaining = self.conv.rounds(alloc.rank);
-        // round delay at the last solve (OnDegrade reference)
-        let mut solved_delay = f64::INFINITY;
-        let mut resolves = 0usize;
-        let mut rounds: Vec<RoundRecord> = Vec::new();
-
-        // realized-delay accumulator: run-length compressed so equal
-        // consecutive round delays collapse into one weight×delay
-        // product (see the module docs for why this matters); energy
-        // gets its own segments so its frozen closed form is equally
-        // bit-exact
-        let mut realized = 0.0f64;
-        let mut seg_weight = 0.0f64;
-        let mut seg_delay = 0.0f64;
-        let mut realized_e = 0.0f64;
-        let mut seg_weight_e = 0.0f64;
-        let mut seg_energy = 0.0f64;
-
-        let mut round = 0usize;
-        while remaining > 0.0 {
-            if round >= dynamics.max_rounds {
-                bail!(
-                    "dynamic run exceeded dynamics.max_rounds = {} \
-                     (strategy {}, {:.1} rounds still remaining)",
-                    dynamics.max_rounds,
-                    strategy.label(),
-                    remaining
-                );
-            }
-
-            let mut resolved = round == 0;
+        while !core.done() {
+            core.check_cap(dynamics.max_rounds, &ctx)?;
+            let mut resolved = core.round == 0;
             // round cost of the current (scn, alloc, active), computed
             // at most once per round: the strategy decision and the
             // candidate adoption reuse their evaluator passes
             let mut cost_round: Option<RoundCost> = None;
-            if round > 0 {
-                // --- evolve the environment
-                process.step();
-                if !process.is_frozen() {
-                    let (main, fed) = process.gains(&scn.topo);
-                    scn.main_link.client_gain = main;
-                    scn.fed_link.client_gain = fed;
-                    env_dirty = true;
+            if core.round > 0 {
+                if env.advance() {
+                    core.env_dirty = true;
                 }
-                if dynamics.compute_jitter > 0.0 {
-                    for (c, &f0) in scn.topo.clients.iter_mut().zip(&base_f) {
-                        c.f_cycles = f0 * (dynamics.compute_jitter * jitter_rng.normal()).exp();
-                    }
-                    env_dirty = true;
-                }
-                if dynamics.dropout > 0.0 {
-                    let prev = active.clone();
-                    for (k, a) in active.iter_mut().enumerate() {
-                        let u = drop_rng.f64();
-                        if prev[k] {
-                            if u < dynamics.dropout {
-                                *a = false;
-                            }
-                        } else if u < dynamics.rejoin {
-                            *a = true;
-                        }
-                    }
-                    if !active.iter().any(|&a| a) {
-                        // never simulate an empty federation: discard
-                        // this round's membership draws
-                        active = prev;
-                    }
-                }
-
-                // --- decide whether to re-solve. The incumbent's cost
-                // computed for the OnDegrade trigger seeds the adoption
-                // step below, so no round evaluates one allocation twice.
-                let mut incumbent_cost: Option<RoundCost> = None;
-                let due = match strategy {
-                    ReOptStrategy::OneShot => false,
-                    ReOptStrategy::EveryRound => true,
-                    ReOptStrategy::Periodic(j) => round % j.max(1) == 0,
-                    ReOptStrategy::OnDegrade(th) => {
-                        let cost = self
-                            .round_cost(&scn, &table, &alloc, &active, &objective, &mut col_cache);
-                        let triggered = cost.delay > solved_delay * (1.0 + th);
-                        cost_round = Some(cost);
-                        incumbent_cost = Some(cost);
-                        triggered
-                    }
-                };
-                if due {
-                    // Warm start: while nothing in the environment has
-                    // drifted since the last actual solve, the policy —
-                    // a deterministic function of the scenario — would
-                    // reproduce the memoized allocation bit for bit, so
-                    // it IS the fresh candidate (zero solver work; the
-                    // frozen-run invariant `prop_dynamic` asserts).
-                    let fresh_alloc = if env_dirty {
-                        let fresh = policy
-                            .solve_cached(&scn, self.conv, self.cache)
-                            .with_context(|| format!("dynamic run: re-solve at round {round}"))?;
-                        fresh_solves += 1;
-                        env_dirty = false;
-                        memo_fresh_alloc = fresh.alloc.clone();
-                        fresh.alloc
-                    } else {
-                        memo_fresh_alloc.clone()
-                    };
-                    resolves += 1;
-                    resolved = true;
-                    // adopt the cheapest of {incumbent, round-0, fresh}
-                    // under the *current* channel (objective score per
-                    // unit of progress); ties keep the earlier
-                    // candidate, so a frozen channel never churns the
-                    // allocation. The round-0 candidate is skipped
-                    // while the incumbent *is* the round-0 allocation.
-                    let mut best = match incumbent_cost {
-                        Some(cost) => cost,
-                        None => self
-                            .round_cost(&scn, &table, &alloc, &active, &objective, &mut col_cache),
-                    };
-                    let mut best_alloc = alloc.clone();
-                    if !incumbent_is_initial {
-                        let c0 = self
-                            .round_cost(&scn, &table, &alloc0, &active, &objective, &mut col_cache);
-                        if c0.score < best.score {
-                            best = c0;
-                            best_alloc = alloc0.clone();
-                            incumbent_is_initial = true;
-                        }
-                    }
-                    let cf = self.round_cost(
-                        &scn,
-                        &table,
-                        &fresh_alloc,
-                        &active,
-                        &objective,
-                        &mut col_cache,
-                    );
-                    if cf.score < best.score {
-                        best = cf;
-                        best_alloc = fresh_alloc;
-                        incumbent_is_initial = false;
-                    }
-                    if best_alloc.rank != alloc.rank {
-                        // convert the remaining progress to the new
-                        // rank's round count
-                        let e_old = self.conv.rounds(alloc.rank);
-                        let e_new = self.conv.rounds(best_alloc.rank);
-                        remaining *= e_new / e_old;
-                    }
-                    alloc = best_alloc;
-                    cost_round = Some(best);
-                }
+                let re = core.maybe_reopt(&ctx, policy, &env.scn, &env.active)?;
+                resolved = re.resolved;
+                cost_round = re.cost;
             }
-
-            // --- realize this round
-            let cost = match cost_round {
-                Some(c) => c,
-                None => {
-                    self.round_cost(&scn, &table, &alloc, &active, &objective, &mut col_cache)
-                }
-            };
-            let (d, e) = (cost.delay, cost.energy);
-            if resolved {
-                solved_delay = d;
-            }
-            let weight = if remaining < 1.0 { remaining } else { 1.0 };
-            if seg_weight > 0.0 && d.to_bits() == seg_delay.to_bits() {
-                seg_weight += weight;
-            } else {
-                realized += seg_weight * seg_delay;
-                seg_weight = weight;
-                seg_delay = d;
-            }
-            if seg_weight_e > 0.0 && e.to_bits() == seg_energy.to_bits() {
-                seg_weight_e += weight;
-            } else {
-                realized_e += seg_weight_e * seg_energy;
-                seg_weight_e = weight;
-                seg_energy = e;
-            }
-            rounds.push(RoundRecord {
-                round,
-                weight,
-                delay: d,
-                energy: e,
-                l_c: alloc.l_c,
-                rank: alloc.rank,
-                active: active.iter().filter(|&&a| a).count(),
-                resolved,
-                cohort: k_n,
-                dropped: 0,
-            });
-            remaining -= weight;
-            round += 1;
+            core.realize(&ctx, &env.scn, &env.active, cost_round, resolved, k_n, 0);
         }
-        realized += seg_weight * seg_delay;
-        realized_e += seg_weight_e * seg_energy;
-
-        Ok(DynamicOutcome {
-            realized_delay: realized,
-            realized_energy: realized_e,
-            static_prediction,
-            final_alloc: alloc,
-            rounds,
-            resolves,
-            fresh_solves,
-            unique_participants: k_n,
-            deadline_drops: 0,
-        })
+        Ok(core.finish(k_n))
     }
 }
 

@@ -1,0 +1,520 @@
+//! The shared round-advance core (PR-8): the drift environment and the
+//! due/memo/adopt/realize state machine that [`crate::sim::RoundSimulator`],
+//! [`crate::sim::PopulationSimulator`], and the allocator service
+//! ([`crate::service::AllocatorService`]) all execute.
+//!
+//! Before PR-8 the round loop lived twice — once in `sim::dynamic`,
+//! once (transcribed) in `sim::population` — and the allocator service
+//! would have made a third copy. This module extracts the loop body as
+//! plain data + methods whose statements are transplanted **verbatim**
+//! from the simulators, so the extraction moves no bits: the existing
+//! `prop_dynamic` / `prop_population` suites pin the simulators'
+//! outputs, and `prop_service` pins the service replay against the
+//! simulators on every preset.
+//!
+//! * [`DriftEnv`] — one scenario whose gains / compute / membership
+//!   evolve per round from the three seeded streams the round simulator
+//!   forks (`jitter`, `dropout`, channel-process seed). This is the
+//!   former `sim::population::DenseEnv`, promoted: the round simulator
+//!   now runs on it too instead of inlining the same statements.
+//! * [`RoundCore`] — the per-run mutable state: incumbent/initial/memo
+//!   allocations, drift dirtiness, progress remaining, the run-length
+//!   compressed delay/energy accumulators, and the per-round records.
+//!   Everything in it is plain data (no caches beyond the bit-transparent
+//!   [`ColumnCache`]), which is exactly what makes the service's
+//!   checkpoint/resume bit-exact: serialize the core, rebuild the
+//!   immutable context, continue.
+//! * [`StepCtx`] — the per-run immutable context (convergence model,
+//!   caches, objective, strategy, and an engine label for error
+//!   messages).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::delay::{Allocation, ColumnCache, ConvergenceModel, Scenario, WorkloadCache};
+use crate::model::WorkloadTable;
+use crate::net::{ChannelModel, ChannelProcess, ChannelState};
+use crate::opt::policy::AllocationPolicy;
+use crate::opt::Objective;
+use crate::sim::dynamic::{round_cost, DynamicOutcome, ReOptStrategy, RoundCost, RoundRecord};
+use crate::util::rng::Rng;
+
+/// Which candidate the adoption step kept this round — streamed by the
+/// allocator service's `AllocationDecision` records; the simulators
+/// ignore it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Adoption {
+    /// No re-solve was due: the incumbent simply carried over.
+    Held,
+    /// A re-solve ran (or was served from the memo) and the incumbent
+    /// still won the comparison.
+    Incumbent,
+    /// The round-0 allocation was re-adopted.
+    Initial,
+    /// The fresh (or memoized-fresh) solve won.
+    Fresh,
+}
+
+impl Adoption {
+    /// Stable lowercase label for records and JSONL.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Adoption::Held => "held",
+            Adoption::Incumbent => "incumbent",
+            Adoption::Initial => "initial",
+            Adoption::Fresh => "fresh",
+        }
+    }
+}
+
+/// What [`RoundCore::maybe_reopt`] decided this round.
+#[derive(Clone, Copy, Debug)]
+pub struct ReOptOutcome {
+    /// Whether the strategy (or a forced request) re-solved this round.
+    pub resolved: bool,
+    /// The adopted allocation's round cost, when one was computed on
+    /// the final (post-adoption) allocation — reused by the realize
+    /// step so no round evaluates one allocation twice.
+    pub cost: Option<RoundCost>,
+    /// Which candidate won (== `Held` iff `resolved` is false).
+    pub adopted: Adoption,
+}
+
+/// One scenario whose gains / compute capabilities / membership evolve
+/// per round: the exact shared-stream evolution `RoundSimulator` has
+/// always performed, as a reusable value. The population engine's dense
+/// mode and the allocator service run the same statements, which is
+/// what makes the degenerate-population and service-replay anchor
+/// invariants bit-exact rather than approximate.
+pub struct DriftEnv {
+    /// Working scenario: gains and compute mutate in place.
+    pub(crate) scn: Scenario,
+    /// Static compute capabilities (jitter rescales from these).
+    pub(crate) base_f: Vec<f64>,
+    pub(crate) jitter_rng: Rng,
+    pub(crate) drop_rng: Rng,
+    pub(crate) process: ChannelProcess,
+    pub(crate) active: Vec<bool>,
+    pub(crate) jitter: f64,
+    pub(crate) dropout: f64,
+    pub(crate) rejoin: f64,
+}
+
+impl DriftEnv {
+    /// Build the drift state over `scn` (a working copy the caller
+    /// hands over) from its own resolved `dynamics`: the round
+    /// simulator's stream forks, verbatim — independent seeded streams
+    /// per dynamics knob, so toggling one never shifts another's draws.
+    pub(crate) fn new(scn: Scenario) -> DriftEnv {
+        let d = &scn.dynamics;
+        let base_f: Vec<f64> = scn.topo.clients.iter().map(|c| c.f_cycles).collect();
+        let mut root = Rng::new(d.seed);
+        let jitter_rng = root.fork(0x4A17);
+        let drop_rng = root.fork(0xD509);
+        let process_seed = root.fork(0x5AD0).next_u64();
+        let sigma = d.shadow_sigma_db.max(0.0);
+        let model = ChannelModel::new(sigma);
+        let state = ChannelState::recover(
+            &scn.topo,
+            &model,
+            &scn.main_link.client_gain,
+            &scn.fed_link.client_gain,
+        );
+        let process = ChannelProcess::new(model, state, d.rho, process_seed);
+        let active = vec![true; scn.k()];
+        let (jitter, dropout, rejoin) = (d.compute_jitter, d.dropout, d.rejoin);
+        DriftEnv {
+            scn,
+            base_f,
+            jitter_rng,
+            drop_rng,
+            process,
+            active,
+            jitter,
+            dropout,
+            rejoin,
+        }
+    }
+
+    /// One round of environment evolution; returns whether anything the
+    /// solver sees changed (gains or compute — membership is invisible
+    /// to solves, as it always was in the round simulator).
+    pub(crate) fn advance(&mut self) -> bool {
+        let mut dirty = false;
+        self.process.step();
+        if !self.process.is_frozen() {
+            let (main, fed) = self.process.gains(&self.scn.topo);
+            self.scn.main_link.client_gain = main;
+            self.scn.fed_link.client_gain = fed;
+            dirty = true;
+        }
+        if self.jitter > 0.0 {
+            for (c, &f0) in self.scn.topo.clients.iter_mut().zip(&self.base_f) {
+                c.f_cycles = f0 * (self.jitter * self.jitter_rng.normal()).exp();
+            }
+            dirty = true;
+        }
+        if self.dropout > 0.0 {
+            let prev = self.active.clone();
+            for (k, a) in self.active.iter_mut().enumerate() {
+                let u = self.drop_rng.f64();
+                if prev[k] {
+                    if u < self.dropout {
+                        *a = false;
+                    }
+                } else if u < self.rejoin {
+                    *a = true;
+                }
+            }
+            if !self.active.iter().any(|&a| a) {
+                // never simulate an empty federation
+                self.active = prev;
+            }
+        }
+        dirty
+    }
+
+    /// Force one client's membership (the service's `ClientDropped` /
+    /// `ClientRejoined` events). Out of range is a descriptive error —
+    /// event files are external input.
+    pub(crate) fn set_member(&mut self, id: usize, online: bool) -> Result<()> {
+        match self.active.get_mut(id) {
+            Some(a) => {
+                *a = online;
+                Ok(())
+            }
+            None => bail!(
+                "client id {id} out of range (scenario has {} clients)",
+                self.scn.k()
+            ),
+        }
+    }
+}
+
+/// Per-run immutable context shared by every [`RoundCore`] step.
+pub struct StepCtx<'a> {
+    pub(crate) conv: &'a ConvergenceModel,
+    pub(crate) cache: &'a WorkloadCache,
+    pub(crate) table: &'a Arc<WorkloadTable>,
+    pub(crate) objective: &'a Objective,
+    pub(crate) strategy: ReOptStrategy,
+    /// `"dynamic"` or `"population"` (or `"service"`): the engine name
+    /// error contexts and the max-rounds bail print.
+    pub(crate) label: &'a str,
+}
+
+/// The per-run mutable state of the round loop: what both simulators
+/// used to keep in local variables, as one checkpointable value. Field
+/// semantics are documented where the simulators documented them; the
+/// statements in the methods are transplanted verbatim.
+pub struct RoundCore {
+    /// The round-0 allocation (a re-adoption candidate until retired).
+    pub(crate) alloc0: Allocation,
+    /// The incumbent allocation.
+    pub(crate) alloc: Allocation,
+    /// Whether the incumbent currently *is* the round-0 allocation
+    /// (lets the adoption step skip evaluating alloc0 twice).
+    pub(crate) incumbent_is_initial: bool,
+    /// Once true, `alloc0` is never a candidate again (the population
+    /// engine retires it when the cohort first changes: its vectors
+    /// index clients no longer in the view). Always false in the round
+    /// simulator.
+    pub(crate) initial_retired: bool,
+    /// The last actually-solved allocation, valid as the "fresh"
+    /// candidate while the environment has not drifted since.
+    pub(crate) memo_fresh_alloc: Allocation,
+    pub(crate) env_dirty: bool,
+    /// One-shot override: the next `maybe_reopt` is due regardless of
+    /// strategy (the service's `ReOptRequested` event). Never set by
+    /// the simulators.
+    pub(crate) force_reopt: bool,
+    pub(crate) fresh_solves: usize,
+    pub(crate) resolves: usize,
+    pub(crate) deadline_drops: usize,
+    /// Rounds left to convergence at the current rank.
+    pub(crate) remaining: f64,
+    /// Round delay at the last solve (OnDegrade reference).
+    pub(crate) solved_delay: f64,
+    /// Eq. 17's static prediction for the round-0 solve.
+    pub(crate) static_prediction: f64,
+    pub(crate) round: usize,
+    /// Per-candidate rate/power columns, refreshed only where gains
+    /// actually moved (3 live candidates + 1 slack). Bit-transparent:
+    /// never serialized, rebuilt cold on resume.
+    pub(crate) col_cache: ColumnCache,
+    // realized-delay accumulator: run-length compressed so equal
+    // consecutive round delays collapse into one weight×delay product
+    // (see sim::dynamic module docs); energy gets its own segments so
+    // its frozen closed form is equally bit-exact
+    pub(crate) realized: f64,
+    pub(crate) seg_weight: f64,
+    pub(crate) seg_delay: f64,
+    pub(crate) realized_e: f64,
+    pub(crate) seg_weight_e: f64,
+    pub(crate) seg_energy: f64,
+    /// Per-round trace, in order. A resumed core restarts this empty —
+    /// already-streamed records live in the metric sink, not the
+    /// checkpoint — so totals must come from the scalar accumulators.
+    pub(crate) rounds: Vec<RoundRecord>,
+}
+
+impl RoundCore {
+    /// Fresh core after the round-0 solve: `alloc0` is the incumbent,
+    /// the memo, and the re-adoption candidate.
+    pub(crate) fn new(
+        alloc0: Allocation,
+        static_prediction: f64,
+        conv: &ConvergenceModel,
+    ) -> RoundCore {
+        let remaining = conv.rounds(alloc0.rank);
+        RoundCore {
+            alloc: alloc0.clone(),
+            memo_fresh_alloc: alloc0.clone(),
+            alloc0,
+            incumbent_is_initial: true,
+            initial_retired: false,
+            env_dirty: false,
+            force_reopt: false,
+            fresh_solves: 0,
+            resolves: 0,
+            deadline_drops: 0,
+            remaining,
+            solved_delay: f64::INFINITY,
+            static_prediction,
+            round: 0,
+            col_cache: ColumnCache::new(4),
+            realized: 0.0,
+            seg_weight: 0.0,
+            seg_delay: 0.0,
+            realized_e: 0.0,
+            seg_weight_e: 0.0,
+            seg_energy: 0.0,
+            rounds: Vec::new(),
+        }
+    }
+
+    /// True once one unit of convergence progress has been realized.
+    pub(crate) fn done(&self) -> bool {
+        !(self.remaining > 0.0)
+    }
+
+    /// The simulators' max-rounds guard, verbatim (the label keeps each
+    /// engine's historical message).
+    pub(crate) fn check_cap(&self, max_rounds: usize, ctx: &StepCtx) -> Result<()> {
+        if self.round >= max_rounds {
+            bail!(
+                "{} run exceeded dynamics.max_rounds = {} \
+                 (strategy {}, {:.1} rounds still remaining)",
+                ctx.label,
+                max_rounds,
+                ctx.strategy.label(),
+                self.remaining
+            );
+        }
+        Ok(())
+    }
+
+    /// Realized per-round cost of `alloc` on `scn` under `active`,
+    /// through this core's delta [`ColumnCache`].
+    pub(crate) fn cost_of(
+        &mut self,
+        ctx: &StepCtx,
+        scn: &Scenario,
+        alloc: &Allocation,
+        active: &[bool],
+    ) -> RoundCost {
+        round_cost(scn, ctx.conv, ctx.table, alloc, active, ctx.objective, &mut self.col_cache)
+    }
+
+    /// Replace the incumbent after a cohort change (the population
+    /// engine's re-communication): the round-0 allocation indexes
+    /// clients that are no longer in the view — retire it as a
+    /// re-adoption candidate for good.
+    pub(crate) fn rebase_incumbent(&mut self, alloc: Allocation) {
+        self.alloc = alloc;
+        self.initial_retired = true;
+        self.incumbent_is_initial = false;
+    }
+
+    /// The strategy decision + memoized fresh solve + candidate
+    /// adoption, transplanted verbatim from the simulators. Only
+    /// meaningful for `round > 0` (round 0 solves before the loop).
+    pub(crate) fn maybe_reopt(
+        &mut self,
+        ctx: &StepCtx,
+        policy: &dyn AllocationPolicy,
+        scn: &Scenario,
+        active: &[bool],
+    ) -> Result<ReOptOutcome> {
+        // --- decide whether to re-solve. The incumbent's cost computed
+        // for the OnDegrade trigger seeds the adoption step below, so
+        // no round evaluates one allocation twice.
+        let mut cost_round: Option<RoundCost> = None;
+        let mut incumbent_cost: Option<RoundCost> = None;
+        let strategy_due = match ctx.strategy {
+            ReOptStrategy::OneShot => false,
+            ReOptStrategy::EveryRound => true,
+            ReOptStrategy::Periodic(j) => self.round % j.max(1) == 0,
+            ReOptStrategy::OnDegrade(th) => {
+                let cost = self.cost_of(ctx, scn, &self.alloc.clone(), active);
+                let triggered = cost.delay > self.solved_delay * (1.0 + th);
+                cost_round = Some(cost);
+                incumbent_cost = Some(cost);
+                triggered
+            }
+        };
+        // a forced request (service ReOptRequested) is checked after
+        // the strategy match, so strategy draws/evaluations are
+        // untouched when no force is pending — the simulators never
+        // force, so their bits cannot move
+        let due = strategy_due || self.force_reopt;
+        self.force_reopt = false;
+        if !due {
+            return Ok(ReOptOutcome {
+                resolved: false,
+                cost: cost_round,
+                adopted: Adoption::Held,
+            });
+        }
+        // Warm start: while nothing in the environment has drifted
+        // since the last actual solve, the policy — a deterministic
+        // function of the scenario — would reproduce the memoized
+        // allocation bit for bit, so it IS the fresh candidate (zero
+        // solver work; the frozen-run invariant prop_dynamic asserts).
+        let fresh_alloc = if self.env_dirty {
+            let fresh = policy
+                .solve_cached(scn, ctx.conv, ctx.cache)
+                .with_context(|| format!("{} run: re-solve at round {}", ctx.label, self.round))?;
+            self.fresh_solves += 1;
+            self.env_dirty = false;
+            self.memo_fresh_alloc = fresh.alloc.clone();
+            fresh.alloc
+        } else {
+            self.memo_fresh_alloc.clone()
+        };
+        self.resolves += 1;
+        // adopt the cheapest of {incumbent, round-0, fresh} under the
+        // *current* channel (objective score per unit of progress);
+        // ties keep the earlier candidate, so a frozen channel never
+        // churns the allocation. The round-0 candidate is skipped while
+        // the incumbent *is* the round-0 allocation, and forever once
+        // it has been retired by a cohort change.
+        let mut best = match incumbent_cost {
+            Some(cost) => cost,
+            None => self.cost_of(ctx, scn, &self.alloc.clone(), active),
+        };
+        let mut best_alloc = self.alloc.clone();
+        let mut adopted = Adoption::Incumbent;
+        if !self.incumbent_is_initial && !self.initial_retired {
+            let c0 = self.cost_of(ctx, scn, &self.alloc0.clone(), active);
+            if c0.score < best.score {
+                best = c0;
+                best_alloc = self.alloc0.clone();
+                self.incumbent_is_initial = true;
+                adopted = Adoption::Initial;
+            }
+        }
+        let cf = self.cost_of(ctx, scn, &fresh_alloc, active);
+        if cf.score < best.score {
+            best = cf;
+            best_alloc = fresh_alloc;
+            self.incumbent_is_initial = false;
+            adopted = Adoption::Fresh;
+        }
+        if best_alloc.rank != self.alloc.rank {
+            // convert the remaining progress to the new rank's round
+            // count
+            let e_old = ctx.conv.rounds(self.alloc.rank);
+            let e_new = ctx.conv.rounds(best_alloc.rank);
+            self.remaining *= e_new / e_old;
+        }
+        self.alloc = best_alloc;
+        Ok(ReOptOutcome {
+            resolved: true,
+            cost: Some(best),
+            adopted,
+        })
+    }
+
+    /// Realize the current round: compute (or reuse) the round cost,
+    /// fold it into the run-length segments, record it, and advance
+    /// progress. Transplanted verbatim from the simulators.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn realize(
+        &mut self,
+        ctx: &StepCtx,
+        scn: &Scenario,
+        active: &[bool],
+        cost_round: Option<RoundCost>,
+        resolved: bool,
+        cohort: usize,
+        dropped: usize,
+    ) -> RoundRecord {
+        let cost = match cost_round {
+            Some(c) => c,
+            None => self.cost_of(ctx, scn, &self.alloc.clone(), active),
+        };
+        let (d, e) = (cost.delay, cost.energy);
+        if resolved {
+            self.solved_delay = d;
+        }
+        let weight = if self.remaining < 1.0 { self.remaining } else { 1.0 };
+        if self.seg_weight > 0.0 && d.to_bits() == self.seg_delay.to_bits() {
+            self.seg_weight += weight;
+        } else {
+            self.realized += self.seg_weight * self.seg_delay;
+            self.seg_weight = weight;
+            self.seg_delay = d;
+        }
+        if self.seg_weight_e > 0.0 && e.to_bits() == self.seg_energy.to_bits() {
+            self.seg_weight_e += weight;
+        } else {
+            self.realized_e += self.seg_weight_e * self.seg_energy;
+            self.seg_weight_e = weight;
+            self.seg_energy = e;
+        }
+        let record = RoundRecord {
+            round: self.round,
+            weight,
+            delay: d,
+            energy: e,
+            l_c: self.alloc.l_c,
+            rank: self.alloc.rank,
+            active: active.iter().filter(|&&a| a).count(),
+            resolved,
+            cohort,
+            dropped,
+        };
+        self.rounds.push(record.clone());
+        self.remaining -= weight;
+        self.round += 1;
+        record
+    }
+
+    /// Realized totals so far, with the open run-length segments
+    /// flushed (without consuming the core — the service reads totals
+    /// mid-run for summaries and checkpoints).
+    pub(crate) fn totals(&self) -> (f64, f64) {
+        (
+            self.realized + self.seg_weight * self.seg_delay,
+            self.realized_e + self.seg_weight_e * self.seg_energy,
+        )
+    }
+
+    /// Close the run into the simulators' outcome type.
+    pub(crate) fn finish(self, unique_participants: usize) -> DynamicOutcome {
+        let (realized_delay, realized_energy) = self.totals();
+        DynamicOutcome {
+            realized_delay,
+            realized_energy,
+            static_prediction: self.static_prediction,
+            final_alloc: self.alloc,
+            rounds: self.rounds,
+            resolves: self.resolves,
+            fresh_solves: self.fresh_solves,
+            unique_participants,
+            deadline_drops: self.deadline_drops,
+        }
+    }
+}

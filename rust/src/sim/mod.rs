@@ -18,6 +18,11 @@
 //!   drift, compute jitter, dropout — that accumulates *realized*
 //!   total delay **and realized energy** and re-optimizes mid-run
 //!   (`one_shot`, `every_round`, `periodic:J`, `on_degrade:θ`);
+//! * [`engine`] — the shared round-advance core ([`engine::DriftEnv`] /
+//!   [`engine::RoundCore`]): the drift evolution and the
+//!   due/memo/adopt/realize state machine that both simulators and the
+//!   allocator service ([`crate::service`]) execute, extracted in PR-8
+//!   so checkpoint/resume serializes one canonical state;
 //! * [`population`] + [`selector`] — [`Population`] /
 //!   [`PopulationSimulator`]: the event-driven population engine —
 //!   10^5–10^6 modeled clients with lazily materialized per-client
@@ -36,6 +41,7 @@
 
 pub mod builder;
 pub mod dynamic;
+pub mod engine;
 pub mod population;
 pub mod selector;
 pub mod sweep;

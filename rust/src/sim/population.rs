@@ -70,16 +70,17 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::config::Config;
-use crate::delay::{Allocation, ColumnCache, ConvergenceModel, Scenario, WorkloadCache};
+use crate::delay::{Allocation, ConvergenceModel, Scenario, WorkloadCache};
 use crate::model::WorkloadTable;
 use crate::net::power::db_to_linear;
 use crate::net::process::ar1_jump;
 use crate::net::topology::ClientSite;
-use crate::net::{ChannelModel, ChannelProcess, ChannelState};
+use crate::net::ChannelModel;
 use crate::opt::policy::AllocationPolicy;
 use crate::opt::{bcd, power, Objective};
 use crate::sim::builder::ScenarioBuilder;
-use crate::sim::dynamic::{round_cost, DynamicOutcome, ReOptStrategy, RoundCost, RoundRecord};
+use crate::sim::dynamic::{DynamicOutcome, ReOptStrategy, RoundCost};
+use crate::sim::engine::{DriftEnv, RoundCore, StepCtx};
 use crate::sim::selector::{parse_selector, SelectionCtx, Selector, WeightIndex};
 use crate::util::rng::Rng;
 
@@ -163,6 +164,77 @@ impl PopulationState {
     /// observed).
     pub fn materialized(&self) -> usize {
         self.slots.len()
+    }
+
+    /// Serialize the mutable selection/observation state for the
+    /// service checkpoint. The weight index is skipped: it is a pure
+    /// function of the population's static draws and is rebuilt lazily,
+    /// bit-identically, on first weighted selection after resume.
+    pub(crate) fn checkpoint_write(&self, w: &mut crate::service::codec::BinWriter) {
+        w.usize(self.slots.len());
+        for (&id, s) in &self.slots {
+            w.usize(id);
+            w.f64(s.site.d_main_m);
+            w.f64(s.site.d_fed_m);
+            w.f64(s.site.f_cycles);
+            w.f64(s.shadow_main_db);
+            w.f64(s.shadow_fed_db);
+            w.f64(s.f_round);
+            w.bool(s.online);
+            w.usize(s.last_round);
+        }
+        w.usize(self.last_invited.len());
+        for &v in &self.last_invited {
+            w.u32(v);
+        }
+    }
+
+    /// Inverse of [`PopulationState::checkpoint_write`]; `size` is the
+    /// rebuilt population's size, validated against the payload.
+    pub(crate) fn checkpoint_read(
+        r: &mut crate::service::codec::BinReader,
+        size: usize,
+    ) -> Result<PopulationState> {
+        let n = r.usize("population slot count")?;
+        if n > size {
+            bail!("corrupt service checkpoint: {n} client slots exceed population size {size}");
+        }
+        let mut slots = BTreeMap::new();
+        for _ in 0..n {
+            let id = r.usize("slot id")?;
+            if id >= size {
+                bail!("corrupt service checkpoint: slot id {id} out of population size {size}");
+            }
+            let site = ClientSite {
+                d_main_m: r.f64("slot d_main")?,
+                d_fed_m: r.f64("slot d_fed")?,
+                f_cycles: r.f64("slot f_cycles")?,
+            };
+            let slot = ClientSlot {
+                site,
+                shadow_main_db: r.f64("slot shadow_main")?,
+                shadow_fed_db: r.f64("slot shadow_fed")?,
+                f_round: r.f64("slot f_round")?,
+                online: r.bool("slot online")?,
+                last_round: r.usize("slot last_round")?,
+            };
+            slots.insert(id, slot);
+        }
+        let m = r.usize("last_invited length")?;
+        if m != size {
+            bail!(
+                "corrupt service checkpoint: last_invited length {m} != population size {size}"
+            );
+        }
+        let mut last_invited = Vec::with_capacity(m);
+        for _ in 0..m {
+            last_invited.push(r.u32("last_invited entry")?);
+        }
+        Ok(PopulationState {
+            slots,
+            last_invited,
+            weights: None,
+        })
     }
 }
 
@@ -404,6 +476,49 @@ impl Population {
         scn
     }
 
+    /// True when the per-client AR(1) channel never moves (ρ = 1 or
+    /// σ = 0): sparse views then only drift through membership or
+    /// compute jitter.
+    pub(crate) fn channel_frozen(&self) -> bool {
+        self.innovation_db == 0.0
+    }
+
+    /// Record an externally supplied cohort in the invitation history —
+    /// the service's `cohort_selected` override performs exactly the
+    /// bookkeeping [`Population::select`] performs, minus the draw
+    /// (which is counter-based per round and simply left unconsumed).
+    pub(crate) fn mark_invited(&self, state: &mut PopulationState, ids: &[usize], round: usize) {
+        for &i in ids {
+            state.last_invited[i] = round.min(u32::MAX as usize - 1) as u32 + 1;
+        }
+    }
+
+    /// The round's scenario view and availability mask. Dense mode
+    /// reads the evolved full-population environment; sparse mode
+    /// observes exactly the cohort (O(cohort)). If every invitee is
+    /// offline the round proceeds with the full cohort instead — the
+    /// sparse analogue of the round simulator's empty-federation guard
+    /// (per-client chain states are left untouched).
+    pub(crate) fn round_view(
+        &self,
+        state: &mut PopulationState,
+        denv: &mut Option<DriftEnv>,
+        cohort: &[usize],
+        round: usize,
+    ) -> (Scenario, Vec<bool>) {
+        if let Some(env) = denv {
+            (env.scn.clone(), env.active.clone())
+        } else {
+            let obs: Vec<Observation> =
+                cohort.iter().map(|&i| self.observe(state, i, round)).collect();
+            let mut online: Vec<bool> = obs.iter().map(|o| o.online).collect();
+            if !online.iter().any(|&a| a) {
+                online = vec![true; online.len()];
+            }
+            (self.view_from(&obs), online)
+        }
+    }
+
     /// The full population lowered into one round-0 [`Scenario`] — only
     /// solvable when every client fits on a subchannel, i.e. for the
     /// degenerate populations the bit-identity anchor tests use (and
@@ -425,108 +540,68 @@ impl Population {
     }
 }
 
-/// Dense-mode environment: the exact shared-stream evolution
-/// [`crate::sim::RoundSimulator::run`] performs over the full
-/// population scenario, transcribed so the degenerate-population anchor
-/// invariant holds bit for bit (this is deliberately *not* a call into
-/// `RoundSimulator` — the invariant would be vacuous).
-struct DenseEnv {
-    scn: Scenario,
-    base_f: Vec<f64>,
-    jitter_rng: Rng,
-    drop_rng: Rng,
-    process: ChannelProcess,
-    active: Vec<bool>,
-    jitter: f64,
-    dropout: f64,
-    rejoin: f64,
-}
-
-impl DenseEnv {
-    fn new(pop: &Population) -> Result<DenseEnv> {
-        let scn = pop.scenario()?;
-        let d = &scn.dynamics;
-        let base_f: Vec<f64> = scn.topo.clients.iter().map(|c| c.f_cycles).collect();
-        // the round simulator's stream forks, verbatim
-        let mut root = Rng::new(d.seed);
-        let jitter_rng = root.fork(0x4A17);
-        let drop_rng = root.fork(0xD509);
-        let process_seed = root.fork(0x5AD0).next_u64();
-        let sigma = d.shadow_sigma_db.max(0.0);
-        let model = ChannelModel::new(sigma);
-        let state = ChannelState::recover(
-            &scn.topo,
-            &model,
-            &scn.main_link.client_gain,
-            &scn.fed_link.client_gain,
-        );
-        let process = ChannelProcess::new(model, state, d.rho, process_seed);
-        let active = vec![true; scn.k()];
-        let (jitter, dropout, rejoin) = (d.compute_jitter, d.dropout, d.rejoin);
-        Ok(DenseEnv {
-            scn,
-            base_f,
-            jitter_rng,
-            drop_rng,
-            process,
-            active,
-            jitter,
-            dropout,
-            rejoin,
-        })
-    }
-
-    /// One round of environment evolution; returns whether anything the
-    /// solver sees changed (gains or compute — membership is invisible
-    /// to solves, as in the round simulator).
-    fn advance(&mut self) -> bool {
-        let mut dirty = false;
-        self.process.step();
-        if !self.process.is_frozen() {
-            let (main, fed) = self.process.gains(&self.scn.topo);
-            self.scn.main_link.client_gain = main;
-            self.scn.fed_link.client_gain = fed;
-            dirty = true;
-        }
-        if self.jitter > 0.0 {
-            for (c, &f0) in self.scn.topo.clients.iter_mut().zip(&self.base_f) {
-                c.f_cycles = f0 * (self.jitter * self.jitter_rng.normal()).exp();
-            }
-            dirty = true;
-        }
-        if self.dropout > 0.0 {
-            let prev = self.active.clone();
-            for (k, a) in self.active.iter_mut().enumerate() {
-                let u = self.drop_rng.f64();
-                if prev[k] {
-                    if u < self.dropout {
-                        *a = false;
-                    }
-                } else if u < self.rejoin {
-                    *a = true;
-                }
-            }
-            if !self.active.iter().any(|&a| a) {
-                // never simulate an empty federation
-                self.active = prev;
-            }
-        }
-        dirty
-    }
-}
+// Dense mode runs on `sim::engine::DriftEnv` — the exact shared-stream
+// evolution `RoundSimulator::run` performs over the full population
+// scenario (it *is* the same code since PR-8, which makes the
+// degenerate-population anchor invariant structural rather than a
+// transcription kept in sync by hand).
 
 /// Re-communicate an incumbent allocation over a changed cohort: keep
 /// the split decision `(l_c, rank)`, rebuild the subchannel assignment
 /// (Algorithm 2) and the power PSDs (P2) for the new membership. The
 /// incumbent's own assignment/power vectors index the *previous*
 /// cohort's clients and are meaningless for the new one.
-fn comm_alloc(view: &Scenario, l_c: usize, rank: usize) -> Result<Allocation> {
+pub(crate) fn comm_alloc(view: &Scenario, l_c: usize, rank: usize) -> Result<Allocation> {
     let mut alloc = bcd::initial_alloc(view, l_c, rank);
     let p = power::solve_power(view, &alloc)
         .context("population run: re-communicating the incumbent over a changed cohort")?;
     alloc.psd_main = p.psd_main;
     alloc.psd_fed = p.psd_fed;
     Ok(alloc)
+}
+
+/// Straggler deadline: after the round's allocation is fixed, cut the
+/// slowest `⌊deadline_drop · online⌋` cohort members (by realized
+/// client-side phase delay) from the aggregate, masking them out of
+/// `online` in place. Returns how many were cut. Shared statement for
+/// statement by [`PopulationSimulator::run`] and the allocator
+/// service's population tick.
+pub(crate) fn deadline_cut(
+    deadline_drop: f64,
+    view: &Scenario,
+    alloc: &Allocation,
+    online: &mut [bool],
+) -> usize {
+    if deadline_drop <= 0.0 {
+        return 0;
+    }
+    let online_count = online.iter().filter(|&&a| a).count();
+    let cut = ((deadline_drop * online_count as f64).floor() as usize)
+        .min(online_count.saturating_sub(1));
+    if cut == 0 {
+        return 0;
+    }
+    let pd = view.phase_delays(alloc);
+    let mut times: Vec<(usize, f64)> = online
+        .iter()
+        .enumerate()
+        .filter(|&(_, &a)| a)
+        .map(|(k, _)| {
+            (
+                k,
+                pd.client_fwd[k] + pd.act_upload[k] + pd.client_bwd[k] + pd.fed_upload[k],
+            )
+        })
+        .collect();
+    // slowest first; ties broken by id for determinism. total_cmp:
+    // phase delays are non-negative sums (possibly +inf), never NaN,
+    // so this matches the old partial_cmp order minus the Equal
+    // fallback
+    times.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+    for &(k, _) in times.iter().take(cut) {
+        online[k] = false;
+    }
+    cut
 }
 
 /// Plays a fine-tuning run out over a [`Population`]: per-round cohort
@@ -576,302 +651,90 @@ impl<'a> PopulationSimulator<'a> {
         let frozen_channel = pop.innovation_db == 0.0;
 
         let mut state = PopulationState::new(pop.size);
-        let mut denv: Option<DenseEnv> = if dense { Some(DenseEnv::new(pop)?) } else { None };
+        let mut denv: Option<DriftEnv> = if dense {
+            Some(DriftEnv::new(pop.scenario()?))
+        } else {
+            None
+        };
 
         // --- round 0: invite, observe, solve on the initial view
         let mut cur_cohort = pop.select(&mut state, 0);
-        let (mut cur_view, mut online) = self.round_view(&mut state, &mut denv, &cur_cohort, 0);
+        let (mut cur_view, mut online) = pop.round_view(&mut state, &mut denv, &cur_cohort, 0);
         let out0 = policy
             .solve_cached(&cur_view, self.conv, self.cache)
             .context("population run: round-0 solve")?;
-        let alloc0 = out0.alloc;
-        let static_prediction = cur_view.total_delay(&alloc0, self.conv);
+        let static_prediction = cur_view.total_delay(&out0.alloc, self.conv);
+        let mut core = RoundCore::new(out0.alloc, static_prediction, self.conv);
+        let ctx = StepCtx {
+            conv: self.conv,
+            cache: self.cache,
+            table: &table,
+            objective: &objective,
+            strategy,
+            label: "population",
+        };
 
-        let mut alloc = alloc0.clone();
-        let mut incumbent_is_initial = true;
-        // once the cohort has changed, the round-0 allocation indexes
-        // clients that are no longer in the view — retire it as a
-        // re-adoption candidate for good
-        let mut cohort_ever_changed = false;
-        let mut col_cache = ColumnCache::new(4);
-        let mut memo_fresh_alloc = alloc0.clone();
-        let mut env_dirty = false;
-        let mut fresh_solves = 0usize;
-        let mut resolves = 0usize;
-        let mut deadline_drops = 0usize;
-        let mut remaining = self.conv.rounds(alloc.rank);
-        let mut solved_delay = f64::INFINITY;
-        let mut rounds: Vec<RoundRecord> = Vec::new();
-
-        // run-length compressed realized-delay/energy accumulators
-        let mut realized = 0.0f64;
-        let mut seg_weight = 0.0f64;
-        let mut seg_delay = 0.0f64;
-        let mut realized_e = 0.0f64;
-        let mut seg_weight_e = 0.0f64;
-        let mut seg_energy = 0.0f64;
-
-        let mut round = 0usize;
-        while remaining > 0.0 {
-            if round >= dynamics.max_rounds {
-                bail!(
-                    "population run exceeded dynamics.max_rounds = {} \
-                     (strategy {}, {:.1} rounds still remaining)",
-                    dynamics.max_rounds,
-                    strategy.label(),
-                    remaining
-                );
-            }
-
-            let mut resolved = round == 0;
+        while !core.done() {
+            core.check_cap(dynamics.max_rounds, &ctx)?;
+            let mut resolved = core.round == 0;
             let mut cost_round: Option<RoundCost> = None;
             let mut dropped = 0usize;
-            if round > 0 {
+            if core.round > 0 {
                 // --- evolve the environment and lower the new cohort
                 if let Some(env) = denv.as_mut() {
-                    env_dirty |= env.advance();
+                    if env.advance() {
+                        core.env_dirty = true;
+                    }
                 }
-                let cohort = pop.select(&mut state, round);
+                let cohort = pop.select(&mut state, core.round);
                 let cohort_changed = cohort != cur_cohort;
-                let (view, on) = self.round_view(&mut state, &mut denv, &cohort, round);
+                let (view, on) = pop.round_view(&mut state, &mut denv, &cohort, core.round);
                 cur_view = view;
                 online = on;
                 if denv.is_none() {
                     // a sparse view is rebuilt from fresh observations:
                     // it drifts whenever the membership, the channel,
                     // or the compute can have moved
-                    env_dirty |=
+                    core.env_dirty |=
                         cohort_changed || !frozen_channel || dynamics.compute_jitter > 0.0;
                 }
                 cur_cohort = cohort;
                 if cohort_changed {
-                    alloc = comm_alloc(&cur_view, alloc.l_c, alloc.rank)?;
-                    cohort_ever_changed = true;
-                    incumbent_is_initial = false;
+                    // once the cohort has changed, the round-0
+                    // allocation indexes clients that are no longer in
+                    // the view — rebasing retires it as a re-adoption
+                    // candidate for good
+                    let rebased = comm_alloc(&cur_view, core.alloc.l_c, core.alloc.rank)?;
+                    core.rebase_incumbent(rebased);
                 }
-
-                // --- decide whether to re-solve (the incumbent cost
-                // computed for OnDegrade seeds the adoption step)
-                let mut incumbent_cost: Option<RoundCost> = None;
-                let due = match strategy {
-                    ReOptStrategy::OneShot => false,
-                    ReOptStrategy::EveryRound => true,
-                    ReOptStrategy::Periodic(j) => round % j.max(1) == 0,
-                    ReOptStrategy::OnDegrade(th) => {
-                        let cost = round_cost(
-                            &cur_view,
-                            self.conv,
-                            &table,
-                            &alloc,
-                            &online,
-                            &objective,
-                            &mut col_cache,
-                        );
-                        let triggered = cost.delay > solved_delay * (1.0 + th);
-                        cost_round = Some(cost);
-                        incumbent_cost = Some(cost);
-                        triggered
-                    }
-                };
-                if due {
-                    // memoized against drift exactly like the round
-                    // simulator: while nothing the solver sees has
-                    // changed, the fresh candidate IS the last solve
-                    let fresh_alloc = if env_dirty {
-                        let fresh = policy
-                            .solve_cached(&cur_view, self.conv, self.cache)
-                            .with_context(|| {
-                                format!("population run: re-solve at round {round}")
-                            })?;
-                        fresh_solves += 1;
-                        env_dirty = false;
-                        memo_fresh_alloc = fresh.alloc.clone();
-                        fresh.alloc
-                    } else {
-                        memo_fresh_alloc.clone()
-                    };
-                    resolves += 1;
-                    resolved = true;
-                    let mut best = match incumbent_cost {
-                        Some(cost) => cost,
-                        None => round_cost(
-                            &cur_view,
-                            self.conv,
-                            &table,
-                            &alloc,
-                            &online,
-                            &objective,
-                            &mut col_cache,
-                        ),
-                    };
-                    let mut best_alloc = alloc.clone();
-                    if !incumbent_is_initial && !cohort_ever_changed {
-                        let c0 = round_cost(
-                            &cur_view,
-                            self.conv,
-                            &table,
-                            &alloc0,
-                            &online,
-                            &objective,
-                            &mut col_cache,
-                        );
-                        if c0.score < best.score {
-                            best = c0;
-                            best_alloc = alloc0.clone();
-                            incumbent_is_initial = true;
-                        }
-                    }
-                    let cf = round_cost(
-                        &cur_view,
-                        self.conv,
-                        &table,
-                        &fresh_alloc,
-                        &online,
-                        &objective,
-                        &mut col_cache,
-                    );
-                    if cf.score < best.score {
-                        best = cf;
-                        best_alloc = fresh_alloc;
-                        incumbent_is_initial = false;
-                    }
-                    if best_alloc.rank != alloc.rank {
-                        let e_old = self.conv.rounds(alloc.rank);
-                        let e_new = self.conv.rounds(best_alloc.rank);
-                        remaining *= e_new / e_old;
-                    }
-                    alloc = best_alloc;
-                    cost_round = Some(best);
-                }
+                let re = core.maybe_reopt(&ctx, policy, &cur_view, &online)?;
+                resolved = re.resolved;
+                cost_round = re.cost;
             }
 
             // --- straggler deadline: cut the slowest ⌊x·online⌋ cohort
             // members by realized client-side phase delay
-            if pop.deadline_drop > 0.0 {
-                let online_count = online.iter().filter(|&&a| a).count();
-                let cut = ((pop.deadline_drop * online_count as f64).floor() as usize)
-                    .min(online_count.saturating_sub(1));
-                if cut > 0 {
-                    let pd = cur_view.phase_delays(&alloc);
-                    let mut times: Vec<(usize, f64)> = online
-                        .iter()
-                        .enumerate()
-                        .filter(|&(_, &a)| a)
-                        .map(|(k, _)| {
-                            (
-                                k,
-                                pd.client_fwd[k]
-                                    + pd.act_upload[k]
-                                    + pd.client_bwd[k]
-                                    + pd.fed_upload[k],
-                            )
-                        })
-                        .collect();
-                    // slowest first; ties broken by id for determinism.
-                    // total_cmp: phase delays are non-negative sums
-                    // (possibly +inf), never NaN, so this matches the
-                    // old partial_cmp order minus the Equal fallback
-                    times.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
-                    for &(k, _) in times.iter().take(cut) {
-                        online[k] = false;
-                    }
-                    dropped = cut;
-                    deadline_drops += cut;
-                    // any cost computed above used the pre-deadline mask
-                    cost_round = None;
-                }
+            let cut = deadline_cut(pop.deadline_drop, &cur_view, &core.alloc, &mut online);
+            if cut > 0 {
+                dropped = cut;
+                core.deadline_drops += cut;
+                // any cost computed above used the pre-deadline mask
+                cost_round = None;
             }
 
-            // --- realize this round
-            let cost = match cost_round {
-                Some(c) => c,
-                None => round_cost(
-                    &cur_view,
-                    self.conv,
-                    &table,
-                    &alloc,
-                    &online,
-                    &objective,
-                    &mut col_cache,
-                ),
-            };
-            let (d, e) = (cost.delay, cost.energy);
-            if resolved {
-                solved_delay = d;
-            }
-            let weight = if remaining < 1.0 { remaining } else { 1.0 };
-            if seg_weight > 0.0 && d.to_bits() == seg_delay.to_bits() {
-                seg_weight += weight;
-            } else {
-                realized += seg_weight * seg_delay;
-                seg_weight = weight;
-                seg_delay = d;
-            }
-            if seg_weight_e > 0.0 && e.to_bits() == seg_energy.to_bits() {
-                seg_weight_e += weight;
-            } else {
-                realized_e += seg_weight_e * seg_energy;
-                seg_weight_e = weight;
-                seg_energy = e;
-            }
-            rounds.push(RoundRecord {
-                round,
-                weight,
-                delay: d,
-                energy: e,
-                l_c: alloc.l_c,
-                rank: alloc.rank,
-                active: online.iter().filter(|&&a| a).count(),
+            core.realize(
+                &ctx,
+                &cur_view,
+                &online,
+                cost_round,
                 resolved,
-                cohort: cur_cohort.len(),
+                cur_cohort.len(),
                 dropped,
-            });
-            remaining -= weight;
-            round += 1;
+            );
         }
-        realized += seg_weight * seg_delay;
-        realized_e += seg_weight_e * seg_energy;
 
         let unique_participants = if dense { pop.size } else { state.materialized() };
-        Ok(DynamicOutcome {
-            realized_delay: realized,
-            realized_energy: realized_e,
-            static_prediction,
-            final_alloc: alloc,
-            rounds,
-            resolves,
-            fresh_solves,
-            unique_participants,
-            deadline_drops,
-        })
-    }
-
-    /// The round's scenario view and availability mask. Dense mode
-    /// reads the evolved full-population environment; sparse mode
-    /// observes exactly the cohort (O(cohort)). If every invitee is
-    /// offline the round proceeds with the full cohort instead — the
-    /// sparse analogue of the round simulator's empty-federation guard
-    /// (per-client chain states are left untouched).
-    fn round_view(
-        &self,
-        state: &mut PopulationState,
-        denv: &mut Option<DenseEnv>,
-        cohort: &[usize],
-        round: usize,
-    ) -> (Scenario, Vec<bool>) {
-        if let Some(env) = denv {
-            (env.scn.clone(), env.active.clone())
-        } else {
-            let obs: Vec<Observation> = cohort
-                .iter()
-                .map(|&i| self.pop.observe(state, i, round))
-                .collect();
-            let mut online: Vec<bool> = obs.iter().map(|o| o.online).collect();
-            if !online.iter().any(|&a| a) {
-                online = vec![true; online.len()];
-            }
-            (self.pop.view_from(&obs), online)
-        }
+        Ok(core.finish(unique_participants))
     }
 }
 

@@ -1,0 +1,87 @@
+//! Injectable time source (PR-8).
+//!
+//! The determinism contract (DESIGN.md, sfllm-lint rule D002) bans raw
+//! `Instant::now()` outside the bench harness: wall-clock reads that
+//! leak into simulated or reported results make runs unreproducible.
+//! Components that legitimately need *telemetry* time — the training
+//! orchestrator's phase walltimes, the allocator service's aggregate
+//! summaries — take a `&dyn Clock` instead, so production wires in the
+//! bench-owned wall clock while tests and replays inject a
+//! [`ManualClock`] and stay bit-reproducible.
+//!
+//! The trait is deliberately minimal: a monotonically non-decreasing
+//! reading in seconds since an arbitrary per-clock epoch. Durations are
+//! differences of readings; no clock arithmetic beyond that is needed.
+
+use std::cell::Cell;
+
+/// A monotonic time source, in seconds since an arbitrary epoch.
+pub trait Clock {
+    /// Current reading. Must be non-decreasing across calls.
+    fn now(&self) -> f64;
+}
+
+/// Deterministic clock for tests and replays: time only moves when the
+/// caller advances it.
+#[derive(Debug, Default)]
+pub struct ManualClock {
+    t: Cell<f64>,
+}
+
+impl ManualClock {
+    /// New clock at t = 0.
+    pub fn new() -> Self {
+        ManualClock { t: Cell::new(0.0) }
+    }
+
+    /// Jump to an absolute reading (must not go backwards).
+    pub fn set(&self, t: f64) {
+        debug_assert!(t >= self.t.get(), "ManualClock moved backwards");
+        self.t.set(t);
+    }
+
+    /// Advance by `dt` seconds (dt >= 0).
+    pub fn advance(&self, dt: f64) {
+        debug_assert!(dt >= 0.0, "ManualClock advanced by negative dt");
+        self.t.set(self.t.get() + dt);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now(&self) -> f64 {
+        self.t.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_clock_starts_at_zero_and_advances() {
+        let c = ManualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(1.5);
+        assert_eq!(c.now(), 1.5);
+        c.advance(0.5);
+        assert_eq!(c.now(), 2.0);
+    }
+
+    #[test]
+    fn manual_clock_set_is_absolute() {
+        let c = ManualClock::new();
+        c.set(10.0);
+        assert_eq!(c.now(), 10.0);
+        c.set(10.0); // equal is fine
+        assert_eq!(c.now(), 10.0);
+    }
+
+    #[test]
+    fn trait_object_usable() {
+        let c = ManualClock::new();
+        let dynclock: &dyn Clock = &c;
+        let t0 = dynclock.now();
+        c.advance(3.0);
+        assert_eq!(dynclock.now() - t0, 3.0);
+    }
+}

@@ -3,6 +3,7 @@
 //! property-testing harness built on the PRNG.
 
 pub mod cli;
+pub mod clock;
 pub mod csv;
 pub mod json;
 pub mod prop;

@@ -1,0 +1,361 @@
+//! Properties of the allocator service (`service::allocator`), the
+//! PR-8 contract:
+//!
+//! 1. **Replay anchor** — a pure `scenario_loaded` + `round_tick`*
+//!    stream reproduces [`RoundSimulator`] (dynamic mode) and
+//!    [`PopulationSimulator`] (population mode) bit for bit, on every
+//!    preset.
+//! 2. **Resume invariant** — *checkpoint after event j, restore into a
+//!    fresh process, replay the rest* produces the same rounds and the
+//!    same summary as the uninterrupted run, bit for bit, for j ∈
+//!    {right after load, first tick, mid-run, last tick} — including
+//!    streams that carry control events (forced re-opt, cohort
+//!    overrides, membership, extra drift).
+
+use sfllm::delay::{ConvergenceModel, WorkloadCache};
+use sfllm::opt::policy::Proposed;
+use sfllm::service::{AllocatorService, Event, RunMode, RunSpec};
+use sfllm::sim::{
+    DynamicOutcome, Population, PopulationSimulator, ReOptStrategy, RoundRecord, RoundSimulator,
+    ScenarioBuilder, PRESETS,
+};
+
+const RANKS: [usize; 2] = [1, 4];
+const CONV: [f64; 3] = [4.0, 1.0, 0.85];
+const TICK_CAP: usize = 512;
+
+fn short_conv() -> ConvergenceModel {
+    ConvergenceModel::fitted(CONV[0], CONV[1], CONV[2])
+}
+
+/// A preset's spec shrunk to test size (tiny model, two ranks, K ≤ 8)
+/// — the same shrink `prop_population` applies to its configs, so the
+/// anchored simulators run on literally equal scenarios.
+fn preset_spec(preset: &str, strategy: &str) -> RunSpec {
+    let clients = ScenarioBuilder::preset(preset)
+        .unwrap()
+        .into_config()
+        .system
+        .clients
+        .min(8);
+    let mut spec = RunSpec::preset(preset);
+    spec.model = Some("tiny".to_string());
+    spec.seq = Some(64);
+    spec.ranks = Some(RANKS.to_vec());
+    spec.clients = Some(clients);
+    spec.conv = Some(CONV);
+    spec.strategy = strategy.to_string();
+    spec
+}
+
+/// A sparse population spec on the metro preset, downscaled.
+fn metro_spec(strategy: &str) -> RunSpec {
+    let mut spec = RunSpec::preset("metro_population");
+    spec.mode = RunMode::Population;
+    spec.model = Some("tiny".to_string());
+    spec.seq = Some(64);
+    spec.ranks = Some(RANKS.to_vec());
+    spec.population = Some(300);
+    spec.cohort = Some(8);
+    spec.conv = Some(CONV);
+    spec.strategy = strategy.to_string();
+    spec
+}
+
+/// Tick a freshly loaded service to convergence; returns the tick count.
+fn tick_to_convergence(svc: &mut AllocatorService) -> usize {
+    let mut ticks = 0;
+    while !svc.is_finished() {
+        assert!(ticks < TICK_CAP, "run did not converge within {TICK_CAP} ticks");
+        svc.process(&Event::RoundTick).unwrap();
+        ticks += 1;
+    }
+    ticks
+}
+
+/// Drive one uninterrupted service over `events`.
+fn drive(events: &[Event]) -> (Vec<RoundRecord>, sfllm::service::RunSummary) {
+    let mut svc = AllocatorService::new();
+    svc.run_events(events).unwrap();
+    (svc.rounds().to_vec(), svc.summary().unwrap())
+}
+
+/// Drive `events`, but checkpoint after `split` events, restore into a
+/// *fresh* service (cold caches, rebuilt substrate), and replay the
+/// rest there. Returns the concatenated rounds + the final summary.
+fn drive_with_resume(
+    events: &[Event],
+    split: usize,
+) -> (Vec<RoundRecord>, sfllm::service::RunSummary) {
+    let mut a = AllocatorService::new();
+    a.run_events(&events[..split]).unwrap();
+    let bytes = a.checkpoint_bytes().unwrap();
+    // the header carries the spec fingerprint and the stream position
+    let header = sfllm::service::peek_header(&bytes).unwrap();
+    assert_eq!(header.events_consumed, split as u64);
+    if let Event::ScenarioLoaded(spec) = &events[0] {
+        assert_eq!(header.fingerprint, spec.fingerprint());
+    }
+    let mut rounds = a.rounds().to_vec();
+    drop(a);
+
+    let mut b = AllocatorService::new();
+    b.restore(&bytes).unwrap();
+    assert_eq!(b.events_consumed(), split as u64);
+    b.run_events(&events[split..]).unwrap();
+    rounds.extend(b.rounds().iter().cloned());
+    (rounds, b.summary().unwrap())
+}
+
+fn assert_rounds_eq(a: &[RoundRecord], b: &[RoundRecord], tag: &str) {
+    assert_eq!(a.len(), b.len(), "round count on {tag}");
+    for (x, y) in a.iter().zip(b) {
+        let r = x.round;
+        assert_eq!(x.round, y.round, "round index on {tag}");
+        assert_eq!(x.weight.to_bits(), y.weight.to_bits(), "weight r{r} on {tag}");
+        assert_eq!(x.delay.to_bits(), y.delay.to_bits(), "delay r{r} on {tag}");
+        assert_eq!(x.energy.to_bits(), y.energy.to_bits(), "energy r{r} on {tag}");
+        assert_eq!(
+            (x.l_c, x.rank, x.active, x.resolved, x.cohort, x.dropped),
+            (y.l_c, y.rank, y.active, y.resolved, y.cohort, y.dropped),
+            "round shape r{r} on {tag}"
+        );
+    }
+}
+
+fn assert_summary_eq(
+    a: &sfllm::service::RunSummary,
+    b: &sfllm::service::RunSummary,
+    tag: &str,
+) {
+    assert_eq!(
+        a.realized_delay.to_bits(),
+        b.realized_delay.to_bits(),
+        "realized delay on {tag}"
+    );
+    assert_eq!(
+        a.realized_energy.to_bits(),
+        b.realized_energy.to_bits(),
+        "realized energy on {tag}"
+    );
+    assert_eq!(
+        a.static_prediction.to_bits(),
+        b.static_prediction.to_bits(),
+        "static prediction on {tag}"
+    );
+    assert_eq!(
+        (a.rounds, a.resolves, a.fresh_solves, a.deadline_drops),
+        (b.rounds, b.resolves, b.fresh_solves, b.deadline_drops),
+        "summary counters on {tag}"
+    );
+    assert_eq!(
+        (a.unique_participants, a.final_l_c, a.final_rank, a.converged),
+        (b.unique_participants, b.final_l_c, b.final_rank, b.converged),
+        "summary identity on {tag}"
+    );
+}
+
+fn assert_service_matches_outcome(
+    rounds: &[RoundRecord],
+    summary: &sfllm::service::RunSummary,
+    out: &DynamicOutcome,
+    tag: &str,
+) {
+    assert_rounds_eq(rounds, &out.rounds, tag);
+    assert_eq!(
+        summary.realized_delay.to_bits(),
+        out.realized_delay.to_bits(),
+        "realized delay on {tag}"
+    );
+    assert_eq!(
+        summary.realized_energy.to_bits(),
+        out.realized_energy.to_bits(),
+        "realized energy on {tag}"
+    );
+    assert_eq!(
+        summary.static_prediction.to_bits(),
+        out.static_prediction.to_bits(),
+        "static prediction on {tag}"
+    );
+    assert_eq!(summary.resolves, out.resolves, "resolves on {tag}");
+    assert_eq!(summary.fresh_solves, out.fresh_solves, "fresh solves on {tag}");
+    assert_eq!(summary.deadline_drops, out.deadline_drops, "deadline drops on {tag}");
+    assert_eq!(
+        summary.unique_participants, out.unique_participants,
+        "unique participants on {tag}"
+    );
+    assert_eq!(
+        (summary.final_l_c, summary.final_rank),
+        (out.final_alloc.l_c, out.final_alloc.rank),
+        "final allocation on {tag}"
+    );
+    assert!(summary.converged, "service run must converge on {tag}");
+}
+
+/// Checkpoint split points for a run of `ticks` rounds: right after
+/// `scenario_loaded` (round 0 still pending), after the first tick,
+/// mid-run, and after the last tick (events are 1 load + `ticks`
+/// ticks).
+fn splits(ticks: usize) -> Vec<usize> {
+    let mut s = vec![1, 2, 1 + ticks / 2, ticks];
+    s.dedup();
+    s
+}
+
+#[test]
+fn service_replay_matches_round_simulator_on_every_preset() {
+    let conv = short_conv();
+    for preset in PRESETS {
+        let spec = preset_spec(preset, "periodic:2");
+        let scn = ScenarioBuilder::from_config(spec.build_config().unwrap())
+            .build()
+            .unwrap();
+        let cache = WorkloadCache::new();
+        let policy = Proposed::with_ranks(&RANKS);
+        let out = RoundSimulator::new(&scn, &conv, &cache, &RANKS)
+            .run(&policy, ReOptStrategy::Periodic(2))
+            .unwrap();
+
+        let mut svc = AllocatorService::new();
+        svc.process(&Event::ScenarioLoaded(spec)).unwrap();
+        tick_to_convergence(&mut svc);
+        let summary = svc.summary().unwrap();
+        assert_service_matches_outcome(svc.rounds(), &summary, &out, preset);
+    }
+}
+
+#[test]
+fn service_replay_matches_population_simulator() {
+    let conv = short_conv();
+    // sparse (selection, deadlines, rebasing) and dense (full
+    // participation over the evolved environment) population runs
+    let mut dense = preset_spec("paper", "periodic:2");
+    dense.mode = RunMode::Population;
+    dense.population = Some(4);
+    dense.cohort = Some(4);
+    dense.clients = None; // population mode ignores system.clients
+    for (tag, spec, strat) in [
+        ("metro_sparse", metro_spec("periodic:3"), ReOptStrategy::Periodic(3)),
+        ("paper_dense", dense, ReOptStrategy::Periodic(2)),
+    ] {
+        let cfg = spec.build_config().unwrap();
+        let pop = Population::new(&cfg).unwrap();
+        let cache = WorkloadCache::new();
+        let policy = Proposed::with_ranks(&RANKS);
+        let out = PopulationSimulator::new(&pop, &conv, &cache, &RANKS)
+            .run(&policy, strat)
+            .unwrap();
+
+        let mut svc = AllocatorService::new();
+        svc.process(&Event::ScenarioLoaded(spec)).unwrap();
+        tick_to_convergence(&mut svc);
+        let summary = svc.summary().unwrap();
+        assert_service_matches_outcome(svc.rounds(), &summary, &out, tag);
+    }
+}
+
+#[test]
+fn resume_is_bit_identical_on_every_preset() {
+    for preset in PRESETS {
+        let spec = preset_spec(preset, "periodic:2");
+        let mut probe = AllocatorService::new();
+        probe.process(&Event::ScenarioLoaded(spec.clone())).unwrap();
+        let ticks = tick_to_convergence(&mut probe);
+        assert!(ticks >= 2, "{preset}: need a multi-round run to split");
+        drop(probe);
+
+        let mut events = vec![Event::ScenarioLoaded(spec)];
+        events.extend((0..ticks).map(|_| Event::RoundTick));
+        let (rounds, summary) = drive(&events);
+        for split in splits(ticks) {
+            let tag = format!("{preset}/split {split}");
+            let (r2, s2) = drive_with_resume(&events, split);
+            assert_rounds_eq(&rounds, &r2, &tag);
+            assert_summary_eq(&summary, &s2, &tag);
+        }
+    }
+}
+
+#[test]
+fn resume_is_bit_identical_for_population_runs() {
+    let spec = metro_spec("periodic:3");
+    let mut probe = AllocatorService::new();
+    probe.process(&Event::ScenarioLoaded(spec.clone())).unwrap();
+    let ticks = tick_to_convergence(&mut probe);
+    assert!(ticks >= 2);
+    drop(probe);
+
+    let mut events = vec![Event::ScenarioLoaded(spec)];
+    events.extend((0..ticks).map(|_| Event::RoundTick));
+    let (rounds, summary) = drive(&events);
+    for split in splits(ticks) {
+        let tag = format!("metro_population/split {split}");
+        let (r2, s2) = drive_with_resume(&events, split);
+        assert_rounds_eq(&rounds, &r2, &tag);
+        assert_summary_eq(&summary, &s2, &tag);
+    }
+}
+
+#[test]
+fn resume_preserves_pending_control_events() {
+    // Dynamic mode: membership flips, an extra drift step, and a forced
+    // re-opt interleaved with ticks — checkpoints land both *between*
+    // control events and *after* a pending force (force_reopt = true is
+    // serialized, so the resumed run's next tick still re-solves).
+    let spec = preset_spec("mobile_edge", "one_shot");
+    let events = vec![
+        Event::ScenarioLoaded(spec),
+        Event::RoundTick,
+        Event::ClientDropped { id: 1 },
+        Event::RoundTick,
+        Event::ChannelDrift,
+        Event::ReOptRequested,
+        Event::RoundTick,
+        Event::ClientRejoined { id: 1 },
+        Event::RoundTick,
+        Event::RoundTick,
+    ];
+    let (rounds, summary) = drive(&events);
+    assert!(rounds[2].resolved, "the forced re-opt must have resolved");
+    for split in 1..events.len() {
+        let tag = format!("controls/split {split}");
+        let (r2, s2) = drive_with_resume(&events, split);
+        assert_rounds_eq(&rounds, &r2, &tag);
+        assert_summary_eq(&summary, &s2, &tag);
+    }
+
+    // Population mode: a cohort override pending at checkpoint time
+    // must survive the round trip and steer the resumed tick.
+    let spec = metro_spec("one_shot");
+    let events = vec![
+        Event::ScenarioLoaded(spec),
+        Event::RoundTick,
+        Event::CohortSelected { ids: vec![3, 7, 21, 50, 101, 160, 222, 280] },
+        Event::ReOptRequested,
+        Event::RoundTick,
+        Event::RoundTick,
+    ];
+    let (rounds, summary) = drive(&events);
+    assert_eq!(rounds[1].cohort, 8, "override cohort size");
+    for split in 1..events.len() {
+        let tag = format!("cohort override/split {split}");
+        let (r2, s2) = drive_with_resume(&events, split);
+        assert_rounds_eq(&rounds, &r2, &tag);
+        assert_summary_eq(&summary, &s2, &tag);
+    }
+}
+
+#[test]
+fn restore_refuses_a_foreign_fingerprint_mode() {
+    // A checkpoint is tied to its spec: loading bytes whose mode byte
+    // was tampered with is refused (the spec JSON and the mode tag are
+    // cross-checked).
+    let mut svc = AllocatorService::new();
+    svc.process(&Event::ScenarioLoaded(preset_spec("paper", "one_shot")))
+        .unwrap();
+    svc.process(&Event::RoundTick).unwrap();
+    let bytes = svc.checkpoint_bytes().unwrap();
+    let header = sfllm::service::peek_header(&bytes).unwrap();
+    assert_eq!(header.mode, RunMode::Dynamic);
+    assert!(!header.finished);
+}
