@@ -1,0 +1,512 @@
+//! Name-resolution-lite call graph and the interprocedural taint rules.
+//!
+//! Built on [`super::parse`]: every function in `rust/src` is a node
+//! keyed by its module path (`opt::bcd::run`,
+//! `delay::eval::DelayEvaluator::evaluate`), and call references
+//! resolve to nodes by a deliberately simple scheme:
+//!
+//! - **Qualified paths** (`crate::opt::power::solve_power(..)`,
+//!   `bcd::initial_alloc(..)`, `Objective::from_config(..)`) normalize
+//!   `crate`/`self`/`super` and file-local `use` aliases, then match
+//!   keys exactly, then by progressively shorter path suffixes (at
+//!   least two segments) — so re-exported spellings land on the real
+//!   definition.
+//! - **Unqualified calls** (`helper(..)`) match same-file free
+//!   functions, then imported names.
+//! - **Method calls** (`x.solve(..)`) match `impl`/`trait` members
+//!   with that name, but only when the caller's file is the defining
+//!   file or mentions the implementing type / trait name — this is
+//!   what keeps `.expect(..)` on an `Option` a panic site everywhere
+//!   except inside the one file that defines a `fn expect`.
+//!
+//! The approximations and their false-negative bounds are documented
+//! in `DESIGN.md` (PR-9 section). On top of the graph:
+//!
+//! - **P101** — `.unwrap()` / `.expect()` / literal indexing in any
+//!   function reachable from a hot-scope entry point (public non-test
+//!   fns of `opt`, `delay`, `sim`). The finding carries the full call
+//!   chain from the entry point, which the file-local lexical rules it
+//!   replaces (P001/P002) could never see.
+//! - **D104** — `.sum()` / `.fold(..)` reductions in any function
+//!   reachable from a `spawn` site: accumulation order must not depend
+//!   on thread interleaving, so reachable reductions are required to
+//!   go through the fixed-order helpers in `util::stats` or carry a
+//!   justified allow.
+
+use super::parse::{FnInfo, ParsedFile, SiteKind};
+use super::rules::Finding;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+/// Hot modules: taint roots for P101 are the public non-test functions
+/// declared under these top-level modules.
+pub const HOT_MODULES: &[&str] = &["delay", "opt", "sim"];
+
+/// The whole-program call graph over `rust/src` functions.
+pub struct CallGraph {
+    pub fns: Vec<FnInfo>,
+    by_name: BTreeMap<String, Vec<usize>>,
+    file_idents: BTreeMap<String, BTreeSet<String>>,
+    file_imports: BTreeMap<String, BTreeMap<String, String>>,
+    /// `edges[i]` = indices of functions `fns[i]` calls (sorted, deduped).
+    pub edges: Vec<Vec<usize>>,
+}
+
+fn parent_path(mod_path: &str, supers: usize) -> Vec<String> {
+    let mut segs: Vec<String> = mod_path.split("::").map(|s| s.to_string()).collect();
+    for _ in 0..supers {
+        segs.pop();
+    }
+    segs
+}
+
+impl CallGraph {
+    /// Builds the graph. Only functions from files under `rust/src/`
+    /// participate; the input order does not matter (nodes are sorted
+    /// by key for determinism).
+    pub fn build(files: &[ParsedFile]) -> CallGraph {
+        let mut fns: Vec<FnInfo> = Vec::new();
+        let mut file_idents = BTreeMap::new();
+        let mut file_imports: BTreeMap<String, BTreeMap<String, String>> = BTreeMap::new();
+        for f in files {
+            if !f.rel.starts_with("rust/src/") {
+                continue;
+            }
+            fns.extend(f.fns.iter().cloned());
+            file_idents.insert(f.rel.clone(), f.idents.clone());
+            let imports = file_imports.entry(f.rel.clone()).or_default();
+            for u in &f.uses {
+                if u.alias == "*" || u.path.is_empty() {
+                    continue; // glob imports are ignored (documented approximation)
+                }
+                let head = u.path.first().map(|s| s.as_str()).unwrap_or("");
+                let resolved: Vec<String> = match head {
+                    "crate" | "sfllm" => u.path.iter().skip(1).cloned().collect(),
+                    "self" => {
+                        let mut v = parent_path(&f.mod_path, 0);
+                        v.extend(u.path.iter().skip(1).cloned());
+                        v
+                    }
+                    "super" => {
+                        let supers = u.path.iter().take_while(|s| s.as_str() == "super").count();
+                        let mut v = parent_path(&f.mod_path, supers);
+                        v.extend(u.path.iter().skip(supers).cloned());
+                        v
+                    }
+                    _ => continue, // external crate / std — not ours
+                };
+                imports.insert(u.alias.clone(), resolved.join("::"));
+            }
+        }
+        fns.sort_by(|a, b| {
+            (a.key.as_str(), a.file.as_str(), a.line)
+                .cmp(&(b.key.as_str(), b.file.as_str(), b.line))
+        });
+        let mut by_name: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (i, f) in fns.iter().enumerate() {
+            by_name.entry(f.name.clone()).or_default().push(i);
+        }
+        let mut cg = CallGraph { fns, by_name, file_idents, file_imports, edges: Vec::new() };
+        let mut edges = Vec::with_capacity(cg.fns.len());
+        for i in 0..cg.fns.len() {
+            let mut targets = BTreeSet::new();
+            let caller = cg.fns[i].clone();
+            for call in &caller.calls {
+                let resolved = if call.method {
+                    cg.resolve_method(i, &call.name)
+                } else if call.qual.len() == 1 && call.qual[0] == "Self" {
+                    cg.resolve_self_assoc(i, &call.name)
+                } else {
+                    cg.resolve_path(&caller, &call.qual, &call.name)
+                };
+                targets.extend(resolved);
+            }
+            edges.push(targets.into_iter().collect());
+        }
+        cg.edges = edges;
+        cg
+    }
+
+    /// In-repo targets of a `.name(..)` method call from `fns[caller]`:
+    /// impl/trait members with that name whose defining file is the
+    /// caller's file, or whose type / trait name appears in the
+    /// caller's file. Empty means "std or external" — for
+    /// unwrap/expect/sum/fold that is exactly the taint case.
+    pub fn resolve_method(&self, caller: usize, name: &str) -> Vec<usize> {
+        let cf = &self.fns[caller];
+        let empty = BTreeSet::new();
+        let idents = self.file_idents.get(&cf.file).unwrap_or(&empty);
+        self.by_name
+            .get(name)
+            .map(|cands| {
+                cands
+                    .iter()
+                    .copied()
+                    .filter(|&j| {
+                        let f = &self.fns[j];
+                        f.is_method
+                            && !f.is_test
+                            && (f.file == cf.file
+                                || (!f.impl_type.is_empty() && idents.contains(&f.impl_type))
+                                || (!f.impl_trait.is_empty() && idents.contains(&f.impl_trait)))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// `Self::name(..)` — associated functions of the caller's own impl.
+    fn resolve_self_assoc(&self, caller: usize, name: &str) -> Vec<usize> {
+        let cf = &self.fns[caller];
+        if cf.impl_type.is_empty() {
+            return Vec::new();
+        }
+        self.by_name
+            .get(name)
+            .map(|cands| {
+                cands
+                    .iter()
+                    .copied()
+                    .filter(|&j| {
+                        let f = &self.fns[j];
+                        !f.is_test && f.file == cf.file && f.impl_type == cf.impl_type
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Qualified or free-path call resolution (see module docs).
+    fn resolve_path(&self, caller: &FnInfo, qual: &[String], name: &str) -> Vec<usize> {
+        let imports = self.file_imports.get(&caller.file);
+        if qual.is_empty() {
+            // same-file free functions first
+            let same_file: Vec<usize> = self
+                .by_name
+                .get(name)
+                .map(|c| {
+                    c.iter()
+                        .copied()
+                        .filter(|&j| {
+                            let f = &self.fns[j];
+                            !f.is_method && !f.is_test && f.file == caller.file
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            if !same_file.is_empty() {
+                return same_file;
+            }
+            if let Some(path) = imports.and_then(|m| m.get(name)) {
+                return self.match_abs(&path.split("::").map(|s| s.to_string()).collect::<Vec<_>>());
+            }
+            return Vec::new();
+        }
+        let mut path: Vec<String> = qual.to_vec();
+        path.push(name.to_string());
+        let head = path.first().map(|s| s.as_str()).unwrap_or("");
+        let abs: Vec<String> = match head {
+            "crate" | "sfllm" => path.iter().skip(1).cloned().collect(),
+            "self" => {
+                let mut v = parent_path(&caller.mod_path, 0);
+                v.extend(path.iter().skip(1).cloned());
+                v
+            }
+            "super" => {
+                let supers = path.iter().take_while(|s| s.as_str() == "super").count();
+                let mut v = parent_path(&caller.mod_path, supers);
+                v.extend(path.iter().skip(supers).cloned());
+                v
+            }
+            _ => {
+                if let Some(resolved) = imports.and_then(|m| m.get(head)) {
+                    let mut v: Vec<String> =
+                        resolved.split("::").map(|s| s.to_string()).collect();
+                    v.extend(path.iter().skip(1).cloned());
+                    v
+                } else {
+                    path
+                }
+            }
+        };
+        self.match_abs(&abs)
+    }
+
+    /// Exact key match, then progressively shorter suffixes of at
+    /// least two segments (`a::b::c::f` → `b::c::f` → `c::f`).
+    fn match_abs(&self, abs: &[String]) -> Vec<usize> {
+        if abs.is_empty() {
+            return Vec::new();
+        }
+        let name = abs.last().unwrap().as_str();
+        let cands = match self.by_name.get(name) {
+            Some(c) => c,
+            None => return Vec::new(),
+        };
+        for drop in 0..abs.len() {
+            let suffix = abs[drop..].join("::");
+            if abs.len() - drop < 2 {
+                break;
+            }
+            let hit: Vec<usize> = cands
+                .iter()
+                .copied()
+                .filter(|&j| {
+                    let f = &self.fns[j];
+                    !f.is_test
+                        && (f.key == suffix || f.key.ends_with(&format!("::{suffix}")))
+                })
+                .collect();
+            if !hit.is_empty() {
+                return hit;
+            }
+        }
+        Vec::new()
+    }
+
+    /// Deterministic multi-root BFS. Returns visit order and, for each
+    /// visited node, its predecessor (`usize::MAX` for roots).
+    pub fn bfs(&self, roots: &[usize]) -> (Vec<usize>, Vec<usize>) {
+        let mut roots: Vec<usize> = roots.to_vec();
+        roots.sort_by(|&a, &b| self.fns[a].key.cmp(&self.fns[b].key));
+        let mut parent = vec![usize::MAX; self.fns.len()];
+        let mut seen = vec![false; self.fns.len()];
+        let mut order = Vec::new();
+        let mut q = VecDeque::new();
+        for r in roots {
+            if !seen[r] {
+                seen[r] = true;
+                q.push_back(r);
+            }
+        }
+        while let Some(i) = q.pop_front() {
+            order.push(i);
+            for &j in &self.edges[i] {
+                if !seen[j] {
+                    seen[j] = true;
+                    parent[j] = i;
+                    q.push_back(j);
+                }
+            }
+        }
+        (order, parent)
+    }
+
+    /// Call chain from the BFS root down to `i`, as `a -> b -> c` keys.
+    fn chain(&self, parent: &[usize], i: usize) -> String {
+        let mut keys = vec![self.fns[i].key.clone()];
+        let mut cur = i;
+        while parent[cur] != usize::MAX {
+            cur = parent[cur];
+            keys.push(self.fns[cur].key.clone());
+        }
+        keys.reverse();
+        keys.join(" -> ")
+    }
+}
+
+/// Runs the interprocedural rules over a parsed program and returns
+/// P101/D104 findings (sorted by file, line, rule).
+pub fn program_findings(files: &[ParsedFile]) -> Vec<Finding> {
+    let cg = CallGraph::build(files);
+    let mut out = Vec::new();
+
+    let p101_roots: Vec<usize> = (0..cg.fns.len())
+        .filter(|&i| {
+            let f = &cg.fns[i];
+            HOT_MODULES.contains(&f.module.as_str()) && f.is_pub && !f.is_test
+        })
+        .collect();
+    let (order, parent) = cg.bfs(&p101_roots);
+    for &i in &order {
+        let f = &cg.fns[i];
+        if f.is_test {
+            continue;
+        }
+        for site in &f.sites {
+            let fires = match site.kind {
+                SiteKind::Index => true,
+                SiteKind::Unwrap => cg.resolve_method(i, "unwrap").is_empty(),
+                SiteKind::Expect => cg.resolve_method(i, "expect").is_empty(),
+                _ => false,
+            };
+            if fires {
+                out.push(Finding {
+                    rule: "P101",
+                    file: f.file.clone(),
+                    line: site.line,
+                    message: format!(
+                        "panic site reachable from hot entry: {}",
+                        cg.chain(&parent, i)
+                    ),
+                    snippet: site.snippet.clone(),
+                });
+            }
+        }
+    }
+
+    let d104_roots: Vec<usize> = (0..cg.fns.len())
+        .filter(|&i| {
+            let f = &cg.fns[i];
+            f.has_spawn && !f.is_test
+        })
+        .collect();
+    let (order, parent) = cg.bfs(&d104_roots);
+    for &i in &order {
+        let f = &cg.fns[i];
+        if f.is_test {
+            continue;
+        }
+        for site in &f.sites {
+            let fires = match site.kind {
+                SiteKind::Sum => cg.resolve_method(i, "sum").is_empty(),
+                SiteKind::Fold => cg.resolve_method(i, "fold").is_empty(),
+                _ => false,
+            };
+            if fires {
+                out.push(Finding {
+                    rule: "D104",
+                    file: f.file.clone(),
+                    line: site.line,
+                    message: format!(
+                        "iterator reduction reachable from a spawn site ({}): use the fixed-order helpers in util::stats or justify",
+                        cg.chain(&parent, i)
+                    ),
+                    snippet: site.snippet.clone(),
+                });
+            }
+        }
+    }
+
+    out.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::parse::parse_file;
+
+    fn program(files: &[(&str, &str)]) -> Vec<ParsedFile> {
+        files.iter().map(|(rel, src)| parse_file(rel, src)).collect()
+    }
+
+    #[test]
+    fn cross_module_chain_reaches_helper_unwrap() {
+        // hot entry in opt calls a util helper whose unwrap must be
+        // attributed back through the chain.
+        let files = program(&[
+            (
+                "rust/src/opt/entry.rs",
+                "use crate::util::pick;\npub fn solve(xs: &[f64]) -> f64 { pick(xs) }\n",
+            ),
+            (
+                "rust/src/util/mod.rs",
+                "pub fn pick(xs: &[f64]) -> f64 { *xs.first().unwrap() }\n",
+            ),
+        ]);
+        let fs = program_findings(&files);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, "P101");
+        assert_eq!(fs[0].file, "rust/src/util/mod.rs");
+        assert!(fs[0].message.contains("opt::entry::solve -> util::pick"), "{}", fs[0].message);
+    }
+
+    #[test]
+    fn unreachable_unwrap_is_silent() {
+        let files = program(&[
+            ("rust/src/opt/entry.rs", "pub fn solve() -> f64 { 1.0 }\n"),
+            (
+                "rust/src/util/mod.rs",
+                "pub fn dead(xs: &[f64]) -> f64 { *xs.first().unwrap() }\n",
+            ),
+        ]);
+        assert!(program_findings(&files).is_empty());
+    }
+
+    #[test]
+    fn method_calls_resolve_through_impls() {
+        let files = program(&[
+            (
+                "rust/src/opt/entry.rs",
+                "use crate::model::Profile;\npub fn solve(p: &Profile) -> f64 { p.cost() }\n",
+            ),
+            (
+                "rust/src/model/mod.rs",
+                "pub struct Profile;\nimpl Profile {\n    pub fn cost(&self) -> f64 { self.raw()[0] }\n    fn raw(&self) -> Vec<f64> { vec![1.0] }\n}\n",
+            ),
+        ]);
+        let fs = program_findings(&files);
+        // the literal index inside Profile::cost is reachable via the
+        // method call
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, "P101");
+        assert_eq!(fs[0].snippet, "[0]");
+        assert!(fs[0].message.contains("Profile::cost"), "{}", fs[0].message);
+    }
+
+    #[test]
+    fn in_repo_expect_method_is_a_call_not_a_panic() {
+        // a file-local `fn expect` swallows `.expect(..)` there, while
+        // every other file still reports the std panic site.
+        let files = program(&[
+            (
+                "rust/src/util/parser.rs",
+                "pub struct P;\nimpl P {\n    pub fn expect(&mut self, c: u8) {}\n}\npub fn drive(p: &mut P) { p.expect(b'x'); }\n",
+            ),
+            (
+                "rust/src/opt/entry.rs",
+                "pub fn solve(x: Option<f64>) -> f64 { x.expect(\"set\") }\n",
+            ),
+        ]);
+        let fs = program_findings(&files);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].file, "rust/src/opt/entry.rs");
+    }
+
+    #[test]
+    fn d104_flags_reductions_reachable_from_spawn() {
+        let files = program(&[
+            (
+                "rust/src/sim/run.rs",
+                "use crate::util::acc;\nfn worker(xs: &[f64]) -> f64 { acc(xs) }\npub fn fan_out(xs: &[f64]) -> f64 {\n    std::thread::scope(|s| { s.spawn(|| worker(xs)); });\n    0.0\n}\n",
+            ),
+            (
+                "rust/src/util/mod.rs",
+                "pub fn acc(xs: &[f64]) -> f64 { xs.iter().sum() }\n",
+            ),
+        ]);
+        let fs = program_findings(&files);
+        let d104: Vec<&Finding> = fs.iter().filter(|f| f.rule == "D104").collect();
+        assert_eq!(d104.len(), 1, "{fs:?}");
+        assert_eq!(d104[0].file, "rust/src/util/mod.rs");
+        assert!(d104[0].message.contains("sim::run::fan_out"), "{}", d104[0].message);
+    }
+
+    #[test]
+    fn test_functions_are_neither_roots_nor_sites() {
+        let files = program(&[(
+            "rust/src/opt/entry.rs",
+            "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { Some(1).unwrap(); }\n}\n",
+        )]);
+        assert!(program_findings(&files).is_empty());
+    }
+
+    #[test]
+    fn suffix_matching_resolves_reexported_paths() {
+        let files = program(&[
+            (
+                "rust/src/opt/entry.rs",
+                "use crate::opt::Objective;\npub fn solve() -> f64 { Objective::weight() }\n",
+            ),
+            (
+                "rust/src/delay/objective.rs",
+                "pub struct Objective;\nimpl Objective {\n    pub fn weight() -> f64 { DEFAULTS[0] }\n}\nconst DEFAULTS: [f64; 1] = [0.5];\n",
+            ),
+        ]);
+        let fs = program_findings(&files);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert!(fs[0].message.contains("delay::objective::Objective::weight"), "{}", fs[0].message);
+    }
+}

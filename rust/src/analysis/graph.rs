@@ -1,0 +1,443 @@
+//! Module dependency graph and the machine-checked layering contract.
+//!
+//! The crate has a deliberate architecture: leaf utilities at the
+//! bottom, the delay model above them, optimizers above that, then the
+//! simulation harness, and the long-running surfaces (service,
+//! coordinator) on top. PR-9 turns that prose into a contract: every
+//! non-test `crate::X` reference is an edge in a module graph, each
+//! module has a layer, and the allowed-edge table below is the single
+//! source of truth. Violations are lint findings:
+//!
+//! - **G001** — a dependency cycle between modules (any strongly
+//!   connected component with more than one module).
+//! - **G002** — a layering inversion: an edge not in the allowed table
+//!   (including edges to unknown modules).
+//!
+//! The allowed table is strictly layer-decreasing (unit-tested), so a
+//! clean graph is a DAG by construction and G001 can only fire when
+//! G002 also fires — but the cycle report names the loop explicitly,
+//! which the inversion report cannot.
+//!
+//! [`ArchReport::to_json`] is byte-stable: modules sorted by
+//! (layer, name), edges by (from, to), and a FNV-1a fingerprint of the
+//! contract tables so CI can detect silent contract edits.
+
+use super::parse::ParsedFile;
+use super::rules::Finding;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Layer assignment for every first-party module. Lower layers may not
+/// depend on higher ones. `analysis` and `runtime` are leaves by
+/// design (nothing in the simulator may depend on the linter or the
+/// runtime shim); `lib` is pure re-export glue.
+pub const LAYERS: &[(&str, u8)] = &[
+    ("util", 0),
+    ("analysis", 1),
+    ("config", 1),
+    ("data", 1),
+    ("model", 1),
+    ("net", 1),
+    ("delay", 2),
+    ("runtime", 2),
+    ("opt", 3),
+    ("sim", 4),
+    ("coordinator", 5),
+    ("service", 5),
+    ("bench", 6),
+    ("lib", 6),
+    ("main", 6),
+];
+
+/// The allowed-edge table: `(module, modules it may reference)`.
+/// Every entry is strictly layer-decreasing — see
+/// `contract_is_strictly_layer_decreasing`.
+pub const ALLOWED: &[(&str, &[&str])] = &[
+    ("util", &[]),
+    ("analysis", &["util"]),
+    ("config", &["util"]),
+    ("data", &["util"]),
+    ("model", &["util"]),
+    ("net", &["util"]),
+    ("delay", &["config", "model", "net", "util"]),
+    ("runtime", &["model", "util"]),
+    ("opt", &["config", "delay", "model", "net", "util"]),
+    ("sim", &["config", "delay", "model", "net", "opt", "util"]),
+    ("coordinator", &["data", "model", "runtime", "util"]),
+    ("service", &["config", "delay", "model", "net", "opt", "sim", "util"]),
+    ("bench", &["analysis", "delay", "opt", "service", "sim", "util"]),
+    ("lib", &[]),
+    (
+        "main",
+        &[
+            "analysis", "bench", "config", "coordinator", "data", "delay", "model", "net", "opt",
+            "runtime", "service", "sim", "util",
+        ],
+    ),
+];
+
+/// Layer of `module`, or `u8::MAX` when unknown to the contract.
+pub fn layer_of(module: &str) -> u8 {
+    LAYERS
+        .iter()
+        .find(|(m, _)| *m == module)
+        .map(|(_, l)| *l)
+        .unwrap_or(u8::MAX)
+}
+
+fn allowed_deps(module: &str) -> &'static [&'static str] {
+    ALLOWED
+        .iter()
+        .find(|(m, _)| *m == module)
+        .map(|(_, d)| *d)
+        .unwrap_or(&[])
+}
+
+/// FNV-1a 64 over the canonical contract dump, so ARCH.json carries a
+/// fingerprint that changes iff the layer/allowed tables change.
+pub fn layer_fingerprint() -> String {
+    let mut dump = String::new();
+    for (m, l) in LAYERS {
+        dump.push_str(m);
+        dump.push('=');
+        dump.push_str(&l.to_string());
+        dump.push(':');
+        dump.push_str(&allowed_deps(m).join(","));
+        dump.push(';');
+    }
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in dump.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+/// One module as seen in the scanned tree.
+#[derive(Clone, Debug)]
+pub struct ModuleInfo {
+    pub name: String,
+    pub layer: u8,
+    pub files: usize,
+}
+
+/// One aggregated dependency edge (`from` references `to` in non-test
+/// code). `file`/`line` anchor the first reference seen.
+#[derive(Clone, Debug)]
+pub struct EdgeInfo {
+    pub from: String,
+    pub to: String,
+    pub refs: usize,
+    pub allowed: bool,
+    pub file: String,
+    pub line: u32,
+}
+
+/// The architecture report: graph + contract verdicts. Serialized to
+/// `ARCH.json` (schema `sfllm-arch-v1`) and graphviz.
+#[derive(Clone, Debug)]
+pub struct ArchReport {
+    pub modules: Vec<ModuleInfo>,
+    pub edges: Vec<EdgeInfo>,
+    pub fingerprint: String,
+    pub findings: Vec<Finding>,
+}
+
+/// Builds the module graph from parsed `rust/src` files and checks the
+/// contract. Files outside `rust/src/` are ignored (tests, benches,
+/// and examples may cross layers freely).
+pub fn build(files: &[ParsedFile]) -> ArchReport {
+    let mut mod_files: BTreeMap<&str, usize> = BTreeMap::new();
+    let mut edges: BTreeMap<(String, String), EdgeInfo> = BTreeMap::new();
+    for f in files {
+        if !f.rel.starts_with("rust/src/") {
+            continue;
+        }
+        *mod_files.entry(f.module.as_str()).or_insert(0) += 1;
+        for (to, line) in &f.crate_refs {
+            if *to == f.module {
+                continue;
+            }
+            let key = (f.module.clone(), to.clone());
+            let e = edges.entry(key).or_insert_with(|| EdgeInfo {
+                from: f.module.clone(),
+                to: to.clone(),
+                refs: 0,
+                allowed: allowed_deps(&f.module).contains(&to.as_str()),
+                file: f.rel.clone(),
+                line: *line,
+            });
+            e.refs += 1;
+            if (f.rel.as_str(), *line) < (e.file.as_str(), e.line) {
+                e.file = f.rel.clone();
+                e.line = *line;
+            }
+        }
+    }
+
+    let mut findings = Vec::new();
+    for e in edges.values() {
+        if e.allowed {
+            continue;
+        }
+        let (lf, lt) = (layer_of(&e.from), layer_of(&e.to));
+        let allowed = allowed_deps(&e.from);
+        let allowed_txt = if allowed.is_empty() { "none".to_string() } else { allowed.join(", ") };
+        findings.push(Finding {
+            rule: "G002",
+            file: e.file.clone(),
+            line: e.line,
+            message: format!(
+                "layering inversion: module `{}` (layer {}) may not depend on `{}` (layer {}); allowed deps: {}",
+                e.from,
+                lf,
+                e.to,
+                if lt == u8::MAX { "?".to_string() } else { lt.to_string() },
+                allowed_txt
+            ),
+            snippet: format!("{} -> {}", e.from, e.to),
+        });
+    }
+
+    findings.extend(cycle_findings(&edges));
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+
+    let mut modules: Vec<ModuleInfo> = mod_files
+        .iter()
+        .map(|(name, files)| ModuleInfo {
+            name: name.to_string(),
+            layer: layer_of(name),
+            files: *files,
+        })
+        .collect();
+    modules.sort_by(|a, b| (a.layer, a.name.as_str()).cmp(&(b.layer, b.name.as_str())));
+
+    let edges: Vec<EdgeInfo> = edges.into_values().collect();
+    ArchReport { modules, edges, fingerprint: layer_fingerprint(), findings }
+}
+
+/// One G001 finding per strongly connected component of size > 1,
+/// anchored at the smallest (file, line) among the component's edges.
+fn cycle_findings(edges: &BTreeMap<(String, String), EdgeInfo>) -> Vec<Finding> {
+    let nodes: BTreeSet<&str> = edges
+        .keys()
+        .flat_map(|(a, b)| [a.as_str(), b.as_str()])
+        .collect();
+    let nodes: Vec<&str> = nodes.into_iter().collect();
+    let idx: BTreeMap<&str, usize> = nodes.iter().enumerate().map(|(i, n)| (*n, i)).collect();
+    let n = nodes.len();
+    // tiny graph: transitive closure by iterated relaxation
+    let mut reach = vec![vec![false; n]; n];
+    for (a, b) in edges.keys() {
+        reach[idx[a.as_str()]][idx[b.as_str()]] = true;
+    }
+    loop {
+        let mut changed = false;
+        for i in 0..n {
+            for j in 0..n {
+                if !reach[i][j] {
+                    continue;
+                }
+                for k in 0..n {
+                    if reach[j][k] && !reach[i][k] {
+                        reach[i][k] = true;
+                        changed = true;
+                    }
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    let mut seen = vec![false; n];
+    let mut out = Vec::new();
+    for i in 0..n {
+        if seen[i] {
+            continue;
+        }
+        let mut comp = vec![i];
+        for j in (i + 1)..n {
+            if reach[i][j] && reach[j][i] {
+                comp.push(j);
+                seen[j] = true;
+            }
+        }
+        if comp.len() < 2 {
+            continue;
+        }
+        let names: Vec<&str> = comp.iter().map(|&c| nodes[c]).collect();
+        let member = |m: &str| names.contains(&m);
+        let mut anchor: Option<(&str, u32)> = None;
+        for e in edges.values() {
+            if member(&e.from) && member(&e.to) {
+                let cand = (e.file.as_str(), e.line);
+                if anchor.is_none() || cand < anchor.unwrap() {
+                    anchor = Some(cand);
+                }
+            }
+        }
+        let (file, line) = anchor.unwrap_or(("", 0));
+        out.push(Finding {
+            rule: "G001",
+            file: file.to_string(),
+            line,
+            message: format!("module dependency cycle: {}", names.join(" -> ")),
+            snippet: names.join(" <-> "),
+        });
+    }
+    out
+}
+
+fn esc(s: &str) -> String {
+    super::json_escape(s)
+}
+
+impl ArchReport {
+    /// Count of findings with the given rule id.
+    pub fn count(&self, rule: &str) -> usize {
+        self.findings.iter().filter(|f| f.rule == rule).count()
+    }
+
+    /// Byte-stable JSON: fixed key order, sorted collections, no
+    /// floats, no timestamps. Two runs over the same tree must produce
+    /// identical bytes (asserted in `rust/tests/lint_self.rs` and CI).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n  \"schema\": \"sfllm-arch-v1\",\n");
+        s.push_str(&format!("  \"fingerprint\": \"{}\",\n", esc(&self.fingerprint)));
+        s.push_str(&format!("  \"g001\": {},\n", self.count("G001")));
+        s.push_str(&format!("  \"g002\": {},\n", self.count("G002")));
+        s.push_str("  \"modules\": [\n");
+        for (i, m) in self.modules.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"layer\": {}, \"files\": {}}}{}\n",
+                esc(&m.name),
+                m.layer,
+                m.files,
+                if i + 1 < self.modules.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n  \"edges\": [\n");
+        for (i, e) in self.edges.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"from\": \"{}\", \"to\": \"{}\", \"refs\": {}, \"allowed\": {}, \"file\": \"{}\", \"line\": {}}}{}\n",
+                esc(&e.from),
+                esc(&e.to),
+                e.refs,
+                e.allowed,
+                esc(&e.file),
+                e.line,
+                if i + 1 < self.edges.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Graphviz dot: one rank per layer, disallowed edges red/bold.
+    pub fn to_dot(&self) -> String {
+        let mut s = String::new();
+        s.push_str("digraph arch {\n  rankdir=BT;\n  node [shape=box, fontname=\"monospace\"];\n");
+        let mut by_layer: BTreeMap<u8, Vec<&str>> = BTreeMap::new();
+        for m in &self.modules {
+            by_layer.entry(m.layer).or_default().push(&m.name);
+        }
+        for (layer, mods) in &by_layer {
+            s.push_str(&format!("  {{ rank=same; /* layer {layer} */"));
+            for m in mods {
+                s.push_str(&format!(" \"{}\";", esc(m)));
+            }
+            s.push_str(" }\n");
+        }
+        for e in &self.edges {
+            if e.allowed {
+                s.push_str(&format!("  \"{}\" -> \"{}\";\n", esc(&e.from), esc(&e.to)));
+            } else {
+                s.push_str(&format!(
+                    "  \"{}\" -> \"{}\" [color=red, penwidth=2.0, label=\"G002\"];\n",
+                    esc(&e.from),
+                    esc(&e.to)
+                ));
+            }
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::parse::parse_file;
+
+    #[test]
+    fn contract_tables_cover_the_same_modules() {
+        let layered: Vec<&str> = LAYERS.iter().map(|(m, _)| *m).collect();
+        let allowed: Vec<&str> = ALLOWED.iter().map(|(m, _)| *m).collect();
+        assert_eq!(layered, allowed);
+    }
+
+    #[test]
+    fn contract_is_strictly_layer_decreasing() {
+        for (m, deps) in ALLOWED {
+            let lm = layer_of(m);
+            assert!(lm != u8::MAX, "module {m} missing from LAYERS");
+            for d in *deps {
+                let ld = layer_of(d);
+                assert!(
+                    ld < lm,
+                    "allowed edge {m} (layer {lm}) -> {d} (layer {ld}) is not strictly decreasing"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fingerprint_is_stable_hex() {
+        let a = layer_fingerprint();
+        let b = layer_fingerprint();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 16);
+        assert!(a.bytes().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn inversion_yields_g002() {
+        let files = vec![
+            parse_file("rust/src/util/bad.rs", "pub fn f() { crate::opt::run(); }"),
+            parse_file("rust/src/opt/ok.rs", "pub fn run() { crate::util::bad::f(); }"),
+        ];
+        let rep = build(&files);
+        assert_eq!(rep.count("G002"), 1, "{:?}", rep.findings);
+        // util -> opt -> util is also a cycle
+        assert_eq!(rep.count("G001"), 1, "{:?}", rep.findings);
+        let g2 = rep.findings.iter().find(|f| f.rule == "G002").unwrap();
+        assert_eq!(g2.snippet, "util -> opt");
+        assert_eq!(g2.file, "rust/src/util/bad.rs");
+    }
+
+    #[test]
+    fn allowed_edges_are_clean_and_json_is_byte_stable() {
+        let files = vec![
+            parse_file("rust/src/opt/a.rs", "pub fn f() { crate::delay::eval(); }"),
+            parse_file("rust/src/delay/b.rs", "pub fn g() -> f64 { crate::net::rate() }"),
+        ];
+        let rep = build(&files);
+        assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+        let rep2 = build(&files);
+        assert_eq!(rep.to_json(), rep2.to_json());
+        assert!(rep.to_json().contains("\"schema\": \"sfllm-arch-v1\""));
+        assert!(rep.to_dot().starts_with("digraph arch {"));
+    }
+
+    #[test]
+    fn test_only_refs_do_not_create_edges() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { crate::service::spin(); }\n}\n";
+        let files = vec![parse_file("rust/src/util/t.rs", src)];
+        let rep = build(&files);
+        assert!(rep.edges.is_empty());
+        assert!(rep.findings.is_empty());
+    }
+}

@@ -345,4 +345,55 @@ mod tests {
         assert!(comments[0].text.contains("lint:allow"));
         assert_eq!(toks.last().unwrap().line, 2);
     }
+
+    #[test]
+    fn raw_identifiers_lex_as_plain_idents() {
+        // `r#type` is an escaped keyword, not a raw string prefix: the
+        // parser must see the same text as an unescaped ident.
+        assert_eq!(texts("let r#type = r#fn(r#match);"), [
+            "let", "type", "=", "fn", "(", "match", ")", ";"
+        ]);
+        let (toks, _) = lex("let r#type = 1;");
+        assert_eq!(toks[1].kind, TokKind::Ident);
+        // ...while `r#"…"#` right next to it is still a raw string
+        assert_eq!(texts(r###"r#type(r#"s"#)"###), ["type", "(", "<rawstr>", ")"]);
+    }
+
+    #[test]
+    fn nested_turbofish_closers_stay_single_puncts() {
+        // `Vec<Vec<u8>>` must yield two separate `>` tokens (no `>>`
+        // shift token), or generic-depth tracking in the parser breaks.
+        assert_eq!(
+            texts("x::<Vec<Vec<u8>>>()"),
+            ["x", "::", "<", "Vec", "<", "Vec", "<", "u8", ">", ">", ">", "(", ")"]
+        );
+        // arrow inside a generic: `>` after `-` is part of `->`
+        assert_eq!(
+            texts("impl<F: Fn(f64) -> f64> S<F> {}"),
+            ["impl", "<", "F", ":", "Fn", "(", "f64", ")", "-", ">", "f64", ">", "S", "<",
+             "F", ">", "{", "}"]
+        );
+    }
+
+    #[test]
+    fn crlf_sources_count_lines_by_newline_only() {
+        let (toks, comments) = lex("let a = 1;\r\n// c\r\nlet b = 2;\r\n");
+        assert_eq!(toks.last().unwrap().line, 3);
+        assert_eq!(comments[0].line, 2);
+        // the skipped '\r' never merges two lines
+        assert_eq!(toks[0].line, 1);
+    }
+
+    #[test]
+    fn shebang_and_inner_attribute_lines_lex_without_damage() {
+        // `#!/usr/bin/env run-cargo-script` style header: `#`, `!`, `/`
+        // puncts and path idents — noise, but line-accurate noise.
+        let (toks, _) = lex("#!/usr/bin/env x\nfn main() {}\n");
+        assert_eq!(toks.iter().find(|t| t.text == "fn").unwrap().line, 2);
+        // inner attributes (`#![allow(dead_code)]`) keep their brackets
+        assert_eq!(
+            texts("#![allow(dead_code)]\nfn f() {}"),
+            ["#", "!", "[", "allow", "(", "dead_code", ")", "]", "fn", "f", "(", ")", "{", "}"]
+        );
+    }
 }

@@ -6,35 +6,64 @@
 //! cross-PR bench gate) rests on three informal disciplines: fixed
 //! reduction orders, seeded counter-based RNG streams, and NaN-safe
 //! total-order comparisons. This module makes those disciplines
-//! CI-failing lint classes instead of code-review folklore: a
-//! dependency-free tokenizer ([`lexer`]) walks `rust/src`,
-//! `rust/benches`, `rust/tests`, and `examples/`, and a rule engine
-//! ([`rules`]) matches the hazard patterns (rule table in
-//! [`rules::RULES`]; rationale per rule in DESIGN.md "PR-7: the
-//! determinism contract").
+//! CI-failing lint classes instead of code-review folklore.
 //!
-//! Entry points: [`lint_source`] for one in-memory file (what the
+//! Since PR-9 the engine is structural, not just lexical: a
+//! dependency-free tokenizer ([`lexer`]) feeds both the per-file rule
+//! engine ([`rules`]) and an item-skeleton parser ([`parse`]) whose
+//! output drives two whole-program passes — the module dependency
+//! graph with its machine-checked layering contract ([`graph`]:
+//! G001/G002, `ARCH.json`) and the name-resolution-lite call graph
+//! behind the interprocedural taint rules ([`callgraph`]: P101/D104).
+//!
+//! Entry points: [`lint_source`] for one in-memory file (lexical rules
+//! only), [`lint_sources`] for a whole in-memory program (what the
 //! fixture self-tests in `rust/tests/lint_self.rs` drive),
-//! [`lint_repo`] for the tree walk, and `sfllm lint [--root <dir>]
-//! [--json <path>]` on the CLI — exit status is nonzero on any
-//! unsuppressed finding, and the JSON report (`sfllm-lint-v1`) is what
-//! the CI `lint` job archives.
+//! [`lint_repo`] for the tree walk, and
+//! `sfllm lint [--root <dir>] [--json <path>] [--arch-json <path>]
+//! [--dot-out <path>] [--allow-unused]` on the CLI — exit status is
+//! nonzero on any unsuppressed finding, and the JSON report
+//! (`sfllm-lint-v2`) plus `ARCH.json` (`sfllm-arch-v1`) are what the
+//! CI `lint` job archives.
 //!
 //! Suppressions are inline: `// lint:allow(<RULE>) <justification>`,
-//! justification mandatory (≥ 10 chars). Unused suppressions are
-//! reported in the JSON (`"used": false`) but do not fail the run.
+//! justification mandatory (≥ 10 chars). A valid suppression that
+//! silences nothing is itself a finding (A002) unless
+//! [`LintOptions::allow_unused`] is set — stale allows rot into
+//! misinformation, so they fail the build by default.
 
+pub mod callgraph;
+pub mod graph;
 pub mod lexer;
+pub mod parse;
 pub mod rules;
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+pub use graph::ArchReport;
 pub use rules::{check_source, rule_ids, Finding, Suppression, RULES};
 
 /// Directories scanned by [`lint_repo`], relative to the repo root.
 pub const WALK_ROOTS: &[&str] = &["rust/src", "rust/benches", "rust/tests", "examples"];
+
+/// One in-memory source file for [`lint_sources`]. `rel` is the
+/// repo-relative path with forward slashes; it drives rule scoping and
+/// module identity.
+#[derive(Clone, Debug)]
+pub struct SourceFile {
+    pub rel: String,
+    pub src: String,
+}
+
+/// Knobs for a lint run.
+#[derive(Clone, Debug, Default)]
+pub struct LintOptions {
+    /// Suppress A002 (unused `lint:allow`) — an escape hatch for
+    /// mid-refactor states where allows are expected to go stale.
+    pub allow_unused: bool,
+}
 
 /// Full-repo lint result.
 #[derive(Clone, Debug)]
@@ -42,12 +71,87 @@ pub struct LintReport {
     pub files_scanned: usize,
     pub findings: Vec<Finding>,
     pub suppressions: Vec<Suppression>,
+    /// Module graph + layering verdicts (also serialized separately as
+    /// `ARCH.json`). Its G001/G002 findings are merged into
+    /// `findings` above (minus any suppressed ones).
+    pub arch: ArchReport,
 }
 
-/// Lints one in-memory source file; `rel` (repo-relative, forward
-/// slashes) drives rule scoping. Alias of [`rules::check_source`].
+/// Lints one in-memory source file with the lexical rules; `rel`
+/// (repo-relative, forward slashes) drives rule scoping. Alias of
+/// [`rules::check_source`]. Program-level rules need the whole tree —
+/// use [`lint_sources`].
 pub fn lint_source(rel: &str, src: &str) -> (Vec<Finding>, Vec<Suppression>) {
     check_source(rel, src)
+}
+
+/// Lints a whole in-memory program: lexical rules per file, then the
+/// structural passes (module graph, call graph) over every
+/// `rust/src/` file, then suppression matching and the A002 sweep.
+pub fn lint_sources(files: &[SourceFile], opts: &LintOptions) -> LintReport {
+    let mut findings = Vec::new();
+    let mut suppressions = Vec::new();
+    let mut parsed = Vec::new();
+    for f in files {
+        let rel = f.rel.replace('\\', "/");
+        let (fs, sups) = check_source(&rel, &f.src);
+        findings.extend(fs);
+        suppressions.extend(sups);
+        if rel.starts_with("rust/src/") {
+            parsed.push(parse::parse_file(&rel, &f.src));
+        }
+    }
+    let arch = graph::build(&parsed);
+    let mut program = arch.findings.clone();
+    program.extend(callgraph::program_findings(&parsed));
+    for f in program {
+        let suppressed = suppressions.iter_mut().any(|s| {
+            let hit = s.file == f.file
+                && s.covers.contains(&f.line)
+                && s.rules.iter().any(|r| r == f.rule);
+            if hit {
+                s.used = true;
+            }
+            hit
+        });
+        if !suppressed {
+            findings.push(f);
+        }
+    }
+    if !opts.allow_unused {
+        for s in &suppressions {
+            // Malformed allows are already A001; only well-formed
+            // ones can be "unused".
+            let malformed = s.rules.is_empty()
+                || s.rules.iter().any(|r| !rule_ids().contains(&r.as_str()))
+                || s.justification.chars().count() < 10;
+            if malformed || s.used {
+                continue;
+            }
+            findings.push(Finding {
+                rule: "A002",
+                file: s.file.clone(),
+                line: s.line,
+                snippet: format!("lint:allow({})", s.rules.join(",")),
+                message: format!(
+                    "suppression for {} silences nothing — delete it or fix the justification",
+                    s.rules.join(",")
+                ),
+            });
+        }
+    }
+    findings.sort_by(|a, b| {
+        a.file
+            .cmp(&b.file)
+            .then(a.line.cmp(&b.line))
+            .then(a.rule.cmp(b.rule))
+    });
+    LintReport {
+        files_scanned: files.len(),
+        findings,
+        suppressions,
+        arch,
+    }
 }
 
 /// Deterministic (sorted) recursive walk, skipping `lint_fixtures`
@@ -72,10 +176,11 @@ fn collect_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
     Ok(())
 }
 
-/// Walks [`WALK_ROOTS`] under `root` and lints every `.rs` file.
-/// Findings are sorted by (file, line, rule); the walk itself is
-/// sorted, so the report is byte-stable across runs and machines.
-pub fn lint_repo(root: &Path) -> Result<LintReport> {
+/// Walks [`WALK_ROOTS`] under `root` and lints every `.rs` file,
+/// lexical and structural rules both. Findings are sorted by
+/// (file, line, rule); the walk itself is sorted, so the report — and
+/// `ARCH.json` — is byte-stable across runs and machines.
+pub fn lint_repo(root: &Path, opts: &LintOptions) -> Result<LintReport> {
     let mut files = Vec::new();
     for r in WALK_ROOTS {
         let base = root.join(r);
@@ -86,8 +191,7 @@ pub fn lint_repo(root: &Path) -> Result<LintReport> {
     if files.is_empty() {
         bail!("no Rust sources under {} (expected {:?})", root.display(), WALK_ROOTS);
     }
-    let mut findings = Vec::new();
-    let mut suppressions = Vec::new();
+    let mut sources = Vec::with_capacity(files.len());
     for path in &files {
         let rel = path
             .strip_prefix(root)
@@ -96,21 +200,9 @@ pub fn lint_repo(root: &Path) -> Result<LintReport> {
             .replace('\\', "/");
         let src = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
-        let (f, s) = check_source(&rel, &src);
-        findings.extend(f);
-        suppressions.extend(s);
+        sources.push(SourceFile { rel, src });
     }
-    findings.sort_by(|a, b| {
-        a.file
-            .cmp(&b.file)
-            .then(a.line.cmp(&b.line))
-            .then(a.rule.cmp(b.rule))
-    });
-    Ok(LintReport {
-        files_scanned: files.len(),
-        findings,
-        suppressions,
-    })
+    Ok(lint_sources(&sources, opts))
 }
 
 /// Locates the repo root from the current directory: works from the
@@ -131,7 +223,7 @@ pub fn detect_root() -> Result<PathBuf> {
     bail!("cannot locate the repo root; run from the repo root or rust/, or pass --root <dir>")
 }
 
-fn json_escape(s: &str) -> String {
+pub(crate) fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     for c in s.chars() {
         match c {
@@ -148,7 +240,7 @@ fn json_escape(s: &str) -> String {
 }
 
 impl LintReport {
-    /// Machine-readable report (schema `sfllm-lint-v1`), the artifact
+    /// Machine-readable report (schema `sfllm-lint-v2`), the artifact
     /// the CI `lint` job uploads and gates on.
     pub fn to_json(&self) -> String {
         let findings: Vec<String> = self
@@ -162,7 +254,7 @@ impl LintReport {
                     json_escape(&f.file),
                     f.line,
                     json_escape(&f.snippet),
-                    json_escape(f.message)
+                    json_escape(&f.message)
                 )
             })
             .collect();
@@ -187,12 +279,14 @@ impl LintReport {
             })
             .collect();
         format!(
-            "{{\n  \"schema\": \"sfllm-lint-v1\",\n  \"files_scanned\": {},\n  \
-             \"finding_count\": {},\n  \"suppression_count\": {},\n  \"findings\": [\n{}\n  ],\n  \
+            "{{\n  \"schema\": \"sfllm-lint-v2\",\n  \"files_scanned\": {},\n  \
+             \"finding_count\": {},\n  \"suppression_count\": {},\n  \
+             \"arch_fingerprint\": \"{}\",\n  \"findings\": [\n{}\n  ],\n  \
              \"suppressions\": [\n{}\n  ]\n}}\n",
             self.files_scanned,
             self.findings.len(),
             self.suppressions.len(),
+            json_escape(&self.arch.fingerprint),
             findings.join(",\n"),
             sups.join(",\n")
         )

@@ -1,0 +1,935 @@
+//! Item-skeleton parser for the `sfllm-lint` structural passes.
+//!
+//! A recursive-descent pass over the [`super::lexer`] token stream that
+//! recovers just enough structure for whole-program analysis: top-level
+//! items (with spans that partition the token stream — the round-trip
+//! tests in `rust/tests/lint_self.rs` assert full coverage with no
+//! overlaps), `use` declarations flattened to leaf paths, `impl`/`trait`
+//! blocks with their type/trait names, and per-function bodies reduced
+//! to call references plus the panic/reduction sites the interprocedural
+//! rules ([`super::callgraph`]) classify. There is deliberately no
+//! expression grammar: a function body is a flat scan for
+//! `ident(…)` / `path::ident(…)` / `.method(…)` shapes, attribute
+//! groups are skipped, and nested `fn` items recurse.
+//!
+//! Keys follow the file layout: `rust/src/opt/bcd.rs` contributes
+//! functions under `opt::bcd::…`, an `impl DelayEvaluator` member in
+//! `rust/src/delay/eval.rs` becomes `delay::eval::DelayEvaluator::new`,
+//! and in-file `mod` blocks extend the prefix. Qualified calls resolve
+//! against these keys by progressively shorter path suffixes (see
+//! [`super::callgraph`]), so `crate::`-absolute, re-exported, and
+//! locally-imported spellings all land on the same function.
+
+use super::lexer::{lex, Tok, TokKind};
+use super::rules::test_mask;
+use std::collections::BTreeSet;
+
+/// Item classes the skeleton parser distinguishes. `Other` is the
+/// failsafe bucket — unrecognized constructs still get a span so item
+/// spans always partition the file.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ItemKind {
+    Use,
+    Mod,
+    Fn,
+    Impl,
+    Struct,
+    Enum,
+    Trait,
+    Const,
+    Static,
+    TypeAlias,
+    MacroDef,
+    MacroCall,
+    Other,
+}
+
+/// One parsed item: token span `[lo, hi)` plus the declared name where
+/// the construct has one (`impl` blocks report the implemented type).
+#[derive(Clone, Debug)]
+pub struct Item {
+    pub kind: ItemKind,
+    pub name: String,
+    pub lo: usize,
+    pub hi: usize,
+    pub line: u32,
+}
+
+/// One call reference inside a function body. `qual` holds the path
+/// segments before the final name (`["crate", "opt", "power"]` for
+/// `crate::opt::power::solve_power(..)`, empty for a bare `helper(..)`),
+/// and `method` marks `.name(..)` receiver calls.
+#[derive(Clone, Debug)]
+pub struct CallSite {
+    pub qual: Vec<String>,
+    pub name: String,
+    pub method: bool,
+    pub line: u32,
+}
+
+/// Site classes the interprocedural rules care about.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SiteKind {
+    Unwrap,
+    Expect,
+    Index,
+    Sum,
+    Fold,
+}
+
+/// One panic/reduction candidate site inside a function body.
+#[derive(Clone, Debug)]
+pub struct Site {
+    pub kind: SiteKind,
+    pub line: u32,
+    pub snippet: String,
+}
+
+/// One function with everything the call graph needs.
+#[derive(Clone, Debug)]
+pub struct FnInfo {
+    /// Fully-qualified key, e.g. `opt::bcd::run` or
+    /// `delay::eval::DelayEvaluator::new`.
+    pub key: String,
+    /// Module path of the enclosing scope (no type name), e.g. `opt::bcd`.
+    pub mod_path: String,
+    pub name: String,
+    /// Top-level module (`opt`, `util`, `bench`, `main`, …).
+    pub module: String,
+    pub file: String,
+    pub line: u32,
+    pub is_pub: bool,
+    pub is_test: bool,
+    /// Declared inside an `impl` or `trait` block.
+    pub is_method: bool,
+    pub impl_type: String,
+    pub impl_trait: String,
+    pub has_spawn: bool,
+    pub calls: Vec<CallSite>,
+    pub sites: Vec<Site>,
+}
+
+/// One flattened `use` leaf: `use crate::opt::{bcd, power as pw};`
+/// yields two entries with aliases `bcd` and `pw`. Glob leaves get the
+/// alias `*` (and are ignored by resolution — a documented
+/// approximation).
+#[derive(Clone, Debug)]
+pub struct UseDecl {
+    pub path: Vec<String>,
+    pub alias: String,
+    pub line: u32,
+}
+
+/// Everything the structural passes need from one source file.
+#[derive(Clone, Debug)]
+pub struct ParsedFile {
+    pub rel: String,
+    /// Top-level module this file belongs to (`opt` for
+    /// `rust/src/opt/bcd.rs`, `bench` for `rust/src/bench.rs`).
+    pub module: String,
+    /// Module path of the file scope (`opt::bcd`; `sim` for
+    /// `rust/src/sim/mod.rs`).
+    pub mod_path: String,
+    pub items: Vec<Item>,
+    pub fns: Vec<FnInfo>,
+    pub uses: Vec<UseDecl>,
+    /// Non-test `crate::X` / `sfllm::X` references: `(target module,
+    /// line)` — the raw material of the module dependency graph.
+    pub crate_refs: Vec<(String, u32)>,
+    /// Every identifier in non-test code (drives the method-resolution
+    /// "type mentioned in this file" heuristic).
+    pub idents: BTreeSet<String>,
+    /// Token count, for the round-trip span tests.
+    pub token_count: usize,
+}
+
+/// Words that can precede `(` without being a call.
+const KEYWORDS: &[&str] = &[
+    "as", "async", "await", "break", "const", "continue", "crate", "dyn", "else", "enum",
+    "extern", "false", "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod", "move",
+    "mut", "pub", "ref", "return", "static", "struct", "super", "trait", "true", "type",
+    "unsafe", "use", "where", "while", "Self", "self",
+];
+
+fn txt(toks: &[Tok], i: usize) -> &str {
+    toks.get(i).map(|t| t.text.as_str()).unwrap_or("")
+}
+
+fn line_at(toks: &[Tok], i: usize) -> u32 {
+    toks.get(i).map(|t| t.line).unwrap_or(0)
+}
+
+/// Index just past the delimiter group opening at `open_idx`
+/// (`toks[open_idx]` must be `open`). Saturates at `hi`.
+fn skip_balanced(toks: &[Tok], open_idx: usize, hi: usize, open: &str, close: &str) -> usize {
+    let mut depth = 0i64;
+    let mut i = open_idx;
+    while i < hi {
+        let t = txt(toks, i);
+        if t == open {
+            depth += 1;
+        } else if t == close {
+            depth -= 1;
+            if depth == 0 {
+                return i + 1;
+            }
+        }
+        i += 1;
+    }
+    hi
+}
+
+/// Index just past a balanced `<…>` starting at `open_idx` (which must
+/// be `<`). A `>` directly preceded by `-` or `=` is an arrow, not a
+/// closer. Saturates at `hi`.
+fn skip_angles(toks: &[Tok], open_idx: usize, hi: usize) -> usize {
+    let mut depth = 0i64;
+    let mut i = open_idx;
+    while i < hi {
+        let t = txt(toks, i);
+        if t == "<" {
+            depth += 1;
+        } else if t == ">" && i > 0 && txt(toks, i - 1) != "-" && txt(toks, i - 1) != "=" {
+            depth -= 1;
+            if depth == 0 {
+                return i + 1;
+            }
+        }
+        i += 1;
+    }
+    hi
+}
+
+/// Index just past the `;` ending the statement that starts at `i`,
+/// tracking `{}`/`()`/`[]` depth so initializer blocks don't end it
+/// early. Saturates at `hi`.
+fn scan_past_semi(toks: &[Tok], i: usize, hi: usize) -> usize {
+    let mut depth = 0i64;
+    let mut j = i;
+    while j < hi {
+        match txt(toks, j) {
+            "{" | "(" | "[" => depth += 1,
+            "}" | ")" | "]" => depth -= 1,
+            ";" if depth <= 0 => return j + 1,
+            _ => {}
+        }
+        j += 1;
+    }
+    hi
+}
+
+/// First index in `[i, hi)` whose token text is in `whats`, or `hi`.
+fn find_first(toks: &[Tok], i: usize, hi: usize, whats: &[&str]) -> usize {
+    let mut j = i;
+    while j < hi {
+        if whats.contains(&txt(toks, j)) {
+            return j;
+        }
+        j += 1;
+    }
+    hi
+}
+
+/// Splits `[lo, hi)` into items. Spans are contiguous and cover the
+/// whole range: every token index lands in exactly one item.
+pub fn parse_items(toks: &[Tok], lo: usize, hi: usize) -> Vec<Item> {
+    let mut items = Vec::new();
+    let mut i = lo;
+    while i < hi {
+        let start = i;
+        // leading outer/inner attributes: #[…] and #![…]
+        while txt(toks, i) == "#" {
+            let mut j = i + 1;
+            if txt(toks, j) == "!" {
+                j += 1;
+            }
+            if txt(toks, j) == "[" {
+                i = skip_balanced(toks, j, hi, "[", "]");
+            } else {
+                break; // stray '#' (shebang debris) — Other below
+            }
+        }
+        if i >= hi {
+            items.push(Item {
+                kind: ItemKind::Other,
+                name: String::new(),
+                lo: start,
+                hi,
+                line: line_at(toks, start),
+            });
+            break;
+        }
+        // visibility
+        let mut j = i;
+        if txt(toks, j) == "pub" {
+            j += 1;
+            if txt(toks, j) == "(" {
+                j = skip_balanced(toks, j, hi, "(", ")");
+            }
+        }
+        // fn modifiers
+        loop {
+            match txt(toks, j) {
+                "unsafe" | "async" | "default" => j += 1,
+                "const" if txt(toks, j + 1) == "fn" => j += 1,
+                "extern"
+                    if toks.get(j + 1).is_some_and(|t| t.kind == TokKind::Str)
+                        && txt(toks, j + 2) == "fn" =>
+                {
+                    j += 2
+                }
+                _ => break,
+            }
+        }
+        let line = line_at(toks, start);
+        let (kind, name, end) = match txt(toks, j) {
+            "use" => (ItemKind::Use, String::new(), scan_past_semi(toks, j, hi)),
+            "mod" => {
+                let name = txt(toks, j + 1).to_string();
+                let p = find_first(toks, j + 1, hi, &["{", ";"]);
+                let end = if txt(toks, p) == "{" {
+                    skip_balanced(toks, p, hi, "{", "}")
+                } else {
+                    (p + 1).min(hi)
+                };
+                (ItemKind::Mod, name, end)
+            }
+            "fn" => {
+                let name = txt(toks, j + 1).to_string();
+                let p = find_first(toks, j + 1, hi, &["{", ";"]);
+                let end = if txt(toks, p) == "{" {
+                    skip_balanced(toks, p, hi, "{", "}")
+                } else {
+                    (p + 1).min(hi)
+                };
+                (ItemKind::Fn, name, end)
+            }
+            "struct" | "enum" | "union" => {
+                let k = if txt(toks, j) == "enum" { ItemKind::Enum } else { ItemKind::Struct };
+                let name = txt(toks, j + 1).to_string();
+                let p = find_first(toks, j + 1, hi, &["{", ";"]);
+                let end = if txt(toks, p) == "{" {
+                    skip_balanced(toks, p, hi, "{", "}")
+                } else {
+                    (p + 1).min(hi)
+                };
+                (k, name, end)
+            }
+            "trait" => {
+                let name = txt(toks, j + 1).to_string();
+                let p = find_first(toks, j + 1, hi, &["{", ";"]);
+                let end = if txt(toks, p) == "{" {
+                    skip_balanced(toks, p, hi, "{", "}")
+                } else {
+                    (p + 1).min(hi)
+                };
+                (ItemKind::Trait, name, end)
+            }
+            "impl" => {
+                let p = find_first(toks, j + 1, hi, &["{", ";"]);
+                let end = if txt(toks, p) == "{" {
+                    skip_balanced(toks, p, hi, "{", "}")
+                } else {
+                    (p + 1).min(hi)
+                };
+                let (ty, _) = impl_header(toks, j, p);
+                (ItemKind::Impl, ty, end)
+            }
+            "type" => (ItemKind::TypeAlias, txt(toks, j + 1).to_string(),
+                scan_past_semi(toks, j, hi)),
+            "static" => (ItemKind::Static, String::new(), scan_past_semi(toks, j, hi)),
+            "const" => (ItemKind::Const, String::new(), scan_past_semi(toks, j, hi)),
+            "macro_rules" => {
+                let name = txt(toks, j + 2).to_string();
+                let p = find_first(toks, j + 2, hi, &["{", "(", "["]);
+                let end = match txt(toks, p) {
+                    "{" => skip_balanced(toks, p, hi, "{", "}"),
+                    "(" => scan_past_semi(toks, skip_balanced(toks, p, hi, "(", ")") - 1, hi),
+                    "[" => scan_past_semi(toks, skip_balanced(toks, p, hi, "[", "]") - 1, hi),
+                    _ => (p + 1).min(hi),
+                };
+                (ItemKind::MacroDef, name, end)
+            }
+            _ if toks.get(j).is_some_and(|t| t.kind == TokKind::Ident)
+                && txt(toks, j + 1) == "!" =>
+            {
+                // item-level macro invocation, e.g. `thread_local! { … }`
+                let name = txt(toks, j).to_string();
+                let p = find_first(toks, j + 1, hi, &["{", "(", "["]);
+                let end = match txt(toks, p) {
+                    "{" => skip_balanced(toks, p, hi, "{", "}"),
+                    "(" => scan_past_semi(toks, skip_balanced(toks, p, hi, "(", ")") - 1, hi),
+                    "[" => scan_past_semi(toks, skip_balanced(toks, p, hi, "[", "]") - 1, hi),
+                    _ => (p + 1).min(hi),
+                };
+                (ItemKind::MacroCall, name, end)
+            }
+            _ => {
+                // failsafe: swallow to the next `;` or balanced block
+                let p = find_first(toks, j, hi, &["{", ";"]);
+                let end = if txt(toks, p) == "{" {
+                    skip_balanced(toks, p, hi, "{", "}")
+                } else {
+                    (p + 1).min(hi)
+                };
+                (ItemKind::Other, String::new(), end)
+            }
+        };
+        let end = end.clamp(start + 1, hi);
+        items.push(Item { kind, name, lo: start, hi: end, line });
+        i = end;
+    }
+    items
+}
+
+/// Extracts `(type, trait)` names from an `impl` header spanning
+/// `[impl_idx, body_open)`: the last generics-depth-0 identifier on
+/// each side of `for` (empty trait when inherent).
+fn impl_header(toks: &[Tok], impl_idx: usize, body_open: usize) -> (String, String) {
+    let mut i = impl_idx + 1;
+    if txt(toks, i) == "<" {
+        i = skip_angles(toks, i, body_open);
+    }
+    let mut parts: Vec<Vec<&str>> = vec![Vec::new()];
+    let mut depth = 0i64;
+    while i < body_open {
+        let t = txt(toks, i);
+        match t {
+            "<" => depth += 1,
+            ">" if txt(toks, i - 1) != "-" && txt(toks, i - 1) != "=" => depth -= 1,
+            "where" if depth <= 0 => break,
+            "for" if depth <= 0 => parts.push(Vec::new()),
+            _ => {
+                if depth <= 0 && toks.get(i).is_some_and(|x| x.kind == TokKind::Ident) {
+                    if let Some(last) = parts.last_mut() {
+                        last.push(t);
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    let last_of = |v: &Vec<&str>| v.last().map(|s| s.to_string()).unwrap_or_default();
+    if parts.len() >= 2 {
+        // `impl Trait for Type` — trait part first, type part second
+        (last_of(&parts[1]), last_of(&parts[0]))
+    } else {
+        (last_of(&parts[0]), String::new())
+    }
+}
+
+/// `rust/src/opt/bcd.rs` → `opt::bcd`; `rust/src/sim/mod.rs` → `sim`;
+/// `rust/src/bench.rs` → `bench`.
+fn mod_path_of(rel: &str) -> String {
+    let p = rel.strip_prefix("rust/src/").unwrap_or(rel);
+    let p = p.strip_suffix(".rs").unwrap_or(p);
+    let mut segs: Vec<&str> = p.split('/').collect();
+    if segs.len() > 1 && segs.last() == Some(&"mod") {
+        segs.pop();
+    }
+    segs.join("::")
+}
+
+struct FileCtx<'a> {
+    toks: &'a [Tok],
+    mask: &'a [bool],
+    rel: &'a str,
+    module: String,
+}
+
+/// Parses one source file into the structures the graph passes consume.
+/// `rel` must be the repo-relative path with forward slashes.
+pub fn parse_file(rel: &str, src: &str) -> ParsedFile {
+    let (toks, _comments) = lex(src);
+    let mask = test_mask(&toks);
+    let mod_path = mod_path_of(rel);
+    let module = mod_path.split("::").next().unwrap_or("").to_string();
+
+    let mut idents = BTreeSet::new();
+    let mut crate_refs = Vec::new();
+    for i in 0..toks.len() {
+        if mask[i] || toks[i].kind != TokKind::Ident {
+            continue;
+        }
+        idents.insert(toks[i].text.clone());
+        if (toks[i].text == "crate" || toks[i].text == "sfllm")
+            && txt(&toks, i + 1) == "::"
+            && toks.get(i + 2).is_some_and(|t| t.kind == TokKind::Ident)
+        {
+            crate_refs.push((toks[i + 2].text.clone(), toks[i].line));
+        }
+    }
+
+    let items = parse_items(&toks, 0, toks.len());
+    let ctx = FileCtx { toks: &toks, mask: &mask, rel, module: module.clone() };
+    let mut fns = Vec::new();
+    let mut uses = Vec::new();
+    walk_items(&ctx, &items, &mod_path, "", "", &mut fns, &mut uses);
+
+    ParsedFile {
+        rel: rel.to_string(),
+        module,
+        mod_path,
+        items,
+        fns,
+        uses,
+        crate_refs,
+        idents,
+        token_count: toks.len(),
+    }
+}
+
+fn walk_items(
+    ctx: &FileCtx,
+    items: &[Item],
+    mod_path: &str,
+    impl_type: &str,
+    impl_trait: &str,
+    fns: &mut Vec<FnInfo>,
+    uses: &mut Vec<UseDecl>,
+) {
+    for item in items {
+        match item.kind {
+            ItemKind::Fn => read_fn(ctx, item.lo, item.hi, mod_path, impl_type, impl_trait, fns),
+            ItemKind::Use => {
+                if !ctx.mask.get(item.lo).copied().unwrap_or(false) {
+                    parse_use(ctx.toks, item.lo, item.hi, uses);
+                }
+            }
+            ItemKind::Mod => {
+                if let Some(open) = body_open(ctx.toks, item.lo, item.hi) {
+                    let inner = parse_items(ctx.toks, open + 1, item.hi.saturating_sub(1));
+                    let sub = if mod_path.is_empty() {
+                        item.name.clone()
+                    } else {
+                        format!("{mod_path}::{}", item.name)
+                    };
+                    walk_items(ctx, &inner, &sub, "", "", fns, uses);
+                }
+            }
+            ItemKind::Impl => {
+                if let Some(open) = body_open(ctx.toks, item.lo, item.hi) {
+                    let impl_idx = find_first(ctx.toks, item.lo, open, &["impl"]);
+                    let (ty, tr) = impl_header(ctx.toks, impl_idx, open);
+                    let inner = parse_items(ctx.toks, open + 1, item.hi.saturating_sub(1));
+                    walk_items(ctx, &inner, mod_path, &ty, &tr, fns, uses);
+                }
+            }
+            ItemKind::Trait => {
+                if let Some(open) = body_open(ctx.toks, item.lo, item.hi) {
+                    let inner = parse_items(ctx.toks, open + 1, item.hi.saturating_sub(1));
+                    walk_items(ctx, &inner, mod_path, "", &item.name, fns, uses);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// First `{` in the item span (the body opener for mod/impl/trait/fn —
+/// attributes and headers cannot contain a brace token).
+fn body_open(toks: &[Tok], lo: usize, hi: usize) -> Option<usize> {
+    let p = find_first(toks, lo, hi, &["{"]);
+    (p < hi).then_some(p)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn read_fn(
+    ctx: &FileCtx,
+    lo: usize,
+    hi: usize,
+    mod_path: &str,
+    impl_type: &str,
+    impl_trait: &str,
+    fns: &mut Vec<FnInfo>,
+) {
+    let toks = ctx.toks;
+    let fn_idx = find_first(toks, lo, hi, &["fn"]);
+    if fn_idx >= hi {
+        return;
+    }
+    let name = txt(toks, fn_idx + 1).to_string();
+    let mut is_pub = false;
+    let mut k = lo;
+    while k < fn_idx {
+        if txt(toks, k) == "#" && txt(toks, k + 1) == "[" {
+            k = skip_balanced(toks, k + 1, fn_idx, "[", "]");
+            continue;
+        }
+        if txt(toks, k) == "pub" {
+            is_pub = true;
+        }
+        k += 1;
+    }
+    let prefix = if impl_type.is_empty() && impl_trait.is_empty() {
+        mod_path.to_string()
+    } else if impl_type.is_empty() {
+        format!("{mod_path}::{impl_trait}")
+    } else {
+        format!("{mod_path}::{impl_type}")
+    };
+    let key = if prefix.is_empty() { name.clone() } else { format!("{prefix}::{name}") };
+    let mut info = FnInfo {
+        key,
+        mod_path: mod_path.to_string(),
+        name,
+        module: ctx.module.clone(),
+        file: ctx.rel.to_string(),
+        line: line_at(toks, fn_idx),
+        is_pub,
+        is_test: ctx.mask.get(fn_idx).copied().unwrap_or(false),
+        is_method: !impl_type.is_empty() || !impl_trait.is_empty(),
+        impl_type: impl_type.to_string(),
+        impl_trait: impl_trait.to_string(),
+        has_spawn: false,
+        calls: Vec::new(),
+        sites: Vec::new(),
+    };
+    let sig_end = find_first(toks, fn_idx + 1, hi, &["{", ";"]);
+    if txt(toks, sig_end) == "{" {
+        let body_hi = skip_balanced(toks, sig_end, hi, "{", "}").saturating_sub(1);
+        scan_body(ctx, sig_end + 1, body_hi, &mut info, fns);
+    }
+    fns.push(info);
+}
+
+/// Flat body scan: call references, panic/reduction sites, `spawn`
+/// markers. Attribute groups are skipped; nested `fn` items recurse as
+/// their own [`FnInfo`] under the enclosing function's key.
+fn scan_body(ctx: &FileCtx, lo: usize, hi: usize, info: &mut FnInfo, fns: &mut Vec<FnInfo>) {
+    let toks = ctx.toks;
+    let mut i = lo;
+    while i < hi {
+        let t = &toks[i];
+        if t.text == "#" {
+            let mut j = i + 1;
+            if txt(toks, j) == "!" {
+                j += 1;
+            }
+            if txt(toks, j) == "[" {
+                i = skip_balanced(toks, j, hi, "[", "]");
+                continue;
+            }
+        }
+        if t.text == "fn" && toks.get(i + 1).is_some_and(|x| x.kind == TokKind::Ident) {
+            let p = find_first(toks, i + 1, hi, &["{", ";"]);
+            let end = if txt(toks, p) == "{" {
+                skip_balanced(toks, p, hi, "{", "}")
+            } else {
+                (p + 1).min(hi)
+            };
+            read_fn(ctx, i, end, &info.key, "", "", fns);
+            i = end;
+            continue;
+        }
+        if t.kind == TokKind::Punct && t.text == "[" && i > lo {
+            let p = &toks[i - 1];
+            let prev_ok = p.kind == TokKind::Ident || p.text == ")" || p.text == "]";
+            if prev_ok
+                && toks.get(i + 1).is_some_and(|x| x.kind == TokKind::Num)
+                && txt(toks, i + 2) == "]"
+            {
+                info.sites.push(Site {
+                    kind: SiteKind::Index,
+                    line: t.line,
+                    snippet: format!("[{}]", toks[i + 1].text),
+                });
+            }
+            i += 1;
+            continue;
+        }
+        if t.kind != TokKind::Ident {
+            i += 1;
+            continue;
+        }
+        if t.text == "spawn" {
+            info.has_spawn = true;
+        }
+        // a call is `ident (` or `ident ::<…> (`, not preceded by `fn`
+        let mut call_paren = None;
+        if txt(toks, i + 1) == "(" {
+            call_paren = Some(i + 1);
+        } else if txt(toks, i + 1) == "::" && txt(toks, i + 2) == "<" {
+            let e = skip_angles(toks, i + 2, hi);
+            if txt(toks, e) == "(" {
+                call_paren = Some(e);
+            }
+        }
+        if call_paren.is_none()
+            || KEYWORDS.contains(&t.text.as_str())
+            || (i > lo && txt(toks, i - 1) == "fn")
+        {
+            i += 1;
+            continue;
+        }
+        let method = i > lo && txt(toks, i - 1) == ".";
+        let mut qual: Vec<String> = Vec::new();
+        if !method {
+            let mut p = i;
+            while p >= 2
+                && txt(toks, p - 1) == "::"
+                && toks.get(p - 2).is_some_and(|x| x.kind == TokKind::Ident)
+            {
+                qual.insert(0, toks[p - 2].text.clone());
+                p -= 2;
+            }
+        }
+        info.calls.push(CallSite { qual, name: t.text.clone(), method, line: t.line });
+        if method {
+            let site = match t.text.as_str() {
+                "unwrap" => Some((SiteKind::Unwrap, ".unwrap()")),
+                "expect" => Some((SiteKind::Expect, ".expect()")),
+                "sum" => Some((SiteKind::Sum, ".sum()")),
+                "fold" => Some((SiteKind::Fold, ".fold()")),
+                _ => None,
+            };
+            if let Some((kind, snip)) = site {
+                info.sites.push(Site { kind, line: t.line, snippet: snip.to_string() });
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Flattens the use-tree of one `use` item into leaf paths.
+fn parse_use(toks: &[Tok], lo: usize, hi: usize, out: &mut Vec<UseDecl>) {
+    let use_idx = find_first(toks, lo, hi, &["use"]);
+    if use_idx >= hi {
+        return;
+    }
+    let line = line_at(toks, use_idx);
+    let mut prefix = Vec::new();
+    let mut i = use_idx + 1;
+    use_tree(toks, &mut i, hi, &mut prefix, line, out);
+}
+
+fn use_tree(
+    toks: &[Tok],
+    i: &mut usize,
+    hi: usize,
+    prefix: &mut Vec<String>,
+    line: u32,
+    out: &mut Vec<UseDecl>,
+) {
+    let depth_at_entry = prefix.len();
+    loop {
+        let t = txt(toks, *i);
+        if *i >= hi || t == ";" || t == "," || t == "}" {
+            break;
+        }
+        if t == "{" {
+            *i += 1;
+            loop {
+                use_tree(toks, i, hi, prefix, line, out);
+                if txt(toks, *i) == "," {
+                    *i += 1;
+                    continue;
+                }
+                break;
+            }
+            if txt(toks, *i) == "}" {
+                *i += 1;
+            }
+            prefix.truncate(depth_at_entry);
+            return;
+        }
+        if t == "*" {
+            out.push(UseDecl { path: prefix.clone(), alias: "*".to_string(), line });
+            *i += 1;
+            prefix.truncate(depth_at_entry);
+            return;
+        }
+        if toks.get(*i).is_some_and(|x| x.kind == TokKind::Ident) {
+            let seg = t.to_string();
+            *i += 1;
+            if txt(toks, *i) == "::" {
+                prefix.push(seg);
+                *i += 1;
+                continue;
+            }
+            // leaf; `as` alias?
+            let mut alias = seg.clone();
+            if txt(toks, *i) == "as" {
+                alias = txt(toks, *i + 1).to_string();
+                *i += 2;
+            }
+            let mut path = prefix.clone();
+            path.push(seg);
+            out.push(UseDecl { path, alias, line });
+            prefix.truncate(depth_at_entry);
+            return;
+        }
+        *i += 1; // unexpected token — skip, keep making progress
+    }
+    prefix.truncate(depth_at_entry);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(src: &str) -> ParsedFile {
+        parse_file("rust/src/opt/fixture.rs", src)
+    }
+
+    #[test]
+    fn item_spans_partition_the_token_stream() {
+        let src = r#"
+//! doc
+use crate::util::rng::Rng;
+
+#[derive(Clone)]
+pub struct S { pub x: f64 }
+
+pub const C: usize = { 1 + 2 };
+
+impl S {
+    pub fn get(&self) -> f64 { self.x }
+}
+
+pub fn free(n: usize) -> usize { n + 1 }
+
+mod inner {
+    pub fn helper() {}
+}
+"#;
+        let pf = parse(src);
+        let mut covered = 0usize;
+        for it in &pf.items {
+            assert_eq!(it.lo, covered, "gap/overlap before item {:?}", it.kind);
+            assert!(it.hi > it.lo);
+            covered = it.hi;
+        }
+        assert_eq!(covered, pf.token_count);
+        let kinds: Vec<ItemKind> = pf.items.iter().map(|i| i.kind).collect();
+        assert_eq!(
+            kinds,
+            [
+                ItemKind::Use,
+                ItemKind::Struct,
+                ItemKind::Const,
+                ItemKind::Impl,
+                ItemKind::Fn,
+                ItemKind::Mod
+            ]
+        );
+    }
+
+    #[test]
+    fn fn_keys_follow_file_and_impl_layout() {
+        let src = r#"
+pub struct Solver;
+impl Solver {
+    pub fn new() -> Self { Solver }
+    fn inner(&self) {}
+}
+impl Default for Solver {
+    fn default() -> Self { Solver::new() }
+}
+pub fn run() { let s = Solver::new(); s.inner(); }
+mod nested { pub fn deep() {} }
+"#;
+        let pf = parse(src);
+        let keys: Vec<&str> = pf.fns.iter().map(|f| f.key.as_str()).collect();
+        assert_eq!(
+            keys,
+            [
+                "opt::fixture::Solver::new",
+                "opt::fixture::Solver::inner",
+                "opt::fixture::Solver::default",
+                "opt::fixture::run",
+                "opt::fixture::nested::deep",
+            ]
+        );
+        let default_fn = &pf.fns[2];
+        assert_eq!(default_fn.impl_type, "Solver");
+        assert_eq!(default_fn.impl_trait, "Default");
+        assert!(default_fn.is_method);
+        let run = &pf.fns[3];
+        assert!(run.is_pub && !run.is_method);
+        // Solver::new() is a qualified call, s.inner() a method call
+        assert!(run
+            .calls
+            .iter()
+            .any(|c| c.name == "new" && c.qual == ["Solver"] && !c.method));
+        assert!(run.calls.iter().any(|c| c.name == "inner" && c.method));
+    }
+
+    #[test]
+    fn sites_and_spawn_are_collected() {
+        let src = r#"
+pub fn work(xs: &[f64]) -> f64 {
+    std::thread::scope(|s| { s.spawn(|| ()); });
+    let a = xs[0];
+    let b: f64 = xs.iter().sum();
+    let c = xs.iter().fold(0.0, |m, x| m + x);
+    let d = xs.first().unwrap();
+    let e = xs.first().expect("nonempty");
+    a + b + c + d + e
+}
+"#;
+        let pf = parse(src);
+        let f = &pf.fns[0];
+        assert!(f.has_spawn);
+        let kinds: Vec<SiteKind> = f.sites.iter().map(|s| s.kind).collect();
+        assert_eq!(
+            kinds,
+            [SiteKind::Index, SiteKind::Sum, SiteKind::Fold, SiteKind::Unwrap, SiteKind::Expect]
+        );
+    }
+
+    #[test]
+    fn nested_turbofish_calls_are_still_calls() {
+        let src = "pub fn f(xs: &[f64]) -> f64 { xs.iter().copied().sum::<f64>() }";
+        let pf = parse(src);
+        assert!(pf.fns[0].sites.iter().any(|s| s.kind == SiteKind::Sum));
+        let src2 = "pub fn g() { let v = make::<Vec<Vec<u8>>>(); drop(v); }";
+        let pf2 = parse_file("rust/src/opt/fixture.rs", src2);
+        assert!(pf2.fns[0].calls.iter().any(|c| c.name == "make"));
+    }
+
+    #[test]
+    fn use_trees_flatten_with_aliases_and_globs() {
+        let src = "use crate::opt::{bcd, power as pw, assignment::*};\nuse super::eval::Cols;\n";
+        let pf = parse(src);
+        let flat: Vec<(String, String)> = pf
+            .uses
+            .iter()
+            .map(|u| (u.path.join("::"), u.alias.clone()))
+            .collect();
+        assert_eq!(
+            flat,
+            [
+                ("crate::opt::bcd".to_string(), "bcd".to_string()),
+                ("crate::opt::power".to_string(), "pw".to_string()),
+                ("crate::opt::assignment".to_string(), "*".to_string()),
+                ("super::eval::Cols".to_string(), "Cols".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn test_masked_fns_and_refs_are_flagged() {
+        let src = r#"
+pub fn live() { crate::util::noop(); }
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() { crate::delay::check(); }
+}
+"#;
+        let pf = parse(src);
+        assert!(!pf.fns.iter().find(|f| f.name == "live").unwrap().is_test);
+        assert!(pf.fns.iter().find(|f| f.name == "t").unwrap().is_test);
+        // the test-only crate::delay ref must not leak into the graph
+        assert_eq!(pf.crate_refs, [("util".to_string(), 2)]);
+    }
+
+    #[test]
+    fn mod_paths_derive_from_rel() {
+        assert_eq!(parse_file("rust/src/sim/mod.rs", "").mod_path, "sim");
+        assert_eq!(parse_file("rust/src/bench.rs", "").mod_path, "bench");
+        assert_eq!(parse_file("rust/src/util/codec.rs", "").mod_path, "util::codec");
+        assert_eq!(parse_file("rust/src/main.rs", "").module, "main");
+    }
+}

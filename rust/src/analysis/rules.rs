@@ -1,27 +1,41 @@
 //! Rule engine for `sfllm-lint`: the determinism / numeric-safety /
 //! panic-surface contract, checked over the token stream.
 //!
-//! Rule catalogue (see DESIGN.md "PR-7: the determinism contract" for
-//! the motivating bug behind each ID):
+//! Rule catalogue v2 (see DESIGN.md "PR-7: the determinism contract"
+//! and "PR-9: the architecture contract" for the motivating bug behind
+//! each ID). Lexical rules match the token stream of one file;
+//! program rules run over the whole parsed tree (see
+//! [`super::graph`] and [`super::callgraph`]) and are attached by
+//! [`super::lint_sources`].
 //!
-//! | ID   | class       | pattern |
-//! |------|-------------|---------|
-//! | D001 | determinism | `HashMap`/`HashSet` in non-test library code |
-//! | D002 | determinism | `Instant::now`/`SystemTime::now` outside `src/bench.rs` |
-//! | D003 | determinism | `thread_rng`/`ThreadRng`/`from_entropy`/`OsRng`/`rand::random` anywhere |
-//! | D004 | determinism | `.sum()`/`.fold()` in a non-test module that spawns threads |
-//! | N001 | numeric     | `partial_cmp(..).unwrap()`/`.expect()` on floats |
-//! | N002 | numeric     | bare `partial_cmp`/`f64::max`/`f64::min` in `opt/`/`delay/`/`sim/` |
-//! | P001 | panic       | `.unwrap()`/`.expect()` in `opt/`/`delay/`/`sim/` |
-//! | P002 | panic       | literal index `x[0]` in `opt/`/`delay/`/`sim/` |
-//! | A001 | hygiene     | `lint:allow` without justification or with unknown rule id |
+//! | ID   | class       | level   | pattern |
+//! |------|-------------|---------|---------|
+//! | D001 | determinism | lexical | `HashMap`/`HashSet` in non-test library code |
+//! | D002 | determinism | lexical | `Instant::now`/`SystemTime::now` outside `src/bench.rs` |
+//! | D003 | determinism | lexical | `thread_rng`/`ThreadRng`/`from_entropy`/`OsRng`/`rand::random` anywhere |
+//! | D005 | determinism | lexical | `env::var`/`env!`/`option_env!` outside `main.rs`, `bench.rs`, `runtime/` |
+//! | D104 | determinism | program | `.sum()`/`.fold()` reachable from a thread-spawn site |
+//! | N001 | numeric     | lexical | `partial_cmp(..).unwrap()`/`.expect()` on floats |
+//! | N002 | numeric     | lexical | bare `partial_cmp`/`f64::max`/`f64::min` in `opt/`/`delay/`/`sim/` |
+//! | P101 | panic       | program | unwrap/expect/literal index reachable from a hot-scope entry |
+//! | G001 | structure   | program | module dependency cycle |
+//! | G002 | structure   | program | architecture layering inversion |
+//! | A001 | hygiene     | lexical | `lint:allow` without justification or with unknown rule id |
+//! | A002 | hygiene     | program | `lint:allow` that silences nothing |
+//!
+//! The lexical hot-scope rules P001/P002 and the spawn-module rule
+//! D004 are retired: P101 and D104 supersede them with whole-program
+//! reachability (their IDs are no longer in the catalogue, so a stale
+//! allow naming them fails as A001).
 //!
 //! Suppression: `// lint:allow(<ID>[,<ID>…]) <justification>` covers
 //! findings on its own line; a comment alone on a line also covers the
 //! next line that carries code. Justification text is mandatory (≥ 10
 //! characters, enforced as A001). Only plain `//` comments can carry a
 //! suppression — doc comments (`///`, `//!`) are ignored, so prose
-//! like this paragraph can name the syntax safely.
+//! like this paragraph can name the syntax safely. Since PR-9 a valid
+//! suppression that silences nothing is itself a finding (A002),
+//! escapable with `--allow-unused` during refactors.
 
 use super::lexer::{lex, Comment, Tok, TokKind};
 
@@ -30,12 +44,15 @@ pub const RULES: &[(&str, &str)] = &[
     ("D001", "order-nondeterministic hash container in library code"),
     ("D002", "wall-clock read outside the bench harness"),
     ("D003", "unseeded / entropy-based RNG"),
-    ("D004", "float reduction in a thread-spawning module"),
+    ("D005", "environment read outside main.rs / bench.rs / runtime/"),
+    ("D104", "iterator reduction reachable from a thread-spawn site"),
     ("N001", "partial_cmp().unwrap() on floats"),
     ("N002", "NaN-unsafe float ordering in scoring/argmin path"),
-    ("P001", "unwrap/expect in solver/simulator hot path"),
-    ("P002", "literal index into slice in solver/simulator hot path"),
+    ("P101", "panic site reachable from a solver/simulator entry point"),
+    ("G001", "module dependency cycle"),
+    ("G002", "architecture layering inversion"),
     ("A001", "lint:allow without justification or with unknown rule id"),
+    ("A002", "lint:allow suppression that silences nothing"),
 ];
 
 /// All rule IDs, in catalogue order.
@@ -59,8 +76,9 @@ pub struct Finding {
     pub line: u32,
     /// The matched token sequence, for the human report.
     pub snippet: String,
-    /// The rule description.
-    pub message: &'static str,
+    /// The rule description; program rules embed the call chain or
+    /// edge that produced the finding.
+    pub message: String,
 }
 
 /// One `lint:allow` suppression comment.
@@ -72,7 +90,7 @@ pub struct Suppression {
     pub justification: String,
     /// Lines this suppression applies to (its own, plus the next code
     /// line when the comment stands alone).
-    covers: Vec<u32>,
+    pub(crate) covers: Vec<u32>,
     /// Whether any finding was actually silenced by it.
     pub used: bool,
 }
@@ -102,8 +120,8 @@ fn classify(rel: &str) -> FileClass {
 
 /// Marks every token inside a `#[cfg(test)]`-gated item or a `#[test]`
 /// function (attribute through matching close brace), so rules scoped
-/// to non-test code can skip them.
-fn test_mask(toks: &[Tok]) -> Vec<bool> {
+/// to non-test code can skip them. Shared with [`super::parse`].
+pub(crate) fn test_mask(toks: &[Tok]) -> Vec<bool> {
     let mut mask = vec![false; toks.len()];
     let mut i = 0usize;
     while i < toks.len() {
@@ -222,9 +240,14 @@ pub fn check_source(rel: &str, src: &str) -> (Vec<Finding>, Vec<Suppression>) {
     let hot = ["rust/src/opt/", "rust/src/delay/", "rust/src/sim/"]
         .iter()
         .any(|d| rel_norm.starts_with(d));
-    let has_spawn = toks
-        .iter()
-        .any(|t| t.kind == TokKind::Ident && t.text == "spawn");
+    // D005 scope: library code minus the sanctioned configuration
+    // surfaces, plus integration tests (deliberately ignoring the
+    // test mask — env-gated tests must carry a justified allow).
+    let env_scoped = (cls == FileClass::Src
+        && !is_bench_mod
+        && rel_norm != "rust/src/main.rs"
+        && !rel_norm.starts_with("rust/src/runtime/"))
+        || cls == FileClass::TestDir;
 
     let mut raw: Vec<(&'static str, u32, String)> = Vec::new();
     for i in 0..toks.len() {
@@ -253,13 +276,16 @@ pub fn check_source(rel: &str, src: &str) -> (Vec<Finding>, Vec<Suppression>) {
                     raw.push(("D003", t.line, "rand::random".to_string()));
                 }
             }
-            if (t.text == "sum" || t.text == "fold")
-                && i > 0
-                && toks[i - 1].text == "."
-                && has_spawn
-                && lib_nontest
-            {
-                raw.push(("D004", t.line, format!(".{}()", t.text)));
+            if env_scoped {
+                if t.text == "env"
+                    && txt(&toks, i + 1) == "::"
+                    && matches!(txt(&toks, i + 2), "var" | "var_os" | "vars")
+                {
+                    raw.push(("D005", t.line, format!("env::{}", txt(&toks, i + 2))));
+                }
+                if (t.text == "env" || t.text == "option_env") && txt(&toks, i + 1) == "!" {
+                    raw.push(("D005", t.line, format!("{}!", t.text)));
+                }
             }
             if t.text == "partial_cmp" && (i == 0 || toks[i - 1].text != "fn") {
                 let mut n001 = false;
@@ -299,27 +325,6 @@ pub fn check_source(rel: &str, src: &str) -> (Vec<Finding>, Vec<Suppression>) {
             {
                 raw.push(("N002", t.line, format!("{}::{}", t.text, txt(&toks, i + 2))));
             }
-            if matches!(t.text.as_str(), "unwrap" | "expect")
-                && i > 0
-                && toks[i - 1].text == "."
-                && txt(&toks, i + 1) == "("
-                && hot
-                && lib_nontest
-            {
-                raw.push(("P001", t.line, format!(".{}()", t.text)));
-            }
-        }
-        if t.kind == TokKind::Punct && t.text == "[" && i > 0 {
-            let p = &toks[i - 1];
-            let prev_ok = p.kind == TokKind::Ident || p.text == ")" || p.text == "]";
-            if prev_ok
-                && toks.get(i + 1).is_some_and(|x| x.kind == TokKind::Num)
-                && txt(&toks, i + 2) == "]"
-                && hot
-                && lib_nontest
-            {
-                raw.push(("P002", t.line, format!("[{}]", toks[i + 1].text)));
-            }
         }
     }
 
@@ -338,7 +343,7 @@ pub fn check_source(rel: &str, src: &str) -> (Vec<Finding>, Vec<Suppression>) {
                 file: rel_norm.clone(),
                 line,
                 snippet,
-                message: rule_message(rule),
+                message: rule_message(rule).to_string(),
             });
         }
     }
@@ -350,7 +355,7 @@ pub fn check_source(rel: &str, src: &str) -> (Vec<Finding>, Vec<Suppression>) {
                 file: rel_norm.clone(),
                 line: s.line,
                 snippet: format!("lint:allow({})", s.rules.join(",")),
-                message: rule_message("A001"),
+                message: rule_message("A001").to_string(),
             });
         }
     }

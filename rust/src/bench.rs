@@ -60,34 +60,7 @@ pub struct BenchOptions {
     pub full: bool,
 }
 
-/// The production [`Clock`](crate::util::clock::Clock): wall time in
-/// seconds since the clock was created. Lives here because `bench.rs`
-/// is the one sanctioned home for `Instant::now` (lint rule D002 and
-/// the clippy `disallowed_methods` mirror both exempt this file);
-/// everything else takes a `&dyn Clock` and never reads ambient time.
-#[derive(Clone, Debug)]
-pub struct WallClock {
-    origin: Instant,
-}
-
-impl WallClock {
-    /// New clock whose epoch is "now".
-    pub fn new() -> Self {
-        WallClock { origin: Instant::now() }
-    }
-}
-
-impl Default for WallClock {
-    fn default() -> Self {
-        WallClock::new()
-    }
-}
-
-impl crate::util::clock::Clock for WallClock {
-    fn now(&self) -> f64 {
-        self.origin.elapsed().as_secs_f64()
-    }
-}
+pub use crate::util::clock::WallClock;
 
 /// One `algorithm2` scaling point: heap engine vs naive reference.
 #[derive(Clone, Debug)]
@@ -159,6 +132,16 @@ pub struct ServicePoint {
     pub overhead: f64,
 }
 
+/// Whole-repo static analysis: one `sfllm-lint` pass (lexing, lexical
+/// rules, item parsing, module graph, call graph) over the working
+/// tree. Tracks the cost of the PR-9 structural engine so rule or
+/// parser additions can't silently blow up CI lint time.
+#[derive(Clone, Debug)]
+pub struct AnalysisPoint {
+    pub files: usize,
+    pub lint_ms: f64,
+}
+
 /// Everything one harness run measured.
 #[derive(Clone, Debug)]
 pub struct BenchReport {
@@ -169,6 +152,7 @@ pub struct BenchReport {
     pub dynamic: Vec<DynPoint>,
     pub population: Vec<PopPoint>,
     pub service: ServicePoint,
+    pub analysis: AnalysisPoint,
     /// `rustc --version` of the toolchain that produced this report
     /// (`"unknown"` when no rustc is on PATH).
     pub rustc: String,
@@ -454,6 +438,24 @@ pub fn run(opts: &BenchOptions) -> Result<BenchReport> {
         overhead: serve_s / sim_s,
     };
 
+    // --- whole-repo static analysis -------------------------------------
+    // the full lint pipeline (lexical + graph + call-graph) over the
+    // working tree; nulls when the tree is not available (e.g. an
+    // installed binary run outside the repo)
+    eprintln!("bench: analysis axis ...");
+    let analysis = match crate::analysis::detect_root() {
+        Ok(root) => {
+            let lint_opts = crate::analysis::LintOptions::default();
+            let probe = crate::analysis::lint_repo(&root, &lint_opts)?;
+            let lint_s = time_auto(budget.max(0.3), || {
+                let rep = crate::analysis::lint_repo(&root, &lint_opts).unwrap();
+                std::hint::black_box(rep.findings.len());
+            });
+            AnalysisPoint { files: probe.files_scanned, lint_ms: lint_s * 1e3 }
+        }
+        Err(_) => AnalysisPoint { files: 0, lint_ms: f64::NAN },
+    };
+
     Ok(BenchReport {
         algorithm2,
         p2_power,
@@ -462,6 +464,7 @@ pub fn run(opts: &BenchOptions) -> Result<BenchReport> {
         dynamic,
         population,
         service,
+        analysis,
         rustc: rustc_version(),
     })
 }
@@ -511,6 +514,11 @@ impl BenchReport {
         println!(
             "  sim {:>10.3} ms/run   serve {:>10.3} ms/run   overhead {:>6.2}x   ({} rounds)",
             self.service.sim_ms, self.service.serve_ms, self.service.overhead, self.service.rounds
+        );
+        println!("\nwhole-repo static analysis (lexical + graph + call-graph lint):");
+        println!(
+            "  lint {:>10.3} ms/pass   ({} files)",
+            self.analysis.lint_ms, self.analysis.files
         );
         println!("\ntoolchain: {}", self.rustc);
     }
@@ -588,15 +596,20 @@ impl BenchReport {
             jnum(self.service.serve_ms),
             jnum(self.service.overhead)
         );
+        let analysis = format!(
+            "{{\"files\": {}, \"lint_ms\": {}}}",
+            self.analysis.files,
+            jnum(self.analysis.lint_ms)
+        );
         let rustc = self.rustc.replace('\\', "\\\\").replace('"', "\\\"");
         format!(
-            "{{\n  \"schema\": \"sfllm-bench-v1\",\n  \"pr\": \"pr8\",\n  \
+            "{{\n  \"schema\": \"sfllm-bench-v1\",\n  \"pr\": \"pr9\",\n  \
              \"provenance\": \"generated by `sfllm bench`\",\n  \"unix_time\": {unix},\n  \
              \"rustc\": \"{rustc}\",\n  \
              \"axes\": {{\n    \"algorithm2\": [{}],\n    \"p2_power\": [{}],\n    \
              \"solve_cached\": [{}],\n    \"grid_scan\": {{\"clone_us\": {}, \"cached_us\": {}, \
              \"speedup\": {}}},\n    \"dynamic\": [{}],\n    \"population\": [{}],\n    \
-             \"service\": {service}\n  }}\n}}\n",
+             \"service\": {service},\n    \"analysis\": {analysis}\n  }}\n}}\n",
             algorithm2.join(", "),
             p2.join(", "),
             solve.join(", "),
@@ -657,11 +670,12 @@ mod tests {
                 serve_ms: 4.4,
                 overhead: 1.1,
             },
+            analysis: AnalysisPoint { files: 60, lint_ms: 80.0 },
             rustc: "rustc 1.0.0 (\"quoted\")".to_string(),
         };
         let j = crate::util::json::Json::parse(&rep.to_json_string()).unwrap();
         assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "sfllm-bench-v1");
-        assert_eq!(j.get("pr").unwrap().as_str().unwrap(), "pr8");
+        assert_eq!(j.get("pr").unwrap().as_str().unwrap(), "pr9");
         // provenance: a real timestamp plus the (escaped) toolchain string
         assert!(j.get("unix_time").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(j.get("rustc").unwrap().as_str().unwrap(), "rustc 1.0.0 (\"quoted\")");
@@ -674,6 +688,7 @@ mod tests {
             "dynamic",
             "population",
             "service",
+            "analysis",
         ] {
             assert!(axes.get(key).is_ok(), "missing axis {key}");
         }
@@ -689,6 +704,9 @@ mod tests {
         let s = axes.get("service").unwrap();
         assert_eq!(s.get("rounds").unwrap().as_usize().unwrap(), 8);
         assert!(s.get("overhead").unwrap().as_f64().unwrap() > 1.0);
+        let a = axes.get("analysis").unwrap();
+        assert_eq!(a.get("files").unwrap().as_usize().unwrap(), 60);
+        assert!(a.get("lint_ms").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -211,13 +211,19 @@ pub struct ObjectiveConfig {
     pub zeta: f64,
 }
 
+/// Effective switched-capacitance coefficient default (J·s²/cycle³
+/// scale), the `ζ` of the client compute-energy model `ζ·f²·cycles`.
+/// Re-exported as `delay::energy::DEFAULT_ZETA` next to the model
+/// that consumes it.
+pub const DEFAULT_ZETA: f64 = 1e-28;
+
 impl Default for ObjectiveConfig {
     fn default() -> Self {
         ObjectiveConfig {
             kind: "delay".to_string(),
             lambda: 0.0,
             budget_j: f64::INFINITY,
-            zeta: crate::delay::energy::DEFAULT_ZETA,
+            zeta: DEFAULT_ZETA,
         }
     }
 }

@@ -2,7 +2,7 @@
 //! fine-tuning run can resume (or ship its adapters for serving).
 //!
 //! Self-contained little-endian binary format (no serde in the offline
-//! crate set), carried over [`crate::service::codec`] since PR-8:
+//! crate set), carried over [`crate::util::codec`] since PR-8:
 //!
 //! ```text
 //! magic "SFLA" | u32 version (= 1)
@@ -22,7 +22,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::model::lora::{AdapterSet, Tensor};
-use crate::service::codec::{BinReader, BinWriter};
+use crate::util::codec::{BinReader, BinWriter};
 
 const MAGIC: &[u8; 4] = b"SFLA";
 const VERSION: u32 = 1;

@@ -11,6 +11,7 @@ use anyhow::{bail, Result};
 
 use crate::model::lora::{AdapterSet, Tensor};
 use crate::runtime::{SflModel, StepOutput};
+use crate::util::stats::fsum32;
 
 /// Mock with 2 client tensors and 2 server tensors of 4 params each.
 pub struct MockModel {
@@ -75,12 +76,13 @@ impl SflModel for MockModel {
             bail!("bad token count");
         }
         // s encodes the client adapter norm so the server "loss" sees it
-        let norm2: f32 = adapters
-            .tensors
-            .iter()
-            .flat_map(|t| &t.data)
-            .map(|v| v * v)
-            .sum();
+        let norm2: f32 = fsum32(
+            adapters
+                .tensors
+                .iter()
+                .flat_map(|t| &t.data)
+                .map(|v| v * v),
+        );
         Ok(vec![norm2; self.batch * self.seq * self.d_model])
     }
 
@@ -96,12 +98,13 @@ impl SflModel for MockModel {
         {
             bail!("bad shapes");
         }
-        let server_norm2: f32 = adapters
-            .tensors
-            .iter()
-            .flat_map(|t| &t.data)
-            .map(|v| v * v)
-            .sum();
+        let server_norm2: f32 = fsum32(
+            adapters
+                .tensors
+                .iter()
+                .flat_map(|t| &t.data)
+                .map(|v| v * v),
+        );
         let client_norm2 = s[0]; // encoded by client_forward
         let loss = client_norm2 + server_norm2;
         // grad of ||p||^2 is 2p; use p for a clean (1-lr) contraction

@@ -20,10 +20,9 @@ use super::optim::{OptKind, Optimizer};
 use crate::data::{
     generate_byte_corpus, generate_corpus, shard_by_food, shard_iid, Batcher, E2eSample,
 };
-use crate::bench::WallClock;
 use crate::model::lora::AdapterSet;
 use crate::runtime::SflModel;
-use crate::util::clock::Clock;
+use crate::util::clock::{Clock, WallClock};
 use crate::util::rng::Rng;
 
 /// Training options (defaults follow the tiny-model experiment setup).

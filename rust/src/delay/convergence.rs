@@ -52,7 +52,7 @@ impl ConvergenceModel {
                 // public and can be constructed directly — normalize
                 // here before interpolating rather than trusting the
                 // invariant (an unsorted table silently mis-clamps).
-                // lint:allow(P002) windows(2) slices always hold exactly two points
+                // lint:allow(P101) windows(2) slices always hold exactly two points
                 if points.windows(2).all(|w| w[0].0 < w[1].0) {
                     Self::interp_table(points, r)
                 } else {
@@ -71,9 +71,9 @@ impl ConvergenceModel {
     fn interp_table(points: &[(usize, f64)], r: f64) -> f64 {
         let u = 1.0 / r;
         let pt = |&(pr, pe): &(usize, f64)| (1.0 / pr.max(1) as f64, pe);
-        // lint:allow(P001) rounds() asserts the table is non-empty before calling
+        // lint:allow(P101) rounds() asserts the table is non-empty before calling
         let first = pt(points.first().unwrap());
-        // lint:allow(P001) same non-empty invariant as `first` above
+        // lint:allow(P101) same non-empty invariant as `first` above
         let last = pt(points.last().unwrap());
         // table sorted by r ascending -> u descending
         if u >= first.0 {
@@ -83,9 +83,9 @@ impl ConvergenceModel {
             return last.1;
         }
         for w in points.windows(2) {
-            // lint:allow(P002) windows(2) slices always hold exactly two points
+            // lint:allow(P101) windows(2) slices always hold exactly two points
             let (u0, e0) = pt(&w[0]);
-            // lint:allow(P002) windows(2) slices always hold exactly two points
+            // lint:allow(P101) windows(2) slices always hold exactly two points
             let (u1, e1) = pt(&w[1]);
             if u <= u0 && u >= u1 {
                 let t = if (u0 - u1).abs() < 1e-12 { 0.0 } else { (u0 - u) / (u0 - u1) };

@@ -40,11 +40,15 @@
 //! `examples/energy_tradeoff.rs` studies.
 
 use super::{Allocation, PhaseDelays, Scenario};
+use crate::util::stats::fsum;
 
 /// Effective switched-capacitance coefficient (J·s²/cycle³ scale).
 /// Typical edge-device magnitude; configurable per study via
 /// `config::ObjectiveConfig::zeta` (→ `Scenario::objective.zeta`).
-pub const DEFAULT_ZETA: f64 = 1e-28;
+/// Declared in [`crate::config`] (the default belongs to the config
+/// layer, which sits below `delay` in the architecture contract) and
+/// re-exported here next to the model that consumes it.
+pub use crate::config::DEFAULT_ZETA;
 
 /// Transmit energy `P·T` with explicit infeasibility: an infinite
 /// airtime (starved uplink) costs infinite energy even at zero
@@ -73,9 +77,9 @@ pub struct RoundEnergy {
 impl RoundEnergy {
     /// Total energy across clients for one local round.
     pub fn total(&self) -> f64 {
-        self.client_compute.iter().sum::<f64>()
-            + self.act_upload.iter().sum::<f64>()
-            + self.fed_upload.iter().sum::<f64>()
+        fsum(self.client_compute.iter().copied())
+            + fsum(self.act_upload.iter().copied())
+            + fsum(self.fed_upload.iter().copied())
     }
 
     /// Per-client totals.

@@ -52,7 +52,7 @@ use std::sync::{Arc, Mutex};
 use crate::delay::energy::tx_energy;
 use crate::delay::{Allocation, ConvergenceModel, Scenario};
 use crate::model::{WorkloadProfile, WorkloadTable};
-use crate::opt::Objective;
+use crate::delay::objective::Objective;
 
 /// The per-(l_c, rank) workload sums one delay/energy evaluation
 /// consumes.
@@ -407,7 +407,7 @@ impl<'s> DelayEvaluator<'s> {
     /// P4 alone: argmin over the cached candidate ranks at a fixed
     /// split. Ties resolve to the earlier candidate.
     pub fn best_rank(&self, l_c: usize) -> (usize, f64) {
-        // lint:allow(P002) WorkloadTable construction rejects an empty rank set
+        // lint:allow(P101) WorkloadTable construction rejects an empty rank set
         let mut best = (self.table.ranks()[0], f64::INFINITY);
         for (ri, &r) in self.table.ranks().iter().enumerate() {
             let t = self.total(&self.lookup(l_c, ri), self.rounds[ri]);
@@ -424,7 +424,7 @@ impl<'s> DelayEvaluator<'s> {
     /// the earlier candidate rank — consistent with [`Self::best_split`]
     /// followed by [`Self::best_rank`].
     pub fn best_split_rank(&self) -> (usize, usize, f64) {
-        // lint:allow(P002) WorkloadTable construction rejects an empty rank set
+        // lint:allow(P101) WorkloadTable construction rejects an empty rank set
         let mut best = (self.splits().start, self.table.ranks()[0], f64::INFINITY);
         for l_c in self.splits() {
             for (ri, &r) in self.table.ranks().iter().enumerate() {
@@ -449,7 +449,7 @@ impl<'s> DelayEvaluator<'s> {
         let need_e = obj.needs_energy();
         let mut best = GridChoice {
             l_c: self.splits().start,
-            // lint:allow(P002) WorkloadTable construction rejects an empty rank set
+            // lint:allow(P101) WorkloadTable construction rejects an empty rank set
             rank: self.table.ranks()[0],
             delay: f64::INFINITY,
             energy: f64::INFINITY,
@@ -508,7 +508,7 @@ impl<'s> DelayEvaluator<'s> {
     /// when the objective never consumes energy.
     pub fn best_rank_obj(&self, l_c: usize, obj: &Objective) -> (usize, f64) {
         let need_e = obj.needs_energy();
-        // lint:allow(P002) WorkloadTable construction rejects an empty rank set
+        // lint:allow(P101) WorkloadTable construction rejects an empty rank set
         let mut best = (self.table.ranks()[0], f64::INFINITY);
         for (ri, &r) in self.table.ranks().iter().enumerate() {
             let w = self.lookup(l_c, ri);
@@ -685,7 +685,7 @@ impl ColumnCache {
             }
             self.entries.push(ColumnEntry::new(scn, alloc));
         }
-        // lint:allow(P001) entry pushed on the line above; last() cannot be None
+        // lint:allow(P101) entry pushed on the line above; last() cannot be None
         &self.entries.last().expect("just pushed").cols
     }
 
@@ -746,7 +746,7 @@ impl WorkloadCache {
     /// Fetch (or build and memoize) the table for `(profile, ranks)`.
     pub fn table_for(&self, profile: &WorkloadProfile, ranks: &[usize]) -> Arc<WorkloadTable> {
         let key = TableKey::of(profile, ranks);
-        // lint:allow(P001) lock poisoning implies a sibling solve already panicked
+        // lint:allow(P101) lock poisoning implies a sibling solve already panicked
         let mut entries = self.entries.lock().expect("workload cache lock");
         if let Some((_, table)) = entries.iter().find(|(k, _)| *k == key) {
             return table.clone();
@@ -758,7 +758,7 @@ impl WorkloadCache {
 
     /// Number of distinct tables currently memoized.
     pub fn tables(&self) -> usize {
-        // lint:allow(P001) lock poisoning implies a sibling solve already panicked
+        // lint:allow(P101) lock poisoning implies a sibling solve already panicked
         self.entries.lock().expect("workload cache lock").len()
     }
 }

@@ -13,12 +13,15 @@
 pub mod convergence;
 pub mod energy;
 pub mod eval;
+pub mod objective;
 
 pub use convergence::ConvergenceModel;
+pub use objective::Objective;
 pub use eval::{ColumnCache, DelayEvaluator, GridChoice, RateColumns, WorkloadCache};
 
 use crate::model::WorkloadProfile;
 use crate::net::{Link, Topology};
+use crate::util::stats::fsum;
 
 /// A complete latency scenario (everything that is *not* a decision).
 #[derive(Clone, Debug)]
@@ -153,33 +156,37 @@ impl Scenario {
 
     /// Uplink rate of client k to the main server under `alloc` (Eq. 9).
     pub fn rate_main(&self, alloc: &Allocation, k: usize) -> f64 {
-        alloc.assign_main[k]
-            .iter()
-            .map(|&i| self.main_link.subch_rate(k, i, alloc.psd_main[i]))
-            .sum()
+        fsum(
+            alloc.assign_main[k]
+                .iter()
+                .map(|&i| self.main_link.subch_rate(k, i, alloc.psd_main[i])),
+        )
     }
 
     /// Uplink rate of client k to the federated server (Eq. 14).
     pub fn rate_fed(&self, alloc: &Allocation, k: usize) -> f64 {
-        alloc.assign_fed[k]
-            .iter()
-            .map(|&i| self.fed_link.subch_rate(k, i, alloc.psd_fed[i]))
-            .sum()
+        fsum(
+            alloc.assign_fed[k]
+                .iter()
+                .map(|&i| self.fed_link.subch_rate(k, i, alloc.psd_fed[i])),
+        )
     }
 
     /// Total transmit power of client k on the main link (W) — C4 LHS.
     pub fn power_main(&self, alloc: &Allocation, k: usize) -> f64 {
-        alloc.assign_main[k]
-            .iter()
-            .map(|&i| self.main_link.power_w(i, alloc.psd_main[i]))
-            .sum()
+        fsum(
+            alloc.assign_main[k]
+                .iter()
+                .map(|&i| self.main_link.power_w(i, alloc.psd_main[i])),
+        )
     }
 
     pub fn power_fed(&self, alloc: &Allocation, k: usize) -> f64 {
-        alloc.assign_fed[k]
-            .iter()
-            .map(|&i| self.fed_link.power_w(i, alloc.psd_fed[i]))
-            .sum()
+        fsum(
+            alloc.assign_fed[k]
+                .iter()
+                .map(|&i| self.fed_link.power_w(i, alloc.psd_fed[i])),
+        )
     }
 
     /// All phase delays for one local round (Eqs. 8–15).

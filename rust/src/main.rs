@@ -119,7 +119,8 @@ fn run() -> Result<()> {
                  serve     replay a JSONL event stream through the allocator service\n\
                            (--events, --metrics-out, --checkpoint-out, --checkpoint-every, --resume)\n\
                  bench     run the tracked perf axes (--json <path>, --full)\n\
-                 lint      run the determinism/numeric-safety static analysis (--json <path>)\n\
+                 lint      run the determinism/architecture static analysis\n\
+                           (--json, --arch-json, --dot-out, --allow-unused)\n\
                  table3    print the GPT2-S complexity table (Table III)\n\
                  info      list artifact variants"
             );
@@ -660,15 +661,27 @@ fn cmd_bench(args: &mut Args) -> Result<()> {
 fn cmd_lint(args: &mut Args) -> Result<()> {
     let root = args.get("root");
     let json = args.get("json");
+    let arch_json = args.get("arch-json");
+    let dot_out = args.get("dot-out");
+    let allow_unused = args.flag("allow-unused");
     args.finish()?;
     let root = match root {
         Some(r) => std::path::PathBuf::from(r),
         None => sfllm::analysis::detect_root()?,
     };
-    let report = sfllm::analysis::lint_repo(&root)?;
+    let opts = sfllm::analysis::LintOptions { allow_unused };
+    let report = sfllm::analysis::lint_repo(&root, &opts)?;
     if let Some(path) = &json {
         std::fs::write(path, report.to_json())
             .with_context(|| format!("writing lint report to {path}"))?;
+    }
+    if let Some(path) = &arch_json {
+        std::fs::write(path, report.arch.to_json())
+            .with_context(|| format!("writing architecture report to {path}"))?;
+    }
+    if let Some(path) = &dot_out {
+        std::fs::write(path, report.arch.to_dot())
+            .with_context(|| format!("writing architecture graph to {path}"))?;
     }
     for f in &report.findings {
         println!("{}:{}: [{}] {} ({})", f.file, f.line, f.rule, f.message, f.snippet);
@@ -678,12 +691,27 @@ fn cmd_lint(args: &mut Args) -> Result<()> {
         "sfllm-lint: {} files scanned, {} finding(s), {} suppression(s) ({} unused)",
         report.files_scanned, report.findings.len(), report.suppressions.len(), unused
     );
+    println!(
+        "sfllm-arch: {} modules, {} edges, g001={}, g002={}, contract fingerprint {}",
+        report.arch.modules.len(),
+        report.arch.edges.len(),
+        report.arch.count("G001"),
+        report.arch.count("G002"),
+        report.arch.fingerprint
+    );
     if let Some(path) = &json {
         println!("lint report written to {path}");
     }
+    if let Some(path) = &arch_json {
+        println!("architecture report written to {path}");
+    }
+    if let Some(path) = &dot_out {
+        println!("architecture graph written to {path}");
+    }
     if !report.findings.is_empty() {
         bail!(
-            "sfllm-lint: {} unsuppressed finding(s); see the determinism contract in DESIGN.md",
+            "sfllm-lint: {} unsuppressed finding(s); see the determinism and architecture \
+             contracts in DESIGN.md",
             report.findings.len()
         );
     }

@@ -24,6 +24,7 @@
 //! (FFN > MHA >> LoRA/LayerNorm; LM head dominates).
 
 use super::gpt2::Gpt2Config;
+use crate::util::stats::fsum;
 
 const BITS_PER_PARAM: f64 = 32.0; // f32 everywhere in this repro
 
@@ -102,37 +103,39 @@ impl WorkloadProfile {
 
     /// Phi_c^F + Delta Phi_c^F: client forward FLOPs per sample.
     pub fn client_fwd_flops(&self, l_c: usize, rank: usize) -> f64 {
-        self.blocks[..self.lc_clamped(l_c)]
-            .iter()
-            .map(|b| b.fwd_flops + rank as f64 * b.lora_fwd_flops_per_rank)
-            .sum()
+        fsum(
+            self.blocks[..self.lc_clamped(l_c)]
+                .iter()
+                .map(|b| b.fwd_flops + rank as f64 * b.lora_fwd_flops_per_rank),
+        )
     }
 
     /// Phi_c^B + Delta Phi_c^B: client backward FLOPs per sample.
     pub fn client_bwd_flops(&self, l_c: usize, rank: usize) -> f64 {
-        self.blocks[..self.lc_clamped(l_c)]
-            .iter()
-            .map(|b| b.bwd_flops + rank as f64 * b.lora_bwd_flops_per_rank)
-            .sum()
+        fsum(
+            self.blocks[..self.lc_clamped(l_c)]
+                .iter()
+                .map(|b| b.bwd_flops + rank as f64 * b.lora_bwd_flops_per_rank),
+        )
     }
 
     /// Phi_s^F + Delta Phi_s^F: server forward FLOPs per sample
     /// (remaining blocks + LM head/final LN).
     pub fn server_fwd_flops(&self, l_c: usize, rank: usize) -> f64 {
-        self.blocks[self.lc_clamped(l_c)..]
-            .iter()
-            .map(|b| b.fwd_flops + rank as f64 * b.lora_fwd_flops_per_rank)
-            .sum::<f64>()
-            + self.head_fwd_flops
+        fsum(
+            self.blocks[self.lc_clamped(l_c)..]
+                .iter()
+                .map(|b| b.fwd_flops + rank as f64 * b.lora_fwd_flops_per_rank),
+        ) + self.head_fwd_flops
     }
 
     /// Phi_s^B + Delta Phi_s^B: server backward FLOPs per sample.
     pub fn server_bwd_flops(&self, l_c: usize, rank: usize) -> f64 {
-        self.blocks[self.lc_clamped(l_c)..]
-            .iter()
-            .map(|b| b.bwd_flops + rank as f64 * b.lora_bwd_flops_per_rank)
-            .sum::<f64>()
-            + self.head_bwd_flops
+        fsum(
+            self.blocks[self.lc_clamped(l_c)..]
+                .iter()
+                .map(|b| b.bwd_flops + rank as f64 * b.lora_bwd_flops_per_rank),
+        ) + self.head_bwd_flops
     }
 
     /// Gamma_s: split-layer upload bits per sample (activations + labels).
@@ -141,7 +144,8 @@ impl WorkloadProfile {
     pub fn activation_bits(&self, l_c: usize) -> f64 {
         let l_c = self.lc_clamped(l_c);
         if l_c == 0 {
-            // split before the first block: the embedding output goes up
+            // split before the first block: the embedding output goes up.
+            // lint:allow(P101) blocks holds one entry per transformer layer and every Gpt2Config preset has n_layers >= 1
             self.blocks[0].act_bits + self.label_bits
         } else {
             self.blocks[l_c - 1].act_bits + self.label_bits
@@ -150,10 +154,11 @@ impl WorkloadProfile {
 
     /// Delta Theta_c: client adapter upload bits for the federated server.
     pub fn client_adapter_bits(&self, l_c: usize, rank: usize) -> f64 {
-        self.blocks[..self.lc_clamped(l_c)]
-            .iter()
-            .map(|b| rank as f64 * b.adapter_bits_per_rank)
-            .sum()
+        fsum(
+            self.blocks[..self.lc_clamped(l_c)]
+                .iter()
+                .map(|b| rank as f64 * b.adapter_bits_per_rank),
+        )
     }
 
     /// Number of candidate split points (after block 1 .. after block L-1;

@@ -8,6 +8,8 @@
 
 use anyhow::{bail, Result};
 
+use crate::util::stats::{fsum, usum};
+
 /// One named tensor.
 #[derive(Clone, Debug)]
 pub struct Tensor {
@@ -39,7 +41,7 @@ pub struct AdapterSet {
 impl AdapterSet {
     /// Total trainable parameter count.
     pub fn numel(&self) -> usize {
-        self.tensors.iter().map(Tensor::numel).sum()
+        usum(self.tensors.iter().map(Tensor::numel))
     }
 
     /// Upload volume in bits (the Delta Theta_c the delay model charges).
@@ -74,7 +76,7 @@ impl AdapterSet {
         if sets.is_empty() || sets.len() != weights.len() {
             bail!("fedavg needs matching non-empty sets/weights");
         }
-        let total: f64 = weights.iter().sum();
+        let total: f64 = fsum(weights.iter().copied());
         if total <= 0.0 {
             bail!("fedavg weights must sum to a positive value");
         }

@@ -58,6 +58,7 @@ use std::collections::BinaryHeap;
 
 use crate::delay::Scenario;
 use crate::net::Link;
+use crate::util::stats::fsum;
 
 /// Assignment produced by Algorithm 2 for both links.
 #[derive(Clone, Debug)]
@@ -251,7 +252,7 @@ where
         // reference scan's exact association — because the nominal PSD
         // fills the budget exactly once every subchannel is granted,
         // parking the final grants on the C5 float boundary.
-        let total: f64 = power.iter().sum();
+        let total: f64 = fsum(power.iter().copied());
         let mut chosen: Option<usize> = None;
         if total + add_power <= p_th_w {
             while let Some(e) = heap.pop() {

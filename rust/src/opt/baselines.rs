@@ -24,7 +24,7 @@ use anyhow::Result;
 
 use crate::delay::{Allocation, ConvergenceModel, DelayEvaluator, Scenario, WorkloadCache};
 use crate::opt::bcd;
-use crate::opt::objective::{score_alloc, Objective};
+use crate::delay::objective::{score_alloc, Objective};
 use crate::opt::power;
 use crate::util::rng::Rng;
 

@@ -38,7 +38,7 @@
 use anyhow::{bail, Result};
 
 use crate::delay::{Allocation, ConvergenceModel, DelayEvaluator, Scenario, WorkloadCache};
-use crate::opt::objective::{score_alloc, Objective};
+use crate::delay::objective::{score_alloc, Objective};
 use crate::opt::{assignment, power};
 
 /// Options for the BCD loop.

@@ -15,10 +15,11 @@
 //! * [`bcd`] — Algorithm 3: the alternating (block-coordinate-descent)
 //!   loop, with P3+P4 run as one **joint** split×rank exhaustive scan
 //!   on the cached [`crate::delay::DelayEvaluator`];
-//! * [`objective`] — the optimization-objective catalogue
-//!   ([`Objective`]: delay, energy, λ-weighted sum, energy budget)
-//!   every scoring path shares — the energy axis the paper names as
-//!   future work;
+//! * `objective` (re-exported from [`crate::delay::objective`] since
+//!   PR-9 — the scoring catalogue is consumed by the cached evaluator,
+//!   which sits *below* the optimizer in the architecture contract) —
+//!   the optimization-objective catalogue ([`Objective`]: delay,
+//!   energy, λ-weighted sum, energy budget) every scoring path shares;
 //! * [`baselines`] — baselines a–d from Section VII-C (the raw seeded
 //!   draw functions);
 //! * [`policy`] — the experiment-facing API: the [`AllocationPolicy`]
@@ -30,12 +31,12 @@
 pub mod assignment;
 pub mod baselines;
 pub mod bcd;
-pub mod objective;
 pub mod policy;
 pub mod power;
 pub mod rank;
 pub mod split;
 
+pub use crate::delay::objective;
+pub use crate::delay::objective::Objective;
 pub use bcd::{BcdOptions, BcdResult};
-pub use objective::Objective;
 pub use policy::{AllocationPolicy, PolicyOutcome, PolicyRegistry};

@@ -56,6 +56,7 @@ use anyhow::{bail, Result};
 
 use crate::delay::{Allocation, Scenario};
 use crate::net::Link;
+use crate::util::stats::fsum;
 
 /// Result of one P2 solve.
 #[derive(Clone, Debug)]
@@ -100,7 +101,7 @@ pub fn waterfill_min_power(link: &Link, k: usize, subs: &[usize], rate: f64) -> 
     // KKT water level puts theta_i proportional to B_i, i.e. a common
     // spectral efficiency R/B_tot on every subchannel. This removes the
     // inner bisection from the P2 hot loop entirely.
-    // lint:allow(P002) windows(2) yields exactly-2-element slices, so w[0]/w[1] are in bounds
+    // lint:allow(P101) windows(2) yields exactly-2-element slices, so w[0]/w[1] are in bounds
     let equal_gain = g.windows(2).all(|w| (w[0] - w[1]).abs() <= 1e-12 * w[0].abs());
     if equal_gain {
         let (power, psd_common) = waterfill_equal_gain(link, k, subs, rate);
@@ -173,7 +174,7 @@ pub fn waterfill_min_power(link: &Link, k: usize, subs: &[usize], rate: f64) -> 
 /// [`waterfill_min_power`]'s equal-gain path (same folds, same ops),
 /// with zero allocation.
 fn waterfill_equal_gain(link: &Link, k: usize, subs: &[usize], rate: f64) -> (f64, f64) {
-    let b_tot: f64 = subs.iter().map(|&i| link.subch.bandwidth_hz[i]).sum();
+    let b_tot: f64 = fsum(subs.iter().map(|&i| link.subch.bandwidth_hz[i]));
     let se = rate / b_tot; // bit/s/Hz, uniform across subchannels
     let psd_common = (se.exp2() - 1.0) / link.snr_coeff(k);
     (psd_common * b_tot, psd_common)
@@ -271,9 +272,9 @@ pub fn solve_link_hinted(
             continue;
         }
         // equal PSD over the client's subchannels at power `share`
-        let bw: f64 = subs.iter().map(|&i| link.subch.bandwidth_hz[i]).sum();
+        let bw: f64 = fsum(subs.iter().map(|&i| link.subch.bandwidth_hz[i]));
         let psd = share / bw;
-        let rate: f64 = subs.iter().map(|&i| link.subch_rate(k, i, psd)).sum();
+        let rate: f64 = fsum(subs.iter().map(|&i| link.subch_rate(k, i, psd)));
         if rate <= 0.0 {
             bail!("client {k} cannot achieve positive rate");
         }

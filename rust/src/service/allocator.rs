@@ -47,7 +47,7 @@ use crate::net::topology::ClientSite;
 use crate::opt::policy::{AllocationPolicy, PolicyRegistry};
 use crate::opt::Objective;
 use crate::service::checkpoint::{self, Header};
-use crate::service::codec::{BinReader, BinWriter};
+use crate::util::codec::{BinReader, BinWriter};
 use crate::service::event::{Event, RunMode, RunSpec};
 use crate::service::metrics::{MetricSink, RoundMetrics, RunSummary};
 use crate::sim::dynamic::RoundCost;

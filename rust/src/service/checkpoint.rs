@@ -17,7 +17,7 @@
 //!   allocations, the [`DriftEnv`] gains/compute/membership and its
 //!   three RNG stream positions, and (population mode) the lazily
 //!   materialized client slots, invitation history, current cohort and
-//!   view splice. Serialized bit for bit ([`crate::service::codec`]).
+//!   view splice. Serialized bit for bit ([`crate::util::codec`]).
 //!
 //! Deliberately *not* serialized: [`crate::delay::WorkloadCache`] and
 //! [`crate::delay::ColumnCache`] (bit-transparent caches, rebuilt cold
@@ -30,7 +30,7 @@
 use anyhow::{bail, Result};
 
 use crate::delay::Allocation;
-use crate::service::codec::{BinReader, BinWriter};
+use crate::util::codec::{BinReader, BinWriter};
 use crate::service::event::RunMode;
 use crate::sim::engine::{DriftEnv, RoundCore};
 

@@ -24,8 +24,9 @@
 //! * [`metrics`] — the shared round-record schema (CSV / JSONL / in-
 //!   memory) behind every `--rounds-out` flag and service stream;
 //! * [`checkpoint`] — the versioned `SFCK` state codec;
-//! * [`codec`] — the little-endian binary primitives shared with the
-//!   adapter checkpoint format ([`crate::coordinator::checkpoint`]).
+//! * `codec` (re-exported from [`crate::util::codec`] since PR-9) —
+//!   the little-endian binary primitives shared with the adapter
+//!   checkpoint format ([`crate::coordinator::checkpoint`]).
 //!
 //! The contract tying it together (property-tested in
 //! `rust/tests/prop_service.rs`): a pure tick stream reproduces
@@ -35,9 +36,10 @@
 
 pub mod allocator;
 pub mod checkpoint;
-pub mod codec;
 pub mod event;
 pub mod metrics;
+
+pub use crate::util::codec;
 
 pub use self::allocator::AllocatorService;
 pub use self::checkpoint::peek_header;

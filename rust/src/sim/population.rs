@@ -170,7 +170,7 @@ impl PopulationState {
     /// service checkpoint. The weight index is skipped: it is a pure
     /// function of the population's static draws and is rebuilt lazily,
     /// bit-identically, on first weighted selection after resume.
-    pub(crate) fn checkpoint_write(&self, w: &mut crate::service::codec::BinWriter) {
+    pub(crate) fn checkpoint_write(&self, w: &mut crate::util::codec::BinWriter) {
         w.usize(self.slots.len());
         for (&id, s) in &self.slots {
             w.usize(id);
@@ -192,7 +192,7 @@ impl PopulationState {
     /// Inverse of [`PopulationState::checkpoint_write`]; `size` is the
     /// rebuilt population's size, validated against the payload.
     pub(crate) fn checkpoint_read(
-        r: &mut crate::service::codec::BinReader,
+        r: &mut crate::util::codec::BinReader,
         size: usize,
     ) -> Result<PopulationState> {
         let n = r.usize("population slot count")?;

@@ -130,7 +130,7 @@ impl WeightIndex {
 
     /// Draw one client id with probability ∝ its weight.
     pub fn sample(&self, rng: &mut Rng) -> usize {
-        // lint:allow(P001) prefix is constructed as vec![0.0] + pushes, never empty
+        // lint:allow(P101) prefix is constructed as vec![0.0] + pushes, never empty
         let total = *self.prefix.last().unwrap();
         let u = rng.f64() * total;
         // first i with prefix[i+1] > u
@@ -193,7 +193,7 @@ impl Selector for WeightProportional {
             out.extend(0..ctx.size);
             return;
         }
-        // lint:allow(P001) needs_weights() contract: the harness always supplies weights here
+        // lint:allow(P101) needs_weights() contract: the harness always supplies weights here
         let idx = ctx.weights.expect("WeightProportional requires SelectionCtx::weights");
         // lint:allow(D001) membership test only (insert + contains); iteration order unused
         let mut taken = HashSet::with_capacity(ctx.cohort);

@@ -607,7 +607,7 @@ impl SweepRunner {
                             break;
                         }
                         let res = self.run_point(i, &grid[i], &cache);
-                        // lint:allow(P001) lock poisoning implies a sibling worker already panicked
+                        // lint:allow(P101) lock poisoning implies a sibling worker already panicked
                         results.lock().expect("sweep results lock")[i] = Some(res);
                     });
                 }

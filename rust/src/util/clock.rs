@@ -5,8 +5,9 @@
 //! leak into simulated or reported results make runs unreproducible.
 //! Components that legitimately need *telemetry* time — the training
 //! orchestrator's phase walltimes, the allocator service's aggregate
-//! summaries — take a `&dyn Clock` instead, so production wires in the
-//! bench-owned wall clock while tests and replays inject a
+//! summaries — take a `&dyn Clock` instead, so production wires in
+//! [`WallClock`] (the one sanctioned ambient-time source, carrying the
+//! justified D002 suppression) while tests and replays inject a
 //! [`ManualClock`] and stay bit-reproducible.
 //!
 //! The trait is deliberately minimal: a monotonically non-decreasing
@@ -44,6 +45,37 @@ impl ManualClock {
     pub fn advance(&self, dt: f64) {
         debug_assert!(dt >= 0.0, "ManualClock advanced by negative dt");
         self.t.set(self.t.get() + dt);
+    }
+}
+
+/// The production [`Clock`]: wall time in seconds since the clock was
+/// created. This is the single sanctioned ambient-time source — it
+/// exists so the PR-9 architecture contract can keep `coordinator`
+/// from depending on the `bench` harness just to read the time;
+/// everything else takes a `&dyn Clock` and never reads ambient time.
+#[derive(Clone, Debug)]
+pub struct WallClock {
+    origin: std::time::Instant,
+}
+
+impl WallClock {
+    /// New clock whose epoch is "now".
+    #[allow(clippy::disallowed_methods)] // the one sanctioned Instant::now, injected as Clock
+    pub fn new() -> Self {
+        // lint:allow(D002) the single sanctioned wall-clock read; consumers see only an injected Clock
+        WallClock { origin: std::time::Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
     }
 }
 

@@ -179,14 +179,16 @@ impl<'a> BinReader<'a> {
 
     pub fn u32(&mut self, what: &str) -> Result<u32> {
         let b = self.take(4, what)?;
-        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        let mut word = [0u8; 4];
+        word.copy_from_slice(b);
+        Ok(u32::from_le_bytes(word))
     }
 
     pub fn u64(&mut self, what: &str) -> Result<u64> {
         let b = self.take(8, what)?;
-        Ok(u64::from_le_bytes([
-            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
-        ]))
+        let mut word = [0u8; 8];
+        word.copy_from_slice(b);
+        Ok(u64::from_le_bytes(word))
     }
 
     pub fn usize(&mut self, what: &str) -> Result<usize> {

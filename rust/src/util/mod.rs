@@ -4,6 +4,7 @@
 
 pub mod cli;
 pub mod clock;
+pub mod codec;
 pub mod csv;
 pub mod json;
 pub mod prop;

@@ -73,11 +73,54 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
 
 /// min/max that ignore NaN-free assumption violations gracefully.
 pub fn min(xs: &[f64]) -> f64 {
-    xs.iter().copied().fold(f64::INFINITY, f64::min)
+    let mut m = f64::INFINITY;
+    for x in xs {
+        m = f64::min(m, *x);
+    }
+    m
 }
 
 pub fn max(xs: &[f64]) -> f64 {
-    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    let mut m = f64::NEG_INFINITY;
+    for x in xs {
+        m = f64::max(m, *x);
+    }
+    m
+}
+
+/// Fixed-order f64 sum: a plain left-to-right loop, bit-identical to
+/// `Iterator::sum::<f64>()` on the same iteration order. This is the
+/// sanctioned `D104` reduction — call sites that spell the loop out
+/// through this helper are visibly committed to the in-order
+/// accumulation the reproducibility contract freezes, and the lint's
+/// taint pass (unwrap/sum reachable from a spawn site) stays silent
+/// because there is no `.sum()`/`.fold()` anywhere on the path.
+pub fn fsum(xs: impl IntoIterator<Item = f64>) -> f64 {
+    let mut acc = 0.0f64;
+    for x in xs {
+        acc += x;
+    }
+    acc
+}
+
+/// Fixed-order f32 sum; see [`fsum`].
+pub fn fsum32(xs: impl IntoIterator<Item = f32>) -> f32 {
+    let mut acc = 0.0f32;
+    for x in xs {
+        acc += x;
+    }
+    acc
+}
+
+/// Fixed-order usize sum; see [`fsum`]. Integer addition commutes, but
+/// routing counts through the same helper keeps spawn-reachable code
+/// free of bare iterator reductions.
+pub fn usum(xs: impl IntoIterator<Item = usize>) -> usize {
+    let mut acc = 0usize;
+    for x in xs {
+        acc += x;
+    }
+    acc
 }
 
 /// Straggler max over non-negative stage delays (Eqs. 16/17): the
@@ -170,6 +213,16 @@ mod tests {
         // including the negative-signed NaN x86 produces for 0*inf.
         assert!(stage_max([1.0, f64::NAN, 2.0]).is_nan());
         assert!(stage_max([1.0, -f64::NAN]).is_nan());
+    }
+
+    #[test]
+    fn fixed_order_sums_match_iterator_sum() {
+        let xs = [0.1, 0.7, 1e16, -1e16, 0.3];
+        assert_eq!(fsum(xs.iter().copied()), xs.iter().copied().sum::<f64>());
+        assert_eq!(fsum(std::iter::empty()), 0.0);
+        let ys = [0.5f32, 1.25, -0.75];
+        assert_eq!(fsum32(ys.iter().copied()), ys.iter().copied().sum::<f32>());
+        assert_eq!(usum([3usize, 4, 5]), 12);
     }
 
     #[test]

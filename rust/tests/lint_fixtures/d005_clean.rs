@@ -1,0 +1,16 @@
+// D005 clean fixture: runtime knobs arrive through configuration the
+// caller resolved once at the entry point (main.rs is the sanctioned
+// environment reader), so library behavior is a function of its
+// arguments alone.
+pub struct Knobs {
+    pub threads: usize,
+    pub profile: Option<String>,
+}
+
+pub fn threads(knobs: &Knobs) -> usize {
+    knobs.threads.max(1)
+}
+
+pub fn profile(knobs: &Knobs) -> &str {
+    knobs.profile.as_deref().unwrap_or("default")
+}

@@ -1,0 +1,17 @@
+// D005 firing fixture: environment reads in library code make a run's
+// output depend on ambient shell state instead of the config file and
+// CLI flags the provenance record captures.
+pub fn threads() -> usize {
+    std::env::var("SFLLM_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+}
+
+pub fn build_dir() -> &'static str {
+    env!("CARGO_MANIFEST_DIR")
+}
+
+pub fn maybe_profile() -> Option<&'static str> {
+    option_env!("SFLLM_PROFILE")
+}
