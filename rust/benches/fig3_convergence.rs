@@ -61,6 +61,8 @@ fn main() -> Result<()> {
             optimizer: OptKind::Adam,
             byte_corpus: false,
             save_adapters: None,
+            retry_budget: 2,
+            retry_backoff_s: 0.05,
             seed: 42, // same data/placement for every rank
         };
         let v2 = variant.clone();

@@ -280,6 +280,8 @@ fn main() -> anyhow::Result<()> {
         optimizer: OptKind::Sgd,
         byte_corpus: false,
         save_adapters: None,
+        retry_budget: 2,
+        retry_backoff_s: 0.05,
         seed: 1,
     };
     let report = train(&opts, || Ok(Box::new(MockModel::new(8, 64, 192))))?;

@@ -40,6 +40,8 @@ fn run(variant: &str, clients: usize, rounds: usize) -> Result<f64> {
         optimizer: OptKind::Adam,
         byte_corpus: false,
         save_adapters: None,
+        retry_budget: 2,
+        retry_backoff_s: 0.05,
         seed: 42,
     };
     let v = variant.to_string();

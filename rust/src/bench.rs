@@ -2,8 +2,8 @@
 //!
 //! Runs the `micro_hotpath` axes — the optimizer pieces the BCD loop
 //! and the round-varying simulator hit per iteration/round — and emits
-//! a machine-readable JSON report (`BENCH_pr8.json`) so the repo's perf
-//! trajectory is tracked in CI instead of living in bench stdout:
+//! a machine-readable JSON report (`BENCH_pr10.json`) so the repo's
+//! perf trajectory is tracked in CI instead of living in bench stdout:
 //!
 //! * `algorithm2` — the heap-based Algorithm 2 vs the naive reference
 //!   scan at K ∈ {5, 100, 1000} on the `many_clients` preset;
@@ -23,6 +23,11 @@
 //!   `round_ms` is O(cohort), so it must stay flat (CI asserts ≤2x
 //!   between 10^3 and 10^5) while `select_us` — the only O(population)
 //!   step — is tracked separately;
+//! * `faults` — full dynamic runs under each fault-matrix level
+//!   (none / light / heavy, `sim::faults::matrix_levels`) on the same
+//!   paper-preset run as the `dynamic` axis; the `none` level's
+//!   `overhead_vs_clean` against the injector-free `run()` loop is the
+//!   zero-fault-overhead number CI gates at <2%;
 //! * `service` — the allocator service replaying a pure tick stream vs
 //!   the closed-loop `RoundSimulator` on the identical run: the cost of
 //!   event dispatch, sink streaming, and per-run session (re)build —
@@ -105,6 +110,22 @@ pub struct DynPoint {
     pub fresh_solves: usize,
 }
 
+/// One fault-matrix level on the `faults` axis: a full dynamic run on
+/// the paper preset under the level's plan (PR-10).
+#[derive(Clone, Debug)]
+pub struct FaultsPoint {
+    pub level: String,
+    pub ms: f64,
+    pub rounds: usize,
+    pub faults_injected: usize,
+    pub repair_max: u8,
+    /// Per-run time relative to the injector-free `run()` loop. On the
+    /// `none` level this is the zero-fault overhead of the PR-10 fault
+    /// plumbing, which CI gates at <1.02 (the empty plan constructs no
+    /// injector and must execute the same statements `run` always has).
+    pub overhead_vs_clean: f64,
+}
+
 /// One population scaling point: cohort selection + per-round cost on
 /// the `metro_population` preset at a fixed cohort of 64.
 #[derive(Clone, Debug)]
@@ -150,6 +171,7 @@ pub struct BenchReport {
     pub solve_cached: Vec<SolvePoint>,
     pub grid_scan: GridScanPoint,
     pub dynamic: Vec<DynPoint>,
+    pub faults: Vec<FaultsPoint>,
     pub population: Vec<PopPoint>,
     pub service: ServicePoint,
     pub analysis: AnalysisPoint,
@@ -394,6 +416,34 @@ pub fn run(opts: &BenchOptions) -> Result<BenchReport> {
         });
     }
 
+    // --- fault-matrix levels on the same dynamic run --------------------
+    // the `none` level gates PR-10's promise that the fault plumbing is
+    // free when unused: the empty plan constructs no injector, so its
+    // per-run time must sit within noise of the plain `run()` loop
+    let clean_s = time_auto(budget.max(0.3), || {
+        let r = sim.run(&proposed, ReOptStrategy::Periodic(5)).unwrap();
+        std::hint::black_box(r.realized_delay);
+    });
+    let mut faults = Vec::new();
+    for (name, plan) in crate::sim::faults::matrix_levels(0xFA17) {
+        eprintln!("bench: faults axis level {name} ...");
+        let probe = sim.run_faulted(&proposed, ReOptStrategy::Periodic(5), &plan)?;
+        let s = time_auto(budget.max(0.3), || {
+            let r = sim
+                .run_faulted(&proposed, ReOptStrategy::Periodic(5), &plan)
+                .unwrap();
+            std::hint::black_box(r.realized_delay);
+        });
+        faults.push(FaultsPoint {
+            level: name.to_string(),
+            ms: s * 1e3,
+            rounds: probe.rounds.len(),
+            faults_injected: probe.faults_injected,
+            repair_max: probe.repair_max,
+            overhead_vs_clean: s / clean_s,
+        });
+    }
+
     // --- population scaling at fixed cohort ----------------------------
     let population = population_axis(budget)?;
 
@@ -462,6 +512,7 @@ pub fn run(opts: &BenchOptions) -> Result<BenchReport> {
         solve_cached,
         grid_scan,
         dynamic,
+        faults,
         population,
         service,
         analysis,
@@ -501,6 +552,14 @@ impl BenchReport {
             println!(
                 "  {:<16} {:>10.2} ms/run   ({} rounds, {} fresh solves)",
                 p.strategy, p.ms, p.rounds, p.fresh_solves
+            );
+        }
+        println!("\nfault-matrix levels (paper preset, periodic:5):");
+        for p in &self.faults {
+            println!(
+                "  {:<8} {:>10.2} ms/run   overhead vs clean {:>6.3}x   \
+                 ({} rounds, {} faults, max repair tier {})",
+                p.level, p.ms, p.overhead_vs_clean, p.rounds, p.faults_injected, p.repair_max
             );
         }
         println!("\npopulation scaling (metro_population, cohort fixed):");
@@ -570,6 +629,23 @@ impl BenchReport {
                 )
             })
             .collect();
+        let faults: Vec<String> = self
+            .faults
+            .iter()
+            .map(|p| {
+                format!(
+                    "{{\"level\": \"{}\", \"ms\": {}, \"rounds\": {}, \
+                     \"faults_injected\": {}, \"repair_max\": {}, \
+                     \"overhead_vs_clean\": {}}}",
+                    p.level,
+                    jnum(p.ms),
+                    p.rounds,
+                    p.faults_injected,
+                    p.repair_max,
+                    jnum(p.overhead_vs_clean)
+                )
+            })
+            .collect();
         let population: Vec<String> = self
             .population
             .iter()
@@ -603,12 +679,13 @@ impl BenchReport {
         );
         let rustc = self.rustc.replace('\\', "\\\\").replace('"', "\\\"");
         format!(
-            "{{\n  \"schema\": \"sfllm-bench-v1\",\n  \"pr\": \"pr9\",\n  \
+            "{{\n  \"schema\": \"sfllm-bench-v1\",\n  \"pr\": \"pr10\",\n  \
              \"provenance\": \"generated by `sfllm bench`\",\n  \"unix_time\": {unix},\n  \
              \"rustc\": \"{rustc}\",\n  \
              \"axes\": {{\n    \"algorithm2\": [{}],\n    \"p2_power\": [{}],\n    \
              \"solve_cached\": [{}],\n    \"grid_scan\": {{\"clone_us\": {}, \"cached_us\": {}, \
-             \"speedup\": {}}},\n    \"dynamic\": [{}],\n    \"population\": [{}],\n    \
+             \"speedup\": {}}},\n    \"dynamic\": [{}],\n    \"faults\": [{}],\n    \
+             \"population\": [{}],\n    \
              \"service\": {service},\n    \"analysis\": {analysis}\n  }}\n}}\n",
             algorithm2.join(", "),
             p2.join(", "),
@@ -617,6 +694,7 @@ impl BenchReport {
             jnum(self.grid_scan.cached_us),
             jnum(self.grid_scan.speedup),
             dynamic.join(", "),
+            faults.join(", "),
             population.join(", ")
         )
     }
@@ -657,6 +735,14 @@ mod tests {
                 rounds: 28,
                 fresh_solves: 27,
             }],
+            faults: vec![FaultsPoint {
+                level: "none".to_string(),
+                ms: 41.8,
+                rounds: 28,
+                faults_injected: 0,
+                repair_max: 0,
+                overhead_vs_clean: 1.005,
+            }],
             population: vec![PopPoint {
                 population: 100_000,
                 cohort: 64,
@@ -675,7 +761,7 @@ mod tests {
         };
         let j = crate::util::json::Json::parse(&rep.to_json_string()).unwrap();
         assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "sfllm-bench-v1");
-        assert_eq!(j.get("pr").unwrap().as_str().unwrap(), "pr9");
+        assert_eq!(j.get("pr").unwrap().as_str().unwrap(), "pr10");
         // provenance: a real timestamp plus the (escaped) toolchain string
         assert!(j.get("unix_time").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(j.get("rustc").unwrap().as_str().unwrap(), "rustc 1.0.0 (\"quoted\")");
@@ -686,6 +772,7 @@ mod tests {
             "solve_cached",
             "grid_scan",
             "dynamic",
+            "faults",
             "population",
             "service",
             "analysis",
@@ -697,6 +784,11 @@ mod tests {
         assert!(a2.get("speedup").unwrap().as_f64().unwrap() > 1.0);
         let d = &axes.get("dynamic").unwrap().as_arr().unwrap()[0];
         assert_eq!(d.get("fresh_solves").unwrap().as_usize().unwrap(), 27);
+        let f = &axes.get("faults").unwrap().as_arr().unwrap()[0];
+        assert_eq!(f.get("level").unwrap().as_str().unwrap(), "none");
+        assert_eq!(f.get("faults_injected").unwrap().as_usize().unwrap(), 0);
+        let overhead = f.get("overhead_vs_clean").unwrap().as_f64().unwrap();
+        assert!(overhead > 0.9 && overhead < 1.02, "zero-fault overhead {overhead}");
         let p = &axes.get("population").unwrap().as_arr().unwrap()[0];
         assert_eq!(p.get("population").unwrap().as_usize().unwrap(), 100_000);
         assert_eq!(p.get("cohort").unwrap().as_usize().unwrap(), 64);

@@ -189,6 +189,55 @@ impl Default for PopulationConfig {
     }
 }
 
+/// Fault-injection parameters consumed by
+/// [`crate::sim::FaultPlan::from_config`] (the TOML spelling of a
+/// `--faults` spec). The defaults are the empty plan: a config that
+/// never touches `[faults]` injects nothing and moves no bits.
+#[derive(Clone, Debug)]
+pub struct FaultsConfig {
+    /// Seed of the injector's own counter-based streams (independent
+    /// of the scenario / dynamics / population seeds).
+    pub seed: u64,
+    /// Per-client per-round crash probability; a crashed client is
+    /// offline for `crash_rounds` rounds.
+    pub crash_rate: f64,
+    pub crash_rounds: usize,
+    /// Per-client per-round compute-stall probability; a stalled
+    /// client's `f` is multiplied by `stall_factor` in (0, 1].
+    pub stall_rate: f64,
+    pub stall_factor: f64,
+    pub stall_rounds: usize,
+    /// Per-client per-round main-uplink outage probability; the gain
+    /// is multiplied by `outage_factor` in [0, 1] (0 = total outage).
+    pub outage_rate: f64,
+    pub outage_factor: f64,
+    pub outage_rounds: usize,
+    /// Per-round federated-server blackout probability; every fed
+    /// gain is multiplied by `blackout_factor` in [0, 1].
+    pub blackout_rate: f64,
+    pub blackout_factor: f64,
+    pub blackout_rounds: usize,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        FaultsConfig {
+            seed: 0xFA17,
+            crash_rate: 0.0,
+            crash_rounds: 1,
+            stall_rate: 0.0,
+            stall_factor: 0.5,
+            stall_rounds: 1,
+            outage_rate: 0.0,
+            outage_factor: 0.0,
+            outage_rounds: 1,
+            blackout_rate: 0.0,
+            blackout_factor: 1e-4,
+            blackout_rounds: 1,
+        }
+    }
+}
+
 /// Optimization-objective and energy-model parameters consumed by
 /// [`crate::opt::Objective::from_config`] and the energy evaluation
 /// paths. The defaults reproduce the paper exactly: a pure-delay
@@ -240,6 +289,8 @@ pub struct Config {
     pub population: PopulationConfig,
     /// Optimization objective / energy model (pure delay by default).
     pub objective: ObjectiveConfig,
+    /// Fault injection (empty plan by default — bit-transparent).
+    pub faults: FaultsConfig,
     /// Model variant name for the workload model ("gpt2-s", "gpt2-m", "tiny").
     pub model: String,
 }
@@ -252,6 +303,7 @@ impl Config {
             dynamics: DynamicsConfig::default(),
             population: PopulationConfig::default(),
             objective: ObjectiveConfig::default(),
+            faults: FaultsConfig::default(),
             model: "gpt2-s".to_string(),
         }
     }
@@ -316,6 +368,19 @@ impl Config {
         p.selector = doc.str_or("population.selector", &p.selector)?;
         p.deadline_drop = doc.f64_or("population.deadline_drop", p.deadline_drop)?;
         p.seed = doc.usize_or("population.seed", p.seed as usize)? as u64;
+        let f = &mut c.faults;
+        f.seed = doc.usize_or("faults.seed", f.seed as usize)? as u64;
+        f.crash_rate = doc.f64_or("faults.crash_rate", f.crash_rate)?;
+        f.crash_rounds = doc.usize_or("faults.crash_rounds", f.crash_rounds)?;
+        f.stall_rate = doc.f64_or("faults.stall_rate", f.stall_rate)?;
+        f.stall_factor = doc.f64_or("faults.stall_factor", f.stall_factor)?;
+        f.stall_rounds = doc.usize_or("faults.stall_rounds", f.stall_rounds)?;
+        f.outage_rate = doc.f64_or("faults.outage_rate", f.outage_rate)?;
+        f.outage_factor = doc.f64_or("faults.outage_factor", f.outage_factor)?;
+        f.outage_rounds = doc.usize_or("faults.outage_rounds", f.outage_rounds)?;
+        f.blackout_rate = doc.f64_or("faults.blackout_rate", f.blackout_rate)?;
+        f.blackout_factor = doc.f64_or("faults.blackout_factor", f.blackout_factor)?;
+        f.blackout_rounds = doc.usize_or("faults.blackout_rounds", f.blackout_rounds)?;
         let o = &mut c.objective;
         o.kind = doc.str_or("objective.kind", &o.kind)?;
         o.lambda = doc.f64_or("objective.lambda", o.lambda)?;
@@ -486,6 +551,35 @@ mod tests {
         assert_eq!(c.objective.zeta, 2e-28);
         // untouched objective keys keep their defaults
         assert!(c.objective.budget_j.is_infinite());
+    }
+
+    #[test]
+    fn faults_default_empty_and_toml_overridable() {
+        let c = Config::paper_defaults();
+        assert_eq!(c.faults.crash_rate, 0.0);
+        assert_eq!(c.faults.stall_rate, 0.0);
+        assert_eq!(c.faults.outage_rate, 0.0);
+        assert_eq!(c.faults.blackout_rate, 0.0);
+        assert_eq!(c.faults.seed, 0xFA17);
+        let doc = TomlDoc::parse(
+            "[faults]\ncrash_rate = 0.1\ncrash_rounds = 2\nstall_rate = 0.05\n\
+             stall_factor = 0.25\noutage_rate = 0.2\noutage_factor = 0.0\n\
+             blackout_rate = 0.01\nblackout_factor = 1e-3\nseed = 77\n",
+        )
+        .unwrap();
+        let c = Config::from_toml(&doc).unwrap();
+        assert_eq!(c.faults.crash_rate, 0.1);
+        assert_eq!(c.faults.crash_rounds, 2);
+        assert_eq!(c.faults.stall_rate, 0.05);
+        assert_eq!(c.faults.stall_factor, 0.25);
+        assert_eq!(c.faults.outage_rate, 0.2);
+        assert_eq!(c.faults.outage_factor, 0.0);
+        assert_eq!(c.faults.blackout_rate, 0.01);
+        assert_eq!(c.faults.blackout_factor, 1e-3);
+        assert_eq!(c.faults.seed, 77);
+        // untouched fault keys keep their defaults
+        assert_eq!(c.faults.stall_rounds, 1);
+        assert_eq!(c.faults.blackout_rounds, 1);
     }
 
     #[test]

@@ -5,16 +5,19 @@
 //! crate set), carried over [`crate::util::codec`] since PR-8:
 //!
 //! ```text
-//! magic "SFLA" | u32 version (= 1)
+//! magic "SFLA" | u32 version (= 2)
 //! u32 n_tensors
 //! per tensor: u32 name_len | name bytes | u32 ndim | u32 dims... | f32 data...
+//! u32 crc32 of everything above (IEEE, little-endian) — since v2
 //! ```
 //!
 //! The header is the versioning contract: a magic mismatch means "this
 //! is not an adapter checkpoint at all", a version mismatch means "a
 //! different schema wrote this" — both fail descriptively instead of
-//! misparsing bytes. [`encode`]/[`decode`] expose the byte form so
-//! other artifacts (e.g. a service checkpoint) can embed adapter sets
+//! misparsing bytes; a CRC mismatch (v2, PR-10) means the body was
+//! corrupted in storage or transit, caught before any tensor is
+//! trusted. [`encode`]/[`decode`] expose the byte form so other
+//! artifacts (e.g. a service checkpoint) can embed adapter sets
 //! verbatim.
 
 use std::path::Path;
@@ -22,10 +25,11 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::model::lora::{AdapterSet, Tensor};
-use crate::util::codec::{BinReader, BinWriter};
+use crate::util::codec::{self, BinReader, BinWriter};
 
 const MAGIC: &[u8; 4] = b"SFLA";
-const VERSION: u32 = 1;
+/// v2 (PR-10): seals the body with a CRC32 footer.
+const VERSION: u32 = 2;
 /// Guard rails against reading a corrupt length as an allocation size.
 const MAX_NAME_LEN: usize = 4096;
 const MAX_NDIM: usize = 8;
@@ -44,20 +48,28 @@ pub fn encode(set: &AdapterSet) -> Vec<u8> {
             w.f32(v);
         }
     }
-    w.into_bytes()
+    let mut bytes = w.into_bytes();
+    codec::append_crc32(&mut bytes);
+    bytes
 }
 
 /// Parse checkpoint bytes (see the module docs for the format).
 pub fn decode(bytes: &[u8]) -> Result<AdapterSet> {
-    let mut r = BinReader::new(bytes);
-    r.expect_magic(MAGIC, "SfLLM adapter checkpoint")?;
-    let version = r.u32("adapter checkpoint version")?;
+    // magic/version first: a wrong or outdated file should say so, not
+    // fail an integrity check it never promised to pass
+    let mut peek = BinReader::new(bytes);
+    peek.expect_magic(MAGIC, "SfLLM adapter checkpoint")?;
+    let version = peek.u32("adapter checkpoint version")?;
     if version != VERSION {
         bail!(
             "unsupported adapter checkpoint version {version} \
              (this build reads version {VERSION})"
         );
     }
+    let payload = codec::check_crc32(bytes, "adapter checkpoint")?;
+    let mut r = BinReader::new(payload);
+    r.expect_magic(MAGIC, "SfLLM adapter checkpoint")?;
+    r.u32("adapter checkpoint version")?;
     let n = r.u32("tensor count")? as usize;
     let mut tensors = Vec::new();
     for _ in 0..n {
@@ -184,23 +196,41 @@ mod tests {
         let err = decode(&bad_version).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("version 99"), "{msg}");
-        assert!(msg.contains("reads version 1"), "{msg}");
+        assert!(msg.contains("reads version 2"), "{msg}");
 
         // header cut mid-version
         let err = decode(&good[..6]).unwrap_err();
         assert!(format!("{err:#}").contains("truncated"), "{err:#}");
 
-        // oversized name length is rejected before allocation
+        // oversized name length is rejected before allocation — the
+        // CRC is recomputed so the corruption reaches the parser
         let mut bad_name = good.clone();
         // first tensor's name_len sits right after magic+version+count
         bad_name[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+        bad_name.truncate(bad_name.len() - 4);
+        crate::util::codec::append_crc32(&mut bad_name);
         assert!(decode(&bad_name).is_err());
 
-        // trailing garbage after a well-formed body
+        // trailing garbage desynchronizes the CRC footer
         let mut trailing = good.clone();
         trailing.extend_from_slice(b"junk");
         let err = decode(&trailing).unwrap_err();
-        assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+        assert!(format!("{err:#}").contains("CRC32 integrity check"), "{err:#}");
+    }
+
+    #[test]
+    fn a_single_bit_flip_anywhere_in_the_body_is_caught() {
+        let good = encode(&sample());
+        // flip a bit in the middle of the tensor data, past every
+        // header check the parser would have caught on its own
+        let mut bad = good.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x40;
+        let err = decode(&bad).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("CRC32 integrity check"),
+            "{err:#}"
+        );
     }
 
     #[test]

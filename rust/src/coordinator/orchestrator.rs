@@ -52,6 +52,16 @@ pub struct TrainOptions {
     /// If set, save the final global client/server adapters here
     /// (`<path>.client.ckpt` / `<path>.server.ckpt`).
     pub save_adapters: Option<String>,
+    /// Transient-failure retry budget per server step (PR-10): a failed
+    /// `server_step` is re-attempted up to this many times before the
+    /// client is dropped from the step (training) or the error
+    /// propagates (validation). 0 restores the pre-PR-10 fail-fast.
+    pub retry_budget: usize,
+    /// Virtual backoff charged per retry, doubling each attempt —
+    /// *accounted* in [`TrainReport::backoff_s`], never slept (the
+    /// coordinator takes no ambient clock reads; see
+    /// [`crate::util::clock`]).
+    pub retry_backoff_s: f64,
     pub seed: u64,
 }
 
@@ -70,6 +80,8 @@ impl Default for TrainOptions {
             optimizer: OptKind::Adam,
             byte_corpus: false,
             save_adapters: None,
+            retry_budget: 2,
+            retry_backoff_s: 0.05,
             seed: 42,
         }
     }
@@ -95,6 +107,15 @@ pub struct TrainReport {
     pub final_ppl: f64,
     pub fed_rounds: usize,
     pub walltime: PhaseWalltime,
+    /// Transient `server_step` failures that a retry recovered (PR-10).
+    pub retries: usize,
+    /// Client-steps dropped after the retry budget was exhausted: the
+    /// client sat the step out (zero activation gradient, no loss
+    /// contribution) instead of aborting the run.
+    pub dropped_client_steps: usize,
+    /// Total virtual backoff the retries would have cost — accounted,
+    /// never slept, so retried runs stay bit-deterministic.
+    pub backoff_s: f64,
     /// Final global client adapters and server adapters.
     pub client_adapters: AdapterSet,
     pub server_adapters: AdapterSet,
@@ -108,6 +129,51 @@ impl TrainReport {
             .iter()
             .find(|&&(_, l)| l <= target)
             .map(|&(s, _)| s)
+    }
+}
+
+/// Bounded deterministic retry over a fallible device call (PR-10).
+/// Backoff is charged to a virtual accumulator, doubling per attempt —
+/// never slept, so a retried run's outputs are bit-identical to a run
+/// where the transient failure never happened (property-tested below).
+struct RetryState {
+    budget: usize,
+    base_backoff_s: f64,
+    retries: usize,
+    dropped: usize,
+    backoff_total_s: f64,
+}
+
+impl RetryState {
+    fn new(opts: &TrainOptions) -> RetryState {
+        RetryState {
+            budget: opts.retry_budget,
+            base_backoff_s: opts.retry_backoff_s,
+            retries: 0,
+            dropped: 0,
+            backoff_total_s: 0.0,
+        }
+    }
+
+    /// Run `f`, re-attempting up to `budget` times; on exhaustion the
+    /// *last* error is returned so the root cause stays in the chain.
+    fn attempt<T>(&mut self, mut f: impl FnMut() -> Result<T>) -> Result<T> {
+        let mut backoff = self.base_backoff_s;
+        let mut tries = 0usize;
+        loop {
+            match f() {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    if tries >= self.budget {
+                        return Err(e);
+                    }
+                    tries += 1;
+                    self.retries += 1;
+                    self.backoff_total_s += backoff;
+                    backoff *= 2.0;
+                }
+            }
+        }
     }
 }
 
@@ -233,6 +299,7 @@ where
     let mut train_loss = Vec::with_capacity(total_steps);
     let mut val_loss = Vec::new();
     let mut wall = PhaseWalltime::default();
+    let mut retry = RetryState::new(opts);
 
     for step in 1..=total_steps {
         // phase c/d: collect K uploads, compute, average server grads
@@ -245,31 +312,58 @@ where
         }
         let mut grad_acc: Option<AdapterSet> = None;
         let mut step_loss = 0.0f64;
+        let mut successes = 0usize;
+        let mut last_err: Option<anyhow::Error> = None;
         let mut ds_out: Vec<Option<Vec<f32>>> = (0..k_n).map(|_| None).collect();
         for u in uploads.iter().flatten() {
-            let out = device.server_step(&server_adapters, &u.s, &u.tokens, &u.mask)?;
-            step_loss += out.loss as f64;
-            ds_out[u.client] = Some(out.ds);
-            grad_acc = Some(match grad_acc {
-                None => out.server_grads,
-                Some(mut acc) => {
-                    for (a, g) in acc.tensors.iter_mut().zip(&out.server_grads.tensors) {
-                        for (av, gv) in a.data.iter_mut().zip(&g.data) {
-                            *av += gv;
+            match retry.attempt(|| device.server_step(&server_adapters, &u.s, &u.tokens, &u.mask))
+            {
+                Ok(out) => {
+                    successes += 1;
+                    step_loss += out.loss as f64;
+                    ds_out[u.client] = Some(out.ds);
+                    grad_acc = Some(match grad_acc {
+                        None => out.server_grads,
+                        Some(mut acc) => {
+                            for (a, g) in acc.tensors.iter_mut().zip(&out.server_grads.tensors) {
+                                for (av, gv) in a.data.iter_mut().zip(&g.data) {
+                                    *av += gv;
+                                }
+                            }
+                            acc
                         }
-                    }
-                    acc
+                    });
                 }
-            });
+                Err(e) => {
+                    // retry budget exhausted: this client sits the step
+                    // out — a zero activation gradient keeps its local
+                    // loop in lockstep without contributing an update
+                    retry.dropped += 1;
+                    ds_out[u.client] = Some(vec![0.0f32; u.s.len()]);
+                    last_err = Some(e);
+                }
+            }
         }
-        // combined-batch update (Eq. 5): average the K gradient sets
-        let mut grads = grad_acc.context("no uploads received")?;
-        let inv = 1.0 / k_n as f32;
+        // combined-batch update (Eq. 5): average the surviving gradient
+        // sets (all K on a healthy step, so the fault-free bytes are
+        // unchanged)
+        let mut grads = match grad_acc {
+            Some(g) => g,
+            None => {
+                let e = last_err.unwrap_or_else(|| anyhow!("no uploads received"));
+                return Err(e.context(format!(
+                    "every client's server step failed at step {step} \
+                     (retry budget {} exhausted): no combined-batch update possible",
+                    opts.retry_budget
+                )));
+            }
+        };
+        let inv = 1.0 / successes as f32;
         for t in &mut grads.tensors {
             t.data.iter_mut().for_each(|v| *v *= inv);
         }
         server_opt.step(&mut server_adapters, &grads)?;
-        train_loss.push(step_loss / k_n as f64);
+        train_loss.push(step_loss / successes as f64);
         wall.server_compute += clock.now() - t0;
 
         // phase e: ship activation gradients back
@@ -301,8 +395,14 @@ where
             let mut vl = 0.0f64;
             for b in 0..opts.eval_batches {
                 let batch = val_batcher.eval_batch(b * init.batch);
-                let s = device.client_forward(&global_client_adapters, &batch.tokens)?;
-                let out = device.server_step(&server_adapters, &s, &batch.tokens, &batch.mask)?;
+                let s = retry
+                    .attempt(|| device.client_forward(&global_client_adapters, &batch.tokens))
+                    .with_context(|| format!("validation forward at step {step}"))?;
+                let out = retry
+                    .attempt(|| {
+                        device.server_step(&server_adapters, &s, &batch.tokens, &batch.mask)
+                    })
+                    .with_context(|| format!("validation server step at step {step}"))?;
                 vl += out.loss as f64;
             }
             val_loss.push((step, vl / opts.eval_batches as f64));
@@ -328,6 +428,9 @@ where
         final_ppl,
         fed_rounds: fed.rounds,
         walltime: wall,
+        retries: retry.retries,
+        dropped_client_steps: retry.dropped,
+        backoff_s: retry.backoff_total_s,
         client_adapters: global_client_adapters,
         server_adapters,
     })
@@ -352,6 +455,8 @@ mod tests {
             optimizer: OptKind::Sgd, // mock dynamics assume plain SGD
             byte_corpus: false,
             save_adapters: None,
+            retry_budget: 2,
+            retry_backoff_s: 0.05,
             seed: 11,
         }
     }
@@ -461,11 +566,15 @@ mod tests {
         assert_eq!(r.fed_rounds, 3);
     }
 
-    /// Mock whose server_step starts failing after N calls — verifies
-    /// the orchestrator propagates device errors instead of hanging.
+    /// Mock whose `server_step` fails on 1-based calls in
+    /// `(fail_from, fail_to]`: a finite window models a transient fault
+    /// that recovers (the PR-10 retry path), `fail_to == usize::MAX`
+    /// models a dead device. Failed calls bail *before* reaching the
+    /// inner mock, so its state sees exactly the successful sequence.
     struct FailingModel {
         inner: MockModel,
-        fail_after: usize,
+        fail_from: usize,
+        fail_to: usize,
         calls: std::cell::Cell<usize>,
     }
 
@@ -503,8 +612,9 @@ mod tests {
             m: &[f32],
         ) -> anyhow::Result<crate::runtime::StepOutput> {
             self.calls.set(self.calls.get() + 1);
-            if self.calls.get() > self.fail_after {
-                anyhow::bail!("injected device failure");
+            let n = self.calls.get();
+            if n > self.fail_from && n <= self.fail_to {
+                anyhow::bail!("injected device failure (call {n})");
             }
             self.inner.server_step(a, s, t, m)
         }
@@ -523,12 +633,77 @@ mod tests {
         let err = train(&opts(), || {
             Ok(Box::new(FailingModel {
                 inner: MockModel::new(2, 64, 3),
-                fail_after: 4,
+                fail_from: 4,
+                fail_to: usize::MAX,
                 calls: std::cell::Cell::new(0),
             }))
         });
         let msg = format!("{:#}", err.expect_err("must fail"));
         assert!(msg.contains("injected device failure"), "{msg}");
+        assert!(msg.contains("retry budget"), "{msg}");
+    }
+
+    #[test]
+    fn transient_failure_is_retried_to_identical_bytes() {
+        let baseline = train(&opts(), || Ok(Box::new(MockModel::new(2, 64, 3)))).unwrap();
+        // exactly one call (the 6th) fails once; the retry recovers it
+        let retried = train(&opts(), || {
+            Ok(Box::new(FailingModel {
+                inner: MockModel::new(2, 64, 3),
+                fail_from: 5,
+                fail_to: 6,
+                calls: std::cell::Cell::new(0),
+            }))
+        })
+        .unwrap();
+        assert_eq!(retried.retries, 1);
+        assert_eq!(retried.dropped_client_steps, 0);
+        assert_eq!(retried.backoff_s, 0.05, "one retry charges one base backoff");
+        // the recovered run is bit-identical to one that never failed
+        assert_eq!(baseline.train_loss.len(), retried.train_loss.len());
+        for (a, b) in baseline.train_loss.iter().zip(&retried.train_loss) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(baseline.val_loss, retried.val_loss);
+        assert_eq!(baseline.final_ppl.to_bits(), retried.final_ppl.to_bits());
+        for (a, b) in baseline
+            .client_adapters
+            .tensors
+            .iter()
+            .zip(&retried.client_adapters.tensors)
+        {
+            assert_eq!(a.data, b.data);
+        }
+        for (a, b) in baseline
+            .server_adapters
+            .tensors
+            .iter()
+            .zip(&retried.server_adapters.tensors)
+        {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn exhausted_retries_drop_the_client_not_the_run() {
+        // calls 5..=7 fail: client 1's step-2 call plus both its
+        // retries — the budget exhausts and the client sits the step out
+        let r = train(&opts(), || {
+            Ok(Box::new(FailingModel {
+                inner: MockModel::new(2, 64, 3),
+                fail_from: 4,
+                fail_to: 7,
+                calls: std::cell::Cell::new(0),
+            }))
+        })
+        .unwrap();
+        assert_eq!(r.retries, 2, "the full budget was spent before dropping");
+        assert_eq!(r.dropped_client_steps, 1);
+        assert!(r.backoff_s > 0.05, "backoff doubles across the two retries");
+        // the run itself completed every round
+        assert_eq!(r.train_loss.len(), 12);
+        assert_eq!(r.fed_rounds, 3);
+        assert!(r.final_ppl.is_finite());
     }
 
     #[test]

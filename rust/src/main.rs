@@ -30,7 +30,17 @@
 //!                checkpoints (`--checkpoint-out`, every N ticks via
 //!                `--checkpoint-every` or on in-stream
 //!                `checkpoint_requested` events), and resuming a
-//!                checkpointed run bit-identically (`--resume`);
+//!                checkpointed run bit-identically (`--resume`, which
+//!                falls back to the rotated `.prev` artifact when the
+//!                primary checkpoint is corrupt; `--lenient` skips
+//!                malformed event lines with line-numbered warnings
+//!                instead of aborting);
+//! * `chaos`    — play the fault-matrix ladder (none/light/heavy,
+//!                [`sfllm::sim::faults::matrix_levels`]) across presets
+//!                through the matching engine, assert the zero-fault
+//!                level is bit-identical to the fault-free baseline,
+//!                and emit the degradation matrix (`--json`,
+//!                `--trace-dir`);
 //! * `bench`    — run the tracked perf axes (heap Algorithm 2 vs the
 //!                naive reference, warm vs cold P2, full-solve and
 //!                dynamic-run scaling) and emit the machine-readable
@@ -60,7 +70,10 @@
 //! rather than aborting the sweep. `dynamic` takes `--strategies`
 //! (comma-separated strategy specs) and `--rounds-out` (per-round CSV
 //! trace of the first policy × strategy pair, including realized
-//! energy).
+//! energy). `dynamic` and `population` take `--faults <spec>` (see
+//! [`sfllm::sim::FaultPlan::parse`]; default: the config's `[faults]`
+//! section), replaying each policy × strategy pair under the seeded
+//! deterministic fault schedule.
 //!
 //! Defaults reproduce the paper's Table II setup.
 
@@ -74,8 +87,8 @@ use sfllm::model::{Gpt2Config, WorkloadProfile};
 use sfllm::opt::{AllocationPolicy, PolicyRegistry};
 use sfllm::runtime::{Manifest, SflModel, SflRuntime};
 use sfllm::sim::{
-    DynamicPolicy, Population, PopulationSimulator, ReOptStrategy, RoundSimulator,
-    ScenarioBuilder, SweepAxis, SweepRunner,
+    DynamicOutcome, DynamicPolicy, FaultPlan, Population, PopulationSimulator, ReOptStrategy,
+    RoundSimulator, ScenarioBuilder, SweepAxis, SweepRunner,
 };
 use sfllm::util::cli::Args;
 use sfllm::util::csv::CsvWriter;
@@ -102,6 +115,7 @@ fn run() -> Result<()> {
         "dynamic" => cmd_dynamic(&mut args),
         "population" => cmd_population(&mut args),
         "serve" => cmd_serve(&mut args),
+        "chaos" => cmd_chaos(&mut args),
         "bench" => cmd_bench(&mut args),
         "lint" => cmd_lint(&mut args),
         "table3" => cmd_table3(&mut args),
@@ -109,7 +123,7 @@ fn run() -> Result<()> {
         _ => {
             println!(
                 "sfllm — split federated learning for LLMs (paper reproduction)\n\n\
-                 usage: sfllm <train|optimize|latency|sweep|dynamic|population|serve|bench|lint|table3|info> [--options]\n\n\
+                 usage: sfllm <train|optimize|latency|sweep|dynamic|population|serve|chaos|bench|lint|table3|info> [--options]\n\n\
                  train     run Algorithm 1 over an artifact variant\n\
                  optimize  solve one scenario with a named policy (default: proposed)\n\
                  latency   compare policies (proposed vs baselines a-d) on one scenario\n\
@@ -117,7 +131,10 @@ fn run() -> Result<()> {
                  dynamic   simulate round-varying dynamics, comparing re-opt strategies\n\
                  population  simulate cohort selection over a 10^5-client fleet (O(cohort)/round)\n\
                  serve     replay a JSONL event stream through the allocator service\n\
-                           (--events, --metrics-out, --checkpoint-out, --checkpoint-every, --resume)\n\
+                           (--events, --metrics-out, --checkpoint-out, --checkpoint-every,\n\
+                           --resume, --lenient)\n\
+                 chaos     play the fault-matrix ladder across presets\n\
+                           (--presets, --policy, --strategy, --fault-seed, --json, --trace-dir)\n\
                  bench     run the tracked perf axes (--json <path>, --full)\n\
                  lint      run the determinism/architecture static analysis\n\
                            (--json, --arch-json, --dot-out, --allow-unused)\n\
@@ -164,6 +181,8 @@ fn cmd_train(args: &mut Args) -> Result<()> {
         optimizer: if args.flag("sgd") { OptKind::Sgd } else { OptKind::Adam },
         byte_corpus: args.flag("byte-corpus"),
         save_adapters: args.get("save-adapters"),
+        retry_budget: args.usize_or("retries", 2)?,
+        retry_backoff_s: args.f64_or("retry-backoff", 0.05)?,
         seed: args.u64_or("seed", 42)?,
     };
     let out = args.str_or("out", "results/train.csv");
@@ -349,10 +368,15 @@ fn cmd_dynamic(args: &mut Args) -> Result<()> {
     let draws = args.usize_or("draws", 5)?;
     let out = args.get("out");
     let rounds_out = args.get("rounds-out");
+    let faults_spec = args.get("faults");
     let builder = builder_from_args(args)?;
     args.finish()?;
 
     let cfg = builder.config().clone();
+    let plan = match &faults_spec {
+        Some(s) => FaultPlan::parse(s)?,
+        None => FaultPlan::from_config(&cfg.faults)?,
+    };
     let d = &cfg.dynamics;
     println!(
         "dynamics: rho={} sigma={} dB, compute jitter {}, dropout {} / rejoin {}, seed {}",
@@ -375,6 +399,49 @@ fn cmd_dynamic(args: &mut Args) -> Result<()> {
     }
     let reg = registry_for(&cfg, draws);
     let inners = reg.resolve(&spec)?;
+
+    if !plan.is_empty() {
+        // Fault runs bypass the sweep table: each policy × strategy
+        // pair replays directly through the round simulator so the
+        // degradation columns (faults injected, repair tier) are
+        // visible next to the realized delay.
+        if out.is_some() {
+            bail!("--out (the sweep report) is not available under --faults; use --rounds-out");
+        }
+        println!("faults: {}", plan.label());
+        let conv = ConvergenceModel::paper_default();
+        let scn = builder.build()?;
+        let cache = WorkloadCache::new();
+        let sim = RoundSimulator::new(&scn, &conv, &cache, &cfg.train.ranks);
+        println!("realized total delay (s) under faults, lower is better:");
+        let mut first_run = None;
+        for inner in &inners {
+            for &st in &strategies {
+                let run = sim.run_faulted(inner.as_ref(), st, &plan)?;
+                let name = format!("{}+{}", inner.name(), st.label());
+                println!(
+                    "  {name:28} {:12.2}   ({} faults injected, max repair tier {})",
+                    run.realized_delay, run.faults_injected, run.repair_max
+                );
+                if first_run.is_none() {
+                    first_run = Some((name, run));
+                }
+            }
+        }
+        if let Some(path) = rounds_out {
+            let (name, run) = first_run.expect("at least one policy x strategy ran");
+            sfllm::service::write_rounds_csv(&path, &run.rounds)?;
+            println!(
+                "per-round trace of {name} written to {path} \
+                 (realized {:.2} s / {:.2} kJ vs static prediction {:.2} s)",
+                run.realized_delay,
+                run.realized_energy / 1e3,
+                run.static_prediction
+            );
+        }
+        return Ok(());
+    }
+
     let mut policies: Vec<std::sync::Arc<dyn AllocationPolicy>> = Vec::new();
     for inner in &inners {
         for &st in &strategies {
@@ -455,11 +522,16 @@ fn cmd_population(args: &mut Args) -> Result<()> {
     let strategies_spec = args.str_or("strategies", "one_shot,periodic:5");
     let draws = args.usize_or("draws", 5)?;
     let rounds_out = args.get("rounds-out");
+    let faults_spec = args.get("faults");
     let preset = args.str_or("preset", "metro_population");
     let mut cfg = ScenarioBuilder::preset(&preset)?.into_config();
     cfg.apply_file_and_args(args)?;
     args.finish()?;
 
+    let plan = match &faults_spec {
+        Some(s) => FaultPlan::parse(s)?,
+        None => FaultPlan::from_config(&cfg.faults)?,
+    };
     let pop = Population::new(&cfg)?;
     println!(
         "population: {} modeled clients, cohort {} per round ({}), deadline drop {:.0}%, seed {}",
@@ -474,6 +546,9 @@ fn cmd_population(args: &mut Args) -> Result<()> {
         "dynamics: rho={} sigma={} dB, compute jitter {}, dropout {} / rejoin {}, seed {}",
         d.rho, d.shadow_sigma_db, d.compute_jitter, d.dropout, d.rejoin, d.seed
     );
+    if !plan.is_empty() {
+        println!("faults: {}", plan.label());
+    }
 
     let strategies: Vec<ReOptStrategy> = strategies_spec
         .split(',')
@@ -498,7 +573,7 @@ fn cmd_population(args: &mut Args) -> Result<()> {
         for &st in &strategies {
             // lint:allow(D002) ms/round progress display only; never feeds simulated results
             let t0 = std::time::Instant::now();
-            let out = sim.run(inner.as_ref(), st)?;
+            let out = sim.run_faulted(inner.as_ref(), st, &plan)?;
             let elapsed = t0.elapsed().as_secs_f64();
             let name = format!("{}+{}", inner.name(), st.label());
             let ms_per_round = 1e3 * elapsed / out.rounds.len().max(1) as f64;
@@ -518,6 +593,12 @@ fn cmd_population(args: &mut Args) -> Result<()> {
                 "", out.rounds.len(), out.fresh_solves, out.unique_participants,
                 out.deadline_drops, ms_per_round
             );
+            if !plan.is_empty() {
+                println!(
+                    "  {:28} {} faults injected, max repair tier {}",
+                    "", out.faults_injected, out.repair_max
+                );
+            }
             if first_run.is_none() {
                 first_run = Some((name, out));
             }
@@ -555,6 +636,7 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     let checkpoint_out = args.get("checkpoint-out");
     let checkpoint_every = args.usize_or("checkpoint-every", 0)?;
     let resume = args.get("resume");
+    let lenient = args.flag("lenient");
     args.finish()?;
 
     if checkpoint_every > 0 && checkpoint_out.is_none() {
@@ -563,12 +645,24 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
 
     let text = std::fs::read_to_string(&events_path)
         .with_context(|| format!("reading event stream {events_path}"))?;
-    let events = sfllm::service::parse_events(&text)?;
+    // Strict by default: a malformed line aborts with its line number.
+    // --lenient (PR-10) degrades instead — skip the line, warn with the
+    // same line-numbered diagnostic, and count it in the run summary.
+    let (events, skipped) = if lenient {
+        let (events, skipped) = sfllm::service::parse_events_lenient(&text);
+        for s in &skipped {
+            eprintln!("warning: {events_path}:{}: skipping malformed event: {}", s.line, s.error);
+        }
+        (events, skipped.len())
+    } else {
+        (sfllm::service::parse_events(&text)?, 0)
+    };
     if events.is_empty() {
         bail!("{events_path} contains no events");
     }
 
     let mut svc = sfllm::service::AllocatorService::new();
+    svc.note_skipped_lines(skipped);
     if let Some(path) = &metrics_out {
         svc.add_sink(Box::new(sfllm::service::JsonlSink::create(path)?));
     }
@@ -577,36 +671,26 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     }
 
     // On resume: rebuild the session from the checkpoint, then skip the
-    // prefix of the stream the checkpointed run had already consumed.
+    // prefix of the stream the checkpointed run had already consumed. A
+    // corrupt or truncated primary checkpoint (the CRC32 footer catches
+    // it) degrades to the rotated `.prev` last-good artifact (PR-10).
     let start = if let Some(ck_path) = &resume {
-        let bytes = std::fs::read(ck_path)
-            .with_context(|| format!("reading checkpoint {ck_path}"))?;
-        let header = sfllm::service::peek_header(&bytes)?;
-        match events.first() {
-            Some(sfllm::service::Event::ScenarioLoaded(spec))
-                if spec.fingerprint() == header.fingerprint => {}
-            Some(sfllm::service::Event::ScenarioLoaded(_)) => bail!(
-                "{ck_path} was written by a different run than {events_path} \
-                 describes (run fingerprints disagree)"
-            ),
-            _ => bail!("{events_path} must begin with a scenario_loaded event"),
+        match try_resume(&mut svc, ck_path, &events, &events_path) {
+            Ok(skip) => skip,
+            Err(e) => {
+                let prev = format!("{ck_path}.prev");
+                if std::path::Path::new(&prev).exists() {
+                    eprintln!(
+                        "warning: checkpoint {ck_path} is unusable ({e:#}); \
+                         falling back to {prev}"
+                    );
+                    try_resume(&mut svc, &prev, &events, &events_path)
+                        .with_context(|| format!("fallback checkpoint {prev} is unusable too"))?
+                } else {
+                    return Err(e);
+                }
+            }
         }
-        svc.restore(&bytes)?;
-        let skip = header.events_consumed as usize;
-        if skip > events.len() {
-            bail!(
-                "{ck_path} had consumed {skip} events but {events_path} only \
-                 holds {}",
-                events.len()
-            );
-        }
-        let done = svc.summary().map(|s| s.rounds).unwrap_or(0);
-        println!(
-            "resumed {} run at round {done} ({skip} of {} events already consumed)",
-            header.mode.label(),
-            events.len()
-        );
-        skip
     } else {
         0
     };
@@ -627,20 +711,246 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     svc.flush()?;
 
     match svc.summary() {
-        Some(s) => println!(
-            "served {} events: {} rounds, realized {:.2} s / {:.2} kJ \
-             (static prediction {:.2} s), {} resolves ({} fresh), converged: {}",
-            events.len() - start,
-            s.rounds,
-            s.realized_delay,
-            s.realized_energy / 1e3,
-            s.static_prediction,
-            s.resolves,
-            s.fresh_solves,
-            s.converged
-        ),
+        Some(s) => {
+            println!(
+                "served {} events: {} rounds, realized {:.2} s / {:.2} kJ \
+                 (static prediction {:.2} s), {} resolves ({} fresh), converged: {}",
+                events.len() - start,
+                s.rounds,
+                s.realized_delay,
+                s.realized_energy / 1e3,
+                s.static_prediction,
+                s.resolves,
+                s.fresh_solves,
+                s.converged
+            );
+            if s.faults_injected > 0 || s.repair_max > 0 || s.lines_skipped > 0 {
+                println!(
+                    "degradation: {} faults injected, max repair tier {}, \
+                     {} malformed line(s) skipped",
+                    s.faults_injected, s.repair_max, s.lines_skipped
+                );
+            }
+        }
         None => println!("served {} events (no run opened)", events.len() - start),
     }
+    Ok(())
+}
+
+/// Restore `svc` from the checkpoint at `ck_path`, verify it belongs to
+/// the stream in `events_path`, and return how many stream events the
+/// checkpointed run had already consumed.
+fn try_resume(
+    svc: &mut sfllm::service::AllocatorService,
+    ck_path: &str,
+    events: &[sfllm::service::Event],
+    events_path: &str,
+) -> Result<usize> {
+    let bytes = std::fs::read(ck_path)
+        .with_context(|| format!("reading checkpoint {ck_path}"))?;
+    let header = sfllm::service::peek_header(&bytes)?;
+    match events.first() {
+        Some(sfllm::service::Event::ScenarioLoaded(spec))
+            if spec.fingerprint() == header.fingerprint => {}
+        Some(sfllm::service::Event::ScenarioLoaded(_)) => bail!(
+            "{ck_path} was written by a different run than {events_path} \
+             describes (run fingerprints disagree)"
+        ),
+        _ => bail!("{events_path} must begin with a scenario_loaded event"),
+    }
+    let skip = header.events_consumed as usize;
+    if skip > events.len() {
+        bail!(
+            "{ck_path} had consumed {skip} events but {events_path} only \
+             holds {}",
+            events.len()
+        );
+    }
+    // last fallible step: a failure above leaves the service empty, so
+    // the caller can retry against the `.prev` fallback artifact
+    svc.restore(&bytes)?;
+    let done = svc.summary().map(|s| s.rounds).unwrap_or(0);
+    println!(
+        "resumed {} run at round {done} from {ck_path} \
+         ({skip} of {} events already consumed)",
+        header.mode.label(),
+        events.len()
+    );
+    Ok(skip)
+}
+
+/// `sfllm chaos` — the preset × fault-matrix smoke harness (PR-10).
+///
+/// Each preset plays the named fault ladder from
+/// [`sfllm::sim::faults::matrix_levels`] (none / light / heavy) through
+/// its engine — `metro_population` exercises the population engine,
+/// every other preset the round simulator — under one policy × strategy
+/// pair. The `none` level is asserted bit-identical to a fault-free
+/// baseline run of the same simulator (which, because the baseline runs
+/// first on the same solver cache, also pins warm-cache determinism);
+/// each level's per-round trace can be dumped for external diffing
+/// (`--trace-dir`; CI `cmp`s the `none` trace against the plain
+/// `dynamic` / `population` `--rounds-out` bytes), and the whole
+/// degradation matrix is emitted as machine-readable JSON (`--json`).
+fn cmd_chaos(args: &mut Args) -> Result<()> {
+    let presets_spec = args.str_or("presets", "mobile_edge,metro_population");
+    let policy_name = args.str_or("policy", "proposed");
+    let strategy_spec = args.str_or("strategy", "periodic:5");
+    let draws = args.usize_or("draws", 5)?;
+    let fault_seed = args.u64_or("fault-seed", 0xFA17)?;
+    let json = args.get("json");
+    let trace_dir = args.get("trace-dir");
+    args.finish()?;
+
+    let strategy = ReOptStrategy::parse(&strategy_spec)?;
+    let levels = sfllm::sim::faults::matrix_levels(fault_seed);
+    let mut blocks = Vec::new();
+    for preset in presets_spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let cfg = ScenarioBuilder::preset(preset)?.into_config();
+        let reg = registry_for(&cfg, draws);
+        let policy = reg.get(&policy_name)?;
+        let conv = ConvergenceModel::paper_default();
+        let cache = WorkloadCache::new();
+        // metro_population is the population-engine preset; every other
+        // preset replays through the round simulator
+        let engine = if preset == "metro_population" { "population" } else { "dynamic" };
+        println!(
+            "chaos: preset {preset} ({engine} engine), {policy_name}+{} over {} level(s)",
+            strategy.label(),
+            levels.len()
+        );
+        let rows = if engine == "population" {
+            let pop = Population::new(&cfg)?;
+            let sim = PopulationSimulator::new(&pop, &conv, &cache, &cfg.train.ranks);
+            chaos_levels(preset, &levels, trace_dir.as_deref(), &|plan| {
+                sim.run_faulted(policy.as_ref(), strategy, plan)
+            })?
+        } else {
+            let scn = ScenarioBuilder::from_config(cfg.clone()).build()?;
+            let sim = RoundSimulator::new(&scn, &conv, &cache, &cfg.train.ranks);
+            chaos_levels(preset, &levels, trace_dir.as_deref(), &|plan| {
+                sim.run_faulted(policy.as_ref(), strategy, plan)
+            })?
+        };
+        blocks.push(format!(
+            "{{\"preset\":\"{preset}\",\"engine\":\"{engine}\",\"levels\":[{}]}}",
+            rows.join(",")
+        ));
+    }
+
+    if let Some(path) = &json {
+        let doc = format!(
+            "{{\"pr\":\"pr10\",\"policy\":\"{policy_name}\",\"strategy\":\"{}\",\
+             \"fault_seed\":{fault_seed},\"presets\":[{}]}}\n",
+            strategy.label(),
+            blocks.join(",")
+        );
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, doc).with_context(|| format!("writing fault matrix to {path}"))?;
+        println!("fault matrix written to {path}");
+    }
+    Ok(())
+}
+
+/// Run every fault-matrix level through `run`, assert the zero-fault
+/// level is bit-identical to the fault-free baseline, dump per-level
+/// traces, and return one JSON object per level.
+fn chaos_levels(
+    preset: &str,
+    levels: &[(&'static str, FaultPlan)],
+    trace_dir: Option<&str>,
+    run: &dyn Fn(&FaultPlan) -> Result<DynamicOutcome>,
+) -> Result<Vec<String>> {
+    let baseline = run(&FaultPlan::default())
+        .with_context(|| format!("fault-free baseline on {preset}"))?;
+    let mut outs = Vec::new();
+    for (name, plan) in levels {
+        let out = run(plan).with_context(|| format!("chaos level {name} on {preset}"))?;
+        if plan.is_empty() {
+            assert_chaos_transparency(preset, &baseline, &out)?;
+        }
+        if let Some(dir) = trace_dir {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating trace dir {dir}"))?;
+            let path = format!("{dir}/{preset}_{name}.rounds.csv");
+            sfllm::service::write_rounds_csv(&path, &out.rounds)?;
+        }
+        outs.push((*name, plan.label(), out));
+    }
+    let none_delay = outs
+        .iter()
+        .find(|(n, _, _)| *n == "none")
+        .map(|(_, _, o)| o.realized_delay)
+        .unwrap_or(f64::NAN);
+    let mut rows = Vec::new();
+    for (name, spec, o) in &outs {
+        let vs = if none_delay > 0.0 && none_delay.is_finite() {
+            100.0 * (o.realized_delay / none_delay - 1.0)
+        } else {
+            0.0
+        };
+        println!(
+            "  level {name:6} delay {:12.2} s ({vs:+6.1}% vs none)  {} faults, \
+             max repair tier {}, {} deadline cuts",
+            o.realized_delay, o.faults_injected, o.repair_max, o.deadline_drops
+        );
+        rows.push(format!(
+            "{{\"level\":\"{name}\",\"spec\":\"{spec}\",\"realized_delay_s\":{},\
+             \"realized_energy_j\":{},\"rounds\":{},\"faults_injected\":{},\
+             \"repair_max\":{},\"deadline_drops\":{},\"delay_vs_none_pct\":{}}}",
+            o.realized_delay,
+            o.realized_energy,
+            o.rounds.len(),
+            o.faults_injected,
+            o.repair_max,
+            o.deadline_drops,
+            vs
+        ));
+    }
+    Ok(rows)
+}
+
+/// The chaos harness's transparency invariant: a `none`-level run must
+/// match the fault-free baseline down to the float bits — totals and
+/// every per-round record.
+fn assert_chaos_transparency(
+    preset: &str,
+    base: &DynamicOutcome,
+    none: &DynamicOutcome,
+) -> Result<()> {
+    let same_totals = base.realized_delay.to_bits() == none.realized_delay.to_bits()
+        && base.realized_energy.to_bits() == none.realized_energy.to_bits()
+        && base.rounds.len() == none.rounds.len();
+    let same_rounds = base.rounds.iter().zip(&none.rounds).all(|(a, b)| {
+        a.round == b.round
+            && a.weight.to_bits() == b.weight.to_bits()
+            && a.delay.to_bits() == b.delay.to_bits()
+            && a.energy.to_bits() == b.energy.to_bits()
+            && a.l_c == b.l_c
+            && a.rank == b.rank
+            && a.active == b.active
+            && a.resolved == b.resolved
+            && a.cohort == b.cohort
+            && a.dropped == b.dropped
+            && a.faults == b.faults
+            && a.repair_tier == b.repair_tier
+    });
+    if !(same_totals && same_rounds) {
+        bail!(
+            "zero-fault chaos level diverged from the fault-free baseline on {preset}: \
+             the empty fault plan must be bit-transparent \
+             (baseline {:.6} s over {} rounds, none-level {:.6} s over {} rounds)",
+            base.realized_delay,
+            base.rounds.len(),
+            none.realized_delay,
+            none.rounds.len()
+        );
+    }
+    println!("  level none   verified bit-identical to the fault-free baseline");
     Ok(())
 }
 

@@ -79,6 +79,27 @@ impl Link {
     pub fn k(&self) -> usize {
         self.client_gain.len()
     }
+
+    /// Fault-injection mask (PR-10): multiply the listed clients'
+    /// gains by per-client factors (a subchannel outage; factor 0
+    /// kills the uplink entirely, driving the rate to 0 on every
+    /// subchannel). Out-of-range indices are ignored — fault overlays
+    /// are sized to the per-round view, which can shrink.
+    pub fn mask_client_gains(&mut self, masks: &[(usize, f64)]) {
+        for &(k, factor) in masks {
+            if let Some(g) = self.client_gain.get_mut(k) {
+                *g *= factor;
+            }
+        }
+    }
+
+    /// Fault-injection mask (PR-10): attenuate *every* client's gain
+    /// by `factor` — a server-side blackout on this uplink.
+    pub fn attenuate_all_gains(&mut self, factor: f64) {
+        for g in &mut self.client_gain {
+            *g *= factor;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -125,6 +146,18 @@ mod tests {
         let l = link();
         assert_eq!(l.subch_rate(0, 0, 0.0), 0.0);
         assert_eq!(l.psd_for_rate(0, 0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn gain_masks_attenuate_and_ignore_out_of_range() {
+        let mut l = link();
+        let g0 = l.client_gain.clone();
+        l.mask_client_gains(&[(1, 0.0), (7, 0.5)]);
+        assert_eq!(l.client_gain[0].to_bits(), g0[0].to_bits());
+        assert_eq!(l.client_gain[1], 0.0);
+        l.attenuate_all_gains(0.5);
+        assert_eq!(l.client_gain[0].to_bits(), (g0[0] * 0.5).to_bits());
+        assert_eq!(l.client_gain[1], 0.0);
     }
 
     #[test]

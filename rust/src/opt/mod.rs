@@ -39,4 +39,4 @@ pub mod split;
 pub use crate::delay::objective;
 pub use crate::delay::objective::Objective;
 pub use bcd::{BcdOptions, BcdResult};
-pub use policy::{AllocationPolicy, PolicyOutcome, PolicyRegistry};
+pub use policy::{solve_with_repair, AllocationPolicy, PolicyOutcome, PolicyRegistry};

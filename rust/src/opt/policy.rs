@@ -47,6 +47,16 @@ pub struct PolicyOutcome {
     pub trajectory: Option<Vec<f64>>,
     /// Outer iterations (BCD) or random draws (baselines).
     pub iterations: usize,
+    /// Feasibility-repair tier that produced this outcome (PR-10):
+    /// 0 = clean solve, 1 = re-scored incumbent, 2 = baseline-d
+    /// fallback, 3 = worst-channel clients shed (see
+    /// [`solve_with_repair`]). Always 0 from a direct
+    /// [`AllocationPolicy::solve_cached`].
+    pub repair_tier: u8,
+    /// View-indices of clients shed by tier 3 (empty below tier 3).
+    /// Their `alloc` rows are empty — callers must drop them from the
+    /// round's participation mask.
+    pub shed: Vec<usize>,
 }
 
 /// A named allocation scheme: scenario in, allocation + objective out.
@@ -128,6 +138,8 @@ impl AllocationPolicy for Proposed {
             energy: res.energy,
             trajectory: Some(res.trajectory),
             iterations: res.iterations,
+            repair_tier: 0,
+            shed: Vec::new(),
         })
     }
 }
@@ -238,8 +250,188 @@ impl AllocationPolicy for RandomBaseline {
             energy,
             trajectory: None,
             iterations: self.draws,
+            repair_tier: 0,
+            shed: Vec::new(),
         })
     }
+}
+
+/// Build a repaired outcome from an allocation scored on the (full or
+/// subset) scenario it lives on.
+fn repaired_outcome(
+    name: &str,
+    alloc: Allocation,
+    scn: &Scenario,
+    conv: &ConvergenceModel,
+    objective: &crate::delay::Objective,
+    tier: u8,
+    shed: Vec<usize>,
+) -> PolicyOutcome {
+    let score = crate::delay::objective::score_alloc(scn, &alloc, conv, objective);
+    let delay = scn.total_delay(&alloc, conv);
+    let energy = crate::delay::energy::total_energy(scn, &alloc, conv, scn.objective.zeta);
+    PolicyOutcome {
+        policy: name.to_string(),
+        alloc,
+        objective: score,
+        delay,
+        energy,
+        trajectory: None,
+        iterations: 0,
+        repair_tier: tier,
+        shed,
+    }
+}
+
+/// The scenario restricted to the `kept` clients (sorted view-indices):
+/// only the per-client data shrinks — subchannels, budgets, and the
+/// workload profile are K-independent, which is exactly the cohort-view
+/// contract the workload cache already relies on.
+fn subset_scenario(scn: &Scenario, kept: &[usize]) -> Scenario {
+    let mut sub = scn.clone();
+    sub.topo.clients = kept.iter().map(|&k| scn.topo.clients[k].clone()).collect();
+    sub.main_link.client_gain = kept.iter().map(|&k| scn.main_link.client_gain[k]).collect();
+    sub.fed_link.client_gain = kept.iter().map(|&k| scn.fed_link.client_gain[k]).collect();
+    sub
+}
+
+/// Expand a subset-scenario allocation back to the full client index
+/// space: kept clients get their subset rows, shed clients get empty
+/// rows (no subchannels ⇒ they must be excluded from the round's
+/// participation mask). PSD vectors are per-subchannel and carry over
+/// unchanged, so the expanded allocation still satisfies C1/C2/C6.
+fn expand_alloc(sub: &Allocation, kept: &[usize], k_full: usize) -> Allocation {
+    let mut assign_main = vec![Vec::new(); k_full];
+    let mut assign_fed = vec![Vec::new(); k_full];
+    for (j, &k) in kept.iter().enumerate() {
+        assign_main[k] = sub.assign_main[j].clone();
+        assign_fed[k] = sub.assign_fed[j].clone();
+    }
+    Allocation {
+        assign_main,
+        assign_fed,
+        psd_main: sub.psd_main.clone(),
+        psd_fed: sub.psd_fed.clone(),
+        l_c: sub.l_c,
+        rank: sub.rank,
+    }
+}
+
+/// Four-tier feasibility repair (PR-10): degrade instead of die when a
+/// scenario turns infeasible mid-run (subchannel outages and blackouts
+/// can starve an uplink outright).
+///
+/// * **Tier 0** — the policy's own solve; returned untouched when it
+///   succeeds with a finite objective, so the healthy path is
+///   bit-identical to calling [`AllocationPolicy::solve_cached`]
+///   directly (nothing below even constructs).
+/// * **Tier 1** — re-score the caller's incumbent allocation on the
+///   current scenario; adopt it when finite (the fleet keeps running on
+///   yesterday's allocation).
+/// * **Tier 2** — a deterministic single-draw baseline-d allocation
+///   (proposed subchannel/power/split, frozen random rank) from a fixed
+///   seed, adopted when finite.
+/// * **Tier 3** — shed the worst-channel clients: rank clients by
+///   `min(gain_main, gain_fed)` ascending (ties by index), drop the
+///   smallest prefix that makes the remaining subset solvable, and
+///   expand the subset allocation back to the full index space with
+///   empty rows for the shed clients. The outcome's
+///   objective/delay/energy are those of the *participating* subset
+///   (the shed clients sit the round out).
+///
+/// The chosen tier and shed set are recorded in
+/// [`PolicyOutcome::repair_tier`] / [`PolicyOutcome::shed`]; when every
+/// tier fails, the tier-0 error is returned with the repair trail
+/// attached.
+pub fn solve_with_repair(
+    policy: &dyn AllocationPolicy,
+    scn: &Scenario,
+    conv: &ConvergenceModel,
+    cache: &WorkloadCache,
+    incumbent: Option<&Allocation>,
+    ranks: &[usize],
+) -> Result<PolicyOutcome> {
+    // tier 0: the clean solve — the only statements on the healthy path
+    let err = match policy.solve_cached(scn, conv, cache) {
+        Ok(out) if out.objective.is_finite() => return Ok(out),
+        Ok(out) => anyhow!(
+            "{}: solve returned a non-finite objective ({})",
+            policy.name(),
+            out.objective
+        ),
+        Err(e) => e,
+    };
+    let objective = crate::delay::Objective::from_config(&scn.objective)?;
+    // tier 1: re-score the incumbent on the current channel
+    if let Some(inc) = incumbent {
+        if inc.assign_main.len() == scn.k() {
+            let out = repaired_outcome(
+                policy.name(),
+                inc.clone(),
+                scn,
+                conv,
+                &objective,
+                1,
+                Vec::new(),
+            );
+            if out.objective.is_finite() {
+                return Ok(out);
+            }
+        }
+    }
+    // tier 2: deterministic baseline-d fallback (fixed seed — the
+    // repair schedule must replay bit-for-bit)
+    let mut rng = Rng::new(0xD_FA17);
+    if let Ok((alloc, score)) = baselines::baseline_d(scn, conv, ranks, &mut rng, cache) {
+        if score.is_finite() {
+            let mut out =
+                repaired_outcome(policy.name(), alloc, scn, conv, &objective, 2, Vec::new());
+            out.objective = score;
+            return Ok(out);
+        }
+    }
+    // tier 3: shed worst-channel clients until the subset solves
+    let k_full = scn.k();
+    let mut order: Vec<usize> = (0..k_full).collect();
+    order.sort_by(|&a, &b| {
+        let ga = scn.main_link.client_gain[a].min(scn.fed_link.client_gain[a]);
+        let gb = scn.main_link.client_gain[b].min(scn.fed_link.client_gain[b]);
+        ga.total_cmp(&gb).then(a.cmp(&b))
+    });
+    // a client with an exactly-zero gain can never upload — start by
+    // shedding all of those at once, then widen one client at a time
+    let dead = order
+        .iter()
+        .take_while(|&&k| {
+            scn.main_link.client_gain[k].min(scn.fed_link.client_gain[k]) == 0.0
+        })
+        .count();
+    for shed_n in dead.max(1)..k_full {
+        let mut shed: Vec<usize> = order[..shed_n].to_vec();
+        shed.sort_unstable();
+        let kept: Vec<usize> = (0..k_full).filter(|k| !shed.contains(k)).collect();
+        let sub_scn = subset_scenario(scn, &kept);
+        let sub = match policy.solve_cached(&sub_scn, conv, cache) {
+            Ok(out) if out.objective.is_finite() => out,
+            _ => continue,
+        };
+        let alloc = expand_alloc(&sub.alloc, &kept, k_full);
+        return Ok(PolicyOutcome {
+            policy: sub.policy,
+            alloc,
+            objective: sub.objective,
+            delay: sub.delay,
+            energy: sub.energy,
+            trajectory: sub.trajectory,
+            iterations: sub.iterations,
+            repair_tier: 3,
+            shed,
+        });
+    }
+    Err(err.context(
+        "feasibility repair exhausted: fresh solve failed, incumbent re-score non-finite, \
+         baseline-d fallback non-finite, and no sheddable client subset solved",
+    ))
 }
 
 /// String-keyed policy lookup, preserving registration order (which
@@ -476,6 +668,126 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// A mock policy whose solve always fails — forces the repair
+    /// chain past tier 0.
+    struct AlwaysFails;
+
+    impl AllocationPolicy for AlwaysFails {
+        fn name(&self) -> &str {
+            "always_fails"
+        }
+
+        fn solve_cached(
+            &self,
+            _scn: &Scenario,
+            _conv: &ConvergenceModel,
+            _cache: &WorkloadCache,
+        ) -> Result<PolicyOutcome> {
+            Err(anyhow!("mock: solver exploded"))
+        }
+    }
+
+    #[test]
+    fn repair_tier0_is_the_clean_solve_bit_for_bit() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let cache = WorkloadCache::new();
+        let policy = Proposed::with_ranks(&RANKS);
+        let direct = policy.solve_cached(&scn, &conv, &cache).unwrap();
+        let repaired =
+            solve_with_repair(&policy, &scn, &conv, &cache, None, &RANKS).unwrap();
+        assert_eq!(repaired.repair_tier, 0);
+        assert!(repaired.shed.is_empty());
+        assert_eq!(repaired.objective.to_bits(), direct.objective.to_bits());
+        assert_eq!(repaired.delay.to_bits(), direct.delay.to_bits());
+        assert_eq!(repaired.alloc.l_c, direct.alloc.l_c);
+        assert_eq!(repaired.alloc.rank, direct.alloc.rank);
+    }
+
+    #[test]
+    fn repair_tier1_adopts_a_finite_incumbent() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let cache = WorkloadCache::new();
+        let inc = Proposed::with_ranks(&RANKS)
+            .solve_cached(&scn, &conv, &cache)
+            .unwrap()
+            .alloc;
+        let out =
+            solve_with_repair(&AlwaysFails, &scn, &conv, &cache, Some(&inc), &RANKS).unwrap();
+        assert_eq!(out.repair_tier, 1);
+        assert!(out.shed.is_empty());
+        assert!(out.objective.is_finite());
+        assert_eq!(out.policy, "always_fails");
+        assert_eq!(out.alloc.l_c, inc.l_c);
+        assert_eq!(
+            out.delay.to_bits(),
+            scn.total_delay(&inc, &conv).to_bits(),
+            "tier 1 must re-score the incumbent on the current scenario"
+        );
+    }
+
+    #[test]
+    fn repair_tier2_falls_back_to_baseline_d() {
+        let scn = toy_scenario();
+        let conv = ConvergenceModel::paper_default();
+        let cache = WorkloadCache::new();
+        let out = solve_with_repair(&AlwaysFails, &scn, &conv, &cache, None, &RANKS).unwrap();
+        assert_eq!(out.repair_tier, 2);
+        assert!(out.objective.is_finite());
+        out.alloc
+            .validate(scn.main_link.subch.len(), scn.fed_link.subch.len())
+            .unwrap();
+        // deterministic: the fallback draw is fixed-seeded
+        let again = solve_with_repair(&AlwaysFails, &scn, &conv, &cache, None, &RANKS).unwrap();
+        assert_eq!(out.objective.to_bits(), again.objective.to_bits());
+    }
+
+    #[test]
+    fn repair_tier3_sheds_the_dead_uplink_client() {
+        // client 1's main uplink is gone entirely: every allocation
+        // gives it rate 0 ⇒ infinite delay, so tiers 0–2 are all
+        // non-finite and the chain must shed client 1
+        let mut scn = toy_scenario();
+        scn.main_link.client_gain[1] = 0.0;
+        let conv = ConvergenceModel::paper_default();
+        let cache = WorkloadCache::new();
+        let policy = Proposed::with_ranks(&RANKS);
+        let inc = Proposed::with_ranks(&RANKS)
+            .solve_cached(&toy_scenario(), &conv, &cache)
+            .unwrap()
+            .alloc;
+        let out =
+            solve_with_repair(&policy, &scn, &conv, &cache, Some(&inc), &RANKS).unwrap();
+        assert_eq!(out.repair_tier, 3);
+        assert_eq!(out.shed, vec![1]);
+        assert!(out.objective.is_finite());
+        assert!(out.alloc.assign_main[1].is_empty() && out.alloc.assign_fed[1].is_empty());
+        // kept client owns every subchannel: C1/C2 still hold
+        out.alloc
+            .validate(scn.main_link.subch.len(), scn.fed_link.subch.len())
+            .unwrap();
+    }
+
+    #[test]
+    fn repair_exhaustion_reports_the_whole_trail() {
+        // every uplink dead ⇒ nothing is solvable at any tier
+        let mut scn = toy_scenario();
+        scn.main_link.client_gain = vec![0.0, 0.0];
+        let err = solve_with_repair(
+            &AlwaysFails,
+            &scn,
+            &ConvergenceModel::paper_default(),
+            &WorkloadCache::new(),
+            None,
+            &RANKS,
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("feasibility repair exhausted"), "{msg}");
+        assert!(msg.contains("mock: solver exploded"), "{msg}");
     }
 
     #[test]

@@ -52,6 +52,7 @@ use crate::service::event::{Event, RunMode, RunSpec};
 use crate::service::metrics::{MetricSink, RoundMetrics, RunSummary};
 use crate::sim::dynamic::RoundCost;
 use crate::sim::engine::{Adoption, DriftEnv, RoundCore, StepCtx};
+use crate::sim::faults::{apply_to_scenario, FaultInjector};
 use crate::sim::population::{comm_alloc, deadline_cut, Population, PopulationState};
 use crate::sim::{ReOptStrategy, RoundRecord, ScenarioBuilder};
 use crate::util::json::Json;
@@ -70,6 +71,11 @@ struct SessionBase {
     /// The template's `dynamics.compute_jitter` (sparse-population view
     /// dirtiness — see [`crate::sim::PopulationSimulator::run`]).
     compute_jitter: f64,
+    /// Candidate rank set (tier-2 feasibility repair re-solves).
+    ranks: Vec<usize>,
+    /// The run's fault injector — `None` for an empty [`RunSpec::faults`]
+    /// spec, which keeps fault-free ticks statement-identical to PR-8.
+    injector: Option<FaultInjector>,
 }
 
 /// The engine-specific mutable half of a run.
@@ -121,6 +127,10 @@ pub struct AllocatorService {
     events_consumed: u64,
     /// Target of `checkpoint_requested` events that carry no path.
     default_checkpoint: Option<PathBuf>,
+    /// Malformed event lines skipped by lenient replay (reported by the
+    /// driver via [`AllocatorService::note_skipped_lines`]; surfaced in
+    /// every [`RunSummary`]).
+    lines_skipped: usize,
 }
 
 impl Default for AllocatorService {
@@ -137,6 +147,7 @@ impl AllocatorService {
             session: None,
             events_consumed: 0,
             default_checkpoint: None,
+            lines_skipped: 0,
         }
     }
 
@@ -159,6 +170,12 @@ impl AllocatorService {
         self.events_consumed
     }
 
+    /// Record malformed event lines the driver skipped under lenient
+    /// replay (see [`crate::service::parse_events_lenient`]).
+    pub fn note_skipped_lines(&mut self, n: usize) {
+        self.lines_skipped += n;
+    }
+
     /// Whether the loaded run has realized one unit of convergence
     /// progress (no run loaded = false).
     pub fn is_finished(&self) -> bool {
@@ -176,7 +193,7 @@ impl AllocatorService {
     /// The running summary of the loaded run (totals realized so far;
     /// `converged` says whether the run is finished).
     pub fn summary(&self) -> Option<RunSummary> {
-        self.session.as_ref().map(summary_of)
+        self.session.as_ref().map(|s| summary_of(s, self.lines_skipped))
     }
 
     /// Process one event. Errors are descriptive and leave the service
@@ -280,7 +297,7 @@ impl AllocatorService {
                 if let Some(session) = &mut self.session {
                     if !session.summary_emitted {
                         session.summary_emitted = true;
-                        let s = summary_of(session);
+                        let s = summary_of(session, self.lines_skipped);
                         for sink in &mut self.sinks {
                             sink.on_summary(&s)?;
                         }
@@ -408,6 +425,7 @@ impl AllocatorService {
         let compute_jitter = scn.dynamics.compute_jitter;
         let k_n = scn.k();
         let env = DriftEnv::new(scn);
+        let injector = injector_for(&spec)?;
         Ok((
             SessionBase {
                 spec,
@@ -418,6 +436,8 @@ impl AllocatorService {
                 policy,
                 max_rounds,
                 compute_jitter,
+                ranks: cfg.train.ranks.clone(),
+                injector,
             },
             env,
             k_n,
@@ -437,6 +457,7 @@ impl AllocatorService {
         let max_rounds = pop.template().dynamics.max_rounds;
         let compute_jitter = pop.template().dynamics.compute_jitter;
         let dense = pop.cohort() >= pop.size();
+        let injector = injector_for(&spec)?;
         Ok((
             SessionBase {
                 spec,
@@ -447,6 +468,8 @@ impl AllocatorService {
                 policy,
                 max_rounds,
                 compute_jitter,
+                ranks: cfg.train.ranks.clone(),
+                injector,
             },
             pop,
             dense,
@@ -475,19 +498,33 @@ impl AllocatorService {
             table: &session.base.table,
             objective: &session.base.objective,
             strategy: session.base.strategy,
+            ranks: &session.base.ranks,
             label: "service",
         };
         session.core.check_cap(session.base.max_rounds, &ctx)?;
         let mut resolved = session.core.round == 0;
         let mut cost_round: Option<RoundCost> = None;
         let mut dropped = 0usize;
+        let mut faults = 0usize;
+        let mut repair_tier = 0u8;
+        let mut shed: Vec<usize> = Vec::new();
         let mut adoption = Adoption::Fresh; // round 0 adopts its own solve
         let record;
         match &mut session.engine {
             Engine::Dynamic { env, k_n } => {
+                let mut undo = None;
                 if session.core.round > 0 {
                     if env.advance() {
                         session.core.env_dirty = true;
+                    }
+                    if let Some(inj) = &session.base.injector {
+                        let ov = inj.overlay(session.core.round, *k_n);
+                        if !ov.is_empty() {
+                            faults = ov.count();
+                            session.core.faults_injected += faults;
+                            undo = Some(env.apply_overlay(&ov));
+                            session.core.env_dirty = true;
+                        }
                     }
                     let re = session.core.maybe_reopt(
                         &ctx,
@@ -498,16 +535,53 @@ impl AllocatorService {
                     resolved = re.resolved;
                     cost_round = re.cost;
                     adoption = re.adopted;
+                    repair_tier = re.repair_tier;
+                    shed = re.shed;
                 }
-                record = session.core.realize(
-                    &ctx,
-                    &env.scn,
-                    &env.active,
-                    cost_round,
-                    resolved,
-                    *k_n,
-                    0,
-                );
+                if shed.is_empty() {
+                    record = session.core.realize(
+                        &ctx,
+                        &env.scn,
+                        &env.active,
+                        cost_round,
+                        resolved,
+                        *k_n,
+                        0,
+                        faults,
+                        repair_tier,
+                    );
+                } else {
+                    // tier-3 repair: shed clients sit the round out
+                    // (their allocation rows are empty — scoring them
+                    // active would be infinite)
+                    let mut eff = env.active.clone();
+                    for &k in &shed {
+                        if let Some(a) = eff.get_mut(k) {
+                            *a = false;
+                        }
+                    }
+                    if !eff.iter().any(|&a| a) {
+                        // never realize an empty federation
+                        for (k, a) in eff.iter_mut().enumerate() {
+                            *a = !shed.contains(&k);
+                        }
+                    }
+                    record = session.core.realize(
+                        &ctx,
+                        &env.scn,
+                        &eff,
+                        cost_round,
+                        resolved,
+                        *k_n,
+                        0,
+                        faults,
+                        repair_tier,
+                    );
+                }
+                if let Some(u) = undo {
+                    env.undo_overlay(u);
+                    session.core.env_dirty = true;
+                }
             }
             Engine::Population {
                 pop,
@@ -554,12 +628,35 @@ impl AllocatorService {
                     }
                     *cur_cohort = cohort;
                     if cohort_changed {
+                        // rebasing happens on the clean view: it is
+                        // membership bookkeeping, not a fault reaction
                         let rebased = comm_alloc(
                             cur_view,
                             session.core.alloc.l_c,
                             session.core.alloc.rank,
                         )?;
                         session.core.rebase_incumbent(rebased);
+                    }
+                    if let Some(inj) = &session.base.injector {
+                        let ov = inj.overlay(session.core.round, cur_view.k());
+                        if !ov.is_empty() {
+                            faults = ov.count();
+                            session.core.faults_injected += faults;
+                            apply_to_scenario(cur_view, &ov);
+                            if !ov.crashed.is_empty() {
+                                let prev = online.clone();
+                                for &k in &ov.crashed {
+                                    if let Some(a) = online.get_mut(k) {
+                                        *a = false;
+                                    }
+                                }
+                                if !online.iter().any(|&a| a) {
+                                    // never simulate an empty federation
+                                    *online = prev;
+                                }
+                            }
+                            session.core.env_dirty = true;
+                        }
                     }
                     let re = session.core.maybe_reopt(
                         &ctx,
@@ -570,6 +667,26 @@ impl AllocatorService {
                     resolved = re.resolved;
                     cost_round = re.cost;
                     adoption = re.adopted;
+                    repair_tier = re.repair_tier;
+                    shed = re.shed;
+                }
+
+                if !shed.is_empty() {
+                    // tier-3 repair: shed clients sit the round out
+                    // (their allocation rows are empty — scoring them
+                    // active, or ranking them for the deadline, would be
+                    // infinite)
+                    for &k in &shed {
+                        if let Some(a) = online.get_mut(k) {
+                            *a = false;
+                        }
+                    }
+                    if !online.iter().any(|&a| a) {
+                        // never realize an empty federation
+                        for (k, a) in online.iter_mut().enumerate() {
+                            *a = !shed.contains(&k);
+                        }
+                    }
                 }
 
                 // --- straggler deadline: cut the slowest ⌊x·online⌋
@@ -590,13 +707,21 @@ impl AllocatorService {
                     resolved,
                     cur_cohort.len(),
                     dropped,
+                    faults,
+                    repair_tier,
                 );
+                if faults > 0 {
+                    // the checkpointed view carries this round's faults,
+                    // but the drift memo must not serve its solve to the
+                    // next, clean round
+                    session.core.env_dirty = true;
+                }
             }
         }
         let summary = if session.core.done() {
             session.finished = true;
             session.summary_emitted = true;
-            Some(summary_of(session))
+            Some(summary_of(session, self.lines_skipped))
         } else {
             None
         };
@@ -671,15 +796,28 @@ impl AllocatorService {
                 w.bool_slice(online);
             }
         }
-        Ok(w.into_bytes())
+        Ok(checkpoint::seal(w))
     }
 
     /// Write [`Self::checkpoint_bytes`] to `path` (creating parents).
+    ///
+    /// An existing file is rotated to `<path>.prev` first, so a write
+    /// that never completes — or an artifact found corrupt at resume
+    /// time (the CRC32 footer catches it) — always leaves a last-good
+    /// checkpoint behind; `sfllm serve --resume` falls back to it
+    /// automatically.
     pub fn write_checkpoint<P: AsRef<Path>>(&self, path: P) -> Result<()> {
         let bytes = self.checkpoint_bytes()?;
         crate::util::csv::ensure_parent_dir(&path)?;
-        std::fs::write(&path, bytes)
-            .with_context(|| format!("writing checkpoint {}", path.as_ref().display()))
+        let path = path.as_ref();
+        if path.exists() {
+            let mut prev = path.as_os_str().to_owned();
+            prev.push(".prev");
+            std::fs::rename(path, &prev)
+                .with_context(|| format!("rotating {} to its .prev fallback", path.display()))?;
+        }
+        std::fs::write(path, bytes)
+            .with_context(|| format!("writing checkpoint {}", path.display()))
     }
 
     /// Load a checkpoint into an idle service: rebuild the immutable
@@ -691,7 +829,8 @@ impl AllocatorService {
         if self.session.is_some() {
             bail!("restore into a service that already has a run loaded");
         }
-        let mut r = BinReader::new(bytes);
+        let payload = checkpoint::open(bytes)?;
+        let mut r = BinReader::new(payload);
         let header = checkpoint::read_header(&mut r)?;
         let spec_json =
             Json::parse(&header.fingerprint).context("service checkpoint: run fingerprint")?;
@@ -805,9 +944,23 @@ impl AllocatorService {
     }
 }
 
+/// Build the per-run fault injector from the spec's `faults` string.
+/// An empty plan yields `None`, which keeps the tick body free of any
+/// extra statements — the fault-free bit-transparency contract.
+fn injector_for(spec: &RunSpec) -> Result<Option<FaultInjector>> {
+    let plan = spec.fault_plan()?;
+    Ok(if plan.is_empty() {
+        None
+    } else {
+        Some(FaultInjector::new(plan))
+    })
+}
+
 /// The running summary of a session (the end-of-run totals when the
-/// session has converged).
-fn summary_of(session: &Session) -> RunSummary {
+/// session has converged). `lines_skipped` is the service's lenient
+/// replay counter — stream health, not run state, so it rides beside
+/// the session rather than inside it.
+fn summary_of(session: &Session, lines_skipped: usize) -> RunSummary {
     let (realized_delay, realized_energy) = session.core.totals();
     let unique_participants = match &session.engine {
         Engine::Dynamic { k_n, .. } => *k_n,
@@ -830,6 +983,10 @@ fn summary_of(session: &Session) -> RunSummary {
         unique_participants,
         final_l_c: session.core.alloc.l_c,
         final_rank: session.core.alloc.rank,
+        faults_injected: session.core.faults_injected,
+        repair_max: session.core.repair_max,
+        retries: 0,
+        lines_skipped,
         converged: session.core.done(),
     }
 }
@@ -936,5 +1093,15 @@ mod tests {
         );
         assert!(!err.is_empty());
         assert!(fresh.session.is_none(), "a failed restore must not half-load");
+
+        // a single payload bit flip is caught by the CRC32 footer with
+        // a descriptive error, never a panic or a silent misparse
+        let mut flipped = bytes.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x01;
+        let mut fresh = AllocatorService::new();
+        let err = format!("{:#}", fresh.restore(&flipped).unwrap_err());
+        assert!(err.contains("CRC32 integrity check"), "{err}");
+        assert!(fresh.session.is_none());
     }
 }

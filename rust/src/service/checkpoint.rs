@@ -30,12 +30,15 @@
 use anyhow::{bail, Result};
 
 use crate::delay::Allocation;
-use crate::util::codec::{BinReader, BinWriter};
+use crate::util::codec::{self, BinReader, BinWriter};
 use crate::service::event::RunMode;
 use crate::sim::engine::{DriftEnv, RoundCore};
 
 pub(crate) const MAGIC: &[u8; 4] = b"SFCK";
-pub(crate) const VERSION: u32 = 1;
+/// v2 (PR-10): appends the fault counters (`faults_injected`,
+/// `repair_max`) to the core block and seals the file with a CRC32
+/// footer. v1 files predate both and are refused by version.
+pub(crate) const VERSION: u32 = 2;
 /// Fingerprints are canonical [`RunSpec`] JSON — small; the limit only
 /// guards against reading a corrupt length as an allocation size.
 const MAX_FINGERPRINT: usize = 1 << 16;
@@ -65,15 +68,19 @@ pub(crate) fn write_header(w: &mut BinWriter, h: &Header) {
     });
 }
 
-pub(crate) fn read_header(r: &mut BinReader) -> Result<Header> {
-    r.expect_magic(MAGIC, "SfLLM service checkpoint")?;
-    let version = r.u32("service checkpoint version")?;
+fn require_version(version: u32) -> Result<()> {
     if version != VERSION {
         bail!(
             "unsupported service checkpoint version {version} \
              (this build reads version {VERSION})"
         );
     }
+    Ok(())
+}
+
+pub(crate) fn read_header(r: &mut BinReader) -> Result<Header> {
+    r.expect_magic(MAGIC, "SfLLM service checkpoint")?;
+    require_version(r.u32("service checkpoint version")?)?;
     let fingerprint = r.str(MAX_FINGERPRINT, "run fingerprint")?;
     let events_consumed = r.u64("events consumed")?;
     let finished = r.bool("finished flag")?;
@@ -90,10 +97,30 @@ pub(crate) fn read_header(r: &mut BinReader) -> Result<Header> {
     })
 }
 
-/// Peek a checkpoint's header without touching the payload (the CLI
-/// uses this to rebuild the substrate before applying the rest).
+/// Seal a finished checkpoint buffer: append the CRC32 integrity
+/// footer (PR-10). The counterpart of [`open`].
+pub(crate) fn seal(w: BinWriter) -> Vec<u8> {
+    let mut bytes = w.into_bytes();
+    codec::append_crc32(&mut bytes);
+    bytes
+}
+
+/// Validate a sealed checkpoint and return its payload (footer
+/// stripped). Magic and version are checked *before* the CRC so a
+/// wrong or outdated file fails with "not a …" / "unsupported version",
+/// not a misleading integrity error; then every payload byte is
+/// covered by the CRC32 check.
+pub(crate) fn open(bytes: &[u8]) -> Result<&[u8]> {
+    let mut peek = BinReader::new(bytes);
+    peek.expect_magic(MAGIC, "SfLLM service checkpoint")?;
+    require_version(peek.u32("service checkpoint version")?)?;
+    codec::check_crc32(bytes, "service checkpoint")
+}
+
+/// Peek a sealed checkpoint's header without touching the payload (the
+/// CLI uses this to rebuild the substrate before applying the rest).
 pub fn peek_header(bytes: &[u8]) -> Result<Header> {
-    read_header(&mut BinReader::new(bytes))
+    read_header(&mut BinReader::new(open(bytes)?))
 }
 
 pub(crate) fn write_alloc(w: &mut BinWriter, a: &Allocation) {
@@ -160,6 +187,8 @@ pub(crate) fn write_core(w: &mut BinWriter, c: &RoundCore) {
     w.f64(c.realized_e);
     w.f64(c.seg_weight_e);
     w.f64(c.seg_energy);
+    w.usize(c.faults_injected);
+    w.u8(c.repair_max);
 }
 
 /// Restore a [`RoundCore`]. The column cache restarts cold
@@ -190,6 +219,8 @@ pub(crate) fn read_core(r: &mut BinReader) -> Result<RoundCore> {
         realized_e: r.f64("core realized_e")?,
         seg_weight_e: r.f64("core seg_weight_e")?,
         seg_energy: r.f64("core seg_energy")?,
+        faults_injected: r.usize("core faults_injected")?,
+        repair_max: r.u8("core repair_max")?,
         col_cache: crate::delay::ColumnCache::new(4),
         rounds: Vec::new(),
     })
@@ -303,9 +334,10 @@ mod tests {
         let mut w = BinWriter::with_header(MAGIC, VERSION);
         write_header(&mut w, &h);
         write_alloc(&mut w, &sample_alloc(4));
-        let bytes = w.into_bytes();
+        let bytes = seal(w);
 
-        let mut r = BinReader::new(&bytes);
+        let payload = open(&bytes).unwrap();
+        let mut r = BinReader::new(payload);
         let back = read_header(&mut r).unwrap();
         assert_eq!(back.fingerprint, h.fingerprint);
         assert_eq!(back.events_consumed, 41);
@@ -328,7 +360,13 @@ mod tests {
         let mut bad = bytes.clone();
         bad[4..8].copy_from_slice(&9u32.to_le_bytes());
         let err = format!("{:#}", peek_header(&bad).unwrap_err());
-        assert!(err.contains("version 9") && err.contains("reads version 1"), "{err}");
+        assert!(err.contains("version 9") && err.contains("reads version 2"), "{err}");
+        // a payload bit flip slips past magic/version but not the CRC
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x10;
+        let err = format!("{:#}", peek_header(&bad).unwrap_err());
+        assert!(err.contains("CRC32 integrity check"), "{err}");
     }
 
     #[test]
@@ -351,6 +389,8 @@ mod tests {
         core.realized_e = 2048.25;
         core.seg_weight_e = 1.0;
         core.seg_energy = -0.0;
+        core.faults_injected = 13;
+        core.repair_max = 3;
         let mut w = BinWriter::new();
         write_core(&mut w, &core);
         let bytes = w.into_bytes();
@@ -369,6 +409,7 @@ mod tests {
         assert_eq!(back.solved_delay.to_bits(), core.solved_delay.to_bits());
         assert_eq!(back.seg_delay.to_bits(), core.seg_delay.to_bits());
         assert_eq!(back.seg_energy.to_bits(), (-0.0f64).to_bits());
+        assert_eq!((back.faults_injected, back.repair_max), (13, 3));
         assert!(back.rounds.is_empty(), "records live in the sinks, not the checkpoint");
         // totals must flush identically
         assert_eq!(back.totals().0.to_bits(), core.totals().0.to_bits());

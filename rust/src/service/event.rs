@@ -22,7 +22,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::Config;
 use crate::delay::ConvergenceModel;
-use crate::sim::ScenarioBuilder;
+use crate::sim::{FaultPlan, ScenarioBuilder};
 use crate::util::json::Json;
 
 /// Which engine a run drives: the K-client round simulator loop or the
@@ -93,6 +93,10 @@ pub struct RunSpec {
     pub deadline_drop: Option<f64>,
     /// `population.seed` (geometry + selection lifecycle).
     pub population_seed: Option<u64>,
+    /// Fault-plan spec (see [`FaultPlan::parse`]); absent = no faults.
+    /// Serialized only when set, so pre-PR-10 fingerprints (and their
+    /// checkpoints) stay valid.
+    pub faults: Option<String>,
 }
 
 /// Key order of the canonical spec serialization (also the exhaustive
@@ -118,6 +122,7 @@ const SPEC_KEYS: &[&str] = &[
     "selector",
     "deadline_drop",
     "population_seed",
+    "faults",
 ];
 
 impl RunSpec {
@@ -145,6 +150,7 @@ impl RunSpec {
             selector: None,
             deadline_drop: None,
             population_seed: None,
+            faults: None,
         }
     }
 
@@ -233,6 +239,12 @@ impl RunSpec {
         spec.selector = opt_str("selector")?;
         spec.deadline_drop = opt_f64("deadline_drop")?;
         spec.population_seed = opt_usize("population_seed")?.map(|s| s as u64);
+        if let Some(f) = opt_str("faults")? {
+            // reject a bad plan at the event, with its line number,
+            // instead of rounds later when the run starts
+            FaultPlan::parse(&f).context("key 'faults'")?;
+            spec.faults = Some(f);
+        }
         Ok(spec)
     }
 
@@ -292,6 +304,9 @@ impl RunSpec {
         }
         if let Some(s) = self.population_seed {
             parts.push(format!("\"population_seed\":{s}"));
+        }
+        if let Some(f) = &self.faults {
+            parts.push(format!("\"faults\":{}", jstr(f)));
         }
         format!("{{{}}}", parts.join(","))
     }
@@ -356,6 +371,14 @@ impl RunSpec {
         match self.conv {
             Some([e_inf, c, alpha]) => ConvergenceModel::fitted(e_inf, c, alpha),
             None => ConvergenceModel::paper_default(),
+        }
+    }
+
+    /// The run's fault plan (empty when the spec carries none).
+    pub fn fault_plan(&self) -> Result<FaultPlan> {
+        match &self.faults {
+            Some(f) => FaultPlan::parse(f).context("run spec 'faults'"),
+            None => Ok(FaultPlan::default()),
         }
     }
 }
@@ -516,6 +539,43 @@ pub fn parse_events(text: &str) -> Result<Vec<Event>> {
     Ok(events)
 }
 
+/// One line [`parse_events_lenient`] could not parse.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SkippedLine {
+    /// 1-based line number in the input text.
+    pub line: usize,
+    /// The parse error, rendered with its context chain.
+    pub error: String,
+}
+
+/// Degradation-mode variant of [`parse_events`] (PR-10): malformed
+/// lines are *skipped and counted* instead of failing the whole file,
+/// so a replay can make progress through a truncated or bit-flipped
+/// log. Well-formed lines parse to exactly what [`parse_events`]
+/// produces — the lenient parser never reinterprets, only drops — and a
+/// clean file yields an empty skip list, making the two modes
+/// byte-equivalent on healthy input. Strict parsing stays the default:
+/// silently tolerating a typo in a hand-written file would change what
+/// the run simulates.
+pub fn parse_events_lenient(text: &str) -> (Vec<Event>, Vec<SkippedLine>) {
+    let mut events = Vec::new();
+    let mut skipped = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        match Event::from_json_line(line) {
+            Ok(e) => events.push(e),
+            Err(err) => skipped.push(SkippedLine {
+                line: i + 1,
+                error: format!("{err:#}"),
+            }),
+        }
+    }
+    (events, skipped)
+}
+
 /// JSON string literal (escapes quotes, backslashes, control chars).
 fn jstr(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
@@ -565,6 +625,7 @@ mod tests {
         spec.selector = Some("staleness:2".to_string());
         spec.deadline_drop = Some(0.25);
         spec.population_seed = Some(5);
+        spec.faults = Some("crash=0.1,stall=0.2:0.5:2,seed=3".to_string());
         spec
     }
 
@@ -664,5 +725,55 @@ mod tests {
         let text = "{\"event\":\"round_tick\"}\n{\"event\":\"nope\"}\n";
         let msg = format!("{:#}", parse_events(text).unwrap_err());
         assert!(msg.contains("line 2"), "{msg}");
+        // a bad fault spec is rejected at the event
+        assert!(
+            err("{\"event\":\"scenario_loaded\",\"preset\":\"paper\",\"faults\":\"crash=2\"}")
+                .contains("faults")
+        );
+    }
+
+    #[test]
+    fn fault_specs_ride_the_fingerprint_only_when_set() {
+        let plain = RunSpec::preset("paper");
+        assert!(!plain.fingerprint().contains("faults"));
+        assert!(plain.fault_plan().unwrap().is_empty());
+        let mut faulted = RunSpec::preset("paper");
+        faulted.faults = Some("crash=0.1,seed=3".to_string());
+        assert_ne!(plain.fingerprint(), faulted.fingerprint());
+        let plan = faulted.fault_plan().unwrap();
+        assert!(!plan.is_empty());
+        assert_eq!(plan.crash_rate, 0.1);
+        assert_eq!(plan.seed, 3);
+        // and the spec round-trips through the wire form
+        let line = Event::ScenarioLoaded(faulted.clone()).to_json_line();
+        match Event::from_json_line(&line).unwrap() {
+            Event::ScenarioLoaded(back) => assert_eq!(back, faulted),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn lenient_parsing_skips_and_counts_malformed_lines() {
+        let text = "# header\n\
+                    {\"event\":\"round_tick\"}\n\
+                    {\"event\":\"round_tick\"\n\
+                    {\"event\":\"round_tik\"}\n\
+                    {\"event\":\"round_tick\",\"count\":3}\n\
+                    {\"event\":\"shutdown\"}\n";
+        assert!(parse_events(text).is_err(), "strict must still fail");
+        let (events, skipped) = parse_events_lenient(text);
+        assert_eq!(events, vec![Event::RoundTick, Event::Shutdown]);
+        assert_eq!(skipped.len(), 3);
+        assert_eq!(
+            skipped.iter().map(|s| s.line).collect::<Vec<_>>(),
+            vec![3, 4, 5]
+        );
+        assert!(skipped[1].error.contains("unknown event"), "{:?}", skipped[1]);
+        assert!(skipped[2].error.contains("unknown key"), "{:?}", skipped[2]);
+        // a healthy file skips nothing and parses identically
+        let clean = "{\"event\":\"round_tick\"}\n{\"event\":\"shutdown\"}\n";
+        let (ev, sk) = parse_events_lenient(clean);
+        assert!(sk.is_empty());
+        assert_eq!(ev, parse_events(clean).unwrap());
     }
 }

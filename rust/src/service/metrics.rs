@@ -36,9 +36,12 @@ use crate::sim::RoundRecord;
 use crate::util::csv::CsvWriter;
 
 /// Column order of the shared per-round trace (CSV and JSONL).
-pub const TRACE_COLUMNS: [&str; 10] = [
+/// `faults` and `repair_tier` joined in PR-10: faults injected into the
+/// round and the feasibility-repair tier its solve needed (both 0 on
+/// clean runs).
+pub const TRACE_COLUMNS: [&str; 12] = [
     "round", "weight", "delay_s", "energy_j", "l_c", "rank", "cohort", "active", "dropped",
-    "resolved",
+    "resolved", "faults", "repair_tier",
 ];
 
 /// One round's record plus what the allocator adopted that round.
@@ -65,6 +68,16 @@ pub struct RunSummary {
     pub unique_participants: usize,
     pub final_l_c: usize,
     pub final_rank: usize,
+    /// Total faults injected across the run (PR-10; 0 on clean runs).
+    pub faults_injected: usize,
+    /// Deepest feasibility-repair tier any round's solve needed.
+    pub repair_max: u8,
+    /// Transient-failure retries the coordinator performed (0 for pure
+    /// allocator runs, which have no transport in the loop).
+    pub retries: usize,
+    /// Malformed event lines skipped by lenient replay (0 under strict
+    /// parsing, the default).
+    pub lines_skipped: usize,
     /// Whether the run reached one unit of convergence progress.
     pub converged: bool,
 }
@@ -92,7 +105,7 @@ fn num(v: f64) -> String {
 }
 
 /// The shared row encoding of one record, in [`TRACE_COLUMNS`] order.
-fn trace_row(r: &RoundRecord) -> [f64; 10] {
+fn trace_row(r: &RoundRecord) -> [f64; 12] {
     [
         r.round as f64,
         r.weight,
@@ -104,6 +117,8 @@ fn trace_row(r: &RoundRecord) -> [f64; 10] {
         r.active as f64,
         r.dropped as f64,
         if r.resolved { 1.0 } else { 0.0 },
+        r.faults as f64,
+        r.repair_tier as f64,
     ]
 }
 
@@ -123,7 +138,7 @@ pub fn round_json(m: &RoundMetrics) -> String {
     format!(
         "{{\"type\":\"round\",\"round\":{},\"weight\":{},\"delay_s\":{},\"energy_j\":{},\
          \"l_c\":{},\"rank\":{},\"cohort\":{},\"active\":{},\"dropped\":{},\
-         \"resolved\":{},\"adopted\":\"{}\"}}",
+         \"resolved\":{},\"faults\":{},\"repair_tier\":{},\"adopted\":\"{}\"}}",
         r.round,
         num(r.weight),
         num(r.delay),
@@ -134,6 +149,8 @@ pub fn round_json(m: &RoundMetrics) -> String {
         r.active,
         r.dropped,
         r.resolved,
+        r.faults,
+        r.repair_tier,
         m.adoption.label()
     )
 }
@@ -144,7 +161,8 @@ pub fn summary_json(s: &RunSummary) -> String {
         "{{\"type\":\"summary\",\"rounds\":{},\"realized_delay_s\":{},\
          \"realized_energy_j\":{},\"static_prediction_s\":{},\"resolves\":{},\
          \"fresh_solves\":{},\"deadline_drops\":{},\"unique_participants\":{},\
-         \"final_l_c\":{},\"final_rank\":{},\"converged\":{}}}",
+         \"final_l_c\":{},\"final_rank\":{},\"faults_injected\":{},\
+         \"repair_max\":{},\"retries\":{},\"lines_skipped\":{},\"converged\":{}}}",
         s.rounds,
         num(s.realized_delay),
         num(s.realized_energy),
@@ -155,6 +173,10 @@ pub fn summary_json(s: &RunSummary) -> String {
         s.unique_participants,
         s.final_l_c,
         s.final_rank,
+        s.faults_injected,
+        s.repair_max,
+        s.retries,
+        s.lines_skipped,
         s.converged
     )
 }
@@ -349,6 +371,8 @@ mod tests {
                 resolved: true,
                 cohort: 5,
                 dropped: 0,
+                faults: 0,
+                repair_tier: 0,
             },
             RoundRecord {
                 round: 1,
@@ -361,6 +385,8 @@ mod tests {
                 resolved: false,
                 cohort: 5,
                 dropped: 1,
+                faults: 2,
+                repair_tier: 1,
             },
         ]
     }
@@ -377,6 +403,10 @@ mod tests {
             unique_participants: 5,
             final_l_c: 3,
             final_rank: 4,
+            faults_injected: 2,
+            repair_max: 1,
+            retries: 0,
+            lines_skipped: 3,
             converged: true,
         }
     }

@@ -43,7 +43,7 @@ pub use crate::util::codec;
 
 pub use self::allocator::AllocatorService;
 pub use self::checkpoint::peek_header;
-pub use self::event::{parse_events, Event, RunMode, RunSpec};
+pub use self::event::{parse_events, parse_events_lenient, Event, RunMode, RunSpec, SkippedLine};
 pub use self::metrics::{
     write_rounds_csv, AggregateSink, JsonlSink, MemorySink, MetricSink, RoundMetrics, RunSummary,
 };

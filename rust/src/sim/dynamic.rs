@@ -75,6 +75,7 @@ use crate::model::WorkloadTable;
 use crate::opt::policy::{AllocationPolicy, PolicyOutcome};
 use crate::opt::Objective;
 use crate::sim::engine::{DriftEnv, RoundCore, StepCtx};
+use crate::sim::faults::{FaultInjector, FaultPlan};
 
 /// When (and whether) to re-run the allocation policy as the
 /// environment drifts.
@@ -166,6 +167,11 @@ pub struct RoundRecord {
     /// Cohort members cut by the straggler deadline this round (always
     /// 0 for [`RoundSimulator`], which has no deadline).
     pub dropped: usize,
+    /// Faults active this round (PR-10 injection; 0 on clean runs).
+    pub faults: usize,
+    /// Feasibility-repair tier this round's solve needed (0 = healthy;
+    /// see [`crate::opt::solve_with_repair`]).
+    pub repair_tier: u8,
 }
 
 /// Outcome of one dynamic run.
@@ -200,6 +206,11 @@ pub struct DynamicOutcome {
     /// Total cohort members cut by the straggler deadline, summed over
     /// rounds (always 0 for [`RoundSimulator`]).
     pub deadline_drops: usize,
+    /// Total faults injected over the run (0 without a fault plan).
+    pub faults_injected: usize,
+    /// Highest feasibility-repair tier any round needed (0 = every
+    /// solve was healthy).
+    pub repair_max: u8,
 }
 
 /// Realized per-round quantities of one (scenario, allocation, cohort)
@@ -283,6 +294,21 @@ impl<'a> RoundSimulator<'a> {
         policy: &dyn AllocationPolicy,
         strategy: ReOptStrategy,
     ) -> Result<DynamicOutcome> {
+        self.run_faulted(policy, strategy, &FaultPlan::default())
+    }
+
+    /// [`RoundSimulator::run`] under a fault plan (PR-10): each round's
+    /// stateless overlay is applied to the drifted environment before
+    /// the strategy/solve step and undone after the round realizes. An
+    /// empty plan constructs no injector and executes exactly the
+    /// statements `run` always has, so fault-free runs are
+    /// bit-identical to `run` (pinned in `rust/tests/prop_faults.rs`).
+    pub fn run_faulted(
+        &self,
+        policy: &dyn AllocationPolicy,
+        strategy: ReOptStrategy,
+        plan: &FaultPlan,
+    ) -> Result<DynamicOutcome> {
         let dynamics = &self.base.dynamics;
         if dynamics.shadow_sigma_db < 0.0 && dynamics.rho < 1.0 {
             // same bug class as a directly-constructed ConvergenceModel
@@ -300,6 +326,12 @@ impl<'a> RoundSimulator<'a> {
         let k_n = self.base.k();
         let objective = Objective::from_config(&self.base.objective)?;
         let table = self.cache.table_for(&self.base.profile, &self.ranks);
+        let injector = if plan.is_empty() {
+            None
+        } else {
+            plan.validate()?;
+            Some(FaultInjector::new(plan.clone()))
+        };
 
         // working copy whose gains / compute / membership evolve, plus
         // the seeded drift streams (PR-8: shared engine state — the
@@ -318,6 +350,7 @@ impl<'a> RoundSimulator<'a> {
             table: &table,
             objective: &objective,
             strategy,
+            ranks: &self.ranks,
             label: "dynamic",
         };
 
@@ -328,15 +361,60 @@ impl<'a> RoundSimulator<'a> {
             // at most once per round: the strategy decision and the
             // candidate adoption reuse their evaluator passes
             let mut cost_round: Option<RoundCost> = None;
+            let mut faults = 0usize;
+            let mut repair_tier = 0u8;
+            let mut shed: Vec<usize> = Vec::new();
+            let mut undo = None;
             if core.round > 0 {
                 if env.advance() {
                     core.env_dirty = true;
                 }
+                if let Some(inj) = &injector {
+                    let ov = inj.overlay(core.round, k_n);
+                    if !ov.is_empty() {
+                        faults = ov.count();
+                        core.faults_injected += faults;
+                        undo = Some(env.apply_overlay(&ov));
+                        core.env_dirty = true;
+                    }
+                }
                 let re = core.maybe_reopt(&ctx, policy, &env.scn, &env.active)?;
                 resolved = re.resolved;
                 cost_round = re.cost;
+                repair_tier = re.repair_tier;
+                shed = re.shed;
             }
-            core.realize(&ctx, &env.scn, &env.active, cost_round, resolved, k_n, 0);
+            if shed.is_empty() {
+                core.realize(
+                    &ctx, &env.scn, &env.active, cost_round, resolved, k_n, 0, faults,
+                    repair_tier,
+                );
+            } else {
+                // tier-3 repair: shed clients sit the round out (their
+                // allocation rows are empty — scoring them active would
+                // be infinite)
+                let mut eff = env.active.clone();
+                for &k in &shed {
+                    if let Some(a) = eff.get_mut(k) {
+                        *a = false;
+                    }
+                }
+                if !eff.iter().any(|&a| a) {
+                    // never realize an empty federation: the kept
+                    // clients participate even if the dropout process
+                    // had them offline this round
+                    for (k, a) in eff.iter_mut().enumerate() {
+                        *a = !shed.contains(&k);
+                    }
+                }
+                core.realize(
+                    &ctx, &env.scn, &eff, cost_round, resolved, k_n, 0, faults, repair_tier,
+                );
+            }
+            if let Some(u) = undo {
+                env.undo_overlay(u);
+                core.env_dirty = true;
+            }
         }
         Ok(core.finish(k_n))
     }
@@ -418,6 +496,8 @@ impl AllocationPolicy for DynamicPolicy {
             energy: out.realized_energy,
             trajectory: Some(out.rounds.iter().map(|r| r.delay).collect()),
             iterations: out.rounds.len(),
+            repair_tier: out.repair_max,
+            shed: Vec::new(),
         })
     }
 }
@@ -667,6 +747,127 @@ mod tests {
         let every_j = sim_j.run(&policy, ReOptStrategy::EveryRound).unwrap();
         assert_eq!(every_j.fresh_solves, every_j.resolves);
         assert!(every_j.fresh_solves > 0);
+    }
+
+    #[test]
+    fn empty_fault_plan_is_bit_transparent() {
+        let scn = dynamic_builder(0.5)
+            .tweak(|c| {
+                c.dynamics.compute_jitter = 0.1;
+                c.dynamics.dropout = 0.1;
+            })
+            .build()
+            .unwrap();
+        let conv = small_conv();
+        let cache = WorkloadCache::new();
+        let sim = RoundSimulator::new(&scn, &conv, &cache, &RANKS);
+        let policy = Proposed::with_ranks(&RANKS);
+        let plain = sim.run(&policy, ReOptStrategy::EveryRound).unwrap();
+        let faulted = sim
+            .run_faulted(&policy, ReOptStrategy::EveryRound, &FaultPlan::default())
+            .unwrap();
+        assert_eq!(faulted.faults_injected, 0);
+        assert_eq!(faulted.repair_max, 0);
+        assert_eq!(plain.realized_delay.to_bits(), faulted.realized_delay.to_bits());
+        assert_eq!(plain.realized_energy.to_bits(), faulted.realized_energy.to_bits());
+        assert_eq!(plain.rounds.len(), faulted.rounds.len());
+        for (x, y) in plain.rounds.iter().zip(&faulted.rounds) {
+            assert_eq!(x.delay.to_bits(), y.delay.to_bits());
+            assert_eq!(x.active, y.active);
+            assert_eq!(y.faults, 0);
+            assert_eq!(y.repair_tier, 0);
+        }
+    }
+
+    #[test]
+    fn crash_faults_shrink_rounds_and_replay_identically() {
+        let scn = dynamic_builder(1.0).build().unwrap();
+        let conv = small_conv();
+        let cache = WorkloadCache::new();
+        let sim = RoundSimulator::new(&scn, &conv, &cache, &RANKS);
+        let policy = Proposed::with_ranks(&RANKS);
+        let plan = FaultPlan::parse("crash=0.6:1,seed=3").unwrap();
+        let a = sim
+            .run_faulted(&policy, ReOptStrategy::OneShot, &plan)
+            .unwrap();
+        assert!(a.faults_injected > 0, "60% crash rate never fired");
+        assert!(
+            a.rounds.iter().any(|r| r.active < scn.k()),
+            "crashes never took a client offline"
+        );
+        assert!(a.rounds.iter().all(|r| r.active >= 1), "empty federation simulated");
+        assert_eq!(
+            a.rounds.iter().map(|r| r.faults).sum::<usize>(),
+            a.faults_injected
+        );
+        // identical seeds replay identical schedules and realizations
+        let b = sim
+            .run_faulted(&policy, ReOptStrategy::OneShot, &plan)
+            .unwrap();
+        assert_eq!(a.realized_delay.to_bits(), b.realized_delay.to_bits());
+        assert_eq!(a.faults_injected, b.faults_injected);
+        for (x, y) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(x.faults, y.faults);
+            assert_eq!(x.active, y.active);
+            assert_eq!(x.delay.to_bits(), y.delay.to_bits());
+        }
+    }
+
+    #[test]
+    fn stall_faults_slow_rounds_but_recover() {
+        // frozen channel, one_shot: every round's delay equals the
+        // baseline except the stalled ones, which are strictly slower
+        let scn = dynamic_builder(1.0).build().unwrap();
+        let conv = small_conv();
+        let cache = WorkloadCache::new();
+        let sim = RoundSimulator::new(&scn, &conv, &cache, &RANKS);
+        let policy = Proposed::with_ranks(&RANKS);
+        let clean = sim.run(&policy, ReOptStrategy::OneShot).unwrap();
+        let plan = FaultPlan::parse("stall=0.5:0.25:1,seed=9").unwrap();
+        let stalled = sim
+            .run_faulted(&policy, ReOptStrategy::OneShot, &plan)
+            .unwrap();
+        assert!(stalled.faults_injected > 0, "50% stall rate never fired");
+        assert_eq!(clean.rounds.len(), stalled.rounds.len());
+        for (c, s) in clean.rounds.iter().zip(&stalled.rounds) {
+            if s.faults == 0 {
+                assert_eq!(
+                    c.delay.to_bits(),
+                    s.delay.to_bits(),
+                    "round {}: fault-free round must realize baseline bits",
+                    s.round
+                );
+            } else {
+                assert!(
+                    s.delay > c.delay,
+                    "round {}: a compute stall must slow the round",
+                    s.round
+                );
+            }
+        }
+        assert!(stalled.realized_delay > clean.realized_delay);
+    }
+
+    #[test]
+    fn total_outage_triggers_the_repair_chain() {
+        // a hard outage (factor 0) starves the victim's uplink: a fresh
+        // solve is infeasible, so the engine must degrade, not die
+        let scn = dynamic_builder(1.0).build().unwrap();
+        let conv = small_conv();
+        let cache = WorkloadCache::new();
+        let sim = RoundSimulator::new(&scn, &conv, &cache, &RANKS);
+        let policy = Proposed::with_ranks(&RANKS);
+        let plan = FaultPlan::parse("outage=0.5:0:1,seed=2").unwrap();
+        let out = sim
+            .run_faulted(&policy, ReOptStrategy::EveryRound, &plan)
+            .unwrap();
+        assert!(out.faults_injected > 0, "50% outage rate never fired");
+        assert!(out.repair_max > 0, "outage rounds must have needed repair");
+        assert!(out.realized_delay.is_finite(), "degradation must stay finite");
+        assert_eq!(
+            out.repair_max,
+            out.rounds.iter().map(|r| r.repair_tier).max().unwrap()
+        );
     }
 
     #[test]

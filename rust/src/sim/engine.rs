@@ -35,9 +35,10 @@ use anyhow::{bail, Context, Result};
 use crate::delay::{Allocation, ColumnCache, ConvergenceModel, Scenario, WorkloadCache};
 use crate::model::WorkloadTable;
 use crate::net::{ChannelModel, ChannelProcess, ChannelState};
-use crate::opt::policy::AllocationPolicy;
+use crate::opt::policy::{solve_with_repair, AllocationPolicy};
 use crate::opt::Objective;
 use crate::sim::dynamic::{round_cost, DynamicOutcome, ReOptStrategy, RoundCost, RoundRecord};
+use crate::sim::faults::RoundOverlay;
 use crate::util::rng::Rng;
 
 /// Which candidate the adoption step kept this round — streamed by the
@@ -69,7 +70,7 @@ impl Adoption {
 }
 
 /// What [`RoundCore::maybe_reopt`] decided this round.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ReOptOutcome {
     /// Whether the strategy (or a forced request) re-solved this round.
     pub resolved: bool,
@@ -79,6 +80,14 @@ pub struct ReOptOutcome {
     pub cost: Option<RoundCost>,
     /// Which candidate won (== `Held` iff `resolved` is false).
     pub adopted: Adoption,
+    /// Feasibility-repair tier of this round's solve (PR-10): 0 on the
+    /// healthy path (including `Held` rounds); see
+    /// [`crate::opt::solve_with_repair`].
+    pub repair_tier: u8,
+    /// Clients shed by a tier-3 repair this round (view-indices; their
+    /// allocation rows are empty). The run loop must drop them from the
+    /// round's participation mask before realizing.
+    pub shed: Vec<usize>,
 }
 
 /// One scenario whose gains / compute capabilities / membership evolve
@@ -175,6 +184,45 @@ impl DriftEnv {
         dirty
     }
 
+    /// Apply a fault overlay for one round (PR-10), returning the undo
+    /// state that restores the environment after the round is realized.
+    /// Only called for non-empty overlays — the fault-free path never
+    /// touches the environment, so zero-fault runs move no bits. The
+    /// persistent drift state (channel process, base compute, streams)
+    /// is untouched: faults perturb the *realized* scenario, not the
+    /// processes behind it, which is what keeps the schedule overlay
+    /// stateless.
+    pub(crate) fn apply_overlay(&mut self, ov: &RoundOverlay) -> FaultUndo {
+        let undo = FaultUndo {
+            gains_main: self.scn.main_link.client_gain.clone(),
+            gains_fed: self.scn.fed_link.client_gain.clone(),
+            f_cycles: self.scn.topo.clients.iter().map(|c| c.f_cycles).collect(),
+            active: self.active.clone(),
+        };
+        crate::sim::faults::apply_to_scenario(&mut self.scn, ov);
+        for &k in &ov.crashed {
+            if let Some(a) = self.active.get_mut(k) {
+                *a = false;
+            }
+        }
+        if !self.active.iter().any(|&a| a) {
+            // never simulate an empty federation (the dropout process's
+            // own guard, applied to crashes too)
+            self.active = undo.active.clone();
+        }
+        undo
+    }
+
+    /// Restore the environment after a faulted round.
+    pub(crate) fn undo_overlay(&mut self, undo: FaultUndo) {
+        self.scn.main_link.client_gain = undo.gains_main;
+        self.scn.fed_link.client_gain = undo.gains_fed;
+        for (c, f) in self.scn.topo.clients.iter_mut().zip(undo.f_cycles) {
+            c.f_cycles = f;
+        }
+        self.active = undo.active;
+    }
+
     /// Force one client's membership (the service's `ClientDropped` /
     /// `ClientRejoined` events). Out of range is a descriptive error —
     /// event files are external input.
@@ -192,6 +240,16 @@ impl DriftEnv {
     }
 }
 
+/// Saved environment state bracketing one faulted round: everything a
+/// [`RoundOverlay`] can touch, restored verbatim by
+/// [`DriftEnv::undo_overlay`] after the round realizes.
+pub(crate) struct FaultUndo {
+    gains_main: Vec<f64>,
+    gains_fed: Vec<f64>,
+    f_cycles: Vec<f64>,
+    active: Vec<bool>,
+}
+
 /// Per-run immutable context shared by every [`RoundCore`] step.
 pub struct StepCtx<'a> {
     pub(crate) conv: &'a ConvergenceModel,
@@ -199,6 +257,9 @@ pub struct StepCtx<'a> {
     pub(crate) table: &'a Arc<WorkloadTable>,
     pub(crate) objective: &'a Objective,
     pub(crate) strategy: ReOptStrategy,
+    /// Candidate rank set — consumed only by the tier-2 baseline-d
+    /// feasibility repair ([`crate::opt::solve_with_repair`]).
+    pub(crate) ranks: &'a [usize],
     /// `"dynamic"` or `"population"` (or `"service"`): the engine name
     /// error contexts and the max-rounds bail print.
     pub(crate) label: &'a str,
@@ -232,6 +293,11 @@ pub struct RoundCore {
     pub(crate) fresh_solves: usize,
     pub(crate) resolves: usize,
     pub(crate) deadline_drops: usize,
+    /// Total faults injected so far (PR-10; 0 on fault-free runs).
+    pub(crate) faults_injected: usize,
+    /// Highest feasibility-repair tier any round needed (PR-10; 0 on
+    /// healthy runs).
+    pub(crate) repair_max: u8,
     /// Rounds left to convergence at the current rank.
     pub(crate) remaining: f64,
     /// Round delay at the last solve (OnDegrade reference).
@@ -279,6 +345,8 @@ impl RoundCore {
             fresh_solves: 0,
             resolves: 0,
             deadline_drops: 0,
+            faults_injected: 0,
+            repair_max: 0,
             remaining,
             solved_delay: f64::INFINITY,
             static_prediction,
@@ -375,6 +443,8 @@ impl RoundCore {
                 resolved: false,
                 cost: cost_round,
                 adopted: Adoption::Held,
+                repair_tier: 0,
+                shed: Vec::new(),
             });
         }
         // Warm start: while nothing in the environment has drifted
@@ -383,10 +453,37 @@ impl RoundCore {
         // allocation bit for bit, so it IS the fresh candidate (zero
         // solver work; the frozen-run invariant prop_dynamic asserts).
         let fresh_alloc = if self.env_dirty {
-            let fresh = policy
-                .solve_cached(scn, ctx.conv, ctx.cache)
-                .with_context(|| format!("{} run: re-solve at round {}", ctx.label, self.round))?;
+            let fresh =
+                solve_with_repair(policy, scn, ctx.conv, ctx.cache, Some(&self.alloc), ctx.ranks)
+                    .with_context(|| {
+                        format!("{} run: re-solve at round {}", ctx.label, self.round)
+                    })?;
             self.fresh_solves += 1;
+            if fresh.repair_tier > 0 {
+                // Degraded solve (PR-10): adopt the repaired allocation
+                // directly. The 3-way compare is skipped — a shed
+                // allocation scores infinite against the still-full
+                // active mask, and the repair tiers already picked the
+                // best finite fallback. The environment stays dirty and
+                // nothing is memoized: the next due round must try a
+                // clean solve again rather than replay the repair.
+                self.resolves += 1;
+                self.repair_max = self.repair_max.max(fresh.repair_tier);
+                if fresh.alloc.rank != self.alloc.rank {
+                    let e_old = ctx.conv.rounds(self.alloc.rank);
+                    let e_new = ctx.conv.rounds(fresh.alloc.rank);
+                    self.remaining *= e_new / e_old;
+                }
+                self.alloc = fresh.alloc;
+                self.incumbent_is_initial = false;
+                return Ok(ReOptOutcome {
+                    resolved: true,
+                    cost: None,
+                    adopted: Adoption::Fresh,
+                    repair_tier: fresh.repair_tier,
+                    shed: fresh.shed,
+                });
+            }
             self.env_dirty = false;
             self.memo_fresh_alloc = fresh.alloc.clone();
             fresh.alloc
@@ -434,6 +531,8 @@ impl RoundCore {
             resolved: true,
             cost: Some(best),
             adopted,
+            repair_tier: 0,
+            shed: Vec::new(),
         })
     }
 
@@ -450,6 +549,8 @@ impl RoundCore {
         resolved: bool,
         cohort: usize,
         dropped: usize,
+        faults: usize,
+        repair_tier: u8,
     ) -> RoundRecord {
         let cost = match cost_round {
             Some(c) => c,
@@ -485,6 +586,8 @@ impl RoundCore {
             resolved,
             cohort,
             dropped,
+            faults,
+            repair_tier,
         };
         self.rounds.push(record.clone());
         self.remaining -= weight;
@@ -515,6 +618,8 @@ impl RoundCore {
             fresh_solves: self.fresh_solves,
             unique_participants,
             deadline_drops: self.deadline_drops,
+            faults_injected: self.faults_injected,
+            repair_max: self.repair_max,
         }
     }
 }

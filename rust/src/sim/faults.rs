@@ -1,0 +1,628 @@
+//! Deterministic fault injection (PR-10): a seeded, typed fault
+//! vocabulary perturbing the round loop, with the same counter-based
+//! stream discipline as [`crate::sim::population`].
+//!
+//! A [`FaultPlan`] declares *rates* and *durations* for four runtime
+//! fault classes:
+//!
+//! * **crash** — a client goes dark mid-round and stays offline for
+//!   `crash_rounds` rounds (it holds its subchannels but contributes
+//!   neither compute nor uploads, exactly like a dropout);
+//! * **stall** — a transient device compute stall: the client's
+//!   `f_cycles` is multiplied by `stall_factor` for `stall_rounds`
+//!   rounds;
+//! * **outage** — a subchannel outage on the main uplink: the client's
+//!   channel gain is attenuated by `outage_factor` (0 = total outage)
+//!   for `outage_rounds` rounds, applied through the
+//!   [`crate::net::Link::mask_client_gains`] mask;
+//! * **blackout** — a federated-server blackout: every client's fed
+//!   uplink gain is attenuated by `blackout_factor` for
+//!   `blackout_rounds` rounds
+//!   ([`crate::net::Link::attenuate_all_gains`]).
+//!
+//! The two remaining members of the fault vocabulary — corrupted /
+//! truncated checkpoint bytes and malformed event-stream lines — are
+//! *input* faults, not runtime faults: they are exercised by the CRC
+//! footer tests ([`crate::util::codec::check_crc`]) and the lenient
+//! replay parser ([`crate::service::event::parse_events_lenient`]).
+//!
+//! **Determinism theorem.** Every draw the injector ever takes comes
+//! from a counter-based stream that is a pure function of
+//! `(plan.seed, TAG_FAULT, onset round, fault class)` — the discipline
+//! of [`crate::sim::population::stream`]. Consequences:
+//!
+//! 1. The injector is **stateless**: [`FaultInjector::overlay`] is a
+//!    pure function of `(plan, round, k)`, so identical seeds replay
+//!    identical fault schedules — across runs, across checkpoint/resume
+//!    boundaries (nothing about the schedule needs serializing), and
+//!    across processes.
+//! 2. The injector consumes **zero** draws from the dynamics streams
+//!    (`jitter`, `dropout`, channel process) — it owns its own seed and
+//!    tag — so attaching an *empty* plan, or removing a plan, moves no
+//!    bits in any existing run (`rust/tests/prop_faults.rs` pins this
+//!    byte-for-byte on every preset).
+//! 3. Fault classes draw from per-class streams, so tuning one class's
+//!    rate never shifts another class's schedule.
+//!
+//! Faults start at round >= 1: round 0 is the initial solve on the
+//! static scenario, which stays pristine by construction.
+
+use anyhow::{bail, Result};
+
+use crate::config::FaultsConfig;
+use crate::delay::Scenario;
+use crate::sim::population::stream;
+use crate::util::rng::Rng;
+
+/// Stream purpose tag: fault-injection draws (see
+/// [`crate::sim::population::stream`]; the other tags live there).
+pub(crate) const TAG_FAULT: u64 = 0xFA17;
+
+/// Per-class sub-stream ids (the `b` coordinate of [`stream`]).
+const CLASS_CRASH: u64 = 0;
+const CLASS_STALL: u64 = 1;
+const CLASS_OUTAGE: u64 = 2;
+const CLASS_BLACKOUT: u64 = 3;
+
+/// A declarative fault schedule: rates, severities, and durations for
+/// the four runtime fault classes. The empty (all-rates-zero) plan is
+/// the identity: attaching it to a run moves no bits.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Seed of the injector's own stream family (independent of the
+    /// population/dynamics seeds).
+    pub seed: u64,
+    /// Per-client per-round crash probability.
+    pub crash_rate: f64,
+    /// Rounds a crashed client stays offline (>= 1).
+    pub crash_rounds: usize,
+    /// Per-client per-round compute-stall probability.
+    pub stall_rate: f64,
+    /// Multiplier on a stalled client's `f_cycles`, in (0, 1].
+    pub stall_factor: f64,
+    pub stall_rounds: usize,
+    /// Per-client per-round main-uplink outage probability.
+    pub outage_rate: f64,
+    /// Linear gain multiplier under outage, in [0, 1] (0 = total
+    /// outage: the client's rate is 0 on every subchannel, which is
+    /// what drives solves infeasible and exercises the repair chain).
+    pub outage_factor: f64,
+    pub outage_rounds: usize,
+    /// Per-round federated-server blackout probability.
+    pub blackout_rate: f64,
+    /// Linear gain multiplier on every fed-uplink gain, in [0, 1].
+    pub blackout_factor: f64,
+    pub blackout_rounds: usize,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan {
+            seed: 0xFA17,
+            crash_rate: 0.0,
+            crash_rounds: 1,
+            stall_rate: 0.0,
+            stall_factor: 0.5,
+            stall_rounds: 1,
+            outage_rate: 0.0,
+            outage_factor: 0.0,
+            outage_rounds: 1,
+            blackout_rate: 0.0,
+            blackout_factor: 1e-4,
+            blackout_rounds: 1,
+        }
+    }
+}
+
+fn parse_f64(what: &str, s: &str) -> Result<f64> {
+    match s.parse::<f64>() {
+        Ok(v) if v.is_finite() => Ok(v),
+        _ => bail!("bad {what} '{s}' in fault spec (want a finite number)"),
+    }
+}
+
+fn parse_usize(what: &str, s: &str) -> Result<usize> {
+    s.parse::<usize>()
+        .map_err(|e| anyhow::anyhow!("bad {what} '{s}' in fault spec: {e}"))
+}
+
+impl FaultPlan {
+    /// True when no runtime fault can ever fire (the identity plan).
+    pub fn is_empty(&self) -> bool {
+        self.crash_rate == 0.0
+            && self.stall_rate == 0.0
+            && self.outage_rate == 0.0
+            && self.blackout_rate == 0.0
+    }
+
+    /// Parse a `--faults` spec: comma-separated `key=args` sections
+    /// with colon-separated args, e.g.
+    /// `crash=0.1:2,stall=0.05:0.5:1,outage=0.1:0:2,blackout=0.02:1e-4:1,seed=7`.
+    ///
+    /// * `crash=RATE[:ROUNDS]`
+    /// * `stall=RATE[:FACTOR[:ROUNDS]]`
+    /// * `outage=RATE[:FACTOR[:ROUNDS]]`
+    /// * `blackout=RATE[:FACTOR[:ROUNDS]]`
+    /// * `seed=U64`
+    ///
+    /// Omitted args keep the [`FaultPlan::default`] values; `none` (or
+    /// an empty spec) is the empty plan. [`FaultPlan::label`] emits a
+    /// spec this function round-trips.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "none" {
+            return Ok(plan);
+        }
+        for section in spec.split(',') {
+            let section = section.trim();
+            if section.is_empty() {
+                continue;
+            }
+            let (key, args) = match section.split_once('=') {
+                Some((k, a)) => (k.trim(), a.trim()),
+                None => bail!(
+                    "bad fault section '{section}' (want key=args; keys: \
+                     crash, stall, outage, blackout, seed)"
+                ),
+            };
+            let parts: Vec<&str> = args.split(':').map(str::trim).collect();
+            match key {
+                "crash" => {
+                    plan.crash_rate = parse_f64("crash rate", parts[0])?;
+                    if let Some(p) = parts.get(1) {
+                        plan.crash_rounds = parse_usize("crash rounds", p)?;
+                    }
+                    if parts.len() > 2 {
+                        bail!("crash takes at most RATE:ROUNDS, got '{args}'");
+                    }
+                }
+                "stall" => {
+                    plan.stall_rate = parse_f64("stall rate", parts[0])?;
+                    if let Some(p) = parts.get(1) {
+                        plan.stall_factor = parse_f64("stall factor", p)?;
+                    }
+                    if let Some(p) = parts.get(2) {
+                        plan.stall_rounds = parse_usize("stall rounds", p)?;
+                    }
+                    if parts.len() > 3 {
+                        bail!("stall takes at most RATE:FACTOR:ROUNDS, got '{args}'");
+                    }
+                }
+                "outage" => {
+                    plan.outage_rate = parse_f64("outage rate", parts[0])?;
+                    if let Some(p) = parts.get(1) {
+                        plan.outage_factor = parse_f64("outage factor", p)?;
+                    }
+                    if let Some(p) = parts.get(2) {
+                        plan.outage_rounds = parse_usize("outage rounds", p)?;
+                    }
+                    if parts.len() > 3 {
+                        bail!("outage takes at most RATE:FACTOR:ROUNDS, got '{args}'");
+                    }
+                }
+                "blackout" => {
+                    plan.blackout_rate = parse_f64("blackout rate", parts[0])?;
+                    if let Some(p) = parts.get(1) {
+                        plan.blackout_factor = parse_f64("blackout factor", p)?;
+                    }
+                    if let Some(p) = parts.get(2) {
+                        plan.blackout_rounds = parse_usize("blackout rounds", p)?;
+                    }
+                    if parts.len() > 3 {
+                        bail!("blackout takes at most RATE:FACTOR:ROUNDS, got '{args}'");
+                    }
+                }
+                "seed" => {
+                    plan.seed = parts[0].parse::<u64>().map_err(|e| {
+                        anyhow::anyhow!("bad fault seed '{}': {e}", parts[0])
+                    })?;
+                    if parts.len() > 1 {
+                        bail!("seed takes one value, got '{args}'");
+                    }
+                }
+                _ => bail!(
+                    "unknown fault key '{key}' (available: crash, stall, outage, \
+                     blackout, seed)"
+                ),
+            }
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Lift the TOML `[faults]` section into a plan.
+    pub fn from_config(cfg: &FaultsConfig) -> Result<FaultPlan> {
+        let plan = FaultPlan {
+            seed: cfg.seed,
+            crash_rate: cfg.crash_rate,
+            crash_rounds: cfg.crash_rounds,
+            stall_rate: cfg.stall_rate,
+            stall_factor: cfg.stall_factor,
+            stall_rounds: cfg.stall_rounds,
+            outage_rate: cfg.outage_rate,
+            outage_factor: cfg.outage_factor,
+            outage_rounds: cfg.outage_rounds,
+            blackout_rate: cfg.blackout_rate,
+            blackout_factor: cfg.blackout_factor,
+            blackout_rounds: cfg.blackout_rounds,
+        };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Validate rates / factors / durations; every path into a plan
+    /// (spec, TOML, literals via callers) funnels through this.
+    pub fn validate(&self) -> Result<()> {
+        for (what, rate) in [
+            ("crash", self.crash_rate),
+            ("stall", self.stall_rate),
+            ("outage", self.outage_rate),
+            ("blackout", self.blackout_rate),
+        ] {
+            if !(0.0..=1.0).contains(&rate) {
+                bail!("fault {what} rate must be in [0, 1], got {rate}");
+            }
+        }
+        if !(self.stall_factor > 0.0 && self.stall_factor <= 1.0) {
+            bail!(
+                "stall factor must be in (0, 1] (0 would mean a dead device — \
+                 use crash), got {}",
+                self.stall_factor
+            );
+        }
+        for (what, f) in [("outage", self.outage_factor), ("blackout", self.blackout_factor)] {
+            if !(0.0..=1.0).contains(&f) {
+                bail!("fault {what} factor must be in [0, 1], got {f}");
+            }
+        }
+        for (what, o) in [
+            ("crash", self.crash_rounds),
+            ("stall", self.stall_rounds),
+            ("outage", self.outage_rounds),
+            ("blackout", self.blackout_rounds),
+        ] {
+            if o == 0 {
+                bail!("fault {what} duration must be >= 1 round");
+            }
+        }
+        Ok(())
+    }
+
+    /// Canonical spec string [`FaultPlan::parse`] round-trips (`none`
+    /// for the empty plan; the seed is always emitted otherwise).
+    pub fn label(&self) -> String {
+        if self.is_empty() {
+            return "none".to_string();
+        }
+        let mut parts = Vec::new();
+        if self.crash_rate > 0.0 {
+            parts.push(format!("crash={}:{}", self.crash_rate, self.crash_rounds));
+        }
+        if self.stall_rate > 0.0 {
+            parts.push(format!(
+                "stall={}:{}:{}",
+                self.stall_rate, self.stall_factor, self.stall_rounds
+            ));
+        }
+        if self.outage_rate > 0.0 {
+            parts.push(format!(
+                "outage={}:{}:{}",
+                self.outage_rate, self.outage_factor, self.outage_rounds
+            ));
+        }
+        if self.blackout_rate > 0.0 {
+            parts.push(format!(
+                "blackout={}:{}:{}",
+                self.blackout_rate, self.blackout_factor, self.blackout_rounds
+            ));
+        }
+        parts.push(format!("seed={}", self.seed));
+        parts.join(",")
+    }
+}
+
+/// The faults *active* at one round: what the engines apply on top of
+/// the evolved environment before solving and realizing the round.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RoundOverlay {
+    /// Client view-indices forced offline this round (sorted,
+    /// deduplicated).
+    pub crashed: Vec<usize>,
+    /// `(client, factor)` compute stalls (sorted by client).
+    pub stalled: Vec<(usize, f64)>,
+    /// `(client, factor)` main-uplink gain masks (sorted by client).
+    pub outage: Vec<(usize, f64)>,
+    /// Uniform fed-uplink gain factor while the federated server is
+    /// blacked out.
+    pub blackout: Option<f64>,
+}
+
+impl RoundOverlay {
+    /// True when the round is fault-free (the engines' zero-cost
+    /// fast path: nothing is applied, nothing is undone, no bits move).
+    pub fn is_empty(&self) -> bool {
+        self.crashed.is_empty()
+            && self.stalled.is_empty()
+            && self.outage.is_empty()
+            && self.blackout.is_none()
+    }
+
+    /// Number of faults active this round (what
+    /// [`crate::sim::RoundRecord::faults`] records).
+    pub fn count(&self) -> usize {
+        self.crashed.len()
+            + self.stalled.len()
+            + self.outage.len()
+            + usize::from(self.blackout.is_some())
+    }
+}
+
+/// Apply an overlay's scenario-visible faults (stalls, outages,
+/// blackout) to a scenario in place. Membership (crashes) is the
+/// caller's: the engines own their availability masks.
+pub(crate) fn apply_to_scenario(scn: &mut Scenario, ov: &RoundOverlay) {
+    for &(k, factor) in &ov.stalled {
+        if let Some(c) = scn.topo.clients.get_mut(k) {
+            c.f_cycles *= factor;
+        }
+    }
+    scn.main_link.mask_client_gains(&ov.outage);
+    if let Some(factor) = ov.blackout {
+        scn.fed_link.attenuate_all_gains(factor);
+    }
+}
+
+/// The stateless injector: a [`FaultPlan`] plus the pure-function
+/// schedule derivation (see the module docs' determinism theorem).
+#[derive(Clone, Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        FaultInjector { plan }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// The onset draw for one fault class at one round: a fresh
+    /// counter-based stream, one uniform per client (or one total for
+    /// the blackout class).
+    fn class_stream(&self, onset: usize, class: u64) -> Rng {
+        stream(self.plan.seed, TAG_FAULT, onset as u64, class)
+    }
+
+    /// Collect the clients whose `class` fault *starts* at `onset`.
+    fn onsets(&self, onset: usize, k: usize, rate: f64, class: u64, hit: &mut Vec<usize>) {
+        let mut rng = self.class_stream(onset, class);
+        for j in 0..k {
+            if rng.f64() < rate && !hit.contains(&j) {
+                hit.push(j);
+            }
+        }
+    }
+
+    /// Every fault *active* at `round` over a `k`-client view: the
+    /// union of onsets over each class's trailing duration window. A
+    /// pure function of `(plan, round, k)` — no state, no serialized
+    /// schedule, bit-identical replay from any resume point. Round 0
+    /// is always fault-free.
+    pub fn overlay(&self, round: usize, k: usize) -> RoundOverlay {
+        let mut ov = RoundOverlay::default();
+        if round == 0 {
+            return ov;
+        }
+        let p = &self.plan;
+        // onset window for a duration-o fault active at `round`:
+        // max(1, round - o + 1) ..= round
+        let window = |dur: usize| (round.saturating_sub(dur - 1).max(1))..=round;
+        if p.crash_rate > 0.0 {
+            for s in window(p.crash_rounds) {
+                self.onsets(s, k, p.crash_rate, CLASS_CRASH, &mut ov.crashed);
+            }
+            ov.crashed.sort_unstable();
+        }
+        if p.stall_rate > 0.0 {
+            let mut hit = Vec::new();
+            for s in window(p.stall_rounds) {
+                self.onsets(s, k, p.stall_rate, CLASS_STALL, &mut hit);
+            }
+            hit.sort_unstable();
+            ov.stalled = hit.into_iter().map(|j| (j, p.stall_factor)).collect();
+        }
+        if p.outage_rate > 0.0 {
+            let mut hit = Vec::new();
+            for s in window(p.outage_rounds) {
+                self.onsets(s, k, p.outage_rate, CLASS_OUTAGE, &mut hit);
+            }
+            hit.sort_unstable();
+            ov.outage = hit.into_iter().map(|j| (j, p.outage_factor)).collect();
+        }
+        if p.blackout_rate > 0.0 {
+            for s in window(p.blackout_rounds) {
+                if self.class_stream(s, CLASS_BLACKOUT).f64() < p.blackout_rate {
+                    ov.blackout = Some(p.blackout_factor);
+                    break;
+                }
+            }
+        }
+        ov
+    }
+}
+
+/// The `chaos` fault-matrix levels: a fixed named ladder of plans so
+/// the CLI, CI, and the EXPERIMENTS degradation study all speak the
+/// same severities.
+pub fn matrix_levels(seed: u64) -> Vec<(&'static str, FaultPlan)> {
+    let light = FaultPlan {
+        seed,
+        crash_rate: 0.05,
+        stall_rate: 0.10,
+        stall_factor: 0.5,
+        outage_rate: 0.05,
+        outage_factor: 1e-3,
+        blackout_rate: 0.02,
+        blackout_factor: 1e-2,
+        ..FaultPlan::default()
+    };
+    let heavy = FaultPlan {
+        seed,
+        crash_rate: 0.15,
+        crash_rounds: 2,
+        stall_rate: 0.25,
+        stall_factor: 0.25,
+        stall_rounds: 2,
+        outage_rate: 0.15,
+        outage_factor: 0.0,
+        outage_rounds: 2,
+        blackout_rate: 0.05,
+        blackout_factor: 1e-4,
+        ..FaultPlan::default()
+    };
+    vec![("none", FaultPlan::default()), ("light", light), ("heavy", heavy)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_and_none_specs() {
+        for spec in ["", "  ", "none"] {
+            let p = FaultPlan::parse(spec).unwrap();
+            assert!(p.is_empty(), "'{spec}' must parse to the empty plan");
+            assert_eq!(p.label(), "none");
+        }
+        assert!(FaultPlan::default().is_empty());
+    }
+
+    #[test]
+    fn specs_round_trip_through_label() {
+        for spec in [
+            "crash=0.1:2,seed=7",
+            "stall=0.05:0.5:1,seed=9",
+            "outage=0.1:0:2,seed=3",
+            "blackout=0.02:0.0001:1,seed=1",
+            "crash=0.1:2,stall=0.25:0.25:2,outage=0.15:0:2,blackout=0.05:0.0001:1,seed=42",
+        ] {
+            let p = FaultPlan::parse(spec).unwrap();
+            let again = FaultPlan::parse(&p.label()).unwrap();
+            assert_eq!(p, again, "label round-trip for '{spec}' (label: {})", p.label());
+        }
+        for (name, plan) in matrix_levels(11) {
+            let again = FaultPlan::parse(&plan.label()).unwrap();
+            assert_eq!(plan, again, "matrix level {name}");
+        }
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_descriptively() {
+        for bad in [
+            "crash",              // no args
+            "crash=x",            // non-numeric rate
+            "crash=1.5",          // rate out of range
+            "crash=0.1:0",        // zero duration
+            "crash=0.1:2:3",      // too many args
+            "stall=0.1:0.0",      // dead-device factor
+            "stall=0.1:1.5",      // factor out of range
+            "outage=0.1:2.0",     // factor out of range
+            "seed=abc",
+            "quake=0.5",          // unknown key
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "'{bad}' should fail");
+        }
+    }
+
+    #[test]
+    fn overlay_is_a_pure_function_of_plan_round_k() {
+        let plan = FaultPlan::parse("crash=0.3:2,stall=0.3:0.5:1,outage=0.3:0:1,blackout=0.3:0.0001:1,seed=5")
+            .unwrap();
+        let inj = FaultInjector::new(plan.clone());
+        let inj2 = FaultInjector::new(plan);
+        for round in 0..20 {
+            assert_eq!(inj.overlay(round, 6), inj2.overlay(round, 6), "round {round}");
+        }
+        // different seeds give different schedules somewhere
+        let other = FaultInjector::new(
+            FaultPlan::parse("crash=0.3:2,stall=0.3:0.5:1,outage=0.3:0:1,blackout=0.3:0.0001:1,seed=6")
+                .unwrap(),
+        );
+        assert!(
+            (1..20).any(|r| inj.overlay(r, 6) != other.overlay(r, 6)),
+            "seed must steer the schedule"
+        );
+    }
+
+    #[test]
+    fn round_zero_is_always_fault_free() {
+        let inj = FaultInjector::new(FaultPlan::parse("crash=1.0,seed=1").unwrap());
+        assert!(inj.overlay(0, 8).is_empty());
+        // rate 1.0 crashes everyone from round 1 on
+        assert_eq!(inj.overlay(1, 8).crashed, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn durations_keep_faults_active_across_rounds() {
+        // rate 1.0, duration 3: every client is crashed at rounds 1..,
+        // and the round-1 onset alone covers rounds 1..=3
+        let inj = FaultInjector::new(FaultPlan::parse("crash=1.0:3,seed=2").unwrap());
+        for r in 1..=3 {
+            assert_eq!(inj.overlay(r, 2).crashed, vec![0, 1], "round {r}");
+        }
+        // duration windows never reach onset round 0
+        let rare = FaultInjector::new(FaultPlan::parse("crash=0.4:5,seed=13").unwrap());
+        let o1 = rare.overlay(1, 4);
+        // round 1's actives are exactly round 1's onsets (window is 1..=1)
+        let mut expect = Vec::new();
+        rare.onsets(1, 4, 0.4, CLASS_CRASH, &mut expect);
+        expect.sort_unstable();
+        assert_eq!(o1.crashed, expect);
+    }
+
+    #[test]
+    fn classes_draw_from_independent_streams() {
+        // toggling the stall class must not shift the crash schedule
+        let both = FaultInjector::new(FaultPlan::parse("crash=0.3,stall=0.3,seed=4").unwrap());
+        let crash_only = FaultInjector::new(FaultPlan::parse("crash=0.3,seed=4").unwrap());
+        for r in 1..30 {
+            assert_eq!(
+                both.overlay(r, 10).crashed,
+                crash_only.overlay(r, 10).crashed,
+                "round {r}"
+            );
+        }
+    }
+
+    #[test]
+    fn apply_to_scenario_masks_gains_and_compute() {
+        let mut scn = crate::delay::testutil::toy_scenario();
+        let g0_main = scn.main_link.client_gain.clone();
+        let g0_fed = scn.fed_link.client_gain.clone();
+        let f0 = scn.topo.clients[0].f_cycles;
+        let ov = RoundOverlay {
+            crashed: vec![],
+            stalled: vec![(0, 0.5)],
+            outage: vec![(1, 0.0)],
+            blackout: Some(1e-2),
+        };
+        apply_to_scenario(&mut scn, &ov);
+        assert_eq!(scn.topo.clients[0].f_cycles.to_bits(), (f0 * 0.5).to_bits());
+        assert_eq!(scn.main_link.client_gain[0].to_bits(), g0_main[0].to_bits());
+        assert_eq!(scn.main_link.client_gain[1], 0.0);
+        for (g, g0) in scn.fed_link.client_gain.iter().zip(&g0_fed) {
+            assert_eq!(g.to_bits(), (g0 * 1e-2).to_bits());
+        }
+        // out-of-range indices are ignored, not a panic (fault indices
+        // come from the per-round view size, but stay defensive)
+        let wild = RoundOverlay {
+            stalled: vec![(99, 0.5)],
+            outage: vec![(99, 0.0)],
+            ..RoundOverlay::default()
+        };
+        apply_to_scenario(&mut scn, &wild);
+    }
+}

@@ -30,6 +30,11 @@
 //!   `staleness:τ`), straggler deadlines, and dropout/rejoin, at
 //!   O(cohort) per-round cost (the `metro_population` preset and the
 //!   `population` CLI subcommand run on it);
+//! * [`faults`] — [`FaultPlan`] / [`FaultInjector`]: seeded,
+//!   deterministic fault injection (client crashes, compute stalls,
+//!   subchannel outages, federated-server blackouts) with a stateless
+//!   per-round overlay; the empty plan is bit-transparent, and the
+//!   `chaos` CLI subcommand runs the preset × fault-matrix table;
 //! * the policies themselves live in [`crate::opt::policy`].
 //!
 //! Every figure bench (Figs. 5–8), the
@@ -42,11 +47,13 @@
 pub mod builder;
 pub mod dynamic;
 pub mod engine;
+pub mod faults;
 pub mod population;
 pub mod selector;
 pub mod sweep;
 
 pub use self::builder::{ScenarioBuilder, PRESETS};
+pub use self::faults::{FaultInjector, FaultPlan, RoundOverlay};
 pub use self::dynamic::{
     DynamicOutcome, DynamicPolicy, ReOptStrategy, RoundRecord, RoundSimulator,
 };

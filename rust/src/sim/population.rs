@@ -81,6 +81,7 @@ use crate::opt::{bcd, power, Objective};
 use crate::sim::builder::ScenarioBuilder;
 use crate::sim::dynamic::{DynamicOutcome, ReOptStrategy, RoundCost};
 use crate::sim::engine::{DriftEnv, RoundCore, StepCtx};
+use crate::sim::faults::{apply_to_scenario, FaultInjector, FaultPlan};
 use crate::sim::selector::{parse_selector, SelectionCtx, Selector, WeightIndex};
 use crate::util::rng::Rng;
 
@@ -643,12 +644,35 @@ impl<'a> PopulationSimulator<'a> {
         policy: &dyn AllocationPolicy,
         strategy: ReOptStrategy,
     ) -> Result<DynamicOutcome> {
+        self.run_faulted(policy, strategy, &FaultPlan::default())
+    }
+
+    /// [`PopulationSimulator::run`] under a fault plan (PR-10). The
+    /// overlay indexes the round's *view* (cohort positions, not
+    /// population ids), and since both engine modes hand back per-round
+    /// clones from [`Population::round_view`], it is applied to the
+    /// clone directly — no undo pass; the only cross-round residue is
+    /// an `env_dirty` mark so the drift memo never serves a faulted
+    /// solve to a clean round. An empty plan executes exactly `run`'s
+    /// statements, keeping fault-free runs bit-identical.
+    pub fn run_faulted(
+        &self,
+        policy: &dyn AllocationPolicy,
+        strategy: ReOptStrategy,
+        plan: &FaultPlan,
+    ) -> Result<DynamicOutcome> {
         let pop = self.pop;
         let dynamics = pop.template.dynamics.clone();
         let dense = pop.cohort >= pop.size;
         let objective = Objective::from_config(&pop.template.objective)?;
         let table: Arc<WorkloadTable> = self.cache.table_for(&pop.template.profile, &self.ranks);
         let frozen_channel = pop.innovation_db == 0.0;
+        let injector = if plan.is_empty() {
+            None
+        } else {
+            plan.validate()?;
+            Some(FaultInjector::new(plan.clone()))
+        };
 
         let mut state = PopulationState::new(pop.size);
         let mut denv: Option<DriftEnv> = if dense {
@@ -671,6 +695,7 @@ impl<'a> PopulationSimulator<'a> {
             table: &table,
             objective: &objective,
             strategy,
+            ranks: &self.ranks,
             label: "population",
         };
 
@@ -679,6 +704,9 @@ impl<'a> PopulationSimulator<'a> {
             let mut resolved = core.round == 0;
             let mut cost_round: Option<RoundCost> = None;
             let mut dropped = 0usize;
+            let mut faults = 0usize;
+            let mut repair_tier = 0u8;
+            let mut shed: Vec<usize> = Vec::new();
             if core.round > 0 {
                 // --- evolve the environment and lower the new cohort
                 if let Some(env) = denv.as_mut() {
@@ -703,13 +731,56 @@ impl<'a> PopulationSimulator<'a> {
                     // once the cohort has changed, the round-0
                     // allocation indexes clients that are no longer in
                     // the view — rebasing retires it as a re-adoption
-                    // candidate for good
+                    // candidate for good (on the clean view: rebasing is
+                    // membership bookkeeping, not a reaction to faults)
                     let rebased = comm_alloc(&cur_view, core.alloc.l_c, core.alloc.rank)?;
                     core.rebase_incumbent(rebased);
+                }
+                if let Some(inj) = &injector {
+                    let ov = inj.overlay(core.round, cur_view.k());
+                    if !ov.is_empty() {
+                        faults = ov.count();
+                        core.faults_injected += faults;
+                        apply_to_scenario(&mut cur_view, &ov);
+                        if !ov.crashed.is_empty() {
+                            let prev = online.clone();
+                            for &k in &ov.crashed {
+                                if let Some(a) = online.get_mut(k) {
+                                    *a = false;
+                                }
+                            }
+                            if !online.iter().any(|&a| a) {
+                                // never simulate an empty federation
+                                online = prev;
+                            }
+                        }
+                        core.env_dirty = true;
+                    }
                 }
                 let re = core.maybe_reopt(&ctx, policy, &cur_view, &online)?;
                 resolved = re.resolved;
                 cost_round = re.cost;
+                repair_tier = re.repair_tier;
+                shed = re.shed;
+            }
+
+            if !shed.is_empty() {
+                // tier-3 repair: shed clients sit the round out (their
+                // allocation rows are empty — scoring them active, or
+                // ranking them for the deadline, would be infinite)
+                for &k in &shed {
+                    if let Some(a) = online.get_mut(k) {
+                        *a = false;
+                    }
+                }
+                if !online.iter().any(|&a| a) {
+                    // never realize an empty federation: the kept
+                    // clients participate even if the availability chain
+                    // had them offline this round
+                    for (k, a) in online.iter_mut().enumerate() {
+                        *a = !shed.contains(&k);
+                    }
+                }
             }
 
             // --- straggler deadline: cut the slowest ⌊x·online⌋ cohort
@@ -730,7 +801,15 @@ impl<'a> PopulationSimulator<'a> {
                 resolved,
                 cur_cohort.len(),
                 dropped,
+                faults,
+                repair_tier,
             );
+            if faults > 0 {
+                // the view clone dies with the round, but the drift memo
+                // must not serve this round's faulted solve to the next,
+                // clean one
+                core.env_dirty = true;
+            }
         }
 
         let unique_participants = if dense { pop.size } else { state.materialized() };
@@ -994,6 +1073,62 @@ mod tests {
         assert!(a.unique_participants > 8, "{}", a.unique_participants);
         assert!(a.unique_participants <= 300);
         assert!(a.fresh_solves > 0, "drifting sparse views must re-solve");
+    }
+
+    #[test]
+    fn empty_fault_plan_is_bit_transparent_for_populations() {
+        let mut cfg = pop_config(300, 8, "staleness:3");
+        cfg.dynamics.compute_jitter = 0.05;
+        cfg.dynamics.dropout = 0.1;
+        cfg.dynamics.rejoin = 0.4;
+        let pop = Population::new(&cfg).unwrap();
+        let conv = small_conv();
+        let cache = WorkloadCache::new();
+        let policy = Proposed::with_ranks(&RANKS);
+        let sim = PopulationSimulator::new(&pop, &conv, &cache, &RANKS);
+        let plain = sim.run(&policy, ReOptStrategy::Periodic(2)).unwrap();
+        let faulted = sim
+            .run_faulted(&policy, ReOptStrategy::Periodic(2), &FaultPlan::default())
+            .unwrap();
+        assert_eq!(faulted.faults_injected, 0);
+        assert_eq!(faulted.repair_max, 0);
+        assert_eq!(plain.realized_delay.to_bits(), faulted.realized_delay.to_bits());
+        assert_eq!(plain.realized_energy.to_bits(), faulted.realized_energy.to_bits());
+        for (x, y) in plain.rounds.iter().zip(&faulted.rounds) {
+            assert_eq!(x.delay.to_bits(), y.delay.to_bits());
+            assert_eq!(y.faults, 0);
+        }
+    }
+
+    #[test]
+    fn population_fault_runs_replay_identically_and_stay_finite() {
+        let mut cfg = pop_config(120, 8, "uniform");
+        cfg.dynamics.dropout = 0.05;
+        cfg.dynamics.rejoin = 0.5;
+        let pop = Population::new(&cfg).unwrap();
+        let conv = small_conv();
+        let cache = WorkloadCache::new();
+        let policy = Proposed::with_ranks(&RANKS);
+        let sim = PopulationSimulator::new(&pop, &conv, &cache, &RANKS);
+        let plan = FaultPlan::parse("crash=0.3,stall=0.3:0.5,outage=0.3:0,seed=7").unwrap();
+        let a = sim
+            .run_faulted(&policy, ReOptStrategy::EveryRound, &plan)
+            .unwrap();
+        assert!(a.faults_injected > 0, "30% rates on an 8-cohort never fired");
+        assert!(a.realized_delay.is_finite(), "degradation must stay finite");
+        assert!(a.rounds.iter().all(|r| r.active >= 1), "empty federation simulated");
+        let b = sim
+            .run_faulted(&policy, ReOptStrategy::EveryRound, &plan)
+            .unwrap();
+        assert_eq!(a.realized_delay.to_bits(), b.realized_delay.to_bits());
+        assert_eq!(a.faults_injected, b.faults_injected);
+        assert_eq!(a.repair_max, b.repair_max);
+        for (x, y) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(x.faults, y.faults);
+            assert_eq!(x.repair_tier, y.repair_tier);
+            assert_eq!(x.active, y.active);
+            assert_eq!(x.delay.to_bits(), y.delay.to_bits());
+        }
     }
 
     #[test]

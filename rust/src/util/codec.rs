@@ -17,6 +17,62 @@
 
 use anyhow::{bail, Result};
 
+/// CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) over `bytes` —
+/// the integrity footer every checkpoint artifact carries since PR-10.
+/// Table-driven, built once at first use.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+/// Seal a serialized artifact: append the little-endian [`crc32`] of
+/// everything written so far as a 4-byte footer.
+pub fn append_crc32(bytes: &mut Vec<u8>) {
+    let c = crc32(bytes);
+    bytes.extend_from_slice(&c.to_le_bytes());
+}
+
+/// Verify a [`append_crc32`] footer and return the payload with the
+/// footer stripped. `what` names the artifact in errors. Callers should
+/// check magic/version *first* so a wrong-file error reads "not a …",
+/// not "integrity check failed".
+pub fn check_crc32<'a>(bytes: &'a [u8], what: &str) -> Result<&'a [u8]> {
+    if bytes.len() < 4 {
+        bail!(
+            "truncated {what}: {} bytes is too short to hold the CRC32 footer",
+            bytes.len()
+        );
+    }
+    let (payload, footer) = bytes.split_at(bytes.len() - 4);
+    let mut word = [0u8; 4];
+    word.copy_from_slice(footer);
+    let stored = u32::from_le_bytes(word);
+    let computed = crc32(payload);
+    if stored != computed {
+        bail!(
+            "{what} failed its CRC32 integrity check \
+             (stored {stored:#010x}, computed {computed:#010x}): \
+             the file is corrupt or truncated"
+        );
+    }
+    Ok(payload)
+}
+
 /// Append-only little-endian writer over an owned buffer.
 #[derive(Default)]
 pub struct BinWriter {
@@ -362,6 +418,35 @@ mod tests {
         let bytes = w.into_bytes();
         let mut r = BinReader::new(&bytes);
         assert!(r.bool("flag").is_err());
+    }
+
+    #[test]
+    fn crc32_matches_the_ieee_reference_vector() {
+        // the classic check value for CRC-32/IEEE
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn crc_footer_round_trips_and_catches_every_single_bit_flip() {
+        let mut w = BinWriter::with_header(b"TEST", 1);
+        w.u64(0xA5A5_5A5A_0F0F_F0F0);
+        w.str("payload");
+        let mut bytes = w.into_bytes();
+        append_crc32(&mut bytes);
+
+        let payload = check_crc32(&bytes, "test blob").unwrap();
+        assert_eq!(payload.len(), bytes.len() - 4);
+
+        for bit in 0..bytes.len() * 8 {
+            let mut bad = bytes.clone();
+            bad[bit / 8] ^= 1 << (bit % 8);
+            let err = format!("{:#}", check_crc32(&bad, "test blob").unwrap_err());
+            assert!(err.contains("CRC32 integrity check"), "bit {bit}: {err}");
+        }
+
+        let err = format!("{:#}", check_crc32(&bytes[..3], "test blob").unwrap_err());
+        assert!(err.contains("too short"), "{err}");
     }
 
     #[test]

@@ -164,6 +164,8 @@ fn coordinator_trains_through_pjrt() {
         optimizer: sfllm::coordinator::OptKind::Adam,
         byte_corpus: true, // micro seq=8 cannot fit E2E samples
         save_adapters: None,
+        retry_budget: 2,
+        retry_backoff_s: 0.05,
         seed: 3,
     };
     let report = train(&opts, || {

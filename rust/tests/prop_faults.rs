@@ -1,0 +1,530 @@
+//! Properties of the fault-injection and graceful-degradation stack
+//! (PR-10), the headline invariants of the fault model:
+//!
+//! 1. **Bit-transparency** — an empty [`FaultPlan`] moves no bits: on
+//!    every preset, `run_faulted(empty)` is byte-identical to `run`,
+//!    and every per-round fault counter is zero.
+//! 2. **Schedule determinism** — identical fault seeds replay
+//!    identical fault schedules (the injector is a pure function of
+//!    `(plan, round, k)`), across engines, processes, and services.
+//! 3. **Crash-resume identity** — checkpointing in the middle of a
+//!    *faulted* run and resuming into a fresh process reproduces the
+//!    uninterrupted faulted run byte for byte: nothing about the fault
+//!    schedule needs serializing.
+//! 4. **Graceful degradation** — a total-outage round is shed by the
+//!    feasibility-repair chain, not a panic or an abort; malformed
+//!    event lines are a counted skip (lenient) or a line-numbered
+//!    error (strict), never a crash.
+
+use sfllm::delay::{ConvergenceModel, WorkloadCache};
+use sfllm::opt::policy::Proposed;
+use sfllm::service::{
+    parse_events, parse_events_lenient, AllocatorService, Event, RunMode, RunSpec,
+};
+use sfllm::sim::faults::matrix_levels;
+use sfllm::sim::{
+    DynamicOutcome, FaultPlan, Population, PopulationSimulator, ReOptStrategy, RoundRecord,
+    RoundSimulator, ScenarioBuilder, PRESETS,
+};
+use sfllm::util::rng::Rng;
+
+const RANKS: [usize; 2] = [1, 4];
+const CONV: [f64; 3] = [4.0, 1.0, 0.85];
+const TICK_CAP: usize = 512;
+
+/// A fault spec hot enough that a short run is effectively certain to
+/// fire several faults, while leaving most clients healthy per round.
+const HOT_FAULTS: &str =
+    "crash=0.25:2,stall=0.25:0.5:1,outage=0.2:0.001:1,blackout=0.15:0.01:1,seed=77";
+
+fn short_conv() -> ConvergenceModel {
+    ConvergenceModel::fitted(CONV[0], CONV[1], CONV[2])
+}
+
+/// A preset's spec shrunk to test size (same shrink as `prop_service`).
+fn preset_spec(preset: &str, strategy: &str) -> RunSpec {
+    let clients = ScenarioBuilder::preset(preset)
+        .unwrap()
+        .into_config()
+        .system
+        .clients
+        .min(8);
+    let mut spec = RunSpec::preset(preset);
+    spec.model = Some("tiny".to_string());
+    spec.seq = Some(64);
+    spec.ranks = Some(RANKS.to_vec());
+    spec.clients = Some(clients);
+    spec.conv = Some(CONV);
+    spec.strategy = strategy.to_string();
+    spec
+}
+
+/// A sparse population spec on the metro preset, downscaled.
+fn metro_spec(strategy: &str) -> RunSpec {
+    let mut spec = RunSpec::preset("metro_population");
+    spec.mode = RunMode::Population;
+    spec.model = Some("tiny".to_string());
+    spec.seq = Some(64);
+    spec.ranks = Some(RANKS.to_vec());
+    spec.population = Some(300);
+    spec.cohort = Some(8);
+    spec.conv = Some(CONV);
+    spec.strategy = strategy.to_string();
+    spec
+}
+
+/// Run a spec's scenario through [`RoundSimulator::run_faulted`] on a
+/// fresh cache.
+fn sim_dynamic(spec: &RunSpec, strategy: ReOptStrategy, plan: &FaultPlan) -> DynamicOutcome {
+    let conv = short_conv();
+    let scn = ScenarioBuilder::from_config(spec.build_config().unwrap())
+        .build()
+        .unwrap();
+    let cache = WorkloadCache::new();
+    let policy = Proposed::with_ranks(&RANKS);
+    RoundSimulator::new(&scn, &conv, &cache, &RANKS)
+        .run_faulted(&policy, strategy, plan)
+        .unwrap()
+}
+
+/// Same for [`PopulationSimulator::run_faulted`].
+fn sim_population(spec: &RunSpec, strategy: ReOptStrategy, plan: &FaultPlan) -> DynamicOutcome {
+    let conv = short_conv();
+    let cfg = spec.build_config().unwrap();
+    let pop = Population::new(&cfg).unwrap();
+    let cache = WorkloadCache::new();
+    let policy = Proposed::with_ranks(&RANKS);
+    PopulationSimulator::new(&pop, &conv, &cache, &RANKS)
+        .run_faulted(&policy, strategy, plan)
+        .unwrap()
+}
+
+fn assert_rounds_eq(a: &[RoundRecord], b: &[RoundRecord], tag: &str) {
+    assert_eq!(a.len(), b.len(), "round count on {tag}");
+    for (x, y) in a.iter().zip(b) {
+        let r = x.round;
+        assert_eq!(x.round, y.round, "round index on {tag}");
+        assert_eq!(x.weight.to_bits(), y.weight.to_bits(), "weight r{r} on {tag}");
+        assert_eq!(x.delay.to_bits(), y.delay.to_bits(), "delay r{r} on {tag}");
+        assert_eq!(x.energy.to_bits(), y.energy.to_bits(), "energy r{r} on {tag}");
+        assert_eq!(
+            (x.l_c, x.rank, x.active, x.resolved, x.cohort, x.dropped),
+            (y.l_c, y.rank, y.active, y.resolved, y.cohort, y.dropped),
+            "round shape r{r} on {tag}"
+        );
+        assert_eq!(
+            (x.faults, x.repair_tier),
+            (y.faults, y.repair_tier),
+            "fault columns r{r} on {tag}"
+        );
+    }
+}
+
+fn assert_outcomes_eq(a: &DynamicOutcome, b: &DynamicOutcome, tag: &str) {
+    assert_rounds_eq(&a.rounds, &b.rounds, tag);
+    assert_eq!(
+        a.realized_delay.to_bits(),
+        b.realized_delay.to_bits(),
+        "realized delay on {tag}"
+    );
+    assert_eq!(
+        a.realized_energy.to_bits(),
+        b.realized_energy.to_bits(),
+        "realized energy on {tag}"
+    );
+    assert_eq!(
+        a.static_prediction.to_bits(),
+        b.static_prediction.to_bits(),
+        "static prediction on {tag}"
+    );
+    assert_eq!(
+        (a.resolves, a.fresh_solves, a.unique_participants, a.deadline_drops),
+        (b.resolves, b.fresh_solves, b.unique_participants, b.deadline_drops),
+        "counters on {tag}"
+    );
+    assert_eq!(
+        (a.faults_injected, a.repair_max),
+        (b.faults_injected, b.repair_max),
+        "fault totals on {tag}"
+    );
+    assert_eq!(
+        (a.final_alloc.l_c, a.final_alloc.rank),
+        (b.final_alloc.l_c, b.final_alloc.rank),
+        "final allocation on {tag}"
+    );
+}
+
+/// Tick a freshly loaded service to convergence; returns the tick count.
+fn tick_to_convergence(svc: &mut AllocatorService) -> usize {
+    let mut ticks = 0;
+    while !svc.is_finished() {
+        assert!(ticks < TICK_CAP, "run did not converge within {TICK_CAP} ticks");
+        svc.process(&Event::RoundTick).unwrap();
+        ticks += 1;
+    }
+    ticks
+}
+
+/// Drive one uninterrupted service over `events`.
+fn drive(events: &[Event]) -> (Vec<RoundRecord>, sfllm::service::RunSummary) {
+    let mut svc = AllocatorService::new();
+    svc.run_events(events).unwrap();
+    (svc.rounds().to_vec(), svc.summary().unwrap())
+}
+
+/// Drive `events`, but checkpoint after `split` events, restore into a
+/// *fresh* service, and replay the rest there — the crash/recover path.
+fn drive_with_resume(
+    events: &[Event],
+    split: usize,
+) -> (Vec<RoundRecord>, sfllm::service::RunSummary) {
+    let mut a = AllocatorService::new();
+    a.run_events(&events[..split]).unwrap();
+    let bytes = a.checkpoint_bytes().unwrap();
+    let mut rounds = a.rounds().to_vec();
+    drop(a);
+
+    let mut b = AllocatorService::new();
+    b.restore(&bytes).unwrap();
+    b.run_events(&events[split..]).unwrap();
+    rounds.extend(b.rounds().iter().cloned());
+    (rounds, b.summary().unwrap())
+}
+
+#[test]
+fn an_empty_plan_is_bit_transparent_on_every_preset() {
+    // three spellings of "no faults" — the default plan `run`
+    // delegates to, a parsed `none` spec, and the chaos matrix's
+    // `none` level — all byte-identical to the plain run
+    let parsed = FaultPlan::parse("none").unwrap();
+    let (level, matrix_none) = matrix_levels(0xFA17).into_iter().next().unwrap();
+    assert_eq!(level, "none");
+    for preset in PRESETS {
+        let spec = preset_spec(preset, "periodic:2");
+        let clean = sim_dynamic(&spec, ReOptStrategy::Periodic(2), &FaultPlan::default());
+        for r in &clean.rounds {
+            assert_eq!((r.faults, r.repair_tier), (0, 0), "{preset} r{}", r.round);
+        }
+        assert_eq!((clean.faults_injected, clean.repair_max), (0, 0), "{preset}");
+        let a = sim_dynamic(&spec, ReOptStrategy::Periodic(2), &parsed);
+        assert_outcomes_eq(&clean, &a, &format!("{preset}/parsed none"));
+        let b = sim_dynamic(&spec, ReOptStrategy::Periodic(2), &matrix_none);
+        assert_outcomes_eq(&clean, &b, &format!("{preset}/matrix none"));
+    }
+}
+
+#[test]
+fn an_empty_plan_is_bit_transparent_for_population_runs() {
+    let spec = metro_spec("periodic:3");
+    let clean = sim_population(&spec, ReOptStrategy::Periodic(3), &FaultPlan::default());
+    for r in &clean.rounds {
+        assert_eq!((r.faults, r.repair_tier), (0, 0), "metro r{}", r.round);
+    }
+    let again = sim_population(
+        &spec,
+        ReOptStrategy::Periodic(3),
+        &FaultPlan::parse("none").unwrap(),
+    );
+    assert_outcomes_eq(&clean, &again, "metro_population/parsed none");
+}
+
+#[test]
+fn identical_seeds_replay_identical_fault_schedules() {
+    // fresh simulator + fresh cache on each run: the schedule must come
+    // from the plan's seed alone, never from solver or cache state
+    let plan = FaultPlan::parse(HOT_FAULTS).unwrap();
+    let spec = preset_spec("mobile_edge", "periodic:2");
+    let a = sim_dynamic(&spec, ReOptStrategy::Periodic(2), &plan);
+    let b = sim_dynamic(&spec, ReOptStrategy::Periodic(2), &plan);
+    assert!(a.faults_injected > 0, "hot plan must actually fire");
+    assert_outcomes_eq(&a, &b, "mobile_edge/replay");
+
+    let spec = metro_spec("periodic:3");
+    let a = sim_population(&spec, ReOptStrategy::Periodic(3), &plan);
+    let b = sim_population(&spec, ReOptStrategy::Periodic(3), &plan);
+    assert!(a.faults_injected > 0, "hot plan must fire on the population run");
+    assert_outcomes_eq(&a, &b, "metro_population/replay");
+}
+
+#[test]
+fn service_faulted_replay_matches_the_simulator() {
+    // the `faults` key on a scenario_loaded spec routes the same plan
+    // through the service: one fault model across both surfaces
+    let mut spec = preset_spec("mobile_edge", "periodic:2");
+    spec.faults = Some(HOT_FAULTS.to_string());
+    let out = sim_dynamic(&spec, ReOptStrategy::Periodic(2), &spec.fault_plan().unwrap());
+
+    let mut svc = AllocatorService::new();
+    svc.process(&Event::ScenarioLoaded(spec)).unwrap();
+    tick_to_convergence(&mut svc);
+    let summary = svc.summary().unwrap();
+    assert_rounds_eq(svc.rounds(), &out.rounds, "service vs sim");
+    assert_eq!(
+        summary.realized_delay.to_bits(),
+        out.realized_delay.to_bits(),
+        "realized delay"
+    );
+    assert_eq!(summary.faults_injected, out.faults_injected, "fault totals");
+    assert_eq!(summary.repair_max, out.repair_max, "repair tier");
+    assert!(summary.faults_injected > 0, "the faulted service run must fault");
+    assert_eq!(summary.lines_skipped, 0, "strict in-process replay skips nothing");
+}
+
+#[test]
+fn faulted_resume_is_bit_identical() {
+    // headline invariant 3: crash + restore from the checkpoint in the
+    // middle of a *faulted* run == the uninterrupted faulted run. The
+    // injector being a pure function of (plan, round, k) is exactly
+    // what makes this hold with zero schedule state in the checkpoint.
+    let mut spec = preset_spec("mobile_edge", "periodic:2");
+    spec.faults = Some(HOT_FAULTS.to_string());
+    let mut probe = AllocatorService::new();
+    probe.process(&Event::ScenarioLoaded(spec.clone())).unwrap();
+    let ticks = tick_to_convergence(&mut probe);
+    assert!(ticks >= 2, "need a multi-round run to split");
+    drop(probe);
+
+    let mut events = vec![Event::ScenarioLoaded(spec)];
+    events.extend((0..ticks).map(|_| Event::RoundTick));
+    let (rounds, summary) = drive(&events);
+    assert!(summary.faults_injected > 0, "the run under test must fault");
+    // split right after load, after the first tick, mid-run (either
+    // side of typical fault onsets), and after the last tick
+    for split in [1, 2, 1 + ticks / 3, 1 + ticks / 2, 1 + (2 * ticks) / 3, ticks] {
+        let tag = format!("faulted dynamic/split {split}");
+        let (r2, s2) = drive_with_resume(&events, split);
+        assert_rounds_eq(&rounds, &r2, &tag);
+        assert_eq!(s2.faults_injected, summary.faults_injected, "{tag}");
+        assert_eq!(s2.repair_max, summary.repair_max, "{tag}");
+        assert_eq!(
+            s2.realized_delay.to_bits(),
+            summary.realized_delay.to_bits(),
+            "{tag}"
+        );
+    }
+}
+
+#[test]
+fn faulted_population_resume_is_bit_identical() {
+    let mut spec = metro_spec("periodic:3");
+    spec.faults = Some(HOT_FAULTS.to_string());
+    let mut probe = AllocatorService::new();
+    probe.process(&Event::ScenarioLoaded(spec.clone())).unwrap();
+    let ticks = tick_to_convergence(&mut probe);
+    assert!(ticks >= 2);
+    drop(probe);
+
+    let mut events = vec![Event::ScenarioLoaded(spec)];
+    events.extend((0..ticks).map(|_| Event::RoundTick));
+    let (rounds, summary) = drive(&events);
+    assert!(summary.faults_injected > 0);
+    for split in [1, 2, 1 + ticks / 2, ticks] {
+        let tag = format!("faulted population/split {split}");
+        let (r2, s2) = drive_with_resume(&events, split);
+        assert_rounds_eq(&rounds, &r2, &tag);
+        assert_eq!(
+            (s2.faults_injected, s2.repair_max, s2.deadline_drops),
+            (summary.faults_injected, summary.repair_max, summary.deadline_drops),
+            "{tag}"
+        );
+        assert_eq!(
+            s2.realized_delay.to_bits(),
+            summary.realized_delay.to_bits(),
+            "{tag}"
+        );
+    }
+}
+
+#[test]
+fn total_outage_is_shed_not_fatal() {
+    // outage factor 0 zeroes a client's every subchannel gain: any
+    // allocation keeping it is infeasible, so the repair chain must
+    // walk to tier 3 (shed) — and the run completes with finite totals
+    // instead of aborting. every_round keeps the incumbent from being
+    // scored against a dead channel on non-resolve rounds.
+    let plan = FaultPlan::parse("outage=0.35:0:1,seed=9").unwrap();
+    let spec = preset_spec("mobile_edge", "every_round");
+    let out = sim_dynamic(&spec, ReOptStrategy::EveryRound, &plan);
+    assert!(out.faults_injected > 0, "outages must fire");
+    assert_eq!(out.repair_max, 3, "a total outage forces a tier-3 shed");
+    assert!(out.realized_delay.is_finite(), "shed runs must stay finite");
+    assert!(out.realized_energy.is_finite());
+    let k = out.rounds[0].active;
+    for r in &out.rounds {
+        assert!(r.repair_tier <= 3, "r{}: tier {}", r.round, r.repair_tier);
+        if r.repair_tier == 3 {
+            assert!(
+                r.active < k,
+                "r{}: tier 3 must shed someone (active {} of {k})",
+                r.round,
+                r.active
+            );
+            assert!(r.delay.is_finite(), "r{}: shed round must be finite", r.round);
+        }
+    }
+}
+
+/// A healthy event stream whose lines the adversarial tests mutate.
+fn valid_stream_lines() -> Vec<String> {
+    let spec = preset_spec("mobile_edge", "periodic:2");
+    let events = vec![
+        Event::ScenarioLoaded(spec),
+        Event::RoundTick,
+        Event::ClientDropped { id: 1 },
+        Event::ChannelDrift,
+        Event::ReOptRequested,
+        Event::RoundTick,
+        Event::ClientRejoined { id: 1 },
+        Event::CohortSelected { ids: vec![1, 3, 5] },
+        Event::CheckpointRequested { path: Some("ck.sfck".to_string()) },
+        Event::Shutdown,
+    ];
+    events.iter().map(|e| e.to_json_line()).collect()
+}
+
+/// The reference semantics both parsers must agree with: each
+/// non-blank, non-comment line parses alone or is a skip.
+fn reference_parse(text: &str) -> (Vec<Event>, Vec<usize>) {
+    let mut events = Vec::new();
+    let mut skipped = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        match Event::from_json_line(line) {
+            Ok(e) => events.push(e),
+            Err(_) => skipped.push(i + 1),
+        }
+    }
+    (events, skipped)
+}
+
+/// One adversarial text: strict and lenient must agree with the
+/// line-by-line reference, never panic, and strict errors must carry a
+/// line number.
+fn check_adversarial(text: &str, tag: &str) {
+    let (ref_events, ref_skipped) = reference_parse(text);
+    let (events, skipped) = parse_events_lenient(text);
+    assert_eq!(events, ref_events, "lenient events on {tag}");
+    let lines: Vec<usize> = skipped.iter().map(|s| s.line).collect();
+    assert_eq!(lines, ref_skipped, "lenient skip lines on {tag}");
+    for s in &skipped {
+        assert!(!s.error.is_empty(), "skip diagnostics on {tag}");
+    }
+    match parse_events(text) {
+        Ok(strict) => {
+            assert!(skipped.is_empty(), "strict Ok but lenient skipped on {tag}");
+            assert_eq!(strict, events, "strict/lenient agreement on {tag}");
+        }
+        Err(e) => {
+            assert!(!skipped.is_empty(), "strict Err but lenient clean on {tag}");
+            let msg = format!("{e:#}");
+            assert!(
+                msg.contains(&format!("events line {}", ref_skipped[0])),
+                "strict error must name line {}: {msg} ({tag})",
+                ref_skipped[0]
+            );
+        }
+    }
+    // determinism: parsing is a pure function of the text
+    let (again, skipped_again) = parse_events_lenient(text);
+    assert_eq!(events, again, "lenient determinism on {tag}");
+    assert_eq!(skipped, skipped_again, "skip determinism on {tag}");
+}
+
+#[test]
+fn adversarial_event_streams_never_panic() {
+    let lines = valid_stream_lines();
+    let clean = lines.join("\n");
+    check_adversarial(&clean, "clean");
+    let (_, skipped) = parse_events_lenient(&clean);
+    assert!(skipped.is_empty(), "the healthy stream must parse clean");
+
+    let mut rng = Rng::new(0x5EED);
+    // truncations: cut each line at several byte offsets
+    for (i, line) in lines.iter().enumerate() {
+        for _ in 0..4 {
+            let cut = rng.below(line.len().max(1));
+            let mut mangled = lines.clone();
+            mangled[i] = line[..cut].to_string();
+            check_adversarial(&mangled.join("\n"), &format!("truncate line {i} at {cut}"));
+        }
+    }
+    // bit flips: damage one byte of one line (lossy re-decode keeps
+    // the corpus valid UTF-8, like a real mangled log read would)
+    for (i, line) in lines.iter().enumerate() {
+        for _ in 0..4 {
+            let mut bytes = line.as_bytes().to_vec();
+            let at = rng.below(bytes.len());
+            bytes[at] ^= 1 << rng.below(8);
+            let mut mangled = lines.clone();
+            mangled[i] = String::from_utf8_lossy(&bytes).into_owned();
+            check_adversarial(&mangled.join("\n"), &format!("bit flip line {i} byte {at}"));
+        }
+    }
+    // whole-line garbage, duplicated keys, wrong shapes
+    for bad in [
+        "not json at all",
+        "{",
+        "{\"event\":",
+        "{\"event\":\"quake\"}",
+        "{\"event\":\"round_tick\",\"extra\":1}",
+        "{\"event\":\"client_dropped\"}",
+        "{\"event\":\"client_dropped\",\"id\":-1}",
+        "{\"event\":\"cohort_selected\",\"ids\":[3,1]}",
+        "[]",
+        "42",
+        "{\"event\":\"round_tick\",\"event\":\"round_tick\"}",
+        "{\"event\":\"round_tick\",\"event\":\"shutdown\"}",
+        "{\"event\":\"client_dropped\",\"id\":1,\"id\":2}",
+    ] {
+        let mut mangled = lines.clone();
+        mangled.insert(3, bad.to_string());
+        check_adversarial(&mangled.join("\n"), &format!("inserted '{bad}'"));
+        // and the bad line alone
+        check_adversarial(bad, &format!("alone '{bad}'"));
+    }
+    // duplicated whole lines are just more events, not an error
+    let mut doubled = lines.clone();
+    doubled.insert(2, lines[1].clone());
+    check_adversarial(&doubled.join("\n"), "duplicated tick");
+}
+
+#[test]
+fn corrupt_service_checkpoints_fail_descriptively_and_leave_the_service_reusable() {
+    // satellite 1 at the byte level: a bit flip anywhere in a service
+    // checkpoint is refused with a CRC diagnostic, and the refusing
+    // service is still empty — exactly what lets the CLI retry the
+    // rotated .prev artifact after a failed primary restore.
+    let spec = preset_spec("paper", "periodic:2");
+    let mut svc = AllocatorService::new();
+    svc.process(&Event::ScenarioLoaded(spec.clone())).unwrap();
+    svc.process(&Event::RoundTick).unwrap();
+    let good = svc.checkpoint_bytes().unwrap();
+    let consumed = svc.events_consumed();
+    drop(svc);
+
+    let mut rng = Rng::new(0xC0DE);
+    for trial in 0..32 {
+        let mut bad = good.clone();
+        let at = rng.below(bad.len());
+        bad[at] ^= 1 << rng.below(8);
+        if bad == good {
+            continue;
+        }
+        let mut fresh = AllocatorService::new();
+        let err = match fresh.restore(&bad) {
+            Err(e) => format!("{e:#}"),
+            // flips inside the magic/version/fingerprint prefix may be
+            // caught by those checks instead of the CRC — but a flip
+            // can never restore *successfully*
+            Ok(()) => panic!("trial {trial}: corrupt checkpoint restored (byte {at})"),
+        };
+        assert!(!err.is_empty());
+        // the failed restore left the service empty: the good bytes
+        // still load (the .prev fallback path in the CLI)
+        fresh.restore(&good).unwrap();
+        assert_eq!(fresh.events_consumed(), consumed, "trial {trial}");
+    }
+}
